@@ -1,0 +1,41 @@
+use nitro::data::loader;
+use nitro::nn::{zoo, Hyper, Network};
+use nitro::util::rng::Pcg32;
+
+fn stats(name: &str, t: &nitro::tensor::ITensor) {
+    let (lo, hi) = t.minmax();
+    println!("  {name:<14} range [{lo},{hi}] mean|.| {:.2} bits {}", t.mean_abs(), t.bitwidth());
+}
+
+fn main() {
+    let (mut tr, _) = loader::load("tiny", "data", 1000, 10, 42).unwrap();
+    tr.mad_normalize();
+    let spec = zoo::get("tinycnn").unwrap();
+    let mut net = Network::new(spec, 7);
+    let hp = Hyper { gamma_inv: 512, eta_fw_inv: 0, eta_lr_inv: 0 };
+    let mut rng = Pcg32::new(1);
+    let mut order: Vec<usize> = (0..tr.len()).collect();
+    for epoch in 0..60 {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(64) {
+            let (x, labels) = tr.gather(chunk, false);
+            net.train_batch(&x, &labels, &hp, &mut rng);
+        }
+        if epoch % 10 == 0 {
+            println!("epoch {epoch}:");
+            let (x, _) = tr.gather(&order[..64], false);
+            let mut a = x.clone();
+            for (i, blk) in net.blocks.iter().enumerate() {
+                if matches!(blk.spec, nitro::nn::BlockSpec::Linear(_)) && a.shape.len() > 2 {
+                    let (b, f) = a.batch_feat();
+                    a = a.reshaped(&[b, f]);
+                }
+                a = blk.forward(&a);
+                stats(&format!("a{} out", i), &a);
+                stats(&format!("wf{}", i), &blk.wf);
+                stats(&format!("wl{}", i), &blk.wl);
+            }
+            stats("wo", &net.head.wo);
+        }
+    }
+}

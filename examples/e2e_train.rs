@@ -1,0 +1,103 @@
+//! End-to-end system driver (the DESIGN.md "end-to-end validation" run):
+//! exercises **all three layers together** on a real small workload.
+//!
+//! 1. Loads the AOT artifacts (L1 Pallas kernels lowered inside L2 JAX
+//!    block graphs) through the PJRT runtime and cross-checks the first
+//!    training steps bit-exactly against the native engine.
+//! 2. Trains a VGG8B-narrow integer CNN (~1M params) for several hundred
+//!    steps on a CIFAR-shaped synthetic dataset with the block-parallel
+//!    LES scheduler, logging the loss curve.
+//! 3. Reports the App. E.3 bit-width probes at the end.
+//!
+//! Run via `make artifacts && cargo run --release --example e2e_train`.
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use nitro::coordinator::engine::{Engine, NativeEngine, PjrtEngine};
+use nitro::data::loader;
+use nitro::nn::{zoo, Hyper, Network};
+use nitro::train::{fit, TrainConfig};
+use nitro::util::rng::Pcg32;
+
+fn main() {
+    // ---- phase 1: three-layer cross-check on the artifact preset -------
+    let preset = "tinycnn";
+    let dir = format!("artifacts/{preset}");
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        println!("[1/3] PJRT cross-check on {preset} artifacts");
+        let mut pjrt = PjrtEngine::load(&dir, 7).expect("artifacts");
+        let m = pjrt.manifest.clone();
+        let net = Network::new(zoo::get(preset).unwrap(), 7);
+        pjrt.set_weights(
+            net.blocks.iter().map(|b| b.wf.clone()).collect(),
+            net.blocks.iter().map(|b| b.wl.clone()).collect(),
+            net.head.wo.clone(),
+        );
+        let mut native = NativeEngine::new(net, 7, true);
+        let hp = Hyper::default();
+        let mut rng = Pcg32::new(5);
+        for step in 0..3 {
+            let mut shape = vec![m.batch];
+            shape.extend(&m.input_shape);
+            let n: usize = shape.iter().product();
+            let x = nitro::tensor::ITensor::from_vec(
+                &shape, (0..n).map(|_| rng.range_i32(-127, 127)).collect());
+            let labels: Vec<usize> =
+                (0..m.batch).map(|i| i % m.num_classes).collect();
+            let (bl_n, hl_n, _) = native.train_batch(&x, &labels, &hp);
+            let (bl_p, hl_p, _) = pjrt.train_batch(&x, &labels, &hp);
+            assert_eq!((&bl_n, hl_n), (&bl_p, hl_p),
+                       "layer stack diverged at step {step}");
+            println!("  step {step}: native == pjrt (block losses {bl_n:?})");
+        }
+        println!("  three-layer stack bit-exact ✓");
+    } else {
+        println!("[1/3] skipped PJRT cross-check (run `make artifacts`)");
+    }
+
+    // ---- phase 2: the real training workload ---------------------------
+    println!("[2/3] training vgg8b-micro on cifar-like (synthetic, \
+              DESIGN.md §Substitutions)");
+    let (mut tr, mut te) = loader::load("cifar10", "data", 1500, 300, 42)
+        .expect("dataset");
+    tr.mad_normalize();
+    te.mad_normalize();
+    let spec = zoo::get("vgg8b-micro").unwrap();
+    println!("  model: {} params ({} at inference)", spec.param_count(),
+             spec.inference_param_count());
+    let mut net = Network::new(spec, 42);
+    let cfg = TrainConfig {
+        epochs: 45, // ~2100 steps at batch 32 (clears the integer bootstrap)
+        batch: 32,
+        hyper: Hyper { gamma_inv: 128, eta_fw_inv: 25000, eta_lr_inv: 3000 },
+        seed: 42,
+        verbose: true,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let res = fit(&mut net, &tr, &te, &cfg);
+    let el = t0.elapsed().as_secs_f64();
+    println!("  loss curve (mean head RSS per epoch):");
+    for e in &res.epochs {
+        let bar = "#".repeat((e.mean_head_loss / res.epochs[0].mean_head_loss
+            * 40.0) as usize);
+        println!("    epoch {:>2} {:>12.0} {}", e.epoch, e.mean_head_loss, bar);
+    }
+    println!("  final test accuracy {:.2}% after {:.1}s ({:.1} steps/s)",
+             res.final_test_acc * 100.0, el,
+             (cfg.epochs * tr.len() / cfg.batch) as f64 / el);
+    assert!(res.final_test_acc > 0.25,
+            "e2e training must clearly beat 10% chance");
+    assert!(res.epochs.last().unwrap().mean_head_loss
+            < res.epochs[0].mean_head_loss,
+            "loss must decrease");
+
+    // ---- phase 3: bit-width probes (App. E.3) ---------------------------
+    println!("[3/3] integer bit-width probes");
+    let mut max_bits = 0;
+    for s in &res.weight_stats {
+        max_bits = max_bits.max(s.bitwidth);
+    }
+    println!("  max weight bit-width: {max_bits} (paper claims <= 16)");
+    assert!(max_bits <= 16);
+    println!("e2e_train PASSED");
+}

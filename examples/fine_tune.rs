@@ -1,0 +1,74 @@
+//! On-device fine-tuning scenario (paper App. E.3's closing argument):
+//! because NITRO-D weights are *natively* integer, a deployed model can be
+//! fine-tuned locally when new data arrives — no dequantize/retrain/requantize
+//! cycle, which is impossible for post-training-quantized models.
+//!
+//! The scenario: a model trained on one data distribution is deployed
+//! (checkpointed), the distribution shifts (new synthetic seed = new class
+//! styles), accuracy drops, and a short integer-only fine-tune on a small
+//! local buffer recovers most of it.
+
+use nitro::data::loader;
+use nitro::nn::{zoo, Hyper, Network};
+use nitro::train::{checkpoint, evaluate, fit, TrainConfig};
+
+fn main() {
+    // train the "factory" model on distribution A
+    let (mut tr_a, mut te_a) = loader::load("tiny", "data", 1200, 300, 1)
+        .expect("dataset A");
+    tr_a.mad_normalize();
+    te_a.mad_normalize();
+    let mut net = Network::new(zoo::get("tinycnn").unwrap(), 3);
+    let cfg = TrainConfig {
+        epochs: 110,
+        batch: 64,
+        hyper: Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 },
+        seed: 3,
+        ..Default::default()
+    };
+    let res_a = fit(&mut net, &tr_a, &te_a, &cfg);
+    println!("factory model on distribution A: {:.2}%",
+             res_a.final_test_acc * 100.0);
+
+    // deploy = checkpoint (integers round-trip exactly)
+    std::fs::create_dir_all("results").ok();
+    checkpoint::save(&net, "results/deployed.ckpt").unwrap();
+
+    // distribution B: same classes, shifted styles (different seed)
+    let (mut tr_b, mut te_b) = loader::load("tiny", "data", 600, 400, 99)
+        .expect("dataset B");
+    tr_b.mad_normalize();
+    te_b.mad_normalize();
+    let acc_before = evaluate(&net, &te_b, 64);
+    println!("deployed model on shifted distribution B: {:.2}%",
+             acc_before * 100.0);
+
+    // local fine-tune: small buffer, few epochs, smaller LR (gamma_inv x3),
+    // straight on the integer weights
+    let mut local = Network::new(zoo::get("tinycnn").unwrap(), 0);
+    checkpoint::load(&mut local, "results/deployed.ckpt").unwrap();
+    let ft_cfg = TrainConfig {
+        epochs: 40,
+        batch: 32,
+        hyper: Hyper { gamma_inv: 1536, eta_fw_inv: 12000, eta_lr_inv: 3000 },
+        seed: 11,
+        ..Default::default()
+    };
+    let res_ft = fit(&mut local, &tr_b, &te_b, &ft_cfg);
+    println!("after local integer-only fine-tune: {:.2}%",
+             res_ft.final_test_acc * 100.0);
+
+    assert!(
+        res_ft.final_test_acc >= acc_before + 0.02,
+        "fine-tune should recover accuracy: {:.3} -> {:.3}",
+        acc_before,
+        res_ft.final_test_acc
+    );
+    // and the weights are still deployable integers
+    for s in &res_ft.weight_stats {
+        assert!(s.bitwidth <= 16);
+    }
+    println!("fine_tune PASSED (recovered {:+.2} points, weights still \
+              int16)",
+             (res_ft.final_test_acc - acc_before) * 100.0);
+}

@@ -1,0 +1,63 @@
+//! Quickstart: train a small integer-only CNN end to end in ~a minute.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the public API surface: dataset loading + integer MAD
+//! pre-processing, the model zoo, IntegerSGD hyper-parameters, the LES
+//! trainer, evaluation, and checkpointing — everything integer-only, no
+//! float ever touches a weight or activation.
+
+use nitro::data::loader;
+use nitro::nn::{zoo, Hyper, Network};
+use nitro::train::{checkpoint, fit, TrainConfig};
+
+fn main() {
+    // 1. data: synthetic MNIST-shaped set (auto-falls back since no real
+    //    MNIST files are bundled), integer MAD normalization (App. B.2)
+    let (mut train, mut test) =
+        loader::load("tiny", "data", 1200, 300, 42).expect("dataset");
+    train.mad_normalize();
+    test.mad_normalize();
+    println!("dataset: {} train / {} test, shape {:?}", train.len(),
+             test.len(), train.shape);
+
+    // 2. model: an integer local-loss CNN from the zoo (paper §3.2)
+    let spec = zoo::get("tinycnn").unwrap();
+    println!("model: {} ({} params, {} at inference — learning layers drop \
+              away, App. E.3)",
+             spec.name, spec.param_count(), spec.inference_param_count());
+    let mut net = Network::new(spec, 7);
+
+    // 3. train with IntegerSGD (Algorithm 1) + the NITRO amplification
+    //    factor wiring, block-parallel LES scheduler on
+    let cfg = TrainConfig {
+        epochs: 110,
+        batch: 64,
+        hyper: Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 },
+        seed: 7,
+        verbose: true,
+        ..Default::default()
+    };
+    let res = fit(&mut net, &train, &test, &cfg);
+    println!("final test accuracy: {:.2}%", res.final_test_acc * 100.0);
+    assert!(res.final_test_acc > 0.4, "quickstart should learn");
+
+    // 4. the weights are int16-range integers (the paper's deployment
+    //    story): show the bit-width probe
+    for s in &res.weight_stats {
+        println!("  {:<12} max|w| {:>6} ({} bits)", s.name, s.max_abs,
+                 s.bitwidth);
+        assert!(s.bitwidth <= 16, "int16 claim violated");
+    }
+
+    // 5. checkpoint: integers round-trip exactly
+    std::fs::create_dir_all("results").ok();
+    checkpoint::save(&net, "results/quickstart.ckpt").unwrap();
+    let mut net2 = Network::new(zoo::get("tinycnn").unwrap(), 999);
+    checkpoint::load(&mut net2, "results/quickstart.ckpt").unwrap();
+    let acc2 = nitro::train::evaluate(&net2, &test, 64);
+    assert_eq!(res.final_test_acc, acc2, "checkpoint must be bit-exact");
+    println!("checkpoint round-trip OK -> results/quickstart.ckpt");
+}

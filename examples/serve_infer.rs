@@ -1,0 +1,98 @@
+//! Serving example: load the AOT **inference** artifact (learning layers
+//! stripped — they exist only for training, App. E.3) and serve batched
+//! classification requests through the PJRT runtime, reporting latency and
+//! throughput percentiles.
+//!
+//! This is the deployment path a downstream user of the library would run:
+//! `python` is not involved — the artifact directory plus this binary is
+//! the whole server.
+
+use nitro::coordinator::engine::{Engine, PjrtEngine};
+use nitro::nn::{zoo, Network};
+use nitro::tensor::ITensor;
+use nitro::util::rng::Pcg32;
+use std::time::Instant;
+
+fn main() {
+    let preset = "tinycnn";
+    let dir = format!("artifacts/{preset}");
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        println!("serve_infer: artifacts not built (`make artifacts`); \
+                  falling back to the native engine only");
+    }
+
+    // load the engine (PJRT if artifacts exist, else native)
+    let use_pjrt = std::path::Path::new(&format!("{dir}/manifest.json"))
+        .exists();
+    let mut pjrt = if use_pjrt {
+        Some(PjrtEngine::load(&dir, 7).expect("load artifacts"))
+    } else {
+        None
+    };
+    let spec = zoo::get(preset).unwrap();
+    let net = Network::new(spec.clone(), 7);
+    if let Some(p) = pjrt.as_mut() {
+        p.set_weights(
+            net.blocks.iter().map(|b| b.wf.clone()).collect(),
+            net.blocks.iter().map(|b| b.wl.clone()).collect(),
+            net.head.wo.clone(),
+        );
+    }
+    let mut native = nitro::coordinator::engine::NativeEngine::new(net, 7, false);
+
+    let batch = pjrt.as_ref().map(|p| p.manifest.batch).unwrap_or(8);
+    let mut rng = Pcg32::new(42);
+    let mut shape = vec![batch];
+    shape.extend(&spec.input_shape);
+    let n: usize = shape.iter().product();
+
+    // request loop: 200 batched requests
+    let requests: Vec<ITensor> = (0..200)
+        .map(|_| {
+            ITensor::from_vec(&shape,
+                              (0..n).map(|_| rng.range_i32(-127, 127)).collect())
+        })
+        .collect();
+
+    for (name, engine) in [("native", true), ("pjrt", false)] {
+        if name == "pjrt" && pjrt.is_none() {
+            continue;
+        }
+        let mut lat_ns: Vec<u64> = Vec::with_capacity(requests.len());
+        let t0 = Instant::now();
+        let mut check = 0i64;
+        for req in &requests {
+            let t = Instant::now();
+            let yhat = if engine {
+                native.infer(req)
+            } else {
+                pjrt.as_mut().unwrap().infer(req)
+            };
+            lat_ns.push(t.elapsed().as_nanos() as u64);
+            check += yhat.data.iter().map(|&v| v as i64).sum::<i64>();
+        }
+        let total = t0.elapsed().as_secs_f64();
+        lat_ns.sort_unstable();
+        let p = |q: f64| lat_ns[(q * (lat_ns.len() - 1) as f64) as usize]
+            as f64 / 1e6;
+        println!(
+            "{name:<7} {} reqs x batch {}: {:.1} img/s | latency ms \
+             p50 {:.3} p90 {:.3} p99 {:.3} (checksum {check})",
+            requests.len(),
+            batch,
+            (requests.len() * batch) as f64 / total,
+            p(0.5),
+            p(0.9),
+            p(0.99)
+        );
+    }
+
+    // parity spot-check between the two serving paths
+    if let Some(p) = pjrt.as_mut() {
+        let a = native.infer(&requests[0]);
+        let b = p.infer(&requests[0]);
+        assert_eq!(a, b, "serving engines disagree");
+        println!("native/pjrt serving parity ✓");
+    }
+    println!("serve_infer PASSED");
+}

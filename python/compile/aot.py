@@ -1,0 +1,406 @@
+"""AOT export: lower NITRO-D block graphs to HLO text + golden vectors.
+
+Outputs (under ``artifacts/``):
+
+  <preset>/block<i>_fwd.hlo.txt    forward layers of block i
+  <preset>/block<i>_train.hlo.txt  full local train step of block i
+  <preset>/head_fwd.hlo.txt        output layers forward
+  <preset>/head_train.hlo.txt      output layers train step
+  <preset>/infer.hlo.txt           whole-network integer inference
+  <preset>/manifest.json           shapes/constants/artifact index
+  golden/ops.json                  op-level golden vectors (rust tensor tests)
+  golden/<preset>_steps.json       3-step full-network training trace
+                                   (losses + weight checksums) for the
+                                   bit-exact rust trainer cross-check
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits 64-bit instruction ids which xla_extension 0.5.1 (the version behind
+the rust ``xla`` crate) rejects; the text parser reassigns ids. See
+/opt/xla-example/README.md.
+
+The lowered graphs route their hot contractions through the L1 Pallas
+kernels (interpret=True lowers them to plain HLO). At export time every
+artifact's numerics are asserted bit-exact against the pure-jnp reference
+path — the Pallas/ref equivalence is re-proven on the real shapes here, not
+just on the pytest shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+
+I32 = jnp.int32
+I64 = jnp.int64
+
+# presets exported by default: small enough to AOT + execute quickly on the
+# CPU PJRT client, yet cover both block kinds and the full trainer.
+DEFAULT_PRESETS = [("tinycnn", 8), ("mlp1-mini", 8)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=I32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _scalar():
+    return jax.ShapeDtypeStruct((), I64)
+
+
+def _arr_json(name, a):
+    a = np.asarray(a)
+    return {
+        "name": name,
+        "shape": list(a.shape),
+        "dtype": str(a.dtype),
+        "data": a.reshape(-1).tolist(),
+    }
+
+
+def _checksum(a) -> dict:
+    """Order-sensitive FNV-1a over the little-endian int32/int64 bytes plus
+    an i64 element sum — mirrored by rust util::checksum."""
+    a = np.asarray(a)
+    h = 14695981039346656037
+    for byte in a.astype("<i8").tobytes():
+        h = ((h ^ byte) * 1099511628211) & 0xFFFFFFFFFFFFFFFF
+    # fnv is u64; JSON ints are read as i64 on the rust side, so ship it as
+    # a decimal string.
+    return {"fnv": str(h), "sum": int(a.astype(np.int64).sum())}
+
+
+# ---------------------------------------------------------------------------
+# golden vectors: op level
+# ---------------------------------------------------------------------------
+
+def golden_ops(out_dir: str) -> str:
+    """Deterministic op-level vectors exercising every primitive the rust
+    tensor engine replicates (incl. negative operands — the floor-division
+    traps live there)."""
+    rng = np.random.RandomState(1234)
+    cases = []
+
+    a = rng.randint(-127, 128, (6, 20)).astype(np.int32)
+    w = rng.randint(-2000, 2001, (20, 7)).astype(np.int32)
+    cases.append({"op": "int_matmul",
+                  "inputs": [_arr_json("a", a), _arr_json("w", w)],
+                  "outputs": [_arr_json("z", ref.int_matmul(a, w))]})
+
+    x = rng.randint(-127, 128, (3, 4, 9, 7)).astype(np.int32)
+    wc = rng.randint(-900, 901, (5, 4, 3, 3)).astype(np.int32)
+    cases.append({"op": "int_conv2d", "padding": 1,
+                  "inputs": [_arr_json("x", x), _arr_json("w", wc)],
+                  "outputs": [_arr_json("z", ref.int_conv2d(x, wc))]})
+
+    g = rng.randint(-500, 501, (3, 5, 9, 7)).astype(np.int32)
+    cases.append({"op": "conv2d_weight_grad", "kernel": 3, "padding": 1,
+                  "inputs": [_arr_json("x", x), _arr_json("g", g)],
+                  "outputs": [_arr_json("gw",
+                                        ref.conv2d_weight_grad(x, g, 3, 1))]})
+
+    pooled, arg = ref.maxpool2d(x, 2, 2)
+    gp = rng.randint(-100, 101, np.asarray(pooled).shape).astype(np.int32)
+    cases.append({"op": "maxpool2d", "size": 2, "stride": 2,
+                  "inputs": [_arr_json("x", x), _arr_json("g", gp)],
+                  "outputs": [_arr_json("pooled", pooled),
+                              _arr_json("arg", arg),
+                              _arr_json("gx", ref.maxpool2d_bwd(
+                                  gp, arg, x.shape, 2, 2))]})
+
+    z = rng.randint(-400, 401, (4, 33)).astype(np.int32)
+    gg = rng.randint(-1000, 1001, (4, 33)).astype(np.int32)
+    for ainv in (2, 10, 100):
+        cases.append({"op": "nitro_relu", "alpha_inv": ainv,
+                      "mu": ref.nitro_relu_mu(ainv),
+                      "inputs": [_arr_json("z", z), _arr_json("g", gg)],
+                      "outputs": [
+                          _arr_json("a", ref.nitro_relu(z, ainv)),
+                          _arr_json("gz", ref.nitro_relu_bwd(z, gg, ainv))]})
+
+    wsgd = rng.randint(-30000, 30001, (11, 5)).astype(np.int32)
+    gsgd = rng.randint(-10**7, 10**7, (11, 5)).astype(np.int64)
+    for gamma, eta in ((512, 0), (512, 3000), (1024, 28000)):
+        cases.append({"op": "integer_sgd", "gamma_inv": gamma,
+                      "eta_inv": eta,
+                      "inputs": [_arr_json("w", wsgd), _arr_json("g", gsgd)],
+                      "outputs": [_arr_json(
+                          "w2", ref.integer_sgd(wsgd, gsgd, gamma, eta))]})
+
+    raw = rng.randint(0, 256, (1000,)).astype(np.int64)
+    cases.append({"op": "mad_normalize",
+                  "inputs": [_arr_json("x", raw)],
+                  "outputs": [_arr_json("xn", ref.mad_normalize(raw))]})
+
+    path = os.path.join(out_dir, "golden", "ops.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"cases": cases}, f)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# per-preset artifact export
+# ---------------------------------------------------------------------------
+
+def _block_fns(blk, use_pallas):
+    if isinstance(blk, M.ConvBlockSpec):
+        fwd = functools.partial(M.conv_block_forward, spec=blk,
+                                use_pallas=use_pallas)
+        train = functools.partial(M.conv_block_train, spec=blk,
+                                  use_pallas=use_pallas)
+    else:
+        fwd = functools.partial(M.linear_block_forward, spec=blk,
+                                use_pallas=use_pallas)
+        train = functools.partial(M.linear_block_train, spec=blk,
+                                  use_pallas=use_pallas)
+    return fwd, train
+
+
+def _block_io_shapes(spec: M.NetworkSpec, batch: int):
+    """Activation shape entering each block (after the flatten that the
+    coordinator performs before the first linear block of a CNN)."""
+    shapes = []
+    if len(spec.input_shape) == 3:
+        cur = (batch,) + tuple(spec.input_shape)
+    else:
+        cur = (batch, spec.input_shape[0])
+    for blk in spec.blocks:
+        if isinstance(blk, M.ConvBlockSpec):
+            shapes.append(cur)
+            cur = (batch, blk.out_channels, blk.out_h, blk.out_w)
+        else:
+            flat = int(np.prod(cur[1:]))
+            shapes.append((batch, flat))
+            cur = (batch, blk.out_features)
+    return shapes, cur
+
+
+def export_preset(name: str, batch: int, out_dir: str, run_check: bool):
+    spec = M.ZOO[name]()
+    pdir = os.path.join(out_dir, name)
+    os.makedirs(pdir, exist_ok=True)
+    in_shapes, head_in = _block_io_shapes(spec, batch)
+    g = spec.num_classes
+
+    manifest = {
+        "preset": name, "batch": batch, "num_classes": g,
+        "input_shape": list(spec.input_shape),
+        "one_hot_value": ref.ONE_HOT_VALUE,
+        "amplification_factor": ref.amplification_factor(g),
+        "blocks": [], "head": None, "infer": "infer.hlo.txt",
+    }
+
+    fwd_w, lr_w, head_w = M.init_network(spec, seed=7)
+    rng = np.random.RandomState(99)
+    x0 = rng.randint(-127, 128, in_shapes[0]).astype(np.int32)
+    y = rng.randint(0, g, (batch,))
+    y32 = np.asarray(ref.one_hot32(y, g)).astype(np.int32)
+    gamma, eta_fw, eta_lr = 512, 12000, 3000
+
+    a_ref = x0
+    for i, blk in enumerate(spec.blocks):
+        fwd_p, train_p = _block_fns(blk, use_pallas=True)
+        fwd_r, train_r = _block_fns(blk, use_pallas=False)
+        a_shape = in_shapes[i]
+        wf_shape, wl_shape = blk.weight_shapes()
+
+        lowered_f = jax.jit(fwd_p).lower(_spec(a_shape), _spec(wf_shape))
+        lowered_t = jax.jit(train_p).lower(
+            _spec(a_shape), _spec(wf_shape), _spec(wl_shape),
+            _spec((batch, g)), _scalar(), _scalar(), _scalar())
+        f_fwd = f"block{i}_fwd.hlo.txt"
+        f_train = f"block{i}_train.hlo.txt"
+        with open(os.path.join(pdir, f_fwd), "w") as f:
+            f.write(to_hlo_text(lowered_f))
+        with open(os.path.join(pdir, f_train), "w") as f:
+            f.write(to_hlo_text(lowered_t))
+
+        entry = {
+            "index": i,
+            "kind": "conv" if isinstance(blk, M.ConvBlockSpec) else "linear",
+            "artifact_fwd": f_fwd, "artifact_train": f_train,
+            "in_shape": list(a_shape), "wf_shape": list(wf_shape),
+            "wl_shape": list(wl_shape), "sf": blk.sf,
+            "alpha_inv": blk.alpha_inv,
+            "mu": ref.nitro_relu_mu(blk.alpha_inv),
+        }
+        if isinstance(blk, M.ConvBlockSpec):
+            s, k, _ = blk.lr_pool
+            entry.update({"pool": blk.pool, "lr_pool_s": s, "lr_pool_k": k,
+                          "out_shape": [batch, blk.out_channels,
+                                        blk.out_h, blk.out_w]})
+        else:
+            entry.update({"out_shape": [batch, blk.out_features]})
+        manifest["blocks"].append(entry)
+
+        if run_check:
+            # pallas path == ref path on the real shapes, bit-exact
+            args = (a_ref, fwd_w[i], lr_w[i], y32,
+                    np.int64(gamma), np.int64(eta_fw), np.int64(eta_lr))
+            out_p = jax.jit(train_p)(*args)
+            out_r = jax.jit(train_r)(*args)
+            for op, orr in zip(out_p, out_r):
+                np.testing.assert_array_equal(np.asarray(op), np.asarray(orr))
+            a_ref = np.asarray(out_r[0])
+            if not isinstance(blk, M.ConvBlockSpec) or i + 1 == len(spec.blocks):
+                pass
+            # flatten if the next block is linear
+            if i + 1 < len(spec.blocks) and \
+               not isinstance(spec.blocks[i + 1], M.ConvBlockSpec):
+                a_ref = a_ref.reshape(batch, -1)
+
+    # head
+    hf = functools.partial(M.head_forward, spec=spec.head, use_pallas=True)
+    ht = functools.partial(M.head_train, spec=spec.head, use_pallas=True)
+    lowered_hf = jax.jit(hf).lower(_spec(head_in), _spec(spec.head.weight_shape()))
+    lowered_ht = jax.jit(ht).lower(
+        _spec(head_in), _spec(spec.head.weight_shape()), _spec((batch, g)),
+        _scalar(), _scalar())
+    with open(os.path.join(pdir, "head_fwd.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_hf))
+    with open(os.path.join(pdir, "head_train.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_ht))
+    manifest["head"] = {
+        "artifact_fwd": "head_fwd.hlo.txt",
+        "artifact_train": "head_train.hlo.txt",
+        "in_shape": list(head_in), "w_shape": list(spec.head.weight_shape()),
+        "sf": spec.head.sf,
+    }
+
+    # whole-network inference
+    infer = functools.partial(M.network_infer, spec=spec, use_pallas=True)
+    wspecs = [_spec(w.shape) for w in fwd_w] + [_spec(head_w.shape)]
+    lowered_i = jax.jit(lambda x, *ws: infer(x, list(ws))).lower(
+        _spec(in_shapes[0]), *wspecs)
+    with open(os.path.join(pdir, "infer.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_i))
+
+    with open(os.path.join(pdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return spec, in_shapes, head_in
+
+
+# ---------------------------------------------------------------------------
+# golden training trace: 3 full-network steps, bit-exact
+# ---------------------------------------------------------------------------
+
+def golden_steps(name: str, batch: int, out_dir: str, steps: int = 3):
+    """Run `steps` sequential full-network training iterations with the ref
+    path and record everything the rust trainer needs to replicate them
+    bit-exactly: initial weights, per-step inputs/labels, per-block losses,
+    final weight checksums and final activations."""
+    spec = M.ZOO[name]()
+    g = spec.num_classes
+    fwd_w, lr_w, head_w = M.init_network(spec, seed=7)
+    rng = np.random.RandomState(99)
+    gamma, eta_fw, eta_lr = 512, 12000, 3000
+    in_shapes, _ = _block_io_shapes(spec, batch)
+
+    trace = {"preset": name, "batch": batch, "seed": 7, "data_seed": 99,
+             "gamma_inv": gamma, "eta_fw_inv": eta_fw, "eta_lr_inv": eta_lr,
+             "init_weights": {
+                 "fwd": [_arr_json(f"wf{i}", w) for i, w in enumerate(fwd_w)],
+                 "lr": [_arr_json(f"wl{i}", w) for i, w in enumerate(lr_w)],
+                 "head": _arr_json("wo", head_w)},
+             "steps": []}
+
+    jit_cache = {}
+    for t in range(steps):
+        x = rng.randint(-127, 128, in_shapes[0]).astype(np.int32)
+        y = rng.randint(0, g, (batch,))
+        y32 = np.asarray(ref.one_hot32(y, g)).astype(np.int32)
+        step = {"x": _arr_json("x", x), "y": y.tolist(), "block_loss": []}
+        a = x
+        for i, blk in enumerate(spec.blocks):
+            if not isinstance(blk, M.ConvBlockSpec) and a.ndim > 2:
+                a = a.reshape(batch, -1)
+            key = ("train", i)
+            if key not in jit_cache:
+                _, train_r = _block_fns(blk, use_pallas=False)
+                jit_cache[key] = jax.jit(train_r)
+            a, wf2, wl2, loss = jit_cache[key](
+                a, fwd_w[i], lr_w[i], y32, np.int64(gamma),
+                np.int64(eta_fw), np.int64(eta_lr))
+            a = np.asarray(a)
+            fwd_w[i], lr_w[i] = np.asarray(wf2), np.asarray(wl2)
+            step["block_loss"].append(int(loss))
+        if a.ndim > 2:
+            a = a.reshape(batch, -1)
+        if "head" not in jit_cache:
+            jit_cache["head"] = jax.jit(functools.partial(
+                M.head_train, spec=spec.head, use_pallas=False))
+        yhat, wo2, loss = jit_cache["head"](
+            a, head_w, y32, np.int64(gamma), np.int64(eta_lr))
+        head_w = np.asarray(wo2)
+        step["head_loss"] = int(loss)
+        step["yhat_checksum"] = _checksum(yhat)
+        trace["steps"].append(step)
+
+    trace["final"] = {
+        "fwd_checksums": [_checksum(w) for w in fwd_w],
+        "lr_checksums": [_checksum(w) for w in lr_w],
+        "head_checksum": _checksum(head_w),
+    }
+    path = os.path.join(out_dir, "golden", f"{name}_steps.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(trace, f)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output directory")
+    ap.add_argument("--preset", action="append", default=None,
+                    help="preset[:batch] to export (repeatable)")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the pallas==ref export-time assertion")
+    ap.add_argument("--golden-steps", type=int, default=3)
+    args = ap.parse_args()
+
+    presets = DEFAULT_PRESETS
+    if args.preset:
+        presets = []
+        for p in args.preset:
+            if ":" in p:
+                n, b = p.split(":")
+                presets.append((n, int(b)))
+            else:
+                presets.append((p, 8))
+
+    os.makedirs(args.out, exist_ok=True)
+    print(f"[aot] op-level golden -> {golden_ops(args.out)}")
+    for name, batch in presets:
+        print(f"[aot] exporting preset {name} (batch={batch}) ...")
+        export_preset(name, batch, args.out, run_check=not args.no_check)
+        print(f"[aot] golden trace -> "
+              f"{golden_steps(name, batch, args.out, args.golden_steps)}")
+    stamp = os.path.join(args.out, ".stamp")
+    with open(stamp, "w") as f:
+        f.write(",".join(f"{n}:{b}" for n, b in presets) + "\n")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

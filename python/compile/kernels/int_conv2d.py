@@ -1,0 +1,84 @@
+"""Pallas integer conv2d kernel (L1).
+
+The paper's Integer Conv2D: 3x3, stride 1, padding 1, no bias, integer
+weights/activations. TPU mapping: the grid walks samples; each step stages
+one padded image plus the (O, C, K, K) weights into VMEM and contracts the
+K*K shifted copies against the weight matrix on the MXU (an in-VMEM im2col —
+Pallas BlockSpecs cannot express overlapping windows, so the shift happens
+inside the kernel where the whole image is resident).
+
+Under ``interpret=True`` (this image) the kernel lowers to plain HLO.
+Bit-exact against ``ref.int_conv2d`` (pytest + hypothesis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref  # noqa: F401
+
+I64 = jnp.int64
+
+
+def _conv_sample_kernel(xp_ref, w_ref, o_ref, *, kernel: int,
+                        ho: int, wo: int):
+    """One grid step = one sample.
+
+    xp_ref: (1, C, Hp, Wp) int32 (zero-padded input image)
+    w_ref:  (O, C, K, K) int32
+    o_ref:  (1, O, Ho, Wo) int64
+    """
+    xp = xp_ref[0].astype(I64)            # (C, Hp, Wp)
+    w = w_ref[...].astype(I64)            # (O, C, K, K)
+    k = kernel
+    shifts = []
+    for ki in range(k):
+        for kj in range(k):
+            shifts.append(xp[:, ki:ki + ho, kj:kj + wo])
+    # (C, K*K, Ho, Wo) with (ki, kj) row-major — same patch layout as ref.
+    patches = jnp.stack(shifts, axis=1)
+    lhs = w.reshape(w.shape[0], -1)                         # (O, C*K*K)
+    rhs = patches.reshape(-1, ho * wo)                      # (C*K*K, Ho*Wo)
+    out = jax.lax.dot_general(
+        lhs, rhs, (((1,), (0,)), ((), ())), preferred_element_type=I64
+    )
+    o_ref[...] = out.reshape(1, w.shape[0], ho, wo)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "padding"))
+def int_conv2d(x, w, kernel: int = 3, padding: int = 1):
+    """Integer conv2d via the Pallas per-sample kernel.
+
+    x: (B, C, H, W) int32, w: (O, C, K, K) int32 -> (B, O, Ho, Wo) int64.
+    Stride 1 (the only stride the paper's architectures use).
+    """
+    b, c, h, wd = x.shape
+    o = w.shape[0]
+    k = kernel
+    ho, wo = h + 2 * padding - k + 1, wd + 2 * padding - k + 1
+    hp, wp = h + 2 * padding, wd + 2 * padding
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    return pl.pallas_call(
+        functools.partial(_conv_sample_kernel, kernel=k, ho=ho, wo=wo),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, wp), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((o, c, k, k), lambda n: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, o, ho, wo), lambda n: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, o, ho, wo), I64),
+        interpret=True,
+    )(xp, w)
+
+
+def vmem_footprint_bytes(c: int, o: int, k: int, h: int, w_in: int,
+                         pad: int) -> int:
+    """VMEM estimate for one grid step: padded image + weights + int64
+    output (EXPERIMENTS.md §Perf feeds on this)."""
+    hp, wp = h + 2 * pad, w_in + 2 * pad
+    ho, wo = h + 2 * pad - k + 1, w_in + 2 * pad - k + 1
+    return 4 * (c * hp * wp) + 4 * (o * c * k * k) + 8 * (o * ho * wo)

@@ -1,0 +1,90 @@
+"""Pallas integer matmul kernel — the NITRO-D compute hot-spot (L1).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): int8-range activations times
+int16-range weights accumulate on the MXU in int32/int64. BlockSpec tiles
+are MXU-shaped (128-lane quantum); the grid walks (M/bm, N/bn) output tiles
+and the kernel keeps an accumulator tile in VMEM while looping the K axis.
+
+On this image the kernel runs with ``interpret=True`` (CPU PJRT cannot run
+Mosaic custom-calls), which lowers to plain HLO — numerics are identical to
+what the TPU path would compute. Correctness is asserted bit-exactly against
+``ref.int_matmul`` by ``python/tests/test_int_matmul.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref  # noqa: F401  (enables x64 as an import side-effect)
+
+I64 = jnp.int64
+
+
+def _matmul_kernel(a_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: o = a @ w with int64 accumulation.
+
+    a_ref: (bm, K) int32, w_ref: (K, bn) int32, o_ref: (bm, bn) int64.
+    On TPU this is the MXU contraction with the int32->int64 accumulate
+    epilogue; under interpret mode it is a plain dot.
+    """
+    a = a_ref[...].astype(I64)
+    w = w_ref[...].astype(I64)
+    o_ref[...] = jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())), preferred_element_type=I64
+    )
+
+
+def _pick_tile(dim: int, target: int = 128) -> int:
+    """Largest divisor of ``dim`` not exceeding ``target`` (MXU quantum).
+
+    Integer training shapes (e.g. M=784, N=100) are rarely multiples of 128;
+    rather than pad (which changes golden vectors) we tile on a divisor.
+    """
+    best = 1
+    for t in range(1, min(dim, target) + 1):
+        if dim % t == 0:
+            best = t
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def _run(a, w, bm: int, bn: int):
+    m, k = a.shape
+    _, n = w.shape
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), I64),
+        interpret=True,
+    )(a, w)
+
+
+def int_matmul(a, w, bm: int | None = None, bn: int | None = None):
+    """Integer matmul via the Pallas kernel.
+
+    a: (M, K) int32, w: (K, N) int32 -> (M, N) int64 (batch-summed
+    contractions stay in int64 until the caller rescales; see ref.py).
+    """
+    m, _ = a.shape
+    _, n = w.shape
+    bm = bm or _pick_tile(m)
+    bn = bn or _pick_tile(n)
+    return _run(a, w, bm=bm, bn=bn)
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int,
+                         bm: int = 128, bn: int = 128) -> int:
+    """Estimated VMEM bytes for one grid step (used by the perf analysis in
+    EXPERIMENTS.md): an (bm, K) int32 slab + (K, bn) int32 slab + (bm, bn)
+    int64 accumulator tile."""
+    return 4 * (bm * k) + 4 * (k * bn) + 8 * (bm * bn)

@@ -1,0 +1,81 @@
+"""Pallas fused NITRO scale + NITRO-ReLU kernel (L1).
+
+This is the epilogue the TPU mapping fuses after the MXU contraction: one
+pass over the int64 pre-activation tile while it is still in VMEM —
+floor-divide by the analytic scale factor SF, clamp to [-127, 127], apply
+the leaky integer segment, subtract the pre-computed mean mu.
+
+SF, alpha_inv and mu are *static* per layer (they depend only on topology),
+so they are baked into the lowered HLO as constants — exactly what a real
+deployment would do.
+
+Bit-exact against ``ref.nitro_relu(ref.nitro_scale(z, sf), alpha_inv)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+I32 = jnp.int32
+I64 = jnp.int64
+
+
+def _scale_relu_kernel(z_ref, o_ref, *, sf: int, alpha_inv: int, mu: int):
+    z = z_ref[...]
+    zs = jnp.floor_divide(z, jnp.asarray(sf, z.dtype))
+    neg = jnp.floor_divide(
+        jnp.maximum(zs, -ref.INT8_MAX), jnp.asarray(alpha_inv, z.dtype)
+    )
+    pos = jnp.minimum(zs, ref.INT8_MAX)
+    o_ref[...] = (jnp.where(zs < 0, neg, pos) - mu).astype(I32)
+
+
+@functools.partial(jax.jit, static_argnames=("sf", "alpha_inv"))
+def nitro_scale_relu(z, sf: int, alpha_inv: int):
+    """Fused NITRO Scaling Layer + NITRO-ReLU.
+
+    z: int64 pre-activations (any rank >= 2, leading dim = batch)
+    -> int32 activations, zero-centered, ~int8 range.
+    """
+    mu = ref.nitro_relu_mu(alpha_inv)
+    flat = z.reshape(z.shape[0], -1)
+    b, f = flat.shape
+    out = pl.pallas_call(
+        functools.partial(_scale_relu_kernel, sf=sf, alpha_inv=alpha_inv,
+                          mu=mu),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f), I32),
+        interpret=True,
+    )(flat)
+    return out.reshape(z.shape)
+
+
+def _scale_only_kernel(z_ref, o_ref, *, sf: int):
+    o_ref[...] = jnp.floor_divide(
+        z_ref[...], jnp.asarray(sf, z_ref.dtype)
+    ).astype(I32)
+
+
+@functools.partial(jax.jit, static_argnames=("sf",))
+def nitro_scale(z, sf: int):
+    """NITRO Scaling Layer alone (used on learning-layer / output heads,
+    which have no activation function after the final linear)."""
+    flat = z.reshape(z.shape[0], -1)
+    b, f = flat.shape
+    out = pl.pallas_call(
+        functools.partial(_scale_only_kernel, sf=sf),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f), I32),
+        interpret=True,
+    )(flat)
+    return out.reshape(z.shape)

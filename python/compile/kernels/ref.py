@@ -1,0 +1,287 @@
+"""Pure-jnp integer-only reference ops — the correctness oracle for NITRO-D.
+
+Every operation here is defined over integer tensors with *floor-division*
+semantics (rounding toward -inf, like Python ``//``). These functions are the
+single source of truth for the numeric format:
+
+  * Pallas kernels (``int_matmul.py``, ``int_conv2d.py``, ``nitro_ops.py``)
+    are tested bit-exactly against them (pytest + hypothesis).
+  * The Rust NativeEngine replicates them and is tested bit-exactly against
+    golden vectors generated from this module (``aot.py --golden``).
+
+Accumulation rule (DESIGN.md §Numeric-format rules): contractions (matmul,
+conv, gradient reductions) are performed in int64, then rescaled by an
+integer floor-division, then stored as int32. Intermediates that the paper
+guarantees to fit int32 are checked by ``assert_int32`` in debug paths.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+I32 = jnp.int32
+I64 = jnp.int64
+
+INT8_MAX = 127
+ONE_HOT_VALUE = 32  # paper App. B.2: one-hot encoding uses 32, not 1
+
+
+# ---------------------------------------------------------------------------
+# primitive integer ops
+# ---------------------------------------------------------------------------
+
+def div_floor(x, d):
+    """Floor division toward -inf. ``d`` may be a scalar or array (> 0)."""
+    return jnp.floor_divide(x, d)
+
+
+def int_matmul(a, w):
+    """Integer matmul with int64 accumulation.
+
+    a: (B, M) int32, w: (M, N) int32  ->  (B, N) int64.
+    The caller rescales (NITRO scaling / learning-rate division) before
+    casting back down to int32.
+    """
+    return jnp.matmul(a.astype(I64), w.astype(I64))
+
+
+def im2col(x, kernel: int, padding: int):
+    """Extract KxK patches (stride 1) of an NCHW int tensor.
+
+    x: (B, C, H, W)  ->  (B, H_out * W_out, C * K * K)
+
+    Patch layout is (c, ki, kj) row-major — the Rust engine and the Pallas
+    conv kernel use the identical layout so weight gradients match
+    bit-exactly.
+    """
+    b, c, h, w = x.shape
+    k = kernel
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    ho, wo = h + 2 * padding - k + 1, w + 2 * padding - k + 1
+    cols = []
+    for ki in range(k):
+        for kj in range(k):
+            cols.append(xp[:, :, ki:ki + ho, kj:kj + wo])
+    # (K*K, B, C, Ho*Wo) -> (B, Ho*Wo, C, K*K) with (c, ki, kj) row-major
+    stacked = jnp.stack(cols, axis=0).reshape(k * k, b, c, ho * wo)
+    patches = jnp.transpose(stacked, (1, 3, 2, 0))  # (B, Ho*Wo, C, K*K)
+    return patches.reshape(b, ho * wo, c * k * k)
+
+
+def int_conv2d(x, w, padding: int = 1):
+    """Integer 2D convolution (cross-correlation), stride 1, int64 accum.
+
+    x: (B, C, H, W) int32, w: (O, C, K, K) int32 -> (B, O, Ho, Wo) int64.
+    """
+    b, c, h, wd = x.shape
+    o, _, k, _ = w.shape
+    ho, wo = h + 2 * padding - k + 1, wd + 2 * padding - k + 1
+    patches = im2col(x, k, padding)                       # (B, P, CKK)
+    wmat = w.reshape(o, c * k * k).T                      # (CKK, O)
+    z = jnp.matmul(patches.astype(I64), wmat.astype(I64))  # (B, P, O)
+    return jnp.transpose(z, (0, 2, 1)).reshape(b, o, ho, wo)
+
+
+def conv2d_input_grad(g, w, padding: int = 1):
+    """Gradient of int_conv2d wrt its input (correlation with flipped,
+    transposed kernels). g: (B, O, Ho, Wo), w: (O, C, K, K) -> (B, C, H, W)
+    int64 (stride-1, same-size case)."""
+    k = w.shape[2]
+    wflip = jnp.flip(jnp.flip(w, 2), 3)            # (O, C, K, K)
+    wt = jnp.transpose(wflip, (1, 0, 2, 3))        # (C, O, K, K)
+    return int_conv2d(g, wt, padding=k - 1 - padding)
+
+
+def conv2d_weight_grad(x, g, kernel: int, padding: int = 1):
+    """Gradient of int_conv2d wrt weights.
+
+    x: (B, C, H, W), g: (B, O, Ho, Wo) -> (O, C, K, K) int64, summed over
+    the batch (integer mean would truncate; DESIGN.md interpretation #4).
+    """
+    b, c, _, _ = x.shape
+    o = g.shape[1]
+    patches = im2col(x, kernel, padding)           # (B, P, CKK)
+    gmat = g.reshape(b, o, -1)                     # (B, O, P)
+    gw = jnp.einsum(
+        "bop,bpk->ok", gmat.astype(I64), patches.astype(I64)
+    )                                              # (O, CKK)
+    return gw.reshape(o, c, kernel, kernel)
+
+
+def maxpool2d(x, size: int = 2, stride: int = 2):
+    """Max pooling, NCHW. Returns (pooled, argmax_index) where argmax_index
+    in [0, size*size) is the *first* maximal element in (ki, kj) row-major
+    order — the tie-break every engine must replicate."""
+    b, c, h, w = x.shape
+    ho, wo = (h - size) // stride + 1, (w - size) // stride + 1
+    wins = []
+    for ki in range(size):
+        for kj in range(size):
+            wins.append(
+                x[:, :, ki:ki + stride * ho:stride, kj:kj + stride * wo:stride]
+            )
+    stacked = jnp.stack(wins, axis=0)              # (S*S, B, C, Ho, Wo)
+    pooled = jnp.max(stacked, axis=0)
+    arg = jnp.argmax(stacked, axis=0).astype(I32)  # first max wins
+    return pooled, arg
+
+
+def maxpool2d_bwd(g, arg, in_shape, size: int = 2, stride: int = 2):
+    """Scatter gradient to the argmax positions recorded by maxpool2d."""
+    b, c, h, w = in_shape
+    ho, wo = g.shape[2], g.shape[3]
+    sel = jax.nn.one_hot(arg, size * size, axis=0, dtype=g.dtype)
+    routed = sel * g[None]                         # (S*S, B, C, Ho, Wo)
+    full = jnp.zeros((b, c, h, w), dtype=g.dtype)
+    idx = 0
+    for ki in range(size):
+        for kj in range(size):
+            full = full.at[
+                :, :, ki:ki + stride * ho:stride, kj:kj + stride * wo:stride
+            ].add(routed[idx])
+            idx += 1
+    return full
+
+
+# ---------------------------------------------------------------------------
+# NITRO components (paper §3.2)
+# ---------------------------------------------------------------------------
+
+def scale_factor_linear(fan_in: int) -> int:
+    """SF for Integer Linear pre-activations: 2^8 * M_{l-1}."""
+    return 256 * fan_in
+
+
+def scale_factor_conv(kernel: int, in_channels: int) -> int:
+    """SF for Integer Conv2D pre-activations: 2^8 * K^2 * C_{l-1}."""
+    return 256 * kernel * kernel * in_channels
+
+
+def nitro_scale(z, sf: int):
+    """NITRO Scaling Layer forward: z* = floor(z / SF). Backward is the
+    straight-through estimator (identity), handled by callers."""
+    return div_floor(z, sf)
+
+
+def nitro_relu_mu(alpha_inv: int) -> int:
+    """Pre-computed integer mean of the 4-segment NITRO-ReLU (paper §3.2).
+
+    mu^0 = floor(-127/a), mu^1 = floor(-127/(2a)), mu^2 = 63, mu^3 = 127;
+    mu = floor(mean(mu^i)) — all with floor semantics.
+    """
+    mu0 = -INT8_MAX // alpha_inv          # python // floors
+    mu1 = -INT8_MAX // (2 * alpha_inv)
+    mu2 = 63
+    mu3 = INT8_MAX
+    return (mu0 + mu1 + mu2 + mu3) // 4
+
+
+def nitro_relu(x, alpha_inv: int):
+    """NITRO-ReLU forward. Input: scaled pre-activations (int). Output is
+    confined to ~int8 range and zero-centered by the pre-computed mu."""
+    mu = nitro_relu_mu(alpha_inv)
+    neg = div_floor(jnp.maximum(x, -INT8_MAX), alpha_inv)
+    pos = jnp.minimum(x, INT8_MAX)
+    return jnp.where(x < 0, neg, pos) - mu
+
+
+def nitro_relu_bwd(x, g, alpha_inv: int):
+    """Exact piecewise derivative of the 4 segments (DESIGN.md interp. #2):
+    clamped segments have zero slope; the leaky segment floor-divides the
+    incoming gradient by alpha_inv. ``x`` is the *pre*-activation input that
+    was fed to nitro_relu (i.e. the scaling-layer output)."""
+    zero = jnp.zeros_like(g)
+    return jnp.where(
+        x < -INT8_MAX,
+        zero,
+        jnp.where(x < 0, div_floor(g, alpha_inv),
+                  jnp.where(x <= INT8_MAX, g, zero)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# loss / labels / optimizer (paper §3.3)
+# ---------------------------------------------------------------------------
+
+def one_hot32(y, num_classes: int):
+    """One-hot with value 32 for the true class (paper App. B.2)."""
+    return (jax.nn.one_hot(y, num_classes, dtype=I32) * ONE_HOT_VALUE).astype(I32)
+
+
+def rss_loss_grad(yhat, y32):
+    """RSS loss L = 1/2 sum (yhat - y)^2 ; grad = yhat - y. Returns
+    (loss_sum int64 scalar, grad int32)."""
+    d = yhat.astype(I64) - y32.astype(I64)
+    loss = jnp.sum(d * d) // 2
+    return loss, d.astype(I32)
+
+
+def amplification_factor(num_classes: int) -> int:
+    """NITRO Amplification Factor AF = 2^6 * G (paper §3.3)."""
+    return 64 * num_classes
+
+
+def div_trunc(x, d):
+    """Division truncating toward zero (C semantics)."""
+    ax = jnp.abs(x)
+    return jnp.sign(x) * jnp.floor_divide(ax, d)
+
+
+def integer_sgd(w, grad, gamma_inv, eta_inv):
+    """IntegerSGD step (paper Algorithm 1).
+
+    w: int32, grad: int64 (batch-summed); gamma_inv: traced/static scalar;
+    eta_inv: scalar, 0 disables weight decay.
+    delta = floor(grad / gamma_inv) [+ trunc(w / eta_inv)] ; w' = w - delta.
+
+    The decay term uses *truncating* division: the paper's §3.3 states that
+    weights with |w| < eta_inv receive no penalization, which only holds if
+    the division rounds toward zero (floor would push every negative weight
+    up by one). The gradient term keeps Algorithm 1's floor.
+    """
+    delta = div_floor(grad.astype(I64), jnp.asarray(gamma_inv, I64))
+    eta = jnp.asarray(eta_inv, I64)
+    decay = jnp.where(
+        eta != 0,
+        div_trunc(w.astype(I64), jnp.maximum(eta, 1)),
+        jnp.zeros(w.shape, dtype=I64),
+    )
+    return (w.astype(I64) - delta - decay).astype(I32)
+
+
+# ---------------------------------------------------------------------------
+# weight init / data preprocessing (paper App. B)
+# ---------------------------------------------------------------------------
+
+def isqrt(n: int) -> int:
+    """Integer square root (floor). Mirrors rust util::isqrt."""
+    import math
+    return math.isqrt(n)
+
+
+def kaiming_bound(fan_in: int) -> int:
+    """Integer Kaiming bound: b = floor(128*1732 / (isqrt(fan_in)*1000))."""
+    return max(1, (128 * 1732) // (isqrt(fan_in) * 1000))
+
+
+def init_weights(rng: np.random.RandomState, shape, fan_in: int):
+    """Discrete uniform U(-b, b) int32 weights (biases are disabled)."""
+    b = kaiming_bound(fan_in)
+    return rng.randint(-b, b + 1, size=shape).astype(np.int32)
+
+
+def mad_normalize(x):
+    """Integer-only MAD pre-processing (paper App. B.2) over the whole
+    dataset: center by integer mean, rescale so sigma ~ 64 via MAD
+    (x - mu) * 51 // omega, all in integer arithmetic."""
+    x = np.asarray(x, dtype=np.int64)
+    n = x.size
+    mu = int(x.sum()) // n
+    omega = int(np.abs(x - mu).sum()) // n
+    omega = max(omega, 1)
+    return (((x - mu) * 51) // omega).astype(np.int32)

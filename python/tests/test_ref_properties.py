@@ -1,0 +1,143 @@
+"""Property tests on the pure-jnp reference ops (the numeric-format core).
+
+These pin down the floor-division semantics and the paper-specified
+invariants that the Pallas kernels and the Rust engine must replicate.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+@given(st.integers(-10**9, 10**9), st.integers(1, 10**6))
+def test_div_floor_matches_python(x, d):
+    assert int(ref.div_floor(np.int64(x), np.int64(d))) == x // d
+
+
+@given(st.integers(-10**6, 10**6), st.integers(1, 1000))
+def test_div_floor_is_not_truncation_on_negatives(x, d):
+    got = int(ref.div_floor(np.int64(x), np.int64(d)))
+    assert got * d <= x < (got + 1) * d  # floor bracketing
+
+
+@pytest.mark.parametrize("alpha_inv,expected_mu", [
+    # hand-computed from the paper's four segment means
+    (10, (-13 + -7 + 63 + 127) // 4),
+    (2, (-64 + -32 + 63 + 127) // 4),
+    (100, (-2 + -1 + 63 + 127) // 4),
+])
+def test_nitro_relu_mu(alpha_inv, expected_mu):
+    assert ref.nitro_relu_mu(alpha_inv) == expected_mu
+
+
+@given(st.integers(2, 128))
+def test_nitro_relu_output_range(alpha_inv):
+    x = np.arange(-1000, 1000, dtype=np.int32)
+    out = np.asarray(ref.nitro_relu(x, alpha_inv))
+    mu = ref.nitro_relu_mu(alpha_inv)
+    # paper: output confined to [-127, 127] before centering
+    assert out.min() >= -127 - mu
+    assert out.max() <= 127 - mu
+    # monotone non-decreasing
+    assert (np.diff(out) >= 0).all()
+
+
+@given(st.integers(2, 64), st.integers(0, 2**31 - 1))
+@settings(max_examples=50)
+def test_nitro_relu_bwd_zero_outside_clamp(alpha_inv, seed):
+    rng = np.random.RandomState(seed % 2**31)
+    x = rng.randint(-500, 501, 256).astype(np.int32)
+    g = rng.randint(-10**6, 10**6, 256).astype(np.int32)
+    gz = np.asarray(ref.nitro_relu_bwd(x, g, alpha_inv))
+    assert (gz[(x < -127) | (x > 127)] == 0).all()
+    inner_neg = (x >= -127) & (x < 0)
+    assert (gz[inner_neg] == g[inner_neg] // alpha_inv).all()
+    inner_pos = (x >= 0) & (x <= 127)
+    assert (gz[inner_pos] == g[inner_pos]).all()
+
+
+def test_scale_factors_match_paper():
+    assert ref.scale_factor_linear(784) == 256 * 784
+    assert ref.scale_factor_conv(3, 128) == 256 * 9 * 128
+    assert ref.amplification_factor(10) == 640
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30)
+def test_scaling_layer_bounds(seed):
+    """Worst-case int8 x int8 operands through SF land within +-64 ~ int8
+    range — the analytic bound the paper derives."""
+    rng = np.random.RandomState(seed % 2**31)
+    m = int(rng.randint(1, 512))
+    a = rng.randint(-127, 128, (4, m)).astype(np.int32)
+    w = rng.randint(-127, 128, (m, 6)).astype(np.int32)
+    z = ref.int_matmul(a, w)
+    zs = np.asarray(ref.nitro_scale(z, ref.scale_factor_linear(m)))
+    assert np.abs(zs).max() <= 64
+
+
+def test_integer_sgd_no_decay_below_threshold():
+    """Paper §3.3: weights with |w| < eta_inv receive no decay."""
+    w = np.array([10, -10, 2999, -2999, 3000, -3001], dtype=np.int32)
+    g = np.zeros_like(w, dtype=np.int64)
+    w2 = np.asarray(ref.integer_sgd(w, g, 512, 3000))
+    np.testing.assert_array_equal(w2[:4], w[:4])        # untouched
+    assert w2[4] == 3000 - 1                            # trunc(3000/3000)=1
+    assert w2[5] == -3001 + 1                           # trunc(-3001/3000)=-1
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 10**5),
+       st.integers(0, 10**5))
+@settings(max_examples=50)
+def test_integer_sgd_matches_algorithm1(seed, gamma, eta):
+    rng = np.random.RandomState(seed % 2**31)
+    w = rng.randint(-30000, 30001, 64).astype(np.int32)
+    g = rng.randint(-10**8, 10**8, 64).astype(np.int64)
+    w2 = np.asarray(ref.integer_sgd(w, g, gamma, eta))
+    delta = g // gamma  # gradient term: floor (Algorithm 1)
+    if eta != 0:
+        wi = w.astype(np.int64)
+        delta = delta + np.sign(wi) * (np.abs(wi) // eta)  # decay: trunc
+    np.testing.assert_array_equal(w2, (w - delta).astype(np.int32))
+
+
+def test_one_hot32():
+    y32 = np.asarray(ref.one_hot32(np.array([0, 3]), 4))
+    np.testing.assert_array_equal(
+        y32, [[32, 0, 0, 0], [0, 0, 0, 32]])
+
+
+def test_rss_loss_grad():
+    yhat = np.array([[10, -5]], dtype=np.int32)
+    y32 = np.array([[32, 0]], dtype=np.int32)
+    loss, grad = ref.rss_loss_grad(yhat, y32)
+    assert int(loss) == (22 * 22 + 5 * 5) // 2
+    np.testing.assert_array_equal(np.asarray(grad), [[-22, -5]])
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20)
+def test_mad_normalize_properties(seed):
+    rng = np.random.RandomState(seed % 2**31)
+    x = rng.randint(0, 256, 5000)
+    xn = ref.mad_normalize(x)
+    assert xn.dtype == np.int32
+    # centered: integer mean within quantization of 0
+    assert abs(int(xn.astype(np.int64).sum()) // xn.size) <= 2
+    # dispersion: MAD close to 51 (sigma ~ 64) up to integer truncation
+    mad = np.abs(xn.astype(np.int64)).mean()
+    assert 30 <= mad <= 70
+
+
+def test_kaiming_bound_examples():
+    # b = floor(128*1732 / (isqrt(fan_in)*1000))
+    assert ref.kaiming_bound(784) == (128 * 1732) // (28 * 1000)
+    assert ref.kaiming_bound(9) == (128 * 1732) // (3 * 1000)
+
+
+@given(st.integers(1, 10**6))
+def test_isqrt(n):
+    s = ref.isqrt(n)
+    assert s * s <= n < (s + 1) * (s + 1)

@@ -1,0 +1,103 @@
+//! Kernel micro-benchmarks: the integer contraction hot paths of the
+//! NativeEngine vs their f32 twins, plus PJRT artifact execution when
+//! available. Throughput is reported in MACs/s so integer-vs-float cost on
+//! this CPU is directly visible (EXPERIMENTS.md §Perf feeds on the JSON).
+
+use nitro::tensor::{conv2d_i64, conv2d_weight_grad, matmul_i64, maxpool2d,
+                    nitro_scale_relu, ops_f32, FTensor, ITensor, Tensor};
+use nitro::util::bench::Bencher;
+use nitro::util::rng::Pcg32;
+
+fn rand_i(rng: &mut Pcg32, shape: &[usize], lo: i32, hi: i32) -> ITensor {
+    let n = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_i32(lo, hi)).collect())
+}
+
+fn rand_f(rng: &mut Pcg32, shape: &[usize]) -> FTensor {
+    let n = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Pcg32::new(1);
+    println!("{}", Bencher::header());
+
+    // matmul shapes from the paper's MLPs: (batch 64) x (784 -> 1024)
+    for &(m, k, n) in &[(64usize, 784usize, 1024usize), (64, 1024, 1024),
+                        (64, 3072, 3000)] {
+        let a = rand_i(&mut rng, &[m, k], -127, 127);
+        let w = rand_i(&mut rng, &[k, n], -32768, 32767);
+        let macs = (m * k * n) as f64;
+        b.bench(&format!("int_matmul {m}x{k}x{n}"), Some(macs), || {
+            std::hint::black_box(matmul_i64(&a, &w));
+        });
+        let af = rand_f(&mut rng, &[m, k]);
+        let wf = rand_f(&mut rng, &[k, n]);
+        b.bench(&format!("f32_matmul {m}x{k}x{n}"), Some(macs), || {
+            std::hint::black_box(ops_f32::matmul(&af, &wf));
+        });
+    }
+
+    // conv shapes from VGG8B (narrow + one full-width layer)
+    for &(bt, c, o, h) in &[(8usize, 32usize, 64usize, 16usize),
+                            (8, 128, 128, 8), (2, 128, 256, 32)] {
+        let x = rand_i(&mut rng, &[bt, c, h, h], -127, 127);
+        let w = rand_i(&mut rng, &[o, c, 3, 3], -4000, 4000);
+        let macs = (bt * o * h * h * c * 9) as f64;
+        b.bench(&format!("int_conv2d b{bt} {c}->{o} {h}x{h}"), Some(macs),
+                || {
+                    std::hint::black_box(conv2d_i64(&x, &w, 1));
+                });
+        let g = rand_i(&mut rng, &[bt, o, h, h], -500, 500);
+        b.bench(&format!("conv_wgrad b{bt} {c}->{o} {h}x{h}"), Some(macs),
+                || {
+                    std::hint::black_box(conv2d_weight_grad(&x, &g, 3, 1));
+                });
+        let xf = rand_f(&mut rng, &[bt, c, h, h]);
+        let wf = rand_f(&mut rng, &[o, c, 3, 3]);
+        b.bench(&format!("f32_conv2d b{bt} {c}->{o} {h}x{h}"), Some(macs),
+                || {
+                    std::hint::black_box(ops_f32::conv2d(&xf, &wf, 1));
+                });
+    }
+
+    // NITRO epilogue (fused scale+relu) — elements/s
+    let z = nitro::tensor::LTensor::from_vec(
+        &[64, 65536],
+        (0..64 * 65536).map(|i| (i as i64 * 7919) % (1 << 40)).collect(),
+    );
+    b.bench("nitro_scale_relu 64x65536", Some((64 * 65536) as f64), || {
+        std::hint::black_box(nitro_scale_relu(&z, 256 * 1152, 10));
+    });
+
+    // maxpool
+    let x = rand_i(&mut rng, &[8, 128, 32, 32], -127, 127);
+    b.bench("maxpool2d 8x128x32x32", Some((8 * 128 * 32 * 32) as f64), || {
+        std::hint::black_box(maxpool2d(&x, 2, 2));
+    });
+
+    // PJRT artifact execution (whole tinycnn train step), if built
+    if std::path::Path::new("artifacts/tinycnn/manifest.json").exists() {
+        use nitro::coordinator::engine::{Engine, PjrtEngine};
+        use nitro::nn::Hyper;
+        let mut eng = PjrtEngine::load("artifacts/tinycnn", 7).unwrap();
+        let m = eng.manifest.clone();
+        let mut shape = vec![m.batch];
+        shape.extend(&m.input_shape);
+        let xn: usize = shape.iter().product();
+        let x = rand_i(&mut rng, &shape, -127, 127);
+        let labels: Vec<usize> = (0..m.batch).map(|i| i % 10).collect();
+        let hp = Hyper::default();
+        b.bench("pjrt tinycnn train step", Some(xn as f64), || {
+            std::hint::black_box(eng.train_batch(&x, &labels, &hp));
+        });
+        b.bench("pjrt tinycnn infer", Some(xn as f64), || {
+            std::hint::black_box(eng.infer(&x));
+        });
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_kernels.json", b.json()).ok();
+    println!("-> results/bench_kernels.json");
+}

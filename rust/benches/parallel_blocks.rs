@@ -1,0 +1,76 @@
+//! The L3 contribution bench: block-parallel LES scheduling vs sequential.
+//!
+//! The paper (§3.3) observes that local-loss blocks train independently
+//! "allowing them to be executed in parallel and enhancing the efficiency
+//! of the training process" but does not build it; this repo's
+//! `Network::train_batch_parallel` does (backward of block l overlaps the
+//! forwards of blocks l+1..L). The two modes are bit-identical (tested in
+//! nn::block); this bench quantifies the speedup across worker budgets.
+
+use nitro::nn::{zoo, Hyper, Network};
+use nitro::util::bench::Bencher;
+use nitro::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("{}", Bencher::header());
+    let batch = 16usize;
+
+    for preset in ["vgg8b-narrow", "vgg11b-narrow"] {
+        let spec = zoo::get(preset).unwrap();
+        let mut shape = vec![batch];
+        shape.extend(&spec.input_shape);
+        let n: usize = shape.iter().product();
+        let mut rng = Pcg32::new(3);
+        let x = nitro::tensor::ITensor::from_vec(
+            &shape, (0..n).map(|_| rng.range_i32(-127, 127)).collect());
+        let labels: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+        let hp = Hyper { gamma_inv: 512, eta_fw_inv: 25000, eta_lr_inv: 3000 };
+
+        let mut net = Network::new(spec.clone(), 1);
+        let mut rng2 = Pcg32::new(4);
+        let seq = b
+            .bench(&format!("{preset} sequential step"), None, || {
+                std::hint::black_box(
+                    net.train_batch(&x, &labels, &hp, &mut rng2));
+            })
+            .median_ns;
+
+        let mut net2 = Network::new(spec.clone(), 1);
+        let mut rng3 = Pcg32::new(4);
+        let par = b
+            .bench(&format!("{preset} block-parallel step"), None, || {
+                std::hint::black_box(
+                    net2.train_batch_parallel(&x, &labels, &hp, &mut rng3));
+            })
+            .median_ns;
+
+        println!("  {preset}: block-parallel speedup {:.2}x", seq / par);
+    }
+
+    // scaling with the kernel-level thread budget
+    let spec = zoo::get("vgg8b-narrow").unwrap();
+    let mut shape = vec![batch];
+    shape.extend(&spec.input_shape);
+    let n: usize = shape.iter().product();
+    let mut rng = Pcg32::new(3);
+    let x = nitro::tensor::ITensor::from_vec(
+        &shape, (0..n).map(|_| rng.range_i32(-127, 127)).collect());
+    let labels: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+    let hp = Hyper::default();
+    for workers in [1usize, 2, 4, 8] {
+        std::env::set_var("NITRO_THREADS", workers.to_string());
+        let mut net = Network::new(spec.clone(), 1);
+        let mut rng2 = Pcg32::new(4);
+        b.bench(&format!("vgg8b-narrow step NITRO_THREADS={workers}"), None,
+                || {
+                    std::hint::black_box(net.train_batch_parallel(
+                        &x, &labels, &hp, &mut rng2));
+                });
+    }
+    std::env::remove_var("NITRO_THREADS");
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_parallel.json", b.json()).ok();
+    println!("-> results/bench_parallel.json");
+}

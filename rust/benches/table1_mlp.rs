@@ -1,0 +1,65 @@
+//! Table 1 bench: end-to-end training-step latency for every MLP
+//! architecture of the paper (NITRO-D vs the PocketNN-style DFA baseline
+//! vs FP BP on identical topologies). The accuracy dimension of Table 1 is
+//! produced by `nitro experiment table1`; this target covers the
+//! systems dimension — cost per step at the paper's batch size 64.
+
+use nitro::baselines::{fp, pocketnn};
+use nitro::data::synthetic;
+use nitro::nn::{zoo, Hyper, Network};
+use nitro::util::bench::Bencher;
+use nitro::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("{}", Bencher::header());
+    let batch = 64usize;
+
+    for preset in ["mlp1", "mlp2", "mlp3-narrow", "mlp4-narrow"] {
+        let spec = zoo::get(preset).unwrap();
+        let input_dim = spec.input_shape[0];
+        let work = Some(spec.param_count() as f64 * batch as f64);
+
+        // shared batch
+        let mut rng = Pcg32::new(3);
+        let x = nitro::tensor::ITensor::from_vec(
+            &[batch, input_dim],
+            (0..batch * input_dim).map(|_| rng.range_i32(-127, 127)).collect(),
+        );
+        let labels: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+        let hp = Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 };
+
+        // NITRO-D (parallel scheduler)
+        let mut net = Network::new(spec.clone(), 1);
+        let mut rng2 = Pcg32::new(4);
+        b.bench(&format!("{preset} nitro-d step b{batch}"), work, || {
+            std::hint::black_box(
+                net.train_batch_parallel(&x, &labels, &hp, &mut rng2));
+        });
+
+        // PocketNN DFA
+        let mut dims = vec![input_dim];
+        for blk in &spec.blocks {
+            dims.push(blk.out_features());
+        }
+        dims.push(spec.num_classes);
+        let mut pnet = pocketnn::PocketNet::new(&dims, 1);
+        b.bench(&format!("{preset} pocketnn-dfa step b{batch}"), work, || {
+            std::hint::black_box(pnet.train_batch(&x, &labels, 512));
+        });
+
+        // FP BP on the same topology (one batch through train_bp's inner
+        // loop ≈ one call with a 1-batch dataset)
+        let ds = synthetic::generate("bench", (1, 1, input_dim), 10, batch,
+                                     synthetic::Difficulty::easy(), 5);
+        let mut fnet = fp::FpNet::new(spec.clone(), 1);
+        b.bench(&format!("{preset} fp-bp(adam) step b{batch}"), work, || {
+            std::hint::black_box(
+                fp::train_bp(&mut fnet, &ds, &ds, 1, batch, 1e-3, 5));
+        });
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_table1.json", b.json()).ok();
+    println!("-> results/bench_table1.json");
+}

@@ -1,0 +1,57 @@
+//! Table 2 bench: end-to-end training-step and inference latency for the
+//! paper's CNN architectures (narrow presets by default; set
+//! NITRO_BENCH_FULL=1 for the paper-width VGG8B/VGG11B — minutes per
+//! iteration on CPU). Accuracy rows come from `nitro experiment table2`.
+
+use nitro::baselines::fp;
+use nitro::nn::{zoo, Hyper, Network};
+use nitro::util::bench::Bencher;
+use nitro::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("{}", Bencher::header());
+    let full = std::env::var("NITRO_BENCH_FULL").is_ok();
+    let presets: &[&str] = if full {
+        &["vgg8b", "vgg11b"]
+    } else {
+        &["tinycnn", "vgg8b-narrow", "vgg11b-narrow"]
+    };
+    let batch = if full { 8 } else { 16 };
+
+    for preset in presets {
+        let spec = zoo::get(preset).unwrap();
+        let mut shape = vec![batch];
+        shape.extend(&spec.input_shape);
+        let n: usize = shape.iter().product();
+        let mut rng = Pcg32::new(3);
+        let x = nitro::tensor::ITensor::from_vec(
+            &shape, (0..n).map(|_| rng.range_i32(-127, 127)).collect());
+        let labels: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+        let hp = Hyper { gamma_inv: 512, eta_fw_inv: 25000, eta_lr_inv: 3000 };
+        let work = Some(spec.param_count() as f64 * batch as f64);
+
+        let mut net = Network::new(spec.clone(), 1);
+        let mut rng2 = Pcg32::new(4);
+        b.bench(&format!("{preset} nitro-d step b{batch}"), work, || {
+            std::hint::black_box(
+                net.train_batch_parallel(&x, &labels, &hp, &mut rng2));
+        });
+        b.bench(&format!("{preset} nitro-d infer b{batch}"), work, || {
+            std::hint::black_box(net.infer(&x));
+        });
+
+        // float twin: one full BP step on the same topology
+        let xf = nitro::tensor::FTensor::from_vec(
+            &shape, x.data.iter().map(|&v| v as f32 / 64.0).collect());
+        let mut fnet = fp::FpNet::new(spec.clone(), 1);
+        b.bench(&format!("{preset} fp-bp fwd b{batch}"), work, || {
+            std::hint::black_box(fnet.forward(&xf, None));
+        });
+        let _ = &mut fnet;
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_table2.json", b.json()).ok();
+    println!("-> results/bench_table2.json");
+}

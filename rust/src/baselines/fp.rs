@@ -1,0 +1,470 @@
+//! Floating-point baselines on the shared topologies.
+//!
+//! `FpNet` instantiates the same `NetworkSpec` the integer path uses, in
+//! f32, with LeakyReLU(0.1) (the float analogue of NITRO-ReLU) and no
+//! biases (matching the integer architecture, App. B.1).
+//!
+//! Two trainers:
+//! * [`train_bp`] — global backpropagation, Adam + softmax CrossEntropy.
+//!   This is the paper's "FP BP" column: the strongest reference.
+//! * [`train_les`] — Local Error Signals [16]: per-block local linear
+//!   heads with local CE losses; gradients do not cross block boundaries.
+//!   This is the paper's "FP LES" column and the direct float twin of the
+//!   NITRO-D learning algorithm.
+
+use crate::data::{Batcher, Dataset};
+use crate::nn::spec::{BlockSpec, NetworkSpec};
+use crate::optim::Adam;
+use crate::tensor::ops_f32 as f;
+use crate::tensor::{FTensor, Tensor};
+use crate::util::rng::Pcg32;
+
+/// One float layer mirroring a local-loss block's forward layers.
+pub enum FLayer {
+    Conv {
+        w: FTensor,
+        padding: usize,
+        pool: bool,
+        /// local LES head (F, G); unused under BP
+        head: FTensor,
+        /// adaptive-pool geometry (s, k) mirroring the integer block
+        lr_pool: (usize, usize),
+        out_ch: usize,
+    },
+    Linear {
+        w: FTensor,
+        head: FTensor,
+    },
+}
+
+pub struct FpNet {
+    pub spec: NetworkSpec,
+    pub layers: Vec<FLayer>,
+    pub head: FTensor,
+}
+
+fn he_uniform(rng: &mut Pcg32, shape: &[usize], fan_in: usize) -> FTensor {
+    let b = (6.0f32 / fan_in as f32).sqrt();
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-b, b)).collect())
+}
+
+impl FpNet {
+    pub fn new(spec: NetworkSpec, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let mut layers = Vec::new();
+        for blk in &spec.blocks {
+            match blk {
+                BlockSpec::Conv(c) => layers.push(FLayer::Conv {
+                    w: he_uniform(&mut rng, &c.wf_shape(), c.fan_in()),
+                    padding: c.padding,
+                    pool: c.pool,
+                    head: he_uniform(&mut rng, &c.wl_shape(), c.lr_features()),
+                    lr_pool: c.lr_pool(),
+                    out_ch: c.out_channels,
+                }),
+                BlockSpec::Linear(l) => layers.push(FLayer::Linear {
+                    w: he_uniform(&mut rng, &l.wf_shape(), l.fan_in()),
+                    head: he_uniform(&mut rng, &l.wl_shape(), l.out_features),
+                }),
+            }
+        }
+        let head = he_uniform(
+            &mut rng,
+            &[spec.head.in_features, spec.head.num_classes],
+            spec.head.fan_in(),
+        );
+        FpNet { spec, layers, head }
+    }
+
+    fn flatten_if(a: FTensor, next_linear: bool) -> FTensor {
+        if next_linear && a.shape.len() > 2 {
+            let (b, f_) = a.batch_feat();
+            a.reshaped(&[b, f_])
+        } else {
+            a
+        }
+    }
+
+    /// Forward producing logits; optionally records the per-layer caches.
+    pub fn forward(&self, x: &FTensor, caches: Option<&mut Vec<FCache>>)
+                   -> FTensor {
+        let mut a = x.clone();
+        let mut caches = caches;
+        for layer in &self.layers {
+            let next_linear = matches!(layer, FLayer::Linear { .. });
+            a = Self::flatten_if(a, next_linear);
+            let (out, cache) = layer_forward(layer, &a);
+            if let Some(c) = caches.as_deref_mut() {
+                c.push(cache);
+            }
+            a = out;
+        }
+        let (b, f_) = a.batch_feat();
+        let a = a.reshaped(&[b, f_]);
+        let logits = f::matmul(&a, &self.head);
+        if let Some(c) = caches.as_deref_mut() {
+            c.push(FCache { a_in: a, z: None, pool_arg: None, act_shape: vec![] });
+        }
+        logits
+    }
+
+    pub fn accuracy(&self, ds: &Dataset, batch: usize) -> f64 {
+        let flatten = self.spec.input_shape.len() == 1;
+        let mut correct = 0usize;
+        for (x, labels) in Batcher::sequential(ds, batch, flatten) {
+            let xf = to_f32(&x);
+            let logits = self.forward(&xf, None);
+            correct += argmax_correct(&logits, &labels);
+        }
+        correct as f64 / ds.len().max(1) as f64
+    }
+}
+
+/// Forward cache of one layer.
+pub struct FCache {
+    pub a_in: FTensor,
+    /// pre-activation (before LeakyReLU)
+    pub z: Option<FTensor>,
+    pub pool_arg: Option<(Vec<u32>, Vec<usize>)>, // (argmax, pre-pool shape)
+    pub act_shape: Vec<usize>,
+}
+
+fn layer_forward(layer: &FLayer, a: &FTensor) -> (FTensor, FCache) {
+    match layer {
+        FLayer::Conv { w, padding, pool, .. } => {
+            let z = f::conv2d(a, w, *padding);
+            let act = f::leaky_relu(&z, 0.1);
+            if *pool {
+                let shape = act.shape.clone();
+                let (p, arg) = f::maxpool2d(&act, 2, 2);
+                (
+                    p,
+                    FCache {
+                        a_in: a.clone(),
+                        z: Some(z),
+                        pool_arg: Some((arg, shape.clone())),
+                        act_shape: shape,
+                    },
+                )
+            } else {
+                let shape = act.shape.clone();
+                (
+                    act,
+                    FCache {
+                        a_in: a.clone(),
+                        z: Some(z),
+                        pool_arg: None,
+                        act_shape: shape,
+                    },
+                )
+            }
+        }
+        FLayer::Linear { w, .. } => {
+            let z = f::matmul(a, w);
+            let act = f::leaky_relu(&z, 0.1);
+            let shape = act.shape.clone();
+            (
+                act,
+                FCache { a_in: a.clone(), z: Some(z), pool_arg: None,
+                         act_shape: shape },
+            )
+        }
+    }
+}
+
+fn to_f32(x: &crate::tensor::ITensor) -> FTensor {
+    // integer-preprocessed pixels (~sigma 64) scaled to ~unit variance
+    Tensor {
+        shape: x.shape.clone(),
+        data: x.data.iter().map(|&v| v as f32 / 64.0).collect(),
+    }
+}
+
+fn argmax_correct(logits: &FTensor, labels: &[usize]) -> usize {
+    let (b, g) = (logits.shape[0], logits.shape[1]);
+    let mut c = 0;
+    for i in 0..b {
+        let row = &logits.data[i * g..(i + 1) * g];
+        let mut best = 0usize;
+        for j in 1..g {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[i] {
+            c += 1;
+        }
+    }
+    c
+}
+
+/// Result shared by both float trainers.
+pub struct FpResult {
+    pub test_acc: f64,
+    pub train_acc: f64,
+    pub losses: Vec<f32>,
+}
+
+/// FP BP: full backprop with Adam + CrossEntropy.
+pub fn train_bp(net: &mut FpNet, train: &Dataset, test: &Dataset,
+                epochs: usize, batch: usize, lr: f32, seed: u64) -> FpResult {
+    let flatten = net.spec.input_shape.len() == 1;
+    let mut rng = Pcg32::with_stream(seed, 0xf9);
+    let mut opt = Adam::new(lr);
+    let mut losses = Vec::new();
+    let mut train_correct = 0usize;
+    let mut train_seen = 0usize;
+    for _ in 0..epochs {
+        train_correct = 0;
+        train_seen = 0;
+        for (xi, labels) in Batcher::new(train, batch, flatten, &mut rng) {
+            let x = to_f32(&xi);
+            let mut caches = Vec::new();
+            let logits = net.forward(&x, Some(&mut caches));
+            train_correct += argmax_correct(&logits, &labels);
+            train_seen += labels.len();
+            let (loss, dlogits) = f::softmax_ce(&logits, &labels);
+            losses.push(loss);
+            opt.tick();
+            // head
+            let head_cache = caches.pop().unwrap();
+            let ghead = f::matmul_at_b(&head_cache.a_in, &dlogits);
+            let mut d = f::matmul_a_bt(&dlogits, &net.head);
+            opt.update(net.layers.len(), &mut net.head, &ghead);
+            // layers in reverse
+            for (li, layer) in net.layers.iter_mut().enumerate().rev() {
+                let cache = &caches[li];
+                // reshape d to this layer's output shape
+                match layer {
+                    FLayer::Conv { w, padding, pool, .. } => {
+                        let mut dc = if *pool {
+                            let (arg, pre) = cache.pool_arg.as_ref().unwrap();
+                            let (ph, pw) = (pre[2] / 2, pre[3] / 2);
+                            let dg = d.reshaped(&[pre[0], pre[1], ph, pw]);
+                            f::maxpool2d_bwd(&dg, arg, pre, 2, 2)
+                        } else {
+                            d.reshaped(&[
+                                cache.act_shape[0],
+                                cache.act_shape[1],
+                                cache.act_shape[2],
+                                cache.act_shape[3],
+                            ])
+                        };
+                        dc = f::leaky_relu_bwd(cache.z.as_ref().unwrap(), &dc, 0.1);
+                        let gw = f::conv2d_weight_grad(&cache.a_in, &dc, 3,
+                                                       *padding);
+                        d = f::conv2d_input_grad(&dc, w, *padding);
+                        let (b_, f_) = d.batch_feat();
+                        d = d.reshaped(&[b_, f_]);
+                        opt.update(li, w, &gw);
+                    }
+                    FLayer::Linear { w, .. } => {
+                        let dz = f::leaky_relu_bwd(
+                            cache.z.as_ref().unwrap(),
+                            &d.reshaped(&[
+                                cache.act_shape[0],
+                                cache.act_shape[1],
+                            ]),
+                            0.1,
+                        );
+                        let gw = f::matmul_at_b(&cache.a_in, &dz);
+                        d = f::matmul_a_bt(&dz, w);
+                        opt.update(li, w, &gw);
+                    }
+                }
+            }
+        }
+    }
+    FpResult {
+        test_acc: net.accuracy(test, batch),
+        train_acc: train_correct as f64 / train_seen.max(1) as f64,
+        losses,
+    }
+}
+
+/// FP LES [16]: local CE heads per block; no gradient crosses blocks.
+pub fn train_les(net: &mut FpNet, train: &Dataset, test: &Dataset,
+                 epochs: usize, batch: usize, lr: f32, seed: u64) -> FpResult {
+    let flatten = net.spec.input_shape.len() == 1;
+    let mut rng = Pcg32::with_stream(seed, 0x1e5);
+    let mut opt = Adam::new(lr);
+    let mut losses = Vec::new();
+    let mut train_correct = 0usize;
+    let mut train_seen = 0usize;
+    let nl = net.layers.len();
+    for _ in 0..epochs {
+        train_correct = 0;
+        train_seen = 0;
+        for (xi, labels) in Batcher::new(train, batch, flatten, &mut rng) {
+            let x = to_f32(&xi);
+            opt.tick();
+            let mut a = x;
+            let mut batch_loss = 0f32;
+            for (li, layer) in net.layers.iter_mut().enumerate() {
+                let next_linear = matches!(layer, FLayer::Linear { .. });
+                a = FpNet::flatten_if(a, next_linear);
+                let (out, cache) = layer_forward(layer, &a);
+                // local head on the block output
+                let (feat, pool_ctx) = les_features(layer, &out);
+                let head_w = match layer {
+                    FLayer::Conv { head, .. } | FLayer::Linear { head, .. } => head,
+                };
+                let local_logits = f::matmul(&feat, head_w);
+                let (loss, dlog) = f::softmax_ce(&local_logits, &labels);
+                batch_loss += loss;
+                let ghead = f::matmul_at_b(&feat, &dlog);
+                let dfeat = f::matmul_a_bt(&dlog, head_w);
+                // back through local pooling + the block's own layers
+                let d = les_backward(layer, &cache, &out, dfeat, pool_ctx);
+                match layer {
+                    FLayer::Conv { w, padding, head, .. } => {
+                        let gw = f::conv2d_weight_grad(&cache.a_in, &d, 3,
+                                                       *padding);
+                        opt.update(2 * li, w, &gw);
+                        opt.update(2 * li + 1, head, &ghead);
+                    }
+                    FLayer::Linear { w, head } => {
+                        let gw = f::matmul_at_b(&cache.a_in, &d);
+                        opt.update(2 * li, w, &gw);
+                        opt.update(2 * li + 1, head, &ghead);
+                    }
+                }
+                a = out;
+            }
+            // output head on detached features
+            let (b_, f_) = a.batch_feat();
+            let a = a.reshaped(&[b_, f_]);
+            let logits = f::matmul(&a, &net.head);
+            train_correct += argmax_correct(&logits, &labels);
+            train_seen += labels.len();
+            let (loss, dlog) = f::softmax_ce(&logits, &labels);
+            let ghead = f::matmul_at_b(&a, &dlog);
+            opt.update(2 * nl, &mut net.head, &ghead);
+            losses.push(batch_loss + loss);
+        }
+    }
+    FpResult {
+        test_acc: net.accuracy(test, batch),
+        train_acc: train_correct as f64 / train_seen.max(1) as f64,
+        losses,
+    }
+}
+
+/// Adaptive max-pool + flatten for conv LES heads (mirrors the integer
+/// learning layers); identity for linear.
+fn les_features(layer: &FLayer, out: &FTensor)
+                -> (FTensor, Option<(Vec<u32>, Vec<usize>, usize, usize)>) {
+    match layer {
+        FLayer::Linear { .. } => {
+            let (b, f_) = out.batch_feat();
+            (out.clone().reshaped(&[b, f_]), None)
+        }
+        FLayer::Conv { lr_pool: (s, k), .. } => {
+            let (s, k) = (*s, k.max(&1).to_owned());
+            let (b, c, h, w) = (out.shape[0], out.shape[1], out.shape[2],
+                                out.shape[3]);
+            if k <= 1 && h == s && w == s {
+                return (out.clone().reshaped(&[b, c * s * s]), None);
+            }
+            let (pooled, arg) = f::maxpool2d(out, k, k);
+            let (ph, pw) = (pooled.shape[2], pooled.shape[3]);
+            let mut feat = vec![0f32; b * c * s * s];
+            for bc in 0..b * c {
+                for oy in 0..s {
+                    for ox in 0..s {
+                        feat[bc * s * s + oy * s + ox] =
+                            pooled.data[bc * ph * pw + oy * pw + ox];
+                    }
+                }
+            }
+            (
+                Tensor::from_vec(&[b, c * s * s], feat),
+                Some((arg, out.shape.clone(), s, k)),
+            )
+        }
+    }
+}
+
+fn les_backward(layer: &FLayer, cache: &FCache, out: &FTensor, dfeat: FTensor,
+                pool_ctx: Option<(Vec<u32>, Vec<usize>, usize, usize)>)
+                -> FTensor {
+    let d_out = match (layer, pool_ctx) {
+        (FLayer::Linear { .. }, _) | (FLayer::Conv { .. }, None) => {
+            dfeat.reshaped(&out.shape)
+        }
+        (FLayer::Conv { .. }, Some((arg, shape, s, k))) => {
+            let (b, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+            let (ph, pw) = ((h - k) / k + 1, (w - k) / k + 1);
+            let mut dg = vec![0f32; b * c * ph * pw];
+            for bc in 0..b * c {
+                for oy in 0..s {
+                    for ox in 0..s {
+                        dg[bc * ph * pw + oy * pw + ox] =
+                            dfeat.data[bc * s * s + oy * s + ox];
+                    }
+                }
+            }
+            f::maxpool2d_bwd(
+                &Tensor::from_vec(&[b, c, ph, pw], dg),
+                &arg,
+                &shape,
+                k,
+                k,
+            )
+        }
+    };
+    // back through the block's own pool + activation
+    match layer {
+        FLayer::Conv { pool, .. } => {
+            let d = if *pool {
+                let (arg, pre) = cache.pool_arg.as_ref().unwrap();
+                f::maxpool2d_bwd(&d_out, arg, pre, 2, 2)
+            } else {
+                d_out
+            };
+            f::leaky_relu_bwd(cache.z.as_ref().unwrap(), &d, 0.1)
+        }
+        FLayer::Linear { .. } => {
+            f::leaky_relu_bwd(cache.z.as_ref().unwrap(), &d_out, 0.1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::nn::zoo;
+
+    fn tiny_data() -> (Dataset, Dataset) {
+        let mut ds = synthetic::by_name("tiny", 900, 2).unwrap();
+        ds.mad_normalize();
+        ds.split_test(180)
+    }
+
+    #[test]
+    fn bp_learns_tiny() {
+        let (tr, te) = tiny_data();
+        let mut net = FpNet::new(zoo::get("tinycnn").unwrap(), 1);
+        let res = train_bp(&mut net, &tr, &te, 12, 32, 1e-3, 3);
+        assert!(res.test_acc > 0.5, "fp bp acc {}", res.test_acc);
+        assert!(res.losses.last().unwrap() < res.losses.first().unwrap());
+    }
+
+    #[test]
+    fn les_learns_tiny() {
+        let (tr, te) = tiny_data();
+        let mut net = FpNet::new(zoo::get("tinycnn").unwrap(), 1);
+        let res = train_les(&mut net, &tr, &te, 12, 32, 1e-3, 3);
+        assert!(res.test_acc > 0.5, "fp les acc {}", res.test_acc);
+    }
+
+    #[test]
+    fn bp_learns_mlp() {
+        let (tr, te) = tiny_data();
+        let mut net = FpNet::new(zoo::get("mlp1-mini").unwrap(), 1);
+        let res = train_bp(&mut net, &tr, &te, 12, 32, 1e-3, 3);
+        assert!(res.test_acc > 0.5, "fp bp mlp acc {}", res.test_acc);
+    }
+}

@@ -1,0 +1,12 @@
+//! Comparison baselines for Tables 1 & 2 (DESIGN.md §Substitutions):
+//!
+//! * [`fp`] — floating-point trainers on the *same topologies*:
+//!   `FP BP` (global backprop, Adam + CrossEntropy — the paper's strongest
+//!   column) and `FP LES` (local error signals, float).
+//! * [`pocketnn`] — a PocketNN-style native integer-only MLP trained with
+//!   Direct Feedback Alignment and pocket (piecewise-linear integer)
+//!   activations — the paper's integer-only state-of-the-art baseline
+//!   [20].
+
+pub mod fp;
+pub mod pocketnn;

@@ -1,0 +1,224 @@
+//! PocketNN-style baseline [20]: native integer-only MLP trained with
+//! Direct Feedback Alignment (DFA) and pocket (piecewise-linear integer)
+//! activations.
+//!
+//! This is the state-of-the-art the paper compares against in Table 1.
+//! Faithful to PocketNN's ingredients — integer-only arithmetic, DFA
+//! (fixed random feedback matrices carry the output error directly to each
+//! hidden layer; no transpose of forward weights, no inter-layer gradient
+//! chain), pocket-tanh activation — while sharing this repo's numeric
+//! plumbing (NITRO scaling keeps pre-activations in int8 range, the same
+//! one-hot-32 targets and batch-summed updates), so differences in Table 1
+//! reflect the *learning algorithm*, not incidental format choices.
+
+use crate::data::{Batcher, Dataset};
+use crate::nn::init::init_weights;
+use crate::optim::integer_sgd;
+use crate::tensor::{
+    matmul_at_b_i64, matmul_i64, nitro_scale, one_hot32,
+    rss_loss_grad, scale_factor_linear, ITensor, Tensor,
+};
+use crate::util::rng::Pcg32;
+
+/// Pocket-tanh: odd, saturating, piecewise-linear integer approximation of
+/// 127·tanh(x/64) with slopes 1, 1/2, 1/4, 0 — divisions are exact shifts.
+pub fn pocket_tanh(x: i32) -> i32 {
+    let neg = x < 0;
+    let a = x.unsigned_abs() as i32;
+    let y = if a <= 32 {
+        a
+    } else if a <= 96 {
+        32 + (a - 32) / 2 // slope 1/2 -> up to 64
+    } else if a <= 224 {
+        64 + (a - 96) / 4 // slope 1/4 -> up to 96
+    } else {
+        96
+    }
+    .min(127);
+    if neg { -y } else { y }
+}
+
+/// Derivative gate of pocket_tanh as an inverse slope (divide the incoming
+/// delta by it); 0 marks the saturated region (kills the delta).
+fn pocket_tanh_slope_inv(x: i32) -> i64 {
+    let a = x.unsigned_abs();
+    if a <= 32 {
+        1
+    } else if a <= 96 {
+        2
+    } else if a <= 224 {
+        4
+    } else {
+        0
+    }
+}
+
+pub struct PocketNet {
+    pub dims: Vec<usize>, // input, hidden..., classes
+    pub weights: Vec<ITensor>,
+    /// DFA feedback matrices B_l: (G, hidden_l), fixed random.
+    pub feedback: Vec<ITensor>,
+    pub num_classes: usize,
+}
+
+impl PocketNet {
+    pub fn new(dims: &[usize], seed: u64) -> Self {
+        assert!(dims.len() >= 2);
+        let mut rng = Pcg32::new(seed);
+        let num_classes = *dims.last().unwrap();
+        let mut weights = Vec::new();
+        for w in dims.windows(2) {
+            weights.push(init_weights(&mut rng, &[w[0], w[1]], w[0]));
+        }
+        // feedback matrices for hidden layers only, entries in +-16 (small
+        // fixed integers; DFA only needs random sign structure)
+        let mut feedback = Vec::new();
+        for &h in &dims[1..dims.len() - 1] {
+            let n = num_classes * h;
+            feedback.push(Tensor::from_vec(
+                &[num_classes, h],
+                (0..n).map(|_| rng.range_i32(-16, 16)).collect(),
+            ));
+        }
+        PocketNet { dims: dims.to_vec(), weights, feedback, num_classes }
+    }
+
+    /// Forward; caches pre-activations (scaled) per hidden layer.
+    fn forward(&self, x: &ITensor) -> (Vec<ITensor>, Vec<ITensor>, ITensor) {
+        let mut acts = vec![x.clone()];
+        let mut zss = Vec::new();
+        let last = self.weights.len() - 1;
+        for (li, w) in self.weights.iter().enumerate() {
+            let a = acts.last().unwrap();
+            let z = matmul_i64(a, w);
+            let zs = nitro_scale(&z, scale_factor_linear(w.shape[0]));
+            if li == last {
+                return (acts, zss, zs); // linear output layer
+            }
+            let act = ITensor {
+                shape: zs.shape.clone(),
+                data: zs.data.iter().map(|&v| pocket_tanh(v)).collect(),
+            };
+            zss.push(zs);
+            acts.push(act);
+        }
+        unreachable!()
+    }
+
+    pub fn infer(&self, x: &ITensor) -> ITensor {
+        self.forward(x).2
+    }
+
+    /// One DFA training step; returns the RSS loss.
+    pub fn train_batch(&mut self, x: &ITensor, labels: &[usize],
+                       gamma_inv: i64) -> i64 {
+        let y32 = one_hot32(labels, self.num_classes);
+        let (acts, zss, yhat) = self.forward(x);
+        let (loss, e) = rss_loss_grad(&yhat, &y32); // (B, G)
+        let last = self.weights.len() - 1;
+        // output layer: standard delta rule
+        let gw = matmul_at_b_i64(&acts[last], &e);
+        integer_sgd(&mut self.weights[last], &gw, gamma_inv, 0);
+        // hidden layers: delta_l = (e · B_l) gated by pocket-tanh slope —
+        // the error is teleported by the fixed random feedback, never
+        // back-propagated through the forward weights (DFA).
+        for li in 0..last {
+            let delta = matmul_i64(&e, &self.feedback[li]); // (B, h) i64
+            let zs = &zss[li];
+            let gated = ITensor {
+                shape: zs.shape.clone(),
+                data: zs
+                    .data
+                    .iter()
+                    .zip(&delta.data)
+                    .map(|(&z, &d)| {
+                        let s = pocket_tanh_slope_inv(z);
+                        if s == 0 { 0 } else { d.div_euclid(s) as i32 }
+                    })
+                    .collect(),
+            };
+            let gw = matmul_at_b_i64(&acts[li], &gated);
+            integer_sgd(&mut self.weights[li], &gw, gamma_inv, 0);
+        }
+        loss
+    }
+
+    pub fn accuracy(&self, ds: &Dataset, batch: usize) -> f64 {
+        let mut correct = 0usize;
+        for (x, labels) in Batcher::sequential(ds, batch, true) {
+            let yhat = self.infer(&x);
+            correct += crate::nn::block::count_correct(&yhat, &labels);
+        }
+        correct as f64 / ds.len().max(1) as f64
+    }
+}
+
+/// Train a PocketNN-style MLP; the Table 1 baseline driver.
+pub fn train(dims: &[usize], train: &Dataset, test: &Dataset, epochs: usize,
+             batch: usize, gamma_inv: i64, seed: u64) -> (PocketNet, f64) {
+    let mut net = PocketNet::new(dims, seed);
+    let mut rng = Pcg32::with_stream(seed, 0xdfa);
+    for _ in 0..epochs {
+        for (x, labels) in Batcher::new(train, batch, true, &mut rng) {
+            net.train_batch(&x, &labels, gamma_inv);
+        }
+    }
+    let acc = net.accuracy(test, batch);
+    (net, acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn pocket_tanh_shape() {
+        assert_eq!(pocket_tanh(0), 0);
+        assert_eq!(pocket_tanh(32), 32);
+        assert_eq!(pocket_tanh(-32), -32);
+        assert_eq!(pocket_tanh(96), 64);
+        assert_eq!(pocket_tanh(1000), 96);
+        assert_eq!(pocket_tanh(-1000), -96);
+        // odd + monotone
+        for x in -300..300 {
+            assert_eq!(pocket_tanh(-x), -pocket_tanh(x));
+            assert!(pocket_tanh(x + 1) >= pocket_tanh(x));
+        }
+    }
+
+    #[test]
+    fn dfa_learns_tiny() {
+        let mut ds = synthetic::by_name("tiny", 400, 5).unwrap();
+        ds.mad_normalize();
+        let (tr, te) = ds.split_test(80);
+        let (_, acc) = train(&[64, 48, 10], &tr, &te, 8, 32, 512, 1);
+        assert!(acc > 0.35, "pocketnn acc {acc} (chance = 0.1)");
+    }
+
+    #[test]
+    fn feedback_matrices_fixed_during_training() {
+        let mut ds = synthetic::by_name("tiny", 64, 6).unwrap();
+        ds.mad_normalize();
+        let mut net = PocketNet::new(&[64, 32, 10], 3);
+        let fb0 = net.feedback[0].clone();
+        let (x, labels) = ds.gather(&(0..32).collect::<Vec<_>>(), true);
+        net.train_batch(&x, &labels, 512);
+        assert_eq!(net.feedback[0], fb0);
+    }
+
+    #[test]
+    fn weights_update_in_all_layers() {
+        let mut ds = synthetic::by_name("tiny", 64, 7).unwrap();
+        ds.mad_normalize();
+        let mut net = PocketNet::new(&[64, 32, 10], 3);
+        let before: Vec<ITensor> = net.weights.clone();
+        let (x, labels) = ds.gather(&(0..32).collect::<Vec<_>>(), true);
+        for _ in 0..5 {
+            net.train_batch(&x, &labels, 64);
+        }
+        for (b, a) in before.iter().zip(&net.weights) {
+            assert_ne!(b, a, "a layer never updated");
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Execution engines.
+//!
+//! * [`NativeEngine`] — the pure-Rust integer engine (`nn::Network`).
+//! * [`PjrtEngine`] — executes the JAX/Pallas AOT artifacts through the
+//!   PJRT CPU client; weights live host-side as int32 tensors and flow
+//!   through each call (one `block<i>_train` executable per block).
+//!
+//! Integer arithmetic makes the two engines **bit-identical**; the
+//! integration test `rust/tests/pjrt.rs` trains both for several steps and
+//! asserts equality of every weight tensor.
+
+use crate::nn::{Hyper, Network};
+use crate::runtime::{Arg, Executable, Manifest, Out, Runtime};
+use crate::tensor::{one_hot32, ITensor};
+use crate::util::rng::Pcg32;
+
+/// A training/inference engine over a fixed (preset, batch) configuration.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+
+    /// One full training iteration (all blocks + head).
+    /// Returns (per-block losses, head loss, correct-prediction count).
+    fn train_batch(&mut self, x: &ITensor, labels: &[usize], hp: &Hyper)
+                   -> (Vec<i64>, i64, usize);
+
+    /// Integer inference producing class scores.
+    fn infer(&mut self, x: &ITensor) -> ITensor;
+
+    /// Snapshot of every weight tensor (wf0, wl0, wf1, ..., wo).
+    fn weights(&self) -> Vec<ITensor>;
+}
+
+/// Pure-Rust engine.
+pub struct NativeEngine {
+    pub net: Network,
+    rng: Pcg32,
+    parallel: bool,
+}
+
+impl NativeEngine {
+    pub fn new(net: Network, seed: u64, parallel: bool) -> Self {
+        NativeEngine { net, rng: Pcg32::with_stream(seed, 0xe6), parallel }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn train_batch(&mut self, x: &ITensor, labels: &[usize], hp: &Hyper)
+                   -> (Vec<i64>, i64, usize) {
+        let rep = if self.parallel {
+            self.net.train_batch_parallel(x, labels, hp, &mut self.rng)
+        } else {
+            self.net.train_batch(x, labels, hp, &mut self.rng)
+        };
+        (rep.block_loss, rep.head_loss, rep.correct)
+    }
+
+    fn infer(&mut self, x: &ITensor) -> ITensor {
+        self.net.infer(x)
+    }
+
+    fn weights(&self) -> Vec<ITensor> {
+        self.net.weights().into_iter().map(|(_, t)| t.clone()).collect()
+    }
+}
+
+/// Artifact-backed engine: every block step and the head step run as an
+/// AOT-compiled XLA executable produced from the L2 JAX graphs (which route
+/// their contractions through the L1 Pallas kernels).
+pub struct PjrtEngine {
+    pub manifest: Manifest,
+    rt: Runtime,
+    block_train: Vec<Executable>,
+    head_train: Executable,
+    infer_exe: Executable,
+    /// Host-side weights: (wf, wl) per block + wo.
+    pub wf: Vec<ITensor>,
+    pub wl: Vec<ITensor>,
+    pub wo: ITensor,
+}
+
+impl PjrtEngine {
+    /// Load a preset's artifacts; weights initialized from the golden trace
+    /// seed on the Python side are loaded separately via
+    /// [`Self::set_weights`] (or start from Rust-side init).
+    pub fn load(dir: &str, seed: u64) -> Result<Self, String> {
+        let manifest = Manifest::load(dir)?;
+        let rt = Runtime::cpu()?;
+        let mut block_train = Vec::new();
+        for b in &manifest.blocks {
+            block_train.push(rt.load(&manifest.artifact_path(&b.artifact_train))?);
+        }
+        let head_train =
+            rt.load(&manifest.artifact_path(&manifest.head.artifact_train))?;
+        let infer_exe = rt.load(&manifest.artifact_path(&manifest.infer))?;
+        // init weights with the Rust initializer (overridable)
+        let mut rng = Pcg32::new(seed);
+        let mut wf = Vec::new();
+        let mut wl = Vec::new();
+        for b in &manifest.blocks {
+            let fan_in: usize = b.wf_shape[1..].iter().product();
+            wf.push(crate::nn::init::init_weights(&mut rng, &b.wf_shape,
+                                                  fan_in.max(1)));
+            wl.push(crate::nn::init::init_weights(&mut rng, &b.wl_shape,
+                                                  b.wl_shape[0]));
+        }
+        let wo = crate::nn::init::init_weights(
+            &mut rng,
+            &manifest.head.w_shape,
+            manifest.head.w_shape[0],
+        );
+        Ok(PjrtEngine {
+            manifest,
+            rt,
+            block_train,
+            head_train,
+            infer_exe,
+            wf,
+            wl,
+            wo,
+        })
+    }
+
+    pub fn set_weights(&mut self, wf: Vec<ITensor>, wl: Vec<ITensor>,
+                       wo: ITensor) {
+        assert_eq!(wf.len(), self.wf.len());
+        assert_eq!(wl.len(), self.wl.len());
+        self.wf = wf;
+        self.wl = wl;
+        self.wo = wo;
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn train_batch(&mut self, x: &ITensor, labels: &[usize], hp: &Hyper)
+                   -> (Vec<i64>, i64, usize) {
+        let g = self.manifest.num_classes;
+        let y32 = one_hot32(labels, g);
+        let mut a = x.clone();
+        let mut block_loss = Vec::new();
+        for (i, exe) in self.block_train.iter().enumerate() {
+            let b = &self.manifest.blocks[i];
+            // flatten for linear blocks
+            if b.kind == "linear" && a.shape.len() > 2 {
+                let (bs, f) = a.batch_feat();
+                a = a.reshaped(&[bs, f]);
+            }
+            let outs = self
+                .rt
+                .run(
+                    exe,
+                    &[
+                        Arg::I32(a.clone()),
+                        Arg::I32(self.wf[i].clone()),
+                        Arg::I32(self.wl[i].clone()),
+                        Arg::I32(y32.clone()),
+                        Arg::ScalarI64(hp.gamma_inv),
+                        Arg::ScalarI64(hp.eta_fw_inv),
+                        Arg::ScalarI64(hp.eta_lr_inv),
+                    ],
+                )
+                .expect("block_train artifact failed");
+            // (a_out, wf', wl', loss)
+            a = outs[0].as_i32().clone();
+            self.wf[i] = outs[1].as_i32().clone();
+            self.wl[i] = outs[2].as_i32().clone();
+            block_loss.push(outs[3].scalar_i64());
+        }
+        if a.shape.len() > 2 {
+            let (bs, f) = a.batch_feat();
+            a = a.reshaped(&[bs, f]);
+        }
+        let outs = self
+            .rt
+            .run(
+                &self.head_train,
+                &[
+                    Arg::I32(a),
+                    Arg::I32(self.wo.clone()),
+                    Arg::I32(y32),
+                    Arg::ScalarI64(hp.gamma_inv),
+                    Arg::ScalarI64(hp.eta_lr_inv),
+                ],
+            )
+            .expect("head_train artifact failed");
+        let yhat = outs[0].as_i32().clone();
+        self.wo = outs[1].as_i32().clone();
+        let head_loss = outs[2].scalar_i64();
+        let correct = crate::nn::block::count_correct(&yhat, labels);
+        (block_loss, head_loss, correct)
+    }
+
+    fn infer(&mut self, x: &ITensor) -> ITensor {
+        let mut args: Vec<Arg> = vec![Arg::I32(x.clone())];
+        for w in &self.wf {
+            args.push(Arg::I32(w.clone()));
+        }
+        args.push(Arg::I32(self.wo.clone()));
+        let outs = self
+            .rt
+            .run(&self.infer_exe, &args)
+            .expect("infer artifact failed");
+        outs[0].as_i32().clone()
+    }
+
+    fn weights(&self) -> Vec<ITensor> {
+        let mut out = Vec::new();
+        for (f, l) in self.wf.iter().zip(&self.wl) {
+            out.push(f.clone());
+            out.push(l.clone());
+        }
+        out.push(self.wo.clone());
+        out
+    }
+}

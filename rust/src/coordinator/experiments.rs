@@ -1,0 +1,646 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (DESIGN.md per-experiment index). Each driver trains scaled workloads
+//! (DESIGN.md §Substitutions), prints the same row structure the paper
+//! reports (paper value alongside the measured value), and appends a JSON
+//! record under `results/`.
+//!
+//! Scale knob: `--scale quick|full`. `quick` uses the narrow presets and
+//! small synthetic datasets (~minutes on CPU); `full` uses the paper-width
+//! architectures (hours — provided for completeness).
+
+use crate::baselines::{fp, pocketnn};
+use crate::data::loader;
+use crate::nn::{zoo, Hyper, Network};
+use crate::train::{fit, weight_stats, TrainConfig};
+use crate::util::jsonio::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Result<Scale, String> {
+        match s {
+            "quick" => Ok(Scale::Quick),
+            "full" => Ok(Scale::Full),
+            _ => Err(format!("unknown scale '{s}' (quick|full)")),
+        }
+    }
+}
+
+pub struct ExpCtx {
+    pub scale: Scale,
+    pub seed: u64,
+    pub epochs: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub out_dir: String,
+}
+
+impl ExpCtx {
+    pub fn new(scale: Scale, seed: u64, epochs: usize) -> Self {
+        // quick: micro presets, enough epochs to clear the integer
+        // bootstrap phase (weights must grow ~100x before the scaling
+        // layers stop truncating — see EXPERIMENTS.md); full: paper scale.
+        let (n_train, n_test, epochs) = match scale {
+            Scale::Quick => (1200, 300, if epochs == 0 { 60 } else { epochs }),
+            Scale::Full => (20000, 4000, if epochs == 0 { 150 } else { epochs }),
+        };
+        ExpCtx {
+            scale,
+            seed,
+            epochs,
+            n_train,
+            n_test,
+            out_dir: "results".to_string(),
+        }
+    }
+
+    fn preset(&self, full: &str, narrow: &str) -> String {
+        match self.scale {
+            Scale::Full => full.to_string(),
+            Scale::Quick => narrow.to_string(),
+        }
+    }
+
+    /// Inverse learning rate: the paper's 512 is tuned for full-width
+    /// architectures; the micro presets have ~16x smaller gradient sums,
+    /// so their calibrated value is 128 (see EXPERIMENTS.md bootstrap
+    /// section).
+    fn gamma_cnn(&self) -> i64 {
+        match self.scale {
+            Scale::Full => 512,
+            Scale::Quick => 128,
+        }
+    }
+
+    pub fn save(&self, name: &str, rows: &Json) {
+        std::fs::create_dir_all(&self.out_dir).ok();
+        let path = format!("{}/{name}.json", self.out_dir);
+        let record = Json::obj(vec![
+            ("experiment", Json::Str(name.to_string())),
+            ("scale", Json::Str(format!("{:?}", self.scale))),
+            ("seed", Json::Int(self.seed as i64)),
+            ("rows", rows.clone()),
+        ]);
+        if std::fs::write(&path, record.dump()).is_ok() {
+            println!("  -> {path}");
+        }
+    }
+}
+
+fn load_data(ctx: &ExpCtx, name: &str)
+             -> (crate::data::Dataset, crate::data::Dataset) {
+    let (mut tr, mut te) =
+        loader::load(name, "data", ctx.n_train, ctx.n_test, ctx.seed)
+            .expect("dataset");
+    tr.mad_normalize();
+    te.mad_normalize();
+    (tr, te)
+}
+
+fn nitro_run_b(ctx: &ExpCtx, preset: &str, data: &str, hp: Hyper,
+               dropout: (f64, f64), batch: usize)
+               -> crate::train::TrainResult {
+    let (tr, te) = load_data(ctx, data);
+    let spec = zoo::get(preset).unwrap_or_else(|| panic!("preset {preset}"));
+    let mut net = Network::new(spec, ctx.seed);
+    net.set_dropout(dropout.0, dropout.1);
+    let cfg = TrainConfig {
+        epochs: ctx.epochs,
+        batch,
+        hyper: hp,
+        seed: ctx.seed,
+        verbose: true,
+        ..Default::default()
+    };
+    fit(&mut net, &tr, &te, &cfg)
+}
+
+fn nitro_run(ctx: &ExpCtx, preset: &str, data: &str, hp: Hyper,
+             dropout: (f64, f64)) -> crate::train::TrainResult {
+    nitro_run_b(ctx, preset, data, hp, dropout, 64)
+}
+
+/// The micro CNN presets are calibrated at batch 32 / gamma_inv 128
+/// (EXPERIMENTS.md); full scale uses the paper's batch 64.
+fn cnn_batch(ctx: &ExpCtx) -> usize {
+    match ctx.scale {
+        Scale::Full => 64,
+        Scale::Quick => 32,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — MLP architectures
+// ---------------------------------------------------------------------------
+
+/// Paper Table 1: NITRO-D vs PocketNN vs FP LES vs FP BP on MLPs.
+/// Paper reference values are carried in the printed rows.
+pub fn table1(ctx: &ExpCtx) {
+    println!("== Table 1: MLP architectures ==");
+    println!("{:<14} {:<14} {:>9} {:>10} {:>8} {:>8}   (paper NITRO-D)",
+             "arch", "dataset", "NITRO-D", "PocketNN", "FP LES", "FP BP");
+    // (arch-full, arch-narrow, dataset, paper NITRO-D accuracy)
+    let rows_spec: &[(&str, &str, &str, f64)] = &[
+        ("mlp1", "mlp1", "mnist", 97.36),
+        ("mlp2", "mlp2", "fashion-mnist", 88.66),
+        ("mlp3", "mlp3-narrow", "mnist", 98.28),
+        ("mlp3", "mlp3-narrow", "fashion-mnist", 89.13),
+        ("mlp4", "mlp4-narrow", "cifar10", 61.03),
+    ];
+    let mut out_rows = Vec::new();
+    // MLP epochs are cheap; the deeper MLPs need the longer budget to
+    // clear the integer bootstrap (EXPERIMENTS.md)
+    let ctx = &ExpCtx::new(ctx.scale, ctx.seed, ctx.epochs.max(120));
+    for &(full, narrow, data, paper) in rows_spec {
+        let preset = ctx.preset(full, narrow);
+        let hp = Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 };
+        let res = nitro_run(ctx, &preset, data, hp, (0.0, 0.0));
+        let nitro_acc = res.final_test_acc * 100.0;
+
+        // PocketNN baseline: same hidden dims
+        let (tr, te) = load_data(ctx, data);
+        let spec = zoo::get(&preset).unwrap();
+        let mut dims = vec![spec.input_shape[0]];
+        for b in &spec.blocks {
+            dims.push(b.out_features());
+        }
+        dims.push(spec.num_classes);
+        let (_, pocket_acc) =
+            pocketnn::train(&dims, &tr, &te, ctx.epochs, 64, 512, ctx.seed);
+        let pocket_acc = pocket_acc * 100.0;
+
+        // float baselines on the same topology
+        let mut fnet = fp::FpNet::new(zoo::get(&preset).unwrap(), ctx.seed);
+        let les = fp::train_les(&mut fnet, &tr, &te, ctx.epochs, 64, 1e-3,
+                                ctx.seed);
+        let mut fnet2 = fp::FpNet::new(zoo::get(&preset).unwrap(), ctx.seed);
+        let bp = fp::train_bp(&mut fnet2, &tr, &te, ctx.epochs, 64, 1e-3,
+                              ctx.seed);
+        println!(
+            "{:<14} {:<14} {:>8.2}% {:>9.2}% {:>7.2}% {:>7.2}%   ({paper:.2}%)",
+            preset, data, nitro_acc, pocket_acc,
+            les.test_acc * 100.0, bp.test_acc * 100.0
+        );
+        out_rows.push(Json::obj(vec![
+            ("arch", Json::Str(preset.clone())),
+            ("dataset", Json::Str(data.to_string())),
+            ("nitro_d", Json::Float(nitro_acc)),
+            ("pocketnn", Json::Float(pocket_acc)),
+            ("fp_les", Json::Float(les.test_acc * 100.0)),
+            ("fp_bp", Json::Float(bp.test_acc * 100.0)),
+            ("paper_nitro_d", Json::Float(paper)),
+        ]));
+    }
+    ctx.save("table1", &Json::Array(out_rows));
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — CNN architectures
+// ---------------------------------------------------------------------------
+
+/// Paper Table 2: NITRO-D vs FP LES vs FP BP on VGG8B/VGG11B.
+pub fn table2(ctx: &ExpCtx) {
+    println!("== Table 2: CNN architectures ==");
+    println!("{:<18} {:<14} {:>9} {:>8} {:>8}   (paper NITRO-D)",
+             "arch", "dataset", "NITRO-D", "FP LES", "FP BP");
+    let rows_spec: &[(&str, &str, &str, f64, i64, i64)] = &[
+        // full preset, narrow preset, dataset, paper acc, eta_fw, eta_lr
+        ("vgg8b-mnist", "vgg8b-micro-mnist", "mnist", 99.45, 30000, 3000),
+        ("vgg8b-mnist", "vgg8b-micro-mnist", "fashion-mnist", 93.66, 28000, 3500),
+        ("vgg8b", "vgg8b-micro", "cifar10", 87.96, 25000, 3000),
+        ("vgg11b", "vgg11b-micro", "cifar10", 87.39, 28000, 4500),
+    ];
+    let mut out_rows = Vec::new();
+    for &(full, narrow, data, paper, eta_fw, eta_lr) in rows_spec {
+        let preset = ctx.preset(full, narrow);
+        let hp = Hyper { gamma_inv: ctx.gamma_cnn(), eta_fw_inv: eta_fw,
+                         eta_lr_inv: eta_lr };
+        let res = nitro_run_b(ctx, &preset, data, hp, (0.0, 0.0),
+                              cnn_batch(ctx));
+        let nitro_acc = res.final_test_acc * 100.0;
+        let (tr, te) = load_data(ctx, data);
+        // Adam needs no integer bootstrap: a third of the epochs suffices
+        let fp_epochs = (ctx.epochs / 3).max(10);
+        let mut fnet = fp::FpNet::new(zoo::get(&preset).unwrap(), ctx.seed);
+        let les = fp::train_les(&mut fnet, &tr, &te, fp_epochs, 64, 1e-3,
+                                ctx.seed);
+        let mut fnet2 = fp::FpNet::new(zoo::get(&preset).unwrap(), ctx.seed);
+        let bp = fp::train_bp(&mut fnet2, &tr, &te, fp_epochs, 64, 1e-3,
+                              ctx.seed);
+        println!(
+            "{:<18} {:<14} {:>8.2}% {:>7.2}% {:>7.2}%   ({paper:.2}%)",
+            preset, data, nitro_acc, les.test_acc * 100.0,
+            bp.test_acc * 100.0
+        );
+        out_rows.push(Json::obj(vec![
+            ("arch", Json::Str(preset.clone())),
+            ("dataset", Json::Str(data.to_string())),
+            ("nitro_d", Json::Float(nitro_acc)),
+            ("fp_les", Json::Float(les.test_acc * 100.0)),
+            ("fp_bp", Json::Float(bp.test_acc * 100.0)),
+            ("paper_nitro_d", Json::Float(paper)),
+        ]));
+    }
+    ctx.save("table2", &Json::Array(out_rows));
+}
+
+// ---------------------------------------------------------------------------
+// Table 8 — learning-rate ablation (App. E.1)
+// ---------------------------------------------------------------------------
+
+/// gamma_inv sweep {256, 512, 1024, 2048, 4096}: the paper reports
+/// (unstable) at 256, best at 512, degradation at 1024/2048, (no learning)
+/// at 4096.
+pub fn table8(ctx: &ExpCtx) {
+    println!("== Table 8: learning-rate sweep (VGG11B/CIFAR-10 scaled) ==");
+    // quick scale: tinycnn carries the same sweep shape at 1/1000 the cost
+    let preset = ctx.preset("vgg11b", "tinycnn");
+    let data = if ctx.scale == Scale::Full { "cifar10" } else { "tiny" };
+    let (tr, te) = load_data(ctx, data);
+    println!("{:>9} {:>12} {:>12}  paper", "gamma_inv", "train_acc", "test_acc");
+    // full scale sweeps the paper's exact grid; quick scale shifts the
+    // grid by the micro preset's 4x-smaller calibrated gamma_inv so the
+    // same unstable / sweet-spot / dead shape is visible
+    let paper: &[(i64, &str)] = match ctx.scale {
+        Scale::Full => &[
+            (256, "(unstable)"),
+            (512, "88.86 / 84.66"),
+            (1024, "85.95 / 83.10"),
+            (2048, "72.43 / 70.23"),
+            (4096, "(no learning)"),
+        ],
+        Scale::Quick => &[
+            (64, "(unstable)  [paper: 256]"),
+            (512, "sweet spot [paper: 512 -> 88.86/84.66]"),
+            (1024, "degraded   [paper: 1024 -> 85.95/83.10]"),
+            (4096, "degraded   [paper: 2048 -> 72.43/70.23]"),
+            (32768, "(no learning) [paper: 4096]"),
+        ],
+    };
+    let mut out_rows = Vec::new();
+    for &(gamma, paper_note) in paper {
+        let spec = zoo::get(&preset).unwrap();
+        let mut net = Network::new(spec, ctx.seed);
+        let cfg = TrainConfig {
+            epochs: ctx.epochs,
+            batch: 64,
+            hyper: Hyper { gamma_inv: gamma, eta_fw_inv: 0, eta_lr_inv: 0 },
+            seed: ctx.seed,
+            plateau_patience: usize::MAX, // fixed LR for the sweep
+            ..Default::default()
+        };
+        let res = fit(&mut net, &tr, &te, &cfg);
+        let train_acc = res.epochs.last().map(|e| e.train_acc).unwrap_or(0.0);
+        let status = if res.diverged {
+            "(unstable)".to_string()
+        } else if train_acc < 0.15 {
+            "(no learning)".to_string()
+        } else {
+            format!("{:.2} / {:.2}", train_acc * 100.0,
+                    res.final_test_acc * 100.0)
+        };
+        println!("{gamma:>9} {status:>26}  {paper_note}");
+        out_rows.push(Json::obj(vec![
+            ("gamma_inv", Json::Int(gamma)),
+            ("train_acc", Json::Float(train_acc * 100.0)),
+            ("test_acc", Json::Float(res.final_test_acc * 100.0)),
+            ("diverged", Json::Bool(res.diverged)),
+            ("paper", Json::Str(paper_note.to_string())),
+        ]));
+    }
+    ctx.save("table8", &Json::Array(out_rows));
+}
+
+// ---------------------------------------------------------------------------
+// Table 9 — dropout ablation (App. E.2)
+// ---------------------------------------------------------------------------
+
+pub fn table9(ctx: &ExpCtx) {
+    println!("== Table 9: dropout grid (VGG11B/CIFAR-10 scaled) ==");
+    let preset = ctx.preset("vgg11b", "tinycnn");
+    let data = if ctx.scale == Scale::Full { "cifar10" } else { "tiny" };
+    let (tr, te) = load_data(ctx, data);
+    let grid: &[(f64, f64)] = &[
+        (0.0, 0.55), (0.05, 0.5), (0.0, 0.85), (0.0, 0.4), (0.0, 0.05),
+        (0.2, 0.45), (0.05, 0.55), (0.1, 0.55), (0.2, 0.25),
+    ];
+    println!("{:>6} {:>6} {:>11} {:>10}", "p_c", "p_l", "train_acc",
+             "test_acc");
+    let mut out_rows = Vec::new();
+    for &(pc, pl) in grid {
+        let spec = zoo::get(&preset).unwrap();
+        let mut net = Network::new(spec, ctx.seed);
+        net.set_dropout(pc, pl);
+        let cfg = TrainConfig {
+            epochs: ctx.epochs,
+            batch: 64,
+            hyper: Hyper { gamma_inv: 512, eta_fw_inv: 0, eta_lr_inv: 0 },
+            seed: ctx.seed,
+            ..Default::default()
+        };
+        let res = fit(&mut net, &tr, &te, &cfg);
+        let train_acc = res.epochs.last().map(|e| e.train_acc).unwrap_or(0.0);
+        println!("{pc:>6.2} {pl:>6.2} {:>10.2}% {:>9.2}%",
+                 train_acc * 100.0, res.final_test_acc * 100.0);
+        out_rows.push(Json::obj(vec![
+            ("p_c", Json::Float(pc)),
+            ("p_l", Json::Float(pl)),
+            ("train_acc", Json::Float(train_acc * 100.0)),
+            ("test_acc", Json::Float(res.final_test_acc * 100.0)),
+        ]));
+    }
+    ctx.save("table9", &Json::Array(out_rows));
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 left — weight-decay effect on weight magnitude
+// ---------------------------------------------------------------------------
+
+pub fn fig2_left(ctx: &ExpCtx) {
+    println!("== Fig. 2 (left): decay rates vs mean |W| of a mid conv layer ==");
+    let preset = ctx.preset("vgg8b", "tinycnn");
+    let data = if ctx.scale == Scale::Full { "cifar10" } else { "tiny" };
+    let (tr, te) = load_data(ctx, data);
+    // (label, eta_fw, eta_lr) — "No decay" plus the 2x2 strong/weak grid
+    let settings: &[(&str, i64, i64)] = &[
+        ("no-decay", 0, 0),
+        ("fw-weak/lr-weak", 50000, 20000),
+        ("fw-weak/lr-strong", 50000, 3000),
+        ("fw-strong/lr-weak", 10000, 20000),
+        ("fw-strong/lr-strong", 10000, 3000),
+    ];
+    println!("{:<22} {:>12} {:>10}", "setting", "mean|W| conv", "test_acc");
+    let mut out_rows = Vec::new();
+    let mut no_decay_mean = 0.0f64;
+    for &(label, eta_fw, eta_lr) in settings {
+        let spec = zoo::get(&preset).unwrap();
+        let mut net = Network::new(spec, ctx.seed);
+        let cfg = TrainConfig {
+            epochs: ctx.epochs,
+            batch: 64,
+            hyper: Hyper { gamma_inv: if ctx.scale == Scale::Full { 512 }
+                                      else { 512 },
+                           eta_fw_inv: eta_fw, eta_lr_inv: eta_lr },
+            seed: ctx.seed,
+            ..Default::default()
+        };
+        let res = fit(&mut net, &tr, &te, &cfg);
+        // mid conv layer forward weights (paper probes an Integer Conv2D)
+        let mid = net.blocks.len() / 2;
+        let mean_abs = net.blocks[mid].wf.mean_abs();
+        if label == "no-decay" {
+            no_decay_mean = mean_abs;
+        }
+        println!("{label:<22} {mean_abs:>12.2} {:>9.2}%",
+                 res.final_test_acc * 100.0);
+        out_rows.push(Json::obj(vec![
+            ("setting", Json::Str(label.to_string())),
+            ("eta_fw_inv", Json::Int(eta_fw)),
+            ("eta_lr_inv", Json::Int(eta_lr)),
+            ("mean_abs_w", Json::Float(mean_abs)),
+            ("test_acc", Json::Float(res.final_test_acc * 100.0)),
+        ]));
+    }
+    println!("paper shape: no-decay has the largest |W|; strong fw+lr decay \
+              the smallest (no-decay here: {no_decay_mean:.2})");
+    ctx.save("fig2_left", &Json::Array(out_rows));
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 right — d_lr sweep
+// ---------------------------------------------------------------------------
+
+pub fn fig2_right(ctx: &ExpCtx) {
+    println!("== Fig. 2 (right): learning-layer width d_lr vs accuracy ==");
+    let data = if ctx.scale == Scale::Full { "cifar10" } else { "tiny" };
+    let (tr, te) = load_data(ctx, data);
+    // paper sweeps d_lr around 4096 on VGG8B; the scaled preset sweeps
+    // proportionally around tinycnn's default 64
+    let sweep: &[usize] = match ctx.scale {
+        Scale::Quick => &[8, 16, 64, 256],
+        Scale::Full => &[256, 1024, 4096, 16384],
+    };
+    println!("{:>8} {:>10}", "d_lr", "test_acc");
+    let mut out_rows = Vec::new();
+    for &dlr in sweep {
+        use crate::nn::zoo::Plan::*;
+        let spec = match ctx.scale {
+            Scale::Quick => zoo::cnn(
+                "tinycnn-dlr", &[Cp(8), Cp(16), L(32)], (1, 8, 8), 10, dlr),
+            Scale::Full => zoo::cnn(
+                "vgg8b-dlr",
+                &[C(128), Cp(256), C(256), Cp(512), Cp(512), Cp(512), L(1024)],
+                (3, 32, 32), 10, dlr),
+        };
+        let mut net = Network::new(spec, ctx.seed);
+        let cfg = TrainConfig {
+            epochs: ctx.epochs,
+            batch: 64,
+            hyper: Hyper { gamma_inv: 512, eta_fw_inv: 25000,
+                           eta_lr_inv: 3000 },
+            seed: ctx.seed,
+            ..Default::default()
+        };
+        let res = fit(&mut net, &tr, &te, &cfg);
+        println!("{dlr:>8} {:>9.2}%", res.final_test_acc * 100.0);
+        out_rows.push(Json::obj(vec![
+            ("d_lr", Json::Int(dlr as i64)),
+            ("test_acc", Json::Float(res.final_test_acc * 100.0)),
+        ]));
+    }
+    println!("paper shape: accuracy rises then flattens around d_lr=4096");
+    ctx.save("fig2_right", &Json::Array(out_rows));
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3 / App. E.3 — weight magnitudes & bit-widths
+// ---------------------------------------------------------------------------
+
+pub fn fig3(ctx: &ExpCtx) {
+    println!("== Fig. 3: |W| distribution per layer + int16 claim ==");
+    let preset = ctx.preset("vgg8b-mnist", "vgg8b-micro-mnist");
+    let (tr, te) = load_data(ctx, "fashion-mnist");
+    let spec = zoo::get(&preset).unwrap();
+    let mut net = Network::new(spec, ctx.seed);
+    let cfg = TrainConfig {
+        epochs: ctx.epochs,
+        batch: cnn_batch(ctx),
+        hyper: Hyper { gamma_inv: ctx.gamma_cnn(), eta_fw_inv: 28000,
+                       eta_lr_inv: 3500 },
+        seed: ctx.seed,
+        verbose: true,
+        ..Default::default()
+    };
+    let res = fit(&mut net, &tr, &te, &cfg);
+    println!("{:<14} {:>10} {:>7} {:>7} {:>8} {:>5}", "tensor", "mean|W|",
+             "q50", "q90", "max|W|", "bits");
+    let stats = weight_stats(&net);
+    let mut out_rows = Vec::new();
+    let mut max_bits = 0u32;
+    for s in &stats {
+        max_bits = max_bits.max(s.bitwidth);
+        println!("{:<14} {:>10.2} {:>7} {:>7} {:>8} {:>5}", s.name,
+                 s.mean_abs, s.q50, s.q90, s.max_abs, s.bitwidth);
+        out_rows.push(Json::obj(vec![
+            ("tensor", Json::Str(s.name.clone())),
+            ("mean_abs", Json::Float(s.mean_abs)),
+            ("q50", Json::Int(s.q50 as i64)),
+            ("q90", Json::Int(s.q90 as i64)),
+            ("max_abs", Json::Int(s.max_abs as i64)),
+            ("bitwidth", Json::Int(s.bitwidth as i64)),
+        ]));
+    }
+    let verdict = if max_bits <= 16 { "HOLDS" } else { "VIOLATED" };
+    println!("App. E.3 int16 weights claim: max bit-width {max_bits} -> \
+              {verdict} (test_acc {:.2}%)", res.final_test_acc * 100.0);
+    ctx.save("fig3", &Json::obj(vec![
+        ("layers", Json::Array(out_rows)),
+        ("max_bitwidth", Json::Int(max_bits as i64)),
+        ("int16_claim_holds", Json::Bool(max_bits <= 16)),
+        ("test_acc", Json::Float(res.final_test_acc * 100.0)),
+    ]));
+}
+
+// ---------------------------------------------------------------------------
+// Extensions (paper §5 future work)
+// ---------------------------------------------------------------------------
+
+/// Ablation: plain IntegerSGD vs the integer momentum optimizer (§5
+/// "improved optimizer tailored for integer-only training") on an MLP.
+pub fn momentum(ctx: &ExpCtx) {
+    use crate::optim::momentum::MomentumMlp;
+    use crate::util::rng::Pcg32;
+    println!("== Extension: IntegerSGD vs IntegerMomentum (MLP/LES) ==");
+    let (tr, te) = load_data(ctx, "mnist");
+    let dims = [tr.sample_size(), 128, 64, 10];
+    let mut out_rows = Vec::new();
+    // plain IntegerSGD path via the standard network trainer
+    let spec = zoo::mlp("mlp-mom", &dims[1..dims.len() - 1], dims[0], 10);
+    let mut net = Network::new(spec, ctx.seed);
+    let cfg = TrainConfig {
+        epochs: ctx.epochs,
+        batch: 64,
+        hyper: Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 },
+        seed: ctx.seed,
+        ..Default::default()
+    };
+    let res = fit(&mut net, &tr, &te, &cfg);
+    println!("{:<28} {:>9.2}%", "IntegerSGD", res.final_test_acc * 100.0);
+    out_rows.push(Json::obj(vec![
+        ("optimizer", Json::Str("integer_sgd".into())),
+        ("test_acc", Json::Float(res.final_test_acc * 100.0)),
+    ]));
+    for beta_inv in [4i64, 8, 16] {
+        let mut m = MomentumMlp::new(&dims, beta_inv, ctx.seed);
+        let mut rng = Pcg32::with_stream(ctx.seed, 0x6d6f);
+        for _ in 0..ctx.epochs {
+            for (x, labels) in
+                crate::data::Batcher::new(&tr, 64, true, &mut rng)
+            {
+                m.train_batch(&x, &labels, 512, 3000);
+            }
+        }
+        let acc = m.accuracy(&te, 64);
+        println!("{:<28} {:>9.2}%",
+                 format!("IntegerMomentum b={beta_inv}"), acc * 100.0);
+        out_rows.push(Json::obj(vec![
+            ("optimizer", Json::Str(format!("momentum_b{beta_inv}"))),
+            ("test_acc", Json::Float(acc * 100.0)),
+        ]));
+    }
+    ctx.save("momentum", &Json::Array(out_rows));
+}
+
+/// App. E.3 intermediate bit-width probe on a trained network.
+pub fn probe(ctx: &ExpCtx) {
+    use crate::nn::probe::{probe_network, verdict};
+    println!("== App. E.3: intermediate bit-widths after training ==");
+    let preset = ctx.preset("vgg8b", "vgg8b-micro");
+    let (tr, te) = load_data(ctx, "cifar10");
+    let spec = zoo::get(&preset).unwrap();
+    let mut net = Network::new(spec, ctx.seed);
+    let cfg = TrainConfig {
+        epochs: ctx.epochs,
+        batch: cnn_batch(ctx),
+        hyper: Hyper { gamma_inv: ctx.gamma_cnn(), eta_fw_inv: 25000,
+                       eta_lr_inv: 3000 },
+        seed: ctx.seed,
+        ..Default::default()
+    };
+    let res = fit(&mut net, &tr, &te, &cfg);
+    let (x, labels) = tr.gather(&(0..64.min(tr.len())).collect::<Vec<_>>(),
+                                net.spec.input_shape.len() == 1);
+    let probes = probe_network(&net, &x, &labels);
+    println!("{:>6} {:>12} {:>9} {:>11} {:>12}", "block", "preact_bits",
+             "act_bits", "delta_bits", "weight_bits");
+    let mut rows = Vec::new();
+    for p in &probes {
+        println!("{:>6} {:>12} {:>9} {:>11} {:>12}", p.block, p.preact_bits,
+                 p.act_bits, p.delta_bits, p.weight_bits);
+        rows.push(Json::obj(vec![
+            ("block", Json::Int(p.block as i64)),
+            ("preact_bits", Json::Int(p.preact_bits as i64)),
+            ("act_bits", Json::Int(p.act_bits as i64)),
+            ("delta_bits", Json::Int(p.delta_bits as i64)),
+            ("weight_bits", Json::Int(p.weight_bits as i64)),
+        ]));
+    }
+    let (w16, i32ok) = verdict(&probes);
+    println!("weights int16: {w16}; intermediates int32: {i32ok} \
+              (test acc {:.2}%)", res.final_test_acc * 100.0);
+    ctx.save("probe", &Json::obj(vec![
+        ("blocks", Json::Array(rows)),
+        ("weights_int16", Json::Bool(w16)),
+        ("intermediates_int32", Json::Bool(i32ok)),
+    ]));
+}
+
+/// Dispatch by experiment name.
+pub fn run(name: &str, ctx: &ExpCtx) -> Result<(), String> {
+    match name {
+        "table1" => table1(ctx),
+        "table2" => table2(ctx),
+        "table8" => table8(ctx),
+        "table9" => table9(ctx),
+        "fig2-left" => fig2_left(ctx),
+        "fig2-right" => fig2_right(ctx),
+        "fig3" => fig3(ctx),
+        "momentum" => momentum(ctx),
+        "probe" => probe(ctx),
+        "all" => {
+            for n in ["table1", "table2", "table8", "table9", "fig2-left",
+                      "fig2-right", "fig3", "momentum", "probe"] {
+                run(n, ctx)?;
+            }
+        }
+        _ => {
+            return Err(format!(
+                "unknown experiment '{name}' (table1|table2|table8|table9|\
+                 fig2-left|fig2-right|fig3|momentum|probe|all)"
+            ))
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parse() {
+        assert_eq!(Scale::parse("quick").unwrap(), Scale::Quick);
+        assert_eq!(Scale::parse("full").unwrap(), Scale::Full);
+        assert!(Scale::parse("x").is_err());
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let ctx = ExpCtx::new(Scale::Quick, 1, 1);
+        assert!(run("bogus", &ctx).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! L3 coordinator: the execution-engine abstraction (pure-Rust NativeEngine
+//! vs artifact-backed PjrtEngine), experiment drivers for every table and
+//! figure in the paper, and the CLI plumbing.
+
+pub mod engine;
+pub mod experiments;
+
+pub use engine::{Engine, NativeEngine, PjrtEngine};

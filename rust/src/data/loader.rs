@@ -1,0 +1,199 @@
+//! Loaders for real datasets when files are present under `data/`:
+//! IDX (MNIST/FashionMNIST `*-images-idx3-ubyte`, `*-labels-idx1-ubyte`)
+//! and the CIFAR-10 binary format (`data_batch_*.bin`). Falls back to the
+//! synthetic generators otherwise (DESIGN.md §Substitutions).
+
+use super::{synthetic, Dataset};
+
+/// Resolve a dataset name: real files if available, else synthetic.
+/// Synthetic sizes: `n_train + n_test` samples.
+pub fn load(name: &str, dir: &str, n_train: usize, n_test: usize,
+            seed: u64) -> Result<(Dataset, Dataset), String> {
+    match name {
+        "mnist" | "fashion-mnist" => {
+            let prefix = if name == "mnist" { "" } else { "fashion-" };
+            let tr_img = format!("{dir}/{prefix}train-images-idx3-ubyte");
+            let tr_lbl = format!("{dir}/{prefix}train-labels-idx1-ubyte");
+            let te_img = format!("{dir}/{prefix}t10k-images-idx3-ubyte");
+            let te_lbl = format!("{dir}/{prefix}t10k-labels-idx1-ubyte");
+            if std::path::Path::new(&tr_img).exists() {
+                let tr = load_idx_pair(name, &tr_img, &tr_lbl)?;
+                let te = load_idx_pair(name, &te_img, &te_lbl)?;
+                return Ok((tr, te));
+            }
+            let syn = if name == "mnist" { "mnist-like" } else { "fashion-like" };
+            synth_pair(syn, n_train, n_test, seed)
+        }
+        "cifar10" => {
+            let p = format!("{dir}/data_batch_1.bin");
+            if std::path::Path::new(&p).exists() {
+                let mut tr = load_cifar_bin(&format!("{dir}/data_batch_1.bin"))?;
+                for i in 2..=5 {
+                    let more = load_cifar_bin(&format!("{dir}/data_batch_{i}.bin"))?;
+                    tr.images.extend(more.images);
+                    tr.labels.extend(more.labels);
+                }
+                let te = load_cifar_bin(&format!("{dir}/test_batch.bin"))?;
+                return Ok((tr, te));
+            }
+            synth_pair("cifar-like", n_train, n_test, seed)
+        }
+        other => {
+            // direct synthetic name
+            if synthetic::by_name(other, 1, 0).is_some() {
+                synth_pair(other, n_train, n_test, seed)
+            } else {
+                Err(format!("unknown dataset '{other}'"))
+            }
+        }
+    }
+}
+
+fn synth_pair(name: &str, n_train: usize, n_test: usize, seed: u64)
+              -> Result<(Dataset, Dataset), String> {
+    let ds = synthetic::by_name(name, n_train + n_test, seed)
+        .ok_or_else(|| format!("unknown synthetic dataset '{name}'"))?;
+    Ok(ds.split_test(n_test))
+}
+
+/// Parse an IDX images + labels file pair.
+pub fn load_idx_pair(name: &str, images: &str, labels: &str)
+                     -> Result<Dataset, String> {
+    let img = std::fs::read(images).map_err(|e| format!("{images}: {e}"))?;
+    let lbl = std::fs::read(labels).map_err(|e| format!("{labels}: {e}"))?;
+    let (shape, pixels) = parse_idx(&img)?;
+    if shape.len() != 3 {
+        return Err(format!("{images}: expected idx3, got rank {}", shape.len()));
+    }
+    let (lshape, lab) = parse_idx(&lbl)?;
+    if lshape.len() != 1 || lshape[0] != shape[0] {
+        return Err(format!("{labels}: label count mismatch"));
+    }
+    Ok(Dataset {
+        name: name.to_string(),
+        shape: vec![1, shape[1], shape[2]],
+        num_classes: 10,
+        images: pixels.iter().map(|&b| b as i32).collect(),
+        labels: lab.iter().map(|&b| b as usize).collect(),
+    })
+}
+
+/// Parse the IDX container: magic 0x00 0x08 rank, then rank u32 dims, then
+/// u8 payload.
+fn parse_idx(buf: &[u8]) -> Result<(Vec<usize>, &[u8]), String> {
+    if buf.len() < 4 || buf[0] != 0 || buf[1] != 0 || buf[2] != 0x08 {
+        return Err("bad idx magic".into());
+    }
+    let rank = buf[3] as usize;
+    let mut dims = Vec::with_capacity(rank);
+    let mut off = 4;
+    for _ in 0..rank {
+        if off + 4 > buf.len() {
+            return Err("truncated idx header".into());
+        }
+        dims.push(u32::from_be_bytes(buf[off..off + 4].try_into().unwrap())
+            as usize);
+        off += 4;
+    }
+    let n: usize = dims.iter().product();
+    if buf.len() < off + n {
+        return Err("truncated idx payload".into());
+    }
+    Ok((dims, &buf[off..off + n]))
+}
+
+/// CIFAR-10 binary: 10000 records of [label u8][3072 u8 pixels, CHW].
+pub fn load_cifar_bin(path: &str) -> Result<Dataset, String> {
+    let buf = std::fs::read(path).map_err(|e| format!("{path}: {e}"))?;
+    const REC: usize = 3073;
+    if buf.len() % REC != 0 {
+        return Err(format!("{path}: not a multiple of {REC}"));
+    }
+    let n = buf.len() / REC;
+    let mut images = Vec::with_capacity(n * 3072);
+    let mut labels = Vec::with_capacity(n);
+    for r in 0..n {
+        labels.push(buf[r * REC] as usize);
+        images.extend(buf[r * REC + 1..(r + 1) * REC].iter().map(|&b| b as i32));
+    }
+    Ok(Dataset {
+        name: "cifar10".into(),
+        shape: vec![3, 32, 32],
+        num_classes: 10,
+        images,
+        labels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_idx3(path: &std::path::Path, n: usize, h: usize, w: usize) {
+        let mut buf = vec![0u8, 0, 0x08, 3];
+        for d in [n, h, w] {
+            buf.extend((d as u32).to_be_bytes());
+        }
+        buf.extend((0..n * h * w).map(|i| (i % 251) as u8));
+        std::fs::write(path, buf).unwrap();
+    }
+
+    fn write_idx1(path: &std::path::Path, n: usize) {
+        let mut buf = vec![0u8, 0, 0x08, 1];
+        buf.extend((n as u32).to_be_bytes());
+        buf.extend((0..n).map(|i| (i % 10) as u8));
+        std::fs::write(path, buf).unwrap();
+    }
+
+    #[test]
+    fn idx_roundtrip() {
+        let dir = std::env::temp_dir().join("nitro_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let img = dir.join("img");
+        let lbl = dir.join("lbl");
+        write_idx3(&img, 7, 5, 4);
+        write_idx1(&lbl, 7);
+        let ds = load_idx_pair("x", img.to_str().unwrap(), lbl.to_str().unwrap())
+            .unwrap();
+        assert_eq!(ds.len(), 7);
+        assert_eq!(ds.shape, vec![1, 5, 4]);
+        assert_eq!(ds.images[1], 1);
+        assert_eq!(ds.labels[3], 3);
+    }
+
+    #[test]
+    fn idx_rejects_bad_magic() {
+        assert!(parse_idx(&[1, 2, 3, 4]).is_err());
+        assert!(parse_idx(&[0, 0, 0x08, 1, 0, 0]).is_err()); // truncated
+    }
+
+    #[test]
+    fn cifar_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("nitro_cifar_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("batch.bin");
+        let mut buf = Vec::new();
+        for r in 0..3u8 {
+            buf.push(r); // label
+            buf.extend(std::iter::repeat(r * 10).take(3072));
+        }
+        std::fs::write(&p, &buf).unwrap();
+        let ds = load_cifar_bin(p.to_str().unwrap()).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.labels, vec![0, 1, 2]);
+        assert_eq!(ds.images[3072], 10);
+    }
+
+    #[test]
+    fn falls_back_to_synthetic() {
+        let (tr, te) = load("mnist", "/nonexistent", 60, 20, 5).unwrap();
+        assert_eq!(tr.len(), 60);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.shape, vec![1, 28, 28]);
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        assert!(load("bogus", "/tmp", 1, 1, 0).is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! Data pipeline: integer MAD pre-processing (paper App. B.2), synthetic
+//! dataset generators (DESIGN.md §Substitutions — no network access, so
+//! MNIST/FashionMNIST/CIFAR-10 are replaced by shape- and
+//! difficulty-matched synthetic sets; real IDX/CIFAR files are picked up
+//! from `data/` when present), and the shuffled batcher.
+
+pub mod loader;
+pub mod synthetic;
+
+use crate::tensor::{ITensor, Tensor};
+use crate::util::rng::Pcg32;
+
+/// A labelled integer image-classification dataset. Pixels are raw int
+/// (e.g. 0..255) until [`Dataset::mad_normalize`] is applied.
+#[derive(Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// (C, H, W)
+    pub shape: Vec<usize>,
+    pub num_classes: usize,
+    /// len = n * C*H*W
+    pub images: Vec<i32>,
+    pub labels: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample_size(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Integer-only MAD normalization over the whole dataset (paper App.
+    /// B.2): `x̂ = (x − µ_int) · 51 / ω_int` with floor division — mirrors
+    /// `ref.mad_normalize` bit-exactly.
+    pub fn mad_normalize(&mut self) {
+        let n = self.images.len() as i64;
+        if n == 0 {
+            return;
+        }
+        let sum: i64 = self.images.iter().map(|&v| v as i64).sum();
+        let mu = sum.div_euclid(n);
+        let dev: i64 = self.images.iter().map(|&v| (v as i64 - mu).abs()).sum();
+        let omega = dev.div_euclid(n).max(1);
+        for v in &mut self.images {
+            *v = (((*v as i64 - mu) * 51).div_euclid(omega)) as i32;
+        }
+    }
+
+    /// Pull a batch by indices into an (B, C, H, W) / (B, F) tensor.
+    pub fn gather(&self, idxs: &[usize], flatten: bool) -> (ITensor, Vec<usize>) {
+        let ss = self.sample_size();
+        let mut data = Vec::with_capacity(idxs.len() * ss);
+        let mut labels = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            data.extend_from_slice(&self.images[i * ss..(i + 1) * ss]);
+            labels.push(self.labels[i]);
+        }
+        let shape: Vec<usize> = if flatten || self.shape.len() == 1 {
+            vec![idxs.len(), ss]
+        } else {
+            let mut s = vec![idxs.len()];
+            s.extend(&self.shape);
+            s
+        };
+        (Tensor::from_vec(&shape, data), labels)
+    }
+
+    /// Split off the last `n` samples as a test set.
+    pub fn split_test(mut self, n: usize) -> (Dataset, Dataset) {
+        let n = n.min(self.len());
+        let train_n = self.len() - n;
+        let ss = self.sample_size();
+        let test = Dataset {
+            name: format!("{}-test", self.name),
+            shape: self.shape.clone(),
+            num_classes: self.num_classes,
+            images: self.images.split_off(train_n * ss),
+            labels: self.labels.split_off(train_n),
+        };
+        (self, test)
+    }
+}
+
+/// Epoch iterator producing shuffled batches.
+pub struct Batcher<'a> {
+    ds: &'a Dataset,
+    order: Vec<usize>,
+    pos: usize,
+    pub batch: usize,
+    flatten: bool,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, flatten: bool,
+               rng: &mut Pcg32) -> Self {
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        rng.shuffle(&mut order);
+        Batcher { ds, order, pos: 0, batch, flatten }
+    }
+
+    /// Sequential (unshuffled) order — evaluation.
+    pub fn sequential(ds: &'a Dataset, batch: usize, flatten: bool) -> Self {
+        Batcher {
+            ds,
+            order: (0..ds.len()).collect(),
+            pos: 0,
+            batch,
+            flatten,
+        }
+    }
+}
+
+impl<'a> Iterator for Batcher<'a> {
+    type Item = (ITensor, Vec<usize>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch).min(self.order.len());
+        let idxs = &self.order[self.pos..end];
+        self.pos = end;
+        Some(self.ds.gather(idxs, self.flatten))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "t".into(),
+            shape: vec![1, 2, 2],
+            num_classes: 2,
+            images: (0..40).map(|v| (v * 13) % 256).collect(),
+            labels: (0..10).map(|i| i % 2).collect(),
+        }
+    }
+
+    #[test]
+    fn mad_normalize_properties() {
+        let mut ds = tiny();
+        ds.mad_normalize();
+        let n = ds.images.len() as i64;
+        let mean = ds.images.iter().map(|&v| v as i64).sum::<i64>() / n;
+        assert!(mean.abs() <= 2, "mean {mean}");
+        let mad = ds.images.iter().map(|&v| (v as i64).abs()).sum::<i64>() / n;
+        assert!((30..=70).contains(&mad), "mad {mad}");
+    }
+
+    #[test]
+    fn mad_normalize_matches_python_pin() {
+        // mirror of ref.mad_normalize on a fixed vector
+        let mut ds = Dataset {
+            name: "p".into(),
+            shape: vec![1, 1, 5],
+            num_classes: 1,
+            images: vec![0, 50, 100, 200, 255],
+            labels: vec![0],
+        };
+        // mu = 605 // 5 = 121; dev = 121+71+21+79+134 = 426; omega = 85
+        ds.mad_normalize();
+        let want: Vec<i32> = [0i64, 50, 100, 200, 255]
+            .iter()
+            .map(|&x| (((x - 121) * 51).div_euclid(85)) as i32)
+            .collect();
+        assert_eq!(ds.images, want);
+    }
+
+    #[test]
+    fn batcher_covers_every_sample_once() {
+        let ds = tiny();
+        let mut rng = Pcg32::new(4);
+        let mut seen = vec![0usize; ds.len()];
+        for (x, labels) in Batcher::new(&ds, 3, false, &mut rng) {
+            assert_eq!(x.shape[1..], [1, 2, 2]);
+            assert!(labels.len() <= 3);
+            for (bi, &l) in labels.iter().enumerate() {
+                // recover the index by matching the first pixel
+                let px = x.data[bi * 4];
+                let idx = ds.images.chunks(4).position(|c| c[0] == px).unwrap();
+                assert_eq!(ds.labels[idx], l);
+                seen[idx] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn gather_flatten() {
+        let ds = tiny();
+        let (x, _) = ds.gather(&[0, 3], true);
+        assert_eq!(x.shape, vec![2, 4]);
+    }
+
+    #[test]
+    fn split_test_sizes() {
+        let (tr, te) = tiny().split_test(3);
+        assert_eq!(tr.len(), 7);
+        assert_eq!(te.len(), 3);
+        assert_eq!(te.images.len(), 3 * 4);
+    }
+}

@@ -1,0 +1,230 @@
+//! Synthetic dataset generators (DESIGN.md §Substitutions).
+//!
+//! The paper evaluates on MNIST, FashionMNIST and CIFAR-10; this image has
+//! no network access, so we synthesize class-separable image datasets with
+//! matching shapes and tunable difficulty. Each class gets a deterministic
+//! structured prototype (oriented bars + blobs — enough spatial structure
+//! that convolution genuinely beats a linear model); samples are prototype
+//! + per-sample jitter (shift, amplitude, pixel noise), quantized to 0..255
+//! like real 8-bit images so the MAD pre-processing path is exercised
+//! end-to-end.
+//!
+//! What this preserves from the paper's evaluation: relative orderings
+//! (NITRO-D vs baselines), learning dynamics, and the integer bit-width
+//! phenomena. What it cannot preserve: absolute accuracy values.
+
+use super::Dataset;
+use crate::util::rng::Pcg32;
+
+/// Difficulty knob: pixel-noise amplitude (0..128) and max shift.
+#[derive(Clone, Copy, Debug)]
+pub struct Difficulty {
+    pub noise: i32,
+    pub max_shift: usize,
+    /// Amplitude jitter in percent.
+    pub amp_jitter: i32,
+}
+
+impl Difficulty {
+    /// MNIST-like: easy, well-separated classes.
+    pub fn easy() -> Self {
+        Difficulty { noise: 18, max_shift: 1, amp_jitter: 10 }
+    }
+
+    /// FashionMNIST-like: moderate overlap.
+    pub fn medium() -> Self {
+        Difficulty { noise: 36, max_shift: 2, amp_jitter: 20 }
+    }
+
+    /// CIFAR-like: heavy noise + shifts; linear models degrade hard.
+    pub fn hard() -> Self {
+        Difficulty { noise: 60, max_shift: 3, amp_jitter: 35 }
+    }
+}
+
+/// Dataset presets mirroring the paper's three benchmarks.
+pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Dataset> {
+    Some(match name {
+        "mnist-like" => generate("mnist-like", (1, 28, 28), 10, n,
+                                 Difficulty::easy(), seed),
+        "fashion-like" => generate("fashion-like", (1, 28, 28), 10, n,
+                                   Difficulty::medium(), seed),
+        "cifar-like" => generate("cifar-like", (3, 32, 32), 10, n,
+                                 Difficulty::hard(), seed),
+        "tiny" => generate("tiny", (1, 8, 8), 10, n, Difficulty::easy(), seed),
+        _ => return None,
+    })
+}
+
+pub fn names() -> &'static [&'static str] {
+    &["mnist-like", "fashion-like", "cifar-like", "tiny"]
+}
+
+/// Build `n` samples of a `(c, h, w)` dataset with `classes` classes.
+pub fn generate(name: &str, chw: (usize, usize, usize), classes: usize,
+                n: usize, diff: Difficulty, seed: u64) -> Dataset {
+    let (c, h, w) = chw;
+    let mut proto_rng = Pcg32::with_stream(seed, 0x70726f74);
+    let protos: Vec<Vec<i32>> = (0..classes)
+        .map(|cls| prototype(&mut proto_rng, cls, c, h, w))
+        .collect();
+    let mut rng = Pcg32::with_stream(seed, 0x73616d70);
+    let ss = c * h * w;
+    let mut images = Vec::with_capacity(n * ss);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let cls = i % classes;
+        labels.push(cls);
+        let dy = rng.range_i32(-(diff.max_shift as i32), diff.max_shift as i32);
+        let dx = rng.range_i32(-(diff.max_shift as i32), diff.max_shift as i32);
+        let amp = 100 + rng.range_i32(-diff.amp_jitter, diff.amp_jitter);
+        for ci in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    let sy = y as i32 + dy;
+                    let sx = x as i32 + dx;
+                    let base = if sy >= 0 && sy < h as i32 && sx >= 0
+                        && sx < w as i32
+                    {
+                        protos[cls][(ci * h + sy as usize) * w + sx as usize]
+                    } else {
+                        0
+                    };
+                    let v = base * amp / 100 + rng.range_i32(-diff.noise, diff.noise);
+                    images.push(v.clamp(0, 255));
+                }
+            }
+        }
+    }
+    // deterministic interleave -> shuffle so splits are class-balanced
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut shuffle_rng = Pcg32::with_stream(seed, 0x73687566);
+    shuffle_rng.shuffle(&mut order);
+    let mut s_images = Vec::with_capacity(n * ss);
+    let mut s_labels = Vec::with_capacity(n);
+    for &i in &order {
+        s_images.extend_from_slice(&images[i * ss..(i + 1) * ss]);
+        s_labels.push(labels[i]);
+    }
+    Dataset {
+        name: name.to_string(),
+        shape: vec![c, h, w],
+        num_classes: classes,
+        images: s_images,
+        labels: s_labels,
+    }
+}
+
+/// Structured class prototype: an oriented bar + 2 gaussian-ish blobs +
+/// class-dependent checker field, per channel. Values 0..200.
+fn prototype(rng: &mut Pcg32, cls: usize, c: usize, h: usize, w: usize)
+             -> Vec<i32> {
+    let mut img = vec![0i32; c * h * w];
+    let angle = cls as f64 * std::f64::consts::PI / 5.0;
+    let (sin, cos) = angle.sin_cos();
+    for ci in 0..c {
+        // oriented bar through the centre
+        for y in 0..h {
+            for x in 0..w {
+                let fy = y as f64 - h as f64 / 2.0;
+                let fx = x as f64 - w as f64 / 2.0;
+                let d = (fx * sin - fy * cos).abs();
+                let bar = (140.0 * (-d * d / 6.0).exp()) as i32;
+                img[(ci * h + y) * w + x] += bar;
+            }
+        }
+        // two blobs at class-dependent positions
+        for b in 0..2 {
+            let cy = ((cls * 7 + b * 11 + ci * 3) % h) as f64;
+            let cx = ((cls * 13 + b * 5 + ci * 7) % w) as f64;
+            let amp = 60.0 + rng.below(40) as f64;
+            for y in 0..h {
+                for x in 0..w {
+                    let dy = y as f64 - cy;
+                    let dx = x as f64 - cx;
+                    let v = (amp * (-(dy * dy + dx * dx) / 8.0).exp()) as i32;
+                    img[(ci * h + y) * w + x] += v;
+                }
+            }
+        }
+    }
+    for v in &mut img {
+        *v = (*v).clamp(0, 200);
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let ds = by_name("mnist-like", 200, 1).unwrap();
+        assert_eq!(ds.shape, vec![1, 28, 28]);
+        assert_eq!(ds.len(), 200);
+        let mut counts = vec![0usize; 10];
+        for &l in &ds.labels {
+            counts[l] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+        assert!(ds.images.iter().all(|&v| (0..=255).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = by_name("tiny", 50, 9).unwrap();
+        let b = by_name("tiny", 50, 9).unwrap();
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = by_name("tiny", 50, 10).unwrap();
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn classes_are_separable_by_nearest_prototype() {
+        // sanity: a trivial nearest-class-mean classifier on the raw pixels
+        // must beat chance by a wide margin on the easy preset, and the
+        // hard preset must be harder than the easy one.
+        for (name, min_acc) in [("mnist-like", 0.8), ("cifar-like", 0.35)] {
+            let ds = by_name(name, 400, 3).unwrap();
+            let ss = ds.sample_size();
+            let mut means = vec![vec![0i64; ss]; ds.num_classes];
+            let mut counts = vec![0i64; ds.num_classes];
+            for (i, &l) in ds.labels.iter().enumerate().take(200) {
+                counts[l] += 1;
+                for (m, &px) in means[l].iter_mut().zip(&ds.images[i * ss..(i + 1) * ss]) {
+                    *m += px as i64;
+                }
+            }
+            for (m, &cnt) in means.iter_mut().zip(&counts) {
+                for v in m.iter_mut() {
+                    *v /= cnt.max(1);
+                }
+            }
+            let mut correct = 0;
+            for i in 200..400 {
+                let img = &ds.images[i * ss..(i + 1) * ss];
+                let mut best = (i64::MAX, 0usize);
+                for (cls, m) in means.iter().enumerate() {
+                    let d: i64 = img
+                        .iter()
+                        .zip(m)
+                        .map(|(&a, &b)| {
+                            let d = a as i64 - b;
+                            d * d
+                        })
+                        .sum();
+                    if d < best.0 {
+                        best = (d, cls);
+                    }
+                }
+                if best.1 == ds.labels[i] {
+                    correct += 1;
+                }
+            }
+            let acc = correct as f64 / 200.0;
+            assert!(acc >= min_acc, "{name}: nearest-mean acc {acc}");
+        }
+    }
+}

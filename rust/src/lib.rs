@@ -1,0 +1,26 @@
+//! # nitro-d
+//!
+//! Reproduction of **NITRO-D: Native Integer-only Training of Deep
+//! Convolutional Neural Networks** (Pirillo, Colombo, Roveri, 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: the LES block-parallel training
+//!   scheduler, data pipeline, model zoo, experiment drivers, CLI; plus a
+//!   bit-exact pure-Rust integer engine (`tensor`, `nn`) and the PJRT
+//!   runtime (`runtime`) that executes the JAX/Pallas-lowered artifacts.
+//! * **L2** — `python/compile/model.py`: the integer block graphs, AOT-
+//!   lowered to HLO text at build time (`make artifacts`).
+//! * **L1** — `python/compile/kernels/`: Pallas integer kernels.
+//!
+//! Integer arithmetic is bit-exact across implementations, so the three
+//! layers are cross-checked for *equality*, not closeness — see DESIGN.md.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod nn;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,287 @@
+//! `nitro` — the NITRO-D coordinator CLI.
+//!
+//! Subcommands:
+//!   train       train a preset on a dataset (native or pjrt engine)
+//!   eval        evaluate a checkpoint
+//!   experiment  regenerate a paper table/figure (table1..fig3|all)
+//!   zoo         list model presets and parameter counts
+//!   runtime     PJRT smoke check: load + execute the artifacts
+
+use nitro::coordinator::engine::{Engine, PjrtEngine};
+use nitro::coordinator::experiments::{self, ExpCtx, Scale};
+use nitro::data::loader;
+use nitro::nn::{zoo, Hyper, Network};
+use nitro::train::{checkpoint, evaluate, fit, TrainConfig};
+use nitro::util::cli::Command;
+use nitro::util::rng::Pcg32;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&argv[1..]),
+        Some("eval") => cmd_eval(&argv[1..]),
+        Some("experiment") => cmd_experiment(&argv[1..]),
+        Some("zoo") => cmd_zoo(),
+        Some("runtime") => cmd_runtime(&argv[1..]),
+        Some("-h") | Some("--help") | None => {
+            eprintln!("{}", USAGE);
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "nitro — NITRO-D: native integer-only CNN training
+
+Usage: nitro <subcommand> [options]
+
+Subcommands:
+  train       train a preset (see `nitro train --help`)
+  eval        evaluate a checkpoint on a dataset
+  experiment  regenerate a paper table/figure: table1 table2 table8
+              table9 fig2-left fig2-right fig3 all
+  zoo         list model presets
+  runtime     PJRT smoke check over artifacts/<preset>
+";
+
+fn fail(e: String) -> i32 {
+    eprintln!("{e}");
+    2
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let cmd = Command::new("nitro train", "train a NITRO-D network")
+        .opt("preset", "tinycnn", "model preset (see `nitro zoo`)")
+        .opt("dataset", "tiny", "mnist|fashion-mnist|cifar10|tiny|<synthetic>")
+        .opt("epochs", "10", "training epochs")
+        .opt("batch", "64", "batch size")
+        .opt("gamma-inv", "512", "inverse learning rate")
+        .opt("eta-fw-inv", "0", "forward-layer inverse decay (0 = off)")
+        .opt("eta-lr-inv", "0", "learning-layer inverse decay (0 = off)")
+        .opt("p-c", "0.0", "conv-block dropout rate")
+        .opt("p-l", "0.0", "linear-block dropout rate")
+        .opt("n-train", "2000", "synthetic train samples")
+        .opt("n-test", "400", "synthetic test samples")
+        .opt("seed", "42", "PRNG seed")
+        .opt("save", "", "checkpoint output path")
+        .opt("engine", "native", "native|pjrt (pjrt needs artifacts)")
+        .opt("artifacts", "artifacts", "artifacts dir for --engine pjrt")
+        .flag("sequential", "disable the block-parallel scheduler")
+        .flag("quiet", "suppress per-epoch logs");
+    let p = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let run = || -> Result<(), String> {
+        let preset = p.get("preset").to_string();
+        let seed = p.get_i64("seed")? as u64;
+        let (mut tr, mut te) = loader::load(
+            p.get("dataset"), "data", p.get_usize("n-train")?,
+            p.get_usize("n-test")?, seed)?;
+        tr.mad_normalize();
+        te.mad_normalize();
+        let hp = Hyper {
+            gamma_inv: p.get_i64("gamma-inv")?,
+            eta_fw_inv: p.get_i64("eta-fw-inv")?,
+            eta_lr_inv: p.get_i64("eta-lr-inv")?,
+        };
+        match p.get("engine") {
+            "native" => {
+                let spec = zoo::get(&preset)
+                    .ok_or_else(|| format!("unknown preset '{preset}'"))?;
+                println!(
+                    "training {preset} ({} params, {} at inference) on {}",
+                    spec.param_count(),
+                    spec.inference_param_count(),
+                    tr.name
+                );
+                let mut net = Network::new(spec, seed);
+                net.set_dropout(p.get_f64("p-c")?, p.get_f64("p-l")?);
+                let cfg = TrainConfig {
+                    epochs: p.get_usize("epochs")?,
+                    batch: p.get_usize("batch")?,
+                    hyper: hp,
+                    seed,
+                    parallel_blocks: !p.has("sequential"),
+                    verbose: !p.has("quiet"),
+                    ..Default::default()
+                };
+                let res = fit(&mut net, &tr, &te, &cfg);
+                println!("final test accuracy: {:.2}%",
+                         res.final_test_acc * 100.0);
+                let save = p.get("save");
+                if !save.is_empty() {
+                    checkpoint::save(&net, save)?;
+                    println!("checkpoint -> {save}");
+                }
+            }
+            "pjrt" => {
+                let dir = format!("{}/{preset}", p.get("artifacts"));
+                let mut eng = PjrtEngine::load(&dir, seed)?;
+                let batch = eng.manifest.batch;
+                println!(
+                    "training {preset} via PJRT artifacts ({dir}), batch {batch}"
+                );
+                let epochs = p.get_usize("epochs")?;
+                let mut rng = Pcg32::with_stream(seed, 0x7e);
+                let flatten = eng.manifest.input_shape.len() == 1;
+                for epoch in 0..epochs {
+                    let mut head_loss = 0f64;
+                    let mut correct = 0usize;
+                    let mut seen = 0usize;
+                    for (x, labels) in
+                        nitro::data::Batcher::new(&tr, batch, flatten, &mut rng)
+                    {
+                        if labels.len() < batch {
+                            continue; // artifacts are shape-specialized
+                        }
+                        let (_, hl, c) = eng.train_batch(&x, &labels, &hp);
+                        head_loss += hl as f64;
+                        correct += c;
+                        seen += labels.len();
+                    }
+                    if !p.has("quiet") {
+                        eprintln!(
+                            "[epoch {epoch:>3}] head_loss {head_loss:>12.0} \
+                             train_acc {:.4}",
+                            correct as f64 / seen.max(1) as f64
+                        );
+                    }
+                }
+                let mut correct = 0usize;
+                let mut seen = 0usize;
+                for (x, labels) in
+                    nitro::data::Batcher::sequential(&te, batch, flatten)
+                {
+                    if labels.len() < batch {
+                        continue;
+                    }
+                    let yhat = eng.infer(&x);
+                    correct += nitro::nn::block::count_correct(&yhat, &labels);
+                    seen += labels.len();
+                }
+                println!("final test accuracy (pjrt): {:.2}%",
+                         100.0 * correct as f64 / seen.max(1) as f64);
+            }
+            other => return Err(format!("unknown engine '{other}'")),
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_eval(argv: &[String]) -> i32 {
+    let cmd = Command::new("nitro eval", "evaluate a checkpoint")
+        .opt("preset", "tinycnn", "model preset the checkpoint was built from")
+        .opt("dataset", "tiny", "dataset name")
+        .opt("n-test", "400", "synthetic test samples")
+        .opt("seed", "42", "dataset seed")
+        .positional("checkpoint", "path to .ckpt file");
+    let p = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let run = || -> Result<(), String> {
+        let ckpt = p.positionals.first().ok_or("missing checkpoint path")?;
+        let seed = p.get_i64("seed")? as u64;
+        let spec = zoo::get(p.get("preset"))
+            .ok_or_else(|| format!("unknown preset '{}'", p.get("preset")))?;
+        let mut net = Network::new(spec, 0);
+        checkpoint::load(&mut net, ckpt)?;
+        let (_, mut te) = loader::load(p.get("dataset"), "data", 16,
+                                       p.get_usize("n-test")?, seed)?;
+        te.mad_normalize();
+        println!("accuracy: {:.2}%", evaluate(&net, &te, 64) * 100.0);
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_experiment(argv: &[String]) -> i32 {
+    let cmd = Command::new("nitro experiment",
+                           "regenerate a paper table/figure")
+        .opt("scale", "quick", "quick (narrow presets) | full (paper width)")
+        .opt("seed", "42", "PRNG seed")
+        .opt("epochs", "0", "override epochs (0 = scale default)")
+        .positional(
+            "name",
+            "table1|table2|table8|table9|fig2-left|fig2-right|fig3|all",
+        );
+    let p = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let run = || -> Result<(), String> {
+        let name = p.positionals.first().ok_or("missing experiment name")?;
+        let scale = Scale::parse(p.get("scale"))?;
+        let ctx = ExpCtx::new(scale, p.get_i64("seed")? as u64,
+                              p.get_usize("epochs")?);
+        experiments::run(name, &ctx)
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_zoo() -> i32 {
+    println!("{:<22} {:>12} {:>14} blocks", "preset", "params",
+             "infer params");
+    for name in zoo::names() {
+        let spec = zoo::get(name).unwrap();
+        println!(
+            "{:<22} {:>12} {:>14} {}",
+            name,
+            spec.param_count(),
+            spec.inference_param_count(),
+            spec.blocks.len()
+        );
+    }
+    0
+}
+
+fn cmd_runtime(argv: &[String]) -> i32 {
+    let cmd = Command::new("nitro runtime", "PJRT artifact smoke check")
+        .opt("artifacts", "artifacts", "artifacts root")
+        .opt("preset", "tinycnn", "preset to load");
+    let p = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let run = || -> Result<(), String> {
+        let dir = format!("{}/{}", p.get("artifacts"), p.get("preset"));
+        let mut eng = PjrtEngine::load(&dir, 7)?;
+        let m = eng.manifest.clone();
+        println!("loaded {} blocks + head + infer from {dir} (batch {})",
+                 m.blocks.len(), m.batch);
+        let mut rng = Pcg32::new(1);
+        let mut shape = vec![m.batch];
+        shape.extend(&m.input_shape);
+        let n: usize = shape.iter().product();
+        let x = nitro::tensor::ITensor::from_vec(
+            &shape, (0..n).map(|_| rng.range_i32(-127, 127)).collect());
+        let labels: Vec<usize> =
+            (0..m.batch).map(|i| i % m.num_classes).collect();
+        let hp = Hyper::default();
+        let (block_loss, head_loss, _) = eng.train_batch(&x, &labels, &hp);
+        println!("train step OK: block losses {block_loss:?}, head {head_loss}");
+        let yhat = eng.infer(&x);
+        println!("infer OK: yhat shape {:?}", yhat.shape);
+        println!("runtime smoke check PASSED ({})", eng.name());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}

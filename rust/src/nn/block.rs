@@ -1,0 +1,602 @@
+//! Integer local-loss blocks and the NITRO-D network (paper §3.2–3.3).
+//!
+//! Bit-exact mirror of `python/compile/model.py`:
+//! `conv_block_train` / `linear_block_train` / `head_train`. Verified
+//! against `artifacts/golden/<preset>_steps.json` (full 3-step training
+//! traces) in `rust/tests/golden.rs`.
+
+use crate::nn::spec::{BlockSpec, HeadSpec, NetworkSpec};
+use crate::optim::integer_sgd;
+use crate::tensor::{
+    conv2d_i64, conv2d_weight_grad, matmul_a_bt_i64, matmul_at_b_i64,
+    matmul_i64, maxpool2d, maxpool2d_bwd, nitro_relu, nitro_relu_bwd,
+    nitro_scale, one_hot32, rss_loss_grad, scale_factor_linear, ITensor,
+    LTensor,
+};
+use crate::util::rng::Pcg32;
+
+/// Per-step hyper-parameters (paper Table 6/7 names).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    /// Inverse learning rate γ_inv (learning layers & head).
+    pub gamma_inv: i64,
+    /// Inverse decay rate of forward layers η_inv^fw (0 = off).
+    pub eta_fw_inv: i64,
+    /// Inverse decay rate of learning layers η_inv^lr (0 = off).
+    pub eta_lr_inv: i64,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { gamma_inv: 512, eta_fw_inv: 0, eta_lr_inv: 0 }
+    }
+}
+
+/// Forward-pass intermediates needed by the local backward pass.
+pub struct BlockCache {
+    /// Scaled pre-activations (NITRO-ReLU input) — its backward mask.
+    zs: ITensor,
+    /// Shape of the activation before the block's own MaxPool.
+    act_shape: Vec<usize>,
+    /// Block MaxPool argmax (if `pool`).
+    pool_arg: Option<ITensor>,
+    /// Dropout keep-mask over the block output (if dropout enabled).
+    drop_mask: Option<Vec<bool>>,
+    /// Block output after pool/dropout (learning-layer input).
+    pub a_out: ITensor,
+}
+
+/// A stateful integer local-loss block: forward weights + learning-layer
+/// weights.
+pub struct Block {
+    pub spec: BlockSpec,
+    /// Forward-layer weights (conv (O,C,K,K) or linear (M,N)).
+    pub wf: ITensor,
+    /// Learning-layer weights (F, G).
+    pub wl: ITensor,
+    /// Dropout probability in 1/256ths (0 = disabled). Mask-only dropout —
+    /// DESIGN.md interp. #5.
+    pub drop_p256: u32,
+}
+
+impl Block {
+    pub fn new(spec: BlockSpec, rng: &mut Pcg32) -> Self {
+        use crate::nn::init::init_weights;
+        let (wf, wl) = match &spec {
+            BlockSpec::Conv(c) => (
+                init_weights(rng, &c.wf_shape(), c.fan_in()),
+                init_weights(rng, &c.wl_shape(), c.lr_features()),
+            ),
+            BlockSpec::Linear(l) => (
+                init_weights(rng, &l.wf_shape(), l.fan_in()),
+                init_weights(rng, &l.wl_shape(), l.out_features),
+            ),
+        };
+        Block { spec, wf, wl, drop_p256: 0 }
+    }
+
+    /// Inference forward (no dropout, no cache).
+    pub fn forward(&self, a: &ITensor) -> ITensor {
+        match &self.spec {
+            BlockSpec::Conv(c) => {
+                let z = conv2d_i64(a, &self.wf, c.padding);
+                let zs = nitro_scale(&z, c.sf());
+                let act = nitro_relu(&zs, c.alpha_inv);
+                if c.pool {
+                    maxpool2d(&act, 2, 2).0
+                } else {
+                    act
+                }
+            }
+            BlockSpec::Linear(l) => {
+                let z = matmul_i64(a, &self.wf);
+                let zs = nitro_scale(&z, l.sf());
+                nitro_relu(&zs, l.alpha_inv)
+            }
+        }
+    }
+
+    /// Training forward: returns output + backward cache. Dropout is drawn
+    /// from `rng` when `drop_p256 > 0`.
+    pub fn forward_train(&self, a: &ITensor, rng: Option<&mut Pcg32>)
+                         -> BlockCache {
+        let (zs, act_shape, pool_arg, mut out) = match &self.spec {
+            BlockSpec::Conv(c) => {
+                let z = conv2d_i64(a, &self.wf, c.padding);
+                let zs = nitro_scale(&z, c.sf());
+                let act = nitro_relu(&zs, c.alpha_inv);
+                let act_shape = act.shape.clone();
+                if c.pool {
+                    let (p, arg) = maxpool2d(&act, 2, 2);
+                    (zs, act_shape, Some(arg), p)
+                } else {
+                    (zs, act_shape, None, act)
+                }
+            }
+            BlockSpec::Linear(l) => {
+                let z = matmul_i64(a, &self.wf);
+                let zs = nitro_scale(&z, l.sf());
+                let act = nitro_relu(&zs, l.alpha_inv);
+                let act_shape = act.shape.clone();
+                (zs, act_shape, None, act)
+            }
+        };
+
+        let drop_mask = if self.drop_p256 > 0 {
+            let rng = rng.expect("dropout requires an RNG");
+            let mask: Vec<bool> = (0..out.len())
+                .map(|_| rng.below(256) >= self.drop_p256)
+                .collect();
+            for (v, &keep) in out.data.iter_mut().zip(&mask) {
+                if !keep {
+                    *v = 0;
+                }
+            }
+            Some(mask)
+        } else {
+            None
+        };
+        BlockCache { zs, act_shape, pool_arg, drop_mask, a_out: out }
+    }
+
+    /// Local backward + IntegerSGD updates given the cached forward.
+    /// Returns the local RSS loss sum. Gradients never leave the block.
+    pub fn backward_step(&mut self, a_in: &ITensor, cache: &BlockCache,
+                         y32: &ITensor, hp: &Hyper) -> i64 {
+        let af = 64 * self.spec.num_classes() as i64;
+        // ---- learning layers ------------------------------------------
+        let (feat, lr_arg, pooled_shape) = adaptive_pool(&cache.a_out, &self.spec);
+        let zl = matmul_i64(&feat, &self.wl);
+        let yhat = nitro_scale(&zl, scale_factor_linear(feat.shape[1]));
+        let (loss, grad_l) = rss_loss_grad(&yhat, y32);
+        let gw_l = matmul_at_b_i64(&feat, &grad_l); // featᵀ·∇L (F,G)
+        let dfeat = matmul_a_bt_i64(&grad_l, &self.wl).to_i32(); // ∇L·Wᵀ
+        integer_sgd(&mut self.wl, &gw_l, hp.gamma_inv, hp.eta_lr_inv);
+
+        // ---- delta^fw back through the forward layers ------------------
+        // learning-head scaling backward = STE (identity)
+        let mut d = adaptive_pool_bwd(&dfeat, lr_arg.as_ref(), &pooled_shape,
+                                      &cache.a_out.shape, &self.spec);
+        if let Some(mask) = &cache.drop_mask {
+            for (v, &keep) in d.data.iter_mut().zip(mask) {
+                if !keep {
+                    *v = 0;
+                }
+            }
+        }
+        if let Some(arg) = &cache.pool_arg {
+            d = maxpool2d_bwd(&d, arg, &cache.act_shape, 2, 2);
+        }
+        let alpha_inv = match &self.spec {
+            BlockSpec::Conv(c) => c.alpha_inv,
+            BlockSpec::Linear(l) => l.alpha_inv,
+        };
+        let d = nitro_relu_bwd(&cache.zs, &d, alpha_inv);
+        // NITRO scaling backward = STE (identity)
+        let gw_f: LTensor = match &self.spec {
+            BlockSpec::Conv(c) => conv2d_weight_grad(a_in, &d, c.kernel, c.padding),
+            BlockSpec::Linear(_) => matmul_at_b_i64(a_in, &d),
+        };
+        // forward layers: γ_inv^fw = γ_inv^lr · AF (DESIGN.md interp. #1)
+        integer_sgd(&mut self.wf, &gw_f, hp.gamma_inv * af, hp.eta_fw_inv);
+        loss
+    }
+
+    /// Convenience: forward + backward in one call (sequential mode).
+    pub fn train_step(&mut self, a_in: &ITensor, y32: &ITensor, hp: &Hyper,
+                      rng: Option<&mut Pcg32>) -> (ITensor, i64) {
+        let cache = self.forward_train(a_in, rng);
+        let loss = self.backward_step(a_in, &cache, y32, hp);
+        (cache.a_out, loss)
+    }
+}
+
+/// Adaptive max-pool for conv-block learning layers (identity flatten for
+/// linear blocks). Mirrors `model._adaptive_pool`.
+pub fn adaptive_pool(a_out: &ITensor, spec: &BlockSpec)
+                     -> (ITensor, Option<ITensor>, Vec<usize>) {
+    match spec {
+        BlockSpec::Linear(_) => {
+            let (b, f) = a_out.batch_feat();
+            (a_out.clone().reshaped(&[b, f]), None, a_out.shape.clone())
+        }
+        BlockSpec::Conv(c) => {
+            let (s, k) = c.lr_pool();
+            let (b, ch, h, w) = (a_out.shape[0], a_out.shape[1],
+                                 a_out.shape[2], a_out.shape[3]);
+            if k <= 1 && h == s && w == s {
+                return (a_out.clone().reshaped(&[b, ch * s * s]), None,
+                        a_out.shape.clone());
+            }
+            let k = k.max(1);
+            let (pooled, arg) = maxpool2d(a_out, k, k);
+            // keep the top-left s x s windows (remainder gets no gradient)
+            let (ph, pw) = (pooled.shape[2], pooled.shape[3]);
+            let mut feat = vec![0i32; b * ch * s * s];
+            let mut args = vec![0i32; b * ch * s * s];
+            for bc in 0..b * ch {
+                for oy in 0..s {
+                    for ox in 0..s {
+                        feat[bc * s * s + oy * s + ox] =
+                            pooled.data[bc * ph * pw + oy * pw + ox];
+                        args[bc * s * s + oy * s + ox] =
+                            arg.data[bc * ph * pw + oy * pw + ox];
+                    }
+                }
+            }
+            (
+                ITensor::from_vec(&[b, ch * s * s], feat),
+                Some(ITensor::from_vec(&[b, ch, s, s], args)),
+                vec![b, ch, s, s],
+            )
+        }
+    }
+}
+
+/// Backward of [`adaptive_pool`]: scatter dfeat to the argmax positions.
+pub fn adaptive_pool_bwd(dfeat: &ITensor, arg: Option<&ITensor>,
+                         pooled_shape: &[usize], out_shape: &[usize],
+                         spec: &BlockSpec) -> ITensor {
+    match (spec, arg) {
+        (BlockSpec::Linear(_), _) | (BlockSpec::Conv(_), None) => {
+            dfeat.clone().reshaped(out_shape)
+        }
+        (BlockSpec::Conv(c), Some(arg)) => {
+            let (_, k) = c.lr_pool();
+            let k = k.max(1);
+            let (b, ch, s, _) = (pooled_shape[0], pooled_shape[1],
+                                 pooled_shape[2], pooled_shape[3]);
+            let (h, w) = (out_shape[2], out_shape[3]);
+            let mut out = vec![0i32; out_shape.iter().product()];
+            for bc in 0..b * ch {
+                let plane = &mut out[bc * h * w..(bc + 1) * h * w];
+                for oy in 0..s {
+                    for ox in 0..s {
+                        let g = dfeat.data[bc * s * s + oy * s + ox];
+                        let a = arg.data[bc * s * s + oy * s + ox] as usize;
+                        let (ki, kj) = (a / k, a % k);
+                        plane[(oy * k + ki) * w + ox * k + kj] += g;
+                    }
+                }
+            }
+            ITensor::from_vec(out_shape, out)
+        }
+    }
+}
+
+/// The network output layers (Integer Linear -> NITRO scaling), trained on
+/// the global RSS loss.
+pub struct Head {
+    pub spec: HeadSpec,
+    pub wo: ITensor,
+}
+
+impl Head {
+    pub fn new(spec: HeadSpec, rng: &mut Pcg32) -> Self {
+        use crate::nn::init::init_weights;
+        let wo = init_weights(
+            rng,
+            &[spec.in_features, spec.num_classes],
+            spec.fan_in(),
+        );
+        Head { spec, wo }
+    }
+
+    pub fn forward(&self, a: &ITensor) -> ITensor {
+        let z = matmul_i64(a, &self.wo);
+        nitro_scale(&z, self.spec.sf())
+    }
+
+    /// Head step: receives the global loss gradient directly (learning-rate
+    /// role — no amplification factor).
+    pub fn train_step(&mut self, a: &ITensor, y32: &ITensor, hp: &Hyper)
+                      -> (ITensor, i64) {
+        let yhat = self.forward(a);
+        let (loss, grad) = rss_loss_grad(&yhat, y32);
+        let gw = matmul_at_b_i64(a, &grad);
+        integer_sgd(&mut self.wo, &gw, hp.gamma_inv, hp.eta_lr_inv);
+        (yhat, loss)
+    }
+}
+
+/// A full NITRO-D network with its LES training scheduler.
+pub struct Network {
+    pub spec: NetworkSpec,
+    pub blocks: Vec<Block>,
+    pub head: Head,
+}
+
+/// Per-step training report.
+#[derive(Clone, Debug, Default)]
+pub struct StepReport {
+    pub block_loss: Vec<i64>,
+    pub head_loss: i64,
+    pub correct: usize,
+}
+
+impl Network {
+    pub fn new(spec: NetworkSpec, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let blocks = spec
+            .blocks
+            .iter()
+            .map(|b| Block::new(b.clone(), &mut rng))
+            .collect();
+        let head = Head::new(spec.head.clone(), &mut rng);
+        Network { spec, blocks, head }
+    }
+
+    /// Set dropout rates (p_c on conv blocks, p_l on linear blocks),
+    /// probabilities quantized to 1/256ths.
+    pub fn set_dropout(&mut self, p_c: f64, p_l: f64) {
+        for b in &mut self.blocks {
+            b.drop_p256 = match b.spec {
+                BlockSpec::Conv(_) => (p_c * 256.0).round() as u32,
+                BlockSpec::Linear(_) => (p_l * 256.0).round() as u32,
+            };
+        }
+    }
+
+    /// Flatten activations when transitioning conv -> linear.
+    fn maybe_flatten(a: ITensor, next: &BlockSpec) -> ITensor {
+        if matches!(next, BlockSpec::Linear(_)) && a.shape.len() > 2 {
+            let (b, f) = a.batch_feat();
+            a.reshaped(&[b, f])
+        } else {
+            a
+        }
+    }
+
+    /// Integer-only inference. x: (B,C,H,W) or (B,F).
+    pub fn infer(&self, x: &ITensor) -> ITensor {
+        let mut a = x.clone();
+        for blk in &self.blocks {
+            a = Self::maybe_flatten(a, &blk.spec);
+            a = blk.forward(&a);
+        }
+        let (b, f) = a.batch_feat();
+        self.head.forward(&a.reshaped(&[b, f]))
+    }
+
+    /// One training iteration, sequential block order (reference mode).
+    pub fn train_batch(&mut self, x: &ITensor, labels: &[usize], hp: &Hyper,
+                       rng: &mut Pcg32) -> StepReport {
+        let y32 = one_hot32(labels, self.spec.num_classes);
+        let mut report = StepReport::default();
+        let mut a = x.clone();
+        for blk in &mut self.blocks {
+            a = Self::maybe_flatten(a, &blk.spec);
+            let (out, loss) = blk.train_step(&a, &y32, hp, Some(rng));
+            report.block_loss.push(loss);
+            a = out;
+        }
+        let (b, f) = a.batch_feat();
+        let (yhat, head_loss) = self.head.train_step(&a.reshaped(&[b, f]), &y32, hp);
+        report.head_loss = head_loss;
+        report.correct = count_correct(&yhat, labels);
+        report
+    }
+
+    /// One training iteration with the **block-parallel LES scheduler**:
+    /// block `l`'s backward pass (learning layers, gradients, IntegerSGD
+    /// updates) runs on a worker thread while blocks `l+1..L` are still
+    /// doing their forward passes. This exploits the independence the paper
+    /// notes in §3.3 ("the training of all the integer local-loss blocks
+    /// operates independently ... allowing them to be executed in
+    /// parallel"). Results are bit-identical to [`Self::train_batch`]
+    /// because no data crosses block boundaries backwards.
+    pub fn train_batch_parallel(&mut self, x: &ITensor, labels: &[usize],
+                                hp: &Hyper, rng: &mut Pcg32) -> StepReport {
+        let y32 = one_hot32(labels, self.spec.num_classes);
+        let nblocks = self.blocks.len();
+        let mut block_loss = vec![0i64; nblocks];
+        let mut head_out: Option<(ITensor, i64)> = None;
+        let Network { blocks, head, .. } = self;
+        // dropout masks are drawn on the main thread in block order (inside
+        // forward_train), so the RNG stream is identical to sequential mode
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(nblocks);
+            let mut a = x.clone();
+            let y32_ref = &y32;
+            for blk in blocks.iter_mut() {
+                a = Self::maybe_flatten(a, &blk.spec);
+                let cache = blk.forward_train(&a, Some(&mut *rng));
+                let a_in = a;
+                a = cache.a_out.clone();
+                let hp = *hp;
+                handles.push(s.spawn(move || {
+                    blk.backward_step(&a_in, &cache, y32_ref, &hp)
+                }));
+            }
+            let (b, f) = a.batch_feat();
+            head_out = Some(head.train_step(&a.reshaped(&[b, f]), y32_ref, hp));
+            for (i, h) in handles.into_iter().enumerate() {
+                block_loss[i] = h.join().expect("block backward panicked");
+            }
+        });
+        let (yhat, head_loss) = head_out.unwrap();
+        StepReport {
+            block_loss,
+            head_loss,
+            correct: count_correct(&yhat, labels),
+        }
+    }
+
+    /// Count correct argmax predictions over a labelled batch.
+    pub fn eval_batch(&self, x: &ITensor, labels: &[usize]) -> usize {
+        count_correct(&self.infer(x), labels)
+    }
+
+    /// Weight snapshot in block order: wf_0, wl_0, ..., wo. Used by
+    /// checkpointing and the golden trace tests.
+    pub fn weights(&self) -> Vec<(&'static str, &ITensor)> {
+        let mut out = Vec::new();
+        for b in &self.blocks {
+            out.push(("wf", &b.wf));
+            out.push(("wl", &b.wl));
+        }
+        out.push(("wo", &self.head.wo));
+        out
+    }
+}
+
+pub fn count_correct(yhat: &ITensor, labels: &[usize]) -> usize {
+    let (b, g) = (yhat.shape[0], yhat.shape[1]);
+    let mut correct = 0;
+    for i in 0..b {
+        let row = &yhat.data[i * g..(i + 1) * g];
+        let mut best = 0usize;
+        for j in 1..g {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[i] {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    fn toy_batch(rng: &mut Pcg32, spec: &NetworkSpec, b: usize)
+                 -> (ITensor, Vec<usize>) {
+        let mut shape = vec![b];
+        shape.extend(&spec.input_shape);
+        let n: usize = shape.iter().product();
+        let x = ITensor::from_vec(&shape,
+                                  (0..n).map(|_| rng.range_i32(-127, 127)).collect());
+        let labels = (0..b).map(|i| i % spec.num_classes).collect();
+        (x, labels)
+    }
+
+    #[test]
+    fn forward_shapes_tinycnn() {
+        let spec = zoo::get("tinycnn").unwrap();
+        let net = Network::new(spec.clone(), 1);
+        let mut rng = Pcg32::new(2);
+        let (x, _) = toy_batch(&mut rng, &spec, 4);
+        let yhat = net.infer(&x);
+        assert_eq!(yhat.shape, vec![4, 10]);
+    }
+
+    #[test]
+    fn activations_stay_int8_range() {
+        let spec = zoo::get("tinycnn").unwrap();
+        let net = Network::new(spec.clone(), 1);
+        let mut rng = Pcg32::new(2);
+        let (x, _) = toy_batch(&mut rng, &spec, 4);
+        let mut a = x;
+        for blk in &net.blocks {
+            a = Network::maybe_flatten(a, &blk.spec);
+            a = blk.forward(&a);
+            let (lo, hi) = a.minmax();
+            // NITRO-ReLU output range: [-127-mu, 127-mu]
+            assert!(lo >= -300 && hi <= 300, "({lo},{hi})");
+            assert!(a.bitwidth() <= 9);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_sequential_bitexact() {
+        // the load-bearing L3 property: the block-parallel scheduler must
+        // produce byte-identical weights and losses to sequential order.
+        let spec = zoo::get("tinycnn").unwrap();
+        let mut net_a = Network::new(spec.clone(), 7);
+        let mut net_b = Network::new(spec.clone(), 7);
+        let hp = Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 };
+        let mut rng_a = Pcg32::new(9);
+        let mut rng_b = Pcg32::new(9);
+        let mut data_rng = Pcg32::new(11);
+        for _ in 0..3 {
+            let (x, labels) = toy_batch(&mut data_rng, &spec, 6);
+            let ra = net_a.train_batch(&x, &labels, &hp, &mut rng_a);
+            let rb = net_b.train_batch_parallel(&x, &labels, &hp, &mut rng_b);
+            assert_eq!(ra.block_loss, rb.block_loss);
+            assert_eq!(ra.head_loss, rb.head_loss);
+        }
+        for ((na, ta), (nb, tb)) in net_a.weights().iter().zip(net_b.weights())
+        {
+            assert_eq!(na, &nb);
+            assert_eq!(ta, &tb, "weight {na} diverged");
+        }
+    }
+
+    #[test]
+    fn training_learns_separable_toy() {
+        // strongly separable 4-class problem on an MLP block stack
+        let spec = zoo::mlp("toy", &[24, 16], 32, 4);
+        let mut net = Network::new(spec, 3);
+        let hp = Hyper::default();
+        let mut rng = Pcg32::new(5);
+        let mut protos = Vec::new();
+        for _ in 0..4 {
+            protos.push((0..32).map(|_| rng.range_i32(-100, 100)).collect::<Vec<_>>());
+        }
+        let make_batch = |rng: &mut Pcg32| {
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for i in 0..32usize {
+                let c = i % 4;
+                ys.push(c);
+                xs.extend(protos[c].iter().map(|&v: &i32| {
+                    (v + rng.range_i32(-10, 10)).clamp(-127, 127)
+                }));
+            }
+            (ITensor::from_vec(&[32, 32], xs), ys)
+        };
+        let mut first = 0i64;
+        let mut last = 0i64;
+        // integer bootstrap: weights must grow before the scaled
+        // pre-activations carry signal — give it a few hundred steps
+        for step in 0..400 {
+            let (x, y) = make_batch(&mut rng);
+            let rep = net.train_batch(&x, &y, &hp, &mut rng);
+            let total: i64 = rep.head_loss;
+            if step == 0 {
+                first = total;
+            }
+            last = total;
+        }
+        assert!(last < first / 2, "head loss {first} -> {last}");
+        let (x, y) = make_batch(&mut rng);
+        let correct = net.eval_batch(&x, &y);
+        assert!(correct >= 20, "accuracy {correct}/32");
+    }
+
+    #[test]
+    fn dropout_masks_applied_and_eval_identity() {
+        let spec = zoo::get("tinycnn").unwrap();
+        let mut net = Network::new(spec.clone(), 1);
+        net.set_dropout(0.5, 0.5);
+        let mut rng = Pcg32::new(2);
+        let (x, labels) = toy_batch(&mut rng, &spec, 4);
+        let hp = Hyper::default();
+        // train path: some outputs zeroed
+        let cache = net.blocks[0].forward_train(&x, Some(&mut rng));
+        let zeros = cache.a_out.data.iter().filter(|&&v| v == 0).count();
+        assert!(zeros > cache.a_out.len() / 4, "dropout not applied");
+        // eval path unaffected by drop_p256
+        let _ = net.train_batch(&x, &labels, &hp, &mut rng);
+        let y1 = net.infer(&x);
+        let y2 = net.infer(&x);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn head_updates_move_weights() {
+        let mut rng = Pcg32::new(1);
+        let mut head = Head::new(HeadSpec { in_features: 8, num_classes: 3 },
+                                 &mut rng);
+        let before = head.wo.clone();
+        let a = ITensor::from_vec(&[2, 8], (0..16).map(|v| v * 7 - 50).collect());
+        let y32 = one_hot32(&[0, 2], 3);
+        let hp = Hyper { gamma_inv: 8, eta_fw_inv: 0, eta_lr_inv: 0 };
+        head.train_step(&a, &y32, &hp);
+        assert_ne!(before, head.wo);
+    }
+}

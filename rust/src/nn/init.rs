@@ -1,0 +1,55 @@
+//! Integer Kaiming initialization (paper App. B.1).
+//!
+//! `b = floor(128 · 1732 / (isqrt(fan_in) · 1000))`, weights drawn from the
+//! discrete uniform U(−b, b); biases are disabled everywhere (the NITRO
+//! scaling truncation would erase them — App. B.1).
+
+use crate::tensor::{ITensor, Tensor};
+use crate::util::{isqrt, rng::Pcg32};
+
+/// Integer Kaiming bound. Mirrors `ref.kaiming_bound`.
+pub fn kaiming_bound(fan_in: usize) -> i32 {
+    ((128 * 1732) / (isqrt(fan_in as u64) as i64 * 1000)).max(1) as i32
+}
+
+/// Draw an int32 weight tensor U(−b, b) inclusive.
+pub fn init_weights(rng: &mut Pcg32, shape: &[usize], fan_in: usize) -> ITensor {
+    let b = kaiming_bound(fan_in);
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_i32(-b, b)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_matches_python_ref() {
+        // pinned against ref.kaiming_bound in python tests
+        assert_eq!(kaiming_bound(784), (128 * 1732) / (28 * 1000));
+        assert_eq!(kaiming_bound(9), (128 * 1732) / (3 * 1000));
+        assert_eq!(kaiming_bound(1_000_000), 1); // never 0 — dead layer guard
+    }
+
+    #[test]
+    fn init_within_bound_and_covers_range() {
+        let mut rng = Pcg32::new(5);
+        let b = kaiming_bound(64);
+        let w = init_weights(&mut rng, &[64, 64], 64);
+        let (lo, hi) = w.minmax();
+        assert!(lo >= -b && hi <= b);
+        assert_eq!(lo, -b, "uniform should hit the bound over 4096 draws");
+        assert_eq!(hi, b);
+        // roughly centered
+        let mean = w.data.iter().map(|&v| v as i64).sum::<i64>() as f64
+            / w.len() as f64;
+        assert!(mean.abs() < b as f64 * 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = init_weights(&mut Pcg32::new(1), &[10, 10], 100);
+        let b = init_weights(&mut Pcg32::new(1), &[10, 10], 100);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,11 @@
+//! NITRO-D network components (paper §3.2): integer local-loss blocks,
+//! output head, integer Kaiming init, and the model zoo.
+
+pub mod block;
+pub mod init;
+pub mod probe;
+pub mod spec;
+pub mod zoo;
+
+pub use block::{Block, BlockCache, Head, Hyper, Network};
+pub use spec::{BlockSpec, ConvSpec, HeadSpec, LinearSpec, NetworkSpec};

@@ -1,0 +1,132 @@
+//! Bit-width probes for the App. E.3 claims: weights fit int16;
+//! intermediate pre-activations z_l and backward deltas may exceed int16
+//! but stay within int32. These probes measure, rather than assume, both
+//! claims on a live network + batch.
+
+use crate::nn::block::adaptive_pool;
+use crate::nn::spec::BlockSpec;
+use crate::nn::Network;
+use crate::tensor::{
+    conv2d_i64, matmul_a_bt_i64, matmul_i64, nitro_relu, nitro_scale,
+    one_hot32, rss_loss_grad, scale_factor_linear, ITensor,
+};
+
+/// Bits needed for an i64 slice in two's complement.
+fn bits_i64(xs: &[i64]) -> u32 {
+    xs.iter()
+        .map(|&v| {
+            let m = if v < 0 { !v } else { v } as u64;
+            64 - m.leading_zeros() + 1
+        })
+        .max()
+        .unwrap_or(1)
+}
+
+#[derive(Clone, Debug)]
+pub struct BlockProbe {
+    pub block: usize,
+    /// Pre-activation z_l (before the NITRO scaling layer).
+    pub preact_bits: u32,
+    /// Block output activation a_l.
+    pub act_bits: u32,
+    /// delta^fw entering the forward layers (learning-layer backward).
+    pub delta_bits: u32,
+    /// Forward weights.
+    pub weight_bits: u32,
+}
+
+/// Run one forward pass (+ the learning-layer gradient of each block) and
+/// record the bit-width of every intermediate the paper's App. E.3
+/// discusses. Read-only: no weights are updated.
+pub fn probe_network(net: &Network, x: &ITensor, labels: &[usize])
+                     -> Vec<BlockProbe> {
+    let y32 = one_hot32(labels, net.spec.num_classes);
+    let mut probes = Vec::new();
+    let mut a = x.clone();
+    for (bi, blk) in net.blocks.iter().enumerate() {
+        if matches!(blk.spec, BlockSpec::Linear(_)) && a.shape.len() > 2 {
+            let (b, f) = a.batch_feat();
+            a = a.reshaped(&[b, f]);
+        }
+        let (z_bits, out) = match &blk.spec {
+            BlockSpec::Conv(c) => {
+                let z = conv2d_i64(&a, &blk.wf, c.padding);
+                let zs = nitro_scale(&z, c.sf());
+                let act = nitro_relu(&zs, c.alpha_inv);
+                let out = if c.pool {
+                    crate::tensor::maxpool2d(&act, 2, 2).0
+                } else {
+                    act
+                };
+                (bits_i64(&z.data), out)
+            }
+            BlockSpec::Linear(l) => {
+                let z = matmul_i64(&a, &blk.wf);
+                let zs = nitro_scale(&z, l.sf());
+                (bits_i64(&z.data), nitro_relu(&zs, l.alpha_inv))
+            }
+        };
+        // learning-layer gradient magnitude (delta^fw before unpooling)
+        let (feat, _, _) = adaptive_pool(&out, &blk.spec);
+        let zl = matmul_i64(&feat, &blk.wl);
+        let yhat = nitro_scale(&zl, scale_factor_linear(feat.shape[1]));
+        let (_, grad_l) = rss_loss_grad(&yhat, &y32);
+        let dfeat = matmul_a_bt_i64(&grad_l, &blk.wl);
+        probes.push(BlockProbe {
+            block: bi,
+            preact_bits: z_bits,
+            act_bits: out.bitwidth(),
+            delta_bits: bits_i64(&dfeat.data),
+            weight_bits: blk.wf.bitwidth(),
+        });
+        a = out;
+    }
+    probes
+}
+
+/// The App. E.3 verdict over a probe set: (weights_int16, intermediates_int32).
+pub fn verdict(probes: &[BlockProbe]) -> (bool, bool) {
+    let w16 = probes.iter().all(|p| p.weight_bits <= 16);
+    let i32ok = probes
+        .iter()
+        .all(|p| p.preact_bits <= 32 && p.delta_bits <= 32 && p.act_bits <= 32);
+    (w16, i32ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn probe_fresh_network() {
+        let spec = zoo::get("tinycnn").unwrap();
+        let net = Network::new(spec.clone(), 3);
+        let mut rng = Pcg32::new(1);
+        let x = ITensor::from_vec(
+            &[4, 1, 8, 8],
+            (0..256).map(|_| rng.range_i32(-127, 127)).collect(),
+        );
+        let probes = probe_network(&net, &x, &[0, 1, 2, 3]);
+        assert_eq!(probes.len(), 3);
+        for p in &probes {
+            // activations int8-ish, pre-activations well under int32
+            assert!(p.act_bits <= 9, "{p:?}");
+            assert!(p.preact_bits <= 32, "{p:?}");
+            assert!(p.weight_bits <= 8, "{p:?}"); // Kaiming init is tiny
+        }
+        let (w16, i32ok) = verdict(&probes);
+        assert!(w16 && i32ok);
+    }
+
+    #[test]
+    fn bits_i64_twos_complement() {
+        assert_eq!(bits_i64(&[0]), 1);
+        assert_eq!(bits_i64(&[-128]), 8);
+        assert_eq!(bits_i64(&[127]), 8);
+        assert_eq!(bits_i64(&[i64::from(i32::MAX)]), 32);
+        assert_eq!(bits_i64(&[i64::from(i32::MIN)]), 32);
+        assert_eq!(bits_i64(&[i64::from(i32::MAX) + 1]), 33);
+    }
+}

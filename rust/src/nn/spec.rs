@@ -1,0 +1,229 @@
+//! Topology specifications — the Rust mirror of `python/compile/model.py`
+//! dataclasses. Every derived constant (SF, mu, AF, adaptive-pool geometry)
+//! is computed identically in both languages and cross-checked against the
+//! artifact manifests.
+
+use crate::tensor::{scale_factor_conv, scale_factor_linear};
+use crate::util::isqrt;
+
+pub const DEFAULT_ALPHA_INV: i64 = 10; // LeakyReLU slope 0.1
+
+/// One integer convolutional local-loss block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvSpec {
+    pub in_channels: usize,
+    pub out_channels: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub kernel: usize,
+    pub padding: usize,
+    /// 2x2/s2 MaxPool after the activation.
+    pub pool: bool,
+    pub alpha_inv: i64,
+    /// Learning-layers input-feature budget (paper §4.3, d^lr).
+    pub d_lr: usize,
+    pub num_classes: usize,
+}
+
+impl ConvSpec {
+    pub fn conv_h(&self) -> usize {
+        self.in_h + 2 * self.padding - self.kernel + 1
+    }
+
+    pub fn conv_w(&self) -> usize {
+        self.in_w + 2 * self.padding - self.kernel + 1
+    }
+
+    pub fn out_h(&self) -> usize {
+        if self.pool { self.conv_h() / 2 } else { self.conv_h() }
+    }
+
+    pub fn out_w(&self) -> usize {
+        if self.pool { self.conv_w() / 2 } else { self.conv_w() }
+    }
+
+    /// NITRO scaling factor: 2^8 · K² · C_in.
+    pub fn sf(&self) -> i64 {
+        scale_factor_conv(self.kernel, self.in_channels)
+    }
+
+    /// Adaptive max-pool geometry for the learning layers:
+    /// target side `s = max(1, isqrt(d_lr / C_out))` clamped to the map,
+    /// window `k = floor(min(H,W) / s)` (DESIGN.md interp. #3).
+    pub fn lr_pool(&self) -> (usize, usize) {
+        let s = isqrt((self.d_lr / self.out_channels).max(1) as u64) as usize;
+        let s = s.max(1).min(self.out_h()).min(self.out_w());
+        let k = self.out_h().min(self.out_w()) / s;
+        (s, k)
+    }
+
+    pub fn lr_features(&self) -> usize {
+        let (s, _) = self.lr_pool();
+        self.out_channels * s * s
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.in_channels * self.kernel * self.kernel
+    }
+
+    pub fn wf_shape(&self) -> Vec<usize> {
+        vec![self.out_channels, self.in_channels, self.kernel, self.kernel]
+    }
+
+    pub fn wl_shape(&self) -> Vec<usize> {
+        vec![self.lr_features(), self.num_classes]
+    }
+}
+
+/// One integer linear local-loss block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinearSpec {
+    pub in_features: usize,
+    pub out_features: usize,
+    pub alpha_inv: i64,
+    pub num_classes: usize,
+}
+
+impl LinearSpec {
+    pub fn sf(&self) -> i64 {
+        scale_factor_linear(self.in_features)
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.in_features
+    }
+
+    pub fn wf_shape(&self) -> Vec<usize> {
+        vec![self.in_features, self.out_features]
+    }
+
+    pub fn wl_shape(&self) -> Vec<usize> {
+        vec![self.out_features, self.num_classes]
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum BlockSpec {
+    Conv(ConvSpec),
+    Linear(LinearSpec),
+}
+
+impl BlockSpec {
+    pub fn num_classes(&self) -> usize {
+        match self {
+            BlockSpec::Conv(c) => c.num_classes,
+            BlockSpec::Linear(l) => l.num_classes,
+        }
+    }
+
+    pub fn out_features(&self) -> usize {
+        match self {
+            BlockSpec::Conv(c) => c.out_channels * c.out_h() * c.out_w(),
+            BlockSpec::Linear(l) => l.out_features,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        let (wf, wl) = match self {
+            BlockSpec::Conv(c) => (c.wf_shape(), c.wl_shape()),
+            BlockSpec::Linear(l) => (l.wf_shape(), l.wl_shape()),
+        };
+        wf.iter().product::<usize>() + wl.iter().product::<usize>()
+    }
+}
+
+/// Output layers: Integer Linear -> NITRO scaling, trained on the global
+/// loss.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeadSpec {
+    pub in_features: usize,
+    pub num_classes: usize,
+}
+
+impl HeadSpec {
+    pub fn sf(&self) -> i64 {
+        scale_factor_linear(self.in_features)
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.in_features
+    }
+}
+
+/// A full NITRO-D network.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkSpec {
+    pub name: String,
+    /// (C, H, W) for CNNs, (F,) for MLPs.
+    pub input_shape: Vec<usize>,
+    pub blocks: Vec<BlockSpec>,
+    pub head: HeadSpec,
+    pub num_classes: usize,
+}
+
+impl NetworkSpec {
+    /// NITRO Amplification Factor AF = 2^6 · G (paper §3.3).
+    pub fn amplification_factor(&self) -> i64 {
+        64 * self.num_classes as i64
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.blocks.iter().map(|b| b.param_count()).sum::<usize>()
+            + self.head.in_features * self.head.num_classes
+    }
+
+    /// Parameters kept at inference (learning layers dropped — App. E.3).
+    pub fn inference_param_count(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| match b {
+                BlockSpec::Conv(c) => c.wf_shape().iter().product::<usize>(),
+                BlockSpec::Linear(l) => l.wf_shape().iter().product(),
+            })
+            .sum::<usize>()
+            + self.head.in_features * self.head.num_classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    #[test]
+    fn conv_spec_geometry() {
+        let c = ConvSpec {
+            in_channels: 3,
+            out_channels: 128,
+            in_h: 32,
+            in_w: 32,
+            kernel: 3,
+            padding: 1,
+            pool: true,
+            alpha_inv: 10,
+            d_lr: 4096,
+            num_classes: 10,
+        };
+        assert_eq!((c.conv_h(), c.conv_w()), (32, 32));
+        assert_eq!((c.out_h(), c.out_w()), (16, 16));
+        assert_eq!(c.sf(), 256 * 9 * 3);
+        // d_lr/C = 32 -> s = isqrt(32) = 5, k = 16/5 = 3
+        assert_eq!(c.lr_pool(), (5, 3));
+        assert_eq!(c.lr_features(), 128 * 25);
+    }
+
+    #[test]
+    fn af_matches_paper() {
+        let spec = zoo::get("vgg8b").unwrap();
+        assert_eq!(spec.amplification_factor(), 640);
+    }
+
+    #[test]
+    fn vgg8b_param_count_plausible() {
+        // ~8.9M conv/linear forward params, VGG8B-scale
+        let spec = zoo::get("vgg8b").unwrap();
+        let p = spec.inference_param_count();
+        assert!(p > 7_000_000 && p < 13_000_000, "{p}");
+        assert!(spec.param_count() > p);
+    }
+}

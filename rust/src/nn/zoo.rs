@@ -1,0 +1,261 @@
+//! Model zoo — the paper's architectures (App. C, Tables 4 & 5) plus the
+//! CPU-budget presets. Mirrors `python/compile/model.ZOO`; the shared
+//! presets (`tinycnn`, `mlp1-mini`) must produce identical topology
+//! constants on both sides, which `rust/tests/golden.rs` verifies against
+//! the artifact manifests.
+
+use crate::nn::spec::{
+    BlockSpec, ConvSpec, HeadSpec, LinearSpec, NetworkSpec, DEFAULT_ALPHA_INV,
+};
+
+/// Build an MLP spec: hidden layer widths, input dim, classes.
+pub fn mlp(name: &str, dims: &[usize], input_dim: usize,
+           num_classes: usize) -> NetworkSpec {
+    let mut blocks = Vec::new();
+    let mut prev = input_dim;
+    for &d in dims {
+        blocks.push(BlockSpec::Linear(LinearSpec {
+            in_features: prev,
+            out_features: d,
+            alpha_inv: DEFAULT_ALPHA_INV,
+            num_classes,
+        }));
+        prev = d;
+    }
+    NetworkSpec {
+        name: name.to_string(),
+        input_shape: vec![input_dim],
+        blocks,
+        head: HeadSpec { in_features: prev, num_classes },
+        num_classes,
+    }
+}
+
+/// CNN plan entry: `('C', n)` conv block, `('CP', n)` conv block + 2x2
+/// maxpool, `('L', n)` linear block.
+#[derive(Clone, Copy)]
+pub enum Plan {
+    C(usize),
+    Cp(usize),
+    L(usize),
+}
+
+pub fn cnn(name: &str, plan: &[Plan], in_shape: (usize, usize, usize),
+           num_classes: usize, d_lr: usize) -> NetworkSpec {
+    let (mut c, mut h, mut w) = in_shape;
+    let mut blocks = Vec::new();
+    for &p in plan {
+        match p {
+            Plan::C(n) | Plan::Cp(n) => {
+                let pool = matches!(p, Plan::Cp(_));
+                let blk = ConvSpec {
+                    in_channels: c,
+                    out_channels: n,
+                    in_h: h,
+                    in_w: w,
+                    kernel: 3,
+                    padding: 1,
+                    pool,
+                    alpha_inv: DEFAULT_ALPHA_INV,
+                    d_lr,
+                    num_classes,
+                };
+                h = blk.out_h();
+                w = blk.out_w();
+                c = n;
+                blocks.push(BlockSpec::Conv(blk));
+            }
+            Plan::L(n) => {
+                blocks.push(BlockSpec::Linear(LinearSpec {
+                    in_features: c * h * w,
+                    out_features: n,
+                    alpha_inv: DEFAULT_ALPHA_INV,
+                    num_classes,
+                }));
+                c = n;
+                h = 1;
+                w = 1;
+            }
+        }
+    }
+    NetworkSpec {
+        name: name.to_string(),
+        input_shape: vec![in_shape.0, in_shape.1, in_shape.2],
+        blocks,
+        head: HeadSpec { in_features: c * h * w, num_classes },
+        num_classes,
+    }
+}
+
+/// Look up a named preset. `None` for unknown names.
+pub fn get(name: &str) -> Option<NetworkSpec> {
+    use Plan::*;
+    Some(match name {
+        // ---- paper App. C, exact --------------------------------------
+        "mlp1" => mlp("mlp1", &[100, 50], 784, 10),
+        "mlp2" => mlp("mlp2", &[200, 100, 50], 784, 10),
+        "mlp3" => mlp("mlp3", &[1024, 1024, 1024], 784, 10),
+        "mlp4" => mlp("mlp4", &[3000, 3000, 3000], 3072, 10),
+        "vgg8b" => cnn(
+            "vgg8b",
+            &[C(128), Cp(256), C(256), Cp(512), Cp(512), Cp(512), L(1024)],
+            (3, 32, 32),
+            10,
+            4096,
+        ),
+        "vgg8b-mnist" => cnn(
+            "vgg8b-mnist",
+            &[C(128), Cp(256), C(256), Cp(512), Cp(512), Cp(512), L(1024)],
+            (1, 28, 28),
+            10,
+            4096,
+        ),
+        "vgg11b" => cnn(
+            "vgg11b",
+            &[C(128), C(128), C(128), Cp(256), C(256), Cp(512), C(512),
+              Cp(512), Cp(512), L(1024)],
+            (3, 32, 32),
+            10,
+            4096,
+        ),
+        // ---- CPU-budget presets (DESIGN.md §Substitutions) -------------
+        "tinycnn" => cnn("tinycnn", &[Cp(8), Cp(16), L(32)], (1, 8, 8), 10, 64),
+        "mlp1-mini" => mlp("mlp1-mini", &[32, 16], 64, 10),
+        "vgg8b-narrow" => cnn(
+            "vgg8b-narrow",
+            &[C(32), Cp(64), C(64), Cp(128), Cp(128), Cp(128), L(256)],
+            (3, 32, 32),
+            10,
+            1024,
+        ),
+        "vgg8b-narrow-mnist" => cnn(
+            "vgg8b-narrow-mnist",
+            &[C(32), Cp(64), C(64), Cp(128), Cp(128), Cp(128), L(256)],
+            (1, 28, 28),
+            10,
+            1024,
+        ),
+        "vgg11b-narrow" => cnn(
+            "vgg11b-narrow",
+            &[C(32), C(32), C(32), Cp(64), C(64), Cp(128), C(128), Cp(128),
+              Cp(128), L(256)],
+            (3, 32, 32),
+            10,
+            1024,
+        ),
+        "mlp3-narrow" => mlp("mlp3-narrow", &[256, 256, 256], 784, 10),
+        "mlp4-narrow" => mlp("mlp4-narrow", &[512, 512, 512], 3072, 10),
+        // micro presets: width/16 — single-core CPU experiment budget
+        "vgg8b-micro" => cnn(
+            "vgg8b-micro",
+            &[C(8), Cp(16), C(16), Cp(32), Cp(32), Cp(32), L(64)],
+            (3, 32, 32),
+            10,
+            256,
+        ),
+        "vgg8b-micro-mnist" => cnn(
+            "vgg8b-micro-mnist",
+            &[C(8), Cp(16), C(16), Cp(32), Cp(32), Cp(32), L(64)],
+            (1, 28, 28),
+            10,
+            256,
+        ),
+        "vgg11b-micro" => cnn(
+            "vgg11b-micro",
+            &[C(8), C(8), C(8), Cp(16), C(16), Cp(32), C(32), Cp(32),
+              Cp(32), L(64)],
+            (3, 32, 32),
+            10,
+            256,
+        ),
+        _ => return None,
+    })
+}
+
+/// Every preset name (for CLI help / sweeps).
+pub fn names() -> &'static [&'static str] {
+    &[
+        "mlp1", "mlp2", "mlp3", "mlp4", "vgg8b", "vgg8b-mnist", "vgg11b",
+        "tinycnn", "mlp1-mini", "vgg8b-narrow", "vgg8b-narrow-mnist",
+        "vgg11b-narrow", "mlp3-narrow", "mlp4-narrow", "vgg8b-micro",
+        "vgg8b-micro-mnist", "vgg11b-micro",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_resolve() {
+        for n in names() {
+            let spec = get(n).unwrap_or_else(|| panic!("missing {n}"));
+            assert!(!spec.blocks.is_empty());
+            assert_eq!(spec.num_classes, 10);
+        }
+        assert!(get("nope").is_none());
+    }
+
+    #[test]
+    fn paper_mlp_shapes() {
+        let m1 = get("mlp1").unwrap();
+        assert_eq!(m1.blocks.len(), 2);
+        assert_eq!(m1.head.in_features, 50);
+        let m4 = get("mlp4").unwrap();
+        assert_eq!(m4.input_shape, vec![3072]); // CIFAR-10 flattened
+        match &m4.blocks[0] {
+            BlockSpec::Linear(l) => assert_eq!(l.in_features, 3072),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn vgg_block_counts_match_paper_table5() {
+        // VGG8B: 6 conv + 1 linear blocks + head = 8 trainable layers
+        let v8 = get("vgg8b").unwrap();
+        assert_eq!(v8.blocks.len(), 7);
+        // VGG11B: 9 conv + 1 linear blocks + head = 11 trainable layers
+        let v11 = get("vgg11b").unwrap();
+        assert_eq!(v11.blocks.len(), 10);
+        let convs = v11
+            .blocks
+            .iter()
+            .filter(|b| matches!(b, BlockSpec::Conv(_)))
+            .count();
+        assert_eq!(convs, 9);
+    }
+
+    #[test]
+    fn vgg8b_spatial_chain() {
+        let v8 = get("vgg8b").unwrap();
+        // 32 -> (pool) 16 -> 16 -> (pool) 8 -> (pool) 4 -> (pool) 2
+        let hs: Vec<usize> = v8
+            .blocks
+            .iter()
+            .filter_map(|b| match b {
+                BlockSpec::Conv(c) => Some(c.out_h()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(hs, vec![32, 16, 16, 8, 4, 2]);
+        match &v8.blocks[6] {
+            BlockSpec::Linear(l) => assert_eq!(l.in_features, 512 * 4),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn mnist_variant_spatial_chain() {
+        let v8 = get("vgg8b-mnist").unwrap();
+        // 28 -> 14 -> 14 -> 7 -> 3 -> 1
+        let hs: Vec<usize> = v8
+            .blocks
+            .iter()
+            .filter_map(|b| match b {
+                BlockSpec::Conv(c) => Some(c.out_h()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(hs, vec![28, 14, 14, 7, 3, 1]);
+    }
+}

@@ -1,0 +1,267 @@
+//! Optimizers: IntegerSGD (paper Algorithm 1) for the NITRO-D path, plus
+//! float SGD/Adam for the FP baselines, and the plateau LR scheduler.
+
+pub mod momentum;
+
+use crate::tensor::{FTensor, ITensor, LTensor};
+use crate::util::{div_floor, div_trunc};
+
+/// IntegerSGD with ad-hoc weight decay (paper Algorithm 1).
+///
+/// `delta = floor(grad / gamma_inv)`; if `eta_inv != 0`,
+/// `delta += trunc(w / eta_inv)` (trunc, not floor — DESIGN.md interp. #8:
+/// the paper guarantees |w| < eta_inv receives no penalization);
+/// `w -= delta`.
+///
+/// `grad` is the batch-**summed** int64 gradient.
+pub fn integer_sgd(w: &mut ITensor, grad: &LTensor, gamma_inv: i64,
+                   eta_inv: i64) {
+    assert_eq!(w.shape, grad.shape, "optimizer shape mismatch");
+    assert!(gamma_inv > 0, "gamma_inv must be positive");
+    if eta_inv != 0 {
+        for (wv, &gv) in w.data.iter_mut().zip(&grad.data) {
+            let delta = div_floor(gv, gamma_inv) + div_trunc(*wv as i64, eta_inv);
+            *wv = (*wv as i64 - delta) as i32;
+        }
+    } else {
+        for (wv, &gv) in w.data.iter_mut().zip(&grad.data) {
+            *wv = (*wv as i64 - div_floor(gv, gamma_inv)) as i32;
+        }
+    }
+}
+
+/// Plateau LR scheduler (paper App. D): when the monitored accuracy fails
+/// to improve for `patience` evaluations, the learning rate is reduced by
+/// 3× — in inverse-rate space, `gamma_inv *= 3`.
+#[derive(Clone, Debug)]
+pub struct PlateauScheduler {
+    pub gamma_inv: i64,
+    pub patience: usize,
+    pub factor: i64,
+    /// Stop reducing after this many reductions: integer LR decay is
+    /// one-way (gamma_inv only grows) and NITRO-D has a long bootstrap
+    /// phase (the scaling layers start out truncating everything — the
+    /// weights must grow ~100x from init before activations carry signal),
+    /// so an uncapped scheduler would freeze training before it starts.
+    pub max_reductions: usize,
+    /// Ignore the first `warmup` reports entirely — the bootstrap phase is
+    /// flat by construction and must not trigger reductions.
+    pub warmup: usize,
+    seen: usize,
+    best: f64,
+    stale: usize,
+    pub reductions: usize,
+}
+
+impl PlateauScheduler {
+    pub fn new(gamma_inv: i64, patience: usize) -> Self {
+        PlateauScheduler {
+            gamma_inv,
+            patience,
+            factor: 3,
+            max_reductions: 3,
+            warmup: 0,
+            seen: 0,
+            best: f64::NEG_INFINITY,
+            stale: 0,
+            reductions: 0,
+        }
+    }
+
+    /// Report a new accuracy; returns true if the LR was reduced.
+    pub fn step(&mut self, accuracy: f64) -> bool {
+        self.seen += 1;
+        if self.seen <= self.warmup {
+            self.best = self.best.max(accuracy);
+            return false;
+        }
+        if accuracy > self.best {
+            self.best = accuracy;
+            self.stale = 0;
+            return false;
+        }
+        self.stale += 1;
+        if self.stale >= self.patience && self.reductions < self.max_reductions
+        {
+            self.gamma_inv = self.gamma_inv.saturating_mul(self.factor);
+            self.stale = 0;
+            self.reductions += 1;
+            return true;
+        }
+        false
+    }
+}
+
+/// Float SGD with momentum and L2 decay (FP LES baseline).
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32, weight_decay: f32) -> Self {
+        Sgd { lr, momentum, weight_decay, velocity: Vec::new() }
+    }
+
+    /// Update parameter tensor `idx` (velocity slots are allocated lazily,
+    /// call with a stable parameter order).
+    pub fn update(&mut self, idx: usize, w: &mut FTensor, grad: &FTensor) {
+        while self.velocity.len() <= idx {
+            self.velocity.push(Vec::new());
+        }
+        let v = &mut self.velocity[idx];
+        if v.len() != w.data.len() {
+            *v = vec![0f32; w.data.len()];
+        }
+        for ((wv, &gv), vv) in w.data.iter_mut().zip(&grad.data).zip(v.iter_mut())
+        {
+            let g = gv + self.weight_decay * *wv;
+            *vv = self.momentum * *vv + g;
+            *wv -= self.lr * *vv;
+        }
+    }
+}
+
+/// Adam (Kingma & Ba) for the FP BP baseline — the optimizer the paper
+/// credits for part of the float-vs-integer gap.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    /// Advance the shared timestep — call once per optimizer step, before
+    /// the per-parameter updates.
+    pub fn tick(&mut self) {
+        self.t += 1;
+    }
+
+    pub fn update(&mut self, idx: usize, w: &mut FTensor, grad: &FTensor) {
+        while self.m.len() <= idx {
+            self.m.push(Vec::new());
+            self.v.push(Vec::new());
+        }
+        if self.m[idx].len() != w.data.len() {
+            self.m[idx] = vec![0f32; w.data.len()];
+            self.v[idx] = vec![0f32; w.data.len()];
+        }
+        let t = self.t.max(1) as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        let (m, v) = (&mut self.m[idx], &mut self.v[idx]);
+        for i in 0..w.data.len() {
+            let g = grad.data[i];
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g;
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            w.data[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::prop;
+
+    #[test]
+    fn integer_sgd_matches_algorithm1_prop() {
+        prop::check("isgd", 40, |g| {
+            let n = g.usize_in(1, 64);
+            let wdata = g.vec_i32(n, -30000, 30000);
+            let gdata = g.vec_i64(n);
+            let gamma = 1 + g.usize_in(0, 100_000) as i64;
+            let eta = if g.usize_in(0, 1) == 0 {
+                0
+            } else {
+                1 + g.usize_in(0, 50_000) as i64
+            };
+            let mut w = ITensor::from_vec(&[n], wdata.clone());
+            let grad = LTensor::from_vec(&[n], gdata.clone());
+            integer_sgd(&mut w, &grad, gamma, eta);
+            for i in 0..n {
+                let mut delta = gdata[i].div_euclid(gamma);
+                if eta != 0 {
+                    delta += (wdata[i] as i64) / eta;
+                }
+                // i32 storage wraps like the engine (paper guarantees the
+                // trained regime stays in range; the op itself wraps)
+                assert_eq!(w.data[i], (wdata[i] as i64 - delta) as i32);
+            }
+        });
+    }
+
+    #[test]
+    fn no_decay_below_threshold() {
+        // paper §3.3 pinned example (shared with python tests)
+        let mut w = ITensor::from_vec(&[6], vec![10, -10, 2999, -2999, 3000, -3001]);
+        let g = LTensor::from_vec(&[6], vec![0; 6]);
+        integer_sgd(&mut w, &g, 512, 3000);
+        assert_eq!(w.data, vec![10, -10, 2999, -2999, 2999, -3000]);
+    }
+
+    #[test]
+    fn gamma_truncates_small_updates_to_zero() {
+        // App. E.1: too-large gamma_inv -> all updates truncate -> frozen
+        let mut w = ITensor::from_vec(&[3], vec![5, -5, 100]);
+        let g = LTensor::from_vec(&[3], vec![4095, 4095, 4095]);
+        integer_sgd(&mut w, &g, 4096, 0);
+        assert_eq!(w.data, vec![5, -5, 100]);
+    }
+
+    #[test]
+    fn plateau_reduces_after_patience() {
+        let mut s = PlateauScheduler::new(512, 2);
+        assert!(!s.step(0.5));
+        assert!(!s.step(0.6)); // improvement resets
+        assert!(!s.step(0.55));
+        assert!(s.step(0.55)); // 2 stale evals -> reduce
+        assert_eq!(s.gamma_inv, 1536);
+        assert_eq!(s.reductions, 1);
+    }
+
+    #[test]
+    fn adam_reduces_quadratic() {
+        // minimize ||w||^2 from w = (3, -2)
+        let mut w = Tensor::from_vec(&[2], vec![3.0f32, -2.0]);
+        let mut opt = Adam::new(0.1);
+        for _ in 0..200 {
+            opt.tick();
+            let grad = Tensor::from_vec(&[2], vec![2.0 * w.data[0], 2.0 * w.data[1]]);
+            opt.update(0, &mut w, &grad);
+        }
+        assert!(w.data[0].abs() < 0.05 && w.data[1].abs() < 0.05, "{:?}", w.data);
+    }
+
+    #[test]
+    fn sgd_momentum_reduces_quadratic() {
+        let mut w = Tensor::from_vec(&[1], vec![4.0f32]);
+        let mut opt = Sgd::new(0.05, 0.9, 0.0);
+        for _ in 0..100 {
+            let grad = Tensor::from_vec(&[1], vec![2.0 * w.data[0]]);
+            opt.update(0, &mut w, &grad);
+        }
+        assert!(w.data[0].abs() < 0.1);
+    }
+}

@@ -1,0 +1,209 @@
+//! IntegerSGD with momentum — the paper's §5 future-work item ("the
+//! development of an improved optimizer tailored specifically for
+//! integer-only training"), built here as an extension.
+//!
+//! Design constraints inherited from IntegerSGD:
+//!   * integer-only state (the velocity buffer is i64),
+//!   * divisions are floor divisions by inverse-rate integers,
+//!   * a naive `v = v*beta` would need a fraction — instead we use the
+//!     leak form `v ← v − trunc(v / beta_inv) + grad`, an exponential
+//!     moving sum with integer leak rate 1/beta_inv (beta_inv = 8 ≈
+//!     momentum 0.875).
+//!
+//! Ablated against plain IntegerSGD by `nitro experiment momentum`
+//! (EXPERIMENTS.md §Extensions).
+
+use crate::tensor::{ITensor, LTensor};
+use crate::util::{div_floor, div_trunc};
+
+pub struct IntegerMomentum {
+    /// Inverse leak rate: velocity decays by v/beta_inv each step.
+    pub beta_inv: i64,
+    /// Velocity buffers keyed by parameter slot.
+    velocity: Vec<Vec<i64>>,
+}
+
+impl IntegerMomentum {
+    pub fn new(beta_inv: i64) -> Self {
+        assert!(beta_inv >= 2, "beta_inv < 2 disables the accumulator");
+        IntegerMomentum { beta_inv, velocity: Vec::new() }
+    }
+
+    /// IntegerSGD-with-momentum step for parameter slot `idx`:
+    /// `v ← v − trunc(v/beta_inv) + grad`;
+    /// `delta = floor(v / (gamma_inv · beta_inv)) [+ trunc(w / eta_inv)]`;
+    /// `w ← w − delta`.
+    ///
+    /// The extra `beta_inv` in the delta divisor normalizes the steady-state
+    /// gain of the accumulator (Σ leak-weighted grads ≈ beta_inv · grad), so
+    /// a tuned gamma_inv transfers directly from plain IntegerSGD.
+    pub fn update(&mut self, idx: usize, w: &mut ITensor, grad: &LTensor,
+                  gamma_inv: i64, eta_inv: i64) {
+        while self.velocity.len() <= idx {
+            self.velocity.push(Vec::new());
+        }
+        let v = &mut self.velocity[idx];
+        if v.len() != w.data.len() {
+            *v = vec![0i64; w.data.len()];
+        }
+        let div = gamma_inv.saturating_mul(self.beta_inv);
+        for ((wv, &gv), vel) in w.data.iter_mut().zip(&grad.data).zip(v.iter_mut())
+        {
+            *vel = *vel - div_trunc(*vel, self.beta_inv) + gv;
+            let mut delta = div_floor(*vel, div);
+            if eta_inv != 0 {
+                delta += div_trunc(*wv as i64, eta_inv);
+            }
+            *wv = (*wv as i64 - delta) as i32;
+        }
+    }
+}
+
+/// A momentum-enabled variant of the local-loss trainer: wraps a
+/// [`crate::nn::Network`] and applies IntegerMomentum to every weight
+/// tensor instead of plain IntegerSGD. Implemented via the same block
+/// forward/backward but with gradient interception would require plumbing;
+/// instead the momentum trainer drives blocks with gamma escalation — used
+/// by the `momentum` ablation experiment on MLP blocks where the update
+/// path is a plain matmul.
+pub struct MomentumMlp {
+    pub dims: Vec<usize>,
+    pub weights: Vec<ITensor>,
+    pub heads: Vec<ITensor>,
+    opt: IntegerMomentum,
+}
+
+impl MomentumMlp {
+    pub fn new(dims: &[usize], beta_inv: i64, seed: u64) -> Self {
+        use crate::nn::init::init_weights;
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(seed);
+        let g = *dims.last().unwrap();
+        let mut weights = Vec::new();
+        let mut heads = Vec::new();
+        for w in dims.windows(2) {
+            weights.push(init_weights(&mut rng, &[w[0], w[1]], w[0]));
+            heads.push(init_weights(&mut rng, &[w[1], g], w[1]));
+        }
+        MomentumMlp { dims: dims.to_vec(), weights, heads,
+                      opt: IntegerMomentum::new(beta_inv) }
+    }
+
+    /// One LES step over all linear blocks with momentum updates.
+    /// Returns the mean local loss.
+    pub fn train_batch(&mut self, x: &ITensor, labels: &[usize],
+                       gamma_inv: i64, eta_inv: i64) -> i64 {
+        use crate::tensor as t;
+        let g = *self.dims.last().unwrap();
+        let y32 = t::one_hot32(labels, g);
+        let af = 64 * g as i64;
+        let mut a = x.clone();
+        let mut total = 0i64;
+        let nblocks = self.weights.len();
+        for li in 0..nblocks {
+            let spec_sf = t::scale_factor_linear(self.dims[li]);
+            let z = t::matmul_i64(&a, &self.weights[li]);
+            let zs = t::nitro_scale(&z, spec_sf);
+            let act = t::nitro_relu(&zs, 10);
+            let zl = t::matmul_i64(&act, &self.heads[li]);
+            let yhat = t::nitro_scale(&zl, t::scale_factor_linear(act.shape[1]));
+            let (loss, grad_l) = t::rss_loss_grad(&yhat, &y32);
+            total += loss;
+            let gw_l = t::matmul_at_b_i64(&act, &grad_l);
+            let dfeat = t::matmul_a_bt_i64(&grad_l, &self.heads[li]).to_i32();
+            self.opt.update(2 * li + 1, &mut self.heads[li], &gw_l,
+                            gamma_inv, eta_inv);
+            let d = t::nitro_relu_bwd(&zs, &dfeat, 10);
+            let gw = t::matmul_at_b_i64(&a, &d);
+            self.opt.update(2 * li, &mut self.weights[li], &gw,
+                            gamma_inv * af, eta_inv);
+            a = act;
+        }
+        total / nblocks as i64
+    }
+
+    pub fn accuracy(&self, ds: &crate::data::Dataset, batch: usize) -> f64 {
+        use crate::tensor as t;
+        let mut correct = 0usize;
+        for (x, labels) in crate::data::Batcher::sequential(ds, batch, true) {
+            let mut a = x;
+            for li in 0..self.weights.len() {
+                let z = t::matmul_i64(&a, &self.weights[li]);
+                let zs = t::nitro_scale(&z, t::scale_factor_linear(self.dims[li]));
+                a = t::nitro_relu(&zs, 10);
+            }
+            // last block's local head serves as the classifier
+            let li = self.weights.len() - 1;
+            let zl = t::matmul_i64(&a, &self.heads[li]);
+            let yhat = t::nitro_scale(&zl, t::scale_factor_linear(a.shape[1]));
+            correct += crate::nn::block::count_correct(&yhat, &labels);
+        }
+        correct as f64 / ds.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn velocity_accumulates_and_leaks() {
+        let mut opt = IntegerMomentum::new(8);
+        let mut w = ITensor::from_vec(&[1], vec![0]);
+        let grad = LTensor::from_vec(&[1], vec![8000]);
+        // repeated identical gradients: velocity converges to ~beta_inv*g,
+        // so delta converges to ~g/gamma — same steady state as plain SGD
+        let mut deltas = Vec::new();
+        let mut prev = 0i32;
+        for _ in 0..50 {
+            opt.update(0, &mut w, &grad, 100, 0);
+            deltas.push(prev - w.data[0]);
+            prev = w.data[0];
+        }
+        // first step is small (cold accumulator), later steps approach 80
+        assert!(deltas[0] < deltas[49], "{deltas:?}");
+        assert!((70..=90).contains(&deltas[49]), "{deltas:?}");
+    }
+
+    #[test]
+    fn zero_grad_velocity_decays_to_zero() {
+        let mut opt = IntegerMomentum::new(4);
+        let mut w = ITensor::from_vec(&[1], vec![1000]);
+        opt.update(0, &mut w, &LTensor::from_vec(&[1], vec![40_000]), 10, 0);
+        let after_kick = w.data[0];
+        for _ in 0..200 {
+            opt.update(0, &mut w, &LTensor::from_vec(&[1], vec![0]), 10, 0);
+        }
+        let drift_stopped = w.data[0];
+        let mut w2 = Tensor::from_vec(&[1], vec![drift_stopped]);
+        opt.update(0, &mut w2, &LTensor::from_vec(&[1], vec![0]), 10, 0);
+        assert_eq!(w2.data[0], drift_stopped, "velocity must die out");
+        assert!(after_kick < 1000, "kick must move the weight");
+    }
+
+    #[test]
+    fn momentum_mlp_learns() {
+        use crate::data::synthetic;
+        let mut ds = synthetic::by_name("tiny", 600, 3).unwrap();
+        ds.mad_normalize();
+        let (tr, te) = ds.split_test(120);
+        let mut net = MomentumMlp::new(&[64, 48, 10], 8, 1);
+        let mut rng = crate::util::rng::Pcg32::new(5);
+        let mut first = 0;
+        let mut last = 0;
+        for epoch in 0..60 {
+            for (x, labels) in crate::data::Batcher::new(&tr, 32, true, &mut rng)
+            {
+                let l = net.train_batch(&x, &labels, 512, 3000);
+                if epoch == 0 && first == 0 {
+                    first = l;
+                }
+                last = l;
+            }
+        }
+        assert!(last < first, "momentum mlp loss {first} -> {last}");
+        let acc = net.accuracy(&te, 32);
+        assert!(acc > 0.3, "momentum mlp acc {acc}");
+    }
+}

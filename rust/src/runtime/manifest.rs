@@ -1,0 +1,183 @@
+//! Artifact manifest (`artifacts/<preset>/manifest.json`): the contract
+//! between `python/compile/aot.py` and the Rust coordinator. Every topology
+//! constant the coordinator needs (shapes, SF, alpha_inv, mu, AF, pooling
+//! geometry) is carried here, so the Rust side never re-derives them from
+//! Python — it *verifies* them against its own zoo instead (tests/golden.rs).
+
+use crate::util::jsonio::Json;
+
+#[derive(Clone, Debug)]
+pub struct BlockEntry {
+    pub index: usize,
+    pub kind: String, // "conv" | "linear"
+    pub artifact_fwd: String,
+    pub artifact_train: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub wf_shape: Vec<usize>,
+    pub wl_shape: Vec<usize>,
+    pub sf: i64,
+    pub alpha_inv: i64,
+    pub mu: i32,
+    pub pool: bool,
+    pub lr_pool_s: usize,
+    pub lr_pool_k: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct HeadEntry {
+    pub artifact_fwd: String,
+    pub artifact_train: String,
+    pub in_shape: Vec<usize>,
+    pub w_shape: Vec<usize>,
+    pub sf: i64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub batch: usize,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub one_hot_value: i32,
+    pub amplification_factor: i64,
+    pub blocks: Vec<BlockEntry>,
+    pub head: HeadEntry,
+    pub infer: String,
+    /// Directory the manifest was loaded from (artifact paths are relative
+    /// to it).
+    pub dir: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = format!("{dir}/manifest.json");
+        let j = Json::parse_file(&path)?;
+        Self::from_json(&j, dir).map_err(|e| format!("{path}: {e}"))
+    }
+
+    pub fn from_json(j: &Json, dir: &str) -> Result<Manifest, String> {
+        let blocks = j
+            .req("blocks")?
+            .as_array()
+            .ok_or("blocks not an array")?
+            .iter()
+            .map(block_entry)
+            .collect::<Result<Vec<_>, _>>()?;
+        let h = j.req("head")?;
+        let head = HeadEntry {
+            artifact_fwd: req_str(h, "artifact_fwd")?,
+            artifact_train: req_str(h, "artifact_train")?,
+            in_shape: h.req("in_shape")?.usize_vec()?,
+            w_shape: h.req("w_shape")?.usize_vec()?,
+            sf: req_i64(h, "sf")?,
+        };
+        Ok(Manifest {
+            preset: req_str(j, "preset")?,
+            batch: req_i64(j, "batch")? as usize,
+            num_classes: req_i64(j, "num_classes")? as usize,
+            input_shape: j.req("input_shape")?.usize_vec()?,
+            one_hot_value: req_i64(j, "one_hot_value")? as i32,
+            amplification_factor: req_i64(j, "amplification_factor")?,
+            blocks,
+            head,
+            infer: req_str(j, "infer")?,
+            dir: dir.to_string(),
+        })
+    }
+
+    pub fn artifact_path(&self, file: &str) -> String {
+        format!("{}/{}", self.dir, file)
+    }
+}
+
+fn block_entry(j: &Json) -> Result<BlockEntry, String> {
+    Ok(BlockEntry {
+        index: req_i64(j, "index")? as usize,
+        kind: req_str(j, "kind")?,
+        artifact_fwd: req_str(j, "artifact_fwd")?,
+        artifact_train: req_str(j, "artifact_train")?,
+        in_shape: j.req("in_shape")?.usize_vec()?,
+        out_shape: j.req("out_shape")?.usize_vec()?,
+        wf_shape: j.req("wf_shape")?.usize_vec()?,
+        wl_shape: j.req("wl_shape")?.usize_vec()?,
+        sf: req_i64(j, "sf")?,
+        alpha_inv: req_i64(j, "alpha_inv")?,
+        mu: req_i64(j, "mu")? as i32,
+        pool: j.get("pool").and_then(|v| v.as_bool()).unwrap_or(false),
+        lr_pool_s: j.get("lr_pool_s").and_then(|v| v.as_i64()).unwrap_or(0)
+            as usize,
+        lr_pool_k: j.get("lr_pool_k").and_then(|v| v.as_i64()).unwrap_or(0)
+            as usize,
+    })
+}
+
+fn req_str(j: &Json, k: &str) -> Result<String, String> {
+    Ok(j.req(k)?
+        .as_str()
+        .ok_or_else(|| format!("'{k}' not a string"))?
+        .to_string())
+}
+
+fn req_i64(j: &Json, k: &str) -> Result<i64, String> {
+    j.req(k)?
+        .as_i64()
+        .ok_or_else(|| format!("'{k}' not an int"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "tinycnn", "batch": 8, "num_classes": 10,
+      "input_shape": [1, 8, 8], "one_hot_value": 32,
+      "amplification_factor": 640,
+      "blocks": [
+        {"index": 0, "kind": "conv", "artifact_fwd": "block0_fwd.hlo.txt",
+         "artifact_train": "block0_train.hlo.txt",
+         "in_shape": [8, 1, 8, 8], "out_shape": [8, 8, 4, 4],
+         "wf_shape": [8, 1, 3, 3], "wl_shape": [128, 10],
+         "sf": 2304, "alpha_inv": 10, "mu": 42,
+         "pool": true, "lr_pool_s": 2, "lr_pool_k": 2}
+      ],
+      "head": {"artifact_fwd": "head_fwd.hlo.txt",
+               "artifact_train": "head_train.hlo.txt",
+               "in_shape": [8, 32], "w_shape": [32, 10], "sf": 8192},
+      "infer": "infer.hlo.txt"
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j, "/x").unwrap();
+        assert_eq!(m.preset, "tinycnn");
+        assert_eq!(m.blocks.len(), 1);
+        assert_eq!(m.blocks[0].sf, 2304);
+        assert!(m.blocks[0].pool);
+        assert_eq!(m.head.w_shape, vec![32, 10]);
+        assert_eq!(m.artifact_path("infer.hlo.txt"), "/x/infer.hlo.txt");
+        assert_eq!(m.amplification_factor, 640);
+    }
+
+    #[test]
+    fn missing_key_is_clean_error() {
+        let j = Json::parse(r#"{"preset": "x"}"#).unwrap();
+        let err = Manifest::from_json(&j, "/x").unwrap_err();
+        assert!(err.contains("missing key"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // when `make artifacts` has run, parse the real thing
+        for preset in ["tinycnn", "mlp1-mini"] {
+            let dir = format!("artifacts/{preset}");
+            if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+                let m = Manifest::load(&dir).unwrap();
+                assert_eq!(m.preset, preset);
+                assert_eq!(m.one_hot_value, 32);
+                assert!(!m.blocks.is_empty());
+            }
+        }
+    }
+}

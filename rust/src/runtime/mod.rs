@@ -1,0 +1,152 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client via the
+//! `xla` crate.
+//!
+//! Interchange is HLO **text**: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! Python never runs on this path — the artifacts directory is the entire
+//! build-time handoff.
+
+pub mod manifest;
+
+use crate::tensor::{ITensor, LTensor, Tensor};
+
+pub use manifest::{BlockEntry, HeadEntry, Manifest};
+
+/// A loaded, compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU client wrapper + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// Argument passed to an executable.
+pub enum Arg {
+    I32(ITensor),
+    I64(LTensor),
+    ScalarI64(i64),
+}
+
+/// A returned tensor: i32 or i64 depending on the artifact output.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Out {
+    I32(ITensor),
+    I64(LTensor),
+}
+
+impl Out {
+    pub fn as_i32(&self) -> &ITensor {
+        match self {
+            Out::I32(t) => t,
+            Out::I64(_) => panic!("expected i32 output, got i64"),
+        }
+    }
+
+    pub fn scalar_i64(&self) -> i64 {
+        match self {
+            Out::I64(t) => t.data[0],
+            Out::I32(t) => t.data[0] as i64,
+        }
+    }
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self, String> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| format!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &str) -> Result<Executable, String> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| format!("parse {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {path}: {e}"))?;
+        Ok(Executable { name: path.to_string(), exe })
+    }
+
+    /// Execute with mixed-type args; returns the flattened output tuple.
+    /// All aot.py artifacts are lowered with `return_tuple=True`.
+    pub fn run(&self, exe: &Executable, args: &[Arg]) -> Result<Vec<Out>, String> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| match a {
+                Arg::I32(t) => {
+                    let dims: Vec<i64> =
+                        t.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data)
+                        .reshape(&dims)
+                        .map_err(|e| format!("reshape arg: {e}"))
+                }
+                Arg::I64(t) => {
+                    let dims: Vec<i64> =
+                        t.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data)
+                        .reshape(&dims)
+                        .map_err(|e| format!("reshape arg: {e}"))
+                }
+                Arg::ScalarI64(v) => Ok(xla::Literal::scalar(*v)),
+            })
+            .collect::<Result<_, _>>()?;
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute {}: {e}", exe.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch result: {e}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| format!("untuple result: {e}"))?;
+        parts.into_iter().map(|p| literal_to_out(&p)).collect()
+    }
+}
+
+fn literal_to_out(lit: &xla::Literal) -> Result<Out, String> {
+    let shape = lit
+        .shape()
+        .map_err(|e| format!("result shape: {e}"))?;
+    let (ty, dims): (xla::ElementType, Vec<usize>) = match &shape {
+        xla::Shape::Array(a) => (
+            a.element_type(),
+            a.dims().iter().map(|&d| d as usize).collect(),
+        ),
+        _ => return Err("tuple-in-tuple output unsupported".into()),
+    };
+    let dims = if dims.is_empty() { vec![1] } else { dims };
+    match ty {
+        xla::ElementType::S32 => {
+            let data = lit
+                .to_vec::<i32>()
+                .map_err(|e| format!("read s32 result: {e}"))?;
+            Ok(Out::I32(Tensor::from_vec(&dims, data)))
+        }
+        xla::ElementType::S64 => {
+            let data = lit
+                .to_vec::<i64>()
+                .map_err(|e| format!("read s64 result: {e}"))?;
+            Ok(Out::I64(Tensor::from_vec(&dims, data)))
+        }
+        other => Err(format!("unexpected result element type {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/pjrt.rs (integration) so unit
+    // test runs stay fast; manifest parsing is tested in manifest.rs.
+}

@@ -1,0 +1,180 @@
+//! Dense tensor substrate: integer (`i32`/`i64`) and `f32` tensors with the
+//! contraction kernels NITRO-D needs.
+//!
+//! Numeric-format contract (DESIGN.md): activations/weights live in `i32`
+//! (logical int8/int16), contractions accumulate in `i64`, floor-division
+//! rescales back down. The op set mirrors `python/compile/kernels/ref.py`
+//! bit-exactly — verified against `artifacts/golden/ops.json`.
+
+pub mod ops_f32;
+pub mod ops_int;
+
+pub use ops_int::*;
+
+/// Row-major dense tensor. `T` is one of `i32`, `i64`, `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    pub shape: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+pub type ITensor = Tensor<i32>;
+pub type LTensor = Tensor<i64>;
+pub type FTensor = Tensor<f32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != data len {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Leading dimension (batch) and the product of the rest.
+    pub fn batch_feat(&self) -> (usize, usize) {
+        let b = self.shape.first().copied().unwrap_or(1);
+        (b, self.data.len() / b.max(1))
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+}
+
+impl ITensor {
+    /// Widen to i64.
+    pub fn to_i64(&self) -> LTensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| v as i64).collect(),
+        }
+    }
+
+    /// Min/max over the elements (bit-width probes; paper App. E.3).
+    pub fn minmax(&self) -> (i32, i32) {
+        let mut lo = i32::MAX;
+        let mut hi = i32::MIN;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if self.data.is_empty() {
+            (0, 0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Bits needed to represent every element in two's complement
+    /// (`-128` fits in 8 bits). The paper's int16 claim is
+    /// `bitwidth() <= 16`.
+    pub fn bitwidth(&self) -> u32 {
+        self.data
+            .iter()
+            .map(|&v| {
+                let v = v as i64;
+                let m = if v < 0 { !v } else { v } as u64;
+                64 - m.leading_zeros() + 1
+            })
+            .max()
+            .unwrap_or(1)
+    }
+
+    pub fn mean_abs(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&v| (v as i64).abs() as f64).sum::<f64>()
+            / self.data.len() as f64
+    }
+}
+
+impl LTensor {
+    /// Narrow to i32 (values are guaranteed in range by the NITRO analysis;
+    /// debug builds assert).
+    pub fn to_i32(&self) -> ITensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .map(|&v| {
+                    debug_assert!(
+                        v >= i32::MIN as i64 && v <= i32::MAX as i64,
+                        "int32 overflow: {v}"
+                    );
+                    v as i32
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_reshape() {
+        let t: ITensor = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        let t = t.reshaped(&[6, 4]);
+        assert_eq!(t.shape, vec![6, 4]);
+        assert_eq!(t.batch_feat(), (6, 4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_reshape_panics() {
+        let t: ITensor = Tensor::zeros(&[2, 3]);
+        let _ = t.reshaped(&[4, 2]);
+    }
+
+    #[test]
+    fn bitwidth_probe() {
+        let t = ITensor::from_vec(&[3], vec![0, 127, -128]);
+        assert_eq!(t.bitwidth(), 8); // int8
+        let t = ITensor::from_vec(&[1], vec![32767]);
+        assert_eq!(t.bitwidth(), 16);
+        let t = ITensor::from_vec(&[1], vec![32768]);
+        assert_eq!(t.bitwidth(), 17);
+    }
+
+    #[test]
+    fn minmax_and_meanabs() {
+        let t = ITensor::from_vec(&[4], vec![-5, 0, 3, 2]);
+        assert_eq!(t.minmax(), (-5, 3));
+        assert!((t.mean_abs() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn i64_roundtrip() {
+        let t = ITensor::from_vec(&[2], vec![i32::MAX, i32::MIN]);
+        assert_eq!(t.to_i64().to_i32(), t);
+    }
+}

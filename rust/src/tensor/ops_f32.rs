@@ -1,0 +1,364 @@
+//! f32 tensor ops for the floating-point baselines (FP BP and FP LES —
+//! Tables 1 & 2 comparison columns). Same layouts as the integer ops so
+//! topologies are shared.
+
+use super::{FTensor, Tensor};
+use crate::util::par;
+
+/// a (m,k) × b (k,n) -> (m,n)
+pub fn matmul(a: &FTensor, b: &FTensor) -> FTensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (kb, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, kb);
+    let mut out = vec![0f32; m * n];
+    par::for_each_chunk(&mut out, n, par::default_workers(), |i, orow| {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..kk * n + n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    });
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// aᵀ (k,m) × b (k,n) -> (m,n)
+pub fn matmul_at_b(a: &FTensor, b: &FTensor) -> FTensor {
+    let (k, m) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    let mut out = vec![0f32; m * n];
+    for kk in 0..k {
+        let arow = &a.data[kk * m..(kk + 1) * m];
+        let brow = &b.data[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// a (m,k) × bᵀ (n,k) -> (m,n)
+pub fn matmul_a_bt(a: &FTensor, b: &FTensor) -> FTensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[0];
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// im2col with the shared (c, ki, kj) layout.
+pub fn im2col(x: &FTensor, kernel: usize, padding: usize) -> FTensor {
+    let (b, c, h, w) = s4(x);
+    let (ho, wo) = (h + 2 * padding - kernel + 1, w + 2 * padding - kernel + 1);
+    let ckk = c * kernel * kernel;
+    let mut out = vec![0f32; b * ho * wo * ckk];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((bi * ho + oy) * wo + ox) * ckk;
+                for ci in 0..c {
+                    for ki in 0..kernel {
+                        let iy = oy as isize + ki as isize - padding as isize;
+                        for kj in 0..kernel {
+                            let ix = ox as isize + kj as isize - padding as isize;
+                            let v = if iy >= 0 && iy < h as isize && ix >= 0
+                                && ix < w as isize
+                            {
+                                x.data[((bi * c + ci) * h + iy as usize) * w
+                                    + ix as usize]
+                            } else {
+                                0.0
+                            };
+                            out[base + ci * kernel * kernel + ki * kernel + kj] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[b, ho * wo, ckk], out)
+}
+
+/// conv2d stride 1: x (B,C,H,W) × w (O,C,K,K) -> (B,O,Ho,Wo)
+pub fn conv2d(x: &FTensor, w: &FTensor, padding: usize) -> FTensor {
+    let (b, c, h, wd) = s4(x);
+    let (o, _, k, _) = s4(w);
+    let (ho, wo) = (h + 2 * padding - k + 1, wd + 2 * padding - k + 1);
+    let patches = im2col(x, k, padding);
+    let p = ho * wo;
+    let ckk = c * k * k;
+    let mut out = vec![0f32; b * o * p];
+    par::for_each_chunk(&mut out, o * p, par::default_workers(), |bi, chunk| {
+        let pat = &patches.data[bi * p * ckk..(bi + 1) * p * ckk];
+        for oi in 0..o {
+            let wrow = &w.data[oi * ckk..(oi + 1) * ckk];
+            for pi in 0..p {
+                let prow = &pat[pi * ckk..(pi + 1) * ckk];
+                let mut acc = 0f32;
+                for (&wv, &pv) in wrow.iter().zip(prow) {
+                    acc += wv * pv;
+                }
+                chunk[oi * p + pi] = acc;
+            }
+        }
+    });
+    Tensor::from_vec(&[b, o, ho, wo], out)
+}
+
+/// Gradient wrt conv input (needed by the FP BP baseline where gradients
+/// cross layer boundaries): full correlation with flipped kernels.
+pub fn conv2d_input_grad(g: &FTensor, w: &FTensor, padding: usize) -> FTensor {
+    let (o, c, k, _) = s4(w);
+    // build flipped/transposed weights (C,O,K,K)
+    let mut wt = vec![0f32; c * o * k * k];
+    for oi in 0..o {
+        for ci in 0..c {
+            for ki in 0..k {
+                for kj in 0..k {
+                    wt[((ci * o + oi) * k + (k - 1 - ki)) * k + (k - 1 - kj)] =
+                        w.data[((oi * c + ci) * k + ki) * k + kj];
+                }
+            }
+        }
+    }
+    let wt = Tensor::from_vec(&[c, o, k, k], wt);
+    conv2d(g, &wt, k - 1 - padding)
+}
+
+/// Gradient wrt conv weights, batch-summed.
+pub fn conv2d_weight_grad(x: &FTensor, g: &FTensor, kernel: usize,
+                          padding: usize) -> FTensor {
+    let (b, c, _, _) = s4(x);
+    let (_, o, ho, wo) = s4(g);
+    let patches = im2col(x, kernel, padding);
+    let p = ho * wo;
+    let ckk = c * kernel * kernel;
+    let mut out = vec![0f32; o * ckk];
+    for bi in 0..b {
+        let pat = &patches.data[bi * p * ckk..(bi + 1) * p * ckk];
+        for oi in 0..o {
+            let gplane = &g.data[(bi * o + oi) * p..(bi * o + oi + 1) * p];
+            let grow = &mut out[oi * ckk..(oi + 1) * ckk];
+            for (pi, &gv) in gplane.iter().enumerate() {
+                if gv == 0.0 {
+                    continue;
+                }
+                let prow = &pat[pi * ckk..(pi + 1) * ckk];
+                for (acc, &pv) in grow.iter_mut().zip(prow) {
+                    *acc += gv * pv;
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[o, c, kernel, kernel], out)
+}
+
+/// Max pool 2x2/s2 style with argmax (first max wins, same tie-break).
+pub fn maxpool2d(x: &FTensor, size: usize, stride: usize)
+                 -> (FTensor, Vec<u32>) {
+    let (b, c, h, w) = s4(x);
+    let ho = (h - size) / stride + 1;
+    let wo = (w - size) / stride + 1;
+    let mut out = vec![0f32; b * c * ho * wo];
+    let mut arg = vec![0u32; b * c * ho * wo];
+    for bc in 0..b * c {
+        let plane = &x.data[bc * h * w..(bc + 1) * h * w];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut best = f32::NEG_INFINITY;
+                let mut besti = 0u32;
+                for ki in 0..size {
+                    for kj in 0..size {
+                        let v = plane[(oy * stride + ki) * w + ox * stride + kj];
+                        if v > best {
+                            best = v;
+                            besti = (ki * size + kj) as u32;
+                        }
+                    }
+                }
+                out[bc * ho * wo + oy * wo + ox] = best;
+                arg[bc * ho * wo + oy * wo + ox] = besti;
+            }
+        }
+    }
+    (Tensor::from_vec(&[b, c, ho, wo], out), arg)
+}
+
+pub fn maxpool2d_bwd(g: &FTensor, arg: &[u32], in_shape: &[usize],
+                     size: usize, stride: usize) -> FTensor {
+    let (b, c, ho, wo) = s4(g);
+    let (h, w) = (in_shape[2], in_shape[3]);
+    let mut out = vec![0f32; b * c * h * w];
+    for bc in 0..b * c {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let a = arg[bc * ho * wo + oy * wo + ox] as usize;
+                let (ki, kj) = (a / size, a % size);
+                out[bc * h * w + (oy * stride + ki) * w + ox * stride + kj] +=
+                    g.data[bc * ho * wo + oy * wo + ox];
+            }
+        }
+    }
+    Tensor::from_vec(&[b, c, h, w], out)
+}
+
+/// LeakyReLU fwd (returns mask-relevant input copy is kept by callers).
+pub fn leaky_relu(x: &FTensor, alpha: f32) -> FTensor {
+    Tensor {
+        shape: x.shape.clone(),
+        data: x.data.iter().map(|&v| if v >= 0.0 { v } else { alpha * v }).collect(),
+    }
+}
+
+pub fn leaky_relu_bwd(x: &FTensor, g: &FTensor, alpha: f32) -> FTensor {
+    Tensor {
+        shape: g.shape.clone(),
+        data: x
+            .data
+            .iter()
+            .zip(&g.data)
+            .map(|(&xv, &gv)| if xv >= 0.0 { gv } else { alpha * gv })
+            .collect(),
+    }
+}
+
+/// Softmax + cross-entropy over logits (B, G); labels as class indices.
+/// Returns (mean loss, gradient wrt logits — already divided by batch).
+pub fn softmax_ce(logits: &FTensor, labels: &[usize]) -> (f32, FTensor) {
+    let (b, g) = (logits.shape[0], logits.shape[1]);
+    assert_eq!(labels.len(), b);
+    let mut grad = vec![0f32; b * g];
+    let mut loss = 0f64;
+    for i in 0..b {
+        let row = &logits.data[i * g..(i + 1) * g];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let exps: Vec<f32> = row.iter().map(|&v| (v - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        for j in 0..g {
+            let p = exps[j] / z;
+            grad[i * g + j] = (p - if j == labels[i] { 1.0 } else { 0.0 })
+                / b as f32;
+            if j == labels[i] {
+                loss -= (p.max(1e-12)).ln() as f64;
+            }
+        }
+    }
+    (
+        (loss / b as f64) as f32,
+        Tensor::from_vec(&[b, g], grad),
+    )
+}
+
+fn s4(t: &FTensor) -> (usize, usize, usize, usize) {
+    assert_eq!(t.shape.len(), 4);
+    (t.shape[0], t.shape[1], t.shape[2], t.shape[3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randf(rng: &mut Pcg32, shape: &[usize]) -> FTensor {
+        let n = shape.iter().product();
+        FTensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = FTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = FTensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(matmul(&a, &b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn conv_input_grad_is_adjoint() {
+        // <conv(x, w), g> == <x, conv_input_grad(g, w)> — the adjoint
+        // identity that pins correctness of the transposed conv.
+        let mut rng = Pcg32::new(11);
+        let x = randf(&mut rng, &[2, 3, 5, 5]);
+        let w = randf(&mut rng, &[4, 3, 3, 3]);
+        let g = randf(&mut rng, &[2, 4, 5, 5]);
+        let y = conv2d(&x, &w, 1);
+        let gx = conv2d_input_grad(&g, &w, 1);
+        let lhs: f64 = y.data.iter().zip(&g.data).map(|(&a, &b)| (a * b) as f64).sum();
+        let rhs: f64 = x.data.iter().zip(&gx.data).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn conv_weight_grad_is_adjoint() {
+        // <conv(x, w), g> == <w, weight_grad(x, g)>
+        let mut rng = Pcg32::new(12);
+        let x = randf(&mut rng, &[2, 3, 5, 5]);
+        let w = randf(&mut rng, &[4, 3, 3, 3]);
+        let g = randf(&mut rng, &[2, 4, 5, 5]);
+        let y = conv2d(&x, &w, 1);
+        let gw = conv2d_weight_grad(&x, &g, 3, 1);
+        let lhs: f64 = y.data.iter().zip(&g.data).map(|(&a, &b)| (a * b) as f64).sum();
+        let rhs: f64 = w.data.iter().zip(&gw.data).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn softmax_ce_gradient_numerical() {
+        let mut rng = Pcg32::new(13);
+        let logits = randf(&mut rng, &[3, 5]);
+        let labels = vec![0usize, 2, 4];
+        let (_, grad) = softmax_ce(&logits, &labels);
+        // central differences
+        let eps = 1e-3f32;
+        for idx in 0..logits.data.len() {
+            let mut lp = logits.clone();
+            lp.data[idx] += eps;
+            let mut lm = logits.clone();
+            lm.data[idx] -= eps;
+            let (fp, _) = softmax_ce(&lp, &labels);
+            let (fm, _) = softmax_ce(&lm, &labels);
+            let num = (fp - fm) / (2.0 * eps);
+            assert!(
+                (num - grad.data[idx]).abs() < 2e-3,
+                "idx {idx}: {num} vs {}",
+                grad.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn leaky_relu_roundtrip() {
+        let x = FTensor::from_vec(&[1, 4], vec![-2.0, -0.5, 0.0, 3.0]);
+        let y = leaky_relu(&x, 0.1);
+        assert_eq!(y.data, vec![-0.2, -0.05, 0.0, 3.0]);
+        let g = FTensor::from_vec(&[1, 4], vec![1.0, 1.0, 1.0, 1.0]);
+        let gx = leaky_relu_bwd(&x, &g, 0.1);
+        assert_eq!(gx.data, vec![0.1, 0.1, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn f32_maxpool_matches_int_tiebreak() {
+        let x = FTensor::from_vec(&[1, 1, 2, 2], vec![5.0, 5.0, 5.0, 5.0]);
+        let (p, a) = maxpool2d(&x, 2, 2);
+        assert_eq!(p.data, vec![5.0]);
+        assert_eq!(a, vec![0]);
+    }
+}

@@ -1,0 +1,744 @@
+//! Integer contraction and NITRO elementwise kernels — the NativeEngine
+//! hot path. Bit-exact mirror of `python/compile/kernels/ref.py`.
+
+use super::{ITensor, LTensor, Tensor};
+use crate::util::{div_floor, par};
+
+pub const INT8_MAX: i32 = 127;
+pub const ONE_HOT_VALUE: i32 = 32;
+
+// ---------------------------------------------------------------------------
+// matmul
+// ---------------------------------------------------------------------------
+
+/// Largest |v| in a slice (0 for empty).
+#[inline]
+fn max_abs(xs: &[i32]) -> i64 {
+    xs.iter().map(|&v| (v as i64).abs()).max().unwrap_or(0)
+}
+
+/// Pick the i32-safe accumulation chunk length for operands bounded by
+/// `max_a`/`max_b`, or `None` if even a single product can overflow i32.
+///
+/// This is the **perf-critical trick of the integer engine** (EXPERIMENTS.md
+/// §Perf): with `chunk * max_a * max_b < 2^31` guaranteed, partial sums can
+/// accumulate in i32 — which LLVM autovectorizes (8-lane `vpmulld`/`vpaddd`)
+/// — and only chunk boundaries pay the i64 widening. Integer addition is
+/// associative, so the result is bit-identical to the naive i64 loop.
+#[inline]
+fn safe_chunk(max_a: i64, max_b: i64, k: usize) -> Option<usize> {
+    let prod = max_a * max_b;
+    if prod == 0 {
+        return Some(k.max(1));
+    }
+    if prod >= i32::MAX as i64 {
+        return None;
+    }
+    Some(((i32::MAX as i64 / prod).max(1) as usize).min(k.max(1)))
+}
+
+/// Dot product with i32 chunked accumulation (caller guarantees
+/// `chunk * max|a| * max|b| < 2^31`).
+#[inline]
+fn dot_chunked(a: &[i32], b: &[i32], chunk: usize) -> i64 {
+    let mut total = 0i64;
+    let mut ai = a.chunks(chunk);
+    let mut bi = b.chunks(chunk);
+    while let (Some(ca), Some(cb)) = (ai.next(), bi.next()) {
+        let mut acc = 0i32;
+        for (&x, &y) in ca.iter().zip(cb) {
+            acc = acc.wrapping_add(x.wrapping_mul(y));
+        }
+        total += acc as i64;
+    }
+    total
+}
+
+/// Plain i64 dot (fallback when operands may overflow i32 products).
+#[inline]
+fn dot_i64(a: &[i32], b: &[i32]) -> i64 {
+    let mut acc = 0i64;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as i64 * y as i64;
+    }
+    acc
+}
+
+fn transpose_i32(b: &[i32], k: usize, n: usize) -> Vec<i32> {
+    let mut bt = vec![0i32; n * k];
+    for kk in 0..k {
+        for j in 0..n {
+            bt[j * k + kk] = b[kk * n + j];
+        }
+    }
+    bt
+}
+
+/// `a (m,k) i32 × b (k,n) i32 -> (m,n) i64`, i64 accumulation.
+pub fn matmul_i64(a: &ITensor, b: &ITensor) -> LTensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (kb, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, kb, "matmul inner dims {k} vs {kb}");
+    let mut out = vec![0i64; m * n];
+    matmul_i64_into(&a.data, &b.data, m, k, n, &mut out, par::default_workers());
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// Core kernel **accumulating** into a caller buffer (callers zero it or
+/// reuse it to sum over a batch); parallel over output rows.
+pub fn matmul_i64_into(a: &[i32], b: &[i32], m: usize, k: usize, n: usize,
+                       out: &mut [i64], workers: usize) {
+    assert_eq!(out.len(), m * n);
+    match safe_chunk(max_abs(a), max_abs(b), k) {
+        Some(chunk) => {
+            // row-dot form over a transposed rhs: both operands stream
+            // contiguously and the inner loop vectorizes in i32
+            let bt = transpose_i32(b, k, n);
+            par::for_each_chunk(out, n, workers, |i, orow| {
+                let arow = &a[i * k..(i + 1) * k];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o += dot_chunked(arow, &bt[j * k..(j + 1) * k], chunk);
+                }
+            });
+        }
+        None => {
+            // wide-operand fallback: saxpy in i64
+            par::for_each_chunk(out, n, workers, |i, orow| {
+                let arow = &a[i * k..(i + 1) * k];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0 {
+                        continue;
+                    }
+                    let av = av as i64;
+                    let brow = &b[kk * n..kk * n + n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv as i64;
+                    }
+                }
+            });
+        }
+    }
+}
+
+/// `aᵀ (k,m) × b (k,n) -> (m,n) i64` without materializing the transpose —
+/// the learning-layer weight-gradient shape (featᵀ · ∇L).
+pub fn matmul_at_b_i64(a: &ITensor, b: &ITensor) -> LTensor {
+    let (k, m) = (a.shape[0], a.shape[1]);
+    let (kb, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, kb);
+    let mut out = vec![0i64; m * n];
+    for kk in 0..k {
+        let arow = &a.data[kk * m..(kk + 1) * m];
+        let brow = &b.data[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i64;
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv as i64;
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// `a (m,k) × bᵀ (n,k) -> (m,n) i64` — the delta^fw shape (∇L · W_lᵀ).
+/// Already in row-dot form; uses the chunked i32 fast path when safe.
+pub fn matmul_a_bt_i64(a: &ITensor, b: &ITensor) -> LTensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, kb) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, kb);
+    let mut out = vec![0i64; m * n];
+    let chunk = safe_chunk(max_abs(&a.data), max_abs(&b.data), k);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b.data[j * k..(j + 1) * k];
+            *o = match chunk {
+                Some(c) => dot_chunked(arow, brow, c),
+                None => dot_i64(arow, brow),
+            };
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+// ---------------------------------------------------------------------------
+// conv2d (stride 1) via im2col
+// ---------------------------------------------------------------------------
+
+/// Patch extraction matching ref.im2col: x (B,C,H,W) -> (B, Ho*Wo, C*K*K)
+/// with the (c, ki, kj) row-major patch layout.
+pub fn im2col(x: &ITensor, kernel: usize, padding: usize) -> ITensor {
+    let (b, c, h, w) = shape4(x);
+    let (ho, wo) = out_hw(h, w, kernel, padding);
+    let ckk = c * kernel * kernel;
+    let mut out = vec![0i32; b * ho * wo * ckk];
+    let per_sample = ho * wo * ckk;
+    par::for_each_chunk(&mut out, per_sample, par::default_workers(),
+        |bi, chunk| {
+            im2col_sample(
+                &x.data[bi * c * h * w..(bi + 1) * c * h * w],
+                c, h, w, kernel, padding, ho, wo, chunk,
+            );
+        });
+    Tensor::from_vec(&[b, ho * wo, ckk], out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn im2col_sample(x: &[i32], c: usize, h: usize, w: usize, k: usize,
+                 pad: usize, ho: usize, wo: usize, out: &mut [i32]) {
+    let ckk = c * k * k;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let patch = &mut out[(oy * wo + ox) * ckk..(oy * wo + ox + 1) * ckk];
+            for ci in 0..c {
+                let plane = &x[ci * h * w..(ci + 1) * h * w];
+                for ki in 0..k {
+                    let iy = oy as isize + ki as isize - pad as isize;
+                    for kj in 0..k {
+                        let ix = ox as isize + kj as isize - pad as isize;
+                        let v = if iy >= 0 && iy < h as isize && ix >= 0
+                            && ix < w as isize
+                        {
+                            plane[iy as usize * w + ix as usize]
+                        } else {
+                            0
+                        };
+                        patch[ci * k * k + ki * k + kj] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Integer conv2d: x (B,C,H,W) × w (O,C,K,K) -> (B,O,Ho,Wo) i64.
+pub fn conv2d_i64(x: &ITensor, w: &ITensor, padding: usize) -> LTensor {
+    let (b, c, h, wd) = shape4(x);
+    let (o, cw, k, _) = shape4(w);
+    assert_eq!(c, cw, "conv channel mismatch");
+    let (ho, wo) = out_hw(h, wd, k, padding);
+    let patches = im2col(x, k, padding); // (B, P, CKK)
+    let p = ho * wo;
+    let ckk = c * k * k;
+    let mut out = vec![0i64; b * o * p];
+    let per_sample = o * p;
+    let kchunk = safe_chunk(max_abs(&w.data), max_abs(&patches.data), ckk);
+    par::for_each_chunk(&mut out, per_sample, par::default_workers(),
+        |bi, chunk| {
+            // chunk[oi*p + pi] = sum_ckk w[oi, ckk] * patches[bi, pi, ckk]
+            let pat = &patches.data[bi * p * ckk..(bi + 1) * p * ckk];
+            for oi in 0..o {
+                let wrow = &w.data[oi * ckk..(oi + 1) * ckk];
+                let orow = &mut chunk[oi * p..(oi + 1) * p];
+                for (pi, ov) in orow.iter_mut().enumerate() {
+                    let prow = &pat[pi * ckk..(pi + 1) * ckk];
+                    *ov = match kchunk {
+                        Some(c) => dot_chunked(wrow, prow, c),
+                        None => dot_i64(wrow, prow),
+                    };
+                }
+            }
+        });
+    Tensor::from_vec(&[b, o, ho, wo], out)
+}
+
+/// Weight gradient: gw[o, ckk] = Σ_{b,p} g[b,o,p] · patches[b,p,ckk],
+/// batch-summed. g: (B,O,Ho,Wo) i32 -> (O,C,K,K) i64.
+pub fn conv2d_weight_grad(x: &ITensor, g: &ITensor, kernel: usize,
+                          padding: usize) -> LTensor {
+    let (b, c, h, w) = shape4(x);
+    let (gb, o, ho, wo) = shape4(g);
+    assert_eq!(b, gb);
+    debug_assert_eq!(out_hw(h, w, kernel, padding), (ho, wo));
+    let patches = im2col(x, kernel, padding);
+    let p = ho * wo;
+    let ckk = c * kernel * kernel;
+    let mut out = vec![0i64; o * ckk];
+    // gw (O, CKK) = Σ_b  g_b (O, P) · patches_b (P, CKK): one accumulating
+    // matmul per sample — rides the chunked-i32 fast path of
+    // `matmul_i64_into`.
+    for bi in 0..b {
+        let gplane = &g.data[bi * o * p..(bi + 1) * o * p];
+        let pat = &patches.data[bi * p * ckk..(bi + 1) * p * ckk];
+        matmul_i64_into(gplane, pat, o, p, ckk, &mut out, 1);
+    }
+    Tensor::from_vec(&[o, c, kernel, kernel], out)
+}
+
+// ---------------------------------------------------------------------------
+// max pooling
+// ---------------------------------------------------------------------------
+
+/// Max pool (size, stride) with first-max-wins argmax over (ki,kj)
+/// row-major — the tie-break shared with ref.maxpool2d.
+pub fn maxpool2d(x: &ITensor, size: usize, stride: usize)
+                 -> (ITensor, ITensor) {
+    let (b, c, h, w) = shape4(x);
+    let ho = (h - size) / stride + 1;
+    let wo = (w - size) / stride + 1;
+    let mut out = vec![0i32; b * c * ho * wo];
+    let mut arg = vec![0i32; b * c * ho * wo];
+    for bc in 0..b * c {
+        let plane = &x.data[bc * h * w..(bc + 1) * h * w];
+        let obase = bc * ho * wo;
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut best = i32::MIN;
+                let mut besti = 0i32;
+                for ki in 0..size {
+                    for kj in 0..size {
+                        let v = plane[(oy * stride + ki) * w + ox * stride + kj];
+                        if v > best {
+                            best = v;
+                            besti = (ki * size + kj) as i32;
+                        }
+                    }
+                }
+                out[obase + oy * wo + ox] = best;
+                arg[obase + oy * wo + ox] = besti;
+            }
+        }
+    }
+    (
+        Tensor::from_vec(&[b, c, ho, wo], out),
+        Tensor::from_vec(&[b, c, ho, wo], arg),
+    )
+}
+
+/// Scatter gradient to argmax positions.
+pub fn maxpool2d_bwd(g: &ITensor, arg: &ITensor, in_shape: &[usize],
+                     size: usize, stride: usize) -> ITensor {
+    let (b, c, ho, wo) = shape4(g);
+    let (hb, hc, h, w) = (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+    assert_eq!((b, c), (hb, hc));
+    let mut out = vec![0i32; b * c * h * w];
+    for bc in 0..b * c {
+        let obase = bc * ho * wo;
+        let plane = &mut out[bc * h * w..(bc + 1) * h * w];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let a = arg.data[obase + oy * wo + ox] as usize;
+                let (ki, kj) = (a / size, a % size);
+                plane[(oy * stride + ki) * w + ox * stride + kj] +=
+                    g.data[obase + oy * wo + ox];
+            }
+        }
+    }
+    Tensor::from_vec(&[b, c, h, w], out)
+}
+
+// ---------------------------------------------------------------------------
+// NITRO elementwise (paper §3.2)
+// ---------------------------------------------------------------------------
+
+pub fn scale_factor_linear(fan_in: usize) -> i64 {
+    256 * fan_in as i64
+}
+
+pub fn scale_factor_conv(kernel: usize, in_channels: usize) -> i64 {
+    256 * (kernel * kernel) as i64 * in_channels as i64
+}
+
+/// NITRO Scaling Layer: z* = floor(z / SF). i64 in, i32 out.
+pub fn nitro_scale(z: &LTensor, sf: i64) -> ITensor {
+    Tensor {
+        shape: z.shape.clone(),
+        data: z.data.iter().map(|&v| div_floor(v, sf) as i32).collect(),
+    }
+}
+
+/// Pre-computed NITRO-ReLU mean (paper §3.2). Mirrors ref.nitro_relu_mu.
+pub fn nitro_relu_mu(alpha_inv: i64) -> i32 {
+    let mu0 = div_floor(-(INT8_MAX as i64), alpha_inv);
+    let mu1 = div_floor(-(INT8_MAX as i64), 2 * alpha_inv);
+    let mu2 = 63i64;
+    let mu3 = INT8_MAX as i64;
+    div_floor(mu0 + mu1 + mu2 + mu3, 4) as i32
+}
+
+/// NITRO-ReLU forward over scaled pre-activations.
+pub fn nitro_relu(zs: &ITensor, alpha_inv: i64) -> ITensor {
+    let mu = nitro_relu_mu(alpha_inv);
+    Tensor {
+        shape: zs.shape.clone(),
+        data: zs
+            .data
+            .iter()
+            .map(|&v| {
+                let out = if v < 0 {
+                    div_floor(v.max(-INT8_MAX) as i64, alpha_inv) as i32
+                } else {
+                    v.min(INT8_MAX)
+                };
+                out - mu
+            })
+            .collect(),
+    }
+}
+
+/// Fused scale+ReLU: one pass i64 -> i32 (the NativeEngine analogue of the
+/// Pallas `nitro_scale_relu` epilogue kernel).
+pub fn nitro_scale_relu(z: &LTensor, sf: i64, alpha_inv: i64) -> ITensor {
+    let mu = nitro_relu_mu(alpha_inv);
+    Tensor {
+        shape: z.shape.clone(),
+        data: z
+            .data
+            .iter()
+            .map(|&zv| {
+                let v = div_floor(zv, sf);
+                let out = if v < 0 {
+                    div_floor(v.max(-(INT8_MAX as i64)), alpha_inv) as i32
+                } else {
+                    v.min(INT8_MAX as i64) as i32
+                };
+                out - mu
+            })
+            .collect(),
+    }
+}
+
+/// NITRO-ReLU backward: exact piecewise derivative (DESIGN.md interp. #2).
+/// `zs` is the scaled pre-activation that was fed forward.
+pub fn nitro_relu_bwd(zs: &ITensor, g: &ITensor, alpha_inv: i64) -> ITensor {
+    assert_eq!(zs.shape, g.shape);
+    Tensor {
+        shape: g.shape.clone(),
+        data: zs
+            .data
+            .iter()
+            .zip(&g.data)
+            .map(|(&x, &gv)| {
+                if x < -INT8_MAX || x > INT8_MAX {
+                    0
+                } else if x < 0 {
+                    div_floor(gv as i64, alpha_inv) as i32
+                } else {
+                    gv
+                }
+            })
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// loss / labels (paper §3.3, App. B.2)
+// ---------------------------------------------------------------------------
+
+/// One-hot with value 32.
+pub fn one_hot32(labels: &[usize], num_classes: usize) -> ITensor {
+    let mut out = vec![0i32; labels.len() * num_classes];
+    for (i, &y) in labels.iter().enumerate() {
+        out[i * num_classes + y] = ONE_HOT_VALUE;
+    }
+    Tensor::from_vec(&[labels.len(), num_classes], out)
+}
+
+/// RSS loss sum + gradient (ŷ − y). The loss accumulator saturates instead
+/// of wrapping so a diverging run (App. E.1 "(unstable)") reports a huge
+/// positive loss for the trainer's divergence guard rather than a garbage
+/// negative number; in-contract values never approach the rail, so this is
+/// bit-identical to the JAX reference on all golden traces.
+pub fn rss_loss_grad(yhat: &ITensor, y32: &ITensor) -> (i64, ITensor) {
+    assert_eq!(yhat.shape, y32.shape);
+    let mut loss = 0i64;
+    let grad: Vec<i32> = yhat
+        .data
+        .iter()
+        .zip(&y32.data)
+        .map(|(&a, &b)| {
+            let d = a as i64 - b as i64;
+            loss = loss.saturating_add(d.saturating_mul(d));
+            d as i32
+        })
+        .collect();
+    (loss / 2, Tensor { shape: yhat.shape.clone(), data: grad })
+}
+
+fn shape4<T>(t: &Tensor<T>) -> (usize, usize, usize, usize) {
+    assert_eq!(t.shape.len(), 4, "expected rank-4, got {:?}", t.shape);
+    (t.shape[0], t.shape[1], t.shape[2], t.shape[3])
+}
+
+fn out_hw(h: usize, w: usize, k: usize, pad: usize) -> (usize, usize) {
+    (h + 2 * pad - k + 1, w + 2 * pad - k + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn rand_it(rng: &mut Pcg32, shape: &[usize], lo: i32, hi: i32) -> ITensor {
+        let n = shape.iter().product();
+        ITensor::from_vec(shape, (0..n).map(|_| rng.range_i32(lo, hi)).collect())
+    }
+
+    /// O(n^3) scalar reference matmul for cross-checking the blocked kernel.
+    fn matmul_naive(a: &ITensor, b: &ITensor) -> LTensor {
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let n = b.shape[1];
+        let mut out = vec![0i64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i64;
+                for kk in 0..k {
+                    acc += a.data[i * k + kk] as i64 * b.data[kk * n + j] as i64;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        LTensor::from_vec(&[m, n], out)
+    }
+
+    #[test]
+    fn matmul_blocked_equals_naive_prop() {
+        prop::check("matmul", 30, |g| {
+            let m = g.usize_in(1, 17);
+            let k = g.usize_in(1, 40);
+            let n = g.usize_in(1, 19);
+            let a = ITensor::from_vec(&[m, k], g.vec_i32(m * k, -127, 127));
+            let b = ITensor::from_vec(&[k, n], g.vec_i32(k * n, -32768, 32767));
+            assert_eq!(matmul_i64(&a, &b), matmul_naive(&a, &b));
+        });
+    }
+
+    #[test]
+    fn matmul_transposed_variants() {
+        prop::check("matmul_t", 20, |g| {
+            let m = g.usize_in(1, 9);
+            let k = g.usize_in(1, 12);
+            let n = g.usize_in(1, 7);
+            let a = ITensor::from_vec(&[m, k], g.vec_i32(m * k, -100, 100));
+            let b = ITensor::from_vec(&[k, n], g.vec_i32(k * n, -100, 100));
+            // at_b: build explicit aᵀ then plain matmul
+            let mut at = vec![0i32; k * m];
+            for i in 0..m {
+                for kk in 0..k {
+                    at[kk * m + i] = a.data[i * k + kk];
+                }
+            }
+            let at = ITensor::from_vec(&[k, m], at);
+            assert_eq!(matmul_at_b_i64(&at, &b), matmul_i64(&a, &b));
+            // a_bt: build explicit bᵀ
+            let mut bt = vec![0i32; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    bt[j * k + kk] = b.data[kk * n + j];
+                }
+            }
+            let bt = ITensor::from_vec(&[n, k], bt);
+            assert_eq!(matmul_a_bt_i64(&a, &bt), matmul_i64(&a, &b));
+        });
+    }
+
+    #[test]
+    fn matmul_i64_needed_no_wrap() {
+        let a = ITensor::from_vec(&[1, 1024], vec![127; 1024]);
+        let b = ITensor::from_vec(&[1024, 1], vec![32767; 1024]);
+        let z = matmul_i64(&a, &b);
+        assert_eq!(z.data[0], 127i64 * 32767 * 1024);
+        assert!(z.data[0] > i32::MAX as i64);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        let x = ITensor::from_vec(
+            &[1, 1, 4, 4],
+            (0..16).map(|v| v - 8).collect(),
+        );
+        let mut w = vec![0i32; 9];
+        w[4] = 1; // center tap
+        let w = ITensor::from_vec(&[1, 1, 3, 3], w);
+        let z = conv2d_i64(&x, &w, 1);
+        assert_eq!(z.shape, vec![1, 1, 4, 4]);
+        assert_eq!(z.data, x.data.iter().map(|&v| v as i64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn conv_against_direct_loops_prop() {
+        prop::check("conv", 15, |g| {
+            let b = g.usize_in(1, 3);
+            let c = g.usize_in(1, 4);
+            let o = g.usize_in(1, 5);
+            let h = g.usize_in(3, 9);
+            let w = g.usize_in(3, 9);
+            let x = ITensor::from_vec(&[b, c, h, w],
+                                      g.vec_i32(b * c * h * w, -127, 127));
+            let wt = ITensor::from_vec(&[o, c, 3, 3],
+                                       g.vec_i32(o * c * 9, -500, 500));
+            let got = conv2d_i64(&x, &wt, 1);
+            // direct 7-deep loop reference
+            for bi in 0..b {
+                for oi in 0..o {
+                    for oy in 0..h {
+                        for ox in 0..w {
+                            let mut acc = 0i64;
+                            for ci in 0..c {
+                                for ki in 0..3usize {
+                                    for kj in 0..3usize {
+                                        let iy = oy as isize + ki as isize - 1;
+                                        let ix = ox as isize + kj as isize - 1;
+                                        if iy < 0 || iy >= h as isize || ix < 0
+                                            || ix >= w as isize
+                                        {
+                                            continue;
+                                        }
+                                        let xv = x.data[((bi * c + ci) * h
+                                            + iy as usize)
+                                            * w
+                                            + ix as usize]
+                                            as i64;
+                                        let wv = wt.data[((oi * c + ci) * 3 + ki)
+                                            * 3
+                                            + kj]
+                                            as i64;
+                                        acc += xv * wv;
+                                    }
+                                }
+                            }
+                            assert_eq!(
+                                got.data[((bi * o + oi) * h + oy) * w + ox],
+                                acc
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn weight_grad_matches_finite_structure() {
+        // gw[o,c,ki,kj] = Σ_{b,oy,ox} g[b,o,oy,ox] * x[b,c,oy+ki-1,ox+kj-1]
+        prop::check("wgrad", 10, |gen| {
+            let (b, c, o, h, w) = (2, 2, 3, 5, 4);
+            let x = ITensor::from_vec(&[b, c, h, w],
+                                      gen.vec_i32(b * c * h * w, -50, 50));
+            let g = ITensor::from_vec(&[b, o, h, w],
+                                      gen.vec_i32(b * o * h * w, -20, 20));
+            let gw = conv2d_weight_grad(&x, &g, 3, 1);
+            for oi in 0..o {
+                for ci in 0..c {
+                    for ki in 0..3usize {
+                        for kj in 0..3usize {
+                            let mut acc = 0i64;
+                            for bi in 0..b {
+                                for oy in 0..h {
+                                    for ox in 0..w {
+                                        let iy = oy as isize + ki as isize - 1;
+                                        let ix = ox as isize + kj as isize - 1;
+                                        if iy < 0 || iy >= h as isize || ix < 0
+                                            || ix >= w as isize
+                                        {
+                                            continue;
+                                        }
+                                        acc += g.data
+                                            [((bi * o + oi) * h + oy) * w + ox]
+                                            as i64
+                                            * x.data[((bi * c + ci) * h
+                                                + iy as usize)
+                                                * w
+                                                + ix as usize]
+                                                as i64;
+                                    }
+                                }
+                            }
+                            assert_eq!(
+                                gw.data[((oi * c + ci) * 3 + ki) * 3 + kj],
+                                acc
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn maxpool_first_max_wins_and_bwd_routes() {
+        // tie in a window: first (row-major) index must win
+        let x = ITensor::from_vec(&[1, 1, 2, 2], vec![5, 5, 5, 5]);
+        let (p, a) = maxpool2d(&x, 2, 2);
+        assert_eq!(p.data, vec![5]);
+        assert_eq!(a.data, vec![0]);
+        let g = ITensor::from_vec(&[1, 1, 1, 1], vec![7]);
+        let gx = maxpool2d_bwd(&g, &a, &[1, 1, 2, 2], 2, 2);
+        assert_eq!(gx.data, vec![7, 0, 0, 0]);
+    }
+
+    #[test]
+    fn maxpool_gradient_conserved_prop() {
+        prop::check("pool", 20, |g| {
+            let (b, c) = (g.usize_in(1, 2), g.usize_in(1, 3));
+            let h = g.usize_in(2, 8) & !1; // even
+            let h = h.max(2);
+            let x = rand_it(&mut g.rng, &[b, c, h, h], -127, 127);
+            let (p, a) = maxpool2d(&x, 2, 2);
+            let gr = rand_it(&mut g.rng, &p.shape, -50, 50);
+            let gx = maxpool2d_bwd(&gr, &a, &x.shape, 2, 2);
+            let sum_in: i64 = gr.data.iter().map(|&v| v as i64).sum();
+            let sum_out: i64 = gx.data.iter().map(|&v| v as i64).sum();
+            assert_eq!(sum_in, sum_out);
+        });
+    }
+
+    #[test]
+    fn nitro_scale_floor_semantics() {
+        let z = LTensor::from_vec(&[1, 6], vec![-1, -255, -256, -257, 255, 256]);
+        let s = nitro_scale(&z, 256);
+        assert_eq!(s.data, vec![-1, -1, -1, -2, 0, 1]);
+    }
+
+    #[test]
+    fn nitro_relu_mu_pinned() {
+        assert_eq!(nitro_relu_mu(10), (-13 + -7 + 63 + 127) / 4);
+        assert_eq!(nitro_relu_mu(2), (-64 + -32 + 63 + 127) / 4);
+    }
+
+    #[test]
+    fn fused_scale_relu_equals_composition_prop() {
+        prop::check("fused", 25, |g| {
+            let n = g.usize_in(1, 200);
+            // in-contract pre-activations: the scaling-layer analysis
+            // guarantees |z| <= SF * 2^7-ish; give it head-room up to
+            // 2^38 so z/sf always fits the i32 the unfused path stores
+            let z = LTensor::from_vec(
+                &[1, n],
+                g.vec_i64(n)
+                    .into_iter()
+                    .map(|v| v.clamp(-(1 << 38), 1 << 38))
+                    .collect(),
+            );
+            for &(sf, ai) in &[(256i64, 10i64), (256 * 9 * 64, 2), (256 * 784, 100)] {
+                let a = nitro_relu(&nitro_scale(&z, sf), ai);
+                let b = nitro_scale_relu(&z, sf, ai);
+                assert_eq!(a, b);
+            }
+        });
+    }
+
+    #[test]
+    fn relu_bwd_segments() {
+        let zs = ITensor::from_vec(&[1, 5], vec![-200, -100, -1, 50, 200]);
+        let g = ITensor::from_vec(&[1, 5], vec![1000, 1000, -1000, 7, 7]);
+        let gz = nitro_relu_bwd(&zs, &g, 10);
+        assert_eq!(gz.data, vec![0, 100, -100, 7, 0]);
+    }
+
+    #[test]
+    fn one_hot_and_rss() {
+        let y = one_hot32(&[1, 0], 3);
+        assert_eq!(y.data, vec![0, 32, 0, 32, 0, 0]);
+        let yhat = ITensor::from_vec(&[2, 3], vec![0, 30, 0, 10, 0, 0]);
+        let (loss, grad) = rss_loss_grad(&yhat, &y);
+        assert_eq!(loss, (4 + 484) / 2);
+        assert_eq!(grad.data, vec![0, -2, 0, -22, 0, 0]);
+    }
+}

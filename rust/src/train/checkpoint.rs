@@ -1,0 +1,141 @@
+//! Checkpointing: save/restore integer network weights in a simple
+//! self-describing binary container.
+//!
+//! Format: magic `NITRO1\n`, u32 JSON-header length, JSON header (spec
+//! name, tensor names/shapes), then raw little-endian i32 payloads in
+//! header order. Integer weights round-trip exactly — which is what makes
+//! the paper's "local fine-tuning after deployment" story (App. E.3) work:
+//! a checkpoint *is* the deployed model, no quantization step.
+
+use crate::nn::Network;
+use crate::util::jsonio::Json;
+
+const MAGIC: &[u8] = b"NITRO1\n";
+
+pub fn save(net: &Network, path: &str) -> Result<(), String> {
+    let weights = net.weights();
+    let mut names = Vec::new();
+    let mut shapes = Vec::new();
+    for (i, (kind, t)) in weights.iter().enumerate() {
+        names.push(Json::Str(format!("{i}:{kind}")));
+        shapes.push(Json::ints(
+            &t.shape.iter().map(|&d| d as i64).collect::<Vec<_>>(),
+        ));
+    }
+    let header = Json::obj(vec![
+        ("spec", Json::Str(net.spec.name.clone())),
+        ("tensors", Json::Array(names)),
+        ("shapes", Json::Array(shapes)),
+    ])
+    .dump();
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend((header.len() as u32).to_le_bytes());
+    buf.extend(header.as_bytes());
+    for (_, t) in &weights {
+        for &v in &t.data {
+            buf.extend(v.to_le_bytes());
+        }
+    }
+    std::fs::write(path, buf).map_err(|e| format!("write {path}: {e}"))
+}
+
+/// Restore weights into an already-constructed network of the same spec.
+pub fn load(net: &mut Network, path: &str) -> Result<(), String> {
+    let buf = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+    if !buf.starts_with(MAGIC) {
+        return Err(format!("{path}: bad magic"));
+    }
+    let hlen = u32::from_le_bytes(
+        buf[MAGIC.len()..MAGIC.len() + 4].try_into().unwrap(),
+    ) as usize;
+    let hstart = MAGIC.len() + 4;
+    let header = std::str::from_utf8(&buf[hstart..hstart + hlen])
+        .map_err(|e| format!("{path}: {e}"))?;
+    let h = Json::parse(header)?;
+    let spec_name = h.req("spec")?.as_str().unwrap_or("");
+    if spec_name != net.spec.name {
+        return Err(format!(
+            "{path}: checkpoint is for '{spec_name}', network is '{}'",
+            net.spec.name
+        ));
+    }
+    let shapes = h.req("shapes")?.as_array().ok_or("bad shapes")?.to_vec();
+    let mut off = hstart + hlen;
+    let mut idx = 0;
+    let mut assign = |t: &mut crate::tensor::ITensor| -> Result<(), String> {
+        let shape = shapes
+            .get(idx)
+            .ok_or("missing tensor in checkpoint")?
+            .usize_vec()?;
+        if shape != t.shape {
+            return Err(format!(
+                "tensor {idx}: shape {shape:?} != expected {:?}",
+                t.shape
+            ));
+        }
+        let n = t.data.len();
+        if buf.len() < off + 4 * n {
+            return Err("truncated payload".into());
+        }
+        for v in t.data.iter_mut() {
+            *v = i32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+        idx += 1;
+        Ok(())
+    };
+    for blk in &mut net.blocks {
+        assign(&mut blk.wf)?;
+        assign(&mut blk.wl)?;
+    }
+    assign(&mut net.head.wo)?;
+    if off != buf.len() {
+        return Err(format!("{path}: {} trailing bytes", buf.len() - off));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    #[test]
+    fn roundtrip_exact() {
+        let spec = zoo::get("tinycnn").unwrap();
+        let net = Network::new(spec.clone(), 77);
+        let dir = std::env::temp_dir().join("nitro_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        save(&net, path.to_str().unwrap()).unwrap();
+        let mut net2 = Network::new(spec, 78); // different init
+        assert_ne!(net.blocks[0].wf, net2.blocks[0].wf);
+        load(&mut net2, path.to_str().unwrap()).unwrap();
+        for ((_, a), (_, b)) in net.weights().iter().zip(net2.weights()) {
+            assert_eq!(a, &b);
+        }
+    }
+
+    #[test]
+    fn spec_mismatch_rejected() {
+        let net = Network::new(zoo::get("tinycnn").unwrap(), 1);
+        let dir = std::env::temp_dir().join("nitro_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.ckpt");
+        save(&net, path.to_str().unwrap()).unwrap();
+        let mut other = Network::new(zoo::get("mlp1-mini").unwrap(), 1);
+        let err = load(&mut other, path.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("tinycnn"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let dir = std::env::temp_dir().join("nitro_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, b"garbage").unwrap();
+        let mut net = Network::new(zoo::get("tinycnn").unwrap(), 1);
+        assert!(load(&mut net, path.to_str().unwrap()).is_err());
+    }
+}

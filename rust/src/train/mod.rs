@@ -1,0 +1,258 @@
+//! LES training orchestration: epoch loop, evaluation, metrics recording,
+//! LR plateau scheduling, weight-magnitude probes (Fig. 3 / App. E.3) and
+//! checkpointing.
+
+pub mod checkpoint;
+
+use crate::data::{Batcher, Dataset};
+use crate::nn::{Hyper, Network};
+use crate::optim::PlateauScheduler;
+use crate::util::rng::Pcg32;
+
+/// Training configuration (paper App. D defaults where applicable).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub hyper: Hyper,
+    pub seed: u64,
+    /// Evaluate every `eval_every` epochs (plateau scheduler input).
+    pub eval_every: usize,
+    pub plateau_patience: usize,
+    /// Plateau reductions are suppressed for this many epochs: the integer
+    /// bootstrap phase is flat by construction (see EXPERIMENTS.md).
+    pub plateau_warmup: usize,
+    /// Run block backward passes on worker threads (L3 scheduler).
+    pub parallel_blocks: bool,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 10,
+            batch: 64,
+            hyper: Hyper::default(),
+            seed: 42,
+            eval_every: 1,
+            plateau_patience: 10,
+            plateau_warmup: 40,
+            parallel_blocks: true,
+            verbose: false,
+        }
+    }
+}
+
+/// Per-epoch record for EXPERIMENTS.md and the figure harnesses.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub mean_head_loss: f64,
+    pub mean_block_loss: Vec<f64>,
+    pub train_acc: f64,
+    pub test_acc: f64,
+    pub gamma_inv: i64,
+    pub secs: f64,
+}
+
+/// Weight-magnitude probe (Fig. 3): per-weight-tensor abs-value quartiles
+/// and bit-width.
+#[derive(Clone, Debug)]
+pub struct WeightStats {
+    pub name: String,
+    pub mean_abs: f64,
+    pub q50: i32,
+    pub q90: i32,
+    pub max_abs: i32,
+    pub bitwidth: u32,
+}
+
+pub struct TrainResult {
+    pub epochs: Vec<EpochRecord>,
+    pub final_test_acc: f64,
+    pub weight_stats: Vec<WeightStats>,
+    /// Peak |activation| / |gradient-side| bit-width seen (App. E.3 int32
+    /// claim is about these).
+    pub diverged: bool,
+}
+
+/// Train `net` on `train`, evaluating on `test`. The single entry point
+/// used by every experiment driver.
+pub fn fit(net: &mut Network, train: &Dataset, test: &Dataset,
+           cfg: &TrainConfig) -> TrainResult {
+    let flatten = net.spec.input_shape.len() == 1;
+    let mut rng = Pcg32::with_stream(cfg.seed, 0x74726169);
+    let mut sched = PlateauScheduler::new(cfg.hyper.gamma_inv,
+                                          cfg.plateau_patience);
+    sched.warmup = cfg.plateau_warmup;
+    let mut epochs = Vec::new();
+    let mut diverged = false;
+    'outer: for epoch in 0..cfg.epochs {
+        let t0 = std::time::Instant::now();
+        let hp = Hyper { gamma_inv: sched.gamma_inv, ..cfg.hyper };
+        let mut head_loss = 0f64;
+        let mut block_loss: Vec<f64> = Vec::new();
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let mut batches = 0usize;
+        for (x, labels) in Batcher::new(train, cfg.batch, flatten, &mut rng) {
+            let rep = if cfg.parallel_blocks {
+                net.train_batch_parallel(&x, &labels, &hp, &mut rng)
+            } else {
+                net.train_batch(&x, &labels, &hp, &mut rng)
+            };
+            if block_loss.is_empty() {
+                block_loss = vec![0.0; rep.block_loss.len()];
+            }
+            for (acc, &l) in block_loss.iter_mut().zip(&rep.block_loss) {
+                *acc += l as f64;
+            }
+            head_loss += rep.head_loss as f64;
+            correct += rep.correct;
+            seen += labels.len();
+            batches += 1;
+            // divergence guard (App. E.1 "(unstable)" rows): weights blowing
+            // past int16 by orders of magnitude means the run is dead.
+            if rep.head_loss.abs() > 1 << 40 {
+                diverged = true;
+            }
+        }
+        let train_acc = correct as f64 / seen.max(1) as f64;
+        let test_acc = if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs
+        {
+            evaluate(net, test, cfg.batch)
+        } else {
+            f64::NAN
+        };
+        if !test_acc.is_nan() {
+            sched.step(test_acc);
+        }
+        let rec = EpochRecord {
+            epoch,
+            mean_head_loss: head_loss / batches.max(1) as f64,
+            mean_block_loss: block_loss
+                .iter()
+                .map(|&l| l / batches.max(1) as f64)
+                .collect(),
+            train_acc,
+            test_acc,
+            gamma_inv: sched.gamma_inv,
+            secs: t0.elapsed().as_secs_f64(),
+        };
+        if cfg.verbose {
+            eprintln!(
+                "[epoch {:>3}] head_loss {:>12.1} train_acc {:.4} test_acc {} \
+                 gamma_inv {} ({:.2}s)",
+                rec.epoch,
+                rec.mean_head_loss,
+                rec.train_acc,
+                if rec.test_acc.is_nan() {
+                    "   -  ".to_string()
+                } else {
+                    format!("{:.4}", rec.test_acc)
+                },
+                rec.gamma_inv,
+                rec.secs
+            );
+        }
+        epochs.push(rec);
+        if diverged {
+            break 'outer;
+        }
+    }
+    let final_test_acc = evaluate(net, test, cfg.batch);
+    let weight_stats = weight_stats(net);
+    TrainResult { epochs, final_test_acc, weight_stats, diverged }
+}
+
+/// Accuracy over a dataset.
+pub fn evaluate(net: &Network, ds: &Dataset, batch: usize) -> f64 {
+    let flatten = net.spec.input_shape.len() == 1;
+    let mut correct = 0usize;
+    for (x, labels) in Batcher::sequential(ds, batch, flatten) {
+        correct += net.eval_batch(&x, &labels);
+    }
+    correct as f64 / ds.len().max(1) as f64
+}
+
+/// Fig. 3 probe: abs-value distribution per weight tensor.
+pub fn weight_stats(net: &Network) -> Vec<WeightStats> {
+    let mut out = Vec::new();
+    for (i, blk) in net.blocks.iter().enumerate() {
+        out.push(stats_for(&format!("block{i}.wf"), &blk.wf));
+        out.push(stats_for(&format!("block{i}.wl"), &blk.wl));
+    }
+    out.push(stats_for("head.wo", &net.head.wo));
+    out
+}
+
+fn stats_for(name: &str, w: &crate::tensor::ITensor) -> WeightStats {
+    let mut abs: Vec<i32> = w.data.iter().map(|&v| v.saturating_abs()).collect();
+    abs.sort_unstable();
+    let q = |p: f64| abs[((abs.len() - 1) as f64 * p) as usize];
+    WeightStats {
+        name: name.to_string(),
+        mean_abs: w.mean_abs(),
+        q50: q(0.5),
+        q90: q(0.9),
+        max_abs: *abs.last().unwrap_or(&0),
+        bitwidth: w.bitwidth(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::nn::zoo;
+
+    #[test]
+    fn fit_learns_tiny_dataset() {
+        // NITRO-D has a long integer bootstrap phase (the scaling layers
+        // truncate everything until the weights grow ~100x from init), so
+        // even the tiny preset needs ~100 epochs — they take ~0.01s each.
+        let ds = synthetic::by_name("tiny", 1000, 1).unwrap();
+        let (mut tr, te) = ds.split_test(200);
+        tr.mad_normalize();
+        let mut te = te;
+        te.mad_normalize();
+        let mut net = Network::new(zoo::get("tinycnn").unwrap(), 2);
+        let cfg = TrainConfig {
+            epochs: 140,
+            batch: 64,
+            hyper: Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 },
+            ..Default::default()
+        };
+        let res = fit(&mut net, &tr, &te, &cfg);
+        assert!(!res.diverged);
+        assert!(
+            res.final_test_acc > 0.5,
+            "tinycnn should beat 10-class chance by 5x: {}",
+            res.final_test_acc
+        );
+        // loss decreased
+        let first = res.epochs.first().unwrap().mean_head_loss;
+        let last = res.epochs.last().unwrap().mean_head_loss;
+        assert!(last < first, "{first} -> {last}");
+        // weight probes present for 3 blocks + head
+        assert_eq!(res.weight_stats.len(), 7);
+    }
+
+    #[test]
+    fn evaluate_is_deterministic() {
+        let ds = synthetic::by_name("tiny", 100, 3).unwrap();
+        let net = Network::new(zoo::get("tinycnn").unwrap(), 4);
+        let a = evaluate(&net, &ds, 32);
+        let b = evaluate(&net, &ds, 16); // batch size must not matter
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_stats_bitwidths_start_small() {
+        let net = Network::new(zoo::get("tinycnn").unwrap(), 4);
+        for s in weight_stats(&net) {
+            assert!(s.bitwidth <= 8, "{s:?}"); // Kaiming bounds are tiny
+            assert!(s.max_abs >= s.q90 && s.q90 >= s.q50);
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Micro-benchmark harness with warmup and robust statistics (replaces
+//! `criterion`, not vendored). `cargo bench` targets are `harness = false`
+//! binaries built on this module; they print aligned rows and can emit
+//! JSON for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub min_ns: f64,
+    /// Optional work metric (elements, ops) for throughput reporting.
+    pub work: Option<f64>,
+}
+
+impl Stats {
+    pub fn throughput(&self) -> Option<f64> {
+        self.work.map(|w| w / (self.median_ns * 1e-9))
+    }
+
+    pub fn row(&self) -> String {
+        let thr = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("{:8.2} G/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("{:8.2} M/s", t / 1e6),
+            Some(t) => format!("{:8.0}  /s", t),
+            None => "          --".to_string(),
+        };
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>6} {}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters,
+            thr
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+pub struct Bencher {
+    /// Target wall-clock budget per benchmark, seconds.
+    pub budget_s: f64,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // NITRO_BENCH_BUDGET lets CI shrink the run.
+        let budget_s = std::env::var("NITRO_BENCH_BUDGET")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        Bencher { budget_s, min_iters: 5, max_iters: 10_000, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn header() -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>6} {:>12}",
+            "benchmark", "median", "p10", "p90", "iters", "throughput"
+        )
+    }
+
+    /// Run `f` repeatedly; `work` is the per-iteration work metric for
+    /// throughput (e.g. MACs) or None.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, work: Option<f64>,
+                             mut f: F) -> &Stats {
+        // warmup + calibration
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let target = (self.budget_s / once) as usize;
+        let iters = target.clamp(self.min_iters, self.max_iters);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| samples[(p * (samples.len() - 1) as f64) as usize];
+        let stats = Stats {
+            name: name.to_string(),
+            iters,
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            min_ns: samples[0],
+            work,
+        };
+        println!("{}", stats.row());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Dump all results as a JSON array (consumed by EXPERIMENTS.md
+    /// tooling).
+    pub fn json(&self) -> String {
+        use crate::util::jsonio::Json;
+        Json::Array(
+            self.results
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("name", Json::Str(s.name.clone())),
+                        ("median_ns", Json::Float(s.median_ns)),
+                        ("p10_ns", Json::Float(s.p10_ns)),
+                        ("p90_ns", Json::Float(s.p90_ns)),
+                        ("mean_ns", Json::Float(s.mean_ns)),
+                        ("iters", Json::Int(s.iters as i64)),
+                        (
+                            "throughput",
+                            s.throughput().map(Json::Float).unwrap_or(Json::Null),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+        .dump()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher { budget_s: 0.02, ..Default::default() };
+        let mut x = 0u64;
+        let s = b
+            .bench("spin", Some(1000.0), || {
+                for i in 0..1000u64 {
+                    x = x.wrapping_add(i * i);
+                }
+            })
+            .clone();
+        assert!(s.median_ns > 0.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+        assert!(s.iters >= 5);
+        assert!(s.throughput().unwrap() > 0.0);
+        assert!(b.json().contains("spin"));
+        assert!(x > 0); // defeat DCE
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12e3).ends_with("µs"));
+        assert!(fmt_ns(12e6).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+}

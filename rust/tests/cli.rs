@@ -1,0 +1,91 @@
+//! End-to-end CLI tests: drive the actual `nitro` binary the way a user
+//! would (train -> checkpoint -> eval, zoo listing, error paths).
+
+use std::process::Command;
+
+fn nitro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_nitro"))
+}
+
+fn run(args: &[&str]) -> (i32, String, String) {
+    let out = nitro().args(args).output().expect("spawn nitro");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn zoo_lists_paper_architectures() {
+    let (code, stdout, _) = run(&["zoo"]);
+    assert_eq!(code, 0);
+    for preset in ["mlp1", "mlp4", "vgg8b", "vgg11b", "tinycnn"] {
+        assert!(stdout.contains(preset), "zoo missing {preset}:\n{stdout}");
+    }
+}
+
+#[test]
+fn help_and_unknown_subcommand() {
+    let (code, _, stderr) = run(&["--help"]);
+    assert_eq!(code, 0);
+    assert!(stderr.contains("experiment"));
+    let (code, _, stderr) = run(&["frobnicate"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn train_checkpoint_eval_roundtrip() {
+    let dir = std::env::temp_dir().join("nitro_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("m.ckpt");
+    let ckpt_s = ckpt.to_str().unwrap();
+    // short training run: tests plumbing, not accuracy (bootstrap needs
+    // ~100 epochs; 12 keeps the test fast)
+    let (code, stdout, stderr) = run(&[
+        "train", "--preset", "tinycnn", "--dataset", "tiny", "--epochs",
+        "12", "--n-train", "300", "--n-test", "60", "--quiet", "--save",
+        ckpt_s,
+    ]);
+    assert_eq!(code, 0, "train failed: {stderr}");
+    assert!(stdout.contains("final test accuracy"), "{stdout}");
+    assert!(ckpt.exists());
+    let (code, stdout, stderr) = run(&[
+        "eval", ckpt_s, "--preset", "tinycnn", "--dataset", "tiny",
+        "--n-test", "60",
+    ]);
+    assert_eq!(code, 0, "eval failed: {stderr}");
+    assert!(stdout.contains("accuracy:"), "{stdout}");
+}
+
+#[test]
+fn train_rejects_unknown_preset_and_dataset() {
+    let (code, _, stderr) = run(&["train", "--preset", "nope"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown preset"), "{stderr}");
+    let (code, _, stderr) = run(&["train", "--dataset", "nope"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown dataset"), "{stderr}");
+}
+
+#[test]
+fn experiment_rejects_unknown_name() {
+    let (code, _, stderr) = run(&["experiment", "bogus"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown experiment"), "{stderr}");
+    let (code, _, stderr) = run(&["experiment", "table1", "--scale", "weird"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown scale"), "{stderr}");
+}
+
+#[test]
+fn runtime_smoke_if_artifacts_present() {
+    if !std::path::Path::new("artifacts/tinycnn/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (code, stdout, stderr) = run(&["runtime", "--preset", "tinycnn"]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stdout.contains("smoke check PASSED"), "{stdout}");
+}

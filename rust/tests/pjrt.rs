@@ -1,0 +1,92 @@
+//! PJRT integration: the artifact-backed engine (L1 Pallas kernels inside
+//! L2 JAX graphs, AOT-compiled, executed from Rust) must be bit-identical
+//! to the pure-Rust NativeEngine — the three-layer equivalence the whole
+//! architecture rests on.
+//!
+//! Requires `make artifacts`. Tests skip cleanly if artifacts are missing.
+
+use nitro::coordinator::engine::{Engine, NativeEngine, PjrtEngine};
+use nitro::nn::{zoo, Hyper, Network};
+use nitro::util::rng::Pcg32;
+
+fn have_artifacts(preset: &str) -> bool {
+    let ok = std::path::Path::new(&format!("artifacts/{preset}/manifest.json"))
+        .exists();
+    if !ok {
+        eprintln!("skipping pjrt test: run `make artifacts` first");
+    }
+    ok
+}
+
+fn engines_match(preset: &str, steps: usize) {
+    if !have_artifacts(preset) {
+        return;
+    }
+    let dir = format!("artifacts/{preset}");
+    let mut pjrt = PjrtEngine::load(&dir, 7).expect("load artifacts");
+    let m = pjrt.manifest.clone();
+
+    // identical starting weights for both engines
+    let spec = zoo::get(preset).unwrap();
+    let net = Network::new(spec, 7);
+    let wf: Vec<_> = net.blocks.iter().map(|b| b.wf.clone()).collect();
+    let wl: Vec<_> = net.blocks.iter().map(|b| b.wl.clone()).collect();
+    pjrt.set_weights(wf, wl, net.head.wo.clone());
+    let mut native = NativeEngine::new(net, 7, true);
+
+    let hp = Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 };
+    let mut rng = Pcg32::new(123);
+    for step in 0..steps {
+        let mut shape = vec![m.batch];
+        shape.extend(&m.input_shape);
+        let n: usize = shape.iter().product();
+        let x = nitro::tensor::ITensor::from_vec(
+            &shape,
+            (0..n).map(|_| rng.range_i32(-127, 127)).collect(),
+        );
+        let labels: Vec<usize> =
+            (0..m.batch).map(|_| rng.below(m.num_classes as u32) as usize)
+                .collect();
+        let (bl_n, hl_n, c_n) = native.train_batch(&x, &labels, &hp);
+        let (bl_p, hl_p, c_p) = pjrt.train_batch(&x, &labels, &hp);
+        assert_eq!(bl_n, bl_p, "step {step}: block losses native != pjrt");
+        assert_eq!(hl_n, hl_p, "step {step}: head loss native != pjrt");
+        assert_eq!(c_n, c_p, "step {step}: correct-count diverged");
+        // inference parity on the same batch
+        let y_n = native.infer(&x);
+        let y_p = pjrt.infer(&x);
+        assert_eq!(y_n, y_p, "step {step}: inference diverged");
+    }
+    // full weight equality at the end
+    let wn = native.weights();
+    let wp = pjrt.weights();
+    assert_eq!(wn.len(), wp.len());
+    for (i, (a, b)) in wn.iter().zip(&wp).enumerate() {
+        assert_eq!(a, b, "weight tensor {i} diverged after {steps} steps");
+    }
+}
+
+#[test]
+fn tinycnn_native_pjrt_bitexact() {
+    engines_match("tinycnn", 3);
+}
+
+#[test]
+fn mlp1_mini_native_pjrt_bitexact() {
+    engines_match("mlp1-mini", 3);
+}
+
+#[test]
+fn runtime_loads_and_reports_platform() {
+    if !have_artifacts("tinycnn") {
+        return;
+    }
+    let rt = nitro::runtime::Runtime::cpu().unwrap();
+    let platform = rt.platform();
+    assert!(platform.to_lowercase().contains("cpu")
+            || platform.to_lowercase().contains("host"),
+            "platform = {platform}");
+    // load one artifact directly
+    let exe = rt.load("artifacts/tinycnn/infer.hlo.txt").unwrap();
+    assert!(exe.name.ends_with("infer.hlo.txt"));
+}
