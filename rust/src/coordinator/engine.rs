@@ -10,7 +10,7 @@
 //! asserts equality of every weight tensor.
 
 use crate::nn::{Hyper, Network};
-use crate::runtime::{Arg, Executable, Manifest, Out, Runtime};
+use crate::runtime::{Arg, Executable, Manifest, Runtime};
 use crate::tensor::{one_hot32, ITensor};
 use crate::util::rng::Pcg32;
 

@@ -1,14 +1,19 @@
-//! Experiment drivers — one per table/figure of the paper's evaluation
-//! (DESIGN.md per-experiment index). Each driver trains scaled workloads
-//! (DESIGN.md §Substitutions), prints the same row structure the paper
-//! reports (paper value alongside the measured value), and appends a JSON
-//! record under `results/`.
+//! Experiment drivers (DESIGN.md per-experiment index).
+//!
+//! The paper's *tables* (1, 2, 8, 9) are declarative [`ExperimentSpec`]
+//! JSON files under `experiments/` executed by [`crate::coordinator::
+//! runner`]; `run("table1", ..)` below just dispatches to the embedded
+//! copy of the committed spec. The figure/extension drivers (fig2-*,
+//! fig3, momentum, probe) stay imperative because they probe network
+//! internals mid-run (weight magnitudes, bit-widths, custom topologies)
+//! that a dataset/preset/engine grid cannot express.
 //!
 //! Scale knob: `--scale quick|full`. `quick` uses the narrow presets and
 //! small synthetic datasets (~minutes on CPU); `full` uses the paper-width
 //! architectures (hours — provided for completeness).
 
-use crate::baselines::{fp, pocketnn};
+use crate::coordinator::runner::{self, RunnerOpts};
+use crate::coordinator::spec::ExperimentSpec;
 use crate::data::loader;
 use crate::nn::{zoo, Hyper, Network};
 use crate::train::{fit, weight_stats, TrainConfig};
@@ -28,12 +33,22 @@ impl Scale {
             _ => Err(format!("unknown scale '{s}' (quick|full)")),
         }
     }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scale::Quick => "quick",
+            Scale::Full => "full",
+        }
+    }
 }
 
 pub struct ExpCtx {
     pub scale: Scale,
     pub seed: u64,
     pub epochs: usize,
+    /// The raw `--epochs` value (0 = caller did not override); table specs
+    /// resolve their own scale-default epoch budgets from this.
+    pub epochs_override: usize,
     pub n_train: usize,
     pub n_test: usize,
     pub out_dir: String,
@@ -44,6 +59,7 @@ impl ExpCtx {
         // quick: micro presets, enough epochs to clear the integer
         // bootstrap phase (weights must grow ~100x before the scaling
         // layers stop truncating — see EXPERIMENTS.md); full: paper scale.
+        let epochs_override = epochs;
         let (n_train, n_test, epochs) = match scale {
             Scale::Quick => (1200, 300, if epochs == 0 { 60 } else { epochs }),
             Scale::Full => (20000, 4000, if epochs == 0 { 150 } else { epochs }),
@@ -52,6 +68,7 @@ impl ExpCtx {
             scale,
             seed,
             epochs,
+            epochs_override,
             n_train,
             n_test,
             out_dir: "results".to_string(),
@@ -101,29 +118,6 @@ fn load_data(ctx: &ExpCtx, name: &str)
     (tr, te)
 }
 
-fn nitro_run_b(ctx: &ExpCtx, preset: &str, data: &str, hp: Hyper,
-               dropout: (f64, f64), batch: usize)
-               -> crate::train::TrainResult {
-    let (tr, te) = load_data(ctx, data);
-    let spec = zoo::get(preset).unwrap_or_else(|| panic!("preset {preset}"));
-    let mut net = Network::new(spec, ctx.seed);
-    net.set_dropout(dropout.0, dropout.1);
-    let cfg = TrainConfig {
-        epochs: ctx.epochs,
-        batch,
-        hyper: hp,
-        seed: ctx.seed,
-        verbose: true,
-        ..Default::default()
-    };
-    fit(&mut net, &tr, &te, &cfg)
-}
-
-fn nitro_run(ctx: &ExpCtx, preset: &str, data: &str, hp: Hyper,
-             dropout: (f64, f64)) -> crate::train::TrainResult {
-    nitro_run_b(ctx, preset, data, hp, dropout, 64)
-}
-
 /// The micro CNN presets are calibrated at batch 32 / gamma_inv 128
 /// (EXPERIMENTS.md); full scale uses the paper's batch 64.
 fn cnn_batch(ctx: &ExpCtx) -> usize {
@@ -134,226 +128,21 @@ fn cnn_batch(ctx: &ExpCtx) -> usize {
 }
 
 // ---------------------------------------------------------------------------
-// Table 1 — MLP architectures
+// Tables 1/2/8/9 — declarative specs under experiments/
 // ---------------------------------------------------------------------------
 
-/// Paper Table 1: NITRO-D vs PocketNN vs FP LES vs FP BP on MLPs.
-/// Paper reference values are carried in the printed rows.
-pub fn table1(ctx: &ExpCtx) {
-    println!("== Table 1: MLP architectures ==");
-    println!("{:<14} {:<14} {:>9} {:>10} {:>8} {:>8}   (paper NITRO-D)",
-             "arch", "dataset", "NITRO-D", "PocketNN", "FP LES", "FP BP");
-    // (arch-full, arch-narrow, dataset, paper NITRO-D accuracy)
-    let rows_spec: &[(&str, &str, &str, f64)] = &[
-        ("mlp1", "mlp1", "mnist", 97.36),
-        ("mlp2", "mlp2", "fashion-mnist", 88.66),
-        ("mlp3", "mlp3-narrow", "mnist", 98.28),
-        ("mlp3", "mlp3-narrow", "fashion-mnist", 89.13),
-        ("mlp4", "mlp4-narrow", "cifar10", 61.03),
-    ];
-    let mut out_rows = Vec::new();
-    // MLP epochs are cheap; the deeper MLPs need the longer budget to
-    // clear the integer bootstrap (EXPERIMENTS.md)
-    let ctx = &ExpCtx::new(ctx.scale, ctx.seed, ctx.epochs.max(120));
-    for &(full, narrow, data, paper) in rows_spec {
-        let preset = ctx.preset(full, narrow);
-        let hp = Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 };
-        let res = nitro_run(ctx, &preset, data, hp, (0.0, 0.0));
-        let nitro_acc = res.final_test_acc * 100.0;
-
-        // PocketNN baseline: same hidden dims
-        let (tr, te) = load_data(ctx, data);
-        let spec = zoo::get(&preset).unwrap();
-        let mut dims = vec![spec.input_shape[0]];
-        for b in &spec.blocks {
-            dims.push(b.out_features());
-        }
-        dims.push(spec.num_classes);
-        let (_, pocket_acc) =
-            pocketnn::train(&dims, &tr, &te, ctx.epochs, 64, 512, ctx.seed);
-        let pocket_acc = pocket_acc * 100.0;
-
-        // float baselines on the same topology
-        let mut fnet = fp::FpNet::new(zoo::get(&preset).unwrap(), ctx.seed);
-        let les = fp::train_les(&mut fnet, &tr, &te, ctx.epochs, 64, 1e-3,
-                                ctx.seed);
-        let mut fnet2 = fp::FpNet::new(zoo::get(&preset).unwrap(), ctx.seed);
-        let bp = fp::train_bp(&mut fnet2, &tr, &te, ctx.epochs, 64, 1e-3,
-                              ctx.seed);
-        println!(
-            "{:<14} {:<14} {:>8.2}% {:>9.2}% {:>7.2}% {:>7.2}%   ({paper:.2}%)",
-            preset, data, nitro_acc, pocket_acc,
-            les.test_acc * 100.0, bp.test_acc * 100.0
-        );
-        out_rows.push(Json::obj(vec![
-            ("arch", Json::Str(preset.clone())),
-            ("dataset", Json::Str(data.to_string())),
-            ("nitro_d", Json::Float(nitro_acc)),
-            ("pocketnn", Json::Float(pocket_acc)),
-            ("fp_les", Json::Float(les.test_acc * 100.0)),
-            ("fp_bp", Json::Float(bp.test_acc * 100.0)),
-            ("paper_nitro_d", Json::Float(paper)),
-        ]));
-    }
-    ctx.save("table1", &Json::Array(out_rows));
-}
-
-// ---------------------------------------------------------------------------
-// Table 2 — CNN architectures
-// ---------------------------------------------------------------------------
-
-/// Paper Table 2: NITRO-D vs FP LES vs FP BP on VGG8B/VGG11B.
-pub fn table2(ctx: &ExpCtx) {
-    println!("== Table 2: CNN architectures ==");
-    println!("{:<18} {:<14} {:>9} {:>8} {:>8}   (paper NITRO-D)",
-             "arch", "dataset", "NITRO-D", "FP LES", "FP BP");
-    let rows_spec: &[(&str, &str, &str, f64, i64, i64)] = &[
-        // full preset, narrow preset, dataset, paper acc, eta_fw, eta_lr
-        ("vgg8b-mnist", "vgg8b-micro-mnist", "mnist", 99.45, 30000, 3000),
-        ("vgg8b-mnist", "vgg8b-micro-mnist", "fashion-mnist", 93.66, 28000, 3500),
-        ("vgg8b", "vgg8b-micro", "cifar10", 87.96, 25000, 3000),
-        ("vgg11b", "vgg11b-micro", "cifar10", 87.39, 28000, 4500),
-    ];
-    let mut out_rows = Vec::new();
-    for &(full, narrow, data, paper, eta_fw, eta_lr) in rows_spec {
-        let preset = ctx.preset(full, narrow);
-        let hp = Hyper { gamma_inv: ctx.gamma_cnn(), eta_fw_inv: eta_fw,
-                         eta_lr_inv: eta_lr };
-        let res = nitro_run_b(ctx, &preset, data, hp, (0.0, 0.0),
-                              cnn_batch(ctx));
-        let nitro_acc = res.final_test_acc * 100.0;
-        let (tr, te) = load_data(ctx, data);
-        // Adam needs no integer bootstrap: a third of the epochs suffices
-        let fp_epochs = (ctx.epochs / 3).max(10);
-        let mut fnet = fp::FpNet::new(zoo::get(&preset).unwrap(), ctx.seed);
-        let les = fp::train_les(&mut fnet, &tr, &te, fp_epochs, 64, 1e-3,
-                                ctx.seed);
-        let mut fnet2 = fp::FpNet::new(zoo::get(&preset).unwrap(), ctx.seed);
-        let bp = fp::train_bp(&mut fnet2, &tr, &te, fp_epochs, 64, 1e-3,
-                              ctx.seed);
-        println!(
-            "{:<18} {:<14} {:>8.2}% {:>7.2}% {:>7.2}%   ({paper:.2}%)",
-            preset, data, nitro_acc, les.test_acc * 100.0,
-            bp.test_acc * 100.0
-        );
-        out_rows.push(Json::obj(vec![
-            ("arch", Json::Str(preset.clone())),
-            ("dataset", Json::Str(data.to_string())),
-            ("nitro_d", Json::Float(nitro_acc)),
-            ("fp_les", Json::Float(les.test_acc * 100.0)),
-            ("fp_bp", Json::Float(bp.test_acc * 100.0)),
-            ("paper_nitro_d", Json::Float(paper)),
-        ]));
-    }
-    ctx.save("table2", &Json::Array(out_rows));
-}
-
-// ---------------------------------------------------------------------------
-// Table 8 — learning-rate ablation (App. E.1)
-// ---------------------------------------------------------------------------
-
-/// gamma_inv sweep {256, 512, 1024, 2048, 4096}: the paper reports
-/// (unstable) at 256, best at 512, degradation at 1024/2048, (no learning)
-/// at 4096.
-pub fn table8(ctx: &ExpCtx) {
-    println!("== Table 8: learning-rate sweep (VGG11B/CIFAR-10 scaled) ==");
-    // quick scale: tinycnn carries the same sweep shape at 1/1000 the cost
-    let preset = ctx.preset("vgg11b", "tinycnn");
-    let data = if ctx.scale == Scale::Full { "cifar10" } else { "tiny" };
-    let (tr, te) = load_data(ctx, data);
-    println!("{:>9} {:>12} {:>12}  paper", "gamma_inv", "train_acc", "test_acc");
-    // full scale sweeps the paper's exact grid; quick scale shifts the
-    // grid by the micro preset's 4x-smaller calibrated gamma_inv so the
-    // same unstable / sweet-spot / dead shape is visible
-    let paper: &[(i64, &str)] = match ctx.scale {
-        Scale::Full => &[
-            (256, "(unstable)"),
-            (512, "88.86 / 84.66"),
-            (1024, "85.95 / 83.10"),
-            (2048, "72.43 / 70.23"),
-            (4096, "(no learning)"),
-        ],
-        Scale::Quick => &[
-            (64, "(unstable)  [paper: 256]"),
-            (512, "sweet spot [paper: 512 -> 88.86/84.66]"),
-            (1024, "degraded   [paper: 1024 -> 85.95/83.10]"),
-            (4096, "degraded   [paper: 2048 -> 72.43/70.23]"),
-            (32768, "(no learning) [paper: 4096]"),
-        ],
+/// Execute a paper-table spec (embedded copy of `experiments/<name>.json`)
+/// with this context's scale/seed/epoch overrides applied.
+fn run_table_spec(name: &str, ctx: &ExpCtx) -> Result<(), String> {
+    let spec = ExperimentSpec::load_builtin(name)?;
+    let opts = RunnerOpts {
+        scale: Some(ctx.scale),
+        seed: Some(ctx.seed),
+        epochs: ctx.epochs_override,
+        out_dir: ctx.out_dir.clone(),
+        ..Default::default()
     };
-    let mut out_rows = Vec::new();
-    for &(gamma, paper_note) in paper {
-        let spec = zoo::get(&preset).unwrap();
-        let mut net = Network::new(spec, ctx.seed);
-        let cfg = TrainConfig {
-            epochs: ctx.epochs,
-            batch: 64,
-            hyper: Hyper { gamma_inv: gamma, eta_fw_inv: 0, eta_lr_inv: 0 },
-            seed: ctx.seed,
-            plateau_patience: usize::MAX, // fixed LR for the sweep
-            ..Default::default()
-        };
-        let res = fit(&mut net, &tr, &te, &cfg);
-        let train_acc = res.epochs.last().map(|e| e.train_acc).unwrap_or(0.0);
-        let status = if res.diverged {
-            "(unstable)".to_string()
-        } else if train_acc < 0.15 {
-            "(no learning)".to_string()
-        } else {
-            format!("{:.2} / {:.2}", train_acc * 100.0,
-                    res.final_test_acc * 100.0)
-        };
-        println!("{gamma:>9} {status:>26}  {paper_note}");
-        out_rows.push(Json::obj(vec![
-            ("gamma_inv", Json::Int(gamma)),
-            ("train_acc", Json::Float(train_acc * 100.0)),
-            ("test_acc", Json::Float(res.final_test_acc * 100.0)),
-            ("diverged", Json::Bool(res.diverged)),
-            ("paper", Json::Str(paper_note.to_string())),
-        ]));
-    }
-    ctx.save("table8", &Json::Array(out_rows));
-}
-
-// ---------------------------------------------------------------------------
-// Table 9 — dropout ablation (App. E.2)
-// ---------------------------------------------------------------------------
-
-pub fn table9(ctx: &ExpCtx) {
-    println!("== Table 9: dropout grid (VGG11B/CIFAR-10 scaled) ==");
-    let preset = ctx.preset("vgg11b", "tinycnn");
-    let data = if ctx.scale == Scale::Full { "cifar10" } else { "tiny" };
-    let (tr, te) = load_data(ctx, data);
-    let grid: &[(f64, f64)] = &[
-        (0.0, 0.55), (0.05, 0.5), (0.0, 0.85), (0.0, 0.4), (0.0, 0.05),
-        (0.2, 0.45), (0.05, 0.55), (0.1, 0.55), (0.2, 0.25),
-    ];
-    println!("{:>6} {:>6} {:>11} {:>10}", "p_c", "p_l", "train_acc",
-             "test_acc");
-    let mut out_rows = Vec::new();
-    for &(pc, pl) in grid {
-        let spec = zoo::get(&preset).unwrap();
-        let mut net = Network::new(spec, ctx.seed);
-        net.set_dropout(pc, pl);
-        let cfg = TrainConfig {
-            epochs: ctx.epochs,
-            batch: 64,
-            hyper: Hyper { gamma_inv: 512, eta_fw_inv: 0, eta_lr_inv: 0 },
-            seed: ctx.seed,
-            ..Default::default()
-        };
-        let res = fit(&mut net, &tr, &te, &cfg);
-        let train_acc = res.epochs.last().map(|e| e.train_acc).unwrap_or(0.0);
-        println!("{pc:>6.2} {pl:>6.2} {:>10.2}% {:>9.2}%",
-                 train_acc * 100.0, res.final_test_acc * 100.0);
-        out_rows.push(Json::obj(vec![
-            ("p_c", Json::Float(pc)),
-            ("p_l", Json::Float(pl)),
-            ("train_acc", Json::Float(train_acc * 100.0)),
-            ("test_acc", Json::Float(res.final_test_acc * 100.0)),
-        ]));
-    }
-    ctx.save("table9", &Json::Array(out_rows));
+    runner::execute(&spec, &opts).map(|_| ())
 }
 
 // ---------------------------------------------------------------------------
@@ -382,9 +171,8 @@ pub fn fig2_left(ctx: &ExpCtx) {
         let cfg = TrainConfig {
             epochs: ctx.epochs,
             batch: 64,
-            hyper: Hyper { gamma_inv: if ctx.scale == Scale::Full { 512 }
-                                      else { 512 },
-                           eta_fw_inv: eta_fw, eta_lr_inv: eta_lr },
+            hyper: Hyper { gamma_inv: 512, eta_fw_inv: eta_fw,
+                           eta_lr_inv: eta_lr },
             seed: ctx.seed,
             ..Default::default()
         };
@@ -602,10 +390,9 @@ pub fn probe(ctx: &ExpCtx) {
 /// Dispatch by experiment name.
 pub fn run(name: &str, ctx: &ExpCtx) -> Result<(), String> {
     match name {
-        "table1" => table1(ctx),
-        "table2" => table2(ctx),
-        "table8" => table8(ctx),
-        "table9" => table9(ctx),
+        "table1" | "table2" | "table8" | "table9" => {
+            return run_table_spec(name, ctx)
+        }
         "fig2-left" => fig2_left(ctx),
         "fig2-right" => fig2_right(ctx),
         "fig3" => fig3(ctx),
@@ -636,11 +423,22 @@ mod tests {
         assert_eq!(Scale::parse("quick").unwrap(), Scale::Quick);
         assert_eq!(Scale::parse("full").unwrap(), Scale::Full);
         assert!(Scale::parse("x").is_err());
+        assert_eq!(Scale::Quick.name(), "quick");
+        assert_eq!(Scale::Full.name(), "full");
     }
 
     #[test]
     fn unknown_experiment_errors() {
         let ctx = ExpCtx::new(Scale::Quick, 1, 1);
         assert!(run("bogus", &ctx).is_err());
+    }
+
+    #[test]
+    fn ctx_records_raw_epoch_override() {
+        let ctx = ExpCtx::new(Scale::Quick, 1, 0);
+        assert_eq!(ctx.epochs, 60, "resolved default for figure drivers");
+        assert_eq!(ctx.epochs_override, 0, "specs see the raw value");
+        let ctx = ExpCtx::new(Scale::Full, 1, 7);
+        assert_eq!((ctx.epochs, ctx.epochs_override), (7, 7));
     }
 }

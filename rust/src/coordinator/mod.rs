@@ -1,8 +1,13 @@
 //! L3 coordinator: the execution-engine abstraction (pure-Rust NativeEngine
-//! vs artifact-backed PjrtEngine), experiment drivers for every table and
-//! figure in the paper, and the CLI plumbing.
+//! vs artifact-backed PjrtEngine), the declarative experiment harness
+//! (`spec` + `runner` — the paper's tables as JSON under `experiments/`),
+//! the remaining imperative figure drivers (`experiments`), and the CLI
+//! plumbing.
 
 pub mod engine;
 pub mod experiments;
+pub mod runner;
+pub mod spec;
 
 pub use engine::{Engine, NativeEngine, PjrtEngine};
+pub use spec::{EngineKind, ExperimentSpec};

@@ -1,0 +1,361 @@
+//! Spec runner: executes an [`ExperimentSpec`] and emits schema-stable
+//! JSON metric records.
+//!
+//! One [`ResolvedRun`] = one training job with its own isolated RNG state
+//! (network init, batch shuffling and dropout streams are all derived from
+//! the run's seed, never shared across runs). Per-epoch
+//! loss/accuracy/wall-clock metrics flow through the shared
+//! [`MetricSink`]; each run is written to
+//! `<out_dir>/<experiment>/<id>__<engine>__s<seed>.json` with its full
+//! epoch log, and the aggregate table goes to the spec's `bench_output`
+//! (`BENCH_<name>.json`) with one row per run.
+//!
+//! Record schema is versioned ([`SCHEMA_VERSION`]); CI consumes the BENCH
+//! file as a workflow artifact, so keys are append-only.
+
+use std::time::Instant;
+
+use crate::baselines::{fp, pocketnn};
+use crate::coordinator::experiments::Scale;
+use crate::coordinator::spec::{EngineKind, ExperimentSpec, ResolvedRun};
+use crate::data::{loader, Dataset};
+use crate::nn::{zoo, Network};
+use crate::train::{fit_observed, EpochRecord, MetricSink, TrainConfig};
+use crate::util::bench::peak_rss_kb;
+use crate::util::jsonio::Json;
+
+/// Bump when a BENCH record key changes meaning or disappears; adding keys
+/// is allowed without a bump.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// CLI-level overrides applied on top of a spec.
+#[derive(Clone, Debug)]
+pub struct RunnerOpts {
+    /// `None` = the spec's own default scale.
+    pub scale: Option<Scale>,
+    /// `Some(s)` replaces the spec's seed list with the single seed `s`.
+    pub seed: Option<u64>,
+    /// `0` = the spec's epoch budgets.
+    pub epochs: usize,
+    /// Directory for per-run records (default `results`).
+    pub out_dir: String,
+    /// Directory for the aggregate BENCH file (default `.`, i.e. the
+    /// repository top level).
+    pub bench_dir: String,
+    /// Per-epoch trainer logs to stderr.
+    pub verbose: bool,
+}
+
+impl Default for RunnerOpts {
+    fn default() -> Self {
+        RunnerOpts {
+            scale: None,
+            seed: None,
+            epochs: 0,
+            out_dir: "results".to_string(),
+            bench_dir: ".".to_string(),
+            verbose: false,
+        }
+    }
+}
+
+/// Sink collecting every epoch as a JSON row (the per-run epoch log).
+struct EpochLog {
+    rows: Vec<Json>,
+}
+
+impl MetricSink for EpochLog {
+    fn on_epoch(&mut self, rec: &EpochRecord) {
+        self.rows.push(Json::obj(vec![
+            ("epoch", Json::Int(rec.epoch as i64)),
+            ("head_loss", Json::Float(rec.mean_head_loss)),
+            (
+                "block_loss",
+                Json::Array(
+                    rec.mean_block_loss.iter().map(|&l| Json::Float(l))
+                        .collect(),
+                ),
+            ),
+            ("train_acc", Json::Float(rec.train_acc)),
+            (
+                "test_acc",
+                if rec.test_acc.is_nan() {
+                    Json::Null
+                } else {
+                    Json::Float(rec.test_acc)
+                },
+            ),
+            ("gamma_inv", Json::Int(rec.gamma_inv)),
+            ("secs", Json::Float(rec.secs)),
+        ]));
+    }
+}
+
+/// Outcome of one resolved run.
+struct RunOutcome {
+    /// Schema-stable aggregate row (no epoch log).
+    record: Json,
+    /// Full record including the per-epoch log.
+    detail: Json,
+    final_test_acc: f64,
+}
+
+/// Execute every resolved run of `spec`, write per-run records and the
+/// aggregate BENCH file, and return the aggregate JSON.
+pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
+               -> Result<Json, String> {
+    let scale = opts.scale.unwrap_or(spec.scale);
+    let runs = spec.resolve(scale, opts.seed, opts.epochs)?;
+    println!(
+        "experiment '{}': {} runs at {} scale",
+        spec.name,
+        runs.len(),
+        scale.name()
+    );
+    let run_dir = format!("{}/{}", opts.out_dir, spec.name);
+    std::fs::create_dir_all(&run_dir)
+        .map_err(|e| format!("mkdir {run_dir}: {e}"))?;
+    let mut rows = Vec::new();
+    // Consecutive runs of one row (engine × seed expansion) share the same
+    // dataset; cache the last one so it is loaded + normalized once.
+    let mut cache: Option<((String, usize, usize, u64), (Dataset, Dataset))> =
+        None;
+    for r in &runs {
+        let t0 = Instant::now();
+        let key = (r.dataset.clone(), r.n_train, r.n_test, r.seed);
+        let hit = matches!(&cache, Some((k, _)) if *k == key);
+        if !hit {
+            let (mut tr, mut te) =
+                loader::load(&r.dataset, "data", r.n_train, r.n_test,
+                             r.seed)?;
+            tr.mad_normalize();
+            te.mad_normalize();
+            cache = Some((key, (tr, te)));
+        }
+        let (tr, te) = &cache.as_ref().unwrap().1;
+        let out = execute_run(r, tr, te, opts.verbose)?;
+        let path = format!(
+            "{run_dir}/{}__{}__s{}.json",
+            sanitize(&r.id),
+            r.engine.name(),
+            r.seed
+        );
+        std::fs::write(&path, out.detail.pretty())
+            .map_err(|e| format!("write {path}: {e}"))?;
+        println!(
+            "  {:<22} {:<9} seed {:<4} acc {:>6.2}%  ({:.1}s) -> {path}",
+            r.id,
+            r.engine.name(),
+            r.seed,
+            out.final_test_acc * 100.0,
+            t0.elapsed().as_secs_f64()
+        );
+        rows.push(out.record);
+    }
+    let bench = Json::obj(vec![
+        ("schema_version", Json::Int(SCHEMA_VERSION)),
+        ("experiment", Json::Str(spec.name.clone())),
+        ("description", Json::Str(spec.description.clone())),
+        ("scale", Json::Str(scale.name().to_string())),
+        ("rows", Json::Array(rows)),
+    ]);
+    let bench_path = if opts.bench_dir == "." || opts.bench_dir.is_empty() {
+        spec.bench_output.clone()
+    } else {
+        format!("{}/{}", opts.bench_dir, spec.bench_output)
+    };
+    std::fs::write(&bench_path, bench.pretty())
+        .map_err(|e| format!("write {bench_path}: {e}"))?;
+    println!("  -> {bench_path}");
+    Ok(bench)
+}
+
+fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset, verbose: bool)
+               -> Result<RunOutcome, String> {
+    let net_spec = zoo::get(&r.preset)
+        .ok_or_else(|| format!("run '{}': unknown preset '{}'", r.id,
+                               r.preset))?;
+    let mut log = EpochLog { rows: Vec::new() };
+    let t0 = Instant::now();
+    // (test acc, train acc if the engine reports one, diverged)
+    let (final_test_acc, final_train_acc, diverged): (f64, Option<f64>, bool) =
+        match r.engine {
+            EngineKind::Nitro => {
+                let mut net = Network::new(net_spec, r.seed);
+                net.set_dropout(r.dropout.0, r.dropout.1);
+                let cfg = TrainConfig {
+                    epochs: r.epochs,
+                    batch: r.batch,
+                    hyper: r.hyper,
+                    seed: r.seed,
+                    verbose,
+                    plateau_patience: if r.fixed_lr {
+                        usize::MAX
+                    } else {
+                        TrainConfig::default().plateau_patience
+                    },
+                    ..Default::default()
+                };
+                let res = fit_observed(&mut net, tr, te, &cfg, &mut log);
+                (
+                    res.final_test_acc,
+                    res.epochs.last().map(|e| e.train_acc),
+                    res.diverged,
+                )
+            }
+            EngineKind::FpLes | EngineKind::FpBp => {
+                let mut fnet = fp::FpNet::new(net_spec, r.seed);
+                let res = if r.engine == EngineKind::FpLes {
+                    fp::train_les(&mut fnet, tr, te, r.fp_epochs, r.fp_batch,
+                                  r.fp_lr as f32, r.seed)
+                } else {
+                    fp::train_bp(&mut fnet, tr, te, r.fp_epochs, r.fp_batch,
+                                 r.fp_lr as f32, r.seed)
+                };
+                (res.test_acc, Some(res.train_acc), false)
+            }
+            EngineKind::PocketNn => {
+                if net_spec.input_shape.len() != 1 {
+                    return Err(format!(
+                        "run '{}': the pocketnn engine needs an MLP preset, \
+                         got '{}'",
+                        r.id, r.preset
+                    ));
+                }
+                let mut dims = vec![net_spec.input_shape[0]];
+                for b in &net_spec.blocks {
+                    dims.push(b.out_features());
+                }
+                dims.push(net_spec.num_classes);
+                let (_, acc) = pocketnn::train(&dims, tr, te, r.epochs,
+                                               r.batch, r.hyper.gamma_inv,
+                                               r.seed);
+                (acc, None, false)
+            }
+        };
+    let wall = t0.elapsed().as_secs_f64();
+    // record what this engine actually ran with
+    let (effective_epochs, effective_batch) = match r.engine {
+        EngineKind::FpLes | EngineKind::FpBp => (r.fp_epochs, r.fp_batch),
+        _ => (r.epochs, r.batch),
+    };
+    let opt_f = |v: Option<f64>| v.map(Json::Float).unwrap_or(Json::Null);
+    let base = vec![
+        ("id", Json::Str(r.id.clone())),
+        ("engine", Json::Str(r.engine.name().to_string())),
+        ("preset", Json::Str(r.preset.clone())),
+        ("dataset", Json::Str(r.dataset.clone())),
+        ("scale", Json::Str(r.scale.name().to_string())),
+        ("seed", Json::Int(r.seed as i64)),
+        ("epochs", Json::Int(effective_epochs as i64)),
+        ("batch", Json::Int(effective_batch as i64)),
+        ("n_train", Json::Int(r.n_train as i64)),
+        ("n_test", Json::Int(r.n_test as i64)),
+        (
+            "hyper",
+            Json::obj(vec![
+                ("gamma_inv", Json::Int(r.hyper.gamma_inv)),
+                ("eta_fw_inv", Json::Int(r.hyper.eta_fw_inv)),
+                ("eta_lr_inv", Json::Int(r.hyper.eta_lr_inv)),
+            ]),
+        ),
+        (
+            "dropout",
+            Json::Array(vec![
+                Json::Float(r.dropout.0),
+                Json::Float(r.dropout.1),
+            ]),
+        ),
+        ("final_test_acc", Json::Float(final_test_acc)),
+        ("final_train_acc", opt_f(final_train_acc)),
+        ("diverged", Json::Bool(diverged)),
+        ("wall_secs", Json::Float(wall)),
+        (
+            "peak_rss_kb",
+            peak_rss_kb().map(|v| Json::Int(v as i64)).unwrap_or(Json::Null),
+        ),
+        ("paper_acc", opt_f(r.paper_acc)),
+        (
+            "paper_note",
+            r.paper_note
+                .clone()
+                .map(Json::Str)
+                .unwrap_or(Json::Null),
+        ),
+    ];
+    let record = Json::obj(base.clone());
+    let mut detail = base;
+    detail.push(("epoch_metrics", Json::Array(log.rows)));
+    Ok(RunOutcome {
+        record,
+        detail: Json::obj(detail),
+        final_test_acc,
+    })
+}
+
+/// File-name-safe form of a run id (`mlp1/mnist` -> `mlp1-mnist`).
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '-'
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_ids() {
+        assert_eq!(sanitize("mlp1/mnist"), "mlp1-mnist");
+        assert_eq!(sanitize("pc0.05-pl0.5"), "pc0-05-pl0-5");
+        assert_eq!(sanitize("plain_id-7"), "plain_id-7");
+    }
+
+    /// End-to-end through the declarative stack at 1 epoch: spec parse ->
+    /// resolve -> both engines -> per-run records -> aggregate BENCH file.
+    #[test]
+    fn smoke_spec_end_to_end() {
+        let spec = ExperimentSpec::load_builtin("smoke").unwrap();
+        let dir = std::env::temp_dir().join("nitro_runner_test");
+        let dir = dir.to_str().unwrap().to_string();
+        let opts = RunnerOpts {
+            epochs: 1,
+            out_dir: format!("{dir}/results"),
+            bench_dir: dir.clone(),
+            ..Default::default()
+        };
+        let bench = execute(&spec, &opts).unwrap();
+        assert_eq!(
+            bench.req("schema_version").unwrap().as_i64(),
+            Some(SCHEMA_VERSION)
+        );
+        assert_eq!(bench.req("experiment").unwrap().as_str(), Some("smoke"));
+        let rows = bench.req("rows").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 2, "nitro + fp-bp");
+        for row in rows {
+            for key in ["id", "engine", "final_test_acc", "wall_secs",
+                        "diverged", "seed", "hyper"] {
+                assert!(row.get(key).is_some(), "row missing '{key}'");
+            }
+            let acc = row.req("final_test_acc").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&acc));
+        }
+        // the BENCH file exists, reparses, and matches what execute returned
+        let path = format!("{dir}/BENCH_smoke.json");
+        let reread = Json::parse_file(&path).unwrap();
+        assert_eq!(reread, bench);
+        // per-run detail record carries the epoch log (nitro run: 1 epoch)
+        let detail_path =
+            format!("{dir}/results/smoke/tinycnn-tiny__nitro__s42.json");
+        let detail = Json::parse_file(&detail_path).unwrap();
+        let epochs = detail.req("epoch_metrics").unwrap().as_array().unwrap();
+        assert_eq!(epochs.len(), 1);
+        assert!(epochs[0].get("head_loss").is_some());
+    }
+}

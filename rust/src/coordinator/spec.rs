@@ -1,0 +1,625 @@
+//! Declarative experiment specifications.
+//!
+//! An [`ExperimentSpec`] is a JSON file under `experiments/` declaring one
+//! paper table as data: the dataset/preset grid, the engine set
+//! (NITRO-D native / FP baselines / PocketNN-DFA), seeds, scale knobs and
+//! hyper-parameters. The runner (`coordinator::runner`) expands a spec
+//! into [`ResolvedRun`]s and executes them; nothing about a table lives in
+//! imperative driver code any more.
+//!
+//! Schema (all keys except `name` and `runs` optional — see README.md for
+//! the full reference):
+//!
+//! ```text
+//! {
+//!   "name": "table1",
+//!   "description": "...",
+//!   "scale": "quick" | "full",            // default scale
+//!   "seeds": [42, 43],                    // one run per (row, engine, seed)
+//!   "engines": ["nitro","pocketnn","fp-les","fp-bp"],
+//!   "bench_output": "BENCH_table1.json",  // aggregate record path
+//!   "fixed_lr": false,                    // disable plateau LR scheduling
+//!   "fp_lr": 0.001,                       // Adam LR for the FP baselines
+//!   "fp_epochs_div": 1,                   // FP baselines run epochs/div
+//!   "defaults": {"batch": 64, "hyper": {...}, "dropout": [0.0, 0.0]},
+//!   "quick": {"n_train": ..., "n_test": ..., "epochs": ...,
+//!             "batch": ..., "gamma_inv": ...},
+//!   "full":  {...},
+//!   "runs": [
+//!     {"id": "mlp1/mnist", "preset": "mlp1", "preset_quick": "...",
+//!      "dataset": "mnist", "dataset_quick": "...",
+//!      "hyper": {"eta_fw_inv": 30000},    // partial, merged over defaults
+//!      "dropout": [0.05, 0.5], "epochs": 60, "batch": 32,
+//!      "engines": [...], "scales": ["quick"],
+//!      "paper_acc": 97.36, "paper_note": "..."}
+//!   ]
+//! }
+//! ```
+//!
+//! Hyper-parameter resolution order (later wins): built-in default
+//! `{512, 0, 0}` → `defaults.hyper` → the active scale section's
+//! `gamma_inv` → the run's `hyper`.
+
+use crate::coordinator::experiments::Scale;
+use crate::nn::Hyper;
+use crate::util::jsonio::Json;
+
+/// Execution engine requested by a spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// The pure-Rust integer NITRO-D engine (`nn::Network`).
+    Nitro,
+    /// Float Local-Error-Signals baseline (`baselines::fp::train_les`).
+    FpLes,
+    /// Float global-backprop baseline (`baselines::fp::train_bp`).
+    FpBp,
+    /// Integer DFA baseline (`baselines::pocketnn`) — MLP presets only.
+    PocketNn,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind, String> {
+        Ok(match s {
+            "nitro" => EngineKind::Nitro,
+            "fp-les" => EngineKind::FpLes,
+            "fp-bp" => EngineKind::FpBp,
+            "pocketnn" => EngineKind::PocketNn,
+            other => {
+                return Err(format!(
+                    "unknown engine '{other}' (nitro|fp-les|fp-bp|pocketnn)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Nitro => "nitro",
+            EngineKind::FpLes => "fp-les",
+            EngineKind::FpBp => "fp-bp",
+            EngineKind::PocketNn => "pocketnn",
+        }
+    }
+}
+
+/// Partial hyper-parameter override: only the keys present in the JSON.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PartialHyper {
+    pub gamma_inv: Option<i64>,
+    pub eta_fw_inv: Option<i64>,
+    pub eta_lr_inv: Option<i64>,
+}
+
+impl PartialHyper {
+    fn parse(j: Option<&Json>) -> Result<PartialHyper, String> {
+        let Some(j) = j else { return Ok(PartialHyper::default()) };
+        let grab = |key: &str| -> Result<Option<i64>, String> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_i64()
+                    .map(Some)
+                    .ok_or_else(|| format!("hyper.{key}: not an integer")),
+            }
+        };
+        Ok(PartialHyper {
+            gamma_inv: grab("gamma_inv")?,
+            eta_fw_inv: grab("eta_fw_inv")?,
+            eta_lr_inv: grab("eta_lr_inv")?,
+        })
+    }
+
+    fn apply(&self, hp: &mut Hyper) {
+        if let Some(v) = self.gamma_inv {
+            hp.gamma_inv = v;
+        }
+        if let Some(v) = self.eta_fw_inv {
+            hp.eta_fw_inv = v;
+        }
+        if let Some(v) = self.eta_lr_inv {
+            hp.eta_lr_inv = v;
+        }
+    }
+}
+
+/// Scale-dependent workload knobs (one per `quick`/`full` section).
+#[derive(Clone, Debug)]
+pub struct ScaleCfg {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub epochs: usize,
+    pub batch: Option<usize>,
+    pub gamma_inv: Option<i64>,
+}
+
+impl ScaleCfg {
+    fn parse(j: Option<&Json>, n_train: usize, n_test: usize,
+             epochs: usize) -> Result<ScaleCfg, String> {
+        let (nt, ns, ep, batch, gamma) = match j {
+            None => (n_train, n_test, epochs, None, None),
+            Some(j) => (
+                opt_usize(j, "n_train")?.unwrap_or(n_train),
+                opt_usize(j, "n_test")?.unwrap_or(n_test),
+                opt_usize(j, "epochs")?.unwrap_or(epochs),
+                opt_usize(j, "batch")?,
+                j.get("gamma_inv").and_then(Json::as_i64),
+            ),
+        };
+        Ok(ScaleCfg {
+            n_train: nt,
+            n_test: ns,
+            epochs: ep,
+            batch,
+            gamma_inv: gamma,
+        })
+    }
+}
+
+/// Non-negative integer field; negative values are a spec error, never a
+/// silent `as usize` wrap.
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let n = v
+                .as_i64()
+                .ok_or_else(|| format!("{key}: not an integer"))?;
+            if n < 0 {
+                return Err(format!("{key}: must be >= 0, got {n}"));
+            }
+            Ok(Some(n as usize))
+        }
+    }
+}
+
+fn parse_dropout(j: Option<&Json>) -> Result<Option<(f64, f64)>, String> {
+    let Some(j) = j else { return Ok(None) };
+    let arr = j.as_array().ok_or("dropout: expected [p_c, p_l]")?;
+    if arr.len() != 2 {
+        return Err("dropout: expected exactly [p_c, p_l]".to_string());
+    }
+    let p = |v: &Json| v.as_f64().ok_or("dropout: not a number".to_string());
+    Ok(Some((p(&arr[0])?, p(&arr[1])?)))
+}
+
+fn parse_engines(j: Option<&Json>) -> Result<Option<Vec<EngineKind>>, String> {
+    let Some(j) = j else { return Ok(None) };
+    let arr = j.as_array().ok_or("engines: expected an array")?;
+    let mut out = Vec::new();
+    for e in arr {
+        out.push(EngineKind::parse(
+            e.as_str().ok_or("engines: expected strings")?,
+        )?);
+    }
+    if out.is_empty() {
+        return Err("engines: must not be empty".to_string());
+    }
+    Ok(Some(out))
+}
+
+/// One (preset, dataset) row of a table, before scale/engine expansion.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub id: String,
+    pub preset: String,
+    pub preset_quick: Option<String>,
+    pub dataset: String,
+    pub dataset_quick: Option<String>,
+    pub hyper: PartialHyper,
+    pub dropout: Option<(f64, f64)>,
+    pub epochs: Option<usize>,
+    pub batch: Option<usize>,
+    pub engines: Option<Vec<EngineKind>>,
+    /// Restrict the row to these scales (both when absent) — lets one spec
+    /// carry scale-specific sweep grids (Table 8).
+    pub scales: Option<Vec<Scale>>,
+    pub paper_acc: Option<f64>,
+    pub paper_note: Option<String>,
+}
+
+impl RunSpec {
+    fn parse(j: &Json) -> Result<RunSpec, String> {
+        let id = j
+            .req("id")?
+            .as_str()
+            .ok_or("run id: not a string")?
+            .to_string();
+        let ctx = |e: String| format!("run '{id}': {e}");
+        let preset = j
+            .req("preset")
+            .and_then(|v| v.as_str().ok_or("preset: not a string".into()))
+            .map_err(&ctx)?
+            .to_string();
+        let dataset = j
+            .req("dataset")
+            .and_then(|v| v.as_str().ok_or("dataset: not a string".into()))
+            .map_err(&ctx)?
+            .to_string();
+        let opt_str = |key: &str| {
+            j.get(key).and_then(Json::as_str).map(str::to_string)
+        };
+        let scales = match j.get("scales") {
+            None => None,
+            Some(v) => {
+                let arr = v.as_array().ok_or("scales: expected an array")
+                    .map_err(|e| ctx(e.to_string()))?;
+                let mut out = Vec::new();
+                for s in arr {
+                    out.push(
+                        Scale::parse(s.as_str().unwrap_or("?")).map_err(&ctx)?,
+                    );
+                }
+                Some(out)
+            }
+        };
+        Ok(RunSpec {
+            preset,
+            dataset,
+            preset_quick: opt_str("preset_quick"),
+            dataset_quick: opt_str("dataset_quick"),
+            hyper: PartialHyper::parse(j.get("hyper")).map_err(&ctx)?,
+            dropout: parse_dropout(j.get("dropout")).map_err(&ctx)?,
+            epochs: opt_usize(j, "epochs").map_err(&ctx)?,
+            batch: opt_usize(j, "batch").map_err(&ctx)?,
+            engines: parse_engines(j.get("engines")).map_err(&ctx)?,
+            scales,
+            paper_acc: j.get("paper_acc").and_then(Json::as_f64),
+            paper_note: opt_str("paper_note"),
+            id,
+        })
+    }
+}
+
+/// A parsed experiment spec: the declarative form of one paper table.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub description: String,
+    pub scale: Scale,
+    pub seeds: Vec<u64>,
+    pub engines: Vec<EngineKind>,
+    pub bench_output: String,
+    pub fixed_lr: bool,
+    pub fp_lr: f64,
+    pub fp_epochs_div: usize,
+    /// Batch size for the FP baselines (the paper's baselines always ran
+    /// at batch 64 even where the integer engine uses a scale-calibrated
+    /// batch); `None` = same as the integer engine's batch.
+    pub fp_batch: Option<usize>,
+    pub defaults_hyper: PartialHyper,
+    pub defaults_dropout: (f64, f64),
+    pub defaults_batch: usize,
+    pub quick: ScaleCfg,
+    pub full: ScaleCfg,
+    pub runs: Vec<RunSpec>,
+}
+
+impl ExperimentSpec {
+    pub fn parse(j: &Json) -> Result<ExperimentSpec, String> {
+        let name = j
+            .req("name")?
+            .as_str()
+            .ok_or("name: not a string")?
+            .to_string();
+        let seeds: Vec<u64> = match j.get("seeds") {
+            None => vec![42],
+            Some(v) => {
+                let raw = v.i64_vec().map_err(|e| format!("seeds: {e}"))?;
+                let mut out = Vec::with_capacity(raw.len());
+                for s in raw {
+                    if s < 0 {
+                        return Err(format!("seeds: must be >= 0, got {s}"));
+                    }
+                    out.push(s as u64);
+                }
+                out
+            }
+        };
+        if seeds.is_empty() {
+            return Err("seeds: must not be empty".to_string());
+        }
+        let engines = parse_engines(j.get("engines"))?
+            .unwrap_or_else(|| vec![EngineKind::Nitro]);
+        let defaults = j.get("defaults");
+        let (defaults_hyper, defaults_dropout, defaults_batch) = match defaults
+        {
+            None => (PartialHyper::default(), (0.0, 0.0), 64),
+            Some(d) => (
+                PartialHyper::parse(d.get("hyper"))?,
+                parse_dropout(d.get("dropout"))?.unwrap_or((0.0, 0.0)),
+                opt_usize(d, "batch")?.unwrap_or(64),
+            ),
+        };
+        let runs_j = j
+            .req("runs")?
+            .as_array()
+            .ok_or("runs: expected an array")?;
+        if runs_j.is_empty() {
+            return Err("runs: must not be empty".to_string());
+        }
+        let mut runs = Vec::new();
+        for r in runs_j {
+            runs.push(RunSpec::parse(r)?);
+        }
+        Ok(ExperimentSpec {
+            description: j.str_or("description", ""),
+            scale: Scale::parse(&j.str_or("scale", "quick"))?,
+            seeds,
+            engines,
+            bench_output: {
+                let d = format!("BENCH_{name}.json");
+                j.str_or("bench_output", &d)
+            },
+            fixed_lr: j.bool_or("fixed_lr", false),
+            fp_lr: j.f64_or("fp_lr", 1e-3),
+            fp_epochs_div: opt_usize(j, "fp_epochs_div")?.unwrap_or(1).max(1),
+            fp_batch: opt_usize(j, "fp_batch")?,
+            defaults_hyper,
+            defaults_dropout,
+            defaults_batch,
+            // scale-section fallbacks mirror the old ExpCtx quick/full
+            // workload sizes
+            quick: ScaleCfg::parse(j.get("quick"), 1200, 300, 60)
+                .map_err(|e| format!("quick: {e}"))?,
+            full: ScaleCfg::parse(j.get("full"), 20000, 4000, 150)
+                .map_err(|e| format!("full: {e}"))?,
+            runs,
+            name,
+        })
+    }
+
+    pub fn load(path: &str) -> Result<ExperimentSpec, String> {
+        let j = Json::parse_file(path)?;
+        ExperimentSpec::parse(&j).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Embedded copies of the committed spec files, so `nitro experiment
+    /// table1` works regardless of the process working directory.
+    pub fn builtin_source(name: &str) -> Option<&'static str> {
+        Some(match name {
+            "smoke" => include_str!("../../../experiments/smoke.json"),
+            "table1" => include_str!("../../../experiments/table1.json"),
+            "table2" => include_str!("../../../experiments/table2.json"),
+            "table8" => include_str!("../../../experiments/table8.json"),
+            "table9" => include_str!("../../../experiments/table9.json"),
+            _ => return None,
+        })
+    }
+
+    pub fn load_builtin(name: &str) -> Result<ExperimentSpec, String> {
+        let src = Self::builtin_source(name)
+            .ok_or_else(|| format!("no builtin experiment spec '{name}'"))?;
+        let j = Json::parse(src).map_err(|e| format!("builtin {name}: {e}"))?;
+        ExperimentSpec::parse(&j).map_err(|e| format!("builtin {name}: {e}"))
+    }
+
+    /// Expand into the concrete (row × engine × seed) grid at `scale`.
+    /// `seed_override` replaces the spec's seed list; `epochs_override > 0`
+    /// replaces every run's epoch budget.
+    pub fn resolve(&self, scale: Scale, seed_override: Option<u64>,
+                   epochs_override: usize) -> Result<Vec<ResolvedRun>, String> {
+        let seeds: Vec<u64> = match seed_override {
+            Some(s) => vec![s],
+            None => self.seeds.clone(),
+        };
+        let sc = match scale {
+            Scale::Quick => &self.quick,
+            Scale::Full => &self.full,
+        };
+        let mut out = Vec::new();
+        for run in &self.runs {
+            if let Some(ss) = &run.scales {
+                if !ss.contains(&scale) {
+                    continue;
+                }
+            }
+            let pick = |full: &str, quick: &Option<String>| match scale {
+                Scale::Quick => {
+                    quick.clone().unwrap_or_else(|| full.to_string())
+                }
+                Scale::Full => full.to_string(),
+            };
+            let mut hyper = Hyper::default();
+            self.defaults_hyper.apply(&mut hyper);
+            if let Some(g) = sc.gamma_inv {
+                hyper.gamma_inv = g;
+            }
+            run.hyper.apply(&mut hyper);
+            let epochs = if epochs_override > 0 {
+                epochs_override
+            } else {
+                run.epochs.unwrap_or(sc.epochs)
+            };
+            if epochs == 0 {
+                return Err(format!("run '{}': zero epochs", run.id));
+            }
+            let fp_epochs =
+                (epochs / self.fp_epochs_div).max(10).min(epochs);
+            let batch = run.batch.or(sc.batch).unwrap_or(self.defaults_batch);
+            let fp_batch = self.fp_batch.unwrap_or(batch);
+            let engines = run.engines.as_ref().unwrap_or(&self.engines);
+            for &engine in engines {
+                for &seed in &seeds {
+                    out.push(ResolvedRun {
+                        id: run.id.clone(),
+                        preset: pick(&run.preset, &run.preset_quick),
+                        dataset: pick(&run.dataset, &run.dataset_quick),
+                        engine,
+                        seed,
+                        scale,
+                        epochs,
+                        fp_epochs,
+                        batch,
+                        fp_batch,
+                        n_train: sc.n_train,
+                        n_test: sc.n_test,
+                        hyper,
+                        dropout: run.dropout.unwrap_or(self.defaults_dropout),
+                        fixed_lr: self.fixed_lr,
+                        fp_lr: self.fp_lr,
+                        paper_acc: run.paper_acc,
+                        paper_note: run.paper_note.clone(),
+                    });
+                }
+            }
+        }
+        if out.is_empty() {
+            return Err(format!(
+                "spec '{}' resolves to no runs at {} scale",
+                self.name,
+                scale.name()
+            ));
+        }
+        Ok(out)
+    }
+}
+
+/// A fully-resolved unit of work: one (row, engine, seed) at one scale.
+/// Everything the runner needs, nothing left to look up.
+#[derive(Clone, Debug)]
+pub struct ResolvedRun {
+    pub id: String,
+    pub preset: String,
+    pub dataset: String,
+    pub engine: EngineKind,
+    pub seed: u64,
+    pub scale: Scale,
+    pub epochs: usize,
+    /// Epoch budget for the FP baselines (Adam needs no integer
+    /// bootstrap, so specs may divide it down via `fp_epochs_div`).
+    pub fp_epochs: usize,
+    pub batch: usize,
+    /// Batch size for the FP baselines (`fp_batch` spec key).
+    pub fp_batch: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub hyper: Hyper,
+    pub dropout: (f64, f64),
+    pub fixed_lr: bool,
+    pub fp_lr: f64,
+    pub paper_acc: Option<f64>,
+    pub paper_note: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_specs_parse_and_resolve_both_scales() {
+        for name in ["smoke", "table1", "table2", "table8", "table9"] {
+            let spec = ExperimentSpec::load_builtin(name)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(spec.name, name);
+            for scale in [Scale::Quick, Scale::Full] {
+                let runs = spec
+                    .resolve(scale, None, 0)
+                    .unwrap_or_else(|e| panic!("{name}/{scale:?}: {e}"));
+                for r in &runs {
+                    assert!(
+                        crate::nn::zoo::get(&r.preset).is_some(),
+                        "{name}: unknown preset '{}'",
+                        r.preset
+                    );
+                    assert!(r.epochs > 0 && r.batch > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_builtin_is_err() {
+        assert!(ExperimentSpec::load_builtin("bogus").is_err());
+    }
+
+    #[test]
+    fn hyper_resolution_order() {
+        // defaults < scale gamma_inv < run hyper
+        let j = Json::parse(
+            r#"{
+              "name": "t",
+              "defaults": {"hyper": {"gamma_inv": 999, "eta_fw_inv": 7}},
+              "quick": {"gamma_inv": 128, "epochs": 5},
+              "runs": [
+                {"id": "a", "preset": "tinycnn", "dataset": "tiny"},
+                {"id": "b", "preset": "tinycnn", "dataset": "tiny",
+                 "hyper": {"gamma_inv": 64}}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let spec = ExperimentSpec::parse(&j).unwrap();
+        let runs = spec.resolve(Scale::Quick, None, 0).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].hyper.gamma_inv, 128, "scale beats defaults");
+        assert_eq!(runs[0].hyper.eta_fw_inv, 7, "defaults fill gaps");
+        assert_eq!(runs[1].hyper.gamma_inv, 64, "run beats scale");
+        // full scale: no gamma_inv section -> defaults win
+        let runs = spec.resolve(Scale::Full, None, 0).unwrap();
+        assert_eq!(runs[0].hyper.gamma_inv, 999);
+    }
+
+    #[test]
+    fn scale_filter_and_overrides() {
+        let spec = ExperimentSpec::load_builtin("table8").unwrap();
+        let quick = spec.resolve(Scale::Quick, None, 0).unwrap();
+        let full = spec.resolve(Scale::Full, None, 0).unwrap();
+        assert_eq!(quick.len(), 5);
+        assert_eq!(full.len(), 5);
+        assert!(quick.iter().all(|r| r.preset == "tinycnn"));
+        assert!(full.iter().all(|r| r.preset == "vgg11b"));
+        // seed + epoch overrides
+        let r = spec.resolve(Scale::Quick, Some(7), 3).unwrap();
+        assert!(r.iter().all(|x| x.seed == 7 && x.epochs == 3));
+        assert!(spec.fixed_lr);
+    }
+
+    #[test]
+    fn engine_parse_rejects_unknown() {
+        assert!(EngineKind::parse("tpu").is_err());
+        assert_eq!(EngineKind::parse("fp-les").unwrap(), EngineKind::FpLes);
+    }
+
+    #[test]
+    fn fp_epochs_divided_with_floor() {
+        let spec = ExperimentSpec::load_builtin("table2").unwrap();
+        let runs = spec.resolve(Scale::Quick, None, 0).unwrap();
+        // 60 epochs / div 3 = 20
+        assert!(runs.iter().all(|r| r.epochs == 60 && r.fp_epochs == 20));
+        // the FP baselines keep the paper's batch 64 even though the
+        // integer engine runs the quick-calibrated batch 32
+        assert!(runs.iter().all(|r| r.batch == 32 && r.fp_batch == 64));
+    }
+
+    #[test]
+    fn negative_numbers_are_spec_errors_not_wraps() {
+        let base = |extra: &str| {
+            format!(
+                r#"{{"name": "t", {extra} "runs": [
+                     {{"id": "a", "preset": "tinycnn", "dataset": "tiny"}}
+                   ]}}"#
+            )
+        };
+        for (extra, what) in [
+            (r#""seeds": [-1],"#, "negative seed"),
+            (r#""quick": {"epochs": -1},"#, "negative epochs"),
+            (r#""quick": {"n_train": -5},"#, "negative n_train"),
+            (r#""defaults": {"batch": -2},"#, "negative batch"),
+        ] {
+            let j = Json::parse(&base(extra)).unwrap();
+            assert!(
+                ExperimentSpec::parse(&j).is_err(),
+                "{what} must be rejected"
+            );
+        }
+        // negative per-run epochs too
+        let j = Json::parse(
+            r#"{"name": "t", "runs": [
+                 {"id": "a", "preset": "tinycnn", "dataset": "tiny",
+                  "epochs": -1}
+               ]}"#,
+        )
+        .unwrap();
+        assert!(ExperimentSpec::parse(&j).is_err());
+    }
+}

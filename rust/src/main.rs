@@ -4,11 +4,14 @@
 //!   train       train a preset on a dataset (native or pjrt engine)
 //!   eval        evaluate a checkpoint
 //!   experiment  regenerate a paper table/figure (table1..fig3|all)
+//!   run-spec    execute a declarative experiment spec (experiments/*.json)
 //!   zoo         list model presets and parameter counts
 //!   runtime     PJRT smoke check: load + execute the artifacts
 
 use nitro::coordinator::engine::{Engine, PjrtEngine};
 use nitro::coordinator::experiments::{self, ExpCtx, Scale};
+use nitro::coordinator::runner::{self, RunnerOpts};
+use nitro::coordinator::spec::ExperimentSpec;
 use nitro::data::loader;
 use nitro::nn::{zoo, Hyper, Network};
 use nitro::train::{checkpoint, evaluate, fit, TrainConfig};
@@ -21,6 +24,7 @@ fn main() {
         Some("train") => cmd_train(&argv[1..]),
         Some("eval") => cmd_eval(&argv[1..]),
         Some("experiment") => cmd_experiment(&argv[1..]),
+        Some("run-spec") => cmd_run_spec(&argv[1..]),
         Some("zoo") => cmd_zoo(),
         Some("runtime") => cmd_runtime(&argv[1..]),
         Some("-h") | Some("--help") | None => {
@@ -44,6 +48,8 @@ Subcommands:
   eval        evaluate a checkpoint on a dataset
   experiment  regenerate a paper table/figure: table1 table2 table8
               table9 fig2-left fig2-right fig3 all
+  run-spec    execute a declarative experiment spec, e.g.
+              `nitro run-spec experiments/smoke.json`
   zoo         list model presets
   runtime     PJRT smoke check over artifacts/<preset>
 ";
@@ -227,6 +233,47 @@ fn cmd_experiment(argv: &[String]) -> i32 {
         let ctx = ExpCtx::new(scale, p.get_i64("seed")? as u64,
                               p.get_usize("epochs")?);
         experiments::run(name, &ctx)
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_run_spec(argv: &[String]) -> i32 {
+    let cmd = Command::new("nitro run-spec",
+                           "execute a declarative experiment spec")
+        .opt("scale", "", "override the spec's scale: quick|full")
+        .opt("seed", "", "override the spec's seed list with one seed")
+        .opt("epochs", "0", "override epochs (0 = spec defaults)")
+        .opt("out-dir", "results", "directory for per-run records")
+        .opt("bench-dir", ".", "directory for the aggregate BENCH json")
+        .flag("verbose", "per-epoch trainer logs")
+        .positional("spec", "path to an experiments/*.json spec file");
+    let p = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let run = || -> Result<(), String> {
+        let path = p.positionals.first().ok_or("missing spec path")?;
+        let spec = ExperimentSpec::load(path)?;
+        let scale = match p.get("scale") {
+            "" => None,
+            s => Some(Scale::parse(s)?),
+        };
+        let seed = match p.get("seed") {
+            "" => None,
+            _ => Some(p.get_u64("seed")?),
+        };
+        let opts = RunnerOpts {
+            scale,
+            seed,
+            epochs: p.get_usize("epochs")?,
+            out_dir: p.get("out-dir").to_string(),
+            bench_dir: p.get("bench-dir").to_string(),
+            verbose: p.has("verbose"),
+        };
+        runner::execute(&spec, &opts).map(|_| ())
     };
     match run() {
         Ok(()) => 0,

@@ -8,23 +8,19 @@
 //!
 //! Python never runs on this path — the artifacts directory is the entire
 //! build-time handoff.
+//!
+//! The `xla` crate is not available in the offline image, so the real
+//! backend only compiles under the `pjrt` cargo feature (which requires
+//! adding that dependency by hand — see README.md). The default build
+//! substitutes a stub with the identical surface whose constructors return
+//! `Err`, so the engines, CLI and examples compile and run unchanged;
+//! `tests/pjrt.rs` is gated on the feature.
 
 pub mod manifest;
 
-use crate::tensor::{ITensor, LTensor, Tensor};
+use crate::tensor::{ITensor, LTensor};
 
 pub use manifest::{BlockEntry, HeadEntry, Manifest};
-
-/// A loaded, compiled artifact ready to execute.
-pub struct Executable {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// PJRT CPU client wrapper + executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
 
 /// Argument passed to an executable.
 pub enum Arg {
@@ -56,97 +52,167 @@ impl Out {
     }
 }
 
-impl Runtime {
-    pub fn cpu() -> Result<Self, String> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| format!("PJRT cpu client: {e}"))?;
-        Ok(Runtime { client })
+pub use backend::{Executable, Runtime};
+
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::{Arg, Out};
+    use crate::tensor::Tensor;
+
+    /// A loaded, compiled artifact ready to execute.
+    pub struct Executable {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// PJRT CPU client wrapper + executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Load + compile one HLO-text artifact.
-    pub fn load(&self, path: &str) -> Result<Executable, String> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| format!("parse {path}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| format!("compile {path}: {e}"))?;
-        Ok(Executable { name: path.to_string(), exe })
+    impl Runtime {
+        pub fn cpu() -> Result<Self, String> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| format!("PJRT cpu client: {e}"))?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one HLO-text artifact.
+        pub fn load(&self, path: &str) -> Result<Executable, String> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| format!("parse {path}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("compile {path}: {e}"))?;
+            Ok(Executable { name: path.to_string(), exe })
+        }
+
+        /// Execute with mixed-type args; returns the flattened output tuple.
+        /// All aot.py artifacts are lowered with `return_tuple=True`.
+        pub fn run(&self, exe: &Executable, args: &[Arg])
+                   -> Result<Vec<Out>, String> {
+            let literals: Vec<xla::Literal> = args
+                .iter()
+                .map(|a| match a {
+                    Arg::I32(t) => {
+                        let dims: Vec<i64> =
+                            t.shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(&t.data)
+                            .reshape(&dims)
+                            .map_err(|e| format!("reshape arg: {e}"))
+                    }
+                    Arg::I64(t) => {
+                        let dims: Vec<i64> =
+                            t.shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(&t.data)
+                            .reshape(&dims)
+                            .map_err(|e| format!("reshape arg: {e}"))
+                    }
+                    Arg::ScalarI64(v) => Ok(xla::Literal::scalar(*v)),
+                })
+                .collect::<Result<_, _>>()?;
+            let result = exe
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| format!("execute {}: {e}", exe.name))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("fetch result: {e}"))?;
+            let parts = lit
+                .to_tuple()
+                .map_err(|e| format!("untuple result: {e}"))?;
+            parts.into_iter().map(|p| literal_to_out(&p)).collect()
+        }
     }
 
-    /// Execute with mixed-type args; returns the flattened output tuple.
-    /// All aot.py artifacts are lowered with `return_tuple=True`.
-    pub fn run(&self, exe: &Executable, args: &[Arg]) -> Result<Vec<Out>, String> {
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|a| match a {
-                Arg::I32(t) => {
-                    let dims: Vec<i64> =
-                        t.shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(&t.data)
-                        .reshape(&dims)
-                        .map_err(|e| format!("reshape arg: {e}"))
-                }
-                Arg::I64(t) => {
-                    let dims: Vec<i64> =
-                        t.shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(&t.data)
-                        .reshape(&dims)
-                        .map_err(|e| format!("reshape arg: {e}"))
-                }
-                Arg::ScalarI64(v) => Ok(xla::Literal::scalar(*v)),
-            })
-            .collect::<Result<_, _>>()?;
-        let result = exe
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| format!("execute {}: {e}", exe.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| format!("fetch result: {e}"))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| format!("untuple result: {e}"))?;
-        parts.into_iter().map(|p| literal_to_out(&p)).collect()
+    fn literal_to_out(lit: &xla::Literal) -> Result<Out, String> {
+        let shape = lit
+            .shape()
+            .map_err(|e| format!("result shape: {e}"))?;
+        let (ty, dims): (xla::ElementType, Vec<usize>) = match &shape {
+            xla::Shape::Array(a) => (
+                a.element_type(),
+                a.dims().iter().map(|&d| d as usize).collect(),
+            ),
+            _ => return Err("tuple-in-tuple output unsupported".into()),
+        };
+        let dims = if dims.is_empty() { vec![1] } else { dims };
+        match ty {
+            xla::ElementType::S32 => {
+                let data = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| format!("read s32 result: {e}"))?;
+                Ok(Out::I32(Tensor::from_vec(&dims, data)))
+            }
+            xla::ElementType::S64 => {
+                let data = lit
+                    .to_vec::<i64>()
+                    .map_err(|e| format!("read s64 result: {e}"))?;
+                Ok(Out::I64(Tensor::from_vec(&dims, data)))
+            }
+            other => Err(format!("unexpected result element type {other:?}")),
+        }
     }
 }
 
-fn literal_to_out(lit: &xla::Literal) -> Result<Out, String> {
-    let shape = lit
-        .shape()
-        .map_err(|e| format!("result shape: {e}"))?;
-    let (ty, dims): (xla::ElementType, Vec<usize>) = match &shape {
-        xla::Shape::Array(a) => (
-            a.element_type(),
-            a.dims().iter().map(|&d| d as usize).collect(),
-        ),
-        _ => return Err("tuple-in-tuple output unsupported".into()),
-    };
-    let dims = if dims.is_empty() { vec![1] } else { dims };
-    match ty {
-        xla::ElementType::S32 => {
-            let data = lit
-                .to_vec::<i32>()
-                .map_err(|e| format!("read s32 result: {e}"))?;
-            Ok(Out::I32(Tensor::from_vec(&dims, data)))
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Stub backend: same surface as the real one, every constructor
+    //! returns `Err`. `PjrtEngine::load` therefore fails with a clear
+    //! message at runtime instead of the whole crate failing to build.
+
+    use super::{Arg, Out};
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime not built: this binary was compiled without the \
+         `pjrt` cargo feature (the `xla` crate is not available in this \
+         image). Rebuild with `--features pjrt` after adding the xla \
+         dependency — see README.md \"PJRT engine\".";
+
+    /// Placeholder for a compiled artifact; never constructed.
+    pub struct Executable {
+        pub name: String,
+    }
+
+    /// Stub runtime: `cpu()` always errors.
+    pub struct Runtime;
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self, String> {
+            Err(UNAVAILABLE.to_string())
         }
-        xla::ElementType::S64 => {
-            let data = lit
-                .to_vec::<i64>()
-                .map_err(|e| format!("read s64 result: {e}"))?;
-            Ok(Out::I64(Tensor::from_vec(&dims, data)))
+
+        pub fn platform(&self) -> String {
+            "pjrt-unavailable".to_string()
         }
-        other => Err(format!("unexpected result element type {other:?}")),
+
+        pub fn load(&self, _path: &str) -> Result<Executable, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+
+        pub fn run(&self, _exe: &Executable, _args: &[Arg])
+                   -> Result<Vec<Out>, String> {
+            Err(UNAVAILABLE.to_string())
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // PJRT-dependent tests live in rust/tests/pjrt.rs (integration) so unit
-    // test runs stay fast; manifest parsing is tested in manifest.rs.
+    // PJRT-dependent tests live in rust/tests/pjrt.rs (integration, gated
+    // on the `pjrt` feature) so unit test runs stay fast; manifest parsing
+    // is tested in manifest.rs.
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = super::Runtime::cpu().err().unwrap();
+        assert!(err.contains("pjrt"), "{err}");
+    }
 }

@@ -539,6 +539,54 @@ mod tests {
     }
 
     #[test]
+    fn safe_chunk_i32_overflow_boundary() {
+        let m = i32::MAX as i64; // 2147483647
+        // zero operands: nothing can overflow, chunk covers the whole k
+        assert_eq!(safe_chunk(0, 0, 17), Some(17));
+        assert_eq!(safe_chunk(0, 123, 0), Some(1), "k clamped to >= 1");
+        // a single product at or past the i32 rail: no safe chunk exists
+        assert_eq!(safe_chunk(m, 1, 16), None);
+        assert_eq!(safe_chunk(1, m, 16), None);
+        // exactly one below the rail: chunk 1 is still safe (code uses
+        // `prod >= i32::MAX`, so prod == MAX - 1 admits chunk 1)
+        assert_eq!(safe_chunk(m - 1, 1, 16), Some(1));
+        // 46341^2 just overflows i32, 46340^2 just fits
+        assert_eq!(safe_chunk(46341, 46341, 64), None);
+        assert_eq!(safe_chunk(46340, 46340, 64), Some(1));
+        // int8 x int8: MAX / 16129 products fit an i32 partial sum
+        let chunk = safe_chunk(127, 127, 1 << 20).unwrap();
+        assert_eq!(chunk, (m / (127 * 127)) as usize);
+        assert!((chunk as i64) * 127 * 127 < m, "chunk sum must fit i32");
+        assert!((chunk as i64 + 1) * 127 * 127 >= m, "chunk is maximal");
+        // chunk never exceeds k
+        assert_eq!(safe_chunk(127, 127, 8), Some(8));
+    }
+
+    #[test]
+    fn dot_chunked_exact_at_chunk_rail() {
+        // accumulate 127*127 products right up to the largest safe chunk:
+        // the i32 partial sums must not wrap and must equal the i64 dot
+        let chunk = safe_chunk(127, 127, 1 << 20).unwrap();
+        let n = chunk * 3 + 7; // several full chunks + a ragged tail
+        let a = vec![127i32; n];
+        let b = vec![-127i32; n];
+        assert_eq!(dot_chunked(&a, &b, chunk), dot_i64(&a, &b));
+        assert_eq!(dot_chunked(&a, &b, chunk), -(127i64 * 127 * n as i64));
+    }
+
+    #[test]
+    fn matmul_extreme_magnitudes_take_i64_path() {
+        // operands at the i32 rails force safe_chunk -> None; the wide
+        // fallback must stay exact
+        let m = i32::MAX;
+        let a = ITensor::from_vec(&[1, 3], vec![m, -m, m]);
+        let b = ITensor::from_vec(&[3, 1], vec![m, m, -m]);
+        let z = matmul_i64(&a, &b);
+        let mm = m as i64 * m as i64;
+        assert_eq!(z.data[0], mm - mm - mm);
+    }
+
+    #[test]
     fn matmul_i64_needed_no_wrap() {
         let a = ITensor::from_vec(&[1, 1024], vec![127; 1024]);
         let b = ITensor::from_vec(&[1024, 1], vec![32767; 1024]);

@@ -55,6 +55,22 @@ pub struct EpochRecord {
     pub secs: f64,
 }
 
+/// Receives every completed epoch record during [`fit_observed`]. This is
+/// the shared collection point of the experiment harness: the trainer
+/// streams metrics out without knowing anything about output formats, and
+/// the spec runner (`coordinator::runner`) turns them into schema-stable
+/// JSON records.
+pub trait MetricSink {
+    fn on_epoch(&mut self, rec: &EpochRecord);
+}
+
+/// Sink that drops everything — what plain [`fit`] uses.
+pub struct NullSink;
+
+impl MetricSink for NullSink {
+    fn on_epoch(&mut self, _rec: &EpochRecord) {}
+}
+
 /// Weight-magnitude probe (Fig. 3): per-weight-tensor abs-value quartiles
 /// and bit-width.
 #[derive(Clone, Debug)]
@@ -80,6 +96,14 @@ pub struct TrainResult {
 /// used by every experiment driver.
 pub fn fit(net: &mut Network, train: &Dataset, test: &Dataset,
            cfg: &TrainConfig) -> TrainResult {
+    fit_observed(net, train, test, cfg, &mut NullSink)
+}
+
+/// [`fit`] with a [`MetricSink`] that observes every epoch as it
+/// completes.
+pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
+                    cfg: &TrainConfig, sink: &mut dyn MetricSink)
+                    -> TrainResult {
     let flatten = net.spec.input_shape.len() == 1;
     let mut rng = Pcg32::with_stream(cfg.seed, 0x74726169);
     let mut sched = PlateauScheduler::new(cfg.hyper.gamma_inv,
@@ -155,6 +179,7 @@ pub fn fit(net: &mut Network, train: &Dataset, test: &Dataset,
                 rec.secs
             );
         }
+        sink.on_epoch(&rec);
         epochs.push(rec);
         if diverged {
             break 'outer;
@@ -236,6 +261,27 @@ mod tests {
         assert!(last < first, "{first} -> {last}");
         // weight probes present for 3 blocks + head
         assert_eq!(res.weight_stats.len(), 7);
+    }
+
+    #[test]
+    fn fit_observed_streams_every_epoch() {
+        struct Count(usize);
+        impl MetricSink for Count {
+            fn on_epoch(&mut self, rec: &EpochRecord) {
+                assert_eq!(rec.epoch, self.0);
+                self.0 += 1;
+            }
+        }
+        let ds = synthetic::by_name("tiny", 120, 5).unwrap();
+        let (mut tr, mut te) = ds.split_test(40);
+        tr.mad_normalize();
+        te.mad_normalize();
+        let mut net = Network::new(zoo::get("tinycnn").unwrap(), 2);
+        let cfg = TrainConfig { epochs: 3, batch: 32, ..Default::default() };
+        let mut sink = Count(0);
+        let res = fit_observed(&mut net, &tr, &te, &cfg, &mut sink);
+        assert_eq!(sink.0, 3);
+        assert_eq!(res.epochs.len(), 3);
     }
 
     #[test]

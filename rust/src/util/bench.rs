@@ -42,6 +42,19 @@ impl Stats {
     }
 }
 
+/// Peak resident set size of this process in KiB (`VmHWM` from
+/// `/proc/self/status`); `None` where procfs is unavailable (non-Linux).
+/// The experiment runner records this per run as its peak-memory metric.
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.split_whitespace().next()?.parse().ok();
+        }
+    }
+    None
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns >= 1e9 {
         format!("{:.3} s", ns / 1e9)
@@ -162,6 +175,17 @@ mod tests {
         assert!(s.throughput().unwrap() > 0.0);
         assert!(b.json().contains("spin"));
         assert!(x > 0); // defeat DCE
+    }
+
+    #[test]
+    fn peak_rss_reported_on_linux() {
+        // On Linux procfs is always there; elsewhere None is the contract.
+        if std::path::Path::new("/proc/self/status").exists() {
+            let kb = peak_rss_kb().expect("VmHWM parse");
+            assert!(kb > 0);
+        } else {
+            assert!(peak_rss_kb().is_none());
+        }
     }
 
     #[test]

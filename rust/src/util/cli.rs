@@ -153,6 +153,12 @@ impl Parsed {
             .map_err(|e| format!("--{key}: {e}"))
     }
 
+    pub fn get_u64(&self, key: &str) -> Result<u64, String> {
+        self.get(key)
+            .parse()
+            .map_err(|e| format!("--{key}: {e}"))
+    }
+
     pub fn get_f64(&self, key: &str) -> Result<f64, String> {
         self.get(key)
             .parse()

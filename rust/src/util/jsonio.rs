@@ -105,6 +105,31 @@ impl Json {
         Ok(self.i64_vec()?.into_iter().map(|v| v as i32).collect())
     }
 
+    // ---- defaulted accessors (experiment-spec parsing) -------------------
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Json::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Json::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Json::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.i64_or(key, default as i64) as usize
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Json::as_bool).unwrap_or(default)
+    }
+
     // ---- writer ----------------------------------------------------------
 
     pub fn dump(&self) -> String {
@@ -151,6 +176,55 @@ impl Json {
                 }
                 out.push('}');
             }
+        }
+    }
+
+    /// Pretty writer: 2-space indentation, object keys in BTreeMap order.
+    /// Committed spec files and emitted BENCH records use this form so
+    /// re-generation produces readable, stable diffs.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_pretty(&self, out: &mut String, depth: usize) {
+        fn indent(out: &mut String, depth: usize) {
+            for _ in 0..depth {
+                out.push_str("  ");
+            }
+        }
+        match self {
+            Json::Array(v) if !v.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    indent(out, depth + 1);
+                    x.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                indent(out, depth);
+                out.push(']');
+            }
+            Json::Object(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    indent(out, depth + 1);
+                    write_escaped(k, out);
+                    out.push_str(": ");
+                    x.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                indent(out, depth);
+                out.push('}');
+            }
+            _ => self.write(out),
         }
     }
 
@@ -434,5 +508,30 @@ mod tests {
     fn escapes_written() {
         let v = Json::Str("a\"b\\c\n".into());
         assert_eq!(v.dump(), r#""a\"b\\c\n""#);
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_indents() {
+        let src = r#"{"a": [1, 2, {"b": true}], "c": {}, "d": [], "e": "x"}"#;
+        let v = Json::parse(src).unwrap();
+        let p = v.pretty();
+        assert_eq!(Json::parse(&p).unwrap(), v);
+        assert!(p.contains("  \"a\": ["), "{p}");
+        assert!(p.contains("\"c\": {}"), "empty containers stay inline: {p}");
+        assert!(p.ends_with('\n'));
+    }
+
+    #[test]
+    fn defaulted_accessors() {
+        let v = Json::parse(r#"{"s": "x", "n": 7, "f": 1.5, "b": true}"#)
+            .unwrap();
+        assert_eq!(v.str_or("s", "d"), "x");
+        assert_eq!(v.str_or("missing", "d"), "d");
+        assert_eq!(v.i64_or("n", 0), 7);
+        assert_eq!(v.usize_or("missing", 3), 3);
+        assert_eq!(v.f64_or("f", 0.0), 1.5);
+        assert_eq!(v.f64_or("n", 0.0), 7.0);
+        assert!(v.bool_or("b", false));
+        assert!(!v.bool_or("missing", false));
     }
 }

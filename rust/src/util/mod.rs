@@ -44,7 +44,7 @@ pub fn isqrt(n: u64) -> u64 {
     let mut x = (n as f64).sqrt() as u64;
     // correct the float seed to the exact floor (checked_mul: x near 2^32
     // overflows u64 squaring — saturating would loop forever at u64::MAX)
-    while x > 0 && x.checked_mul(x).is_none_or(|s| s > n) {
+    while x > 0 && x.checked_mul(x).map_or(true, |s| s > n) {
         x -= 1;
     }
     while (x + 1).checked_mul(x + 1).is_some_and(|s| s <= n) {

@@ -137,6 +137,47 @@ mod tests {
     }
 
     #[test]
+    fn map_order_stable_under_uneven_work() {
+        // early items sleep so later items finish first; outputs must
+        // still come back in input order for every worker budget
+        for workers in [2, 3, 8, 64] {
+            let out = scoped_map((0..48u64).collect::<Vec<_>>(), workers,
+                |x| {
+                    if x < 4 {
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(5));
+                    }
+                    x * x
+                });
+            assert_eq!(out, (0..48u64).map(|x| x * x).collect::<Vec<_>>(),
+                       "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn map_worker_panic_propagates() {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            scoped_map((0..16).collect::<Vec<_>>(), 4, |x| {
+                if x == 9 {
+                    panic!("worker bug");
+                }
+                x
+            })
+        }));
+        assert!(r.is_err(), "a worker panic must reach the caller");
+        // single-worker (sequential) path propagates too
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            scoped_map(vec![1, 2, 3], 1, |x| {
+                if x == 2 {
+                    panic!("worker bug");
+                }
+                x
+            })
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
     fn workers_actually_parallel() {
         // With 4 workers and 4 sleeping tasks the wall time must be well
         // under the serial sum (smoke check, generous margins).

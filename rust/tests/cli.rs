@@ -80,6 +80,28 @@ fn experiment_rejects_unknown_name() {
 }
 
 #[test]
+fn run_spec_smoke_emits_bench_json() {
+    let dir = std::env::temp_dir().join("nitro_cli_runspec");
+    std::fs::create_dir_all(&dir).unwrap();
+    let dir_s = dir.to_str().unwrap();
+    // the committed spec, one epoch (plumbing, not accuracy); cwd of
+    // integration tests is the package root (rust/)
+    let (code, stdout, stderr) = run(&[
+        "run-spec", "../experiments/smoke.json", "--epochs", "1",
+        "--out-dir", dir_s, "--bench-dir", dir_s,
+    ]);
+    assert_eq!(code, 0, "run-spec failed: {stderr}");
+    assert!(stdout.contains("BENCH_smoke.json"), "{stdout}");
+    let bench = std::fs::read_to_string(dir.join("BENCH_smoke.json")).unwrap();
+    assert!(bench.contains("\"schema_version\""), "{bench}");
+    assert!(bench.contains("\"final_test_acc\""), "{bench}");
+
+    let (code, _, stderr) = run(&["run-spec", "does/not/exist.json"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("exist.json"), "{stderr}");
+}
+
+#[test]
 fn runtime_smoke_if_artifacts_present() {
     if !std::path::Path::new("artifacts/tinycnn/manifest.json").exists() {
         eprintln!("skipping: artifacts not built");

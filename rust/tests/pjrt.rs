@@ -4,6 +4,12 @@
 //! architecture rests on.
 //!
 //! Requires `make artifacts`. Tests skip cleanly if artifacts are missing.
+//!
+//! The whole target is additionally gated on the `pjrt` cargo feature
+//! (Cargo.toml `required-features` plus the cfg below): a default build has
+//! only the stub runtime, so these tests would always fail to load.
+
+#![cfg(feature = "pjrt")]
 
 use nitro::coordinator::engine::{Engine, NativeEngine, PjrtEngine};
 use nitro::nn::{zoo, Hyper, Network};
