@@ -2,6 +2,10 @@
 //! NativeEngine vs their f32 twins, plus PJRT artifact execution when
 //! available. Throughput is reported in MACs/s so integer-vs-float cost on
 //! this CPU is directly visible (EXPERIMENTS.md §Perf feeds on the JSON).
+//!
+//! For the pool-vs-spawn dispatch comparison and the CI-tracked
+//! `BENCH_kernels.json` record, use `nitro bench-kernels`
+//! (`coordinator::kernelbench`) — this target focuses on int-vs-f32.
 
 use nitro::tensor::{conv2d_i64, conv2d_weight_grad, matmul_i64, maxpool2d,
                     nitro_scale_relu, ops_f32, FTensor, ITensor, Tensor};

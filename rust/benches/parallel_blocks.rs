@@ -48,7 +48,9 @@ fn main() {
         println!("  {preset}: block-parallel speedup {:.2}x", seq / par);
     }
 
-    // scaling with the kernel-level thread budget
+    // scaling with the kernel-level worker budget (participants per job
+    // are re-read from NITRO_WORKERS each call; the persistent pool is
+    // sized to the hardware, so budgets above it are clamped)
     let spec = zoo::get("vgg8b-narrow").unwrap();
     let mut shape = vec![batch];
     shape.extend(&spec.input_shape);
@@ -59,16 +61,16 @@ fn main() {
     let labels: Vec<usize> = (0..batch).map(|i| i % 10).collect();
     let hp = Hyper::default();
     for workers in [1usize, 2, 4, 8] {
-        std::env::set_var("NITRO_THREADS", workers.to_string());
+        std::env::set_var("NITRO_WORKERS", workers.to_string());
         let mut net = Network::new(spec.clone(), 1);
         let mut rng2 = Pcg32::new(4);
-        b.bench(&format!("vgg8b-narrow step NITRO_THREADS={workers}"), None,
+        b.bench(&format!("vgg8b-narrow step NITRO_WORKERS={workers}"), None,
                 || {
                     std::hint::black_box(net.train_batch_parallel(
                         &x, &labels, &hp, &mut rng2));
                 });
     }
-    std::env::remove_var("NITRO_THREADS");
+    std::env::remove_var("NITRO_WORKERS");
 
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/bench_parallel.json", b.json()).ok();

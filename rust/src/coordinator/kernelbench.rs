@@ -1,0 +1,396 @@
+//! `nitro bench-kernels`: the kernel-runtime measurement harness behind
+//! the CI perf-trajectory lane.
+//!
+//! Times the NativeEngine hot paths (matmul / conv / im2col / NITRO-ReLU
+//! epilogue) across paper-relevant shapes plus one full table1-MLP and
+//! table2-CNN training step, comparing the persistent worker pool against
+//! the seed per-call-thread-spawn backend, and emits a schema-versioned
+//! `BENCH_kernels.json` through the shared `jsonio` machinery.
+//!
+//! Two kinds of signal with two severities:
+//! * **bit-exactness** (pool vs spawn vs single-thread vs workspace
+//!   paths) — a mismatch is a hard failure (`Err`), CI goes red;
+//! * **wall-clock vs a checked-in baseline** — advisory only: deltas
+//!   beyond the gate print GitHub `::warning::` annotations but never
+//!   fail the run (timings are machine-dependent).
+
+use crate::nn::{zoo, Hyper, Network};
+use crate::tensor::{
+    conv2d_i64, conv2d_i64_ws, conv2d_weight_grad, conv2d_weight_grad_ws,
+    im2col, matmul_i64, nitro_relu, nitro_scale_relu, ITensor,
+    KernelWorkspace, LTensor, Tensor,
+};
+use crate::util::bench::Bencher;
+use crate::util::jsonio::Json;
+use crate::util::{par, rng::Pcg32};
+
+/// Bump when a `BENCH_kernels.json` key changes meaning or disappears;
+/// adding keys is allowed without a bump.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// Advisory wall-clock gate vs the baseline: ±30%.
+pub const BASELINE_GATE: f64 = 0.30;
+
+#[derive(Clone, Debug)]
+pub struct Opts {
+    /// Per-benchmark budget in seconds; `None` = `NITRO_BENCH_BUDGET` or
+    /// the [`Bencher`] default.
+    pub budget_s: Option<f64>,
+    /// Output path for the aggregate JSON record.
+    pub out: String,
+    /// Optional baseline `BENCH_kernels.json` to compare against.
+    pub baseline: Option<String>,
+    /// Small-shape subset only (no full train steps) — used by the CLI
+    /// test suite where the binary runs unoptimized.
+    pub quick: bool,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            budget_s: None,
+            out: "BENCH_kernels.json".to_string(),
+            baseline: None,
+            quick: false,
+        }
+    }
+}
+
+fn rand_i(rng: &mut Pcg32, shape: &[usize], lo: i32, hi: i32) -> ITensor {
+    let n = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_i32(lo, hi)).collect())
+}
+
+/// Collects pool-vs-spawn speedups and bit-exactness verdicts.
+struct Harness {
+    b: Bencher,
+    speedups: Vec<(String, f64)>,
+    bitexact_failures: Vec<String>,
+}
+
+impl Harness {
+    /// Bench `f` on the pool backend and the legacy spawn backend,
+    /// recording the spawn/pool median ratio, after checking the two
+    /// backends (plus the single-thread path via `check`) agree.
+    fn pool_vs_spawn<F, C>(&mut self, name: &str, work: Option<f64>, f: F,
+                           check: C)
+    where
+        F: Fn(),
+        C: Fn() -> bool,
+    {
+        if !check() {
+            self.bitexact_failures.push(name.to_string());
+        }
+        let pool_ns =
+            self.b.bench(&format!("{name} [pool]"), work, &f).median_ns;
+        par::set_spawn_mode(true);
+        let spawn_ns =
+            self.b.bench(&format!("{name} [spawn]"), work, &f).median_ns;
+        par::set_spawn_mode(false);
+        self.speedups.push((name.to_string(), spawn_ns / pool_ns));
+    }
+}
+
+/// Run the harness; returns the emitted JSON. `Err` only on I/O problems
+/// or a bit-exactness mismatch.
+pub fn run(opts: &Opts) -> Result<Json, String> {
+    let mut h = Harness {
+        b: Bencher::default(),
+        speedups: Vec::new(),
+        bitexact_failures: Vec::new(),
+    };
+    if let Some(s) = opts.budget_s {
+        h.b.budget_s = s;
+    }
+    let workers = par::default_workers();
+    println!(
+        "bench-kernels: {workers} workers (pool size {}), budget {:.3}s/bench{}",
+        par::pool::size(),
+        h.b.budget_s,
+        if opts.quick { ", quick subset" } else { "" }
+    );
+    println!("{}", Bencher::header());
+    let mut rng = Pcg32::new(1);
+
+    // ---- matmul: paper MLP shapes + dispatch-bound small shapes --------
+    let mm_shapes: &[(usize, usize, usize)] = if opts.quick {
+        &[(8, 64, 64), (16, 128, 128)]
+    } else {
+        &[(8, 64, 64), (16, 128, 128), (64, 784, 1024), (64, 1024, 1024)]
+    };
+    for &(m, k, n) in mm_shapes {
+        let a = rand_i(&mut rng, &[m, k], -127, 127);
+        let w = rand_i(&mut rng, &[k, n], -32768, 32767);
+        let macs = (m * k * n) as f64;
+        let reference = matmul_single_thread(&a, &w);
+        h.pool_vs_spawn(
+            &format!("int_matmul {m}x{k}x{n}"),
+            Some(macs),
+            || {
+                std::hint::black_box(matmul_i64(&a, &w));
+            },
+            || {
+                let pool = matmul_i64(&a, &w);
+                par::set_spawn_mode(true);
+                let spawn = matmul_i64(&a, &w);
+                par::set_spawn_mode(false);
+                pool == reference && spawn == reference
+            },
+        );
+    }
+
+    // ---- im2col --------------------------------------------------------
+    let xi = rand_i(&mut rng, &[8, 16, 16, 16], -127, 127);
+    h.b.bench("im2col b8 c16 16x16 k3", Some((8 * 16 * 16 * 16 * 9) as f64),
+              || {
+                  std::hint::black_box(im2col(&xi, 3, 1));
+              });
+
+    // ---- conv2d + weight grad (with and without patch reuse) -----------
+    let conv_shapes: &[(usize, usize, usize, usize)] = if opts.quick {
+        &[(2, 8, 16, 10)]
+    } else {
+        &[(2, 8, 16, 10), (8, 32, 64, 16)]
+    };
+    for &(bt, c, o, hs) in conv_shapes {
+        let x = rand_i(&mut rng, &[bt, c, hs, hs], -127, 127);
+        let w = rand_i(&mut rng, &[o, c, 3, 3], -4000, 4000);
+        let g = rand_i(&mut rng, &[bt, o, hs, hs], -500, 500);
+        let macs = (bt * o * hs * hs * c * 9) as f64;
+        let reference = conv2d_i64(&x, &w, 1);
+        h.pool_vs_spawn(
+            &format!("int_conv2d b{bt} {c}->{o} {hs}x{hs}"),
+            Some(macs),
+            || {
+                std::hint::black_box(conv2d_i64(&x, &w, 1));
+            },
+            || {
+                let mut ws = KernelWorkspace::new();
+                let ws_out = conv2d_i64_ws(&x, &w, 1, &mut ws);
+                par::set_spawn_mode(true);
+                let spawn = conv2d_i64(&x, &w, 1);
+                par::set_spawn_mode(false);
+                ws_out == reference && spawn == reference
+            },
+        );
+        // weight grad: fresh extraction vs forward-patch reuse
+        let gw_fresh = conv2d_weight_grad(&x, &g, 3, 1);
+        let mut ws = KernelWorkspace::new();
+        let _ = conv2d_i64_ws(&x, &w, 1, &mut ws); // prime the patches
+        if conv2d_weight_grad_ws(&x, &g, 3, 1, &mut ws) != gw_fresh {
+            h.bitexact_failures
+                .push(format!("conv_wgrad b{bt} {c}->{o} {hs}x{hs}"));
+        }
+        h.b.bench(&format!("conv_wgrad b{bt} {c}->{o} {hs}x{hs} [fresh]"),
+                  Some(macs), || {
+                      std::hint::black_box(conv2d_weight_grad(&x, &g, 3, 1));
+                  });
+        h.b.bench(&format!("conv_wgrad b{bt} {c}->{o} {hs}x{hs} [ws-reuse]"),
+                  Some(macs), || {
+                      std::hint::black_box(conv2d_weight_grad_ws(
+                          &x, &g, 3, 1, &mut ws,
+                      ));
+                  });
+    }
+
+    // ---- NITRO elementwise ---------------------------------------------
+    let elems: usize = if opts.quick { 16 * 4096 } else { 64 * 65536 };
+    let z = LTensor::from_vec(
+        &[64, elems / 64],
+        (0..elems).map(|i| (i as i64 * 7919) % (1 << 40)).collect(),
+    );
+    h.b.bench(&format!("nitro_scale_relu 64x{}", elems / 64),
+              Some(elems as f64), || {
+                  std::hint::black_box(nitro_scale_relu(&z, 256 * 1152, 10));
+              });
+    let zs = rand_i(&mut rng, &[64, elems / 64], -127, 127);
+    h.b.bench(&format!("nitro_relu 64x{}", elems / 64), Some(elems as f64),
+              || {
+                  std::hint::black_box(nitro_relu(&zs, 10));
+              });
+
+    // ---- full training steps (paper table 1 MLP / table 2 CNN) ---------
+    if !opts.quick {
+        for (label, preset, batch) in [
+            ("table1-mlp train step (mlp1, b64)", "mlp1", 64usize),
+            ("table2-cnn train step (vgg8b-narrow, b8)", "vgg8b-narrow", 8),
+        ] {
+            let spec = zoo::get(preset).expect("zoo preset");
+            let mut shape = vec![batch];
+            shape.extend(&spec.input_shape);
+            let x = rand_i(&mut rng, &shape, -127, 127);
+            let labels: Vec<usize> =
+                (0..batch).map(|i| i % spec.num_classes).collect();
+            let hp = Hyper { gamma_inv: 512, eta_fw_inv: 12000,
+                             eta_lr_inv: 3000 };
+            let mut net = Network::new(spec, 1);
+            let mut step_rng = Pcg32::new(2);
+            h.b.bench(label, None, || {
+                std::hint::black_box(net.train_batch_parallel(
+                    &x, &labels, &hp, &mut step_rng,
+                ));
+            });
+        }
+    }
+
+    // ---- emit -----------------------------------------------------------
+    let record = Json::obj(vec![
+        ("schema_version", Json::Int(SCHEMA_VERSION)),
+        ("experiment", Json::Str("kernels".to_string())),
+        ("workers", Json::Int(workers as i64)),
+        ("pool_size", Json::Int(par::pool::size() as i64)),
+        ("budget_s", Json::Float(h.b.budget_s)),
+        ("quick", Json::Bool(opts.quick)),
+        ("rows", h.b.json_value()),
+        (
+            "pool_speedup_vs_spawn",
+            Json::Object(
+                h.speedups
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Float(*v)))
+                    .collect(),
+            ),
+        ),
+        ("bitexact", Json::Bool(h.bitexact_failures.is_empty())),
+        (
+            "bitexact_failures",
+            Json::Array(
+                h.bitexact_failures.iter().cloned().map(Json::Str).collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(&opts.out, record.pretty())
+        .map_err(|e| format!("write {}: {e}", opts.out))?;
+    println!("-> {}", opts.out);
+    for (name, s) in &h.speedups {
+        println!("  pool speedup vs per-call spawn: {s:5.2}x  {name}");
+    }
+
+    if let Some(path) = &opts.baseline {
+        compare_to_baseline(&record, path)?;
+    }
+    if h.bitexact_failures.is_empty() {
+        println!("bit-exactness: all kernel paths agree");
+    } else {
+        return Err(format!(
+            "bit-exactness MISMATCH in: {}",
+            h.bitexact_failures.join(", ")
+        ));
+    }
+    Ok(record)
+}
+
+/// Single-thread reference matmul (the deterministic-mode path).
+fn matmul_single_thread(a: &ITensor, b: &ITensor) -> LTensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    let mut out = vec![0i64; m * n];
+    crate::tensor::matmul_i64_into(&a.data, &b.data, m, k, n, &mut out, 1);
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// Advisory baseline comparison: per-row median deltas beyond
+/// [`BASELINE_GATE`] print `::warning::` annotations (picked up by GitHub
+/// Actions) but never fail. Only a missing/unreadable baseline is an
+/// error.
+fn compare_to_baseline(record: &Json, path: &str) -> Result<(), String> {
+    let base = Json::parse_file(path)?;
+    let base_rows: Vec<(&str, f64)> = base
+        .get("rows")
+        .and_then(Json::as_array)
+        .map(|rows| {
+            rows.iter()
+                .filter_map(|r| {
+                    Some((
+                        r.get("name")?.as_str()?,
+                        r.get("median_ns")?.as_f64()?,
+                    ))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    let rows = record.get("rows").and_then(Json::as_array).unwrap_or(&[]);
+    let mut compared = 0usize;
+    let mut flagged = 0usize;
+    for r in rows {
+        let (Some(name), Some(med)) = (
+            r.get("name").and_then(Json::as_str),
+            r.get("median_ns").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        let Some(&(_, bmed)) =
+            base_rows.iter().find(|(bn, _)| *bn == name)
+        else {
+            continue;
+        };
+        compared += 1;
+        let delta = med / bmed - 1.0;
+        if delta.abs() > BASELINE_GATE {
+            flagged += 1;
+            println!(
+                "::warning title=bench-kernels::'{name}' median {:+.0}% vs \
+                 baseline ({:.0} ns vs {:.0} ns) — advisory, timings are \
+                 machine-dependent",
+                delta * 100.0,
+                med,
+                bmed
+            );
+        }
+    }
+    println!(
+        "baseline {path}: {compared} rows compared, {flagged} outside the \
+         ±{:.0}% advisory gate",
+        BASELINE_GATE * 100.0
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_harness_end_to_end() {
+        let dir = std::env::temp_dir().join("nitro_kernelbench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_kernels.json");
+        let opts = Opts {
+            budget_s: Some(0.005),
+            out: out.to_str().unwrap().to_string(),
+            baseline: None,
+            quick: true,
+        };
+        let rec = run(&opts).unwrap();
+        assert_eq!(rec.req("schema_version").unwrap().as_i64(),
+                   Some(SCHEMA_VERSION));
+        assert_eq!(rec.req("bitexact").unwrap().as_bool(), Some(true));
+        let rows = rec.req("rows").unwrap().as_array().unwrap();
+        assert!(rows.len() >= 6, "expected several rows, got {}", rows.len());
+        // the record reparses from disk with the schema intact (integral
+        // floats round-trip as ints, so no full structural equality here)
+        let reread = Json::parse_file(out.to_str().unwrap()).unwrap();
+        assert_eq!(reread.req("schema_version").unwrap().as_i64(),
+                   Some(SCHEMA_VERSION));
+        assert_eq!(reread.req("bitexact").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            reread.req("rows").unwrap().as_array().unwrap().len(),
+            rows.len()
+        );
+        // self-comparison stays advisory (exit Ok) even with noisy timings
+        let opts2 = Opts {
+            baseline: Some(out.to_str().unwrap().to_string()),
+            out: dir.join("BENCH_kernels2.json").to_str().unwrap().to_string(),
+            ..opts
+        };
+        run(&opts2).unwrap();
+        // a missing baseline is a real error
+        let opts3 = Opts {
+            baseline: Some("does/not/exist.json".to_string()),
+            quick: true,
+            budget_s: Some(0.001),
+            out: dir.join("BENCH_kernels3.json").to_str().unwrap().to_string(),
+        };
+        assert!(run(&opts3).is_err());
+    }
+}

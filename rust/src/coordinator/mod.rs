@@ -6,6 +6,7 @@
 
 pub mod engine;
 pub mod experiments;
+pub mod kernelbench;
 pub mod runner;
 pub mod spec;
 

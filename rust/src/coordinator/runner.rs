@@ -162,6 +162,8 @@ pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
     let bench_path = if opts.bench_dir == "." || opts.bench_dir.is_empty() {
         spec.bench_output.clone()
     } else {
+        std::fs::create_dir_all(&opts.bench_dir)
+            .map_err(|e| format!("mkdir {}: {e}", opts.bench_dir))?;
         format!("{}/{}", opts.bench_dir, spec.bench_output)
     };
     std::fs::write(&bench_path, bench.pretty())

@@ -10,6 +10,7 @@
 
 use nitro::coordinator::engine::{Engine, PjrtEngine};
 use nitro::coordinator::experiments::{self, ExpCtx, Scale};
+use nitro::coordinator::kernelbench;
 use nitro::coordinator::runner::{self, RunnerOpts};
 use nitro::coordinator::spec::ExperimentSpec;
 use nitro::data::loader;
@@ -25,6 +26,7 @@ fn main() {
         Some("eval") => cmd_eval(&argv[1..]),
         Some("experiment") => cmd_experiment(&argv[1..]),
         Some("run-spec") => cmd_run_spec(&argv[1..]),
+        Some("bench-kernels") => cmd_bench_kernels(&argv[1..]),
         Some("zoo") => cmd_zoo(),
         Some("runtime") => cmd_runtime(&argv[1..]),
         Some("-h") | Some("--help") | None => {
@@ -50,6 +52,9 @@ Subcommands:
               table9 fig2-left fig2-right fig3 all
   run-spec    execute a declarative experiment spec, e.g.
               `nitro run-spec experiments/smoke.json`
+  bench-kernels
+              time the integer kernel hot paths (pool vs per-call spawn,
+              workspace reuse) and emit BENCH_kernels.json
   zoo         list model presets
   runtime     PJRT smoke check over artifacts/<preset>
 ";
@@ -274,6 +279,38 @@ fn cmd_run_spec(argv: &[String]) -> i32 {
             verbose: p.has("verbose"),
         };
         runner::execute(&spec, &opts).map(|_| ())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_bench_kernels(argv: &[String]) -> i32 {
+    let cmd = Command::new("nitro bench-kernels",
+                           "time the integer kernel hot paths")
+        .opt("budget", "0",
+             "per-benchmark seconds (0 = NITRO_BENCH_BUDGET or 1.0)")
+        .opt("out", "BENCH_kernels.json", "output JSON path")
+        .opt("baseline", "",
+             "baseline BENCH_kernels.json for an advisory ±30% comparison")
+        .flag("quick", "small-shape subset, no full train-step benches");
+    let p = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let run = || -> Result<(), String> {
+        let budget = p.get_f64("budget")?;
+        let opts = kernelbench::Opts {
+            budget_s: if budget > 0.0 { Some(budget) } else { None },
+            out: p.get("out").to_string(),
+            baseline: match p.get("baseline") {
+                "" => None,
+                b => Some(b.to_string()),
+            },
+            quick: p.has("quick"),
+        };
+        kernelbench::run(&opts).map(|_| ())
     };
     match run() {
         Ok(()) => 0,

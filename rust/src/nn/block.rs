@@ -8,10 +8,10 @@
 use crate::nn::spec::{BlockSpec, HeadSpec, NetworkSpec};
 use crate::optim::integer_sgd;
 use crate::tensor::{
-    conv2d_i64, conv2d_weight_grad, matmul_a_bt_i64, matmul_at_b_i64,
-    matmul_i64, maxpool2d, maxpool2d_bwd, nitro_relu, nitro_relu_bwd,
-    nitro_scale, one_hot32, rss_loss_grad, scale_factor_linear, ITensor,
-    LTensor,
+    conv2d_i64, conv2d_scale_ws, conv2d_weight_grad_ws, matmul_a_bt_i64,
+    matmul_at_b_i64, matmul_i64, matmul_scale_ws, maxpool2d, maxpool2d_bwd,
+    nitro_relu, nitro_relu_bwd, nitro_scale, one_hot32, rss_loss_grad,
+    scale_factor_linear, ITensor, KernelWorkspace, LTensor,
 };
 use crate::util::rng::Pcg32;
 
@@ -57,6 +57,10 @@ pub struct Block {
     /// Dropout probability in 1/256ths (0 = disabled). Mask-only dropout —
     /// DESIGN.md interp. #5.
     pub drop_p256: u32,
+    /// Per-block kernel scratch: transpose / im2col / accumulator buffers
+    /// reused across steps, so the training forward and weight-grad share
+    /// one im2col extraction and the steady state allocates no scratch.
+    ws: KernelWorkspace,
 }
 
 impl Block {
@@ -72,7 +76,7 @@ impl Block {
                 init_weights(rng, &l.wl_shape(), l.out_features),
             ),
         };
-        Block { spec, wf, wl, drop_p256: 0 }
+        Block { spec, wf, wl, drop_p256: 0, ws: KernelWorkspace::new() }
     }
 
     /// Inference forward (no dropout, no cache).
@@ -97,13 +101,16 @@ impl Block {
     }
 
     /// Training forward: returns output + backward cache. Dropout is drawn
-    /// from `rng` when `drop_p256 > 0`.
-    pub fn forward_train(&self, a: &ITensor, rng: Option<&mut Pcg32>)
+    /// from `rng` when `drop_p256 > 0`. Runs on the block's workspace: the
+    /// conv path leaves its im2col patches cached for [`Self::backward_step`],
+    /// and the fused contract-and-scale kernels never materialize the i64
+    /// pre-activations outside the reused accumulator.
+    pub fn forward_train(&mut self, a: &ITensor, rng: Option<&mut Pcg32>)
                          -> BlockCache {
         let (zs, act_shape, pool_arg, mut out) = match &self.spec {
             BlockSpec::Conv(c) => {
-                let z = conv2d_i64(a, &self.wf, c.padding);
-                let zs = nitro_scale(&z, c.sf());
+                let zs =
+                    conv2d_scale_ws(a, &self.wf, c.padding, c.sf(), &mut self.ws);
                 let act = nitro_relu(&zs, c.alpha_inv);
                 let act_shape = act.shape.clone();
                 if c.pool {
@@ -114,8 +121,7 @@ impl Block {
                 }
             }
             BlockSpec::Linear(l) => {
-                let z = matmul_i64(a, &self.wf);
-                let zs = nitro_scale(&z, l.sf());
+                let zs = matmul_scale_ws(a, &self.wf, l.sf(), &mut self.ws);
                 let act = nitro_relu(&zs, l.alpha_inv);
                 let act_shape = act.shape.clone();
                 (zs, act_shape, None, act)
@@ -146,8 +152,9 @@ impl Block {
         let af = 64 * self.spec.num_classes() as i64;
         // ---- learning layers ------------------------------------------
         let (feat, lr_arg, pooled_shape) = adaptive_pool(&cache.a_out, &self.spec);
-        let zl = matmul_i64(&feat, &self.wl);
-        let yhat = nitro_scale(&zl, scale_factor_linear(feat.shape[1]));
+        let yhat = matmul_scale_ws(&feat, &self.wl,
+                                   scale_factor_linear(feat.shape[1]),
+                                   &mut self.ws);
         let (loss, grad_l) = rss_loss_grad(&yhat, y32);
         let gw_l = matmul_at_b_i64(&feat, &grad_l); // featᵀ·∇L (F,G)
         let dfeat = matmul_a_bt_i64(&grad_l, &self.wl).to_i32(); // ∇L·Wᵀ
@@ -174,7 +181,12 @@ impl Block {
         let d = nitro_relu_bwd(&cache.zs, &d, alpha_inv);
         // NITRO scaling backward = STE (identity)
         let gw_f: LTensor = match &self.spec {
-            BlockSpec::Conv(c) => conv2d_weight_grad(a_in, &d, c.kernel, c.padding),
+            // reuses the im2col patches the forward pass left in the
+            // workspace — no second extraction per step
+            BlockSpec::Conv(c) => {
+                conv2d_weight_grad_ws(a_in, &d, c.kernel, c.padding,
+                                      &mut self.ws)
+            }
             BlockSpec::Linear(_) => matmul_at_b_i64(a_in, &d),
         };
         // forward layers: γ_inv^fw = γ_inv^lr · AF (DESIGN.md interp. #1)
@@ -269,6 +281,8 @@ pub fn adaptive_pool_bwd(dfeat: &ITensor, arg: Option<&ITensor>,
 pub struct Head {
     pub spec: HeadSpec,
     pub wo: ITensor,
+    /// Kernel scratch reused across training steps.
+    ws: KernelWorkspace,
 }
 
 impl Head {
@@ -279,7 +293,7 @@ impl Head {
             &[spec.in_features, spec.num_classes],
             spec.fan_in(),
         );
-        Head { spec, wo }
+        Head { spec, wo, ws: KernelWorkspace::new() }
     }
 
     pub fn forward(&self, a: &ITensor) -> ITensor {
@@ -291,7 +305,7 @@ impl Head {
     /// role — no amplification factor).
     pub fn train_step(&mut self, a: &ITensor, y32: &ITensor, hp: &Hyper)
                       -> (ITensor, i64) {
-        let yhat = self.forward(a);
+        let yhat = matmul_scale_ws(a, &self.wo, self.spec.sf(), &mut self.ws);
         let (loss, grad) = rss_loss_grad(&yhat, y32);
         let gw = matmul_at_b_i64(a, &grad);
         integer_sgd(&mut self.wo, &gw, hp.gamma_inv, hp.eta_lr_inv);
@@ -387,6 +401,12 @@ impl Network {
     /// because no data crosses block boundaries backwards.
     pub fn train_batch_parallel(&mut self, x: &ITensor, labels: &[usize],
                                 hp: &Hyper, rng: &mut Pcg32) -> StepReport {
+        // deterministic single-thread mode (NITRO_WORKERS=1): honour the
+        // "no thread is ever spawned" guarantee for every caller by
+        // falling back to sequential order (bit-identical results)
+        if crate::util::par::default_workers() <= 1 {
+            return self.train_batch(x, labels, hp, rng);
+        }
         let y32 = one_hot32(labels, self.spec.num_classes);
         let nblocks = self.blocks.len();
         let mut block_loss = vec![0i64; nblocks];

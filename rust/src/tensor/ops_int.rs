@@ -3,9 +3,114 @@
 
 use super::{ITensor, LTensor, Tensor};
 use crate::util::{div_floor, par};
+use std::cell::RefCell;
 
 pub const INT8_MAX: i32 = 127;
 pub const ONE_HOT_VALUE: i32 = 32;
+
+// ---------------------------------------------------------------------------
+// kernel workspace (zero-realloc scratch)
+// ---------------------------------------------------------------------------
+
+/// Reusable scratch for the integer kernels: transposed-rhs, im2col-patch
+/// and i64-accumulator buffers grow to a high-water mark once and are then
+/// reused on every call (zero-realloc steady state).
+///
+/// A conv forward through [`conv2d_i64_ws`] / [`conv2d_scale_ws`] leaves
+/// its im2col patches in the workspace tagged with the input geometry; the
+/// matching [`conv2d_weight_grad_ws`] call reuses them instead of
+/// re-extracting — this removes the second per-step im2col the seed paid
+/// in `conv2d_weight_grad`. Release builds key reuse on (shape, kernel,
+/// padding) — callers must pass the *same input tensor* between forward
+/// and weight-grad (as `nn::block` does); debug builds additionally
+/// fingerprint the input data and silently recompute on mismatch.
+#[derive(Default)]
+pub struct KernelWorkspace {
+    /// Transposed rhs for the matmul fast path.
+    bt: Vec<i32>,
+    /// im2col patches `(B, P, CKK)` plus their validity tag.
+    patches: Vec<i32>,
+    patches_tag: Option<PatchTag>,
+    /// i64 accumulator for the fused contract-then-scale paths.
+    acc: Vec<i64>,
+}
+
+#[derive(Clone, PartialEq, Eq, Debug)]
+struct PatchTag {
+    x_shape: Vec<usize>,
+    kernel: usize,
+    padding: usize,
+    plen: usize,
+    #[cfg(debug_assertions)]
+    fingerprint: (u64, i64),
+}
+
+impl PatchTag {
+    fn new(x: &ITensor, kernel: usize, padding: usize) -> PatchTag {
+        let (b, c, h, w) = shape4(x);
+        let (ho, wo) = out_hw(h, w, kernel, padding);
+        PatchTag {
+            x_shape: x.shape.clone(),
+            kernel,
+            padding,
+            plen: b * ho * wo * c * kernel * kernel,
+            #[cfg(debug_assertions)]
+            fingerprint: crate::util::checksum_i32(&x.data),
+        }
+    }
+}
+
+impl KernelWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop the cached im2col patches (the buffer capacity is kept).
+    pub fn invalidate_patches(&mut self) {
+        self.patches_tag = None;
+    }
+
+    /// Unconditionally extract `im2col(x, kernel, padding)` into `patches`
+    /// and tag it — the *producer* side (conv forward). Always re-extracts
+    /// because a forward pass sees fresh input data every call even when
+    /// the shape is unchanged.
+    fn fill_patches(&mut self, x: &ITensor, kernel: usize, padding: usize) {
+        let tag = PatchTag::new(x, kernel, padding);
+        let plen = tag.plen;
+        let buf = grown(&mut self.patches, plen);
+        im2col_into(x, kernel, padding, buf);
+        self.patches_tag = Some(tag);
+    }
+
+    /// Ensure `patches` hold `im2col(x, kernel, padding)`, reusing the
+    /// cached extraction when the tag matches — the *consumer* side
+    /// (weight grad, which sees the same input its forward just produced
+    /// patches for).
+    fn ensure_patches(&mut self, x: &ITensor, kernel: usize, padding: usize) {
+        let tag = PatchTag::new(x, kernel, padding);
+        if self.patches_tag.as_ref() == Some(&tag) {
+            return;
+        }
+        self.fill_patches(x, kernel, padding);
+    }
+}
+
+/// Grow-only view: resizes `buf` up to `n` if needed (never shrinks, so
+/// the steady state allocates nothing) and returns the first `n` slots.
+fn grown<T: Copy + Default>(buf: &mut Vec<T>, n: usize) -> &mut [T] {
+    if buf.len() < n {
+        buf.resize(n, T::default());
+    }
+    &mut buf[..n]
+}
+
+thread_local! {
+    /// Per-thread scratch backing the workspace-less kernel entry points
+    /// (`matmul_i64`, `conv2d_i64`, ...): repeated same-shape calls reuse
+    /// the high-water-mark buffers instead of re-allocating per call.
+    static SCRATCH: RefCell<KernelWorkspace> =
+        RefCell::new(KernelWorkspace::new());
+}
 
 // ---------------------------------------------------------------------------
 // matmul
@@ -64,14 +169,14 @@ fn dot_i64(a: &[i32], b: &[i32]) -> i64 {
     acc
 }
 
-fn transpose_i32(b: &[i32], k: usize, n: usize) -> Vec<i32> {
-    let mut bt = vec![0i32; n * k];
+fn transpose_into(b: &[i32], k: usize, n: usize, bt: &mut [i32]) {
+    debug_assert_eq!(bt.len(), n * k);
     for kk in 0..k {
-        for j in 0..n {
-            bt[j * k + kk] = b[kk * n + j];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (j, &v) in brow.iter().enumerate() {
+            bt[j * k + kk] = v;
         }
     }
-    bt
 }
 
 /// `a (m,k) i32 × b (k,n) i32 -> (m,n) i64`, i64 accumulation.
@@ -84,39 +189,115 @@ pub fn matmul_i64(a: &ITensor, b: &ITensor) -> LTensor {
     Tensor::from_vec(&[m, n], out)
 }
 
+/// Fused `floor((a × b) / sf)`: the i64 contraction accumulates into the
+/// workspace buffer and only the scaled i32 output is freshly allocated —
+/// the linear / learning-layer / head forward path.
+pub fn matmul_scale_ws(a: &ITensor, b: &ITensor, sf: i64,
+                       ws: &mut KernelWorkspace) -> ITensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (kb, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, kb, "matmul inner dims {k} vs {kb}");
+    let KernelWorkspace { bt, acc, .. } = ws;
+    let accbuf = grown(acc, m * n);
+    accbuf.fill(0);
+    matmul_i64_into_buf(&a.data, &b.data, m, k, n, accbuf,
+                        par::default_workers(), bt);
+    Tensor {
+        shape: vec![m, n],
+        data: accbuf.iter().map(|&v| div_floor(v, sf) as i32).collect(),
+    }
+}
+
 /// Core kernel **accumulating** into a caller buffer (callers zero it or
-/// reuse it to sum over a batch); parallel over output rows.
+/// reuse it to sum over a batch); parallel over output row blocks, using
+/// a per-thread scratch workspace for the transposed rhs.
 pub fn matmul_i64_into(a: &[i32], b: &[i32], m: usize, k: usize, n: usize,
                        out: &mut [i64], workers: usize) {
+    SCRATCH.with(|ws| {
+        matmul_i64_into_buf(a, b, m, k, n, out, workers,
+                            &mut ws.borrow_mut().bt);
+    });
+}
+
+/// Cache-blocking tile sizes for the matmul fast path: a `(MM_JTILE,
+/// MM_KTILE)` tile of the transposed rhs (~128 KiB) stays L2-resident
+/// across every row of a parallel row block.
+const MM_JTILE: usize = 64;
+const MM_KTILE: usize = 512;
+
+/// [`matmul_i64_into`] with an explicit transpose scratch buffer.
+#[allow(clippy::too_many_arguments)]
+fn matmul_i64_into_buf(a: &[i32], b: &[i32], m: usize, k: usize, n: usize,
+                       out: &mut [i64], workers: usize, bt: &mut Vec<i32>) {
     assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    // parallel grain: a few row blocks per worker for load balance
+    let rows = m.div_ceil(workers.max(1) * 4).max(1);
     match safe_chunk(max_abs(a), max_abs(b), k) {
         Some(chunk) => {
             // row-dot form over a transposed rhs: both operands stream
-            // contiguously and the inner loop vectorizes in i32
-            let bt = transpose_i32(b, k, n);
-            par::for_each_chunk(out, n, workers, |i, orow| {
-                let arow = &a[i * k..(i + 1) * k];
-                for (j, o) in orow.iter_mut().enumerate() {
-                    *o += dot_chunked(arow, &bt[j * k..(j + 1) * k], chunk);
-                }
+            // contiguously, the inner loop vectorizes in i32, and k-tiles
+            // never exceed the i32-safe accumulation chunk
+            let bt = grown(bt, n * k);
+            transpose_into(b, k, n, bt);
+            let bt: &[i32] = bt;
+            let ktile = chunk.min(MM_KTILE);
+            par::for_each_chunk(out, rows * n, workers, |blk, orows| {
+                mm_block(a, bt, k, n, blk * rows, orows, ktile);
             });
         }
         None => {
             // wide-operand fallback: saxpy in i64
-            par::for_each_chunk(out, n, workers, |i, orow| {
-                let arow = &a[i * k..(i + 1) * k];
-                for (kk, &av) in arow.iter().enumerate() {
-                    if av == 0 {
-                        continue;
-                    }
-                    let av = av as i64;
-                    let brow = &b[kk * n..kk * n + n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv as i64;
+            par::for_each_chunk(out, rows * n, workers, |blk, orows| {
+                for (r, orow) in orows.chunks_mut(n).enumerate() {
+                    let i = blk * rows + r;
+                    let arow = &a[i * k..(i + 1) * k];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0 {
+                            continue;
+                        }
+                        let av = av as i64;
+                        let brow = &b[kk * n..kk * n + n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv as i64;
+                        }
                     }
                 }
             });
         }
+    }
+}
+
+/// Blocked inner kernel over one row block: k-tiles (bounded by the
+/// i32-safe chunk) outermost, then j-tiles, so the `bt` tile is reused
+/// across every row. i32 partial sums widen to i64 at tile boundaries —
+/// bit-identical to any other order because integer addition is
+/// associative and each tile obeys the overflow bound.
+fn mm_block(a: &[i32], bt: &[i32], k: usize, n: usize, r0: usize,
+            orows: &mut [i64], ktile: usize) {
+    let rows = orows.len() / n;
+    let mut kt = 0usize;
+    while kt < k {
+        let klen = ktile.min(k - kt);
+        for jt in (0..n).step_by(MM_JTILE) {
+            let jlen = MM_JTILE.min(n - jt);
+            for r in 0..rows {
+                let arow = &a[(r0 + r) * k + kt..(r0 + r) * k + kt + klen];
+                let orow = &mut orows[r * n + jt..r * n + jt + jlen];
+                for (jj, o) in orow.iter_mut().enumerate() {
+                    let brow =
+                        &bt[(jt + jj) * k + kt..(jt + jj) * k + kt + klen];
+                    let mut acc = 0i32;
+                    for (&x, &y) in arow.iter().zip(brow) {
+                        acc = acc.wrapping_add(x.wrapping_mul(y));
+                    }
+                    *o += acc as i64;
+                }
+            }
+        }
+        kt += klen;
     }
 }
 
@@ -177,15 +358,25 @@ pub fn im2col(x: &ITensor, kernel: usize, padding: usize) -> ITensor {
     let (ho, wo) = out_hw(h, w, kernel, padding);
     let ckk = c * kernel * kernel;
     let mut out = vec![0i32; b * ho * wo * ckk];
+    im2col_into(x, kernel, padding, &mut out);
+    Tensor::from_vec(&[b, ho * wo, ckk], out)
+}
+
+/// [`im2col`] into a caller buffer (every slot is overwritten); parallel
+/// over the batch.
+fn im2col_into(x: &ITensor, kernel: usize, padding: usize, out: &mut [i32]) {
+    let (b, c, h, w) = shape4(x);
+    let (ho, wo) = out_hw(h, w, kernel, padding);
+    let ckk = c * kernel * kernel;
+    debug_assert_eq!(out.len(), b * ho * wo * ckk);
     let per_sample = ho * wo * ckk;
-    par::for_each_chunk(&mut out, per_sample, par::default_workers(),
+    par::for_each_chunk(out, per_sample, par::default_workers(),
         |bi, chunk| {
             im2col_sample(
                 &x.data[bi * c * h * w..(bi + 1) * c * h * w],
                 c, h, w, kernel, padding, ho, wo, chunk,
             );
         });
-    Tensor::from_vec(&[b, ho * wo, ckk], out)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -216,24 +407,61 @@ fn im2col_sample(x: &[i32], c: usize, h: usize, w: usize, k: usize,
     }
 }
 
-/// Integer conv2d: x (B,C,H,W) × w (O,C,K,K) -> (B,O,Ho,Wo) i64.
+/// Integer conv2d: x (B,C,H,W) × w (O,C,K,K) -> (B,O,Ho,Wo) i64. Routed
+/// through a per-thread scratch workspace (patch buffer reused across
+/// calls).
 pub fn conv2d_i64(x: &ITensor, w: &ITensor, padding: usize) -> LTensor {
+    SCRATCH.with(|ws| conv2d_i64_ws(x, w, padding, &mut ws.borrow_mut()))
+}
+
+/// [`conv2d_i64`] with an explicit workspace; leaves the im2col patches of
+/// `x` cached in `ws` for a following [`conv2d_weight_grad_ws`].
+pub fn conv2d_i64_ws(x: &ITensor, w: &ITensor, padding: usize,
+                     ws: &mut KernelWorkspace) -> LTensor {
     let (b, c, h, wd) = shape4(x);
     let (o, cw, k, _) = shape4(w);
     assert_eq!(c, cw, "conv channel mismatch");
     let (ho, wo) = out_hw(h, wd, k, padding);
-    let patches = im2col(x, k, padding); // (B, P, CKK)
     let p = ho * wo;
     let ckk = c * k * k;
+    ws.fill_patches(x, k, padding);
     let mut out = vec![0i64; b * o * p];
+    conv_contract(&ws.patches[..b * p * ckk], &w.data, o, p, ckk, &mut out);
+    Tensor::from_vec(&[b, o, ho, wo], out)
+}
+
+/// Fused `floor(conv2d(x, w) / sf)`: the i64 pre-activations live in the
+/// workspace accumulator, only the scaled i32 output is allocated. The
+/// im2col patches of `x` stay cached in `ws` for the weight-grad pass.
+pub fn conv2d_scale_ws(x: &ITensor, w: &ITensor, padding: usize, sf: i64,
+                       ws: &mut KernelWorkspace) -> ITensor {
+    let (b, c, h, wd) = shape4(x);
+    let (o, cw, k, _) = shape4(w);
+    assert_eq!(c, cw, "conv channel mismatch");
+    let (ho, wo) = out_hw(h, wd, k, padding);
+    let p = ho * wo;
+    let ckk = c * k * k;
+    ws.fill_patches(x, k, padding);
+    let KernelWorkspace { patches, acc, .. } = ws;
+    let accbuf = grown(acc, b * o * p);
+    conv_contract(&patches[..b * p * ckk], &w.data, o, p, ckk, accbuf);
+    Tensor {
+        shape: vec![b, o, ho, wo],
+        data: accbuf.iter().map(|&v| div_floor(v, sf) as i32).collect(),
+    }
+}
+
+/// Shared conv contraction: out[bi][oi*p + pi] = Σ_ckk w[oi,·]·pat[bi,pi,·]
+/// (every slot assigned); parallel over the batch.
+fn conv_contract(patches: &[i32], w: &[i32], o: usize, p: usize, ckk: usize,
+                 out: &mut [i64]) {
     let per_sample = o * p;
-    let kchunk = safe_chunk(max_abs(&w.data), max_abs(&patches.data), ckk);
-    par::for_each_chunk(&mut out, per_sample, par::default_workers(),
+    let kchunk = safe_chunk(max_abs(w), max_abs(patches), ckk);
+    par::for_each_chunk(out, per_sample, par::default_workers(),
         |bi, chunk| {
-            // chunk[oi*p + pi] = sum_ckk w[oi, ckk] * patches[bi, pi, ckk]
-            let pat = &patches.data[bi * p * ckk..(bi + 1) * p * ckk];
+            let pat = &patches[bi * p * ckk..(bi + 1) * p * ckk];
             for oi in 0..o {
-                let wrow = &w.data[oi * ckk..(oi + 1) * ckk];
+                let wrow = &w[oi * ckk..(oi + 1) * ckk];
                 let orow = &mut chunk[oi * p..(oi + 1) * p];
                 for (pi, ov) in orow.iter_mut().enumerate() {
                     let prow = &pat[pi * ckk..(pi + 1) * ckk];
@@ -244,28 +472,43 @@ pub fn conv2d_i64(x: &ITensor, w: &ITensor, padding: usize) -> LTensor {
                 }
             }
         });
-    Tensor::from_vec(&[b, o, ho, wo], out)
 }
 
 /// Weight gradient: gw[o, ckk] = Σ_{b,p} g[b,o,p] · patches[b,p,ckk],
 /// batch-summed. g: (B,O,Ho,Wo) i32 -> (O,C,K,K) i64.
 pub fn conv2d_weight_grad(x: &ITensor, g: &ITensor, kernel: usize,
                           padding: usize) -> LTensor {
+    SCRATCH.with(|ws| {
+        let ws = &mut *ws.borrow_mut();
+        // the thread-local scratch has no producer/consumer contract with
+        // this caller — never trust whatever patches are cached there
+        ws.invalidate_patches();
+        conv2d_weight_grad_ws(x, g, kernel, padding, ws)
+    })
+}
+
+/// [`conv2d_weight_grad`] with an explicit workspace: when `ws` already
+/// holds the im2col patches of `x` (left there by the forward pass), the
+/// seed's duplicate per-step extraction is skipped entirely.
+pub fn conv2d_weight_grad_ws(x: &ITensor, g: &ITensor, kernel: usize,
+                             padding: usize, ws: &mut KernelWorkspace)
+                             -> LTensor {
     let (b, c, h, w) = shape4(x);
     let (gb, o, ho, wo) = shape4(g);
     assert_eq!(b, gb);
     debug_assert_eq!(out_hw(h, w, kernel, padding), (ho, wo));
-    let patches = im2col(x, kernel, padding);
     let p = ho * wo;
     let ckk = c * kernel * kernel;
+    ws.ensure_patches(x, kernel, padding);
+    let KernelWorkspace { patches, bt, .. } = ws;
     let mut out = vec![0i64; o * ckk];
     // gw (O, CKK) = Σ_b  g_b (O, P) · patches_b (P, CKK): one accumulating
-    // matmul per sample — rides the chunked-i32 fast path of
-    // `matmul_i64_into`.
+    // matmul per sample — rides the chunked-i32 fast path of the matmul
+    // core, with the transpose scratch shared across samples.
     for bi in 0..b {
         let gplane = &g.data[bi * o * p..(bi + 1) * o * p];
-        let pat = &patches.data[bi * p * ckk..(bi + 1) * p * ckk];
-        matmul_i64_into(gplane, pat, o, p, ckk, &mut out, 1);
+        let pat = &patches[bi * p * ckk..(bi + 1) * p * ckk];
+        matmul_i64_into_buf(gplane, pat, o, p, ckk, &mut out, 1, bt);
     }
     Tensor::from_vec(&[o, c, kernel, kernel], out)
 }
@@ -707,6 +950,138 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn matmul_pooled_tiled_bitexact_across_workers_prop() {
+        // the persistent-pool + cache-blocked kernel must be bit-identical
+        // to the naive reference for every worker budget, on both the
+        // chunked-i32 fast path and the wide-operand i64 fallback
+        prop::check("matmul_workers", 20, |g| {
+            let m = g.usize_in(1, 33);
+            let k = g.usize_in(1, 700); // > MM_KTILE exercises k-tiling
+            let n = g.usize_in(1, 90); // > MM_JTILE exercises j-tiling
+            let wide = g.usize_in(0, 3) == 0;
+            // wide operands force safe_chunk -> None (single product past
+            // the i32 rail) while keeping the i64 batch sum far from
+            // overflow: 50k * 50k * 700 ≈ 1.8e12 << i64::MAX
+            let (lo, hi) = if wide { (-50_000, 50_000) } else { (-127, 127) };
+            let mut av = g.vec_i32(m * k, lo, hi);
+            let mut bv = g.vec_i32(k * n, lo, hi);
+            if wide {
+                av[0] = 50_000; // pin the max so the product exceeds i32
+                bv[0] = -50_000;
+            }
+            let a = ITensor::from_vec(&[m, k], av);
+            let b = ITensor::from_vec(&[k, n], bv);
+            let want = matmul_naive(&a, &b);
+            for workers in [1usize, 2, 3, 8] {
+                let mut out = vec![0i64; m * n];
+                matmul_i64_into(&a.data, &b.data, m, k, n, &mut out, workers);
+                assert_eq!(out, want.data, "workers={workers} wide={wide}");
+            }
+        });
+    }
+
+    #[test]
+    fn fused_matmul_scale_ws_equals_composition_prop() {
+        prop::check("matmul_scale_ws", 15, |g| {
+            let mut ws = KernelWorkspace::new();
+            // reuse one workspace across every case/shape in sequence
+            for _ in 0..3 {
+                let m = g.usize_in(1, 9);
+                let k = g.usize_in(1, 40);
+                let n = g.usize_in(1, 12);
+                let a = ITensor::from_vec(&[m, k], g.vec_i32(m * k, -127, 127));
+                let b =
+                    ITensor::from_vec(&[k, n], g.vec_i32(k * n, -4000, 4000));
+                let sf = scale_factor_linear(k);
+                let fused = matmul_scale_ws(&a, &b, sf, &mut ws);
+                let composed = nitro_scale(&matmul_i64(&a, &b), sf);
+                assert_eq!(fused, composed);
+            }
+        });
+    }
+
+    #[test]
+    fn conv_workspace_paths_bitexact_prop() {
+        // conv2d_i64_ws / conv2d_scale_ws / conv2d_weight_grad_ws with a
+        // single long-lived workspace (buffers growing and shrinking
+        // across shapes) must match the plain kernels exactly
+        prop::check("conv_ws", 10, |g| {
+            let mut ws = KernelWorkspace::new();
+            for _ in 0..3 {
+                let b = g.usize_in(1, 3);
+                let c = g.usize_in(1, 4);
+                let o = g.usize_in(1, 5);
+                let h = g.usize_in(3, 9);
+                let w = g.usize_in(3, 9);
+                let x = ITensor::from_vec(&[b, c, h, w],
+                                          g.vec_i32(b * c * h * w, -127, 127));
+                let wt = ITensor::from_vec(&[o, c, 3, 3],
+                                           g.vec_i32(o * c * 9, -500, 500));
+                let z_ws = conv2d_i64_ws(&x, &wt, 1, &mut ws);
+                let z = conv2d_i64(&x, &wt, 1);
+                assert_eq!(z_ws, z);
+                let sf = scale_factor_conv(3, c);
+                let fused = conv2d_scale_ws(&x, &wt, 1, sf, &mut ws);
+                assert_eq!(fused, nitro_scale(&z, sf));
+                let gr = ITensor::from_vec(&[b, o, h, w],
+                                           g.vec_i32(b * o * h * w, -20, 20));
+                // patches for x are now cached; the ws path must equal the
+                // fresh extraction
+                let gw_ws = conv2d_weight_grad_ws(&x, &gr, 3, 1, &mut ws);
+                let gw = conv2d_weight_grad(&x, &gr, 3, 1);
+                assert_eq!(gw_ws, gw);
+            }
+        });
+    }
+
+    #[test]
+    fn forward_always_refreshes_patches_for_new_data() {
+        // two same-shaped batches through one workspace (exactly what
+        // consecutive training steps look like): the second forward must
+        // re-extract, never reuse the first batch's patches — this is the
+        // release-mode contract, where the tag carries no data fingerprint
+        let mut g = Pcg32::new(11);
+        let mut ws = KernelWorkspace::new();
+        let wt = rand_it(&mut g, &[4, 3, 3, 3], -300, 300);
+        let x1 = rand_it(&mut g, &[2, 3, 6, 6], -127, 127);
+        let x2 = rand_it(&mut g, &[2, 3, 6, 6], -127, 127);
+        assert_ne!(x1, x2);
+        let _ = conv2d_i64_ws(&x1, &wt, 1, &mut ws);
+        assert_eq!(conv2d_i64_ws(&x2, &wt, 1, &mut ws),
+                   conv2d_i64(&x2, &wt, 1));
+        let sf = scale_factor_conv(3, 3);
+        assert_eq!(conv2d_scale_ws(&x2, &wt, 1, sf, &mut ws),
+                   nitro_scale(&conv2d_i64(&x2, &wt, 1), sf));
+        // and the weight grad then consumes x2's patches, not x1's
+        let gr = rand_it(&mut g, &[2, 4, 6, 6], -20, 20);
+        assert_eq!(conv2d_weight_grad_ws(&x2, &gr, 3, 1, &mut ws),
+                   conv2d_weight_grad(&x2, &gr, 3, 1));
+    }
+
+    #[test]
+    fn weight_grad_patch_cache_invalidation() {
+        let mut g = Pcg32::new(7);
+        let mut ws = KernelWorkspace::new();
+        let x1 = rand_it(&mut g, &[2, 3, 5, 5], -127, 127);
+        let wt = rand_it(&mut g, &[4, 3, 3, 3], -300, 300);
+        let _ = conv2d_i64_ws(&x1, &wt, 1, &mut ws);
+        // a conv over a *different shape* must not reuse x1's patches
+        let x2 = rand_it(&mut g, &[2, 3, 6, 6], -127, 127);
+        let gr2 = rand_it(&mut g, &[2, 4, 6, 6], -20, 20);
+        assert_eq!(
+            conv2d_weight_grad_ws(&x2, &gr2, 3, 1, &mut ws),
+            conv2d_weight_grad(&x2, &gr2, 3, 1)
+        );
+        // explicit invalidation forces re-extraction, result unchanged
+        ws.invalidate_patches();
+        let gr1 = rand_it(&mut g, &[2, 4, 5, 5], -20, 20);
+        assert_eq!(
+            conv2d_weight_grad_ws(&x1, &gr1, 3, 1, &mut ws),
+            conv2d_weight_grad(&x1, &gr1, 3, 1)
+        );
     }
 
     #[test]

@@ -106,6 +106,8 @@ pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
                     -> TrainResult {
     let flatten = net.spec.input_shape.len() == 1;
     let mut rng = Pcg32::with_stream(cfg.seed, 0x74726169);
+    // NITRO_WORKERS=1 needs no handling here: train_batch_parallel itself
+    // falls back to sequential order in deterministic single-thread mode.
     let mut sched = PlateauScheduler::new(cfg.hyper.gamma_inv,
                                           cfg.plateau_patience);
     sched.warmup = cfg.plateau_warmup;

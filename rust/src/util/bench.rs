@@ -3,6 +3,7 @@
 //! binaries built on this module; they print aligned rows and can emit
 //! JSON for EXPERIMENTS.md.
 
+use crate::util::jsonio::Json;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -127,10 +128,10 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
-    /// Dump all results as a JSON array (consumed by EXPERIMENTS.md
-    /// tooling).
-    pub fn json(&self) -> String {
-        use crate::util::jsonio::Json;
+    /// All results as a [`Json`] array value (one row per benchmark) —
+    /// the building block of `BENCH_kernels.json` and the bench binaries'
+    /// result files.
+    pub fn json_value(&self) -> Json {
         Json::Array(
             self.results
                 .iter()
@@ -150,7 +151,12 @@ impl Bencher {
                 })
                 .collect(),
         )
-        .dump()
+    }
+
+    /// Dump all results as a JSON array (consumed by EXPERIMENTS.md
+    /// tooling).
+    pub fn json(&self) -> String {
+        self.json_value().dump()
     }
 }
 

@@ -1,24 +1,93 @@
-//! Scoped data-parallel helpers (replaces `rayon` for this repo's needs).
+//! Data-parallel helpers backed by a persistent worker pool (replaces
+//! `rayon` for this repo's needs).
 //!
 //! The LES training step is embarrassingly parallel across local-loss
 //! blocks (the paper notes block backward passes are independent — §3.3);
-//! conv/matmul kernels are parallel across the batch. Both use
-//! [`scoped_map`] / [`for_each_chunk`], built on `std::thread::scope` so no
-//! 'static bounds or channels are needed.
+//! conv/matmul kernels are parallel across the batch and output rows. Both
+//! funnel through [`scoped_map`] / [`for_each_chunk`].
+//!
+//! ## Threading model
+//!
+//! * A process-wide [`pool`] of `available_parallelism() - 1` workers is
+//!   spawned lazily on the first parallel call and lives for the process
+//!   lifetime, parked on a condvar when idle. Kernel calls no longer spawn
+//!   OS threads — the seed's per-call `std::thread::scope` backend cost
+//!   tens of microseconds of spawn/join per kernel invocation.
+//! * Each call enqueues participation tickets for one job and the caller
+//!   participates too, so `workers = w` runs on `min(w, pool + 1)`
+//!   threads. `workers <= 1` is executed inline on the caller — the fully
+//!   deterministic single-thread mode selected by `NITRO_WORKERS=1`
+//!   (no pool is ever built, no thread is ever spawned).
+//! * Jobs submitted *from* a pool worker run inline (hierarchical
+//!   parallelism: the outer level fans out, inner levels stay
+//!   sequential), which makes nested-submission deadlock impossible.
+//! * A panicking task is caught on the worker, forwarded, and re-raised
+//!   on the submitting caller; the worker thread itself survives and
+//!   keeps serving subsequent jobs.
+//! * Results are bit-identical for every worker count and backend: work
+//!   items write disjoint output regions, integer arithmetic is exact,
+//!   and [`scoped_map`] restores input order.
+//!
+//! The seed per-call-spawn backend is kept behind [`set_spawn_mode`] so
+//! `nitro bench-kernels` can measure the pool against it and property
+//! tests can cross-check bit-exactness.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
-/// Number of workers to use: `NITRO_THREADS` env var, else available
-/// parallelism, else 1.
+/// Number of workers to use: `NITRO_WORKERS` env var (legacy alias
+/// `NITRO_THREADS`), else available parallelism, else 1.
 pub fn default_workers() -> usize {
-    if let Ok(v) = std::env::var("NITRO_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
+    workers_from_env(
+        std::env::var("NITRO_WORKERS").ok(),
+        std::env::var("NITRO_THREADS").ok(),
+    )
+}
+
+fn workers_from_env(primary: Option<String>, legacy: Option<String>) -> usize {
+    for v in [primary, legacy].into_iter().flatten() {
+        if let Ok(n) = v.trim().parse::<usize>() {
             return n.max(1);
         }
     }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Benchmark-only switch: route [`scoped_map`] / [`for_each_chunk`]
+/// through the legacy per-call `std::thread::scope` backend instead of
+/// the persistent pool. Semantics (including bit-exact outputs and panic
+/// propagation) are identical; only dispatch cost differs. Used by
+/// `nitro bench-kernels` to quantify the pool speedup.
+pub fn set_spawn_mode(on: bool) {
+    SPAWN_MODE.store(on, Ordering::Relaxed);
+}
+
+static SPAWN_MODE: AtomicBool = AtomicBool::new(false);
+
+fn spawn_mode() -> bool {
+    SPAWN_MODE.load(Ordering::Relaxed)
+}
+
+/// Run `task` concurrently on up to `participants` threads: the caller
+/// plus `participants - 1` pool workers (or freshly spawned threads in
+/// spawn mode). `task` must be a self-scheduling work loop (the helpers
+/// below share an atomic cursor).
+fn run_on(participants: usize, task: &(dyn Fn() + Sync)) {
+    if participants <= 1 || pool::on_pool_thread() {
+        task();
+        return;
+    }
+    if spawn_mode() {
+        std::thread::scope(|s| {
+            for _ in 1..participants {
+                s.spawn(task);
+            }
+            task();
+        });
+        return;
+    }
+    pool::run(participants - 1, task);
 }
 
 /// Apply `f` to every item of `items`, running at most `workers` threads,
@@ -41,18 +110,14 @@ where
         items.into_iter().map(|t| std::sync::Mutex::new(Some(t))).collect();
     let next = AtomicUsize::new(0);
     let done = std::sync::Mutex::new(Vec::<(usize, R)>::with_capacity(n));
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let item = items[i].lock().unwrap().take().unwrap();
-                let r = f(item); // the expensive part, outside any lock
-                done.lock().unwrap().push((i, r));
-            });
+    run_on(workers, &|| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
         }
+        let item = items[i].lock().unwrap().take().unwrap();
+        let r = f(item); // the expensive part, outside any lock
+        done.lock().unwrap().push((i, r));
     });
     let mut done = done.into_inner().unwrap();
     done.sort_by_key(|(i, _)| *i);
@@ -60,9 +125,9 @@ where
     done.into_iter().map(|(_, r)| r).collect()
 }
 
-/// Split `data` into `chunks` contiguous mutable chunks and run `f(chunk
-/// index, chunk)` in parallel. Used by the tensor kernels to parallelize
-/// over the batch dimension.
+/// Split `data` into contiguous mutable chunks of `chunk_len` and run
+/// `f(chunk index, chunk)` in parallel. Used by the tensor kernels to
+/// parallelize over the batch dimension and output row blocks.
 pub fn for_each_chunk<T, F>(data: &mut [T], chunk_len: usize, workers: usize,
                             f: F)
 where
@@ -72,7 +137,8 @@ where
     if data.is_empty() || chunk_len == 0 {
         return;
     }
-    let workers = workers.max(1);
+    let nchunks = data.len().div_ceil(chunk_len);
+    let workers = workers.max(1).min(nchunks);
     if workers == 1 {
         for (i, c) in data.chunks_mut(chunk_len).enumerate() {
             f(i, c);
@@ -80,24 +146,199 @@ where
         return;
     }
     let next = AtomicUsize::new(0);
-    let nchunks = data.len().div_ceil(chunk_len);
     let chunks: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> = data
         .chunks_mut(chunk_len)
         .enumerate()
         .map(|(i, c)| std::sync::Mutex::new(Some((i, c))))
         .collect();
-    std::thread::scope(|s| {
-        for _ in 0..workers.min(nchunks) {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= nchunks {
-                    break;
-                }
-                let (idx, chunk) = chunks[i].lock().unwrap().take().unwrap();
-                f(idx, chunk);
-            });
+    run_on(workers, &|| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= nchunks {
+            break;
         }
+        let (idx, chunk) = chunks[i].lock().unwrap().take().unwrap();
+        f(idx, chunk);
     });
+}
+
+/// The persistent worker pool behind [`scoped_map`] / [`for_each_chunk`].
+pub mod pool {
+    use super::*;
+    use std::collections::VecDeque;
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+    thread_local! {
+        static IS_POOL_WORKER: std::cell::Cell<bool> =
+            const { std::cell::Cell::new(false) };
+    }
+
+    /// True on a pool worker thread. Parallel helpers called from inside a
+    /// pool task run inline instead of re-submitting (no nested blocking,
+    /// hence no deadlock).
+    pub fn on_pool_thread() -> bool {
+        IS_POOL_WORKER.get()
+    }
+
+    /// Number of persistent workers (0 on a single-core box, where every
+    /// call runs inline on the caller). Querying the size does **not**
+    /// spawn the workers — only an actual job submission does.
+    pub fn size() -> usize {
+        pool_data().threads
+    }
+
+    /// One submitted job. `task` is a lifetime-erased borrow of the
+    /// caller's closure; [`run`] guarantees the caller blocks until every
+    /// ticket finished, so workers never observe a dangling reference.
+    struct JobState {
+        task: &'static (dyn Fn() + Sync),
+        pending: AtomicUsize,
+        panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+        done: Mutex<bool>,
+        cv: Condvar,
+    }
+
+    struct Pool {
+        queue: Mutex<VecDeque<Arc<JobState>>>,
+        work_cv: Condvar,
+        threads: usize,
+    }
+
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    static STARTED: OnceLock<()> = OnceLock::new();
+
+    fn pool_data() -> &'static Pool {
+        POOL.get_or_init(|| Pool {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            // sized to the hardware; per-call worker budgets
+            // (NITRO_WORKERS) are clamped to `threads + 1` participants
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .saturating_sub(1),
+        })
+    }
+
+    fn global() -> &'static Pool {
+        let p = pool_data();
+        STARTED.get_or_init(|| {
+            for i in 0..p.threads {
+                std::thread::Builder::new()
+                    .name(format!("nitro-pool-{i}"))
+                    .spawn(move || worker_loop(p))
+                    .expect("spawn nitro pool worker");
+            }
+        });
+        p
+    }
+
+    fn worker_loop(p: &'static Pool) {
+        IS_POOL_WORKER.set(true);
+        loop {
+            let job = {
+                let mut q = p.queue.lock().unwrap();
+                loop {
+                    if let Some(j) = q.pop_front() {
+                        break j;
+                    }
+                    q = p.work_cv.wait(q).unwrap();
+                }
+            };
+            run_ticket(&job);
+        }
+    }
+
+    /// Execute one participation ticket: run the job's work loop once,
+    /// catching panics so the worker survives, and signal the caller when
+    /// the last ticket completes.
+    fn run_ticket(job: &JobState) {
+        let r = catch_unwind(AssertUnwindSafe(|| (job.task)()));
+        if let Err(e) = r {
+            let mut slot = job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut d = job.done.lock().unwrap();
+            *d = true;
+            job.cv.notify_all();
+        }
+    }
+
+    /// Run `task` on this thread plus up to `extra` pool workers; returns
+    /// after every participant finished. Worker panics re-raise here.
+    ///
+    /// Contract: `task` must be a **self-scheduling work loop** over a
+    /// shared cursor (as [`super::scoped_map`] / [`super::for_each_chunk`]
+    /// build) — once one participant's loop exhausts the cursor, extra
+    /// invocations are no-ops. That is what makes cancelling this job's
+    /// unclaimed tickets sound after the caller's own loop returns.
+    pub(super) fn run(extra: usize, task: &(dyn Fn() + Sync)) {
+        let p = global();
+        let extra = extra.min(p.threads);
+        if extra == 0 {
+            task();
+            return;
+        }
+        // SAFETY: lifetime erasure only — the reference is handed to pool
+        // workers and this function does not return (or unwind) until
+        // `pending` hit zero, i.e. until no worker can touch it again.
+        let task: &'static (dyn Fn() + Sync) =
+            unsafe { std::mem::transmute(task) };
+        let job = Arc::new(JobState {
+            task,
+            pending: AtomicUsize::new(extra),
+            panic: Mutex::new(None),
+            done: Mutex::new(false),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = p.queue.lock().unwrap();
+            for _ in 0..extra {
+                q.push_back(job.clone());
+            }
+        }
+        if extra == 1 {
+            p.work_cv.notify_one();
+        } else {
+            p.work_cv.notify_all();
+        }
+        let caller = catch_unwind(AssertUnwindSafe(|| (job.task)()));
+        // The caller's work loop exhausted the shared cursor, so tickets
+        // still sitting in the queue would only run a no-op pass — cancel
+        // them instead of stalling behind other jobs' queued work. Tickets
+        // already popped belong to workers mid-execution; those are waited
+        // for below.
+        {
+            let mut q = p.queue.lock().unwrap();
+            let before = q.len();
+            q.retain(|j| !Arc::ptr_eq(j, &job));
+            let cancelled = before - q.len();
+            if cancelled > 0
+                && job.pending.fetch_sub(cancelled, Ordering::AcqRel)
+                    == cancelled
+            {
+                let mut d = job.done.lock().unwrap();
+                *d = true;
+            }
+        }
+        // Wait for every remaining ticket even if the caller's share
+        // panicked: the borrow behind `task` must outlive all workers' use
+        // of it.
+        let mut d = job.done.lock().unwrap();
+        while !*d {
+            d = job.cv.wait(d).unwrap();
+        }
+        drop(d);
+        if let Err(e) = caller {
+            resume_unwind(e);
+        }
+        if let Some(e) = job.panic.lock().unwrap().take() {
+            resume_unwind(e);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -178,10 +419,95 @@ mod tests {
     }
 
     #[test]
+    fn pool_survives_panicking_task() {
+        // a panicking job must not kill pool workers or wedge the queue:
+        // subsequent jobs complete with correct results
+        for round in 0..3 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || {
+                    scoped_map((0..32).collect::<Vec<_>>(), 8, |x| {
+                        if x % 11 == round {
+                            panic!("deliberate task panic");
+                        }
+                        x
+                    })
+                },
+            ));
+            assert!(r.is_err(), "round {round}");
+            let out =
+                scoped_map((0..64).collect::<Vec<_>>(), 8, |x| x + round);
+            assert_eq!(
+                out,
+                (0..64).map(|x| x + round).collect::<Vec<_>>(),
+                "pool wedged after panic round {round}"
+            );
+        }
+    }
+
+    #[test]
+    fn nested_calls_from_pool_tasks_run_inline() {
+        // a parallel helper invoked inside a pool task must not deadlock
+        // (it runs sequentially on the worker) and must stay correct
+        let sums = scoped_map((0..8u64).collect::<Vec<_>>(), 4, |x| {
+            let mut v = vec![0u64; 100];
+            for_each_chunk(&mut v, 10, 4, |i, c| {
+                for w in c.iter_mut() {
+                    *w = x + i as u64;
+                }
+            });
+            v.iter().sum::<u64>()
+        });
+        let want: Vec<u64> =
+            (0..8u64).map(|x| (0..10u64).map(|i| (x + i) * 10).sum()).collect();
+        assert_eq!(sums, want);
+    }
+
+    #[test]
+    fn spawn_backend_matches_pool_backend() {
+        // the legacy per-call-spawn backend must be observationally
+        // identical (bench-kernels relies on this to compare them). Spawn
+        // mode is a global perf knob, so restore it even on panic.
+        struct Reset;
+        impl Drop for Reset {
+            fn drop(&mut self) {
+                set_spawn_mode(false);
+            }
+        }
+        let _reset = Reset;
+        let pool_out = scoped_map((0..50).collect::<Vec<_>>(), 6, |x| x * 3);
+        set_spawn_mode(true);
+        let spawn_out = scoped_map((0..50).collect::<Vec<_>>(), 6, |x| x * 3);
+        set_spawn_mode(false);
+        assert_eq!(pool_out, spawn_out);
+    }
+
+    #[test]
+    fn workers_env_parsing() {
+        let s = |v: &str| Some(v.to_string());
+        assert_eq!(workers_from_env(s("4"), None), 4);
+        assert_eq!(workers_from_env(s("0"), None), 1, "clamped to >= 1");
+        assert_eq!(workers_from_env(None, s("3")), 3, "legacy alias");
+        assert_eq!(workers_from_env(s("6"), s("3")), 6, "primary wins");
+        // unparseable primary falls through to the legacy alias
+        assert_eq!(workers_from_env(s("lots"), s("2")), 2);
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        assert_eq!(workers_from_env(None, None), hw);
+        assert_eq!(workers_from_env(s(""), s("junk")), hw);
+    }
+
+    #[test]
     fn workers_actually_parallel() {
         // With 4 workers and 4 sleeping tasks the wall time must be well
         // under the serial sum (smoke check, generous margins).
         use std::time::{Duration, Instant};
+        if pool::size() < 3 {
+            eprintln!("skipping: not enough pool workers");
+            return;
+        }
+        // warm the pool so thread startup is not measured
+        scoped_map(vec![(); 4], 4, |_| {});
         let t0 = Instant::now();
         scoped_map(vec![(); 4], 4, |_| {
             std::thread::sleep(Duration::from_millis(100))

@@ -102,6 +102,43 @@ fn run_spec_smoke_emits_bench_json() {
 }
 
 #[test]
+fn bench_kernels_emits_schema_versioned_json() {
+    let dir = std::env::temp_dir().join("nitro_cli_benchk");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("BENCH_kernels.json");
+    let out_s = out.to_str().unwrap();
+    // quick subset with a tiny budget: plumbing, not timings (the test
+    // binary is unoptimized)
+    let (code, stdout, stderr) = run(&[
+        "bench-kernels", "--quick", "--budget", "0.005", "--out", out_s,
+    ]);
+    assert_eq!(code, 0, "bench-kernels failed: {stderr}");
+    assert!(stdout.contains("bit-exactness: all kernel paths agree"),
+            "{stdout}");
+    assert!(stdout.contains("pool speedup vs per-call spawn"), "{stdout}");
+    let bench = std::fs::read_to_string(&out).unwrap();
+    for key in ["\"schema_version\"", "\"rows\"", "\"bitexact\": true",
+                "\"pool_speedup_vs_spawn\""] {
+        assert!(bench.contains(key), "missing {key} in {bench}");
+    }
+    // baseline comparison is advisory: self-comparison exits 0 even with
+    // noisy timings; a missing baseline file is a hard error
+    let out2 = dir.join("BENCH_kernels2.json");
+    let (code, stdout, stderr) = run(&[
+        "bench-kernels", "--quick", "--budget", "0.005", "--out",
+        out2.to_str().unwrap(), "--baseline", out_s,
+    ]);
+    assert_eq!(code, 0, "baseline comparison failed: {stderr}");
+    assert!(stdout.contains("rows compared"), "{stdout}");
+    let (code, _, stderr) = run(&[
+        "bench-kernels", "--quick", "--budget", "0.005", "--out",
+        out2.to_str().unwrap(), "--baseline", "does/not/exist.json",
+    ]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("exist.json"), "{stderr}");
+}
+
+#[test]
 fn runtime_smoke_if_artifacts_present() {
     if !std::path::Path::new("artifacts/tinycnn/manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
