@@ -14,12 +14,13 @@ fn main() {
     let mut net = Network::new(spec, 7);
     let hp = Hyper { gamma_inv: 512, eta_fw_inv: 0, eta_lr_inv: 0 };
     let mut rng = Pcg32::new(1);
+    let mut drop = nitro::nn::DropoutRngs::new(1, net.blocks.len());
     let mut order: Vec<usize> = (0..tr.len()).collect();
     for epoch in 0..60 {
         rng.shuffle(&mut order);
         for chunk in order.chunks(64) {
             let (x, labels) = tr.gather(chunk, false);
-            net.train_batch(&x, &labels, &hp, &mut rng);
+            net.train_batch(&x, &labels, &hp, &mut drop);
         }
         if epoch % 10 == 0 {
             println!("epoch {epoch}:");

@@ -1,21 +1,28 @@
-//! The L3 contribution bench: block-parallel LES scheduling vs sequential.
+//! The L3 contribution bench: LES scheduling — sequential vs
+//! block-parallel (within one batch) vs cross-batch pipelined.
 //!
 //! The paper (§3.3) observes that local-loss blocks train independently
 //! "allowing them to be executed in parallel and enhancing the efficiency
-//! of the training process" but does not build it; this repo's
-//! `Network::train_batch_parallel` does (backward of block l overlaps the
-//! forwards of blocks l+1..L). The two modes are bit-identical (tested in
-//! nn::block); this bench quantifies the speedup across worker budgets.
+//! of the training process" but does not build it; this repo schedules it
+//! two ways: `Network::train_batch_parallel` fans every block backward +
+//! the head step out on the worker pool within a batch, and
+//! `train::pipeline` keeps persistent per-block stage workers so block `l`
+//! trains batch `t` while block `l+1` is on batch `t-1`. All modes are
+//! bit-identical (tested in nn::block / train::pipeline); this bench
+//! quantifies the speedups across worker budgets.
 
-use nitro::nn::{zoo, Hyper, Network};
+use nitro::data::synthetic;
+use nitro::nn::{zoo, DropoutRngs, Hyper, Network};
+use nitro::train::{fit, Scheduler, TrainConfig};
 use nitro::util::bench::Bencher;
-use nitro::util::rng::Pcg32;
+use nitro::util::{par, rng::Pcg32};
 
 fn main() {
     let mut b = Bencher::default();
     println!("{}", Bencher::header());
     let batch = 16usize;
 
+    // ---- single-step latency: sequential vs block-parallel -------------
     for preset in ["vgg8b-narrow", "vgg11b-narrow"] {
         let spec = zoo::get(preset).unwrap();
         let mut shape = vec![batch];
@@ -28,29 +35,63 @@ fn main() {
         let hp = Hyper { gamma_inv: 512, eta_fw_inv: 25000, eta_lr_inv: 3000 };
 
         let mut net = Network::new(spec.clone(), 1);
-        let mut rng2 = Pcg32::new(4);
+        let mut drop = DropoutRngs::new(4, net.blocks.len());
         let seq = b
             .bench(&format!("{preset} sequential step"), None, || {
                 std::hint::black_box(
-                    net.train_batch(&x, &labels, &hp, &mut rng2));
+                    net.train_batch(&x, &labels, &hp, &mut drop));
             })
             .median_ns;
 
         let mut net2 = Network::new(spec.clone(), 1);
-        let mut rng3 = Pcg32::new(4);
-        let par = b
+        let mut drop2 = DropoutRngs::new(4, net2.blocks.len());
+        let par_ns = b
             .bench(&format!("{preset} block-parallel step"), None, || {
                 std::hint::black_box(
-                    net2.train_batch_parallel(&x, &labels, &hp, &mut rng3));
+                    net2.train_batch_parallel(&x, &labels, &hp, &mut drop2));
             })
             .median_ns;
 
-        println!("  {preset}: block-parallel speedup {:.2}x", seq / par);
+        println!("  {preset}: block-parallel speedup {:.2}x", seq / par_ns);
     }
 
-    // scaling with the kernel-level worker budget (participants per job
-    // are re-read from NITRO_WORKERS each call; the persistent pool is
-    // sized to the hardware, so budgets above it are clamped)
+    // ---- full-epoch throughput: all three schedulers --------------------
+    // the pipeline only pays off across batches, so it is measured on
+    // whole epochs (samples/sec), not single steps
+    let ds = synthetic::by_name("tiny", 1100, 7).unwrap();
+    let (mut tr, mut te) = ds.split_test(100);
+    tr.mad_normalize();
+    te.mad_normalize();
+    let mut seq_secs = 0f64;
+    for sched in [Scheduler::Sequential, Scheduler::BlockParallel,
+                  Scheduler::Pipelined] {
+        let mut net = Network::new(zoo::get("tinycnn").unwrap(), 1);
+        let cfg = TrainConfig {
+            epochs: 5,
+            batch: 32,
+            hyper: Hyper { gamma_inv: 128, eta_fw_inv: 12000,
+                           eta_lr_inv: 3000 },
+            scheduler: sched,
+            eval_every: 5,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let res = fit(&mut net, &tr, &te, &cfg);
+        let secs = t0.elapsed().as_secs_f64();
+        if sched == Scheduler::Sequential {
+            seq_secs = secs;
+        }
+        println!(
+            "  tinycnn epochs [{:<14}] {:>9.1} samples/sec (speedup {:.2}x)",
+            sched.name(),
+            (tr.len() * res.epochs.len()) as f64 / secs.max(1e-9),
+            seq_secs / secs.max(1e-9)
+        );
+    }
+
+    // ---- scaling with the kernel worker budget --------------------------
+    // the per-thread budget override scopes the budget without touching
+    // the process environment (same mechanism the pipeline stages use)
     let spec = zoo::get("vgg8b-narrow").unwrap();
     let mut shape = vec![batch];
     shape.extend(&spec.input_shape);
@@ -61,16 +102,16 @@ fn main() {
     let labels: Vec<usize> = (0..batch).map(|i| i % 10).collect();
     let hp = Hyper::default();
     for workers in [1usize, 2, 4, 8] {
-        std::env::set_var("NITRO_WORKERS", workers.to_string());
+        par::set_thread_workers(workers);
         let mut net = Network::new(spec.clone(), 1);
-        let mut rng2 = Pcg32::new(4);
-        b.bench(&format!("vgg8b-narrow step NITRO_WORKERS={workers}"), None,
-                || {
-                    std::hint::black_box(net.train_batch_parallel(
-                        &x, &labels, &hp, &mut rng2));
-                });
+        let mut drop = DropoutRngs::new(4, net.blocks.len());
+        b.bench(&format!("vgg8b-narrow step workers={workers}"), None, || {
+            std::hint::black_box(net.train_batch_parallel(
+                &x, &labels, &hp, &mut drop,
+            ));
+        });
     }
-    std::env::remove_var("NITRO_WORKERS");
+    par::set_thread_workers(0);
 
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/bench_parallel.json", b.json()).ok();

@@ -29,12 +29,12 @@ fn main() {
         let labels: Vec<usize> = (0..batch).map(|i| i % 10).collect();
         let hp = Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 };
 
-        // NITRO-D (parallel scheduler)
+        // NITRO-D (block-parallel scheduler)
         let mut net = Network::new(spec.clone(), 1);
-        let mut rng2 = Pcg32::new(4);
+        let mut drop = nitro::nn::DropoutRngs::new(4, net.blocks.len());
         b.bench(&format!("{preset} nitro-d step b{batch}"), work, || {
             std::hint::black_box(
-                net.train_batch_parallel(&x, &labels, &hp, &mut rng2));
+                net.train_batch_parallel(&x, &labels, &hp, &mut drop));
         });
 
         // PocketNN DFA

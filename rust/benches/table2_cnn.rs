@@ -32,10 +32,10 @@ fn main() {
         let work = Some(spec.param_count() as f64 * batch as f64);
 
         let mut net = Network::new(spec.clone(), 1);
-        let mut rng2 = Pcg32::new(4);
+        let mut drop = nitro::nn::DropoutRngs::new(4, net.blocks.len());
         b.bench(&format!("{preset} nitro-d step b{batch}"), work, || {
             std::hint::black_box(
-                net.train_batch_parallel(&x, &labels, &hp, &mut rng2));
+                net.train_batch_parallel(&x, &labels, &hp, &mut drop));
         });
         b.bench(&format!("{preset} nitro-d infer b{batch}"), work, || {
             std::hint::black_box(net.infer(&x));

@@ -9,7 +9,7 @@
 //! integration test `rust/tests/pjrt.rs` trains both for several steps and
 //! asserts equality of every weight tensor.
 
-use crate::nn::{Hyper, Network};
+use crate::nn::{DropoutRngs, Hyper, Network};
 use crate::runtime::{Arg, Executable, Manifest, Runtime};
 use crate::tensor::{one_hot32, ITensor};
 use crate::util::rng::Pcg32;
@@ -30,16 +30,19 @@ pub trait Engine {
     fn weights(&self) -> Vec<ITensor>;
 }
 
-/// Pure-Rust engine.
+/// Pure-Rust engine. The per-batch `Engine` API cannot pipeline across
+/// batches, so `parallel` selects the block-parallel scheduler (the
+/// cross-batch pipeline lives in `train::fit` / `train::pipeline`).
 pub struct NativeEngine {
     pub net: Network,
-    rng: Pcg32,
+    drop: DropoutRngs,
     parallel: bool,
 }
 
 impl NativeEngine {
     pub fn new(net: Network, seed: u64, parallel: bool) -> Self {
-        NativeEngine { net, rng: Pcg32::with_stream(seed, 0xe6), parallel }
+        let drop = DropoutRngs::new(seed, net.blocks.len());
+        NativeEngine { net, drop, parallel }
     }
 }
 
@@ -51,9 +54,9 @@ impl Engine for NativeEngine {
     fn train_batch(&mut self, x: &ITensor, labels: &[usize], hp: &Hyper)
                    -> (Vec<i64>, i64, usize) {
         let rep = if self.parallel {
-            self.net.train_batch_parallel(x, labels, hp, &mut self.rng)
+            self.net.train_batch_parallel(x, labels, hp, &mut self.drop)
         } else {
-            self.net.train_batch(x, labels, hp, &mut self.rng)
+            self.net.train_batch(x, labels, hp, &mut self.drop)
         };
         (rep.block_loss, rep.head_loss, rep.correct)
     }

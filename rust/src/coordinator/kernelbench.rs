@@ -14,12 +14,14 @@
 //!   beyond the gate print GitHub `::warning::` annotations but never
 //!   fail the run (timings are machine-dependent).
 
-use crate::nn::{zoo, Hyper, Network};
+use crate::data::synthetic;
+use crate::nn::{zoo, DropoutRngs, Hyper, Network};
 use crate::tensor::{
     conv2d_i64, conv2d_i64_ws, conv2d_weight_grad, conv2d_weight_grad_ws,
     im2col, matmul_i64, nitro_relu, nitro_scale_relu, ITensor,
     KernelWorkspace, LTensor, Tensor,
 };
+use crate::train::{fit, Scheduler, TrainConfig};
 use crate::util::bench::Bencher;
 use crate::util::jsonio::Json;
 use crate::util::{par, rng::Pcg32};
@@ -31,6 +33,10 @@ pub const SCHEMA_VERSION: i64 = 1;
 /// Advisory wall-clock gate vs the baseline: ±30%.
 pub const BASELINE_GATE: f64 = 0.30;
 
+/// The checked-in baseline the CI advisory comparison reads, and the
+/// target of `--write-baseline`.
+pub const BASELINE_PATH: &str = "experiments/bench_baseline.json";
+
 #[derive(Clone, Debug)]
 pub struct Opts {
     /// Per-benchmark budget in seconds; `None` = `NITRO_BENCH_BUDGET` or
@@ -40,8 +46,12 @@ pub struct Opts {
     pub out: String,
     /// Optional baseline `BENCH_kernels.json` to compare against.
     pub baseline: Option<String>,
-    /// Small-shape subset only (no full train steps) — used by the CLI
-    /// test suite where the binary runs unoptimized.
+    /// Also write the record to [`BASELINE_PATH`] so a maintainer can
+    /// regenerate the checked-in baseline in one step (then commit).
+    pub write_baseline: bool,
+    /// Small-shape subset only (no full train steps or epoch-level
+    /// scheduler comparison) — used by the CLI test suite where the
+    /// binary runs unoptimized.
     pub quick: bool,
 }
 
@@ -51,6 +61,7 @@ impl Default for Opts {
             budget_s: None,
             out: "BENCH_kernels.json".to_string(),
             baseline: None,
+            write_baseline: false,
             quick: false,
         }
     }
@@ -224,14 +235,26 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
             let hp = Hyper { gamma_inv: 512, eta_fw_inv: 12000,
                              eta_lr_inv: 3000 };
             let mut net = Network::new(spec, 1);
-            let mut step_rng = Pcg32::new(2);
+            let mut drop = DropoutRngs::new(2, net.blocks.len());
             h.b.bench(label, None, || {
                 std::hint::black_box(net.train_batch_parallel(
-                    &x, &labels, &hp, &mut step_rng,
+                    &x, &labels, &hp, &mut drop,
                 ));
             });
         }
     }
+
+    // ---- full-epoch scheduler comparison (samples/sec + bit-exactness) --
+    let sched_cmp = if opts.quick {
+        Json::Null
+    } else {
+        // fixed-size workload (not iteration-bounded like the Bencher
+        // rows), so scale it with the per-bench budget: small CI budgets
+        // get a short but still end-to-end epoch comparison
+        let (epochs, n_train) =
+            if h.b.budget_s < 0.2 { (2, 320) } else { (3, 640) };
+        scheduler_comparison(epochs, n_train, &mut h.bitexact_failures)
+    };
 
     // ---- emit -----------------------------------------------------------
     let record = Json::obj(vec![
@@ -251,6 +274,7 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
                     .collect(),
             ),
         ),
+        ("train_scheduler_comparison", sched_cmp),
         ("bitexact", Json::Bool(h.bitexact_failures.is_empty())),
         (
             "bitexact_failures",
@@ -262,6 +286,11 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
     std::fs::write(&opts.out, record.pretty())
         .map_err(|e| format!("write {}: {e}", opts.out))?;
     println!("-> {}", opts.out);
+    if opts.write_baseline {
+        std::fs::write(BASELINE_PATH, record.pretty())
+            .map_err(|e| format!("write {BASELINE_PATH}: {e}"))?;
+        println!("-> {BASELINE_PATH} (commit to update the advisory gate)");
+    }
     for (name, s) in &h.speedups {
         println!("  pool speedup vs per-call spawn: {s:5.2}x  {name}");
     }
@@ -278,6 +307,104 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
         ));
     }
     Ok(record)
+}
+
+/// Full-epoch training throughput on the tinycnn preset: sequential vs
+/// block-parallel vs cross-batch pipelined, with dropout enabled so the
+/// per-block RNG streams are exercised. Records samples/sec per scheduler
+/// plus speedups, and pushes into `failures` (hard CI failure) if any
+/// scheduler's final weights or per-epoch losses deviate from sequential
+/// order — the schedulers' bit-identity contract.
+fn scheduler_comparison(epochs: usize, n_train: usize,
+                        failures: &mut Vec<String>) -> Json {
+    let ds = synthetic::by_name("tiny", n_train + 100, 11).expect("tiny");
+    let (mut tr, mut te) = ds.split_test(100);
+    tr.mad_normalize();
+    te.mad_normalize();
+    // tinycnn has 3 blocks + head = 4 stages; the pipeline only engages
+    // when the worker budget covers one thread per stage, so raise this
+    // thread's budget if the machine default is below that — otherwise
+    // the "pipelined" row would silently measure block-parallel. Restore
+    // the override afterwards (guard handles panics too).
+    let nstages = 4usize;
+    let workers = par::current_workers().max(nstages);
+    struct ResetBudget;
+    impl Drop for ResetBudget {
+        fn drop(&mut self) {
+            par::set_thread_workers(0);
+        }
+    }
+    let _reset = ResetBudget;
+    par::set_thread_workers(workers);
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("preset", Json::Str("tinycnn".to_string())),
+        ("n_train", Json::Int(tr.len() as i64)),
+        ("epochs", Json::Int(epochs as i64)),
+        ("batch", Json::Int(32)),
+        ("dropout", Json::Float(0.25)),
+        ("workers", Json::Int(workers as i64)),
+    ];
+    let mut reference: Option<(Vec<ITensor>, Vec<f64>)> = None;
+    let mut seq_secs = 0f64;
+    for sched in [Scheduler::Sequential, Scheduler::BlockParallel,
+                  Scheduler::Pipelined] {
+        let mut net = Network::new(zoo::get("tinycnn").unwrap(), 5);
+        net.set_dropout(0.25, 0.25);
+        let cfg = TrainConfig {
+            epochs,
+            batch: 32,
+            hyper: Hyper { gamma_inv: 128, eta_fw_inv: 12000,
+                           eta_lr_inv: 3000 },
+            seed: 5,
+            scheduler: sched,
+            // minimize mid-run evals (epoch 0 and the final epoch still
+            // evaluate); whatever eval cost remains is identical for
+            // every scheduler, so the comparison stays fair
+            eval_every: epochs.max(1),
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let res = fit(&mut net, &tr, &te, &cfg);
+        let secs = t0.elapsed().as_secs_f64();
+        let sps = (tr.len() * res.epochs.len()) as f64 / secs.max(1e-9);
+        let weights: Vec<ITensor> =
+            net.weights().into_iter().map(|(_, t)| t.clone()).collect();
+        let losses: Vec<f64> =
+            res.epochs.iter().map(|e| e.mean_head_loss).collect();
+        match &reference {
+            None => {
+                seq_secs = secs;
+                reference = Some((weights, losses));
+            }
+            Some((rw, rl)) => {
+                if rw != &weights || rl != &losses {
+                    failures.push(format!(
+                        "train-epoch scheduler '{}' not bit-identical to \
+                         sequential",
+                        sched.name()
+                    ));
+                }
+            }
+        }
+        println!(
+            "  train-epoch [{:<14}] {:>9.1} samples/sec  ({:.3}s, \
+             speedup {:.2}x)",
+            sched.name(),
+            sps,
+            secs,
+            seq_secs / secs.max(1e-9)
+        );
+        fields.push((
+            sched.name(),
+            Json::obj(vec![
+                ("secs", Json::Float(secs)),
+                ("samples_per_sec", Json::Float(sps)),
+                ("speedup_vs_sequential",
+                 Json::Float(seq_secs / secs.max(1e-9))),
+            ]),
+        ));
+    }
+    Json::obj(fields)
 }
 
 /// Single-thread reference matmul (the deterministic-mode path).
@@ -351,6 +478,19 @@ mod tests {
     use super::*;
 
     #[test]
+    fn scheduler_comparison_bitexact_and_reports_throughput() {
+        let mut failures = Vec::new();
+        let j = scheduler_comparison(1, 96, &mut failures);
+        assert!(failures.is_empty(), "schedulers diverged: {failures:?}");
+        for key in ["sequential", "block-parallel", "pipelined"] {
+            let row = j.req(key).unwrap_or_else(|e| panic!("{key}: {e}"));
+            let sps =
+                row.req("samples_per_sec").unwrap().as_f64().unwrap();
+            assert!(sps > 0.0, "{key}: {sps}");
+        }
+    }
+
+    #[test]
     fn quick_harness_end_to_end() {
         let dir = std::env::temp_dir().join("nitro_kernelbench_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -359,6 +499,7 @@ mod tests {
             budget_s: Some(0.005),
             out: out.to_str().unwrap().to_string(),
             baseline: None,
+            write_baseline: false,
             quick: true,
         };
         let rec = run(&opts).unwrap();
@@ -390,6 +531,7 @@ mod tests {
             quick: true,
             budget_s: Some(0.001),
             out: dir.join("BENCH_kernels3.json").to_str().unwrap().to_string(),
+            write_baseline: false,
         };
         assert!(run(&opts3).is_err());
     }

@@ -20,7 +20,8 @@ use crate::coordinator::experiments::Scale;
 use crate::coordinator::spec::{EngineKind, ExperimentSpec, ResolvedRun};
 use crate::data::{loader, Dataset};
 use crate::nn::{zoo, Network};
-use crate::train::{fit_observed, EpochRecord, MetricSink, TrainConfig};
+use crate::train::{fit_observed, EpochRecord, MetricSink, Scheduler,
+                   TrainConfig};
 use crate::util::bench::peak_rss_kb;
 use crate::util::jsonio::Json;
 
@@ -37,6 +38,9 @@ pub struct RunnerOpts {
     pub seed: Option<u64>,
     /// `0` = the spec's epoch budgets.
     pub epochs: usize,
+    /// `Some(s)` overrides the spec's LES scheduler for the nitro engine
+    /// (metric-identical; CI uses this to cross-check all three).
+    pub scheduler: Option<Scheduler>,
     /// Directory for per-run records (default `results`).
     pub out_dir: String,
     /// Directory for the aggregate BENCH file (default `.`, i.e. the
@@ -52,6 +56,7 @@ impl Default for RunnerOpts {
             scale: None,
             seed: None,
             epochs: 0,
+            scheduler: None,
             out_dir: "results".to_string(),
             bench_dir: ".".to_string(),
             verbose: false,
@@ -133,7 +138,8 @@ pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
             cache = Some((key, (tr, te)));
         }
         let (tr, te) = &cache.as_ref().unwrap().1;
-        let out = execute_run(r, tr, te, opts.verbose)?;
+        let scheduler = opts.scheduler.unwrap_or(r.scheduler);
+        let out = execute_run(r, tr, te, scheduler, opts.verbose)?;
         let path = format!(
             "{run_dir}/{}__{}__s{}.json",
             sanitize(&r.id),
@@ -172,7 +178,8 @@ pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
     Ok(bench)
 }
 
-fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset, verbose: bool)
+fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset,
+               scheduler: Scheduler, verbose: bool)
                -> Result<RunOutcome, String> {
     let net_spec = zoo::get(&r.preset)
         .ok_or_else(|| format!("run '{}': unknown preset '{}'", r.id,
@@ -191,6 +198,7 @@ fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset, verbose: bool)
                     hyper: r.hyper,
                     seed: r.seed,
                     verbose,
+                    scheduler,
                     plateau_patience: if r.fixed_lr {
                         usize::MAX
                     } else {
@@ -267,6 +275,19 @@ fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset, verbose: bool)
                 Json::Float(r.dropout.0),
                 Json::Float(r.dropout.1),
             ]),
+        ),
+        (
+            // LES scheduler actually used (nitro engine only; the FP/DFA
+            // baselines have no block scheduler). Metric keys are
+            // scheduler-invariant — CI asserts that — so comparisons
+            // across scheduler runs strip this key like the timing ones.
+            "scheduler",
+            match r.engine {
+                EngineKind::Nitro => {
+                    Json::Str(scheduler.name().to_string())
+                }
+                _ => Json::Null,
+            },
         ),
         ("final_test_acc", Json::Float(final_test_acc)),
         ("final_train_acc", opt_f(final_train_acc)),

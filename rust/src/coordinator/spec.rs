@@ -42,6 +42,7 @@
 
 use crate::coordinator::experiments::Scale;
 use crate::nn::Hyper;
+use crate::train::Scheduler;
 use crate::util::jsonio::Json;
 
 /// Execution engine requested by a spec.
@@ -280,6 +281,11 @@ pub struct ExperimentSpec {
     pub engines: Vec<EngineKind>,
     pub bench_output: String,
     pub fixed_lr: bool,
+    /// LES scheduler for the nitro engine (`"scheduler"` key:
+    /// sequential|block-parallel|pipelined; default pipelined). All three
+    /// are metric-identical — this knob exists for benchmarking and CI
+    /// cross-checks.
+    pub scheduler: Scheduler,
     pub fp_lr: f64,
     pub fp_epochs_div: usize,
     /// Batch size for the FP baselines (the paper's baselines always ran
@@ -351,6 +357,12 @@ impl ExperimentSpec {
                 j.str_or("bench_output", &d)
             },
             fixed_lr: j.bool_or("fixed_lr", false),
+            scheduler: match j.get("scheduler") {
+                None => Scheduler::default(),
+                Some(v) => Scheduler::parse(
+                    v.as_str().ok_or("scheduler: not a string")?,
+                )?,
+            },
             fp_lr: j.f64_or("fp_lr", 1e-3),
             fp_epochs_div: opt_usize(j, "fp_epochs_div")?.unwrap_or(1).max(1),
             fp_batch: opt_usize(j, "fp_batch")?,
@@ -456,6 +468,7 @@ impl ExperimentSpec {
                         hyper,
                         dropout: run.dropout.unwrap_or(self.defaults_dropout),
                         fixed_lr: self.fixed_lr,
+                        scheduler: self.scheduler,
                         fp_lr: self.fp_lr,
                         paper_acc: run.paper_acc,
                         paper_note: run.paper_note.clone(),
@@ -496,6 +509,9 @@ pub struct ResolvedRun {
     pub hyper: Hyper,
     pub dropout: (f64, f64),
     pub fixed_lr: bool,
+    /// LES scheduler for the nitro engine (metric-identical across all
+    /// three; see [`Scheduler`]).
+    pub scheduler: Scheduler,
     pub fp_lr: f64,
     pub paper_acc: Option<f64>,
     pub paper_note: Option<String>,
@@ -572,6 +588,31 @@ mod tests {
         let r = spec.resolve(Scale::Quick, Some(7), 3).unwrap();
         assert!(r.iter().all(|x| x.seed == 7 && x.epochs == 3));
         assert!(spec.fixed_lr);
+    }
+
+    #[test]
+    fn scheduler_key_parses_and_defaults() {
+        let base = |extra: &str| {
+            format!(
+                r#"{{"name": "t", {extra} "runs": [
+                     {{"id": "a", "preset": "tinycnn", "dataset": "tiny"}}
+                   ]}}"#
+            )
+        };
+        let spec =
+            ExperimentSpec::parse(&Json::parse(&base("")).unwrap()).unwrap();
+        assert_eq!(spec.scheduler, Scheduler::Pipelined, "default");
+        let spec = ExperimentSpec::parse(
+            &Json::parse(&base(r#""scheduler": "sequential","#)).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.scheduler, Scheduler::Sequential);
+        let runs = spec.resolve(Scale::Quick, None, 0).unwrap();
+        assert!(runs.iter().all(|r| r.scheduler == Scheduler::Sequential));
+        assert!(ExperimentSpec::parse(
+            &Json::parse(&base(r#""scheduler": "warp","#)).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 pub mod loader;
 pub mod synthetic;
 
-use crate::tensor::{ITensor, Tensor};
+use crate::tensor::ITensor;
 use crate::util::rng::Pcg32;
 
 /// A labelled integer image-classification dataset. Pixels are raw int
@@ -55,21 +55,35 @@ impl Dataset {
 
     /// Pull a batch by indices into an (B, C, H, W) / (B, F) tensor.
     pub fn gather(&self, idxs: &[usize], flatten: bool) -> (ITensor, Vec<usize>) {
-        let ss = self.sample_size();
-        let mut data = Vec::with_capacity(idxs.len() * ss);
+        let mut x = ITensor::empty();
         let mut labels = Vec::with_capacity(idxs.len());
+        self.gather_into(idxs, flatten, &mut x, &mut labels);
+        (x, labels)
+    }
+
+    /// [`Self::gather`] into caller-owned buffers, reusing their
+    /// allocations: the training loop recycles one batch tensor (or, in
+    /// pipelined mode, a bounded ring of them) across every iteration of
+    /// every epoch, so the steady state performs no per-batch gather
+    /// allocation.
+    pub fn gather_into(&self, idxs: &[usize], flatten: bool, x: &mut ITensor,
+                       labels: &mut Vec<usize>) {
+        let ss = self.sample_size();
+        x.data.clear();
+        x.data.reserve(idxs.len() * ss);
+        labels.clear();
+        labels.reserve(idxs.len());
         for &i in idxs {
-            data.extend_from_slice(&self.images[i * ss..(i + 1) * ss]);
+            x.data.extend_from_slice(&self.images[i * ss..(i + 1) * ss]);
             labels.push(self.labels[i]);
         }
-        let shape: Vec<usize> = if flatten || self.shape.len() == 1 {
-            vec![idxs.len(), ss]
+        x.shape.clear();
+        x.shape.push(idxs.len());
+        if flatten || self.shape.len() == 1 {
+            x.shape.push(ss);
         } else {
-            let mut s = vec![idxs.len()];
-            s.extend(&self.shape);
-            s
-        };
-        (Tensor::from_vec(&shape, data), labels)
+            x.shape.extend(&self.shape);
+        }
     }
 
     /// Split off the last `n` samples as a test set.
@@ -114,6 +128,30 @@ impl<'a> Batcher<'a> {
             batch,
             flatten,
         }
+    }
+
+    /// Whether another batch remains in this epoch. Lets callers that
+    /// must acquire a buffer before gathering (the pipeline's recycle
+    /// ring) avoid taking one they would immediately strand.
+    pub fn has_next(&self) -> bool {
+        self.pos < self.order.len()
+    }
+
+    /// Streaming variant of `next()`: gather the next batch into
+    /// caller-owned buffers (see [`Dataset::gather_into`]), returning
+    /// `false` when the epoch is exhausted. The hot training loops use
+    /// this; the `Iterator` impl stays for callers that want owned
+    /// batches.
+    pub fn next_into(&mut self, x: &mut ITensor, labels: &mut Vec<usize>)
+                     -> bool {
+        if self.pos >= self.order.len() {
+            return false;
+        }
+        let end = (self.pos + self.batch).min(self.order.len());
+        let idxs = &self.order[self.pos..end];
+        self.pos = end;
+        self.ds.gather_into(idxs, self.flatten, x, labels);
+        true
     }
 }
 
@@ -192,6 +230,30 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn next_into_matches_iterator_and_reuses_buffers() {
+        let ds = tiny();
+        let mut rng_a = Pcg32::new(4);
+        let mut rng_b = Pcg32::new(4);
+        let owned: Vec<_> = Batcher::new(&ds, 3, false, &mut rng_a).collect();
+        let mut b = Batcher::new(&ds, 3, false, &mut rng_b);
+        let mut x = ITensor::empty();
+        let mut labels = Vec::new();
+        let mut got = 0usize;
+        let mut cap_after_first = 0usize;
+        while b.next_into(&mut x, &mut labels) {
+            assert_eq!((&x, &labels), (&owned[got].0, &owned[got].1));
+            if got == 0 {
+                cap_after_first = x.data.capacity();
+            } else {
+                assert_eq!(x.data.capacity(), cap_after_first,
+                           "batch buffer must be reused, not reallocated");
+            }
+            got += 1;
+        }
+        assert_eq!(got, owned.len());
     }
 
     #[test]

@@ -15,7 +15,7 @@ use nitro::coordinator::runner::{self, RunnerOpts};
 use nitro::coordinator::spec::ExperimentSpec;
 use nitro::data::loader;
 use nitro::nn::{zoo, Hyper, Network};
-use nitro::train::{checkpoint, evaluate, fit, TrainConfig};
+use nitro::train::{checkpoint, evaluate, fit, Scheduler, TrainConfig};
 use nitro::util::cli::Command;
 use nitro::util::rng::Pcg32;
 
@@ -81,7 +81,10 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("save", "", "checkpoint output path")
         .opt("engine", "native", "native|pjrt (pjrt needs artifacts)")
         .opt("artifacts", "artifacts", "artifacts dir for --engine pjrt")
-        .flag("sequential", "disable the block-parallel scheduler")
+        .opt("scheduler", "pipelined",
+             "LES scheduler: sequential|block-parallel|pipelined \
+              (bit-identical results)")
+        .flag("sequential", "shorthand for --scheduler sequential")
         .flag("quiet", "suppress per-epoch logs");
     let p = match cmd.parse(argv) {
         Ok(p) => p,
@@ -117,7 +120,11 @@ fn cmd_train(argv: &[String]) -> i32 {
                     batch: p.get_usize("batch")?,
                     hyper: hp,
                     seed,
-                    parallel_blocks: !p.has("sequential"),
+                    scheduler: if p.has("sequential") {
+                        Scheduler::Sequential
+                    } else {
+                        Scheduler::parse(p.get("scheduler"))?
+                    },
                     verbose: !p.has("quiet"),
                     ..Default::default()
                 };
@@ -251,6 +258,9 @@ fn cmd_run_spec(argv: &[String]) -> i32 {
         .opt("scale", "", "override the spec's scale: quick|full")
         .opt("seed", "", "override the spec's seed list with one seed")
         .opt("epochs", "0", "override epochs (0 = spec defaults)")
+        .opt("scheduler", "",
+             "override the spec's LES scheduler: \
+              sequential|block-parallel|pipelined")
         .opt("out-dir", "results", "directory for per-run records")
         .opt("bench-dir", ".", "directory for the aggregate BENCH json")
         .flag("verbose", "per-epoch trainer logs")
@@ -270,10 +280,15 @@ fn cmd_run_spec(argv: &[String]) -> i32 {
             "" => None,
             _ => Some(p.get_u64("seed")?),
         };
+        let scheduler = match p.get("scheduler") {
+            "" => None,
+            s => Some(Scheduler::parse(s)?),
+        };
         let opts = RunnerOpts {
             scale,
             seed,
             epochs: p.get_usize("epochs")?,
+            scheduler,
             out_dir: p.get("out-dir").to_string(),
             bench_dir: p.get("bench-dir").to_string(),
             verbose: p.has("verbose"),
@@ -294,6 +309,9 @@ fn cmd_bench_kernels(argv: &[String]) -> i32 {
         .opt("out", "BENCH_kernels.json", "output JSON path")
         .opt("baseline", "",
              "baseline BENCH_kernels.json for an advisory ±30% comparison")
+        .flag("write-baseline",
+              "also write the record to experiments/bench_baseline.json \
+               (commit it to seed the CI advisory gate)")
         .flag("quick", "small-shape subset, no full train-step benches");
     let p = match cmd.parse(argv) {
         Ok(p) => p,
@@ -308,6 +326,7 @@ fn cmd_bench_kernels(argv: &[String]) -> i32 {
                 "" => None,
                 b => Some(b.to_string()),
             },
+            write_baseline: p.has("write-baseline"),
             quick: p.has("quick"),
         };
         kernelbench::run(&opts).map(|_| ())

@@ -32,6 +32,44 @@ impl Default for Hyper {
     }
 }
 
+/// Stream id base for the per-block dropout RNGs: block `l` draws its
+/// masks from `Pcg32::with_stream(seed, DROPOUT_STREAM_BASE + l)`.
+pub const DROPOUT_STREAM_BASE: u64 = 0x64726f70; // "drop"
+
+/// Per-block dropout RNG streams.
+///
+/// Every block owns an independent PCG32 stream derived from the training
+/// seed and the block index, so a block's mask sequence is a function of
+/// `(seed, block, batch ordinal)` alone — independent of how a scheduler
+/// interleaves block execution. This is what makes the block-parallel and
+/// cross-batch pipelined schedulers bit-identical to sequential order
+/// under dropout: each block consumes its own stream in batch order no
+/// matter which thread (or pipeline stage) runs it.
+pub struct DropoutRngs {
+    streams: Vec<Pcg32>,
+}
+
+impl DropoutRngs {
+    pub fn new(seed: u64, nblocks: usize) -> Self {
+        DropoutRngs {
+            streams: (0..nblocks as u64)
+                .map(|l| Pcg32::with_stream(seed, DROPOUT_STREAM_BASE + l))
+                .collect(),
+        }
+    }
+
+    /// Block `l`'s stream.
+    pub fn stream(&mut self, l: usize) -> &mut Pcg32 {
+        &mut self.streams[l]
+    }
+
+    /// Move the streams out — the pipelined scheduler hands each stage
+    /// worker its block's stream to own directly.
+    pub fn into_streams(self) -> Vec<Pcg32> {
+        self.streams
+    }
+}
+
 /// Forward-pass intermediates needed by the local backward pass.
 pub struct BlockCache {
     /// Scaled pre-activations (NITRO-ReLU input) — its backward mask.
@@ -151,19 +189,29 @@ impl Block {
                          y32: &ITensor, hp: &Hyper) -> i64 {
         let af = 64 * self.spec.num_classes() as i64;
         // ---- learning layers ------------------------------------------
-        let (feat, lr_arg, pooled_shape) = adaptive_pool(&cache.a_out, &self.spec);
-        let yhat = matmul_scale_ws(&feat, &self.wl,
-                                   scale_factor_linear(feat.shape[1]),
+        let lr = lr_features(&cache.a_out, &self.spec);
+        let feat: &ITensor = match &lr {
+            // logical (B,F) view of the block output — no flatten copy
+            LrFeat::Flat => &cache.a_out,
+            LrFeat::Pooled { feat, .. } => feat,
+        };
+        let (_, fcols) = feat.batch_feat();
+        let yhat = matmul_scale_ws(feat, &self.wl, scale_factor_linear(fcols),
                                    &mut self.ws);
         let (loss, grad_l) = rss_loss_grad(&yhat, y32);
-        let gw_l = matmul_at_b_i64(&feat, &grad_l); // featᵀ·∇L (F,G)
+        let gw_l = matmul_at_b_i64(feat, &grad_l); // featᵀ·∇L (F,G)
         let dfeat = matmul_a_bt_i64(&grad_l, &self.wl).to_i32(); // ∇L·Wᵀ
         integer_sgd(&mut self.wl, &gw_l, hp.gamma_inv, hp.eta_lr_inv);
 
         // ---- delta^fw back through the forward layers ------------------
         // learning-head scaling backward = STE (identity)
-        let mut d = adaptive_pool_bwd(&dfeat, lr_arg.as_ref(), &pooled_shape,
-                                      &cache.a_out.shape, &self.spec);
+        let mut d = match &lr {
+            LrFeat::Flat => dfeat.reshaped(&cache.a_out.shape),
+            LrFeat::Pooled { arg, pooled_shape, .. } => adaptive_pool_bwd(
+                &dfeat, Some(arg), pooled_shape, &cache.a_out.shape,
+                &self.spec,
+            ),
+        };
         if let Some(mask) = &cache.drop_mask {
             for (v, &keep) in d.data.iter_mut().zip(mask) {
                 if !keep {
@@ -203,22 +251,25 @@ impl Block {
     }
 }
 
-/// Adaptive max-pool for conv-block learning layers (identity flatten for
-/// linear blocks). Mirrors `model._adaptive_pool`.
-pub fn adaptive_pool(a_out: &ITensor, spec: &BlockSpec)
-                     -> (ITensor, Option<ITensor>, Vec<usize>) {
+/// Learning-layer feature view of a block output: either the output
+/// itself, read as a logical (B, F) matrix by the shape-agnostic matmuls
+/// (linear blocks, and conv blocks whose activation already matches the
+/// learning-pool geometry — zero-copy), or an adaptively max-pooled
+/// feature tensor plus its argmax (conv blocks needing pooling).
+enum LrFeat {
+    Flat,
+    Pooled { feat: ITensor, arg: ITensor, pooled_shape: Vec<usize> },
+}
+
+fn lr_features(a_out: &ITensor, spec: &BlockSpec) -> LrFeat {
     match spec {
-        BlockSpec::Linear(_) => {
-            let (b, f) = a_out.batch_feat();
-            (a_out.clone().reshaped(&[b, f]), None, a_out.shape.clone())
-        }
+        BlockSpec::Linear(_) => LrFeat::Flat,
         BlockSpec::Conv(c) => {
             let (s, k) = c.lr_pool();
             let (b, ch, h, w) = (a_out.shape[0], a_out.shape[1],
                                  a_out.shape[2], a_out.shape[3]);
             if k <= 1 && h == s && w == s {
-                return (a_out.clone().reshaped(&[b, ch * s * s]), None,
-                        a_out.shape.clone());
+                return LrFeat::Flat;
             }
             let k = k.max(1);
             let (pooled, arg) = maxpool2d(a_out, k, k);
@@ -236,11 +287,28 @@ pub fn adaptive_pool(a_out: &ITensor, spec: &BlockSpec)
                     }
                 }
             }
-            (
-                ITensor::from_vec(&[b, ch * s * s], feat),
-                Some(ITensor::from_vec(&[b, ch, s, s], args)),
-                vec![b, ch, s, s],
-            )
+            LrFeat::Pooled {
+                feat: ITensor::from_vec(&[b, ch * s * s], feat),
+                arg: ITensor::from_vec(&[b, ch, s, s], args),
+                pooled_shape: vec![b, ch, s, s],
+            }
+        }
+    }
+}
+
+/// Adaptive max-pool for conv-block learning layers (identity flatten for
+/// linear blocks). Mirrors `model._adaptive_pool`. The training hot path
+/// uses [`lr_features`] (which skips the identity-flatten copies); this
+/// materializing form serves the probes and tests.
+pub fn adaptive_pool(a_out: &ITensor, spec: &BlockSpec)
+                     -> (ITensor, Option<ITensor>, Vec<usize>) {
+    match lr_features(a_out, spec) {
+        LrFeat::Flat => {
+            let (b, f) = a_out.batch_feat();
+            (a_out.clone().reshaped(&[b, f]), None, a_out.shape.clone())
+        }
+        LrFeat::Pooled { feat, arg, pooled_shape } => {
+            (feat, Some(arg), pooled_shape)
         }
     }
 }
@@ -302,7 +370,8 @@ impl Head {
     }
 
     /// Head step: receives the global loss gradient directly (learning-rate
-    /// role — no amplification factor).
+    /// role — no amplification factor). `a` may be any shape with batch
+    /// leading — the matmuls read it as a logical (B, F) matrix.
     pub fn train_step(&mut self, a: &ITensor, y32: &ITensor, hp: &Hyper)
                       -> (ITensor, i64) {
         let yhat = matmul_scale_ws(a, &self.wo, self.spec.sf(), &mut self.ws);
@@ -310,6 +379,23 @@ impl Head {
         let gw = matmul_at_b_i64(a, &grad);
         integer_sgd(&mut self.wo, &gw, hp.gamma_inv, hp.eta_lr_inv);
         (yhat, loss)
+    }
+
+    /// Move the head's state out (pipelined-scheduler stage ownership),
+    /// leaving an empty husk behind; [`Self::restore`] puts it back at a
+    /// pipeline sync point.
+    pub fn take(&mut self) -> Head {
+        Head {
+            spec: self.spec.clone(),
+            wo: std::mem::replace(&mut self.wo, ITensor::empty()),
+            ws: std::mem::take(&mut self.ws),
+        }
+    }
+
+    /// Undo [`Self::take`].
+    pub fn restore(&mut self, from: Head) {
+        self.wo = from.wo;
+        self.ws = from.ws;
     }
 }
 
@@ -351,95 +437,123 @@ impl Network {
         }
     }
 
-    /// Flatten activations when transitioning conv -> linear.
-    fn maybe_flatten(a: ITensor, next: &BlockSpec) -> ITensor {
-        if matches!(next, BlockSpec::Linear(_)) && a.shape.len() > 2 {
-            let (b, f) = a.batch_feat();
-            a.reshaped(&[b, f])
-        } else {
-            a
-        }
-    }
-
-    /// Integer-only inference. x: (B,C,H,W) or (B,F).
+    /// Integer-only inference. x: (B,C,H,W) or (B,F). The input is
+    /// borrowed and conv→linear boundaries need no flatten copy — the
+    /// matmuls read activations as logical (B, F).
     pub fn infer(&self, x: &ITensor) -> ITensor {
-        let mut a = x.clone();
+        let mut a: Option<ITensor> = None;
         for blk in &self.blocks {
-            a = Self::maybe_flatten(a, &blk.spec);
-            a = blk.forward(&a);
+            let a_in = a.as_ref().unwrap_or(x);
+            a = Some(blk.forward(a_in));
         }
-        let (b, f) = a.batch_feat();
-        self.head.forward(&a.reshaped(&[b, f]))
+        self.head.forward(a.as_ref().unwrap_or(x))
     }
 
     /// One training iteration, sequential block order (reference mode).
+    ///
+    /// The input is borrowed, activations are moved block to block, and
+    /// conv→linear boundaries are handled by the logical-2-D matmuls — the
+    /// steady state copies no activation. Dropout masks are drawn from
+    /// `drop`'s per-block streams, so every scheduler (sequential,
+    /// block-parallel, pipelined) sees identical masks for a given
+    /// (seed, block, batch ordinal).
     pub fn train_batch(&mut self, x: &ITensor, labels: &[usize], hp: &Hyper,
-                       rng: &mut Pcg32) -> StepReport {
+                       drop: &mut DropoutRngs) -> StepReport {
         let y32 = one_hot32(labels, self.spec.num_classes);
         let mut report = StepReport::default();
-        let mut a = x.clone();
-        for blk in &mut self.blocks {
-            a = Self::maybe_flatten(a, &blk.spec);
-            let (out, loss) = blk.train_step(&a, &y32, hp, Some(rng));
+        let mut a: Option<ITensor> = None;
+        for (l, blk) in self.blocks.iter_mut().enumerate() {
+            let a_in = a.as_ref().unwrap_or(x);
+            let (out, loss) = blk.train_step(a_in, &y32, hp,
+                                             Some(drop.stream(l)));
             report.block_loss.push(loss);
-            a = out;
+            a = Some(out);
         }
-        let (b, f) = a.batch_feat();
-        let (yhat, head_loss) = self.head.train_step(&a.reshaped(&[b, f]), &y32, hp);
+        let a_ref = a.as_ref().unwrap_or(x);
+        let (yhat, head_loss) = self.head.train_step(a_ref, &y32, hp);
         report.head_loss = head_loss;
         report.correct = count_correct(&yhat, labels);
         report
     }
 
     /// One training iteration with the **block-parallel LES scheduler**:
-    /// block `l`'s backward pass (learning layers, gradients, IntegerSGD
-    /// updates) runs on a worker thread while blocks `l+1..L` are still
-    /// doing their forward passes. This exploits the independence the paper
-    /// notes in §3.3 ("the training of all the integer local-loss blocks
-    /// operates independently ... allowing them to be executed in
-    /// parallel"). Results are bit-identical to [`Self::train_batch`]
-    /// because no data crosses block boundaries backwards.
+    /// forwards run in block order on the caller, then every block's
+    /// backward pass (learning layers, gradients, IntegerSGD updates) and
+    /// the head step fan out **on the persistent worker pool**. This
+    /// exploits the independence the paper notes in §3.3 ("the training of
+    /// all the integer local-loss blocks operates independently ...
+    /// allowing them to be executed in parallel"). Results are
+    /// bit-identical to [`Self::train_batch`] because no data crosses
+    /// block boundaries backwards and each block reads its own dropout
+    /// stream.
     pub fn train_batch_parallel(&mut self, x: &ITensor, labels: &[usize],
-                                hp: &Hyper, rng: &mut Pcg32) -> StepReport {
+                                hp: &Hyper, drop: &mut DropoutRngs)
+                                -> StepReport {
         // deterministic single-thread mode (NITRO_WORKERS=1): honour the
         // "no thread is ever spawned" guarantee for every caller by
         // falling back to sequential order (bit-identical results)
-        if crate::util::par::default_workers() <= 1 {
-            return self.train_batch(x, labels, hp, rng);
+        if crate::util::par::current_workers() <= 1 {
+            return self.train_batch(x, labels, hp, drop);
         }
         let y32 = one_hot32(labels, self.spec.num_classes);
         let nblocks = self.blocks.len();
-        let mut block_loss = vec![0i64; nblocks];
-        let mut head_out: Option<(ITensor, i64)> = None;
-        let Network { blocks, head, .. } = self;
-        // dropout masks are drawn on the main thread in block order (inside
-        // forward_train), so the RNG stream is identical to sequential mode
-        std::thread::scope(|s| {
-            let mut handles = Vec::with_capacity(nblocks);
-            let mut a = x.clone();
-            let y32_ref = &y32;
-            for blk in blocks.iter_mut() {
-                a = Self::maybe_flatten(a, &blk.spec);
-                let cache = blk.forward_train(&a, Some(&mut *rng));
-                let a_in = a;
-                a = cache.a_out.clone();
-                let hp = *hp;
-                handles.push(s.spawn(move || {
-                    blk.backward_step(&a_in, &cache, y32_ref, &hp)
-                }));
-            }
-            let (b, f) = a.batch_feat();
-            head_out = Some(head.train_step(&a.reshaped(&[b, f]), y32_ref, hp));
-            for (i, h) in handles.into_iter().enumerate() {
-                block_loss[i] = h.join().expect("block backward panicked");
-            }
-        });
-        let (yhat, head_loss) = head_out.unwrap();
-        StepReport {
-            block_loss,
-            head_loss,
-            correct: count_correct(&yhat, labels),
+        // phase 1: forwards in block order on the caller; block l+1 reads
+        // block l's cached output in place (logical 2-D at flatten
+        // boundaries), so no activation is copied
+        let mut caches: Vec<BlockCache> = Vec::with_capacity(nblocks);
+        for l in 0..nblocks {
+            let cache = {
+                let a_in = if l == 0 { x } else { &caches[l - 1].a_out };
+                self.blocks[l].forward_train(a_in, Some(drop.stream(l)))
+            };
+            caches.push(cache);
         }
+        // phase 2: every block backward + the head step run as one pool
+        // job (the caller participates); outputs return in task order
+        enum Task<'a> {
+            Block(usize, &'a mut Block),
+            Head(&'a mut Head),
+        }
+        enum Done {
+            Loss(i64),
+            Head(ITensor, i64),
+        }
+        let Network { blocks, head, .. } = self;
+        let mut tasks: Vec<Task> = blocks
+            .iter_mut()
+            .enumerate()
+            .map(|(l, b)| Task::Block(l, b))
+            .collect();
+        tasks.push(Task::Head(head));
+        let caches = &caches;
+        let y32_ref = &y32;
+        let outs = crate::util::par::scoped_map(
+            tasks,
+            crate::util::par::current_workers(),
+            |t| match t {
+                Task::Block(l, blk) => {
+                    let a_in = if l == 0 { x } else { &caches[l - 1].a_out };
+                    Done::Loss(blk.backward_step(a_in, &caches[l], y32_ref,
+                                                 hp))
+                }
+                Task::Head(h) => {
+                    let a_in = caches.last().map(|c| &c.a_out).unwrap_or(x);
+                    let (yhat, loss) = h.train_step(a_in, y32_ref, hp);
+                    Done::Head(yhat, loss)
+                }
+            },
+        );
+        let mut report = StepReport::default();
+        for d in outs {
+            match d {
+                Done::Loss(l) => report.block_loss.push(l),
+                Done::Head(yhat, loss) => {
+                    report.head_loss = loss;
+                    report.correct = count_correct(&yhat, labels);
+                }
+            }
+        }
+        report
     }
 
     /// Count correct argmax predictions over a labelled batch.
@@ -512,7 +626,6 @@ mod tests {
         let (x, _) = toy_batch(&mut rng, &spec, 4);
         let mut a = x;
         for blk in &net.blocks {
-            a = Network::maybe_flatten(a, &blk.spec);
             a = blk.forward(&a);
             let (lo, hi) = a.minmax();
             // NITRO-ReLU output range: [-127-mu, 127-mu]
@@ -524,25 +637,35 @@ mod tests {
     #[test]
     fn parallel_equals_sequential_bitexact() {
         // the load-bearing L3 property: the block-parallel scheduler must
-        // produce byte-identical weights and losses to sequential order.
-        let spec = zoo::get("tinycnn").unwrap();
-        let mut net_a = Network::new(spec.clone(), 7);
-        let mut net_b = Network::new(spec.clone(), 7);
-        let hp = Hyper { gamma_inv: 512, eta_fw_inv: 12000, eta_lr_inv: 3000 };
-        let mut rng_a = Pcg32::new(9);
-        let mut rng_b = Pcg32::new(9);
-        let mut data_rng = Pcg32::new(11);
-        for _ in 0..3 {
-            let (x, labels) = toy_batch(&mut data_rng, &spec, 6);
-            let ra = net_a.train_batch(&x, &labels, &hp, &mut rng_a);
-            let rb = net_b.train_batch_parallel(&x, &labels, &hp, &mut rng_b);
-            assert_eq!(ra.block_loss, rb.block_loss);
-            assert_eq!(ra.head_loss, rb.head_loss);
-        }
-        for ((na, ta), (nb, tb)) in net_a.weights().iter().zip(net_b.weights())
-        {
-            assert_eq!(na, &nb);
-            assert_eq!(ta, &tb, "weight {na} diverged");
+        // produce byte-identical weights and losses to sequential order —
+        // including under dropout, where each block reads its own RNG
+        // stream regardless of scheduler.
+        for dropout in [0.0, 0.3] {
+            let spec = zoo::get("tinycnn").unwrap();
+            let mut net_a = Network::new(spec.clone(), 7);
+            let mut net_b = Network::new(spec.clone(), 7);
+            net_a.set_dropout(dropout, dropout);
+            net_b.set_dropout(dropout, dropout);
+            let hp = Hyper { gamma_inv: 512, eta_fw_inv: 12000,
+                             eta_lr_inv: 3000 };
+            let mut drop_a = DropoutRngs::new(9, net_a.blocks.len());
+            let mut drop_b = DropoutRngs::new(9, net_b.blocks.len());
+            let mut data_rng = Pcg32::new(11);
+            for _ in 0..3 {
+                let (x, labels) = toy_batch(&mut data_rng, &spec, 6);
+                let ra = net_a.train_batch(&x, &labels, &hp, &mut drop_a);
+                let rb =
+                    net_b.train_batch_parallel(&x, &labels, &hp, &mut drop_b);
+                assert_eq!(ra.block_loss, rb.block_loss, "dropout {dropout}");
+                assert_eq!(ra.head_loss, rb.head_loss, "dropout {dropout}");
+                assert_eq!(ra.correct, rb.correct, "dropout {dropout}");
+            }
+            for ((na, ta), (nb, tb)) in
+                net_a.weights().iter().zip(net_b.weights())
+            {
+                assert_eq!(na, &nb);
+                assert_eq!(ta, &tb, "weight {na} diverged (dropout {dropout})");
+            }
         }
     }
 
@@ -571,11 +694,12 @@ mod tests {
         };
         let mut first = 0i64;
         let mut last = 0i64;
+        let mut drop = DropoutRngs::new(5, net.blocks.len());
         // integer bootstrap: weights must grow before the scaled
         // pre-activations carry signal — give it a few hundred steps
         for step in 0..400 {
             let (x, y) = make_batch(&mut rng);
-            let rep = net.train_batch(&x, &y, &hp, &mut rng);
+            let rep = net.train_batch(&x, &y, &hp, &mut drop);
             let total: i64 = rep.head_loss;
             if step == 0 {
                 first = total;
@@ -601,7 +725,8 @@ mod tests {
         let zeros = cache.a_out.data.iter().filter(|&&v| v == 0).count();
         assert!(zeros > cache.a_out.len() / 4, "dropout not applied");
         // eval path unaffected by drop_p256
-        let _ = net.train_batch(&x, &labels, &hp, &mut rng);
+        let mut drop = DropoutRngs::new(2, net.blocks.len());
+        let _ = net.train_batch(&x, &labels, &hp, &mut drop);
         let y1 = net.infer(&x);
         let y2 = net.infer(&x);
         assert_eq!(y1, y2);

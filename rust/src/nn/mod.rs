@@ -7,5 +7,6 @@ pub mod probe;
 pub mod spec;
 pub mod zoo;
 
-pub use block::{Block, BlockCache, Head, Hyper, Network};
+pub use block::{Block, BlockCache, DropoutRngs, Head, Hyper, Network,
+                StepReport};
 pub use spec::{BlockSpec, ConvSpec, HeadSpec, LinearSpec, NetworkSpec};

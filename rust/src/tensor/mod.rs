@@ -28,6 +28,12 @@ impl<T: Copy + Default> Tensor<T> {
         Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
     }
 
+    /// Zero-element tensor: the seed value for buffers that are filled by
+    /// `Dataset::gather_into` / grown in place (batch recycling).
+    pub fn empty() -> Self {
+        Tensor { shape: vec![0], data: Vec::new() }
+    }
+
     pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),

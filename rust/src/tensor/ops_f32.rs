@@ -11,7 +11,7 @@ pub fn matmul(a: &FTensor, b: &FTensor) -> FTensor {
     let (kb, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, kb);
     let mut out = vec![0f32; m * n];
-    par::for_each_chunk(&mut out, n, par::default_workers(), |i, orow| {
+    par::for_each_chunk(&mut out, n, par::current_workers(), |i, orow| {
         let arow = &a.data[i * k..(i + 1) * k];
         for (kk, &av) in arow.iter().enumerate() {
             if av == 0.0 {
@@ -108,7 +108,7 @@ pub fn conv2d(x: &FTensor, w: &FTensor, padding: usize) -> FTensor {
     let p = ho * wo;
     let ckk = c * k * k;
     let mut out = vec![0f32; b * o * p];
-    par::for_each_chunk(&mut out, o * p, par::default_workers(), |bi, chunk| {
+    par::for_each_chunk(&mut out, o * p, par::current_workers(), |bi, chunk| {
         let pat = &patches.data[bi * p * ckk..(bi + 1) * p * ckk];
         for oi in 0..o {
             let wrow = &w.data[oi * ckk..(oi + 1) * ckk];

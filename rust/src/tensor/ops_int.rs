@@ -180,28 +180,34 @@ fn transpose_into(b: &[i32], k: usize, n: usize, bt: &mut [i32]) {
 }
 
 /// `a (m,k) i32 × b (k,n) i32 -> (m,n) i64`, i64 accumulation.
+///
+/// `a` is interpreted **logically 2-D**: a rank-4 conv activation
+/// `(B,C,H,W)` contracts as `(B, C·H·W)` without a reshape copy — row-major
+/// data is identical, so this is bit-equal to flattening first. The
+/// conv→linear block boundary and the head rely on this.
 pub fn matmul_i64(a: &ITensor, b: &ITensor) -> LTensor {
-    let (m, k) = (a.shape[0], a.shape[1]);
+    let (m, k) = a.batch_feat();
     let (kb, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, kb, "matmul inner dims {k} vs {kb}");
     let mut out = vec![0i64; m * n];
-    matmul_i64_into(&a.data, &b.data, m, k, n, &mut out, par::default_workers());
+    matmul_i64_into(&a.data, &b.data, m, k, n, &mut out, par::current_workers());
     Tensor::from_vec(&[m, n], out)
 }
 
 /// Fused `floor((a × b) / sf)`: the i64 contraction accumulates into the
 /// workspace buffer and only the scaled i32 output is freshly allocated —
-/// the linear / learning-layer / head forward path.
+/// the linear / learning-layer / head forward path. `a` is logically 2-D
+/// (see [`matmul_i64`]).
 pub fn matmul_scale_ws(a: &ITensor, b: &ITensor, sf: i64,
                        ws: &mut KernelWorkspace) -> ITensor {
-    let (m, k) = (a.shape[0], a.shape[1]);
+    let (m, k) = a.batch_feat();
     let (kb, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, kb, "matmul inner dims {k} vs {kb}");
     let KernelWorkspace { bt, acc, .. } = ws;
     let accbuf = grown(acc, m * n);
     accbuf.fill(0);
     matmul_i64_into_buf(&a.data, &b.data, m, k, n, accbuf,
-                        par::default_workers(), bt);
+                        par::current_workers(), bt);
     Tensor {
         shape: vec![m, n],
         data: accbuf.iter().map(|&v| div_floor(v, sf) as i32).collect(),
@@ -302,9 +308,11 @@ fn mm_block(a: &[i32], bt: &[i32], k: usize, n: usize, r0: usize,
 }
 
 /// `aᵀ (k,m) × b (k,n) -> (m,n) i64` without materializing the transpose —
-/// the learning-layer weight-gradient shape (featᵀ · ∇L).
+/// the learning-layer weight-gradient shape (featᵀ · ∇L). `a` is logically
+/// 2-D (see [`matmul_i64`]), so conv activations feed linear-block weight
+/// grads without a flatten copy.
 pub fn matmul_at_b_i64(a: &ITensor, b: &ITensor) -> LTensor {
-    let (k, m) = (a.shape[0], a.shape[1]);
+    let (k, m) = a.batch_feat();
     let (kb, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, kb);
     let mut out = vec![0i64; m * n];
@@ -327,8 +335,9 @@ pub fn matmul_at_b_i64(a: &ITensor, b: &ITensor) -> LTensor {
 
 /// `a (m,k) × bᵀ (n,k) -> (m,n) i64` — the delta^fw shape (∇L · W_lᵀ).
 /// Already in row-dot form; uses the chunked i32 fast path when safe.
+/// `a` is logically 2-D (see [`matmul_i64`]).
 pub fn matmul_a_bt_i64(a: &ITensor, b: &ITensor) -> LTensor {
-    let (m, k) = (a.shape[0], a.shape[1]);
+    let (m, k) = a.batch_feat();
     let (n, kb) = (b.shape[0], b.shape[1]);
     assert_eq!(k, kb);
     let mut out = vec![0i64; m * n];
@@ -370,7 +379,7 @@ fn im2col_into(x: &ITensor, kernel: usize, padding: usize, out: &mut [i32]) {
     let ckk = c * kernel * kernel;
     debug_assert_eq!(out.len(), b * ho * wo * ckk);
     let per_sample = ho * wo * ckk;
-    par::for_each_chunk(out, per_sample, par::default_workers(),
+    par::for_each_chunk(out, per_sample, par::current_workers(),
         |bi, chunk| {
             im2col_sample(
                 &x.data[bi * c * h * w..(bi + 1) * c * h * w],
@@ -457,7 +466,7 @@ fn conv_contract(patches: &[i32], w: &[i32], o: usize, p: usize, ckk: usize,
                  out: &mut [i64]) {
     let per_sample = o * p;
     let kchunk = safe_chunk(max_abs(w), max_abs(patches), ckk);
-    par::for_each_chunk(out, per_sample, par::default_workers(),
+    par::for_each_chunk(out, per_sample, par::current_workers(),
         |bi, chunk| {
             let pat = &patches[bi * p * ckk..(bi + 1) * p * ckk];
             for oi in 0..o {

@@ -1,13 +1,63 @@
-//! LES training orchestration: epoch loop, evaluation, metrics recording,
-//! LR plateau scheduling, weight-magnitude probes (Fig. 3 / App. E.3) and
-//! checkpointing.
+//! LES training orchestration: epoch loop, scheduler selection
+//! (sequential / block-parallel / cross-batch pipelined), evaluation,
+//! metrics recording, LR plateau scheduling, weight-magnitude probes
+//! (Fig. 3 / App. E.3) and checkpointing.
 
 pub mod checkpoint;
+pub mod pipeline;
 
 use crate::data::{Batcher, Dataset};
-use crate::nn::{Hyper, Network};
+use crate::nn::{DropoutRngs, Hyper, Network, StepReport};
 use crate::optim::PlateauScheduler;
-use crate::util::rng::Pcg32;
+use crate::tensor::ITensor;
+use crate::util::{par, rng::Pcg32};
+
+/// LES training scheduler. All three produce **bit-identical** weights,
+/// losses and accuracies for a given seed (enforced by property tests and
+/// `nitro bench-kernels`); they differ only in how block work is laid out
+/// over threads. The pipeline engages only when the `NITRO_WORKERS`
+/// budget covers one thread per stage (`blocks + 1`), degrading to
+/// block-parallel below that; under `NITRO_WORKERS=1` both parallel
+/// schedulers fall back to sequential order and no thread is ever
+/// spawned.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Scheduler {
+    /// Reference order: block 0..L then the head, one batch at a time, on
+    /// the calling thread.
+    Sequential,
+    /// Within one batch: forwards in block order, then every block
+    /// backward + the head step fan out on the persistent worker pool.
+    BlockParallel,
+    /// Across batches: persistent per-block stage workers; block `l`
+    /// trains on batch `t` while block `l+1` is still on batch `t-1`
+    /// (see [`pipeline`]).
+    #[default]
+    Pipelined,
+}
+
+impl Scheduler {
+    pub fn parse(s: &str) -> Result<Scheduler, String> {
+        Ok(match s {
+            "sequential" => Scheduler::Sequential,
+            "block-parallel" => Scheduler::BlockParallel,
+            "pipelined" => Scheduler::Pipelined,
+            other => {
+                return Err(format!(
+                    "unknown scheduler '{other}' \
+                     (sequential|block-parallel|pipelined)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheduler::Sequential => "sequential",
+            Scheduler::BlockParallel => "block-parallel",
+            Scheduler::Pipelined => "pipelined",
+        }
+    }
+}
 
 /// Training configuration (paper App. D defaults where applicable).
 #[derive(Clone, Debug)]
@@ -22,8 +72,11 @@ pub struct TrainConfig {
     /// Plateau reductions are suppressed for this many epochs: the integer
     /// bootstrap phase is flat by construction (see EXPERIMENTS.md).
     pub plateau_warmup: usize,
-    /// Run block backward passes on worker threads (L3 scheduler).
-    pub parallel_blocks: bool,
+    /// How block work is scheduled over threads (bit-identical results).
+    pub scheduler: Scheduler,
+    /// |head loss| above this marks the run divergent (App. E.1
+    /// "(unstable)" rows); the epoch completes, then training stops.
+    pub divergence_guard: i64,
     pub verbose: bool,
 }
 
@@ -37,7 +90,8 @@ impl Default for TrainConfig {
             eval_every: 1,
             plateau_patience: 10,
             plateau_warmup: 40,
-            parallel_blocks: true,
+            scheduler: Scheduler::default(),
+            divergence_guard: 1 << 40,
             verbose: false,
         }
     }
@@ -99,6 +153,38 @@ pub fn fit(net: &mut Network, train: &Dataset, test: &Dataset,
     fit_observed(net, train, test, cfg, &mut NullSink)
 }
 
+/// Per-epoch metric accumulator shared by the inline and pipelined paths
+/// (pipelined reports arrive with a lag, so accumulation is decoupled from
+/// the feeding loop).
+#[derive(Default)]
+struct EpochAgg {
+    head_loss: f64,
+    block_loss: Vec<f64>,
+    correct: usize,
+    seen: usize,
+    batches: usize,
+    diverged: bool,
+}
+
+impl EpochAgg {
+    fn add(&mut self, rep: &StepReport, guard: i64) {
+        if self.block_loss.is_empty() {
+            self.block_loss = vec![0.0; rep.block_loss.len()];
+        }
+        for (acc, &l) in self.block_loss.iter_mut().zip(&rep.block_loss) {
+            *acc += l as f64;
+        }
+        self.head_loss += rep.head_loss as f64;
+        self.correct += rep.correct;
+        self.batches += 1;
+        // divergence guard (App. E.1 "(unstable)" rows): weights blowing
+        // past int16 by orders of magnitude means the run is dead.
+        if rep.head_loss.abs() > guard {
+            self.diverged = true;
+        }
+    }
+}
+
 /// [`fit`] with a [`MetricSink`] that observes every epoch as it
 /// completes.
 pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
@@ -106,44 +192,71 @@ pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
                     -> TrainResult {
     let flatten = net.spec.input_shape.len() == 1;
     let mut rng = Pcg32::with_stream(cfg.seed, 0x74726169);
-    // NITRO_WORKERS=1 needs no handling here: train_batch_parallel itself
-    // falls back to sequential order in deterministic single-thread mode.
+    // Per-block dropout streams: mask draws depend only on (seed, block,
+    // batch ordinal), never on the scheduler. The batch-shuffle stream
+    // above is likewise scheduler-independent.
+    let mut drop = DropoutRngs::new(cfg.seed, net.blocks.len());
     let mut sched = PlateauScheduler::new(cfg.hyper.gamma_inv,
                                           cfg.plateau_patience);
     sched.warmup = cfg.plateau_warmup;
+    // The pipelined scheduler engages only when the worker budget covers
+    // one thread per stage (blocks + head) — the stage threads ARE the
+    // budget. Smaller budgets degrade to the block-parallel scheduler
+    // (which clamps its pool fan-out to the budget), and budget 1 runs
+    // the sequential path inline with no thread ever spawned. All paths
+    // are bit-identical, so the degradation is a resource policy only.
+    let nstages = net.blocks.len() + 1;
+    let mut pipe = (cfg.scheduler == Scheduler::Pipelined
+        && !net.blocks.is_empty()
+        && par::current_workers() >= nstages)
+    .then(|| pipeline::Pipeline::start(&mut *net, cfg.seed));
     let mut epochs = Vec::new();
     let mut diverged = false;
+    // Batch buffers reused across every iteration of every epoch — the
+    // steady state performs no per-batch gather allocation. In pipelined
+    // mode the input tensors recycle through the stage-0 return channel.
+    let mut xbuf = ITensor::empty();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut reports: Vec<StepReport> = Vec::new();
     'outer: for epoch in 0..cfg.epochs {
         let t0 = std::time::Instant::now();
         let hp = Hyper { gamma_inv: sched.gamma_inv, ..cfg.hyper };
-        let mut head_loss = 0f64;
-        let mut block_loss: Vec<f64> = Vec::new();
-        let mut correct = 0usize;
-        let mut seen = 0usize;
-        let mut batches = 0usize;
-        for (x, labels) in Batcher::new(train, cfg.batch, flatten, &mut rng) {
-            let rep = if cfg.parallel_blocks {
-                net.train_batch_parallel(&x, &labels, &hp, &mut rng)
-            } else {
-                net.train_batch(&x, &labels, &hp, &mut rng)
-            };
-            if block_loss.is_empty() {
-                block_loss = vec![0.0; rep.block_loss.len()];
+        let mut agg = EpochAgg::default();
+        let mut batcher = Batcher::new(train, cfg.batch, flatten, &mut rng);
+        if let Some(p) = &mut pipe {
+            if !p.is_running() {
+                p.resume(net);
             }
-            for (acc, &l) in block_loss.iter_mut().zip(&rep.block_loss) {
-                *acc += l as f64;
+            while batcher.has_next() {
+                let mut x = p.recycled();
+                batcher.next_into(&mut x, &mut labels);
+                agg.seen += labels.len();
+                p.feed(x, &labels, &hp, &mut reports);
+                for r in reports.drain(..) {
+                    agg.add(&r, cfg.divergence_guard);
+                }
             }
-            head_loss += rep.head_loss as f64;
-            correct += rep.correct;
-            seen += labels.len();
-            batches += 1;
-            // divergence guard (App. E.1 "(unstable)" rows): weights blowing
-            // past int16 by orders of magnitude means the run is dead.
-            if rep.head_loss.abs() > 1 << 40 {
-                diverged = true;
+            // epoch barrier: drain the pipe and take the blocks back so
+            // evaluation below sees the settled weights
+            p.sync(net, &mut reports);
+            for r in reports.drain(..) {
+                agg.add(&r, cfg.divergence_guard);
+            }
+        } else {
+            while batcher.next_into(&mut xbuf, &mut labels) {
+                agg.seen += labels.len();
+                let rep = match cfg.scheduler {
+                    Scheduler::Sequential => {
+                        net.train_batch(&xbuf, &labels, &hp, &mut drop)
+                    }
+                    _ => net.train_batch_parallel(&xbuf, &labels, &hp,
+                                                  &mut drop),
+                };
+                agg.add(&rep, cfg.divergence_guard);
             }
         }
-        let train_acc = correct as f64 / seen.max(1) as f64;
+        diverged |= agg.diverged;
+        let train_acc = agg.correct as f64 / agg.seen.max(1) as f64;
         let test_acc = if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs
         {
             evaluate(net, test, cfg.batch)
@@ -155,10 +268,11 @@ pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
         }
         let rec = EpochRecord {
             epoch,
-            mean_head_loss: head_loss / batches.max(1) as f64,
-            mean_block_loss: block_loss
+            mean_head_loss: agg.head_loss / agg.batches.max(1) as f64,
+            mean_block_loss: agg
+                .block_loss
                 .iter()
-                .map(|&l| l / batches.max(1) as f64)
+                .map(|&l| l / agg.batches.max(1) as f64)
                 .collect(),
             train_acc,
             test_acc,
@@ -187,7 +301,20 @@ pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
             break 'outer;
         }
     }
-    let final_test_acc = evaluate(net, test, cfg.batch);
+    if let Some(p) = pipe {
+        // every epoch ended with a sync, so the network is whole; this
+        // just tells the parked stage workers to exit and joins them
+        p.shutdown(net, &mut reports);
+        debug_assert!(reports.is_empty());
+    }
+    // The last executed epoch always evaluated (eval-epoch or final-epoch
+    // rule above), so reuse that measurement instead of re-running the
+    // whole test set; evaluation is deterministic, so this is the same
+    // number.
+    let final_test_acc = match epochs.last() {
+        Some(e) if !e.test_acc.is_nan() => e.test_acc,
+        _ => evaluate(net, test, cfg.batch),
+    };
     let weight_stats = weight_stats(net);
     TrainResult { epochs, final_test_acc, weight_stats, diverged }
 }
@@ -202,27 +329,39 @@ pub fn evaluate(net: &Network, ds: &Dataset, batch: usize) -> f64 {
     correct as f64 / ds.len().max(1) as f64
 }
 
-/// Fig. 3 probe: abs-value distribution per weight tensor.
+/// Fig. 3 probe: abs-value distribution per weight tensor. Quartiles come
+/// from `select_nth_unstable` (O(n) per quantile instead of a full sort)
+/// over one scratch buffer reused across all tensors.
 pub fn weight_stats(net: &Network) -> Vec<WeightStats> {
+    let mut scratch: Vec<i32> = Vec::new();
     let mut out = Vec::new();
     for (i, blk) in net.blocks.iter().enumerate() {
-        out.push(stats_for(&format!("block{i}.wf"), &blk.wf));
-        out.push(stats_for(&format!("block{i}.wl"), &blk.wl));
+        out.push(stats_for(&format!("block{i}.wf"), &blk.wf, &mut scratch));
+        out.push(stats_for(&format!("block{i}.wl"), &blk.wl, &mut scratch));
     }
-    out.push(stats_for("head.wo", &net.head.wo));
+    out.push(stats_for("head.wo", &net.head.wo, &mut scratch));
     out
 }
 
-fn stats_for(name: &str, w: &crate::tensor::ITensor) -> WeightStats {
-    let mut abs: Vec<i32> = w.data.iter().map(|&v| v.saturating_abs()).collect();
-    abs.sort_unstable();
-    let q = |p: f64| abs[((abs.len() - 1) as f64 * p) as usize];
+fn stats_for(name: &str, w: &crate::tensor::ITensor, scratch: &mut Vec<i32>)
+             -> WeightStats {
+    scratch.clear();
+    scratch.extend(w.data.iter().map(|&v| v.saturating_abs()));
+    let mut q = |p: f64| -> i32 {
+        if scratch.is_empty() {
+            return 0;
+        }
+        let idx = ((scratch.len() - 1) as f64 * p) as usize;
+        *scratch.select_nth_unstable(idx).1
+    };
+    let q50 = q(0.5);
+    let q90 = q(0.9);
     WeightStats {
         name: name.to_string(),
         mean_abs: w.mean_abs(),
-        q50: q(0.5),
-        q90: q(0.9),
-        max_abs: *abs.last().unwrap_or(&0),
+        q50,
+        q90,
+        max_abs: scratch.iter().copied().max().unwrap_or(0),
         bitwidth: w.bitwidth(),
     }
 }
@@ -293,6 +432,30 @@ mod tests {
         let a = evaluate(&net, &ds, 32);
         let b = evaluate(&net, &ds, 16); // batch size must not matter
         assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scheduler_parse_roundtrip() {
+        for s in [Scheduler::Sequential, Scheduler::BlockParallel,
+                  Scheduler::Pipelined] {
+            assert_eq!(Scheduler::parse(s.name()).unwrap(), s);
+        }
+        assert!(Scheduler::parse("turbo").is_err());
+        assert_eq!(Scheduler::default(), Scheduler::Pipelined);
+    }
+
+    #[test]
+    fn weight_stats_quantiles_match_full_sort() {
+        let net = Network::new(zoo::get("tinycnn").unwrap(), 9);
+        for (s, (_, w)) in weight_stats(&net).iter().zip(net.weights()) {
+            let mut abs: Vec<i32> =
+                w.data.iter().map(|&v| v.saturating_abs()).collect();
+            abs.sort_unstable();
+            let q = |p: f64| abs[((abs.len() - 1) as f64 * p) as usize];
+            assert_eq!(s.q50, q(0.5), "{}", s.name);
+            assert_eq!(s.q90, q(0.9), "{}", s.name);
+            assert_eq!(s.max_abs, *abs.last().unwrap(), "{}", s.name);
+        }
     }
 
     #[test]

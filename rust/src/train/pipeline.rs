@@ -1,0 +1,538 @@
+//! Cross-batch pipelined LES scheduler: persistent block-stage workers.
+//!
+//! NITRO-D's local-loss blocks are independent in the backward direction
+//! (paper §3.3), which the block-parallel scheduler exploits *within* one
+//! batch. This module exploits it *across* batches: every block — plus the
+//! head — becomes a long-lived pipeline stage with its own worker thread,
+//! bounded activation queues between stages, and its own dropout RNG
+//! stream. While block `l` trains on batch `t`, block `l+1` is still on
+//! batch `t-1`: steady-state throughput approaches `(#blocks + 1)×` the
+//! sequential step rate on sufficiently parallel hardware.
+//!
+//! ## Why this is bit-identical to sequential order
+//!
+//! In sequential mode, block `l` processes batch `t` with the weights it
+//! produced after updating on batch `t-1`, reading the activation block
+//! `l-1` computed for batch `t` *before* anything downstream ran. Those
+//! are exactly the data dependencies the pipeline preserves: each stage
+//! consumes batches in order from a FIFO queue against its own weight
+//! history, and nothing flows backwards between stages. Dropout masks come
+//! from per-block streams ([`crate::nn::DropoutRngs`]), so mask draws
+//! depend only on (seed, block, batch ordinal) — not on scheduler
+//! interleaving. The property test below and `bench-kernels` enforce the
+//! equivalence on weights, losses and accuracy.
+//!
+//! ## Threading/budget model
+//!
+//! Stage workers are plain threads that live for the whole `fit` run
+//! (parked on their queue when idle) and coexist with the kernel pool
+//! under the single `NITRO_WORKERS` budget: the stage threads *are* the
+//! budget, so `fit` builds a pipeline only when
+//! `NITRO_WORKERS >= blocks + 1`, and each stage sets its thread-local
+//! kernel budget to `max(1, NITRO_WORKERS / stages)`
+//! ([`crate::util::par::set_thread_workers`]) — with budget == stages
+//! every kernel runs inline on its stage and total thread usage stays at
+//! the budget. Smaller budgets degrade to the block-parallel scheduler
+//! (bit-identical results); `NITRO_WORKERS=1` runs sequential order
+//! inline, preserving the no-thread guarantee.
+//!
+//! ## Epoch synchronisation
+//!
+//! Evaluation, plateau scheduling and checkpointing need the whole network
+//! in one place, so at every epoch boundary the trainer calls
+//! [`Pipeline::sync`]: a `Sync` marker flushes through the queues behind
+//! the last batch, each stage hands its block back to the `Network`, and
+//! the stage parks until [`Pipeline::resume`] returns the block for the
+//! next epoch (or [`Pipeline::shutdown`] joins the workers). Input batch
+//! tensors are recycled through a return channel, so the steady state
+//! performs no per-batch gather allocation.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+
+use crate::nn::block::count_correct;
+use crate::nn::{Block, DropoutRngs, Head, Hyper, Network, StepReport};
+use crate::tensor::{one_hot32, ITensor};
+use crate::util::par;
+use crate::util::rng::Pcg32;
+
+/// Bounded depth of each inter-stage activation queue. Depth 2 lets a
+/// stage run ahead without stalling on momentary imbalance while keeping
+/// at most `stages * 2 + stages` batches in flight.
+const QUEUE_DEPTH: usize = 2;
+
+/// One batch travelling through the pipeline. Owned end to end — the
+/// activation is moved stage to stage, never cloned; `y32` and `labels`
+/// ride along because exactly one stage holds the job at a time.
+struct Job {
+    /// Stage input: the raw batch for stage 0, block `l-1`'s output for
+    /// stage `l`. Conv→linear flatten boundaries need no reshape — the
+    /// matmuls read activations as logical (B, F).
+    a: ITensor,
+    y32: ITensor,
+    labels: Vec<usize>,
+    hp: Hyper,
+    /// Local losses accumulated in block order as the job flows.
+    block_loss: Vec<i64>,
+}
+
+enum Msg {
+    Job(Box<Job>),
+    /// Epoch barrier: forwarded downstream behind the last job; the stage
+    /// then returns its block and parks on its resume channel.
+    Sync,
+}
+
+/// Stage state handed back to the trainer at a sync point.
+enum Returned {
+    Block(usize, Block),
+    Head(Head),
+}
+
+enum Resume {
+    Block(Block),
+    Head(Head),
+    Exit,
+}
+
+#[allow(clippy::too_many_arguments)] // stage wiring: channels are the point
+fn block_stage(l: usize, mut blk: Block, mut drop_rng: Pcg32,
+               rx: Receiver<Msg>, tx: SyncSender<Msg>,
+               recycle: Option<Sender<ITensor>>, ret: Sender<Returned>,
+               resume: Receiver<Resume>, kernel_budget: usize) {
+    par::set_thread_workers(kernel_budget);
+    loop {
+        match rx.recv() {
+            Ok(Msg::Job(mut job)) => {
+                let cache = blk.forward_train(&job.a, Some(&mut drop_rng));
+                let loss = blk.backward_step(&job.a, &cache, &job.y32,
+                                             &job.hp);
+                job.block_loss.push(loss);
+                // hand the output on by value; the spent input goes back
+                // to the feeder for reuse (stage 0) or is dropped
+                let spent = std::mem::replace(&mut job.a, cache.a_out);
+                if let Some(r) = &recycle {
+                    let _ = r.send(spent);
+                }
+                if tx.send(Msg::Job(job)).is_err() {
+                    return; // downstream died; trainer observes via feed
+                }
+            }
+            Ok(Msg::Sync) => {
+                let _ = tx.send(Msg::Sync);
+                if ret.send(Returned::Block(l, blk)).is_err() {
+                    return;
+                }
+                match resume.recv() {
+                    Ok(Resume::Block(b)) => blk = b,
+                    _ => return,
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn head_stage(mut head: Head, rx: Receiver<Msg>, reports: Sender<StepReport>,
+              ret: Sender<Returned>, resume: Receiver<Resume>,
+              kernel_budget: usize) {
+    par::set_thread_workers(kernel_budget);
+    loop {
+        match rx.recv() {
+            Ok(Msg::Job(job)) => {
+                let job = *job;
+                let (yhat, head_loss) =
+                    head.train_step(&job.a, &job.y32, &job.hp);
+                let correct = count_correct(&yhat, &job.labels);
+                let rep = StepReport {
+                    block_loss: job.block_loss,
+                    head_loss,
+                    correct,
+                };
+                if reports.send(rep).is_err() {
+                    return;
+                }
+            }
+            Ok(Msg::Sync) => {
+                if ret.send(Returned::Head(head)).is_err() {
+                    return;
+                }
+                match resume.recv() {
+                    Ok(Resume::Head(h)) => head = h,
+                    _ => return,
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// The persistent block-stage pipeline. Owns the network's blocks (and
+/// head) while running; [`Self::sync`] returns them to the `Network` for
+/// evaluation between epochs.
+pub struct Pipeline {
+    feed_tx: Option<SyncSender<Msg>>,
+    report_rx: Receiver<StepReport>,
+    recycle_rx: Receiver<ITensor>,
+    ret_rx: Receiver<Returned>,
+    resume_txs: Vec<Sender<Resume>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    nblocks: usize,
+    num_classes: usize,
+    in_flight: usize,
+    running: bool,
+}
+
+impl Pipeline {
+    /// Spawn one stage worker per block plus the head stage, moving the
+    /// blocks out of `net`. Dropout streams are derived from `seed`
+    /// exactly as [`DropoutRngs::new`] does for the other schedulers.
+    pub fn start(net: &mut Network, seed: u64) -> Pipeline {
+        let nblocks = net.blocks.len();
+        assert!(nblocks > 0, "pipeline needs at least one block");
+        let nstages = nblocks + 1;
+        let kernel_budget = (par::current_workers() / nstages).max(1);
+        let (feed_tx, mut next_rx) = sync_channel::<Msg>(QUEUE_DEPTH);
+        let (ret_tx, ret_rx) = channel();
+        let (report_tx, report_rx) = channel();
+        let (recycle_tx, recycle_rx) = channel();
+        let mut resume_txs = Vec::with_capacity(nstages);
+        let mut handles = Vec::with_capacity(nstages);
+        let streams = DropoutRngs::new(seed, nblocks).into_streams();
+        let num_classes = net.spec.num_classes;
+        for (l, (blk, drop_rng)) in
+            net.blocks.drain(..).zip(streams).enumerate()
+        {
+            let (tx, downstream_rx) = sync_channel::<Msg>(QUEUE_DEPTH);
+            let rx = std::mem::replace(&mut next_rx, downstream_rx);
+            let (res_tx, res_rx) = channel();
+            resume_txs.push(res_tx);
+            let ret = ret_tx.clone();
+            let recycle = (l == 0).then(|| recycle_tx.clone());
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("nitro-stage-{l}"))
+                    .spawn(move || {
+                        block_stage(l, blk, drop_rng, rx, tx, recycle, ret,
+                                    res_rx, kernel_budget)
+                    })
+                    .expect("spawn pipeline stage worker"),
+            );
+        }
+        let (res_tx, res_rx) = channel();
+        resume_txs.push(res_tx);
+        let head = net.head.take();
+        handles.push(
+            std::thread::Builder::new()
+                .name("nitro-stage-head".to_string())
+                .spawn(move || {
+                    head_stage(head, next_rx, report_tx, ret_tx, res_rx,
+                               kernel_budget)
+                })
+                .expect("spawn pipeline head worker"),
+        );
+        Pipeline {
+            feed_tx: Some(feed_tx),
+            report_rx,
+            recycle_rx,
+            ret_rx,
+            resume_txs,
+            handles,
+            nblocks,
+            num_classes,
+            in_flight: 0,
+            running: true,
+        }
+    }
+
+    /// A spent input batch tensor returned by stage 0, or a fresh empty
+    /// one — the feeder gathers the next batch straight into it.
+    pub fn recycled(&mut self) -> ITensor {
+        self.recycle_rx.try_recv().unwrap_or_else(|_| ITensor::empty())
+    }
+
+    /// A stage worker died (its channel hung up): disconnect everything
+    /// so the remaining stages unwind, reap the threads, and re-raise the
+    /// original panic payload on the caller — the same contract the
+    /// worker pool gives kernel tasks. Falls back to a generic panic if
+    /// no payload is found (should not happen).
+    fn die(&mut self, context: &str) -> ! {
+        self.feed_tx = None;
+        self.resume_txs.clear();
+        let mut payload: Option<Box<dyn std::any::Any + Send>> = None;
+        for h in self.handles.drain(..) {
+            if let Err(e) = h.join() {
+                payload.get_or_insert(e);
+            }
+        }
+        eprintln!("pipeline: {context}");
+        match payload {
+            Some(p) => std::panic::resume_unwind(p),
+            None => panic!("pipeline: {context}"),
+        }
+    }
+
+    /// Push one batch into stage 0 (blocking only when the pipeline is
+    /// full — that backpressure is what bounds in-flight memory) and drain
+    /// any reports the head has finished in the meantime.
+    pub fn feed(&mut self, x: ITensor, labels: &[usize], hp: &Hyper,
+                reports: &mut Vec<StepReport>) {
+        assert!(self.running, "feed on a synced pipeline");
+        let job = Box::new(Job {
+            y32: one_hot32(labels, self.num_classes),
+            a: x,
+            labels: labels.to_vec(),
+            hp: *hp,
+            block_loss: Vec::with_capacity(self.nblocks),
+        });
+        if self
+            .feed_tx
+            .as_ref()
+            .expect("pipeline was shut down")
+            .send(Msg::Job(job))
+            .is_err()
+        {
+            self.die("stage worker died while feeding a batch");
+        }
+        self.in_flight += 1;
+        while let Ok(r) = self.report_rx.try_recv() {
+            self.in_flight -= 1;
+            reports.push(r);
+        }
+    }
+
+    /// Epoch barrier: wait for every in-flight batch, collect the
+    /// remaining reports, and move all blocks (and the head) back into
+    /// `net` so the caller can evaluate/checkpoint. Call
+    /// [`Self::resume`] before feeding again.
+    pub fn sync(&mut self, net: &mut Network,
+                reports: &mut Vec<StepReport>) {
+        assert!(self.running, "sync on an already-synced pipeline");
+        if self.feed_tx.as_ref().unwrap().send(Msg::Sync).is_err() {
+            self.die("stage worker died before the epoch barrier");
+        }
+        while self.in_flight > 0 {
+            match self.report_rx.recv() {
+                Ok(r) => {
+                    self.in_flight -= 1;
+                    reports.push(r);
+                }
+                Err(_) => self.die("stage worker died mid-epoch"),
+            }
+        }
+        let mut blocks: Vec<Option<Block>> =
+            std::iter::repeat_with(|| None).take(self.nblocks).collect();
+        for _ in 0..self.nblocks + 1 {
+            match self.ret_rx.recv() {
+                Ok(Returned::Block(i, b)) => blocks[i] = Some(b),
+                Ok(Returned::Head(h)) => net.head.restore(h),
+                Err(_) => self.die("stage worker died at the epoch barrier"),
+            }
+        }
+        debug_assert!(net.blocks.is_empty());
+        net.blocks
+            .extend(blocks.into_iter().map(|b| b.expect("stage returned")));
+        self.running = false;
+    }
+
+    /// Whether the blocks currently live in the stages (`true`) or in the
+    /// `Network` (`false`, after a [`Self::sync`]).
+    pub fn is_running(&self) -> bool {
+        self.running
+    }
+
+    /// Hand the blocks back to the parked stage workers for the next
+    /// epoch.
+    pub fn resume(&mut self, net: &mut Network) {
+        assert!(!self.running, "resume on a running pipeline");
+        assert_eq!(net.blocks.len(), self.nblocks);
+        for (tx, blk) in self.resume_txs.iter().zip(net.blocks.drain(..)) {
+            tx.send(Resume::Block(blk))
+                .expect("pipeline stage worker died");
+        }
+        self.resume_txs
+            .last()
+            .unwrap()
+            .send(Resume::Head(net.head.take()))
+            .expect("pipeline head worker died");
+        self.running = true;
+    }
+
+    /// Clean teardown: sync if needed (returning any residual reports),
+    /// tell every stage to exit, and join the workers.
+    pub fn shutdown(mut self, net: &mut Network,
+                    reports: &mut Vec<StepReport>) {
+        if self.running {
+            self.sync(net, reports);
+        }
+        for tx in &self.resume_txs {
+            let _ = tx.send(Resume::Exit);
+        }
+        self.feed_tx = None;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        // Abnormal teardown (caller panic / early drop): disconnect every
+        // channel so the stage cascade unwinds — a stage blocked on recv
+        // sees the hangup, drops its own sender, and the next stage
+        // follows — then reap the threads. In-flight state is lost; the
+        // normal path goes through `shutdown`, which leaves `handles`
+        // empty so this is a no-op.
+        self.feed_tx = None;
+        self.resume_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::nn::{zoo, Hyper};
+    use crate::train::{fit, Scheduler, TrainConfig};
+
+    /// Restore the thread-local worker budget even on panic.
+    struct BudgetGuard;
+    impl Drop for BudgetGuard {
+        fn drop(&mut self) {
+            par::set_thread_workers(0);
+        }
+    }
+
+    fn data() -> (crate::data::Dataset, crate::data::Dataset) {
+        let ds = synthetic::by_name("tiny", 260, 3).unwrap();
+        let (mut tr, mut te) = ds.split_test(60);
+        tr.mad_normalize();
+        te.mad_normalize();
+        (tr, te)
+    }
+
+    fn run(sched: Scheduler, dropout: f64, cfg0: &TrainConfig)
+           -> (crate::train::TrainResult, Network) {
+        let (tr, te) = data();
+        // tinycnn = conv -> conv -> linear block -> head: covers the
+        // conv→linear flatten boundary inside the pipeline
+        let mut net = Network::new(zoo::get("tinycnn").unwrap(), 2);
+        net.set_dropout(dropout, dropout);
+        let cfg = TrainConfig { scheduler: sched, ..cfg0.clone() };
+        let res = fit(&mut net, &tr, &te, &cfg);
+        (res, net)
+    }
+
+    fn assert_equal(a: &(crate::train::TrainResult, Network),
+                    b: &(crate::train::TrainResult, Network), what: &str) {
+        assert_eq!(a.0.epochs.len(), b.0.epochs.len(), "{what}: epoch count");
+        for (ea, eb) in a.0.epochs.iter().zip(&b.0.epochs) {
+            assert_eq!(ea.mean_head_loss, eb.mean_head_loss,
+                       "{what}: head loss epoch {}", ea.epoch);
+            assert_eq!(ea.mean_block_loss, eb.mean_block_loss,
+                       "{what}: block loss epoch {}", ea.epoch);
+            assert_eq!(ea.train_acc, eb.train_acc, "{what}: train acc");
+            assert!(
+                ea.test_acc == eb.test_acc
+                    || (ea.test_acc.is_nan() && eb.test_acc.is_nan()),
+                "{what}: test acc epoch {}", ea.epoch
+            );
+        }
+        assert_eq!(a.0.final_test_acc, b.0.final_test_acc, "{what}");
+        assert_eq!(a.0.diverged, b.0.diverged, "{what}");
+        for ((na, ta), (nb, tb)) in a.1.weights().iter().zip(b.1.weights()) {
+            assert_eq!(na, &nb);
+            assert_eq!(ta, &tb, "{what}: weight {na} diverged");
+        }
+    }
+
+    #[test]
+    fn pipelined_bitexact_vs_sequential_with_and_without_dropout() {
+        // Force a multi-worker budget so the pipeline engages even on a
+        // single-core test machine; stages then run kernels inline.
+        let _guard = BudgetGuard;
+        par::set_thread_workers(4);
+        let cfg = TrainConfig {
+            epochs: 4,
+            batch: 32,
+            eval_every: 2, // sync/resume must also cross non-eval epochs
+            hyper: Hyper { gamma_inv: 128, eta_fw_inv: 12000,
+                           eta_lr_inv: 3000 },
+            ..Default::default()
+        };
+        for dropout in [0.0, 0.25] {
+            let seq = run(Scheduler::Sequential, dropout, &cfg);
+            let blk = run(Scheduler::BlockParallel, dropout, &cfg);
+            let pipe = run(Scheduler::Pipelined, dropout, &cfg);
+            assert_equal(&seq, &blk, &format!("block-parallel p={dropout}"));
+            assert_equal(&seq, &pipe, &format!("pipelined p={dropout}"));
+        }
+    }
+
+    #[test]
+    fn divergence_early_exit_tears_the_pipeline_down_cleanly() {
+        let _guard = BudgetGuard;
+        par::set_thread_workers(4);
+        // guard of 1 declares any nonzero head loss divergent: the run
+        // must break after epoch 0 with batches mid-pipeline drained
+        let cfg = TrainConfig {
+            epochs: 6,
+            batch: 32,
+            divergence_guard: 1,
+            ..Default::default()
+        };
+        let seq = run(Scheduler::Sequential, 0.0, &cfg);
+        let pipe = run(Scheduler::Pipelined, 0.0, &cfg);
+        assert!(pipe.0.diverged, "guard of 1 must trip");
+        assert_eq!(pipe.0.epochs.len(), 1, "early exit after epoch 0");
+        assert_equal(&seq, &pipe, "diverged run");
+        // the network is whole after teardown: inference still works
+        let (tr, _) = data();
+        let (x, labels) = tr.gather(&[0, 1, 2, 3], false);
+        let _ = pipe.1.eval_batch(&x, &labels);
+    }
+
+    #[test]
+    fn single_worker_budget_never_builds_a_pipeline() {
+        let _guard = BudgetGuard;
+        par::set_thread_workers(4);
+        let cfg = TrainConfig { epochs: 2, batch: 32, ..Default::default() };
+        let multi = run(Scheduler::Pipelined, 0.25, &cfg);
+        // NITRO_WORKERS=1 semantics via the thread-local budget: the
+        // pipelined scheduler must fall back to sequential order inline
+        par::set_thread_workers(1);
+        let single = run(Scheduler::Pipelined, 0.25, &cfg);
+        let seq = run(Scheduler::Sequential, 0.25, &cfg);
+        assert_equal(&single, &seq, "workers=1 fallback");
+        assert_equal(&single, &multi, "budget must not change results");
+    }
+
+    #[test]
+    fn sync_resume_shutdown_lifecycle() {
+        let _guard = BudgetGuard;
+        par::set_thread_workers(4);
+        let (tr, _) = data();
+        let mut net = Network::new(zoo::get("tinycnn").unwrap(), 2);
+        let nblocks = net.blocks.len();
+        let hp = Hyper::default();
+        let mut pipe = Pipeline::start(&mut net, 7);
+        assert!(net.blocks.is_empty(), "stages own the blocks");
+        let mut reports = Vec::new();
+        for i in 0..3usize {
+            let (x, labels) = tr.gather(&[i, i + 1], false);
+            pipe.feed(x, &labels, &hp, &mut reports);
+        }
+        pipe.sync(&mut net, &mut reports);
+        assert_eq!(reports.len(), 3, "every fed batch reports once");
+        assert_eq!(net.blocks.len(), nblocks, "sync returns the blocks");
+        assert!(reports.iter().all(|r| r.block_loss.len() == nblocks));
+        pipe.resume(&mut net);
+        let (x, labels) = tr.gather(&[5, 6], false);
+        pipe.feed(x, &labels, &hp, &mut reports);
+        pipe.shutdown(&mut net, &mut reports);
+        assert_eq!(reports.len(), 4);
+        assert_eq!(net.blocks.len(), nblocks);
+    }
+}

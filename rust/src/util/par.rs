@@ -21,6 +21,14 @@
 //! * Jobs submitted *from* a pool worker run inline (hierarchical
 //!   parallelism: the outer level fans out, inner levels stay
 //!   sequential), which makes nested-submission deadlock impossible.
+//! * Long-lived **stage workers** (the pipelined LES scheduler's
+//!   per-block threads, `train::pipeline`) coexist with the pool under
+//!   the single `NITRO_WORKERS` budget: each stage sets a thread-local
+//!   budget override ([`set_thread_workers`]) of
+//!   `max(1, budget / stages)`, and every kernel consults
+//!   [`current_workers`] instead of the global default — so with budget
+//!   == stages each stage's kernels run inline and total thread usage
+//!   stays at the budget.
 //! * A panicking task is caught on the worker, forwarded, and re-raised
 //!   on the submitting caller; the worker thread itself survives and
 //!   keeps serving subsequent jobs.
@@ -41,6 +49,37 @@ pub fn default_workers() -> usize {
         std::env::var("NITRO_WORKERS").ok(),
         std::env::var("NITRO_THREADS").ok(),
     )
+}
+
+thread_local! {
+    /// Per-thread kernel worker-budget override (0 = unset). Long-lived
+    /// stage workers of the pipelined LES scheduler set this so the single
+    /// `NITRO_WORKERS` budget is split across stages instead of each stage
+    /// fanning its kernels out to the full budget.
+    static THREAD_WORKERS: std::cell::Cell<usize> =
+        const { std::cell::Cell::new(0) };
+}
+
+/// Set (or with `0` clear) this thread's kernel worker budget. The
+/// pipelined scheduler gives each stage thread a budget of
+/// `max(1, NITRO_WORKERS / stages)`; `1` makes every kernel on that
+/// thread run inline — the fully deterministic no-thread mode, per
+/// thread.
+pub fn set_thread_workers(n: usize) {
+    THREAD_WORKERS.set(n);
+}
+
+/// The worker budget in effect on this thread: the thread-local override
+/// if set, else [`default_workers`]. Kernels and schedulers consult this,
+/// never `default_workers` directly, so stage workers and tests can scope
+/// the budget without touching the process environment.
+pub fn current_workers() -> usize {
+    let t = THREAD_WORKERS.get();
+    if t > 0 {
+        t
+    } else {
+        default_workers()
+    }
 }
 
 fn workers_from_env(primary: Option<String>, legacy: Option<String>) -> usize {
@@ -495,6 +534,24 @@ mod tests {
             .unwrap_or(1);
         assert_eq!(workers_from_env(None, None), hw);
         assert_eq!(workers_from_env(s(""), s("junk")), hw);
+    }
+
+    #[test]
+    fn thread_budget_override_scopes_to_thread() {
+        // the override wins on the setting thread, is invisible to other
+        // threads, and clears with 0
+        set_thread_workers(1);
+        assert_eq!(current_workers(), 1);
+        std::thread::spawn(|| {
+            assert_eq!(current_workers(), default_workers());
+            set_thread_workers(3);
+            assert_eq!(current_workers(), 3);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(current_workers(), 1, "other thread must not leak");
+        set_thread_workers(0);
+        assert_eq!(current_workers(), default_workers());
     }
 
     #[test]

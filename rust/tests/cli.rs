@@ -101,6 +101,70 @@ fn run_spec_smoke_emits_bench_json() {
     assert!(stderr.contains("exist.json"), "{stderr}");
 }
 
+/// Strip machine-dependent keys (timings, RSS, scheduler label) so BENCH
+/// records from different scheduler runs can be compared byte-for-byte.
+fn strip_volatile(j: nitro::util::jsonio::Json) -> nitro::util::jsonio::Json {
+    use nitro::util::jsonio::Json;
+    const VOLATILE: &[&str] = &["secs", "wall_secs", "peak_rss_kb",
+                                "scheduler"];
+    match j {
+        Json::Object(m) => Json::Object(
+            m.into_iter()
+                .filter(|(k, _)| !VOLATILE.contains(&k.as_str()))
+                .map(|(k, v)| (k, strip_volatile(v)))
+                .collect(),
+        ),
+        Json::Array(v) => {
+            Json::Array(v.into_iter().map(strip_volatile).collect())
+        }
+        other => other,
+    }
+}
+
+#[test]
+fn run_spec_metrics_identical_across_all_three_schedulers() {
+    // the scheduler bit-identity contract, end to end through the binary:
+    // same spec, three schedulers, byte-identical metrics once the
+    // timing/scheduler keys are stripped
+    let dir = std::env::temp_dir().join("nitro_cli_sched");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut records = Vec::new();
+    for sched in ["sequential", "block-parallel", "pipelined"] {
+        let sub = dir.join(sched);
+        std::fs::create_dir_all(&sub).unwrap();
+        let sub_s = sub.to_str().unwrap();
+        // NITRO_WORKERS=8 covers tinycnn's 4 stages so the pipelined run
+        // genuinely pipelines even on small test machines (below blocks+1
+        // workers it would degrade to block-parallel and prove nothing)
+        let out = nitro()
+            .env("NITRO_WORKERS", "8")
+            .args([
+                "run-spec", "../experiments/smoke.json", "--epochs", "1",
+                "--scheduler", sched, "--out-dir", sub_s, "--bench-dir",
+                sub_s,
+            ])
+            .output()
+            .expect("spawn nitro");
+        let code = out.status.code().unwrap_or(-1);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert_eq!(code, 0, "{sched}: {stderr}");
+        let j = nitro::util::jsonio::Json::parse_file(
+            sub.join("BENCH_smoke.json").to_str().unwrap(),
+        )
+        .unwrap();
+        records.push(strip_volatile(j));
+    }
+    assert_eq!(records[0], records[1],
+               "block-parallel metrics differ from sequential");
+    assert_eq!(records[0], records[2],
+               "pipelined metrics differ from sequential");
+
+    let (code, _, stderr) =
+        run(&["run-spec", "../experiments/smoke.json", "--scheduler", "warp"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown scheduler"), "{stderr}");
+}
+
 #[test]
 fn bench_kernels_emits_schema_versioned_json() {
     let dir = std::env::temp_dir().join("nitro_cli_benchk");
