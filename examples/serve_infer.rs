@@ -94,5 +94,61 @@ fn main() {
         assert_eq!(a, b, "serving engines disagree");
         println!("native/pjrt serving parity ✓");
     }
+
+    // the production path: the micro-batching serve subsystem
+    // (`coordinator::serve`) over the grad-free fused forward — here fed
+    // from concurrent client threads, as `nitro serve --listen` would be
+    use nitro::coordinator::serve::{MicroBatcher, ModelRegistry,
+                                    ServeConfig};
+    let mut registry = ModelRegistry::new();
+    let dir = std::env::temp_dir().join("nitro_serve_example");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("tinycnn.ckpt");
+    // same spec + seed as the engine above (which consumed its Network),
+    // so the served model is byte-identical to the parity section's
+    let serve_net = Network::new(spec.clone(), 7);
+    nitro::train::checkpoint::save(&serve_net, ckpt.to_str().unwrap())
+        .expect("save checkpoint");
+    registry.load(ckpt.to_str().unwrap()).expect("load checkpoint");
+    let mb = MicroBatcher::start(
+        std::sync::Arc::new(registry),
+        ServeConfig { max_batch: 32, max_wait_us: 200,
+                      ..Default::default() },
+    );
+    let ss: usize = spec.input_shape.iter().product();
+    let t0 = Instant::now();
+    let nclients = 4usize;
+    let per_client = 50usize;
+    std::thread::scope(|s| {
+        for c in 0..nclients {
+            let client = mb.client();
+            let reqs = &requests;
+            s.spawn(move || {
+                for r in 0..per_client {
+                    let req = &reqs[(c * per_client + r) % reqs.len()];
+                    let sample = req.data[..ss].to_vec();
+                    let (_, y) = client.predict(None, sample)
+                        .expect("predict");
+                    assert_eq!(y.shape[1], 10);
+                }
+            });
+        }
+    });
+    let total = t0.elapsed().as_secs_f64();
+    println!(
+        "micro-batched serve: {} concurrent clients x {} reqs: {:.0} req/s",
+        nclients,
+        per_client,
+        (nclients * per_client) as f64 / total
+    );
+    // batch-composition invariance: a coalesced single-sample request
+    // equals the reference forward on that sample
+    let client = mb.client();
+    let sample = requests[0].data[..ss].to_vec();
+    let (_, y) = client.predict(None, sample).unwrap();
+    let full = serve_net.infer(&requests[0]);
+    assert_eq!(y.data[..], full.data[..10],
+               "micro-batched logits diverge from Network::infer");
+    println!("micro-batch determinism ✓");
     println!("serve_infer PASSED");
 }

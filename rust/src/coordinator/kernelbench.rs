@@ -53,6 +53,10 @@ pub struct Opts {
     /// scheduler comparison) — used by the CLI test suite where the
     /// binary runs unoptimized.
     pub quick: bool,
+    /// Output path for the serving-throughput record
+    /// (`coordinator::serve::bench_serve`); empty = skip the serve
+    /// section.
+    pub serve_out: String,
 }
 
 impl Default for Opts {
@@ -63,6 +67,7 @@ impl Default for Opts {
             baseline: None,
             write_baseline: false,
             quick: false,
+            serve_out: "BENCH_serve.json".to_string(),
         }
     }
 }
@@ -242,6 +247,19 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
                 ));
             });
         }
+    }
+
+    // ---- serve throughput (requests/sec, p50/p99 vs micro-batch size) --
+    // written to its own schema-versioned BENCH_serve.json; the serving
+    // identity checks (ckpt round-trip, fused-vs-reference inference)
+    // feed the same hard bit-exactness gate as the kernel paths
+    if !opts.serve_out.is_empty() {
+        crate::coordinator::serve::bench_serve(
+            opts.quick,
+            h.b.budget_s,
+            &opts.serve_out,
+            &mut h.bitexact_failures,
+        )?;
     }
 
     // ---- full-epoch scheduler comparison (samples/sec + bit-exactness) --
@@ -501,8 +519,18 @@ mod tests {
             baseline: None,
             write_baseline: false,
             quick: true,
+            serve_out: dir
+                .join("BENCH_serve.json")
+                .to_str()
+                .unwrap()
+                .to_string(),
         };
         let rec = run(&opts).unwrap();
+        // the serve-throughput record rides along
+        let serve = Json::parse_file(&opts.serve_out).unwrap();
+        assert_eq!(serve.req("experiment").unwrap().as_str(), Some("serve"));
+        assert!(serve.req("serve_throughput").unwrap().as_array().unwrap()
+                    .len() >= 3);
         assert_eq!(rec.req("schema_version").unwrap().as_i64(),
                    Some(SCHEMA_VERSION));
         assert_eq!(rec.req("bitexact").unwrap().as_bool(), Some(true));
@@ -532,6 +560,7 @@ mod tests {
             budget_s: Some(0.001),
             out: dir.join("BENCH_kernels3.json").to_str().unwrap().to_string(),
             write_baseline: false,
+            serve_out: String::new(), // skip the serve section here
         };
         assert!(run(&opts3).is_err());
     }

@@ -1,14 +1,18 @@
 //! L3 coordinator: the execution-engine abstraction (pure-Rust NativeEngine
 //! vs artifact-backed PjrtEngine), the declarative experiment harness
 //! (`spec` + `runner` — the paper's tables as JSON under `experiments/`),
-//! the remaining imperative figure drivers (`experiments`), and the CLI
-//! plumbing.
+//! the inference-serving subsystem (`serve` — model registry +
+//! micro-batcher behind `nitro serve` / `nitro predict`), the remaining
+//! imperative figure drivers (`experiments`), and the CLI plumbing.
 
 pub mod engine;
 pub mod experiments;
 pub mod kernelbench;
 pub mod runner;
+pub mod serve;
 pub mod spec;
 
 pub use engine::{Engine, NativeEngine, PjrtEngine};
+pub use serve::{BatchClient, MicroBatcher, ModelRegistry, ServeConfig,
+                ServedModel};
 pub use spec::{EngineKind, ExperimentSpec};

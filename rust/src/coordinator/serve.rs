@@ -1,0 +1,1029 @@
+//! Integer-only inference serving: model registry, dynamic micro-batcher
+//! and the `nitro serve` / `nitro predict` backends.
+//!
+//! The deployment story of the paper (App. E.3) is that a `NITRO1`
+//! checkpoint *is* the deployed model — no quantization pass between
+//! training and inference. This module turns that into a serving
+//! subsystem:
+//!
+//! * [`ModelRegistry`] loads checkpoints by path, reconstructs each
+//!   [`Network`] from the spec name recorded in the header
+//!   (`checkpoint::load_network`), validates shapes, and keys the models
+//!   by spec name.
+//! * [`MicroBatcher`] owns a single executor thread that coalesces
+//!   concurrent predict requests into micro-batches and runs them through
+//!   the grad-free fused forward path ([`Network::infer_into`]) with one
+//!   long-lived [`InferScratch`], so steady-state serving performs no
+//!   forward-path allocation. The kernels inside fan out on the
+//!   persistent worker pool (`util::par`).
+//! * **Determinism contract:** per-sample logits are a function of the
+//!   checkpoint and the sample alone — every kernel is row/sample
+//!   independent — so results are bit-identical regardless of micro-batch
+//!   composition, coalescing timing, and `NITRO_WORKERS`. CI asserts
+//!   this end to end.
+//!
+//! Wire protocol (`nitro serve`): JSON lines. Request
+//! `{"id": <any>, "model": "<name>"?, "input": [<i32>...]}` where
+//! `input` holds one or more flattened samples; response
+//! `{"id": ..., "model": ..., "logits": [[...]], "argmax": [...]}` or
+//! `{"id": ..., "error": "..."}`. The same handler backs stdin/stdout
+//! and the TCP listener (`--listen`).
+
+use crate::nn::{InferScratch, Network};
+use crate::tensor::ITensor;
+use crate::train::checkpoint;
+use crate::util::jsonio::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Bump when a `BENCH_serve.json` key changes meaning or disappears;
+/// adding keys is allowed without a bump.
+pub const SCHEMA_VERSION: i64 = 1;
+
+// ---------------------------------------------------------------------------
+// model registry
+// ---------------------------------------------------------------------------
+
+/// A checkpoint loaded for serving, with its derived geometry.
+pub struct ServedModel {
+    /// Spec name recorded in the checkpoint (the registry key).
+    pub name: String,
+    /// Checkpoint path it was loaded from.
+    pub path: String,
+    /// Per-sample input shape: `(C, H, W)` or `(F,)`.
+    pub input_shape: Vec<usize>,
+    /// Flattened ints per sample.
+    pub sample_size: usize,
+    pub num_classes: usize,
+    net: Network,
+}
+
+impl ServedModel {
+    /// Load a checkpoint, reconstructing the network from its recorded
+    /// spec. Every malformed input is an `Err`, never a panic.
+    pub fn load(path: &str) -> Result<ServedModel, String> {
+        let net = checkpoint::load_network(path)?;
+        Ok(ServedModel::from_network(net, path))
+    }
+
+    /// Wrap an in-memory network (tests and the serve bench).
+    pub fn from_network(net: Network, path: &str) -> ServedModel {
+        ServedModel {
+            name: net.spec.name.clone(),
+            path: path.to_string(),
+            input_shape: net.spec.input_shape.clone(),
+            sample_size: net.spec.input_shape.iter().product(),
+            num_classes: net.spec.num_classes,
+            net,
+        }
+    }
+
+    /// Batch shape for `n` samples of this model.
+    fn batch_shape(&self, n: usize) -> Vec<usize> {
+        let mut shape = vec![n];
+        shape.extend(&self.input_shape);
+        shape
+    }
+
+    /// Grad-free inference over an owned flat sample buffer (`n`
+    /// samples; `flat.len()` must be `n * sample_size`), writing
+    /// `(n, num_classes)` logits into `out`. Takes the buffer by value —
+    /// no input copy is made (the micro-batcher's hot path instead
+    /// gathers into its own reused buffer, see `run_group`).
+    pub fn infer_into(&self, flat: Vec<i32>, n: usize,
+                      scratch: &mut InferScratch, out: &mut ITensor) {
+        let x = ITensor::from_vec(&self.batch_shape(n), flat);
+        self.net.infer_into(&x, scratch, out);
+    }
+
+    /// Reference (unfused) inference — parity checks.
+    pub fn infer_reference(&self, x: &ITensor) -> ITensor {
+        self.net.infer(x)
+    }
+}
+
+/// Immutable set of served models, keyed by spec name. Built once at
+/// startup, then shared (`Arc`) across connection threads and the
+/// executor.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, Arc<ServedModel>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Load a checkpoint into the registry. Two checkpoints of the same
+    /// spec would shadow each other, so that is an error.
+    pub fn load(&mut self, path: &str) -> Result<Arc<ServedModel>, String> {
+        let m = Arc::new(ServedModel::load(path)?);
+        if let Some(prev) = self.models.get(&m.name) {
+            return Err(format!(
+                "model '{}' already loaded from {} (also in {path})",
+                m.name, prev.path
+            ));
+        }
+        self.models.insert(m.name.clone(), m.clone());
+        Ok(m)
+    }
+
+    /// Build a registry from a comma-separated checkpoint path list.
+    pub fn from_paths(paths: &str) -> Result<ModelRegistry, String> {
+        let mut reg = ModelRegistry::new();
+        for p in paths.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            reg.load(p)?;
+        }
+        if reg.models.is_empty() {
+            return Err("no checkpoint paths given".into());
+        }
+        Ok(reg)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ServedModel>> {
+        self.models.get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Resolve a request's model field: an explicit name must exist; an
+    /// omitted name is allowed only when exactly one model is served.
+    pub fn resolve(&self, name: Option<&str>)
+                   -> Result<Arc<ServedModel>, String> {
+        match name {
+            Some(n) => self.get(n).ok_or_else(|| {
+                format!("unknown model '{n}' (serving: {})",
+                        self.names().join(", "))
+            }),
+            None if self.models.len() == 1 => {
+                Ok(self.models.values().next().expect("len 1").clone())
+            }
+            None => Err(format!(
+                "request must name a model (serving: {})",
+                self.names().join(", ")
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dynamic micro-batcher
+// ---------------------------------------------------------------------------
+
+/// Micro-batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Sample target per executed micro-batch. The coalescing loop stops
+    /// adding requests once this is reached, so an executed batch can
+    /// exceed it by at most one request (bounded by
+    /// `max_batch - 1 + max_request_samples`).
+    pub max_batch: usize,
+    /// How long the executor waits for more requests to coalesce after
+    /// the first one arrives. 0 = batch only what is already queued.
+    pub max_wait_us: u64,
+    /// Samples allowed in a single request; larger requests are rejected
+    /// with an error response. Bounds the executor's working-set size
+    /// against a hostile or buggy client — requests are all-or-nothing
+    /// (one response each), so an unbounded request would otherwise force
+    /// an unbounded fused forward.
+    pub max_request_samples: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 64, max_wait_us: 200,
+                      max_request_samples: 4096 }
+    }
+}
+
+struct PredictReq {
+    model: Arc<ServedModel>,
+    x: Vec<i32>,
+    nsamples: usize,
+    resp: mpsc::SyncSender<Result<ITensor, String>>,
+}
+
+/// Handle for submitting predict requests; clone one per connection
+/// thread. [`Self::predict`] blocks until the micro-batch containing the
+/// request has executed.
+#[derive(Clone)]
+pub struct BatchClient {
+    tx: mpsc::Sender<PredictReq>,
+    registry: Arc<ModelRegistry>,
+    max_request_samples: usize,
+}
+
+impl BatchClient {
+    /// Score `x` (one or more flattened samples) on `model` (`None` =
+    /// the registry's single model). Returns the resolved model and the
+    /// `(n, num_classes)` logits.
+    pub fn predict(&self, model: Option<&str>, x: Vec<i32>)
+                   -> Result<(Arc<ServedModel>, ITensor), String> {
+        let m = self.registry.resolve(model)?;
+        let ss = m.sample_size;
+        if x.is_empty() || x.len() % ss != 0 {
+            return Err(format!(
+                "input length {} is not a positive multiple of '{}' \
+                 sample size {ss}",
+                x.len(),
+                m.name
+            ));
+        }
+        let nsamples = x.len() / ss;
+        if nsamples > self.max_request_samples {
+            return Err(format!(
+                "request has {nsamples} samples, above the per-request \
+                 limit {} — split it into smaller requests",
+                self.max_request_samples
+            ));
+        }
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        self.tx
+            .send(PredictReq { model: m.clone(), x, nsamples, resp: rtx })
+            .map_err(|_| "serve executor has shut down".to_string())?;
+        let y = rrx
+            .recv()
+            .map_err(|_| "serve executor dropped the request".to_string())??;
+        Ok((m, y))
+    }
+}
+
+/// The dynamic micro-batcher: one executor thread drains the request
+/// queue, coalesces up to `max_batch` samples (waiting at most
+/// `max_wait_us` once work is pending), groups them by model, and runs
+/// each group as a single fused forward on the worker-pool kernels.
+pub struct MicroBatcher {
+    tx: Option<mpsc::Sender<PredictReq>>,
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MicroBatcher {
+    pub fn start(registry: Arc<ModelRegistry>, cfg: ServeConfig)
+                 -> MicroBatcher {
+        let (tx, rx) = mpsc::channel::<PredictReq>();
+        let handle = std::thread::Builder::new()
+            .name("nitro-serve-exec".into())
+            .spawn(move || executor(rx, cfg))
+            .expect("spawn serve executor");
+        MicroBatcher { tx: Some(tx), registry, cfg, handle: Some(handle) }
+    }
+
+    /// A request handle for this batcher. Clients hold a sender into the
+    /// executor queue, so every client must be dropped before (or
+    /// strictly inside the lifetime of) the `MicroBatcher` — its `Drop`
+    /// joins the executor, which exits only once all senders are gone.
+    pub fn client(&self) -> BatchClient {
+        BatchClient {
+            tx: self.tx.as_ref().expect("running").clone(),
+            registry: self.registry.clone(),
+            max_request_samples: self.cfg.max_request_samples.max(1),
+        }
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        // closing the channel ends the executor loop; join so in-flight
+        // responses are delivered before the batcher disappears
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor(rx: mpsc::Receiver<PredictReq>, cfg: ServeConfig) {
+    let mut scratch = InferScratch::new();
+    let mut xbuf = ITensor::empty();
+    let mut out = ITensor::empty();
+    let max_batch = cfg.max_batch.max(1);
+    while let Ok(first) = rx.recv() {
+        let mut pending = vec![first];
+        let mut total = pending[0].nsamples;
+        // coalescing window: take whatever is queued, then wait out the
+        // remainder of the window for stragglers
+        let deadline = Instant::now()
+            + Duration::from_micros(cfg.max_wait_us);
+        while total < max_batch {
+            let now = Instant::now();
+            let r = if now >= deadline {
+                match rx.try_recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            } else {
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            };
+            total += r.nsamples;
+            pending.push(r);
+        }
+        // group by model, preserving arrival order within each group (the
+        // common case is a single group — one served model)
+        while !pending.is_empty() {
+            let name = pending[0].model.name.clone();
+            let group: Vec<PredictReq> = {
+                let (g, rest): (Vec<_>, Vec<_>) = pending
+                    .into_iter()
+                    .partition(|r| r.model.name == name);
+                pending = rest;
+                g
+            };
+            run_group(group, &mut scratch, &mut xbuf, &mut out);
+        }
+    }
+}
+
+/// Execute one same-model group as a single fused forward and scatter the
+/// per-request logit rows back to their response channels.
+fn run_group(group: Vec<PredictReq>, scratch: &mut InferScratch,
+             xbuf: &mut ITensor, out: &mut ITensor) {
+    let model = group[0].model.clone();
+    let n: usize = group.iter().map(|r| r.nsamples).sum();
+    xbuf.data.clear();
+    for r in &group {
+        xbuf.data.extend_from_slice(&r.x);
+    }
+    xbuf.shape.clear();
+    xbuf.shape.push(n);
+    xbuf.shape.extend(&model.input_shape);
+    model.net.infer_into(xbuf, scratch, out);
+    let g = model.num_classes;
+    let mut row = 0usize;
+    for r in group {
+        let y = ITensor::from_vec(
+            &[r.nsamples, g],
+            out.data[row * g..(row + r.nsamples) * g].to_vec(),
+        );
+        row += r.nsamples;
+        let _ = r.resp.send(Ok(y));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON-lines protocol
+// ---------------------------------------------------------------------------
+
+fn err_json(id: Json, msg: String) -> Json {
+    Json::obj(vec![("id", id), ("error", Json::Str(msg))])
+}
+
+/// Strict i32 vector for wire input: rejects non-integers and values
+/// outside i32 range with an error (jsonio's `i32_vec` truncates with
+/// `as i32` — fine for trusted golden vectors, silently wrong for
+/// untrusted requests).
+fn i32_vec_strict(j: &Json) -> Result<Vec<i32>, String> {
+    j.as_array()
+        .ok_or("not an array")?
+        .iter()
+        .map(|v| {
+            let n = v
+                .as_i64()
+                .ok_or_else(|| "not an integer".to_string())?;
+            i32::try_from(n)
+                .map_err(|_| format!("value {n} does not fit i32"))
+        })
+        .collect()
+}
+
+/// Response for `(n, num_classes)` logits.
+fn response_json(id: Json, model: &str, y: &ITensor) -> Json {
+    let g = y.shape[1];
+    let mut logits = Vec::with_capacity(y.shape[0]);
+    let mut argmax = Vec::with_capacity(y.shape[0]);
+    for row in y.data.chunks(g) {
+        logits.push(Json::Array(
+            row.iter().map(|&v| Json::Int(v as i64)).collect(),
+        ));
+        let mut best = 0usize;
+        for j in 1..g {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        argmax.push(Json::Int(best as i64));
+    }
+    Json::obj(vec![
+        ("id", id),
+        ("model", Json::Str(model.to_string())),
+        ("logits", Json::Array(logits)),
+        ("argmax", Json::Array(argmax)),
+    ])
+}
+
+/// Handle one JSON-line request through the micro-batcher. Every failure
+/// mode is a JSON error response — a malformed line must never take the
+/// server down.
+pub fn handle_line(line: &str, client: &BatchClient) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err_json(Json::Null, format!("bad request: {e}")),
+    };
+    let id = req.get("id").cloned().unwrap_or(Json::Null);
+    let model = match req.get("model") {
+        None => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(_) => {
+            return err_json(id, "'model' must be a string".to_string())
+        }
+    };
+    let input = match req.get("input") {
+        Some(v) => match i32_vec_strict(v) {
+            Ok(x) => x,
+            Err(e) => {
+                return err_json(id, format!("bad 'input': {e}"));
+            }
+        },
+        None => return err_json(id, "missing 'input'".to_string()),
+    };
+    match client.predict(model.as_deref(), input) {
+        Ok((m, y)) => response_json(id, &m.name, &y),
+        Err(e) => err_json(id, e),
+    }
+}
+
+/// Serve JSON lines over stdin/stdout until EOF.
+pub fn serve_stdio(registry: ModelRegistry, cfg: ServeConfig)
+                   -> Result<(), String> {
+    let registry = Arc::new(registry);
+    eprintln!("nitro serve: models [{}], max-batch {}, wait {}us",
+              registry.names().join(", "), cfg.max_batch, cfg.max_wait_us);
+    let mb = MicroBatcher::start(registry, cfg);
+    let client = mb.client();
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    for line in stdin.lock().lines() {
+        let line = line.map_err(|e| format!("stdin: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(&line, &client);
+        let mut out = stdout.lock();
+        out.write_all(resp.dump().as_bytes())
+            .and_then(|_| out.write_all(b"\n"))
+            .and_then(|_| out.flush())
+            .map_err(|e| format!("stdout: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Largest wire line a TCP connection may send: the biggest legitimate
+/// request is `max_request_samples` samples of the widest served model,
+/// ~13 bytes per serialized int, plus envelope slack. Anything longer is
+/// answered with an error and the connection closed **before** the line
+/// is buffered whole — a client streaming an endless non-newline byte
+/// stream must not grow server memory without bound.
+fn max_line_bytes(registry: &ModelRegistry, cfg: &ServeConfig) -> u64 {
+    let widest = registry
+        .models
+        .values()
+        .map(|m| m.sample_size)
+        .max()
+        .unwrap_or(1);
+    (widest as u64) * (cfg.max_request_samples.max(1) as u64) * 13 + 4096
+}
+
+/// Serve JSON lines over TCP: one thread per connection, all feeding the
+/// shared micro-batcher (concurrent clients coalesce into one batch).
+pub fn serve_tcp(registry: ModelRegistry, cfg: ServeConfig, addr: &str)
+                 -> Result<(), String> {
+    let registry = Arc::new(registry);
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| format!("bind {addr}: {e}"))?;
+    eprintln!("nitro serve: listening on {addr}, models [{}]",
+              registry.names().join(", "));
+    let line_cap = max_line_bytes(&registry, &cfg);
+    let mb = MicroBatcher::start(registry, cfg);
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("accept: {e}");
+                continue;
+            }
+        };
+        let client = mb.client();
+        // fallible spawn: exhausting the OS thread limit (e.g. a client
+        // holding thousands of connections open) must drop that
+        // connection, not panic the accept loop and take the server down
+        let spawned = std::thread::Builder::new()
+            .name("nitro-serve-conn".into())
+            .spawn(move || {
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?".into());
+            let mut reader =
+                std::io::BufReader::new(match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("{peer}: clone: {e}");
+                        return;
+                    }
+                });
+            let mut writer = stream;
+            let mut buf = Vec::new();
+            loop {
+                // capped read: at most line_cap + 1 bytes are ever
+                // buffered for one line, newline or not
+                buf.clear();
+                use std::io::Read;
+                let n = match (&mut reader)
+                    .take(line_cap + 1)
+                    .read_until(b'\n', &mut buf)
+                {
+                    Ok(0) => break,
+                    Ok(n) => n,
+                    Err(_) => break,
+                };
+                if n as u64 > line_cap {
+                    // oversized line: answer and drop the connection —
+                    // there is no way to resync to the next request
+                    // without buffering the rest of the flood
+                    let resp = err_json(
+                        Json::Null,
+                        format!("request line exceeds {line_cap} bytes"),
+                    );
+                    let _ = writer.write_all(resp.dump().as_bytes());
+                    let _ = writer.write_all(b"\n");
+                    break;
+                }
+                let line = String::from_utf8_lossy(&buf);
+                let line = line.trim_end_matches(['\n', '\r']);
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let resp = handle_line(line, &client);
+                if writer
+                    .write_all(resp.dump().as_bytes())
+                    .and_then(|_| writer.write_all(b"\n"))
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        });
+        if let Err(e) = spawned {
+            eprintln!("connection dropped: spawn handler thread: {e}");
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// one-shot prediction (`nitro predict`)
+// ---------------------------------------------------------------------------
+
+/// Parse a predict input document: a flat int array, an array of
+/// per-sample arrays, or an object with an `inputs` field holding either.
+fn parse_inputs(j: &Json, sample_size: usize) -> Result<Vec<i32>, String> {
+    if let Some(inner) = j.get("inputs") {
+        return parse_inputs(inner, sample_size);
+    }
+    let arr = j
+        .as_array()
+        .ok_or("input must be an array (flat or one array per sample)")?;
+    match arr.first() {
+        None => Err("input is empty".into()),
+        Some(Json::Array(_)) => {
+            let mut flat = Vec::new();
+            for (i, row) in arr.iter().enumerate() {
+                let r = i32_vec_strict(row)
+                    .map_err(|e| format!("sample {i}: {e}"))?;
+                if r.len() != sample_size {
+                    return Err(format!(
+                        "sample {i}: {} values, expected {sample_size}",
+                        r.len()
+                    ));
+                }
+                flat.extend(r);
+            }
+            Ok(flat)
+        }
+        Some(_) => {
+            let flat = i32_vec_strict(j)?;
+            if flat.is_empty() || flat.len() % sample_size != 0 {
+                return Err(format!(
+                    "flat input length {} is not a positive multiple of \
+                     sample size {sample_size}",
+                    flat.len()
+                ));
+            }
+            Ok(flat)
+        }
+    }
+}
+
+/// One-shot batch scoring: load a checkpoint, score the input document
+/// (`-` = stdin), return the response JSON. Runs inline on the caller —
+/// under `NITRO_WORKERS=1` no thread is ever spawned, the fully
+/// deterministic mode CI compares against multi-worker runs.
+pub fn predict_once(ckpt: &str, input_src: &str) -> Result<Json, String> {
+    let model = ServedModel::load(ckpt)?;
+    let text = if input_src == "-" {
+        let mut s = String::new();
+        std::io::Read::read_to_string(&mut std::io::stdin(), &mut s)
+            .map_err(|e| format!("stdin: {e}"))?;
+        s
+    } else {
+        std::fs::read_to_string(input_src)
+            .map_err(|e| format!("read {input_src}: {e}"))?
+    };
+    let j = Json::parse(&text).map_err(|e| format!("{input_src}: {e}"))?;
+    let flat = parse_inputs(&j, model.sample_size)?;
+    let n = flat.len() / model.sample_size;
+    let mut scratch = InferScratch::new();
+    let mut out = ITensor::empty();
+    model.infer_into(flat, n, &mut scratch, &mut out);
+    Ok(response_json(Json::Null, &model.name, &out))
+}
+
+// ---------------------------------------------------------------------------
+// serve throughput bench (BENCH_serve.json)
+// ---------------------------------------------------------------------------
+
+/// Requests/sec and latency percentiles vs micro-batch size, through the
+/// real micro-batcher, written to a schema-versioned `BENCH_serve.json`.
+/// Also hard-checks the serving identities (fused path vs reference,
+/// checkpoint round-trip) — mismatches are pushed into `failures`, which
+/// `bench-kernels` turns into a non-zero exit.
+pub fn bench_serve(quick: bool, budget_s: f64, out_path: &str,
+                   failures: &mut Vec<String>) -> Result<Json, String> {
+    use crate::nn::zoo;
+    use crate::util::rng::Pcg32;
+
+    let spec = zoo::get("tinycnn").expect("tinycnn preset");
+    let net = Network::new(spec.clone(), 7);
+
+    // serving identity: a round-tripped checkpoint must serve logits
+    // bit-identical to the in-memory network on both forward paths
+    let dir = std::env::temp_dir().join("nitro_serve_bench");
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+    let ckpt = dir.join(format!("tinycnn-{}.ckpt", std::process::id()));
+    let ckpt_s = ckpt.to_str().expect("utf8 temp path");
+    checkpoint::save(&net, ckpt_s)?;
+    // the model is in memory once loaded; remove the temp file before
+    // any fallible step so an early `?` return cannot leak it
+    let loaded = ServedModel::load(ckpt_s);
+    let _ = std::fs::remove_file(&ckpt);
+    let model = loaded?;
+    let mut rng = Pcg32::new(17);
+    let probe_n = 5usize;
+    let flat: Vec<i32> = (0..probe_n * model.sample_size)
+        .map(|_| rng.range_i32(-127, 127))
+        .collect();
+    let x = ITensor::from_vec(&model.batch_shape(probe_n), flat.clone());
+    let reference = net.infer(&x);
+    let mut scratch = InferScratch::new();
+    let mut out = ITensor::empty();
+    model.infer_into(flat, probe_n, &mut scratch, &mut out);
+    if out != reference {
+        failures.push("serve: ckpt-roundtrip fused infer".to_string());
+    }
+    if model.infer_reference(&x) != reference {
+        failures.push("serve: ckpt-roundtrip reference infer".to_string());
+    }
+
+    let registry = Arc::new({
+        let mut r = ModelRegistry::new();
+        r.models.insert(model.name.clone(), Arc::new(model));
+        r
+    });
+    let sample_size = registry.resolve(None)?.sample_size;
+    let batch_sizes: &[usize] =
+        if quick { &[1, 2, 8] } else { &[1, 4, 16, 64] };
+    let mut rows = Vec::new();
+    println!("serve_throughput (tinycnn, through the micro-batcher):");
+    for &bs in batch_sizes {
+        let mb = MicroBatcher::start(
+            registry.clone(),
+            ServeConfig {
+                max_batch: bs.max(1),
+                max_wait_us: 0,
+                ..Default::default()
+            },
+        );
+        let client = mb.client();
+        let req: Vec<i32> = (0..bs * sample_size)
+            .map(|_| rng.range_i32(-127, 127))
+            .collect();
+        // warm the scratch buffers so steady state is measured
+        client.predict(None, req.clone())?;
+        let budget = Duration::from_secs_f64(budget_s.max(1e-3));
+        let t0 = Instant::now();
+        let mut lat_ns: Vec<u64> = Vec::new();
+        while t0.elapsed() < budget && lat_ns.len() < 10_000 {
+            let t = Instant::now();
+            let (_, y) = client.predict(None, req.clone())?;
+            lat_ns.push(t.elapsed().as_nanos() as u64);
+            std::hint::black_box(y);
+        }
+        let total_s = t0.elapsed().as_secs_f64();
+        lat_ns.sort_unstable();
+        let q = |p: f64| {
+            lat_ns[(p * (lat_ns.len() - 1) as f64) as usize] as f64
+        };
+        let rps = lat_ns.len() as f64 / total_s.max(1e-9);
+        println!(
+            "  batch {bs:>3}: {:>9.1} req/s {:>10.1} samples/s  \
+             p50 {:>9.0} ns  p99 {:>9.0} ns  ({} reqs)",
+            rps,
+            rps * bs as f64,
+            q(0.5),
+            q(0.99),
+            lat_ns.len()
+        );
+        rows.push(Json::obj(vec![
+            ("batch", Json::Int(bs as i64)),
+            ("requests", Json::Int(lat_ns.len() as i64)),
+            ("requests_per_sec", Json::Float(rps)),
+            ("samples_per_sec", Json::Float(rps * bs as f64)),
+            ("p50_ns", Json::Float(q(0.5))),
+            ("p99_ns", Json::Float(q(0.99))),
+            ("mean_ns", Json::Float(
+                lat_ns.iter().sum::<u64>() as f64 / lat_ns.len() as f64,
+            )),
+        ]));
+    }
+    let record = Json::obj(vec![
+        ("schema_version", Json::Int(SCHEMA_VERSION)),
+        ("experiment", Json::Str("serve".to_string())),
+        ("preset", Json::Str("tinycnn".to_string())),
+        ("workers",
+         Json::Int(crate::util::par::default_workers() as i64)),
+        ("quick", Json::Bool(quick)),
+        ("budget_s", Json::Float(budget_s)),
+        ("serve_throughput", Json::Array(rows)),
+        ("bitexact",
+         Json::Bool(!failures.iter().any(|f| f.starts_with("serve:")))),
+    ]);
+    std::fs::write(out_path, record.pretty())
+        .map_err(|e| format!("write {out_path}: {e}"))?;
+    println!("-> {out_path}");
+    Ok(record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+    use crate::util::rng::Pcg32;
+
+    fn saved_model(preset: &str, seed: u64, tag: &str) -> (String, Network) {
+        let dir = std::env::temp_dir().join("nitro_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{preset}-{tag}-{}.ckpt",
+                                    std::process::id()));
+        let net = Network::new(zoo::get(preset).unwrap(), seed);
+        checkpoint::save(&net, path.to_str().unwrap()).unwrap();
+        (path.to_str().unwrap().to_string(), net)
+    }
+
+    fn rand_samples(model: &ServedModel, n: usize, rng: &mut Pcg32)
+                    -> Vec<i32> {
+        (0..n * model.sample_size).map(|_| rng.range_i32(-127, 127))
+            .collect()
+    }
+
+    #[test]
+    fn registry_loads_by_recorded_spec_and_resolves() {
+        let (p1, _) = saved_model("tinycnn", 3, "reg");
+        let (p2, _) = saved_model("mlp1-mini", 4, "reg");
+        let reg =
+            ModelRegistry::from_paths(&format!("{p1}, {p2}")).unwrap();
+        assert_eq!(reg.names(), vec!["mlp1-mini", "tinycnn"]);
+        assert_eq!(reg.get("tinycnn").unwrap().input_shape, vec![1, 8, 8]);
+        // explicit name resolves; omitted name is ambiguous with 2 models
+        assert!(reg.resolve(Some("mlp1-mini")).is_ok());
+        let err = reg.resolve(None).unwrap_err();
+        assert!(err.contains("tinycnn"), "{err}");
+        let err = reg.resolve(Some("nope")).unwrap_err();
+        assert!(err.contains("unknown model"), "{err}");
+        // duplicate spec rejected
+        let (p3, _) = saved_model("tinycnn", 9, "dup");
+        let err = ModelRegistry::from_paths(&format!("{p1},{p3}"))
+            .unwrap_err();
+        assert!(err.contains("already loaded"), "{err}");
+        // corrupt checkpoint is an Err, not a panic
+        let dir = std::env::temp_dir().join("nitro_serve_test");
+        let bad = dir.join("bad.ckpt");
+        std::fs::write(&bad, b"NITRO1\n\xff\xff\xff\xff").unwrap();
+        assert!(ModelRegistry::from_paths(bad.to_str().unwrap()).is_err());
+    }
+
+    #[test]
+    fn micro_batched_logits_equal_reference_any_composition() {
+        // the serving determinism contract: logits are bit-identical to
+        // Network::infer regardless of how requests coalesce into batches
+        let (path, net) = saved_model("tinycnn", 5, "comp");
+        let reg =
+            Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        let mut rng = Pcg32::new(31);
+        let flat = rand_samples(&model, 7, &mut rng);
+        let x = ITensor::from_vec(&model.batch_shape(7), flat.clone());
+        let want = net.infer(&x);
+        let g = model.num_classes;
+        for (max_batch, wait) in [(1usize, 0u64), (3, 0), (64, 100)] {
+            let mb = MicroBatcher::start(
+                reg.clone(),
+                ServeConfig { max_batch, max_wait_us: wait,
+                              ..Default::default() },
+            );
+            let client = mb.client();
+            // one request per sample
+            for i in 0..7 {
+                let ss = model.sample_size;
+                let (_, y) = client
+                    .predict(None, flat[i * ss..(i + 1) * ss].to_vec())
+                    .unwrap();
+                assert_eq!(y.shape, vec![1, g]);
+                assert_eq!(y.data, want.data[i * g..(i + 1) * g],
+                           "sample {i} max_batch {max_batch}");
+            }
+            // one multi-sample request
+            let (_, y) = client.predict(None, flat.clone()).unwrap();
+            assert_eq!(y.data, want.data, "max_batch {max_batch}");
+        }
+    }
+
+    #[test]
+    fn concurrent_clients_coalesce_and_stay_bitexact() {
+        let (path, net) = saved_model("tinycnn", 8, "conc");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        let mut rng = Pcg32::new(77);
+        let nreq = 12usize;
+        let flat = rand_samples(&model, nreq, &mut rng);
+        let x = ITensor::from_vec(&model.batch_shape(nreq), flat.clone());
+        let want = net.infer(&x);
+        let g = model.num_classes;
+        let mb = MicroBatcher::start(
+            reg.clone(),
+            ServeConfig { max_batch: 8, max_wait_us: 2000,
+                          ..Default::default() },
+        );
+        let ss = model.sample_size;
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for i in 0..nreq {
+                let client = mb.client();
+                let sample = flat[i * ss..(i + 1) * ss].to_vec();
+                joins.push(s.spawn(move || {
+                    client.predict(None, sample).unwrap().1
+                }));
+            }
+            for (i, j) in joins.into_iter().enumerate() {
+                let y = j.join().unwrap();
+                assert_eq!(y.data, want.data[i * g..(i + 1) * g],
+                           "concurrent sample {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn handle_line_protocol_and_errors() {
+        let (path, net) = saved_model("mlp1-mini", 2, "proto");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        let mb = MicroBatcher::start(reg, ServeConfig::default());
+        let client = mb.client();
+        let mut rng = Pcg32::new(3);
+        let flat = rand_samples(&model, 1, &mut rng);
+        let input = Json::Array(
+            flat.iter().map(|&v| Json::Int(v as i64)).collect(),
+        );
+        let line = Json::obj(vec![
+            ("id", Json::Int(7)),
+            ("input", input),
+        ])
+        .dump();
+        let resp = handle_line(&line, &client);
+        assert_eq!(resp.req("id").unwrap().as_i64(), Some(7));
+        assert_eq!(resp.req("model").unwrap().as_str(), Some("mlp1-mini"));
+        let x = ITensor::from_vec(&model.batch_shape(1), flat);
+        let want = net.infer(&x);
+        let logits =
+            resp.req("logits").unwrap().as_array().unwrap()[0].i32_vec()
+                .unwrap();
+        assert_eq!(logits, want.data);
+        let am = resp.req("argmax").unwrap().as_array().unwrap()[0]
+            .as_i64()
+            .unwrap();
+        // first-max-wins, matching the server's argmax
+        let mut best = 0usize;
+        for j in 1..want.data.len() {
+            if want.data[j] > want.data[best] {
+                best = j;
+            }
+        }
+        assert_eq!(am, best as i64);
+
+        // error paths: bad JSON, missing input, wrong sample size,
+        // unknown model — all JSON error responses, never a panic
+        // a pathologically nested line must error, not blow the stack
+        let deep = "[".repeat(100_000);
+        for bad in [
+            "{not json",
+            r#"{"id": 1}"#,
+            r#"{"id": 2, "input": [1, 2, 3]}"#,
+            r#"{"id": 3, "model": "nope", "input": [1]}"#,
+            r#"{"id": 4, "input": "xyz"}"#,
+            // out-of-i32-range values must error, not wrap mod 2^32
+            r#"{"id": 5, "input": [2147483648]}"#,
+            // a non-string model must error, not silently fall back
+            r#"{"id": 6, "model": 42, "input": [1]}"#,
+            deep.as_str(),
+        ] {
+            let resp = handle_line(bad, &client);
+            assert!(resp.get("error").is_some(), "no error for {bad}");
+        }
+    }
+
+    #[test]
+    fn tcp_line_cap_scales_with_widest_model() {
+        let (path, _) = saved_model("tinycnn", 1, "linecap");
+        let reg = ModelRegistry::from_paths(&path).unwrap();
+        let cfg = ServeConfig::default();
+        // tinycnn sample = 1*8*8 = 64 ints
+        assert_eq!(max_line_bytes(&reg, &cfg),
+                   64 * cfg.max_request_samples as u64 * 13 + 4096);
+    }
+
+    #[test]
+    fn oversized_requests_rejected_not_executed() {
+        let (path, _) = saved_model("mlp1-mini", 6, "cap");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        let mb = MicroBatcher::start(
+            reg.clone(),
+            ServeConfig {
+                max_batch: 4,
+                max_wait_us: 0,
+                max_request_samples: 2,
+            },
+        );
+        let client = mb.client();
+        let mut rng = Pcg32::new(4);
+        let ok = rand_samples(&model, 2, &mut rng);
+        assert!(client.predict(None, ok).is_ok());
+        let too_big = rand_samples(&model, 3, &mut rng);
+        let err = client.predict(None, too_big).unwrap_err();
+        assert!(err.contains("per-request"), "{err}");
+    }
+
+    #[test]
+    fn parse_inputs_forms() {
+        let flat = Json::parse("[1, 2, 3, 4]").unwrap();
+        assert_eq!(parse_inputs(&flat, 2).unwrap(), vec![1, 2, 3, 4]);
+        let nested = Json::parse("[[1, 2], [3, 4]]").unwrap();
+        assert_eq!(parse_inputs(&nested, 2).unwrap(), vec![1, 2, 3, 4]);
+        let wrapped = Json::parse(r#"{"inputs": [[1, 2]]}"#).unwrap();
+        assert_eq!(parse_inputs(&wrapped, 2).unwrap(), vec![1, 2]);
+        assert!(parse_inputs(&flat, 3).is_err(), "not a multiple");
+        assert!(parse_inputs(&Json::parse("[]").unwrap(), 2).is_err());
+        assert!(parse_inputs(&Json::parse("[[1]]").unwrap(), 2).is_err());
+        assert!(parse_inputs(&Json::parse("\"x\"").unwrap(), 2).is_err());
+    }
+
+    #[test]
+    fn bench_serve_quick_emits_record_and_passes_identity() {
+        let dir = std::env::temp_dir().join("nitro_serve_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_serve.json");
+        let mut failures = Vec::new();
+        let rec = bench_serve(true, 0.01, out.to_str().unwrap(),
+                              &mut failures)
+            .unwrap();
+        assert!(failures.is_empty(), "{failures:?}");
+        assert_eq!(rec.req("schema_version").unwrap().as_i64(),
+                   Some(SCHEMA_VERSION));
+        assert_eq!(rec.req("bitexact").unwrap().as_bool(), Some(true));
+        let rows =
+            rec.req("serve_throughput").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 3, "quick batch sizes");
+        for r in rows {
+            assert!(r.req("requests_per_sec").unwrap().as_f64().unwrap()
+                    > 0.0);
+            assert!(r.req("p99_ns").unwrap().as_f64().unwrap()
+                    >= r.req("p50_ns").unwrap().as_f64().unwrap());
+        }
+        let reread = Json::parse_file(out.to_str().unwrap()).unwrap();
+        assert_eq!(reread.req("experiment").unwrap().as_str(),
+                   Some("serve"));
+    }
+}

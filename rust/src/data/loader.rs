@@ -16,27 +16,41 @@ pub fn load(name: &str, dir: &str, n_train: usize, n_test: usize,
             let tr_lbl = format!("{dir}/{prefix}train-labels-idx1-ubyte");
             let te_img = format!("{dir}/{prefix}t10k-images-idx3-ubyte");
             let te_lbl = format!("{dir}/{prefix}t10k-labels-idx1-ubyte");
-            if std::path::Path::new(&tr_img).exists() {
-                let tr = load_idx_pair(name, &tr_img, &tr_lbl)?;
-                let te = load_idx_pair(name, &te_img, &te_lbl)?;
-                return Ok((tr, te));
+            let files = [&tr_img, &tr_lbl, &te_img, &te_lbl];
+            match probe_file_set(name, dir, &files)? {
+                true => {
+                    let tr = load_idx_pair(name, &tr_img, &tr_lbl)?;
+                    let te = load_idx_pair(name, &te_img, &te_lbl)?;
+                    Ok((tr, te))
+                }
+                false => {
+                    let syn = if name == "mnist" {
+                        "mnist-like"
+                    } else {
+                        "fashion-like"
+                    };
+                    synth_pair(syn, n_train, n_test, seed)
+                }
             }
-            let syn = if name == "mnist" { "mnist-like" } else { "fashion-like" };
-            synth_pair(syn, n_train, n_test, seed)
         }
         "cifar10" => {
-            let p = format!("{dir}/data_batch_1.bin");
-            if std::path::Path::new(&p).exists() {
-                let mut tr = load_cifar_bin(&format!("{dir}/data_batch_1.bin"))?;
-                for i in 2..=5 {
-                    let more = load_cifar_bin(&format!("{dir}/data_batch_{i}.bin"))?;
-                    tr.images.extend(more.images);
-                    tr.labels.extend(more.labels);
+            let mut files: Vec<String> = (1..=5)
+                .map(|i| format!("{dir}/data_batch_{i}.bin"))
+                .collect();
+            files.push(format!("{dir}/test_batch.bin"));
+            match probe_file_set(name, dir, &files)? {
+                true => {
+                    let mut tr = load_cifar_bin(&files[0])?;
+                    for f in &files[1..5] {
+                        let more = load_cifar_bin(f)?;
+                        tr.images.extend(more.images);
+                        tr.labels.extend(more.labels);
+                    }
+                    let te = load_cifar_bin(&files[5])?;
+                    Ok((tr, te))
                 }
-                let te = load_cifar_bin(&format!("{dir}/test_batch.bin"))?;
-                return Ok((tr, te));
+                false => synth_pair("cifar-like", n_train, n_test, seed),
             }
-            synth_pair("cifar-like", n_train, n_test, seed)
         }
         other => {
             // direct synthetic name
@@ -46,6 +60,32 @@ pub fn load(name: &str, dir: &str, n_train: usize, n_test: usize,
                 Err(format!("unknown dataset '{other}'"))
             }
         }
+    }
+}
+
+/// Probe a dataset's complete file set up front. `Ok(true)` = every file
+/// present (commit to the real-file path), `Ok(false)` = none present
+/// (fall back to synthetic), `Err` naming the missing file(s) when the
+/// directory is only partially populated — a partial download must fail
+/// loudly here, not as a confusing error deep inside a reader.
+fn probe_file_set<S: AsRef<str>>(name: &str, dir: &str, files: &[S])
+                                 -> Result<bool, String> {
+    let missing: Vec<&str> = files
+        .iter()
+        .map(|f| f.as_ref())
+        .filter(|f| !std::path::Path::new(f).exists())
+        .collect();
+    if missing.is_empty() {
+        Ok(true)
+    } else if missing.len() == files.len() {
+        Ok(false)
+    } else {
+        Err(format!(
+            "{name}: data dir '{dir}' is incomplete — missing {}; \
+             restore the full file set or remove the directory to use the \
+             synthetic fallback",
+            missing.join(", ")
+        ))
     }
 }
 
@@ -190,6 +230,63 @@ mod tests {
         assert_eq!(tr.len(), 60);
         assert_eq!(te.len(), 20);
         assert_eq!(tr.shape, vec![1, 28, 28]);
+    }
+
+    #[test]
+    fn partial_mnist_dir_errors_naming_missing_files() {
+        // only the train-images file present: a partial download must be
+        // a loud up-front error, not a synthetic fallback or a late read
+        // failure on the labels file
+        let dir = std::env::temp_dir().join("nitro_partial_mnist");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_idx3(&dir.join("train-images-idx3-ubyte"), 4, 28, 28);
+        let err =
+            load("mnist", dir.to_str().unwrap(), 10, 5, 1).unwrap_err();
+        assert!(err.contains("incomplete"), "{err}");
+        assert!(err.contains("train-labels-idx1-ubyte"), "{err}");
+        assert!(err.contains("t10k-images-idx3-ubyte"), "{err}");
+        assert!(!err.contains("train-images-idx3-ubyte,"),
+                "present file listed as missing: {err}");
+    }
+
+    #[test]
+    fn partial_cifar_dir_errors_naming_missing_files() {
+        let dir = std::env::temp_dir().join("nitro_partial_cifar");
+        std::fs::create_dir_all(&dir).unwrap();
+        // two of six files present
+        for f in ["data_batch_1.bin", "data_batch_2.bin"] {
+            let mut buf = vec![0u8];
+            buf.extend(std::iter::repeat(7u8).take(3072));
+            std::fs::write(dir.join(f), &buf).unwrap();
+        }
+        let err =
+            load("cifar10", dir.to_str().unwrap(), 10, 5, 1).unwrap_err();
+        assert!(err.contains("incomplete"), "{err}");
+        for f in ["data_batch_3.bin", "data_batch_4.bin",
+                  "data_batch_5.bin", "test_batch.bin"] {
+            assert!(err.contains(f), "missing {f} in: {err}");
+        }
+    }
+
+    #[test]
+    fn complete_cifar_dir_loads_all_batches() {
+        let dir = std::env::temp_dir().join("nitro_full_cifar");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (i, f) in ["data_batch_1.bin", "data_batch_2.bin",
+                       "data_batch_3.bin", "data_batch_4.bin",
+                       "data_batch_5.bin", "test_batch.bin"]
+            .iter()
+            .enumerate()
+        {
+            let mut buf = vec![(i % 10) as u8];
+            buf.extend(std::iter::repeat(i as u8).take(3072));
+            std::fs::write(dir.join(f), &buf).unwrap();
+        }
+        let (tr, te) = load("cifar10", dir.to_str().unwrap(), 0, 0, 1)
+            .unwrap();
+        assert_eq!(tr.len(), 5, "one record per train batch file");
+        assert_eq!(te.len(), 1);
+        assert_eq!(tr.labels, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train       train a preset on a dataset (native or pjrt engine)
 //!   eval        evaluate a checkpoint
+//!   serve       serve NITRO1 checkpoints (JSON lines on stdio or TCP)
+//!   predict     one-shot batch scoring of a checkpoint
 //!   experiment  regenerate a paper table/figure (table1..fig3|all)
 //!   run-spec    execute a declarative experiment spec (experiments/*.json)
 //!   zoo         list model presets and parameter counts
@@ -12,6 +14,7 @@ use nitro::coordinator::engine::{Engine, PjrtEngine};
 use nitro::coordinator::experiments::{self, ExpCtx, Scale};
 use nitro::coordinator::kernelbench;
 use nitro::coordinator::runner::{self, RunnerOpts};
+use nitro::coordinator::serve::{self, ModelRegistry, ServeConfig};
 use nitro::coordinator::spec::ExperimentSpec;
 use nitro::data::loader;
 use nitro::nn::{zoo, Hyper, Network};
@@ -24,6 +27,8 @@ fn main() {
     let code = match argv.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&argv[1..]),
         Some("eval") => cmd_eval(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("predict") => cmd_predict(&argv[1..]),
         Some("experiment") => cmd_experiment(&argv[1..]),
         Some("run-spec") => cmd_run_spec(&argv[1..]),
         Some("bench-kernels") => cmd_bench_kernels(&argv[1..]),
@@ -48,13 +53,17 @@ Usage: nitro <subcommand> [options]
 Subcommands:
   train       train a preset (see `nitro train --help`)
   eval        evaluate a checkpoint on a dataset
+  serve       serve NITRO1 checkpoints: micro-batched integer-only
+              inference over JSON lines (stdin/stdout or --listen TCP)
+  predict     one-shot batch scoring: `nitro predict <ckpt> <input.json>`
   experiment  regenerate a paper table/figure: table1 table2 table8
               table9 fig2-left fig2-right fig3 all
   run-spec    execute a declarative experiment spec, e.g.
               `nitro run-spec experiments/smoke.json`
   bench-kernels
               time the integer kernel hot paths (pool vs per-call spawn,
-              workspace reuse) and emit BENCH_kernels.json
+              workspace reuse) and emit BENCH_kernels.json +
+              BENCH_serve.json
   zoo         list model presets
   runtime     PJRT smoke check over artifacts/<preset>
 ";
@@ -225,6 +234,76 @@ fn cmd_eval(argv: &[String]) -> i32 {
     }
 }
 
+fn cmd_serve(argv: &[String]) -> i32 {
+    let cmd = Command::new(
+        "nitro serve",
+        "serve NITRO1 checkpoints with micro-batched integer inference",
+    )
+    .opt("listen", "",
+         "TCP address to listen on (e.g. 127.0.0.1:7878); \
+          default: JSON lines on stdin/stdout")
+    .opt("max-batch", "64", "micro-batch sample target")
+    .opt("max-wait-us", "200",
+         "coalescing window after the first queued request, microseconds")
+    .opt("max-request", "4096",
+         "per-request sample limit (larger requests are rejected)")
+    .positional("checkpoints",
+                "comma-separated NITRO1 checkpoint path(s)");
+    let p = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let run = || -> Result<(), String> {
+        let paths =
+            p.positionals.first().ok_or("missing checkpoint path(s)")?;
+        let registry = ModelRegistry::from_paths(paths)?;
+        let cfg = ServeConfig {
+            max_batch: p.get_usize("max-batch")?.max(1),
+            max_wait_us: p.get_u64("max-wait-us")?,
+            max_request_samples: p.get_usize("max-request")?.max(1),
+        };
+        match p.get("listen") {
+            "" => serve::serve_stdio(registry, cfg),
+            addr => serve::serve_tcp(registry, cfg, addr),
+        }
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_predict(argv: &[String]) -> i32 {
+    let cmd = Command::new(
+        "nitro predict",
+        "one-shot batch scoring of a NITRO1 checkpoint",
+    )
+    .opt("out", "", "write the response JSON here instead of stdout")
+    .positional("checkpoint", "path to a NITRO1 checkpoint")
+    .positional("input",
+                "JSON input: flat int array, array of per-sample arrays, \
+                 or {\"inputs\": ...}; '-' reads stdin");
+    let p = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let run = || -> Result<(), String> {
+        let ckpt = p.positionals.first().ok_or("missing checkpoint path")?;
+        let input = p.positionals.get(1).ok_or("missing input path")?;
+        let resp = serve::predict_once(ckpt, input)?;
+        match p.get("out") {
+            "" => println!("{}", resp.pretty().trim_end()),
+            path => std::fs::write(path, resp.pretty())
+                .map_err(|e| format!("write {path}: {e}"))?,
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
 fn cmd_experiment(argv: &[String]) -> i32 {
     let cmd = Command::new("nitro experiment",
                            "regenerate a paper table/figure")
@@ -309,6 +388,9 @@ fn cmd_bench_kernels(argv: &[String]) -> i32 {
         .opt("out", "BENCH_kernels.json", "output JSON path")
         .opt("baseline", "",
              "baseline BENCH_kernels.json for an advisory ±30% comparison")
+        .opt("serve-out", "BENCH_serve.json",
+             "output path for the serve-throughput record \
+              ('' skips the serve section)")
         .flag("write-baseline",
               "also write the record to experiments/bench_baseline.json \
                (commit it to seed the CI advisory gate)")
@@ -328,6 +410,7 @@ fn cmd_bench_kernels(argv: &[String]) -> i32 {
             },
             write_baseline: p.has("write-baseline"),
             quick: p.has("quick"),
+            serve_out: p.get("serve-out").to_string(),
         };
         kernelbench::run(&opts).map(|_| ())
     };

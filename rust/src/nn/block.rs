@@ -8,10 +8,11 @@
 use crate::nn::spec::{BlockSpec, HeadSpec, NetworkSpec};
 use crate::optim::integer_sgd;
 use crate::tensor::{
-    conv2d_i64, conv2d_scale_ws, conv2d_weight_grad_ws, matmul_a_bt_i64,
-    matmul_at_b_i64, matmul_i64, matmul_scale_ws, maxpool2d, maxpool2d_bwd,
-    nitro_relu, nitro_relu_bwd, nitro_scale, one_hot32, rss_loss_grad,
-    scale_factor_linear, ITensor, KernelWorkspace, LTensor,
+    conv2d_i64, conv2d_scale_into, conv2d_scale_ws, conv2d_weight_grad_ws,
+    matmul_a_bt_i64, matmul_at_b_i64, matmul_i64, matmul_scale_into,
+    matmul_scale_ws, maxpool2d, maxpool2d_bwd, maxpool2d_into, nitro_relu,
+    nitro_relu_bwd, nitro_relu_inplace, nitro_scale, one_hot32,
+    rss_loss_grad, scale_factor_linear, ITensor, KernelWorkspace, LTensor,
 };
 use crate::util::rng::Pcg32;
 
@@ -134,6 +135,32 @@ impl Block {
                 let z = matmul_i64(a, &self.wf);
                 let zs = nitro_scale(&z, l.sf());
                 nitro_relu(&zs, l.alpha_inv)
+            }
+        }
+    }
+
+    /// Grad-free serving forward into caller-owned buffers: the fused
+    /// contract-and-scale kernels run on `ws`, the ReLU is applied in
+    /// place, and no backward cache, dropout mask or i64 pre-activation
+    /// tensor is materialized. `mid` is block-internal scratch (pre-pool
+    /// activation); the block output lands in `out`. Bit-identical to
+    /// [`Self::forward`].
+    pub fn infer_into(&self, a: &ITensor, ws: &mut KernelWorkspace,
+                      mid: &mut ITensor, out: &mut ITensor) {
+        match &self.spec {
+            BlockSpec::Conv(c) => {
+                if c.pool {
+                    conv2d_scale_into(a, &self.wf, c.padding, c.sf(), ws, mid);
+                    nitro_relu_inplace(mid, c.alpha_inv);
+                    maxpool2d_into(mid, 2, 2, out);
+                } else {
+                    conv2d_scale_into(a, &self.wf, c.padding, c.sf(), ws, out);
+                    nitro_relu_inplace(out, c.alpha_inv);
+                }
+            }
+            BlockSpec::Linear(l) => {
+                matmul_scale_into(a, &self.wf, l.sf(), ws, out);
+                nitro_relu_inplace(out, l.alpha_inv);
             }
         }
     }
@@ -369,6 +396,13 @@ impl Head {
         nitro_scale(&z, self.spec.sf())
     }
 
+    /// Grad-free serving forward into a caller buffer (see
+    /// [`Block::infer_into`]). Bit-identical to [`Self::forward`].
+    pub fn infer_into(&self, a: &ITensor, ws: &mut KernelWorkspace,
+                      out: &mut ITensor) {
+        matmul_scale_into(a, &self.wo, self.spec.sf(), ws, out);
+    }
+
     /// Head step: receives the global loss gradient directly (learning-rate
     /// role — no amplification factor). `a` may be any shape with batch
     /// leading — the matmuls read it as a logical (B, F) matrix.
@@ -396,6 +430,26 @@ impl Head {
     pub fn restore(&mut self, from: Head) {
         self.wo = from.wo;
         self.ws = from.ws;
+    }
+}
+
+/// Long-lived scratch for the grad-free serving forward
+/// ([`Network::infer_into`]): one kernel workspace plus activation
+/// ping/pong buffers and block-internal scratch. All buffers grow to a
+/// high-water mark and are then reused, so steady-state serving performs
+/// no forward-path allocation. One scratch serves any number of models
+/// and batch shapes (buffers are shape-agnostic).
+#[derive(Default)]
+pub struct InferScratch {
+    ws: KernelWorkspace,
+    ping: ITensor,
+    pong: ITensor,
+    mid: ITensor,
+}
+
+impl InferScratch {
+    pub fn new() -> Self {
+        Self::default()
     }
 }
 
@@ -447,6 +501,26 @@ impl Network {
             a = Some(blk.forward(a_in));
         }
         self.head.forward(a.as_ref().unwrap_or(x))
+    }
+
+    /// Grad-free fused inference into a caller buffer — the serving hot
+    /// path. Threads one [`InferScratch`] through every block (fused
+    /// contract+scale kernels, in-place ReLU, argmax-free pooling) so no
+    /// backward/optimizer buffer is ever touched and, with long-lived
+    /// `scratch`/`out`, the steady state allocates nothing on the forward
+    /// path. Bit-identical to [`Self::infer`] for every input, batch
+    /// composition and worker count.
+    pub fn infer_into(&self, x: &ITensor, scratch: &mut InferScratch,
+                      out: &mut ITensor) {
+        let InferScratch { ws, ping, pong, mid } = scratch;
+        let (mut cur, mut next) = (ping, pong);
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let a_in: &ITensor = if l == 0 { x } else { cur };
+            blk.infer_into(a_in, ws, mid, next);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        let a_in: &ITensor = if self.blocks.is_empty() { x } else { cur };
+        self.head.infer_into(a_in, ws, out);
     }
 
     /// One training iteration, sequential block order (reference mode).
@@ -631,6 +705,49 @@ mod tests {
             // NITRO-ReLU output range: [-127-mu, 127-mu]
             assert!(lo >= -300 && hi <= 300, "({lo},{hi})");
             assert!(a.bitwidth() <= 9);
+        }
+    }
+
+    #[test]
+    fn infer_into_matches_infer_bitexact() {
+        // the serving fast path must equal the reference inference forward
+        // byte for byte, across presets (conv with/without pool, linear),
+        // batch sizes, and one reused scratch across everything
+        let mut scratch = InferScratch::new();
+        let mut out = ITensor::empty();
+        let mut rng = Pcg32::new(3);
+        for preset in ["tinycnn", "mlp1-mini"] {
+            let spec = zoo::get(preset).unwrap();
+            let net = Network::new(spec.clone(), 21);
+            for b in [1usize, 3, 8] {
+                let (x, _) = toy_batch(&mut rng, &spec, b);
+                let want = net.infer(&x);
+                net.infer_into(&x, &mut scratch, &mut out);
+                assert_eq!(out, want, "{preset} b{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn infer_batch_composition_invariant() {
+        // per-sample logits must not depend on which other samples share
+        // the batch — the micro-batching determinism contract
+        let spec = zoo::get("tinycnn").unwrap();
+        let net = Network::new(spec.clone(), 5);
+        let mut rng = Pcg32::new(9);
+        let (x, _) = toy_batch(&mut rng, &spec, 6);
+        let full = net.infer(&x);
+        let ss: usize = spec.input_shape.iter().product();
+        let g = spec.num_classes;
+        let mut scratch = InferScratch::new();
+        let mut out = ITensor::empty();
+        for i in 0..6 {
+            let mut shape = vec![1];
+            shape.extend(&spec.input_shape);
+            let xi = ITensor::from_vec(&shape,
+                                       x.data[i * ss..(i + 1) * ss].to_vec());
+            net.infer_into(&xi, &mut scratch, &mut out);
+            assert_eq!(out.data, full.data[i * g..(i + 1) * g], "sample {i}");
         }
     }
 

@@ -200,6 +200,16 @@ pub fn matmul_i64(a: &ITensor, b: &ITensor) -> LTensor {
 /// (see [`matmul_i64`]).
 pub fn matmul_scale_ws(a: &ITensor, b: &ITensor, sf: i64,
                        ws: &mut KernelWorkspace) -> ITensor {
+    let mut out = ITensor::empty();
+    matmul_scale_into(a, b, sf, ws, &mut out);
+    out
+}
+
+/// [`matmul_scale_ws`] into a caller-owned output tensor, reusing its
+/// allocation — the grad-free serving forward path: with a long-lived
+/// `out`, the steady state allocates nothing.
+pub fn matmul_scale_into(a: &ITensor, b: &ITensor, sf: i64,
+                         ws: &mut KernelWorkspace, out: &mut ITensor) {
     let (m, k) = a.batch_feat();
     let (kb, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, kb, "matmul inner dims {k} vs {kb}");
@@ -208,10 +218,10 @@ pub fn matmul_scale_ws(a: &ITensor, b: &ITensor, sf: i64,
     accbuf.fill(0);
     matmul_i64_into_buf(&a.data, &b.data, m, k, n, accbuf,
                         par::current_workers(), bt);
-    Tensor {
-        shape: vec![m, n],
-        data: accbuf.iter().map(|&v| div_floor(v, sf) as i32).collect(),
-    }
+    out.shape.clear();
+    out.shape.extend_from_slice(&[m, n]);
+    out.data.clear();
+    out.data.extend(accbuf.iter().map(|&v| div_floor(v, sf) as i32));
 }
 
 /// Core kernel **accumulating** into a caller buffer (callers zero it or
@@ -444,6 +454,15 @@ pub fn conv2d_i64_ws(x: &ITensor, w: &ITensor, padding: usize,
 /// im2col patches of `x` stay cached in `ws` for the weight-grad pass.
 pub fn conv2d_scale_ws(x: &ITensor, w: &ITensor, padding: usize, sf: i64,
                        ws: &mut KernelWorkspace) -> ITensor {
+    let mut out = ITensor::empty();
+    conv2d_scale_into(x, w, padding, sf, ws, &mut out);
+    out
+}
+
+/// [`conv2d_scale_ws`] into a caller-owned output tensor, reusing its
+/// allocation (serving forward path).
+pub fn conv2d_scale_into(x: &ITensor, w: &ITensor, padding: usize, sf: i64,
+                         ws: &mut KernelWorkspace, out: &mut ITensor) {
     let (b, c, h, wd) = shape4(x);
     let (o, cw, k, _) = shape4(w);
     assert_eq!(c, cw, "conv channel mismatch");
@@ -454,10 +473,10 @@ pub fn conv2d_scale_ws(x: &ITensor, w: &ITensor, padding: usize, sf: i64,
     let KernelWorkspace { patches, acc, .. } = ws;
     let accbuf = grown(acc, b * o * p);
     conv_contract(&patches[..b * p * ckk], &w.data, o, p, ckk, accbuf);
-    Tensor {
-        shape: vec![b, o, ho, wo],
-        data: accbuf.iter().map(|&v| div_floor(v, sf) as i32).collect(),
-    }
+    out.shape.clear();
+    out.shape.extend_from_slice(&[b, o, ho, wo]);
+    out.data.clear();
+    out.data.extend(accbuf.iter().map(|&v| div_floor(v, sf) as i32));
 }
 
 /// Shared conv contraction: out[bi][oi*p + pi] = Σ_ckk w[oi,·]·pat[bi,pi,·]
@@ -526,15 +545,15 @@ pub fn conv2d_weight_grad_ws(x: &ITensor, g: &ITensor, kernel: usize,
 // max pooling
 // ---------------------------------------------------------------------------
 
-/// Max pool (size, stride) with first-max-wins argmax over (ki,kj)
-/// row-major — the tie-break shared with ref.maxpool2d.
-pub fn maxpool2d(x: &ITensor, size: usize, stride: usize)
-                 -> (ITensor, ITensor) {
+/// Shared windowed-max core: first-max-wins over (ki,kj) row-major —
+/// the tie-break shared with ref.maxpool2d. `arg`, when provided, must
+/// be `out.len()` long and receives the winning in-window index.
+fn maxpool2d_core(x: &ITensor, size: usize, stride: usize,
+                  out: &mut [i32], mut arg: Option<&mut [i32]>) {
     let (b, c, h, w) = shape4(x);
     let ho = (h - size) / stride + 1;
     let wo = (w - size) / stride + 1;
-    let mut out = vec![0i32; b * c * ho * wo];
-    let mut arg = vec![0i32; b * c * ho * wo];
+    debug_assert_eq!(out.len(), b * c * ho * wo);
     for bc in 0..b * c {
         let plane = &x.data[bc * h * w..(bc + 1) * h * w];
         let obase = bc * ho * wo;
@@ -552,14 +571,43 @@ pub fn maxpool2d(x: &ITensor, size: usize, stride: usize)
                     }
                 }
                 out[obase + oy * wo + ox] = best;
-                arg[obase + oy * wo + ox] = besti;
+                if let Some(a) = &mut arg {
+                    a[obase + oy * wo + ox] = besti;
+                }
             }
         }
     }
+}
+
+/// Max pool (size, stride) with first-max-wins argmax over (ki,kj)
+/// row-major.
+pub fn maxpool2d(x: &ITensor, size: usize, stride: usize)
+                 -> (ITensor, ITensor) {
+    let (b, c, h, w) = shape4(x);
+    let ho = (h - size) / stride + 1;
+    let wo = (w - size) / stride + 1;
+    let mut out = vec![0i32; b * c * ho * wo];
+    let mut arg = vec![0i32; b * c * ho * wo];
+    maxpool2d_core(x, size, stride, &mut out, Some(&mut arg));
     (
         Tensor::from_vec(&[b, c, ho, wo], out),
         Tensor::from_vec(&[b, c, ho, wo], arg),
     )
+}
+
+/// Max pool without the argmax (inference needs no backward routing),
+/// written into a caller-owned output tensor. Values are bit-identical to
+/// [`maxpool2d`]'s pooled output — same core loop.
+pub fn maxpool2d_into(x: &ITensor, size: usize, stride: usize,
+                      out: &mut ITensor) {
+    let (b, c, h, w) = shape4(x);
+    let ho = (h - size) / stride + 1;
+    let wo = (w - size) / stride + 1;
+    out.shape.clear();
+    out.shape.extend_from_slice(&[b, c, ho, wo]);
+    out.data.clear();
+    out.data.resize(b * c * ho * wo, 0);
+    maxpool2d_core(x, size, stride, &mut out.data, None);
 }
 
 /// Scatter gradient to argmax positions.
@@ -630,6 +678,21 @@ pub fn nitro_relu(zs: &ITensor, alpha_inv: i64) -> ITensor {
                 out - mu
             })
             .collect(),
+    }
+}
+
+/// NITRO-ReLU applied in place (the serving forward keeps no
+/// pre-activation — no backward pass will need it). Bit-identical to
+/// [`nitro_relu`].
+pub fn nitro_relu_inplace(zs: &mut ITensor, alpha_inv: i64) {
+    let mu = nitro_relu_mu(alpha_inv);
+    for v in &mut zs.data {
+        let out = if *v < 0 {
+            div_floor((*v).max(-INT8_MAX) as i64, alpha_inv) as i32
+        } else {
+            (*v).min(INT8_MAX)
+        };
+        *v = out - mu;
     }
 }
 
@@ -1091,6 +1154,51 @@ mod tests {
             conv2d_weight_grad_ws(&x1, &gr1, 3, 1, &mut ws),
             conv2d_weight_grad(&x1, &gr1, 3, 1)
         );
+    }
+
+    #[test]
+    fn into_variants_match_owning_kernels_with_reused_buffers() {
+        // the serving forward path's caller-buffer kernels must be
+        // bit-identical to the owning forms across shapes, with one set of
+        // long-lived buffers growing/shrinking between calls
+        prop::check("into_kernels", 12, |g| {
+            let mut ws = KernelWorkspace::new();
+            let mut out = ITensor::empty();
+            for _ in 0..3 {
+                let m = g.usize_in(1, 9);
+                let k = g.usize_in(1, 40);
+                let n = g.usize_in(1, 12);
+                let a = ITensor::from_vec(&[m, k], g.vec_i32(m * k, -127, 127));
+                let b =
+                    ITensor::from_vec(&[k, n], g.vec_i32(k * n, -4000, 4000));
+                let sf = scale_factor_linear(k);
+                matmul_scale_into(&a, &b, sf, &mut ws, &mut out);
+                assert_eq!(out, nitro_scale(&matmul_i64(&a, &b), sf));
+
+                let bt = g.usize_in(1, 3);
+                let c = g.usize_in(1, 3);
+                let o = g.usize_in(1, 4);
+                let h = g.usize_in(4, 9);
+                let x = ITensor::from_vec(&[bt, c, h, h],
+                                          g.vec_i32(bt * c * h * h, -127, 127));
+                let wt = ITensor::from_vec(&[o, c, 3, 3],
+                                           g.vec_i32(o * c * 9, -500, 500));
+                let csf = scale_factor_conv(3, c);
+                conv2d_scale_into(&x, &wt, 1, csf, &mut ws, &mut out);
+                assert_eq!(out, nitro_scale(&conv2d_i64(&x, &wt, 1), csf));
+
+                let (pooled, _) = maxpool2d(&x, 2, 2);
+                maxpool2d_into(&x, 2, 2, &mut out);
+                assert_eq!(out, pooled);
+
+                let mut zs =
+                    ITensor::from_vec(&[bt, c * h * h],
+                                      g.vec_i32(bt * c * h * h, -300, 300));
+                let want = nitro_relu(&zs, 10);
+                nitro_relu_inplace(&mut zs, 10);
+                assert_eq!(zs, want);
+            }
+        });
     }
 
     #[test]

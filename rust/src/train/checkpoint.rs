@@ -1,13 +1,23 @@
 //! Checkpointing: save/restore integer network weights in a simple
 //! self-describing binary container.
 //!
-//! Format: magic `NITRO1\n`, u32 JSON-header length, JSON header (spec
-//! name, tensor names/shapes), then raw little-endian i32 payloads in
-//! header order. Integer weights round-trip exactly — which is what makes
-//! the paper's "local fine-tuning after deployment" story (App. E.3) work:
+//! Format (`NITRO1`, fully specified in README.md §Checkpoint format):
+//! magic `NITRO1\n`, u32-LE JSON-header length, JSON header (spec name,
+//! tensor names/shapes), then raw little-endian i32 payloads in header
+//! order. Integer weights round-trip exactly — which is what makes the
+//! paper's "local fine-tuning after deployment" story (App. E.3) work:
 //! a checkpoint *is* the deployed model, no quantization step.
+//!
+//! Robustness contract (the serving path feeds this untrusted bytes):
+//! * [`load`] / [`load_network`] return `Err` on **every** malformed
+//!   input — truncation at any byte, oversized header length, bad JSON,
+//!   shape/spec mismatches, trailing bytes — and never panic.
+//! * [`save`] writes to a temp file in the target directory and
+//!   atomically renames it into place, so a checkpoint path always holds
+//!   either the previous complete model or the new one, never a torn
+//!   write.
 
-use crate::nn::Network;
+use crate::nn::{zoo, Network};
 use crate::util::jsonio::Json;
 
 const MAGIC: &[u8] = b"NITRO1\n";
@@ -37,49 +47,130 @@ pub fn save(net: &Network, path: &str) -> Result<(), String> {
             buf.extend(v.to_le_bytes());
         }
     }
-    std::fs::write(path, buf).map_err(|e| format!("write {path}: {e}"))
+    atomic_write(path, &buf)
 }
 
-/// Restore weights into an already-constructed network of the same spec.
-pub fn load(net: &mut Network, path: &str) -> Result<(), String> {
-    let buf = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
-    if !buf.starts_with(MAGIC) {
-        return Err(format!("{path}: bad magic"));
+/// Write `bytes` to a temp file next to `path` and rename it into place.
+/// A crash mid-write leaves the previous file untouched (rename on the
+/// same filesystem is atomic); the temp name carries the pid plus a
+/// process-wide sequence number so concurrent writers — other processes
+/// *and* other threads of this one — never share a temp file.
+fn atomic_write(path: &str, bytes: &[u8]) -> Result<(), String> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let target = std::path::Path::new(path);
+    let dir = match target.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => std::path::Path::new("."),
+    };
+    let base = target
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("checkpoint");
+    let tmp = dir.join(format!(
+        ".{base}.tmp.{}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, bytes)
+        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, target).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("rename {} -> {path}: {e}", tmp.display())
+    })
+}
+
+/// Validated view of a checkpoint's header: the spec it was saved from,
+/// the declared tensor shapes, and where the payload starts.
+struct Header {
+    spec_name: String,
+    shapes: Vec<Vec<usize>>,
+    payload_off: usize,
+}
+
+/// Parse and bounds-check everything up to the payload. Every exit on
+/// malformed input is an `Err` — no slice index here can panic.
+fn parse_header(buf: &[u8], path: &str) -> Result<Header, String> {
+    if buf.len() < MAGIC.len() || !buf.starts_with(MAGIC) {
+        return Err(format!("{path}: bad magic (not a NITRO1 checkpoint)"));
+    }
+    let hstart = MAGIC.len() + 4;
+    if buf.len() < hstart {
+        return Err(format!("{path}: truncated before header length"));
     }
     let hlen = u32::from_le_bytes(
-        buf[MAGIC.len()..MAGIC.len() + 4].try_into().unwrap(),
+        buf[MAGIC.len()..hstart].try_into().expect("4-byte slice"),
     ) as usize;
-    let hstart = MAGIC.len() + 4;
-    let header = std::str::from_utf8(&buf[hstart..hstart + hlen])
-        .map_err(|e| format!("{path}: {e}"))?;
-    let h = Json::parse(header)?;
-    let spec_name = h.req("spec")?.as_str().unwrap_or("");
-    if spec_name != net.spec.name {
+    // checked: on 32-bit targets hstart + hlen could wrap and defeat
+    // the bound below
+    let hend = hstart.checked_add(hlen).ok_or_else(|| {
+        format!("{path}: header length {hlen} overflows")
+    })?;
+    if buf.len() < hend {
         return Err(format!(
-            "{path}: checkpoint is for '{spec_name}', network is '{}'",
-            net.spec.name
+            "{path}: header length {hlen} exceeds file size {}",
+            buf.len()
         ));
     }
-    let shapes = h.req("shapes")?.as_array().ok_or("bad shapes")?.to_vec();
-    let mut off = hstart + hlen;
-    let mut idx = 0;
+    let header = std::str::from_utf8(&buf[hstart..hend])
+        .map_err(|e| format!("{path}: header not UTF-8: {e}"))?;
+    let h = Json::parse(header).map_err(|e| format!("{path}: {e}"))?;
+    let spec_name = h
+        .req("spec")
+        .map_err(|e| format!("{path}: {e}"))?
+        .as_str()
+        .ok_or_else(|| format!("{path}: 'spec' is not a string"))?
+        .to_string();
+    let shapes = h
+        .req("shapes")
+        .map_err(|e| format!("{path}: {e}"))?
+        .as_array()
+        .ok_or_else(|| format!("{path}: 'shapes' is not an array"))?
+        .iter()
+        .map(|s| s.usize_vec())
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| format!("{path}: bad shape entry: {e}"))?;
+    Ok(Header { spec_name, shapes, payload_off: hend })
+}
+
+/// Fill `net`'s weights from the checkpoint payload, validating every
+/// declared shape against the network's and every payload extent against
+/// the file size.
+fn fill_weights(net: &mut Network, h: &Header, buf: &[u8], path: &str)
+                -> Result<(), String> {
+    let expected = 2 * net.blocks.len() + 1; // wf+wl per block, head wo
+    if h.shapes.len() != expected {
+        return Err(format!(
+            "{path}: checkpoint declares {} tensors, network has {expected}",
+            h.shapes.len()
+        ));
+    }
+    let mut off = h.payload_off;
+    let mut idx = 0usize;
     let mut assign = |t: &mut crate::tensor::ITensor| -> Result<(), String> {
-        let shape = shapes
-            .get(idx)
-            .ok_or("missing tensor in checkpoint")?
-            .usize_vec()?;
-        if shape != t.shape {
+        let shape = &h.shapes[idx];
+        if shape != &t.shape {
             return Err(format!(
-                "tensor {idx}: shape {shape:?} != expected {:?}",
+                "{path}: tensor {idx}: shape {shape:?} != expected {:?}",
                 t.shape
             ));
         }
         let n = t.data.len();
-        if buf.len() < off + 4 * n {
-            return Err("truncated payload".into());
+        let need = n
+            .checked_mul(4)
+            .and_then(|b| b.checked_add(off))
+            .ok_or_else(|| format!("{path}: payload extent overflows"))?;
+        if buf.len() < need {
+            return Err(format!(
+                "{path}: truncated payload at tensor {idx} \
+                 (need {need} bytes, have {})",
+                buf.len()
+            ));
         }
         for v in t.data.iter_mut() {
-            *v = i32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+            *v = i32::from_le_bytes(
+                buf[off..off + 4].try_into().expect("4-byte slice"),
+            );
             off += 4;
         }
         idx += 1;
@@ -96,17 +187,49 @@ pub fn load(net: &mut Network, path: &str) -> Result<(), String> {
     Ok(())
 }
 
+/// Restore weights into an already-constructed network of the same spec.
+pub fn load(net: &mut Network, path: &str) -> Result<(), String> {
+    let buf = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+    let h = parse_header(&buf, path)?;
+    if h.spec_name != net.spec.name {
+        return Err(format!(
+            "{path}: checkpoint is for '{}', network is '{}'",
+            h.spec_name, net.spec.name
+        ));
+    }
+    fill_weights(net, &h, &buf, path)
+}
+
+/// Construct a [`Network`] from a checkpoint alone: the recorded spec
+/// name is resolved against the model zoo and the weights are restored —
+/// the serving path, where no pre-built network exists.
+pub fn load_network(path: &str) -> Result<Network, String> {
+    let buf = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+    let h = parse_header(&buf, path)?;
+    let spec = zoo::get(&h.spec_name).ok_or_else(|| {
+        format!("{path}: checkpoint spec '{}' is not in the zoo", h.spec_name)
+    })?;
+    let mut net = Network::new(spec, 0);
+    fill_weights(&mut net, &h, &buf, path)?;
+    Ok(net)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::nn::zoo;
 
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip_exact() {
         let spec = zoo::get("tinycnn").unwrap();
         let net = Network::new(spec.clone(), 77);
-        let dir = std::env::temp_dir().join("nitro_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmpdir("nitro_ckpt_test");
         let path = dir.join("a.ckpt");
         save(&net, path.to_str().unwrap()).unwrap();
         let mut net2 = Network::new(spec, 78); // different init
@@ -118,10 +241,61 @@ mod tests {
     }
 
     #[test]
+    fn save_is_atomic_no_temp_residue() {
+        let net = Network::new(zoo::get("tinycnn").unwrap(), 3);
+        let dir = tmpdir("nitro_ckpt_atomic");
+        let path = dir.join("m.ckpt");
+        // overwrite an existing (bogus) file: the final content must be
+        // the complete new checkpoint and no temp file may survive
+        std::fs::write(&path, b"old garbage").unwrap();
+        save(&net, path.to_str().unwrap()).unwrap();
+        let mut net2 = Network::new(zoo::get("tinycnn").unwrap(), 4);
+        load(&mut net2, path.to_str().unwrap()).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+    }
+
+    #[test]
+    fn atomic_write_accepts_bare_filename() {
+        // a path with no directory component must not panic in the
+        // temp-file derivation (Path::parent is Some("") there)
+        let name = format!("nitro-ckpt-bare-{}.ckpt", std::process::id());
+        atomic_write(&name, b"x").unwrap();
+        assert_eq!(std::fs::read(&name).unwrap(), b"x");
+        std::fs::remove_file(&name).unwrap();
+    }
+
+    #[test]
+    fn load_network_reconstructs_from_recorded_spec() {
+        let net = Network::new(zoo::get("tinycnn").unwrap(), 13);
+        let dir = tmpdir("nitro_ckpt_loadnet");
+        let path = dir.join("n.ckpt");
+        save(&net, path.to_str().unwrap()).unwrap();
+        let net2 = load_network(path.to_str().unwrap()).unwrap();
+        assert_eq!(net2.spec.name, "tinycnn");
+        for ((_, a), (_, b)) in net.weights().iter().zip(net2.weights()) {
+            assert_eq!(a, &b);
+        }
+        // round-tripped network must serve bit-identical logits
+        let mut rng = crate::util::rng::Pcg32::new(8);
+        let mut shape = vec![4];
+        shape.extend(&net.spec.input_shape);
+        let n: usize = shape.iter().product();
+        let x = crate::tensor::ITensor::from_vec(
+            &shape,
+            (0..n).map(|_| rng.range_i32(-127, 127)).collect(),
+        );
+        assert_eq!(net.infer(&x), net2.infer(&x));
+    }
+
+    #[test]
     fn spec_mismatch_rejected() {
         let net = Network::new(zoo::get("tinycnn").unwrap(), 1);
-        let dir = std::env::temp_dir().join("nitro_ckpt_test2");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmpdir("nitro_ckpt_test2");
         let path = dir.join("b.ckpt");
         save(&net, path.to_str().unwrap()).unwrap();
         let mut other = Network::new(zoo::get("mlp1-mini").unwrap(), 1);
@@ -131,11 +305,140 @@ mod tests {
 
     #[test]
     fn corrupt_file_rejected() {
-        let dir = std::env::temp_dir().join("nitro_ckpt_test3");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmpdir("nitro_ckpt_test3");
         let path = dir.join("c.ckpt");
         std::fs::write(&path, b"garbage").unwrap();
         let mut net = Network::new(zoo::get("tinycnn").unwrap(), 1);
         assert!(load(&mut net, path.to_str().unwrap()).is_err());
+    }
+
+    /// Build one valid checkpoint byte buffer for corruption tests.
+    fn valid_bytes() -> Vec<u8> {
+        let net = Network::new(zoo::get("mlp1-mini").unwrap(), 7);
+        let dir = tmpdir("nitro_ckpt_adv_src");
+        let path = dir.join("src.ckpt");
+        save(&net, path.to_str().unwrap()).unwrap();
+        std::fs::read(&path).unwrap()
+    }
+
+    fn load_bytes(bytes: &[u8]) -> Result<(), String> {
+        // unique file per call: tests run on concurrent threads and
+        // same-length corruptions must never share a path
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static CASE: AtomicU64 = AtomicU64::new(0);
+        let dir = tmpdir("nitro_ckpt_adv");
+        let path = dir.join(format!(
+            "case-{}.ckpt",
+            CASE.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&path, bytes).unwrap();
+        let mut net = Network::new(zoo::get("mlp1-mini").unwrap(), 1);
+        load(&mut net, path.to_str().unwrap())
+    }
+
+    #[test]
+    fn truncation_at_every_section_boundary_errs() {
+        let full = valid_bytes();
+        let hlen = u32::from_le_bytes(
+            full[MAGIC.len()..MAGIC.len() + 4].try_into().unwrap(),
+        ) as usize;
+        let payload_off = MAGIC.len() + 4 + hlen;
+        assert!(payload_off < full.len(), "test checkpoint has a payload");
+        // every boundary: mid-magic, end of magic (no hlen), mid-hlen,
+        // end of hlen (no header), mid-header, end of header (no
+        // payload), mid-payload, one byte short of complete
+        for cut in [
+            0,
+            3,
+            MAGIC.len(),
+            MAGIC.len() + 2,
+            MAGIC.len() + 4,
+            MAGIC.len() + 4 + hlen / 2,
+            payload_off,
+            payload_off + 2,
+            full.len() - 1,
+        ] {
+            let r = load_bytes(&full[..cut]);
+            assert!(r.is_err(), "truncation at byte {cut} must be Err");
+        }
+    }
+
+    #[test]
+    fn every_truncation_point_errs_never_panics() {
+        // fuzz-style sweep: *every* prefix of a valid checkpoint must come
+        // back as Err, and none may panic (the mlp1-mini file is small
+        // enough to sweep byte by byte)
+        let full = valid_bytes();
+        let dir = tmpdir("nitro_ckpt_sweep");
+        let path = dir.join("cut.ckpt");
+        let path_s = path.to_str().unwrap().to_string();
+        let mut net = Network::new(zoo::get("mlp1-mini").unwrap(), 1);
+        for cut in 0..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let r = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| load(&mut net, &path_s)),
+            );
+            assert!(r.is_ok(), "loader panicked at truncation {cut}");
+            assert!(r.unwrap().is_err(), "truncation {cut} must be Err");
+        }
+    }
+
+    #[test]
+    fn oversized_header_length_rejected() {
+        let mut bytes = valid_bytes();
+        // claim a header far past the end of the file
+        bytes[MAGIC.len()..MAGIC.len() + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = load_bytes(&bytes).unwrap_err();
+        assert!(err.contains("header length"), "{err}");
+    }
+
+    #[test]
+    fn header_garbage_rejected() {
+        let full = valid_bytes();
+        let hlen = u32::from_le_bytes(
+            full[MAGIC.len()..MAGIC.len() + 4].try_into().unwrap(),
+        ) as usize;
+        // non-UTF-8 header bytes
+        let mut bad = full.clone();
+        for b in &mut bad[MAGIC.len() + 4..MAGIC.len() + 4 + hlen] {
+            *b = 0xff;
+        }
+        assert!(load_bytes(&bad).is_err());
+        // valid UTF-8, invalid JSON
+        let mut bad = full.clone();
+        for b in &mut bad[MAGIC.len() + 4..MAGIC.len() + 4 + hlen] {
+            *b = b'x';
+        }
+        assert!(load_bytes(&bad).is_err());
+        // valid JSON, wrong keys: rewrite the header in place with
+        // same-length padding
+        let mut bad = full;
+        let filler = format!("{{\"a\":\"{}\"}}", "p".repeat(hlen - 8));
+        assert_eq!(filler.len(), hlen);
+        bad[MAGIC.len() + 4..MAGIC.len() + 4 + hlen]
+            .copy_from_slice(filler.as_bytes());
+        let err = load_bytes(&bad).unwrap_err();
+        assert!(err.contains("spec"), "{err}");
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = valid_bytes();
+        bytes.extend_from_slice(&[0u8; 7]);
+        let err = load_bytes(&bytes).unwrap_err();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn unknown_zoo_spec_rejected_by_load_network() {
+        let net = Network::new(zoo::get("mlp1-mini").unwrap(), 1);
+        let dir = tmpdir("nitro_ckpt_zoo");
+        let path = dir.join("z.ckpt");
+        let mut renamed = net;
+        renamed.spec.name = "not-a-preset".into();
+        save(&renamed, path.to_str().unwrap()).unwrap();
+        let err = load_network(path.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("not-a-preset"), "{err}");
     }
 }

@@ -23,7 +23,7 @@ pub enum Json {
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, String> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -261,9 +261,17 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Nesting-depth cap: the recursive-descent parser consumes one stack
+/// frame per level, so untrusted input (serve wire protocol, checkpoint
+/// headers) must be bounded or a line of 100k `[`s would overflow the
+/// stack and abort the process. Every legitimate document in this repo
+/// nests single digits deep.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -298,6 +306,16 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> Result<Json, String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} levels"));
+        }
+        let v = self.value_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn value_inner(&mut self) -> Result<Json, String> {
         match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
@@ -495,6 +513,27 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("nul").is_err());
         assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_errs_instead_of_blowing_the_stack() {
+        // adversarial wire input: one line of brackets far beyond any
+        // legitimate document must come back as Err, never a stack
+        // overflow (which aborts the whole process)
+        for n in [MAX_DEPTH + 1, 100_000] {
+            let s = "[".repeat(n);
+            let err = Json::parse(&s).unwrap_err();
+            assert!(err.contains("nesting"), "{err}");
+            let s = format!("{}1{}", "[".repeat(n), "]".repeat(n));
+            assert!(Json::parse(&s).is_err());
+        }
+        // mixed arrays/objects count too
+        let s = "{\"a\":[".repeat(MAX_DEPTH);
+        assert!(Json::parse(&s).is_err());
+        // legitimate depth still parses
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1),
+                         "]".repeat(MAX_DEPTH - 1));
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

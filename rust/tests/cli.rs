@@ -171,10 +171,13 @@ fn bench_kernels_emits_schema_versioned_json() {
     std::fs::create_dir_all(&dir).unwrap();
     let out = dir.join("BENCH_kernels.json");
     let out_s = out.to_str().unwrap();
+    let serve_out = dir.join("BENCH_serve.json");
+    let serve_s = serve_out.to_str().unwrap();
     // quick subset with a tiny budget: plumbing, not timings (the test
     // binary is unoptimized)
     let (code, stdout, stderr) = run(&[
         "bench-kernels", "--quick", "--budget", "0.005", "--out", out_s,
+        "--serve-out", serve_s,
     ]);
     assert_eq!(code, 0, "bench-kernels failed: {stderr}");
     assert!(stdout.contains("bit-exactness: all kernel paths agree"),
@@ -185,21 +188,188 @@ fn bench_kernels_emits_schema_versioned_json() {
                 "\"pool_speedup_vs_spawn\""] {
         assert!(bench.contains(key), "missing {key} in {bench}");
     }
+    // the serve-throughput record rides along, schema-versioned
+    let serve = std::fs::read_to_string(&serve_out).unwrap();
+    for key in ["\"schema_version\"", "\"serve_throughput\"",
+                "\"requests_per_sec\"", "\"p99_ns\"",
+                "\"bitexact\": true"] {
+        assert!(serve.contains(key), "missing {key} in {serve}");
+    }
     // baseline comparison is advisory: self-comparison exits 0 even with
     // noisy timings; a missing baseline file is a hard error
     let out2 = dir.join("BENCH_kernels2.json");
     let (code, stdout, stderr) = run(&[
         "bench-kernels", "--quick", "--budget", "0.005", "--out",
-        out2.to_str().unwrap(), "--baseline", out_s,
+        out2.to_str().unwrap(), "--serve-out", serve_s, "--baseline", out_s,
     ]);
     assert_eq!(code, 0, "baseline comparison failed: {stderr}");
     assert!(stdout.contains("rows compared"), "{stdout}");
     let (code, _, stderr) = run(&[
         "bench-kernels", "--quick", "--budget", "0.005", "--out",
-        out2.to_str().unwrap(), "--baseline", "does/not/exist.json",
+        out2.to_str().unwrap(), "--serve-out", serve_s, "--baseline",
+        "does/not/exist.json",
     ]);
     assert_eq!(code, 2);
     assert!(stderr.contains("exist.json"), "{stderr}");
+}
+
+/// Train a quick tinycnn checkpoint into `dir` and return its path plus
+/// a deterministic 2-sample input JSON file for it (tinycnn input is
+/// 1x8x8 = 64 ints per sample).
+fn trained_ckpt_and_input(dir: &std::path::Path) -> (String, String) {
+    std::fs::create_dir_all(dir).unwrap();
+    let ckpt = dir.join("m.ckpt");
+    let ckpt_s = ckpt.to_str().unwrap().to_string();
+    let (code, _, stderr) = run(&[
+        "train", "--preset", "tinycnn", "--dataset", "tiny", "--epochs",
+        "2", "--n-train", "120", "--n-test", "40", "--quiet", "--save",
+        &ckpt_s,
+    ]);
+    assert_eq!(code, 0, "train failed: {stderr}");
+    let vals: Vec<String> =
+        (0..128).map(|i| ((i * 37) % 255 - 127).to_string()).collect();
+    let input = dir.join("input.json");
+    std::fs::write(&input, format!("[{}]", vals.join(","))).unwrap();
+    (ckpt_s, input.to_str().unwrap().to_string())
+}
+
+#[test]
+fn predict_scores_checkpoint_bit_identically_across_runs_and_workers() {
+    let dir = std::env::temp_dir().join("nitro_cli_predict");
+    let (ckpt, input) = trained_ckpt_and_input(&dir);
+    let mut outputs = Vec::new();
+    // twice with default workers, once in the deterministic
+    // single-thread mode: all byte-identical
+    for workers in [None, None, Some("1")] {
+        let mut cmd = nitro();
+        if let Some(w) = workers {
+            cmd.env("NITRO_WORKERS", w);
+        }
+        let out = cmd
+            .args(["predict", ckpt.as_str(), input.as_str()])
+            .output()
+            .expect("spawn nitro");
+        assert_eq!(out.status.code(), Some(0), "{}",
+                   String::from_utf8_lossy(&out.stderr));
+        outputs.push(out.stdout);
+    }
+    assert_eq!(outputs[0], outputs[1], "predict is not deterministic");
+    assert_eq!(outputs[0], outputs[2],
+               "NITRO_WORKERS=1 changed the logits");
+    let text = String::from_utf8_lossy(&outputs[0]);
+    assert!(text.contains("\"model\": \"tinycnn\""), "{text}");
+    assert!(text.contains("\"logits\""), "{text}");
+    assert!(text.contains("\"argmax\""), "{text}");
+}
+
+#[test]
+fn predict_rejects_corrupt_checkpoints_without_panicking() {
+    let dir = std::env::temp_dir().join("nitro_cli_predict_corrupt");
+    let (ckpt, input) = trained_ckpt_and_input(&dir);
+    let full = std::fs::read(&ckpt).unwrap();
+    // truncated, garbage, and oversized-header corruptions must all exit
+    // with a clean error (code 2) — a panic/abort would give a different
+    // code or a signal (None)
+    let cases: Vec<Vec<u8>> = vec![
+        full[..full.len() / 2].to_vec(),
+        full[..9].to_vec(),
+        b"total garbage".to_vec(),
+        {
+            let mut v = full.clone();
+            v[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+            v
+        },
+    ];
+    for (i, bytes) in cases.iter().enumerate() {
+        let bad = dir.join(format!("bad{i}.ckpt"));
+        std::fs::write(&bad, bytes).unwrap();
+        let (code, _, stderr) =
+            run(&["predict", bad.to_str().unwrap(), &input]);
+        assert_eq!(code, 2, "case {i}: expected clean error, got {stderr}");
+        assert!(!stderr.contains("panicked"), "case {i}: {stderr}");
+    }
+    // malformed input documents error cleanly too
+    let badin = dir.join("badin.json");
+    std::fs::write(&badin, "[1, 2, 3]").unwrap();
+    let (code, _, stderr) = run(&["predict", &ckpt,
+                                  badin.to_str().unwrap()]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("sample size"), "{stderr}");
+}
+
+#[test]
+fn serve_stdio_answers_json_lines_matching_predict() {
+    use std::io::{BufRead, BufReader, Write};
+    let dir = std::env::temp_dir().join("nitro_cli_serve");
+    let (ckpt, input) = trained_ckpt_and_input(&dir);
+    // ground truth from the one-shot path
+    let (code, predict_out, stderr) = run(&["predict", &ckpt, &input]);
+    assert_eq!(code, 0, "{stderr}");
+    let expect = nitro::util::jsonio::Json::parse(&predict_out).unwrap();
+    let flat: Vec<String> = (0..128)
+        .map(|i| ((i * 37) % 255 - 127).to_string())
+        .collect();
+    let mut child = nitro()
+        .args(["serve", ckpt.as_str()])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn nitro serve");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        // request 1: both samples in one request; request 2: sample 0
+        // alone (batch composition must not change the logits); then a
+        // bad request that must produce an error line, not kill the
+        // server
+        writeln!(stdin, "{{\"id\": 1, \"input\": [{}]}}", flat.join(","))
+            .unwrap();
+        writeln!(stdin, "{{\"id\": 2, \"input\": [{}]}}",
+                 flat[..64].join(","))
+            .unwrap();
+        writeln!(stdin, "{{\"id\": 3, \"input\": [1, 2]}}").unwrap();
+        writeln!(stdin, "{{\"id\": 4, \"input\": [{}]}}",
+                 flat[..64].join(","))
+            .unwrap();
+    }
+    drop(child.stdin.take()); // EOF ends the server loop
+    let reader = BufReader::new(child.stdout.take().unwrap());
+    let lines: Vec<String> =
+        reader.lines().map(|l| l.unwrap()).collect();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "serve exited {status}");
+    assert_eq!(lines.len(), 4, "{lines:?}");
+    let parse =
+        |s: &String| nitro::util::jsonio::Json::parse(s).unwrap();
+    let r1 = parse(&lines[0]);
+    assert_eq!(r1.req("id").unwrap().as_i64(), Some(1));
+    assert_eq!(r1.req("logits").unwrap(), expect.req("logits").unwrap(),
+               "serve logits differ from predict");
+    let r2 = parse(&lines[1]);
+    let expect_rows = expect.req("logits").unwrap().as_array().unwrap();
+    assert_eq!(r2.req("logits").unwrap().as_array().unwrap()[0],
+               expect_rows[0],
+               "micro-batch composition changed sample-0 logits");
+    let r3 = parse(&lines[2]);
+    assert!(r3.get("error").is_some(), "{}", lines[2]);
+    let r4 = parse(&lines[3]);
+    assert_eq!(r4.req("logits").unwrap().as_array().unwrap()[0],
+               expect_rows[0], "server died or drifted after bad request");
+}
+
+#[test]
+fn serve_rejects_missing_and_corrupt_checkpoints() {
+    let dir = std::env::temp_dir().join("nitro_cli_serve_bad");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (code, _, stderr) = run(&["serve", "does/not/exist.ckpt"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("exist.ckpt"), "{stderr}");
+    let bad = dir.join("bad.ckpt");
+    std::fs::write(&bad, b"NITRO1\n\x10\x00\x00\x00not json at all!")
+        .unwrap();
+    let (code, _, stderr) = run(&["serve", bad.to_str().unwrap()]);
+    assert_eq!(code, 2, "corrupt checkpoint must fail cleanly: {stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
 }
 
 #[test]
