@@ -274,6 +274,15 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
         scheduler_comparison(epochs, n_train, &mut h.bitexact_failures)
     };
 
+    // ---- replica-scaling curve (samples/sec + hard bit-exactness) ------
+    let repl_cmp = if opts.quick {
+        Json::Null
+    } else {
+        let (epochs, n_train) =
+            if h.b.budget_s < 0.2 { (1, 320) } else { (2, 640) };
+        replica_scaling(epochs, n_train, &mut h.bitexact_failures)
+    };
+
     // ---- emit -----------------------------------------------------------
     let record = Json::obj(vec![
         ("schema_version", Json::Int(SCHEMA_VERSION)),
@@ -293,6 +302,7 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
             ),
         ),
         ("train_scheduler_comparison", sched_cmp),
+        ("train_replica_scaling", repl_cmp),
         ("bitexact", Json::Bool(h.bitexact_failures.is_empty())),
         (
             "bitexact_failures",
@@ -342,18 +352,11 @@ fn scheduler_comparison(epochs: usize, n_train: usize,
     // tinycnn has 3 blocks + head = 4 stages; the pipeline only engages
     // when the worker budget covers one thread per stage, so raise this
     // thread's budget if the machine default is below that — otherwise
-    // the "pipelined" row would silently measure block-parallel. Restore
-    // the override afterwards (guard handles panics too).
+    // the "pipelined" row would silently measure block-parallel. The
+    // guard restores the enclosing override (panic-safe).
     let nstages = 4usize;
     let workers = par::current_workers().max(nstages);
-    struct ResetBudget;
-    impl Drop for ResetBudget {
-        fn drop(&mut self) {
-            par::set_thread_workers(0);
-        }
-    }
-    let _reset = ResetBudget;
-    par::set_thread_workers(workers);
+    let _scope = par::scoped_thread_workers(workers);
     let mut fields: Vec<(&str, Json)> = vec![
         ("preset", Json::Str("tinycnn".to_string())),
         ("n_train", Json::Int(tr.len() as i64)),
@@ -419,6 +422,89 @@ fn scheduler_comparison(epochs: usize, n_train: usize,
                 ("samples_per_sec", Json::Float(sps)),
                 ("speedup_vs_sequential",
                  Json::Float(seq_secs / secs.max(1e-9))),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// Full-epoch data-parallel scaling on the tinycnn preset: replicas ∈
+/// {1, 2, 4} through the real `fit` path with dropout enabled (so the
+/// per-shard mask slicing is exercised). Records the samples/sec scaling
+/// curve per replica count and pushes into `failures` (hard CI failure)
+/// if any replicated run's final weights or per-epoch losses deviate
+/// from `replicas = 1` — the replicated-training bit-identity contract.
+fn replica_scaling(epochs: usize, n_train: usize,
+                   failures: &mut Vec<String>) -> Json {
+    let ds = synthetic::by_name("tiny", n_train + 100, 13).expect("tiny");
+    let (mut tr, mut te) = ds.split_test(100);
+    tr.mad_normalize();
+    te.mad_normalize();
+    // cover the widest replica fan-out even on small boxes; the guard
+    // restores the enclosing override (panic-safe)
+    let workers = par::current_workers().max(4);
+    let _scope = par::scoped_thread_workers(workers);
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("preset", Json::Str("tinycnn".to_string())),
+        ("n_train", Json::Int(tr.len() as i64)),
+        ("epochs", Json::Int(epochs as i64)),
+        ("batch", Json::Int(32)),
+        ("dropout", Json::Float(0.25)),
+        ("workers", Json::Int(workers as i64)),
+    ];
+    let mut reference: Option<(Vec<ITensor>, Vec<f64>)> = None;
+    let mut base_secs = 0f64;
+    for (replicas, key) in
+        [(1usize, "replicas1"), (2, "replicas2"), (4, "replicas4")]
+    {
+        let mut net = Network::new(zoo::get("tinycnn").unwrap(), 5);
+        net.set_dropout(0.25, 0.25);
+        let cfg = TrainConfig {
+            epochs,
+            batch: 32,
+            hyper: Hyper { gamma_inv: 128, eta_fw_inv: 12000,
+                           eta_lr_inv: 3000 },
+            seed: 5,
+            scheduler: Scheduler::BlockParallel,
+            replicas,
+            eval_every: epochs.max(1),
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let res = fit(&mut net, &tr, &te, &cfg);
+        let secs = t0.elapsed().as_secs_f64();
+        let sps = (tr.len() * res.epochs.len()) as f64 / secs.max(1e-9);
+        let weights: Vec<ITensor> =
+            net.weights().into_iter().map(|(_, t)| t.clone()).collect();
+        let losses: Vec<f64> =
+            res.epochs.iter().map(|e| e.mean_head_loss).collect();
+        match &reference {
+            None => {
+                base_secs = secs;
+                reference = Some((weights, losses));
+            }
+            Some((rw, rl)) => {
+                if rw != &weights || rl != &losses {
+                    failures.push(format!(
+                        "train-epoch replicas={replicas} not bit-identical \
+                         to replicas=1"
+                    ));
+                }
+            }
+        }
+        println!(
+            "  train-epoch [replicas={replicas}] {sps:>9.1} samples/sec  \
+             ({secs:.3}s, scaling {:.2}x)",
+            base_secs / secs.max(1e-9)
+        );
+        fields.push((
+            key,
+            Json::obj(vec![
+                ("replicas", Json::Int(replicas as i64)),
+                ("secs", Json::Float(secs)),
+                ("samples_per_sec", Json::Float(sps)),
+                ("speedup_vs_replicas1",
+                 Json::Float(base_secs / secs.max(1e-9))),
             ]),
         ));
     }
@@ -501,6 +587,19 @@ mod tests {
         let j = scheduler_comparison(1, 96, &mut failures);
         assert!(failures.is_empty(), "schedulers diverged: {failures:?}");
         for key in ["sequential", "block-parallel", "pipelined"] {
+            let row = j.req(key).unwrap_or_else(|e| panic!("{key}: {e}"));
+            let sps =
+                row.req("samples_per_sec").unwrap().as_f64().unwrap();
+            assert!(sps > 0.0, "{key}: {sps}");
+        }
+    }
+
+    #[test]
+    fn replica_scaling_bitexact_and_reports_throughput() {
+        let mut failures = Vec::new();
+        let j = replica_scaling(1, 96, &mut failures);
+        assert!(failures.is_empty(), "replicas diverged: {failures:?}");
+        for key in ["replicas1", "replicas2", "replicas4"] {
             let row = j.req(key).unwrap_or_else(|e| panic!("{key}: {e}"));
             let sps =
                 row.req("samples_per_sec").unwrap().as_f64().unwrap();

@@ -41,6 +41,10 @@ pub struct RunnerOpts {
     /// `Some(s)` overrides the spec's LES scheduler for the nitro engine
     /// (metric-identical; CI uses this to cross-check all three).
     pub scheduler: Option<Scheduler>,
+    /// `Some(n)` overrides the spec's data-parallel replica count for
+    /// the nitro engine (metric-identical; CI cross-checks replica
+    /// counts the same way it cross-checks schedulers).
+    pub replicas: Option<usize>,
     /// Directory for per-run records (default `results`).
     pub out_dir: String,
     /// Directory for the aggregate BENCH file (default `.`, i.e. the
@@ -57,6 +61,7 @@ impl Default for RunnerOpts {
             seed: None,
             epochs: 0,
             scheduler: None,
+            replicas: None,
             out_dir: "results".to_string(),
             bench_dir: ".".to_string(),
             verbose: false,
@@ -139,7 +144,9 @@ pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
         }
         let (tr, te) = &cache.as_ref().unwrap().1;
         let scheduler = opts.scheduler.unwrap_or(r.scheduler);
-        let out = execute_run(r, tr, te, scheduler, opts.verbose)?;
+        let replicas = opts.replicas.unwrap_or(r.replicas).max(1);
+        let out = execute_run(r, tr, te, scheduler, replicas,
+                              opts.verbose)?;
         let path = format!(
             "{run_dir}/{}__{}__s{}.json",
             sanitize(&r.id),
@@ -179,7 +186,7 @@ pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
 }
 
 fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset,
-               scheduler: Scheduler, verbose: bool)
+               scheduler: Scheduler, replicas: usize, verbose: bool)
                -> Result<RunOutcome, String> {
     let net_spec = zoo::get(&r.preset)
         .ok_or_else(|| format!("run '{}': unknown preset '{}'", r.id,
@@ -199,6 +206,7 @@ fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset,
                     seed: r.seed,
                     verbose,
                     scheduler,
+                    replicas,
                     plateau_patience: if r.fixed_lr {
                         usize::MAX
                     } else {
@@ -289,6 +297,17 @@ fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset,
                 _ => Json::Null,
             },
         ),
+        (
+            // data-parallel replica count actually used (nitro engine
+            // only). Metric keys are replica-invariant — CI asserts that
+            // — so cross-replica comparisons strip this key like
+            // `scheduler` and the timing ones.
+            "replicas",
+            match r.engine {
+                EngineKind::Nitro => Json::Int(replicas as i64),
+                _ => Json::Null,
+            },
+        ),
         ("final_test_acc", Json::Float(final_test_acc)),
         ("final_train_acc", opt_f(final_train_acc)),
         ("diverged", Json::Bool(diverged)),
@@ -363,7 +382,8 @@ mod tests {
         assert_eq!(rows.len(), 2, "nitro + fp-bp");
         for row in rows {
             for key in ["id", "engine", "final_test_acc", "wall_secs",
-                        "diverged", "seed", "hyper"] {
+                        "diverged", "seed", "hyper", "scheduler",
+                        "replicas"] {
                 assert!(row.get(key).is_some(), "row missing '{key}'");
             }
             let acc = row.req("final_test_acc").unwrap().as_f64().unwrap();

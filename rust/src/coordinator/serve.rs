@@ -896,6 +896,67 @@ mod tests {
     }
 
     #[test]
+    fn stress_ten_concurrent_clients_mixed_batches_no_deadlock() {
+        // serve concurrency stress: ≥ 8 concurrent clients hammer the
+        // micro-batcher with mixed batch sizes across several rounds.
+        // Completion of every request is the no-deadlock assertion (a
+        // wedged executor hangs the join and fails via test timeout);
+        // every per-request logit block must be bit-identical to the
+        // reference forward — the `nitro predict` path — regardless of
+        // how the requests coalesced.
+        let (path, net) = saved_model("tinycnn", 11, "stress");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        let mut rng = Pcg32::new(123);
+        let (nclients, rounds) = (10usize, 6usize);
+        let sizes = [1usize, 2, 3, 5, 8];
+        // pre-generate every client's request sequence (mixed sizes)
+        let requests: Vec<Vec<Vec<i32>>> = (0..nclients)
+            .map(|c| {
+                (0..rounds)
+                    .map(|r| {
+                        let n = sizes[(c + r) % sizes.len()];
+                        rand_samples(&model, n, &mut rng)
+                    })
+                    .collect()
+            })
+            .collect();
+        let g = model.num_classes;
+        let mb = MicroBatcher::start(
+            reg.clone(),
+            ServeConfig { max_batch: 16, max_wait_us: 500,
+                          ..Default::default() },
+        );
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for flats in &requests {
+                let client = mb.client();
+                joins.push(s.spawn(move || {
+                    flats
+                        .iter()
+                        .map(|f| client.predict(None, f.clone()).unwrap().1)
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for (c, j) in joins.into_iter().enumerate() {
+                let got = j.join().unwrap();
+                assert_eq!(got.len(), rounds);
+                for (r, y) in got.iter().enumerate() {
+                    let flat = &requests[c][r];
+                    let n = flat.len() / model.sample_size;
+                    let x = ITensor::from_vec(&model.batch_shape(n),
+                                              flat.clone());
+                    let want = net.infer(&x);
+                    assert_eq!(y.shape, vec![n, g],
+                               "client {c} round {r}: shape");
+                    assert_eq!(y.data, want.data,
+                               "client {c} round {r}: logits drifted");
+                }
+            }
+        });
+    }
+
+    #[test]
     fn handle_line_protocol_and_errors() {
         let (path, net) = saved_model("mlp1-mini", 2, "proto");
         let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());

@@ -19,6 +19,8 @@
 //!   "engines": ["nitro","pocketnn","fp-les","fp-bp"],
 //!   "bench_output": "BENCH_table1.json",  // aggregate record path
 //!   "fixed_lr": false,                    // disable plateau LR scheduling
+//!   "scheduler": "pipelined",             // LES scheduler (metric-identical)
+//!   "replicas": 1,                        // data-parallel replicas (ditto)
 //!   "fp_lr": 0.001,                       // Adam LR for the FP baselines
 //!   "fp_epochs_div": 1,                   // FP baselines run epochs/div
 //!   "defaults": {"batch": 64, "hyper": {...}, "dropout": [0.0, 0.0]},
@@ -286,6 +288,11 @@ pub struct ExperimentSpec {
     /// are metric-identical — this knob exists for benchmarking and CI
     /// cross-checks.
     pub scheduler: Scheduler,
+    /// Data-parallel replica count for the nitro engine (`"replicas"`
+    /// key, ≥ 1, default 1). Metric-identical for every value — like
+    /// `scheduler`, a benchmarking/CI cross-check knob, not a modelling
+    /// one.
+    pub replicas: usize,
     pub fp_lr: f64,
     pub fp_epochs_div: usize,
     /// Batch size for the FP baselines (the paper's baselines always ran
@@ -362,6 +369,13 @@ impl ExperimentSpec {
                 Some(v) => Scheduler::parse(
                     v.as_str().ok_or("scheduler: not a string")?,
                 )?,
+            },
+            replicas: match opt_usize(j, "replicas")? {
+                None => 1,
+                Some(0) => {
+                    return Err("replicas: must be >= 1".to_string())
+                }
+                Some(n) => n,
             },
             fp_lr: j.f64_or("fp_lr", 1e-3),
             fp_epochs_div: opt_usize(j, "fp_epochs_div")?.unwrap_or(1).max(1),
@@ -469,6 +483,7 @@ impl ExperimentSpec {
                         dropout: run.dropout.unwrap_or(self.defaults_dropout),
                         fixed_lr: self.fixed_lr,
                         scheduler: self.scheduler,
+                        replicas: self.replicas,
                         fp_lr: self.fp_lr,
                         paper_acc: run.paper_acc,
                         paper_note: run.paper_note.clone(),
@@ -512,6 +527,9 @@ pub struct ResolvedRun {
     /// LES scheduler for the nitro engine (metric-identical across all
     /// three; see [`Scheduler`]).
     pub scheduler: Scheduler,
+    /// Data-parallel replica count for the nitro engine
+    /// (metric-identical for every value; see `train::replica`).
+    pub replicas: usize,
     pub fp_lr: f64,
     pub paper_acc: Option<f64>,
     pub paper_note: Option<String>,
@@ -613,6 +631,34 @@ mod tests {
             &Json::parse(&base(r#""scheduler": "warp","#)).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn replicas_key_parses_defaults_and_rejects_zero() {
+        let base = |extra: &str| {
+            format!(
+                r#"{{"name": "t", {extra} "runs": [
+                     {{"id": "a", "preset": "tinycnn", "dataset": "tiny"}}
+                   ]}}"#
+            )
+        };
+        let spec =
+            ExperimentSpec::parse(&Json::parse(&base("")).unwrap()).unwrap();
+        assert_eq!(spec.replicas, 1, "default");
+        let spec = ExperimentSpec::parse(
+            &Json::parse(&base(r#""replicas": 4,"#)).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.replicas, 4);
+        let runs = spec.resolve(Scale::Quick, None, 0).unwrap();
+        assert!(runs.iter().all(|r| r.replicas == 4));
+        for bad in [r#""replicas": 0,"#, r#""replicas": -2,"#] {
+            assert!(
+                ExperimentSpec::parse(&Json::parse(&base(bad)).unwrap())
+                    .is_err(),
+                "{bad} must be rejected"
+            );
+        }
     }
 
     #[test]

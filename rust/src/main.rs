@@ -93,6 +93,9 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("scheduler", "pipelined",
              "LES scheduler: sequential|block-parallel|pipelined \
               (bit-identical results)")
+        .opt("replicas", "1",
+             "data-parallel replica count (bit-identical to 1: integer \
+              gradient all-reduce is exact)")
         .flag("sequential", "shorthand for --scheduler sequential")
         .flag("quiet", "suppress per-epoch logs");
     let p = match cmd.parse(argv) {
@@ -133,6 +136,11 @@ fn cmd_train(argv: &[String]) -> i32 {
                         Scheduler::Sequential
                     } else {
                         Scheduler::parse(p.get("scheduler"))?
+                    },
+                    replicas: match p.get_usize("replicas")? {
+                        0 => return Err(
+                            "--replicas must be >= 1".to_string()),
+                        n => n,
                     },
                     verbose: !p.has("quiet"),
                     ..Default::default()
@@ -340,6 +348,9 @@ fn cmd_run_spec(argv: &[String]) -> i32 {
         .opt("scheduler", "",
              "override the spec's LES scheduler: \
               sequential|block-parallel|pipelined")
+        .opt("replicas", "0",
+             "override the spec's data-parallel replica count \
+              (0 = spec default; metric-identical)")
         .opt("out-dir", "results", "directory for per-run records")
         .opt("bench-dir", ".", "directory for the aggregate BENCH json")
         .flag("verbose", "per-epoch trainer logs")
@@ -368,6 +379,10 @@ fn cmd_run_spec(argv: &[String]) -> i32 {
             seed,
             epochs: p.get_usize("epochs")?,
             scheduler,
+            replicas: match p.get_usize("replicas")? {
+                0 => None,
+                n => Some(n),
+            },
             out_dir: p.get("out-dir").to_string(),
             bench_dir: p.get("bench-dir").to_string(),
             verbose: p.has("verbose"),

@@ -12,7 +12,8 @@ use crate::tensor::{
     matmul_a_bt_i64, matmul_at_b_i64, matmul_i64, matmul_scale_into,
     matmul_scale_ws, maxpool2d, maxpool2d_bwd, maxpool2d_into, nitro_relu,
     nitro_relu_bwd, nitro_relu_inplace, nitro_scale, one_hot32,
-    rss_loss_grad, scale_factor_linear, ITensor, KernelWorkspace, LTensor,
+    rss_loss_grad_raw, scale_factor_linear, ITensor, KernelWorkspace,
+    LTensor,
 };
 use crate::util::rng::Pcg32;
 
@@ -83,6 +84,31 @@ pub struct BlockCache {
     drop_mask: Option<Vec<bool>>,
     /// Block output after pool/dropout (learning-layer input).
     pub a_out: ITensor,
+}
+
+/// Batch-summed local gradients of one block, exported without applying
+/// any update — the unit the data-parallel replica path
+/// (`train::replica`) all-reduces across replicas. The tensors are moved
+/// out of the backward pass, never copied. `loss_raw` is the un-halved
+/// RSS sum (`Σ(ŷ−y)²`): per-shard halves cannot be summed without losing
+/// odd bits, so callers halve once after any reduction.
+pub struct BlockGrads {
+    pub loss_raw: i64,
+    /// Forward-layer gradient (rate role `γ_inv · AF`, decay `η_fw`).
+    pub gw_f: LTensor,
+    /// Learning-layer gradient (rate role `γ_inv`, decay `η_lr`).
+    pub gw_l: LTensor,
+}
+
+/// Zero the dropped outputs and stash the keep-mask for the backward
+/// pass.
+fn apply_drop_mask(cache: &mut BlockCache, mask: Vec<bool>) {
+    for (v, &keep) in cache.a_out.data.iter_mut().zip(&mask) {
+        if !keep {
+            *v = 0;
+        }
+    }
+    cache.drop_mask = Some(mask);
 }
 
 /// A stateful integer local-loss block: forward weights + learning-layer
@@ -172,7 +198,41 @@ impl Block {
     /// pre-activations outside the reused accumulator.
     pub fn forward_train(&mut self, a: &ITensor, rng: Option<&mut Pcg32>)
                          -> BlockCache {
-        let (zs, act_shape, pool_arg, mut out) = match &self.spec {
+        let mut cache = self.forward_core(a);
+        if self.drop_p256 > 0 {
+            let rng = rng.expect("dropout requires an RNG");
+            let mask: Vec<bool> = (0..cache.a_out.len())
+                .map(|_| rng.below(256) >= self.drop_p256)
+                .collect();
+            apply_drop_mask(&mut cache, mask);
+        }
+        cache
+    }
+
+    /// [`Self::forward_train`] with a **pre-drawn** dropout keep-mask.
+    /// The data-parallel replica path draws each block's masks for the
+    /// whole global batch from the canonical per-block stream and hands
+    /// every replica its shard's slice, so a mask element stays a
+    /// function of (seed, block, batch ordinal, sample position) no
+    /// matter how many replicas split the batch (`train::replica`).
+    /// `mask` must cover the block output and is required exactly when
+    /// `drop_p256 > 0`.
+    pub fn forward_train_masked(&mut self, a: &ITensor,
+                                mask: Option<&[bool]>) -> BlockCache {
+        let mut cache = self.forward_core(a);
+        if self.drop_p256 > 0 {
+            let mask = mask.expect("dropout requires a pre-drawn mask");
+            assert_eq!(mask.len(), cache.a_out.len(),
+                       "dropout mask does not cover the block output");
+            apply_drop_mask(&mut cache, mask.to_vec());
+        }
+        cache
+    }
+
+    /// Training forward minus dropout: fused contract-and-scale on the
+    /// block workspace, activation, block pooling.
+    fn forward_core(&mut self, a: &ITensor) -> BlockCache {
+        let (zs, act_shape, pool_arg, out) = match &self.spec {
             BlockSpec::Conv(c) => {
                 let zs =
                     conv2d_scale_ws(a, &self.wf, c.padding, c.sf(), &mut self.ws);
@@ -192,29 +252,19 @@ impl Block {
                 (zs, act_shape, None, act)
             }
         };
-
-        let drop_mask = if self.drop_p256 > 0 {
-            let rng = rng.expect("dropout requires an RNG");
-            let mask: Vec<bool> = (0..out.len())
-                .map(|_| rng.below(256) >= self.drop_p256)
-                .collect();
-            for (v, &keep) in out.data.iter_mut().zip(&mask) {
-                if !keep {
-                    *v = 0;
-                }
-            }
-            Some(mask)
-        } else {
-            None
-        };
-        BlockCache { zs, act_shape, pool_arg, drop_mask, a_out: out }
+        BlockCache { zs, act_shape, pool_arg, drop_mask: None, a_out: out }
     }
 
-    /// Local backward + IntegerSGD updates given the cached forward.
-    /// Returns the local RSS loss sum. Gradients never leave the block.
-    pub fn backward_step(&mut self, a_in: &ITensor, cache: &BlockCache,
-                         y32: &ITensor, hp: &Hyper) -> i64 {
-        let af = 64 * self.spec.num_classes() as i64;
+    /// Local backward **without updates**: export the batch-summed i64
+    /// gradients plus the raw local loss. [`Self::backward_step`] applies
+    /// them immediately; the data-parallel replica path
+    /// (`train::replica`) all-reduces them across replicas first.
+    /// Deferring the update is bit-identical to the eager order because
+    /// nothing in the backward pass reads a weight after that weight's
+    /// own update — `dfeat` is computed from the pre-step learning
+    /// weights.
+    pub fn backward_grads(&mut self, a_in: &ITensor, cache: &BlockCache,
+                          y32: &ITensor) -> BlockGrads {
         // ---- learning layers ------------------------------------------
         let lr = lr_features(&cache.a_out, &self.spec);
         let feat: &ITensor = match &lr {
@@ -225,10 +275,9 @@ impl Block {
         let (_, fcols) = feat.batch_feat();
         let yhat = matmul_scale_ws(feat, &self.wl, scale_factor_linear(fcols),
                                    &mut self.ws);
-        let (loss, grad_l) = rss_loss_grad(&yhat, y32);
+        let (loss_raw, grad_l) = rss_loss_grad_raw(&yhat, y32);
         let gw_l = matmul_at_b_i64(feat, &grad_l); // featᵀ·∇L (F,G)
         let dfeat = matmul_a_bt_i64(&grad_l, &self.wl).to_i32(); // ∇L·Wᵀ
-        integer_sgd(&mut self.wl, &gw_l, hp.gamma_inv, hp.eta_lr_inv);
 
         // ---- delta^fw back through the forward layers ------------------
         // learning-head scaling backward = STE (identity)
@@ -264,9 +313,27 @@ impl Block {
             }
             BlockSpec::Linear(_) => matmul_at_b_i64(a_in, &d),
         };
-        // forward layers: γ_inv^fw = γ_inv^lr · AF (DESIGN.md interp. #1)
-        integer_sgd(&mut self.wf, &gw_f, hp.gamma_inv * af, hp.eta_fw_inv);
-        loss
+        BlockGrads { loss_raw, gw_f, gw_l }
+    }
+
+    /// Local backward + IntegerSGD updates given the cached forward.
+    /// Returns the local RSS loss sum. Gradients never leave the block.
+    pub fn backward_step(&mut self, a_in: &ITensor, cache: &BlockCache,
+                         y32: &ITensor, hp: &Hyper) -> i64 {
+        let g = self.backward_grads(a_in, cache, y32);
+        self.apply_grads(&g.gw_f, &g.gw_l, hp);
+        g.loss_raw / 2
+    }
+
+    /// One IntegerSGD step from (possibly all-reduced) batch-summed
+    /// gradients, with the per-role rate wiring: forward layers run at
+    /// `γ_inv^fw = γ_inv^lr · AF` (DESIGN.md interp. #1) with `η_fw`
+    /// decay, learning layers at `γ_inv` with `η_lr` decay.
+    pub fn apply_grads(&mut self, gw_f: &LTensor, gw_l: &LTensor,
+                       hp: &Hyper) {
+        let af = 64 * self.spec.num_classes() as i64;
+        integer_sgd(&mut self.wl, gw_l, hp.gamma_inv, hp.eta_lr_inv);
+        integer_sgd(&mut self.wf, gw_f, hp.gamma_inv * af, hp.eta_fw_inv);
     }
 
     /// Convenience: forward + backward in one call (sequential mode).
@@ -403,16 +470,32 @@ impl Head {
         matmul_scale_into(a, &self.wo, self.spec.sf(), ws, out);
     }
 
+    /// Head forward + gradient without the update: `(ŷ, raw RSS loss,
+    /// batch-summed weight gradient)`. [`Self::train_step`] applies the
+    /// gradient immediately; the data-parallel replica path all-reduces
+    /// it across replicas first (`train::replica`).
+    pub fn grads(&mut self, a: &ITensor, y32: &ITensor)
+                 -> (ITensor, i64, LTensor) {
+        let yhat = matmul_scale_ws(a, &self.wo, self.spec.sf(), &mut self.ws);
+        let (loss_raw, grad) = rss_loss_grad_raw(&yhat, y32);
+        let gw = matmul_at_b_i64(a, &grad);
+        (yhat, loss_raw, gw)
+    }
+
     /// Head step: receives the global loss gradient directly (learning-rate
     /// role — no amplification factor). `a` may be any shape with batch
     /// leading — the matmuls read it as a logical (B, F) matrix.
     pub fn train_step(&mut self, a: &ITensor, y32: &ITensor, hp: &Hyper)
                       -> (ITensor, i64) {
-        let yhat = matmul_scale_ws(a, &self.wo, self.spec.sf(), &mut self.ws);
-        let (loss, grad) = rss_loss_grad(&yhat, y32);
-        let gw = matmul_at_b_i64(a, &grad);
-        integer_sgd(&mut self.wo, &gw, hp.gamma_inv, hp.eta_lr_inv);
-        (yhat, loss)
+        let (yhat, loss_raw, gw) = self.grads(a, y32);
+        self.apply_grad(&gw, hp);
+        (yhat, loss_raw / 2)
+    }
+
+    /// IntegerSGD step from a (possibly all-reduced) head gradient
+    /// (learning-rate role: `γ_inv`, `η_lr` decay).
+    pub fn apply_grad(&mut self, gw: &LTensor, hp: &Hyper) {
+        integer_sgd(&mut self.wo, gw, hp.gamma_inv, hp.eta_lr_inv);
     }
 
     /// Move the head's state out (pipelined-scheduler stage ownership),
@@ -633,6 +716,24 @@ impl Network {
     /// Count correct argmax predictions over a labelled batch.
     pub fn eval_batch(&self, x: &ITensor, labels: &[usize]) -> usize {
         count_correct(&self.infer(x), labels)
+    }
+
+    /// A fresh replica of this network: identical spec, weights and
+    /// dropout rates, with its own kernel workspaces. The data-parallel
+    /// trainer (`train::replica`) builds one per extra replica; the
+    /// weight tensors are copied exactly once here — afterwards replicas
+    /// stay in lockstep by construction, because every replica applies
+    /// the same all-reduced IntegerSGD step instead of receiving a
+    /// weight broadcast.
+    pub fn replicate(&self) -> Network {
+        let mut n = Network::new(self.spec.clone(), 0);
+        for (dst, src) in n.blocks.iter_mut().zip(&self.blocks) {
+            dst.wf = src.wf.clone();
+            dst.wl = src.wl.clone();
+            dst.drop_p256 = src.drop_p256;
+        }
+        n.head.wo = self.head.wo.clone();
+        n
     }
 
     /// Weight snapshot in block order: wf_0, wl_0, ..., wo. Used by

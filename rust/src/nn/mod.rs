@@ -7,6 +7,6 @@ pub mod probe;
 pub mod spec;
 pub mod zoo;
 
-pub use block::{Block, BlockCache, DropoutRngs, Head, Hyper, InferScratch,
-                Network, StepReport};
+pub use block::{Block, BlockCache, BlockGrads, DropoutRngs, Head, Hyper,
+                InferScratch, Network, StepReport};
 pub use spec::{BlockSpec, ConvSpec, HeadSpec, LinearSpec, NetworkSpec};

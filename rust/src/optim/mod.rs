@@ -13,18 +13,32 @@ use crate::util::{div_floor, div_trunc};
 /// the paper guarantees |w| < eta_inv receives no penalization);
 /// `w -= delta`.
 ///
-/// `grad` is the batch-**summed** int64 gradient.
+/// `grad` is the batch-**summed** int64 gradient — which makes this the
+/// natural step-from-accumulated-grad entry point: the data-parallel
+/// replica trainer (`train::replica`) all-reduces per-shard i64 gradient
+/// sums across replicas and feeds the result straight in, and because
+/// the reduced sum equals the single-replica batch sum exactly (i64
+/// addition is associative), the step is bit-identical to unreplicated
+/// training.
 pub fn integer_sgd(w: &mut ITensor, grad: &LTensor, gamma_inv: i64,
                    eta_inv: i64) {
     assert_eq!(w.shape, grad.shape, "optimizer shape mismatch");
+    integer_sgd_slice(&mut w.data, &grad.data, gamma_inv, eta_inv);
+}
+
+/// [`integer_sgd`] on raw slices: the shape-free core, usable directly on
+/// all-reduce accumulator buffers without wrapping them into tensors.
+pub fn integer_sgd_slice(w: &mut [i32], grad: &[i64], gamma_inv: i64,
+                         eta_inv: i64) {
+    assert_eq!(w.len(), grad.len(), "optimizer length mismatch");
     assert!(gamma_inv > 0, "gamma_inv must be positive");
     if eta_inv != 0 {
-        for (wv, &gv) in w.data.iter_mut().zip(&grad.data) {
+        for (wv, &gv) in w.iter_mut().zip(grad) {
             let delta = div_floor(gv, gamma_inv) + div_trunc(*wv as i64, eta_inv);
             *wv = (*wv as i64 - delta) as i32;
         }
     } else {
-        for (wv, &gv) in w.data.iter_mut().zip(&grad.data) {
+        for (wv, &gv) in w.iter_mut().zip(grad) {
             *wv = (*wv as i64 - div_floor(gv, gamma_inv)) as i32;
         }
     }
@@ -209,6 +223,23 @@ mod tests {
                 // trained regime stays in range; the op itself wraps)
                 assert_eq!(w.data[i], (wdata[i] as i64 - delta) as i32);
             }
+        });
+    }
+
+    #[test]
+    fn slice_entry_point_matches_tensor_form() {
+        prop::check("isgd-slice", 20, |g| {
+            let n = g.usize_in(1, 48);
+            let wdata = g.vec_i32(n, -30000, 30000);
+            let gdata = g.vec_i64(n);
+            let gamma = 1 + g.usize_in(0, 100_000) as i64;
+            let eta = 1 + g.usize_in(0, 50_000) as i64;
+            let mut w_t = ITensor::from_vec(&[n], wdata.clone());
+            let grad = LTensor::from_vec(&[n], gdata.clone());
+            integer_sgd(&mut w_t, &grad, gamma, eta);
+            let mut w_s = wdata;
+            integer_sgd_slice(&mut w_s, &gdata, gamma, eta);
+            assert_eq!(w_t.data, w_s);
         });
     }
 

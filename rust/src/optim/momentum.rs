@@ -34,6 +34,13 @@ impl IntegerMomentum {
     /// `delta = floor(v / (gamma_inv · beta_inv)) [+ trunc(w / eta_inv)]`;
     /// `w ← w − delta`.
     ///
+    /// Like [`crate::optim::integer_sgd`], this is a
+    /// step-from-accumulated-grad entry point: `grad` may be an
+    /// all-reduced sum of per-shard gradients (`train::replica`), and
+    /// because the velocity update is a deterministic function of the
+    /// reduced gradient, replicas applying the same reduced step keep
+    /// their velocity buffers in lockstep too.
+    ///
     /// The extra `beta_inv` in the delta divisor normalizes the steady-state
     /// gain of the accumulator (Σ leak-weighted grads ≈ beta_inv · grad), so
     /// a tuned gamma_inv transfers directly from plain IntegerSGD.

@@ -760,6 +760,17 @@ pub fn one_hot32(labels: &[usize], num_classes: usize) -> ITensor {
 /// negative number; in-contract values never approach the rail, so this is
 /// bit-identical to the JAX reference on all golden traces.
 pub fn rss_loss_grad(yhat: &ITensor, y32: &ITensor) -> (i64, ITensor) {
+    let (raw, grad) = rss_loss_grad_raw(yhat, y32);
+    (raw / 2, grad)
+}
+
+/// [`rss_loss_grad`] with the loss **un-halved**: `Σ(ŷ−y)²`. The
+/// data-parallel replica path (`train::replica`) reduces these raw
+/// per-shard sums across replicas and halves once after the reduction —
+/// halving per shard first would lose the odd bits
+/// (`⌊a/2⌋ + ⌊b/2⌋ ≠ ⌊(a+b)/2⌋`) and break the bit-identity of replicated
+/// losses with single-replica training.
+pub fn rss_loss_grad_raw(yhat: &ITensor, y32: &ITensor) -> (i64, ITensor) {
     assert_eq!(yhat.shape, y32.shape);
     let mut loss = 0i64;
     let grad: Vec<i32> = yhat
@@ -772,7 +783,7 @@ pub fn rss_loss_grad(yhat: &ITensor, y32: &ITensor) -> (i64, ITensor) {
             d as i32
         })
         .collect();
-    (loss / 2, Tensor { shape: yhat.shape.clone(), data: grad })
+    (loss, Tensor { shape: yhat.shape.clone(), data: grad })
 }
 
 fn shape4<T>(t: &Tensor<T>) -> (usize, usize, usize, usize) {

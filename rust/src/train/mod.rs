@@ -1,10 +1,12 @@
 //! LES training orchestration: epoch loop, scheduler selection
-//! (sequential / block-parallel / cross-batch pipelined), evaluation,
-//! metrics recording, LR plateau scheduling, weight-magnitude probes
-//! (Fig. 3 / App. E.3) and checkpointing.
+//! (sequential / block-parallel / cross-batch pipelined), deterministic
+//! data-parallel replication ([`replica`], `TrainConfig::replicas`),
+//! evaluation, metrics recording, LR plateau scheduling,
+//! weight-magnitude probes (Fig. 3 / App. E.3) and checkpointing.
 
 pub mod checkpoint;
 pub mod pipeline;
+pub mod replica;
 
 use crate::data::{Batcher, Dataset};
 use crate::nn::{DropoutRngs, Hyper, Network, StepReport};
@@ -74,6 +76,13 @@ pub struct TrainConfig {
     pub plateau_warmup: usize,
     /// How block work is scheduled over threads (bit-identical results).
     pub scheduler: Scheduler,
+    /// Data-parallel replica count (≥ 1). Each global batch splits into
+    /// `replicas` disjoint contiguous shards; per-replica i64 gradients
+    /// combine through a fixed-order integer all-reduce before one
+    /// IntegerSGD step is applied to every replica — **bit-identical**
+    /// to `replicas = 1` on the same global batches, under every
+    /// scheduler and with dropout enabled (see [`replica`]).
+    pub replicas: usize,
     /// |head loss| above this marks the run divergent (App. E.1
     /// "(unstable)" rows); the epoch completes, then training stops.
     pub divergence_guard: i64,
@@ -91,6 +100,7 @@ impl Default for TrainConfig {
             plateau_patience: 10,
             plateau_warmup: 40,
             scheduler: Scheduler::default(),
+            replicas: 1,
             divergence_guard: 1 << 40,
             verbose: false,
         }
@@ -206,10 +216,25 @@ pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
     // the sequential path inline with no thread ever spawned. All paths
     // are bit-identical, so the degradation is a resource policy only.
     let nstages = net.blocks.len() + 1;
-    let mut pipe = (cfg.scheduler == Scheduler::Pipelined
+    let replicas = cfg.replicas.max(1);
+    let mut pipe = (replicas == 1
+        && cfg.scheduler == Scheduler::Pipelined
         && !net.blocks.is_empty()
         && par::current_workers() >= nstages)
     .then(|| pipeline::Pipeline::start(&mut *net, cfg.seed));
+    // Data-parallel replication (replicas > 1): per-global-batch shard →
+    // all-reduce → one step (see `replica`). The reduce barrier is per
+    // batch, which cross-batch pipelining cannot cross, so the replicas
+    // themselves become the outer parallel axis: both parallel schedulers
+    // fan the shards out on the worker pool under the shared
+    // NITRO_WORKERS budget (each shard scopes its kernels to
+    // budget/replicas — the pipeline's budget-sharing policy), while the
+    // sequential scheduler runs them inline with no thread ever spawned.
+    // Every combination is bit-identical to replicas = 1.
+    let mut repl = (replicas > 1).then(|| {
+        replica::ReplicaTrainer::new(net, replicas,
+                                     cfg.scheduler != Scheduler::Sequential)
+    });
     let mut epochs = Vec::new();
     let mut diverged = false;
     // Batch buffers reused across every iteration of every epoch — the
@@ -241,6 +266,12 @@ pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
             p.sync(net, &mut reports);
             for r in reports.drain(..) {
                 agg.add(&r, cfg.divergence_guard);
+            }
+        } else if let Some(rt) = &mut repl {
+            while batcher.next_into(&mut xbuf, &mut labels) {
+                agg.seen += labels.len();
+                let rep = rt.step(net, &xbuf, &labels, &hp, &mut drop);
+                agg.add(&rep, cfg.divergence_guard);
             }
         } else {
             while batcher.next_into(&mut xbuf, &mut labels) {

@@ -1,0 +1,684 @@
+//! Deterministic data-parallel replicated training
+//! (`TrainConfig::replicas`).
+//!
+//! `N` model replicas train on disjoint contiguous shards of each global
+//! batch, accumulate per-layer gradients in i64, combine them through a
+//! **fixed-order deterministic integer all-reduce**, and then every
+//! replica applies the same single IntegerSGD step. Because integer
+//! gradient accumulation widened to i64 is exactly associative (NITI,
+//! WAGE), the reduced gradient equals the single-replica batch sum bit
+//! for bit — so replicated training is **bit-identical** to
+//! `replicas = 1` on the same global batches, a property float
+//! frameworks cannot offer.
+//!
+//! ## Why this is bit-identical to `Network::train_batch`
+//!
+//! 1. **Gradients decompose over samples.** Every kernel in the backward
+//!    pass is either per-sample (loss gradient, ReLU/pool backward) or a
+//!    batch-row sum (`featᵀ·∇L`, conv weight grad). Summing per-shard i64
+//!    sums in any order reproduces the full-batch sum exactly — i64
+//!    addition is associative and commutative, and the all-reduce uses
+//!    wrapping adds so the operation is total. The trainer nevertheless
+//!    reduces in replica-index order, making determinism hold by
+//!    construction rather than by argument.
+//! 2. **Deferred updates are eager updates.** Within one batch no weight
+//!    is read after its own update (block `l+1` consumes block `l`'s
+//!    already-materialized output; `dfeat` uses the pre-step learning
+//!    weights) — the same independence the block-parallel scheduler
+//!    exploits — so "compute all gradients, then step once" equals the
+//!    sequential eager order.
+//! 3. **Dropout masks are position-indexed, not replica-indexed.** The
+//!    trainer pre-draws each block's keep-mask for the *whole* global
+//!    batch from the canonical per-block stream
+//!    ([`DropoutRngs`], exactly the element order `forward_train` would
+//!    draw) and hands every replica its shard's slice
+//!    ([`crate::nn::Block::forward_train_masked`]). A mask element is a
+//!    function of (seed, block, batch ordinal, sample position) — the
+//!    replica count never enters.
+//! 4. **Losses reduce raw.** Local RSS losses travel un-halved
+//!    (`rss_loss_grad_raw`) and are halved once after the reduction;
+//!    halving per shard first would drop odd bits.
+//!
+//! ## Scheduler and thread-budget integration
+//!
+//! The all-reduce is a *per-global-batch* barrier, which cross-batch
+//! pipelining cannot cross — so with `replicas > 1` the replicas
+//! themselves become the outer parallel axis. `Scheduler::Sequential`
+//! runs the shards replica-by-replica inline (under `NITRO_WORKERS=1` no
+//! thread is ever spawned); `Scheduler::BlockParallel` and
+//! `Scheduler::Pipelined` fan the shards out on the persistent worker
+//! pool (PR-2), each shard scoping its kernel budget to
+//! `max(1, NITRO_WORKERS / replicas)` via
+//! [`par::set_thread_workers`] — the same budget-sharing policy the
+//! pipelined scheduler's stage workers use. All dispatch modes are
+//! bit-identical; they differ only in thread layout.
+//!
+//! Weight broadcast is free: replicas start from one weight copy
+//! ([`crate::nn::Network::replicate`]) and every replica applies the
+//! identical all-reduced step, so they stay in lockstep without any
+//! per-step weight transfer — the "broadcast" is the gradient, not the
+//! weights. This is the stepping stone to multi-process sharding: the
+//! [`GradSet`] is a first-class transferable value.
+
+use crate::nn::block::count_correct;
+use crate::nn::{DropoutRngs, Hyper, Network, StepReport};
+use crate::tensor::{one_hot32, ITensor, LTensor};
+use crate::util::par;
+
+/// Per-network gradient set in `Network::weights()` order
+/// (`wf_0, wl_0, …, wo`): the unit of the integer all-reduce and the
+/// input of [`apply_step`].
+pub struct GradSet {
+    pub tensors: Vec<LTensor>,
+}
+
+impl GradSet {
+    /// All-zero gradient set shaped like `net`'s weights — the reduction
+    /// identity (property tests seed accumulators with it; an empty
+    /// shard contributes exactly this).
+    pub fn zeros_like(net: &Network) -> GradSet {
+        GradSet {
+            tensors: net
+                .weights()
+                .into_iter()
+                .map(|(_, w)| LTensor::zeros(&w.shape))
+                .collect(),
+        }
+    }
+}
+
+/// The i64 all-reduce core: `acc[i] = acc[i] ⊞ part[i]` element-wise in
+/// wrapping arithmetic. Wrapping addition is associative *and*
+/// commutative, so every reduction order produces the same bits — the
+/// shard-order permutation invariance the property tests pin down.
+pub fn add_wrapping(acc: &mut [i64], part: &[i64]) {
+    assert_eq!(acc.len(), part.len(), "all-reduce length mismatch");
+    for (a, &p) in acc.iter_mut().zip(part) {
+        *a = a.wrapping_add(p);
+    }
+}
+
+/// Fold one replica's gradient set into the accumulator — one rank of
+/// the fixed-order all-reduce.
+pub fn accumulate(acc: &mut GradSet, part: &GradSet) {
+    assert_eq!(acc.tensors.len(), part.tensors.len(),
+               "all-reduce arity mismatch");
+    for (a, p) in acc.tensors.iter_mut().zip(&part.tensors) {
+        assert_eq!(a.shape, p.shape, "all-reduce shape mismatch");
+        add_wrapping(&mut a.data, &p.data);
+    }
+}
+
+/// One IntegerSGD step from the all-reduced gradient set, with the same
+/// per-role rate wiring as the in-place training paths
+/// ([`crate::nn::Block::apply_grads`] / [`crate::nn::Head::apply_grad`]).
+pub fn apply_step(net: &mut Network, grads: &GradSet, hp: &Hyper) {
+    assert_eq!(grads.tensors.len(), 2 * net.blocks.len() + 1,
+               "gradient set arity");
+    let mut it = grads.tensors.iter();
+    for blk in &mut net.blocks {
+        let gw_f = it.next().expect("wf grad");
+        let gw_l = it.next().expect("wl grad");
+        blk.apply_grads(gw_f, gw_l, hp);
+    }
+    net.head.apply_grad(it.next().expect("head grad"), hp);
+}
+
+/// Contiguous, order-preserving shard bounds for a global batch of `b`
+/// samples over `n` replicas: the first `b % n` shards carry one extra
+/// sample. Shards may be empty when `b < n` (final partial batches) —
+/// empty shards are skipped, contributing the reduction identity.
+pub fn shard_bounds(b: usize, n: usize) -> Vec<(usize, usize)> {
+    let n = n.max(1);
+    let base = b / n;
+    let rem = b % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for r in 0..n {
+        let len = base + usize::from(r < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Output elements **per sample** of every block, from one zero-sample
+/// probe forward: activation shapes depend on the spec alone, never on
+/// the weights, so the probe pins the dropout-mask geometry once.
+fn probe_out_sizes(net: &Network) -> Vec<usize> {
+    let mut shape = vec![1usize];
+    shape.extend(&net.spec.input_shape);
+    let mut a = ITensor::zeros(&shape);
+    net.blocks
+        .iter()
+        .map(|b| {
+            a = b.forward(&a);
+            a.len()
+        })
+        .collect()
+}
+
+/// Shard slice of one block's pre-drawn keep-mask (`None` when the
+/// block's dropout is off, signalled by an empty mask).
+fn mask_slice(mask: &[bool], per_sample: usize, start: usize,
+              end: usize) -> Option<&[bool]> {
+    if mask.is_empty() {
+        None
+    } else {
+        Some(&mask[start * per_sample..end * per_sample])
+    }
+}
+
+/// One replica's contribution for one global batch: shard losses,
+/// accuracy count, and the exported gradient set.
+struct ShardOut {
+    block_loss_raw: Vec<i64>,
+    head_loss_raw: i64,
+    correct: usize,
+    grads: GradSet,
+}
+
+/// Forward + backward over one shard, exporting gradients without
+/// applying any update. Gradient tensors are moved straight out of the
+/// backward kernels into the [`GradSet`] — no copy.
+fn shard_grads(net: &mut Network, x: &ITensor, labels: &[usize],
+               num_classes: usize, masks: &[Vec<bool>],
+               out_per_sample: &[usize], start: usize) -> ShardOut {
+    let y32 = one_hot32(labels, num_classes);
+    let end = start + labels.len();
+    let nblocks = net.blocks.len();
+    let mut caches = Vec::with_capacity(nblocks);
+    for l in 0..nblocks {
+        let m = mask_slice(&masks[l], out_per_sample[l], start, end);
+        let cache = {
+            let a_in = if l == 0 { x } else { &caches[l - 1].a_out };
+            net.blocks[l].forward_train_masked(a_in, m)
+        };
+        caches.push(cache);
+    }
+    let mut tensors = Vec::with_capacity(2 * nblocks + 1);
+    let mut block_loss_raw = Vec::with_capacity(nblocks);
+    for (l, blk) in net.blocks.iter_mut().enumerate() {
+        let a_in = if l == 0 { x } else { &caches[l - 1].a_out };
+        let g = blk.backward_grads(a_in, &caches[l], &y32);
+        block_loss_raw.push(g.loss_raw);
+        tensors.push(g.gw_f);
+        tensors.push(g.gw_l);
+    }
+    let a_last = caches.last().map(|c| &c.a_out).unwrap_or(x);
+    let (yhat, head_loss_raw, gw_o) = net.head.grads(a_last, &y32);
+    tensors.push(gw_o);
+    ShardOut {
+        block_loss_raw,
+        head_loss_raw,
+        correct: count_correct(&yhat, labels),
+        grads: GradSet { tensors },
+    }
+}
+
+/// Data-parallel replica trainer: owns replicas `1..n` (replica 0 is the
+/// caller's network, so evaluation and checkpointing always see live
+/// weights), the pre-drawn dropout masks, and the reused shard buffers.
+pub struct ReplicaTrainer {
+    extras: Vec<Network>,
+    /// Shard compute fans out on the worker pool (BlockParallel /
+    /// Pipelined schedulers) instead of running replica-by-replica
+    /// inline. Bit-identical either way.
+    parallel: bool,
+    /// Per-block output elements per sample (dropout-mask geometry).
+    out_per_sample: Vec<usize>,
+    /// Per-block keep-masks for the current global batch (empty where
+    /// the block's dropout is off). Buffers reused across batches.
+    masks: Vec<Vec<bool>>,
+    /// Per-replica shard input buffers, reused across batches.
+    shard_x: Vec<ITensor>,
+}
+
+impl ReplicaTrainer {
+    pub fn new(net: &Network, replicas: usize, parallel: bool)
+               -> ReplicaTrainer {
+        assert!(replicas >= 1, "replicas must be >= 1");
+        ReplicaTrainer {
+            extras: (1..replicas).map(|_| net.replicate()).collect(),
+            parallel,
+            out_per_sample: probe_out_sizes(net),
+            masks: vec![Vec::new(); net.blocks.len()],
+            shard_x: (0..replicas).map(|_| ITensor::empty()).collect(),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.extras.len() + 1
+    }
+
+    /// One replicated training step on a global batch: shard →
+    /// per-replica gradient export → fixed-order integer all-reduce →
+    /// the same IntegerSGD step applied to every replica. Bit-identical
+    /// to [`Network::train_batch`] on the same batch (module docs).
+    pub fn step(&mut self, net: &mut Network, x: &ITensor,
+                labels: &[usize], hp: &Hyper, drop: &mut DropoutRngs)
+                -> StepReport {
+        let b = labels.len();
+        debug_assert_eq!(x.shape[0], b, "batch/label mismatch");
+        let n = self.replicas();
+        let nblocks = net.blocks.len();
+        // Pre-draw each block's keep-mask for the whole global batch from
+        // the canonical per-block stream, in exactly the element order
+        // forward_train would draw it; replicas read their shard's slice,
+        // so masks are independent of the replica count.
+        for (l, blk) in net.blocks.iter().enumerate() {
+            let mask = &mut self.masks[l];
+            mask.clear();
+            if blk.drop_p256 > 0 {
+                let p = blk.drop_p256;
+                let rng = drop.stream(l);
+                mask.extend(
+                    (0..b * self.out_per_sample[l])
+                        .map(|_| rng.below(256) >= p),
+                );
+            }
+        }
+        // Slice the global batch into per-replica shard tensors (reused
+        // buffers; shards are contiguous row ranges, one memcpy each).
+        let bounds = shard_bounds(b, n);
+        let ss = x.len() / b.max(1);
+        for (buf, &(s, e)) in self.shard_x.iter_mut().zip(&bounds) {
+            buf.data.clear();
+            buf.data.extend_from_slice(&x.data[s * ss..e * ss]);
+            buf.shape.clear();
+            buf.shape.push(e - s);
+            buf.shape.extend(&x.shape[1..]);
+        }
+        let num_classes = net.spec.num_classes;
+        let masks = &self.masks;
+        let shard_x = &self.shard_x;
+        let out_per_sample = &self.out_per_sample;
+        let budget = par::current_workers();
+        let fan_out = self.parallel && budget > 1 && n > 1;
+        // PR-2 thread-budget scoping: concurrent shards share the one
+        // NITRO_WORKERS budget, so each scopes its kernels to an even
+        // split (an inline shard keeps the whole budget). The enclosing
+        // override is restored even on panic — pool workers keep their
+        // TLS across jobs.
+        let shard_budget = if fan_out { (budget / n).max(1) } else { budget };
+        let compute = |(r, netr): (usize, &mut Network)| {
+            let (s, e) = bounds[r];
+            if s == e {
+                return None;
+            }
+            let _scope = par::scoped_thread_workers(shard_budget);
+            Some(shard_grads(netr, &shard_x[r], &labels[s..e], num_classes,
+                             masks, out_per_sample, s))
+        };
+        let mut tasks: Vec<(usize, &mut Network)> = Vec::with_capacity(n);
+        tasks.push((0, &mut *net));
+        for (i, e) in self.extras.iter_mut().enumerate() {
+            tasks.push((i + 1, e));
+        }
+        let outs: Vec<Option<ShardOut>> = if fan_out {
+            par::scoped_map(tasks, budget.min(n), compute)
+        } else {
+            tasks.into_iter().map(compute).collect()
+        };
+
+        // Fixed-order all-reduce: replica 0's gradients seed the
+        // accumulator, higher ranks fold in by ascending index. Losses
+        // reduce raw (un-halved) with the loss kernel's saturating
+        // accumulator semantics and are halved once below.
+        let mut report = StepReport {
+            block_loss: vec![0i64; nblocks],
+            ..Default::default()
+        };
+        let mut acc: Option<GradSet> = None;
+        for out in outs {
+            let Some(o) = out else { continue };
+            for (a, &l) in report.block_loss.iter_mut()
+                .zip(&o.block_loss_raw)
+            {
+                *a = a.saturating_add(l);
+            }
+            report.head_loss =
+                report.head_loss.saturating_add(o.head_loss_raw);
+            report.correct += o.correct;
+            match &mut acc {
+                None => acc = Some(o.grads),
+                Some(a) => accumulate(a, &o.grads),
+            }
+        }
+        for l in &mut report.block_loss {
+            *l /= 2;
+        }
+        report.head_loss /= 2;
+        // Broadcast the *step*, not the weights: the same reduced
+        // gradient applied everywhere keeps all replicas bit-identical
+        // with zero weight traffic.
+        if let Some(acc) = acc {
+            apply_step(net, &acc, hp);
+            for e in &mut self.extras {
+                apply_step(e, &acc, hp);
+            }
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::nn::zoo;
+    use crate::train::{evaluate, fit, Scheduler, TrainConfig};
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn toy_batch(rng: &mut Pcg32, spec: &crate::nn::NetworkSpec, b: usize)
+                 -> (ITensor, Vec<usize>) {
+        let mut shape = vec![b];
+        shape.extend(&spec.input_shape);
+        let n: usize = shape.iter().product();
+        let x = ITensor::from_vec(
+            &shape, (0..n).map(|_| rng.range_i32(-127, 127)).collect());
+        let labels = (0..b).map(|i| i % spec.num_classes).collect();
+        (x, labels)
+    }
+
+    #[test]
+    fn shard_bounds_cover_in_order_with_max_one_sample_skew() {
+        prop::check("shard-bounds", 40, |g| {
+            let b = g.usize_in(0, 200);
+            let n = g.usize_in(1, 9);
+            let bounds = shard_bounds(b, n);
+            assert_eq!(bounds.len(), n);
+            let mut cursor = 0usize;
+            let (mut lo, mut hi) = (usize::MAX, 0usize);
+            for &(s, e) in &bounds {
+                assert_eq!(s, cursor, "shards must be contiguous in order");
+                assert!(e >= s);
+                cursor = e;
+                lo = lo.min(e - s);
+                hi = hi.max(e - s);
+            }
+            assert_eq!(cursor, b, "shards must cover the batch");
+            assert!(hi - lo <= 1, "shard sizes may differ by at most 1");
+        });
+    }
+
+    #[test]
+    fn all_reduce_shard_order_permutation_invariant() {
+        // wrapping i64 addition is commutative + associative, so any
+        // reduction order must produce identical bits — even at values
+        // engineered to overflow intermediates
+        prop::check("allreduce-perm", 40, |g| {
+            let n_parts = g.usize_in(2, 6);
+            let len = g.usize_in(1, 40);
+            let parts: Vec<Vec<i64>> =
+                (0..n_parts).map(|_| g.vec_i64(len)).collect();
+            let mut fwd = vec![0i64; len];
+            for p in &parts {
+                add_wrapping(&mut fwd, p);
+            }
+            let k = g.usize_in(0, n_parts - 1);
+            let mut rot = vec![0i64; len];
+            for i in 0..n_parts {
+                add_wrapping(&mut rot, &parts[(i + k) % n_parts]);
+            }
+            assert_eq!(fwd, rot, "rotated order diverged");
+            let mut rev = vec![0i64; len];
+            for p in parts.iter().rev() {
+                add_wrapping(&mut rev, p);
+            }
+            assert_eq!(fwd, rev, "reversed order diverged");
+        });
+    }
+
+    #[test]
+    fn i64_accumulation_exact_at_i32_extremes() {
+        // per-replica batch-summed gradients at the i32 rails accumulate
+        // exactly in i64 — no saturation, no precision loss
+        prop::check("allreduce-rails", 20, |g| {
+            let n = g.usize_in(1, 4);
+            let len = g.usize_in(1, 16);
+            let parts: Vec<Vec<i64>> = (0..n)
+                .map(|_| {
+                    (0..len)
+                        .map(|_| if g.usize_in(0, 1) == 0 {
+                            i32::MAX as i64
+                        } else {
+                            i32::MIN as i64
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut acc = vec![0i64; len];
+            for p in &parts {
+                add_wrapping(&mut acc, p);
+            }
+            for i in 0..len {
+                let want: i64 = parts.iter().map(|p| p[i]).sum();
+                assert_eq!(acc[i], want, "rail sum must be exact");
+            }
+        });
+        // associativity survives even when intermediates wrap i64
+        let (a, b, c) = (i64::MAX, 2i64, -5i64);
+        assert_eq!(a.wrapping_add(b).wrapping_add(c),
+                   a.wrapping_add(b.wrapping_add(c)));
+    }
+
+    #[test]
+    fn gradset_accumulate_matches_elementwise_math() {
+        let net = Network::new(zoo::get("mlp1-mini").unwrap(), 3);
+        let mut acc = GradSet::zeros_like(&net);
+        let mut part = GradSet::zeros_like(&net);
+        for (i, t) in part.tensors.iter_mut().enumerate() {
+            for (j, v) in t.data.iter_mut().enumerate() {
+                *v = (i as i64 + 1) * (j as i64 % 7 - 3) * i32::MAX as i64;
+            }
+        }
+        accumulate(&mut acc, &part);
+        accumulate(&mut acc, &part);
+        for (a, p) in acc.tensors.iter().zip(&part.tensors) {
+            for (av, pv) in a.data.iter().zip(&p.data) {
+                assert_eq!(*av, 2 * pv);
+            }
+        }
+    }
+
+    #[test]
+    fn replicas_1_to_4_byte_identical_to_train_batch() {
+        // the tentpole property: for random tiny nets (conv stack and
+        // MLP), every replica count produces byte-identical post-step
+        // weights, losses and accuracy counts vs the eager sequential
+        // path — dropout on, batch size not divisible by the replica
+        // count
+        for preset in ["tinycnn", "mlp1-mini"] {
+            let spec = zoo::get(preset).unwrap();
+            let hp = Hyper { gamma_inv: 64, eta_fw_inv: 12000,
+                             eta_lr_inv: 3000 };
+            let mut net_ref = Network::new(spec.clone(), 7);
+            net_ref.set_dropout(0.25, 0.25);
+            let mut drop_ref = DropoutRngs::new(9, net_ref.blocks.len());
+            let mut rng = Pcg32::new(11);
+            let batches: Vec<_> =
+                (0..3).map(|_| toy_batch(&mut rng, &spec, 10)).collect();
+            let reports: Vec<StepReport> = batches
+                .iter()
+                .map(|(x, y)| net_ref.train_batch(x, y, &hp, &mut drop_ref))
+                .collect();
+            for n in 1..=4usize {
+                let mut net = Network::new(spec.clone(), 7);
+                net.set_dropout(0.25, 0.25);
+                let mut drop = DropoutRngs::new(9, net.blocks.len());
+                // alternate inline and pool dispatch across replica counts
+                let mut rt = ReplicaTrainer::new(&net, n, n % 2 == 0);
+                for ((x, y), want) in batches.iter().zip(&reports) {
+                    let rep = rt.step(&mut net, x, y, &hp, &mut drop);
+                    assert_eq!(rep.block_loss, want.block_loss,
+                               "{preset} n={n}: block losses");
+                    assert_eq!(rep.head_loss, want.head_loss,
+                               "{preset} n={n}: head loss");
+                    assert_eq!(rep.correct, want.correct,
+                               "{preset} n={n}: correct count");
+                }
+                for ((na, ta), (nb, tb)) in
+                    net_ref.weights().iter().zip(net.weights())
+                {
+                    assert_eq!(na, &nb);
+                    assert_eq!(ta, &tb,
+                               "{preset} n={n}: weight {na} diverged");
+                }
+            }
+        }
+    }
+
+    fn data(train: usize, test: usize)
+            -> (crate::data::Dataset, crate::data::Dataset) {
+        let ds = synthetic::by_name("tiny", train + test, 3).unwrap();
+        let (mut tr, mut te) = ds.split_test(test);
+        tr.mad_normalize();
+        te.mad_normalize();
+        (tr, te)
+    }
+
+    fn run_fit(tr: &crate::data::Dataset, te: &crate::data::Dataset,
+               sched: Scheduler, replicas: usize, dropout: f64,
+               cfg0: &TrainConfig) -> (crate::train::TrainResult, Network) {
+        let mut net = Network::new(zoo::get("tinycnn").unwrap(), 2);
+        net.set_dropout(dropout, dropout);
+        let cfg = TrainConfig { scheduler: sched, replicas,
+                                ..cfg0.clone() };
+        let res = fit(&mut net, tr, te, &cfg);
+        (res, net)
+    }
+
+    fn assert_equal(a: &(crate::train::TrainResult, Network),
+                    b: &(crate::train::TrainResult, Network), what: &str) {
+        assert_eq!(a.0.epochs.len(), b.0.epochs.len(), "{what}: epochs");
+        for (ea, eb) in a.0.epochs.iter().zip(&b.0.epochs) {
+            assert_eq!(ea.mean_head_loss, eb.mean_head_loss,
+                       "{what}: head loss epoch {}", ea.epoch);
+            assert_eq!(ea.mean_block_loss, eb.mean_block_loss,
+                       "{what}: block loss epoch {}", ea.epoch);
+            assert_eq!(ea.train_acc, eb.train_acc, "{what}: train acc");
+            assert!(ea.test_acc == eb.test_acc
+                        || (ea.test_acc.is_nan() && eb.test_acc.is_nan()),
+                    "{what}: test acc epoch {}", ea.epoch);
+        }
+        assert_eq!(a.0.final_test_acc, b.0.final_test_acc, "{what}");
+        assert_eq!(a.0.diverged, b.0.diverged, "{what}");
+        for ((na, ta), (nb, tb)) in a.1.weights().iter().zip(b.1.weights())
+        {
+            assert_eq!(na, &nb);
+            assert_eq!(ta, &tb, "{what}: weight {na} diverged");
+        }
+    }
+
+    #[test]
+    fn fit_replicated_bitexact_every_scheduler_with_dropout() {
+        // acceptance criterion: fit with replicas ∈ {2, 4} is
+        // bit-identical (weights and per-epoch metrics) to replicas = 1
+        // on the same global batches, under every scheduler, with
+        // dropout enabled
+        let _guard = par::scoped_thread_workers(6);
+        let (tr, te) = data(200, 60);
+        let cfg = TrainConfig {
+            epochs: 3,
+            batch: 32,
+            eval_every: 2, // metrics must match across non-eval epochs too
+            hyper: Hyper { gamma_inv: 128, eta_fw_inv: 12000,
+                           eta_lr_inv: 3000 },
+            ..Default::default()
+        };
+        let reference = run_fit(&tr, &te, Scheduler::Sequential, 1, 0.25,
+                                &cfg);
+        for sched in [Scheduler::Sequential, Scheduler::BlockParallel,
+                      Scheduler::Pipelined] {
+            for n in [2usize, 4] {
+                let got = run_fit(&tr, &te, sched, n, 0.25, &cfg);
+                assert_equal(&reference, &got,
+                             &format!("{} replicas={n}", sched.name()));
+            }
+        }
+        // and without dropout, one parallel combination as a spot check
+        let ref_nd = run_fit(&tr, &te, Scheduler::Sequential, 1, 0.0, &cfg);
+        let got_nd = run_fit(&tr, &te, Scheduler::Pipelined, 2, 0.0, &cfg);
+        assert_equal(&ref_nd, &got_nd, "no-dropout replicas=2");
+    }
+
+    #[test]
+    fn final_partial_batch_every_scheduler_and_replica_count() {
+        // regression (satellite): dataset len % batch != 0 — the final
+        // training batch is partial (here 1 sample, smaller than the
+        // replica count, so some shards are empty) and the eval set is a
+        // partial batch too; every scheduler × replica combination must
+        // match the sequential single-replica reference, and evaluation
+        // must count every sample exactly once at any batch size
+        let _guard = par::scoped_thread_workers(6);
+        let (tr, te) = data(97, 33);
+        assert_eq!(tr.len() % 32, 1, "fixture must end on a partial batch");
+        let cfg = TrainConfig {
+            epochs: 2,
+            batch: 32,
+            hyper: Hyper { gamma_inv: 128, eta_fw_inv: 12000,
+                           eta_lr_inv: 3000 },
+            ..Default::default()
+        };
+        let reference = run_fit(&tr, &te, Scheduler::Sequential, 1, 0.25,
+                                &cfg);
+        for sched in [Scheduler::Sequential, Scheduler::BlockParallel,
+                      Scheduler::Pipelined] {
+            for n in [1usize, 2, 4] {
+                let got = run_fit(&tr, &te, sched, n, 0.25, &cfg);
+                assert_equal(
+                    &reference, &got,
+                    &format!("partial-batch {} replicas={n}", sched.name()),
+                );
+            }
+        }
+        // evaluate: partial tail batches must not drop or double-count
+        let a = evaluate(&reference.1, &te, 64); // 33 % 64 != 0
+        let b = evaluate(&reference.1, &te, 7); //  33 % 7  != 0
+        let c = evaluate(&reference.1, &te, 33); // exact
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn empty_shards_contribute_reduction_identity() {
+        // batch of 2 over 4 replicas: two shards are empty; the step must
+        // still match the single-replica step exactly
+        let spec = zoo::get("tinycnn").unwrap();
+        let hp = Hyper { gamma_inv: 64, eta_fw_inv: 0, eta_lr_inv: 0 };
+        let mut rng = Pcg32::new(5);
+        let (x, labels) = toy_batch(&mut rng, &spec, 2);
+        let mut net_ref = Network::new(spec.clone(), 4);
+        let mut drop_ref = DropoutRngs::new(4, net_ref.blocks.len());
+        let want = net_ref.train_batch(&x, &labels, &hp, &mut drop_ref);
+        let mut net = Network::new(spec.clone(), 4);
+        let mut drop = DropoutRngs::new(4, net.blocks.len());
+        let mut rt = ReplicaTrainer::new(&net, 4, false);
+        let rep = rt.step(&mut net, &x, &labels, &hp, &mut drop);
+        assert_eq!(rep.block_loss, want.block_loss);
+        assert_eq!(rep.head_loss, want.head_loss);
+        assert_eq!(rep.correct, want.correct);
+        for ((na, ta), (nb, tb)) in
+            net_ref.weights().iter().zip(net.weights())
+        {
+            assert_eq!(na, &nb);
+            assert_eq!(ta, &tb, "weight {na} diverged with empty shards");
+        }
+    }
+
+    #[test]
+    fn apply_step_from_zero_grads_applies_only_decay() {
+        let mut net = Network::new(zoo::get("mlp1-mini").unwrap(), 1);
+        let zeros = GradSet::zeros_like(&net);
+        let before: Vec<ITensor> =
+            net.weights().into_iter().map(|(_, w)| w.clone()).collect();
+        // no decay: zero gradient must be a no-op
+        apply_step(&mut net, &zeros,
+                   &Hyper { gamma_inv: 512, eta_fw_inv: 0, eta_lr_inv: 0 });
+        for ((_, w), b) in net.weights().iter().zip(&before) {
+            assert_eq!(*w, b);
+        }
+    }
+}

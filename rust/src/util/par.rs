@@ -82,6 +82,37 @@ pub fn current_workers() -> usize {
     }
 }
 
+/// The raw thread-local override (0 = unset). Scoped code that narrows
+/// the budget temporarily (the replica trainer's per-shard split, bench
+/// harnesses) saves this and restores it afterwards instead of
+/// clobbering an enclosing override back to "unset" — use
+/// [`scoped_thread_workers`], which makes that the only option.
+pub fn thread_workers() -> usize {
+    THREAD_WORKERS.get()
+}
+
+/// RAII scope for the thread-local worker budget: the override the
+/// guard saw at construction (including "unset") comes back on drop —
+/// panic-safe, and nesting-correct by construction. The replica
+/// trainer's per-shard budget split and the bench harnesses use this
+/// instead of hand-rolled reset guards.
+#[must_use = "dropping the guard immediately restores the old budget"]
+pub struct BudgetScope(usize);
+
+impl Drop for BudgetScope {
+    fn drop(&mut self) {
+        set_thread_workers(self.0);
+    }
+}
+
+/// Set this thread's worker budget for the lifetime of the returned
+/// guard.
+pub fn scoped_thread_workers(n: usize) -> BudgetScope {
+    let prev = thread_workers();
+    set_thread_workers(n);
+    BudgetScope(prev)
+}
+
 fn workers_from_env(primary: Option<String>, legacy: Option<String>) -> usize {
     for v in [primary, legacy].into_iter().flatten() {
         if let Ok(n) = v.trim().parse::<usize>() {
@@ -552,6 +583,22 @@ mod tests {
         assert_eq!(current_workers(), 1, "other thread must not leak");
         set_thread_workers(0);
         assert_eq!(current_workers(), default_workers());
+    }
+
+    #[test]
+    fn scoped_budget_restores_enclosing_override() {
+        // nested scopes restore the *prior* override, not "unset"
+        set_thread_workers(0);
+        {
+            let _outer = scoped_thread_workers(5);
+            assert_eq!(current_workers(), 5);
+            {
+                let _inner = scoped_thread_workers(2);
+                assert_eq!(current_workers(), 2);
+            }
+            assert_eq!(current_workers(), 5, "inner scope must restore 5");
+        }
+        assert_eq!(thread_workers(), 0, "outer scope must restore unset");
     }
 
     #[test]

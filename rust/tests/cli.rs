@@ -101,12 +101,13 @@ fn run_spec_smoke_emits_bench_json() {
     assert!(stderr.contains("exist.json"), "{stderr}");
 }
 
-/// Strip machine-dependent keys (timings, RSS, scheduler label) so BENCH
-/// records from different scheduler runs can be compared byte-for-byte.
+/// Strip machine-dependent keys (timings, RSS, scheduler/replica labels)
+/// so BENCH records from different scheduler or replica-count runs can
+/// be compared byte-for-byte.
 fn strip_volatile(j: nitro::util::jsonio::Json) -> nitro::util::jsonio::Json {
     use nitro::util::jsonio::Json;
     const VOLATILE: &[&str] = &["secs", "wall_secs", "peak_rss_kb",
-                                "scheduler"];
+                                "scheduler", "replicas"];
     match j {
         Json::Object(m) => Json::Object(
             m.into_iter()
@@ -163,6 +164,70 @@ fn run_spec_metrics_identical_across_all_three_schedulers() {
         run(&["run-spec", "../experiments/smoke.json", "--scheduler", "warp"]);
     assert_eq!(code, 2);
     assert!(stderr.contains("unknown scheduler"), "{stderr}");
+}
+
+#[test]
+fn run_spec_metrics_identical_across_replica_counts() {
+    // the replicated-training determinism contract end to end through
+    // the binary: same spec, replicas 1/2/4, byte-identical metrics once
+    // the timing/scheduler/replicas keys are stripped
+    let dir = std::env::temp_dir().join("nitro_cli_replicas");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut records = Vec::new();
+    for n in ["1", "2", "4"] {
+        let sub = dir.join(format!("r{n}"));
+        std::fs::create_dir_all(&sub).unwrap();
+        let sub_s = sub.to_str().unwrap();
+        // NITRO_WORKERS=8 lets the shard compute genuinely fan out
+        let out = nitro()
+            .env("NITRO_WORKERS", "8")
+            .args([
+                "run-spec", "../experiments/smoke.json", "--epochs", "1",
+                "--replicas", n, "--out-dir", sub_s, "--bench-dir", sub_s,
+            ])
+            .output()
+            .expect("spawn nitro");
+        let code = out.status.code().unwrap_or(-1);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert_eq!(code, 0, "replicas={n}: {stderr}");
+        let raw = std::fs::read_to_string(sub.join("BENCH_smoke.json"))
+            .unwrap();
+        // the record carries the replica count actually used
+        assert!(raw.contains(&format!("\"replicas\": {n}")), "{raw}");
+        records.push(strip_volatile(
+            nitro::util::jsonio::Json::parse(&raw).unwrap(),
+        ));
+    }
+    assert_eq!(records[0], records[1],
+               "replicas=2 metrics differ from replicas=1");
+    assert_eq!(records[0], records[2],
+               "replicas=4 metrics differ from replicas=1");
+}
+
+#[test]
+fn train_cli_replicas_metric_identical() {
+    // `nitro train --replicas N`: stdout (param counts + final accuracy)
+    // must be byte-identical across replica counts; 120 samples at the
+    // default batch 64 end on a partial batch, so uneven shards are
+    // exercised too
+    let mut outputs = Vec::new();
+    for n in ["1", "3"] {
+        let (code, stdout, stderr) = run(&[
+            "train", "--preset", "tinycnn", "--dataset", "tiny",
+            "--epochs", "3", "--n-train", "120", "--n-test", "40",
+            "--p-c", "0.2", "--p-l", "0.2", "--quiet", "--replicas", n,
+        ]);
+        assert_eq!(code, 0, "replicas={n}: {stderr}");
+        assert!(stdout.contains("final test accuracy"), "{stdout}");
+        outputs.push(stdout);
+    }
+    assert_eq!(outputs[0], outputs[1],
+               "--replicas 3 changed the training metrics");
+    // 0 is rejected, matching the spec parser — not silently clamped
+    let (code, _, stderr) =
+        run(&["train", "--preset", "tinycnn", "--replicas", "0"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("replicas"), "{stderr}");
 }
 
 #[test]
