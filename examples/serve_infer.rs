@@ -99,8 +99,8 @@ fn main() {
     // (`coordinator::serve`) over the grad-free fused forward — here fed
     // from concurrent client threads, as `nitro serve --listen` would be
     use nitro::coordinator::serve::{MicroBatcher, ModelRegistry,
-                                    ServeConfig};
-    let mut registry = ModelRegistry::new();
+                                    ServeConfig, ShardedBatcher};
+    let registry = ModelRegistry::new();
     let dir = std::env::temp_dir().join("nitro_serve_example");
     std::fs::create_dir_all(&dir).unwrap();
     let ckpt = dir.join("tinycnn.ckpt");
@@ -110,8 +110,9 @@ fn main() {
     nitro::train::checkpoint::save(&serve_net, ckpt.to_str().unwrap())
         .expect("save checkpoint");
     registry.load(ckpt.to_str().unwrap()).expect("load checkpoint");
+    let registry = std::sync::Arc::new(registry);
     let mb = MicroBatcher::start(
-        std::sync::Arc::new(registry),
+        registry.clone(),
         ServeConfig { max_batch: 32, max_wait_us: 200,
                       ..Default::default() },
     );
@@ -150,5 +151,19 @@ fn main() {
     assert_eq!(y.data[..], full.data[..10],
                "micro-batched logits diverge from Network::infer");
     println!("micro-batch determinism ✓");
+    // shard invariance: every shard of the production ShardedBatcher
+    // serves the same bits (the `nitro serve --shards N` path)
+    let sb = ShardedBatcher::start(
+        registry,
+        ServeConfig { shards: 2, max_wait_us: 0, ..Default::default() },
+    );
+    for key in 0..sb.nshards() as u64 {
+        let sample = requests[0].data[..ss].to_vec();
+        let (m, y) = sb.client(key).predict(None, sample).unwrap();
+        assert_eq!(y.data[..], full.data[..10],
+                   "shard {key} logits diverge");
+        assert_eq!(m.version, 1);
+    }
+    println!("shard determinism ✓ ({} shards)", sb.nshards());
     println!("serve_infer PASSED");
 }

@@ -249,10 +249,12 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
         }
     }
 
-    // ---- serve throughput (requests/sec, p50/p99 vs micro-batch size) --
-    // written to its own schema-versioned BENCH_serve.json; the serving
-    // identity checks (ckpt round-trip, fused-vs-reference inference)
-    // feed the same hard bit-exactness gate as the kernel paths
+    // ---- serve throughput (requests/sec, p50/p99 vs micro-batch size,
+    // plus a non-quick open-loop overload section through the TCP server
+    // and loadgen) -- written to its own schema-versioned
+    // BENCH_serve.json; the serving identity checks (ckpt round-trip,
+    // fused-vs-reference inference, shard count, hot reload of identical
+    // bytes) feed the same hard bit-exactness gate as the kernel paths
     if !opts.serve_out.is_empty() {
         crate::coordinator::serve::bench_serve(
             opts.quick,

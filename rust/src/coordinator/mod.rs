@@ -1,8 +1,10 @@
 //! L3 coordinator: the execution-engine abstraction (pure-Rust NativeEngine
 //! vs artifact-backed PjrtEngine), the declarative experiment harness
 //! (`spec` + `runner` — the paper's tables as JSON under `experiments/`),
-//! the inference-serving subsystem (`serve` — model registry +
-//! micro-batcher behind `nitro serve` / `nitro predict`), the remaining
+//! the inference-serving subsystem (`serve` — versioned model registry,
+//! sharded micro-batchers, latency-budget load shedding, and the v0/v1
+//! wire protocol behind `nitro serve` / `nitro predict` /
+//! `nitro loadgen`), the remaining
 //! imperative figure drivers (`experiments`), and the CLI plumbing.
 
 pub mod engine;
@@ -13,6 +15,6 @@ pub mod serve;
 pub mod spec;
 
 pub use engine::{Engine, NativeEngine, PjrtEngine};
-pub use serve::{BatchClient, MicroBatcher, ModelRegistry, ServeConfig,
-                ServedModel};
+pub use serve::{BatchClient, ErrorKind, MicroBatcher, ModelRegistry,
+                ServeConfig, ServeError, ServedModel, ShardedBatcher};
 pub use spec::{EngineKind, ExperimentSpec};

@@ -1,0 +1,627 @@
+//! Dynamic micro-batching executors: one per shard, thread-per-core.
+//!
+//! A [`MicroBatcher`] owns a single executor thread that coalesces
+//! concurrent predict requests into micro-batches and runs them through
+//! the grad-free fused forward path ([`Network::infer_into`]) with one
+//! long-lived [`InferScratch`], so steady-state serving performs no
+//! forward-path allocation. A [`ShardedBatcher`] runs N of them, each
+//! executor pinned to a slice of the kernel worker budget
+//! (`par::scoped_thread_workers`), so shards' fused forwards do not
+//! fight over the same pool threads.
+//!
+//! **Determinism contract:** per-sample logits are a function of the
+//! checkpoint and the sample alone — every kernel is row/sample
+//! independent — so results are bit-identical regardless of micro-batch
+//! composition, coalescing timing, shard assignment, kernel budget and
+//! `NITRO_WORKERS`. CI asserts this end to end.
+//!
+//! Batches are grouped by model *identity* (`Arc` pointer), not name: a
+//! hot reload swaps the registry entry mid-stream, and two requests that
+//! resolved to different versions of the same name must never share one
+//! fused forward.
+
+use super::registry::ModelRegistry;
+use super::shed::ShardState;
+use super::wire::ServeError;
+use super::{ServeConfig, ServedModel};
+use crate::nn::InferScratch;
+use crate::tensor::ITensor;
+use crate::util::par;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+struct PredictReq {
+    model: Arc<ServedModel>,
+    x: Vec<i32>,
+    nsamples: usize,
+    /// Admission time; end-to-end latency is measured from here.
+    enqueued: Instant,
+    resp: mpsc::SyncSender<ITensor>,
+}
+
+/// Handle for submitting predict requests; clone one per connection
+/// thread. [`Self::predict`] blocks until the micro-batch containing the
+/// request has executed.
+#[derive(Clone)]
+pub struct BatchClient {
+    tx: mpsc::Sender<PredictReq>,
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+    state: Arc<ShardState>,
+}
+
+impl BatchClient {
+    /// Score `x` (one or more flattened samples) on `model` (`None` =
+    /// the registry's single model). Returns the resolved model and the
+    /// `(n, num_classes)` logits. Rejections are typed: resolution
+    /// failures map to `unknown_model` / `bad_request`, size violations
+    /// to `too_large`, admission-control rejections to `overloaded`.
+    pub fn predict(&self, model: Option<&str>, x: Vec<i32>)
+                   -> Result<(Arc<ServedModel>, ITensor), ServeError> {
+        let m = self.registry.resolve(model)?;
+        let ss = m.sample_size;
+        if x.is_empty() || x.len() % ss != 0 {
+            return Err(ServeError::bad_request(format!(
+                "input length {} is not a positive multiple of '{}' \
+                 sample size {ss}",
+                x.len(),
+                m.name
+            )));
+        }
+        let nsamples = x.len() / ss;
+        let cap = self.cfg.max_request_samples.max(1);
+        if nsamples > cap {
+            return Err(ServeError::too_large(format!(
+                "request has {nsamples} samples, above the per-request \
+                 limit {cap} — split it into smaller requests"
+            )));
+        }
+        let budget_ns = self.cfg.queue_budget_us.saturating_mul(1000);
+        if let Err(wait_ns) = self.state.try_admit(nsamples, budget_ns) {
+            return Err(ServeError::overloaded(format!(
+                "shard {} queue needs ~{}us, over the {}us budget — \
+                 retry with backoff",
+                self.state.shard(),
+                wait_ns / 1000,
+                self.cfg.queue_budget_us
+            )));
+        }
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        if self
+            .tx
+            .send(PredictReq {
+                model: m.clone(),
+                x,
+                nsamples,
+                enqueued: Instant::now(),
+                resp: rtx,
+            })
+            .is_err()
+        {
+            self.state.cancel(nsamples);
+            return Err(ServeError::internal(
+                "serve executor has shut down"));
+        }
+        self.registry.note_request(&m.name, nsamples);
+        let y = rrx.recv().map_err(|_| {
+            ServeError::internal("serve executor dropped the request")
+        })?;
+        Ok((m, y))
+    }
+}
+
+/// One shard of the serving plane: an executor thread draining a request
+/// queue, coalescing up to `max_batch` samples (waiting at most
+/// `max_wait_us` once work is pending), grouping them by model identity,
+/// and running each group as a single fused forward on the worker-pool
+/// kernels under this shard's kernel budget.
+pub struct MicroBatcher {
+    tx: Option<mpsc::Sender<PredictReq>>,
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+    state: Arc<ShardState>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MicroBatcher {
+    /// Single-shard batcher with the full kernel budget (the stdio
+    /// server, `nitro predict`'s bench, and the public pre-shard API).
+    pub fn start(registry: Arc<ModelRegistry>, cfg: ServeConfig)
+                 -> MicroBatcher {
+        MicroBatcher::start_shard(registry, cfg, 0,
+                                  par::current_workers())
+    }
+
+    /// One shard of a [`ShardedBatcher`]: executes with a scoped kernel
+    /// budget of `kernel_workers` pool threads.
+    pub fn start_shard(registry: Arc<ModelRegistry>, cfg: ServeConfig,
+                       shard: usize, kernel_workers: usize)
+                       -> MicroBatcher {
+        let (tx, rx) = mpsc::channel::<PredictReq>();
+        let state = Arc::new(ShardState::new(shard));
+        let st = state.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("nitro-serve-exec{shard}"))
+            .spawn(move || executor(rx, cfg, st, kernel_workers))
+            .expect("spawn serve executor");
+        MicroBatcher {
+            tx: Some(tx),
+            registry,
+            cfg,
+            state,
+            handle: Some(handle),
+        }
+    }
+
+    /// A request handle for this batcher. Clients hold a sender into the
+    /// executor queue, so every client must be dropped before (or
+    /// strictly inside the lifetime of) the `MicroBatcher` — its `Drop`
+    /// joins the executor, which exits only once all senders are gone.
+    pub fn client(&self) -> BatchClient {
+        BatchClient {
+            tx: self.tx.as_ref().expect("running").clone(),
+            registry: self.registry.clone(),
+            cfg: self.cfg,
+            state: self.state.clone(),
+        }
+    }
+
+    /// This shard's admission/latency state (stats and tests).
+    pub fn state(&self) -> Arc<ShardState> {
+        self.state.clone()
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        // closing the channel ends the executor loop; join so in-flight
+        // responses are delivered before the batcher disappears
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Thread-per-core serving plane: `cfg.shards` micro-batchers, each with
+/// `current_workers / shards` (min 1) kernel workers. Connections hash
+/// onto shards via [`Self::client`]; shards share nothing but the
+/// registry, so there is no cross-shard lock on the request path.
+pub struct ShardedBatcher {
+    shards: Vec<MicroBatcher>,
+}
+
+impl ShardedBatcher {
+    pub fn start(registry: Arc<ModelRegistry>, cfg: ServeConfig)
+                 -> ShardedBatcher {
+        let n = cfg.shards.max(1);
+        let kernel_workers = (par::current_workers() / n).max(1);
+        let shards = (0..n)
+            .map(|s| {
+                MicroBatcher::start_shard(
+                    registry.clone(), cfg, s, kernel_workers)
+            })
+            .collect();
+        ShardedBatcher { shards }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The client for the shard owning `key` (connection id, request
+    /// counter, ...). A fixed key always lands on the same shard, so one
+    /// connection's requests stay ordered.
+    pub fn client(&self, key: u64) -> BatchClient {
+        self.shards[(key % self.shards.len() as u64) as usize].client()
+    }
+
+    /// Per-shard states, indexed by shard id (stats responses).
+    pub fn states(&self) -> Vec<Arc<ShardState>> {
+        self.shards.iter().map(|s| s.state()).collect()
+    }
+}
+
+fn executor(rx: mpsc::Receiver<PredictReq>, cfg: ServeConfig,
+            state: Arc<ShardState>, kernel_workers: usize) {
+    // the shard's slice of the pool, held for the thread's lifetime
+    let _budget = par::scoped_thread_workers(kernel_workers.max(1));
+    let mut scratch = InferScratch::new();
+    let mut xbuf = ITensor::empty();
+    let mut out = ITensor::empty();
+    let max_batch = cfg.max_batch.max(1);
+    while let Ok(first) = rx.recv() {
+        let mut pending = vec![first];
+        let mut total = pending[0].nsamples;
+        // coalescing window: take whatever is queued, then wait out the
+        // remainder of the window for stragglers
+        let deadline = Instant::now()
+            + Duration::from_micros(cfg.max_wait_us);
+        while total < max_batch {
+            let now = Instant::now();
+            let r = if now >= deadline {
+                match rx.try_recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            } else {
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            };
+            total += r.nsamples;
+            pending.push(r);
+        }
+        // group by model identity (Arc pointer), preserving arrival
+        // order within each group — name grouping would fuse requests
+        // resolved against different versions across a hot reload
+        while !pending.is_empty() {
+            let key = Arc::as_ptr(&pending[0].model);
+            let group: Vec<PredictReq> = {
+                let (g, rest): (Vec<_>, Vec<_>) = pending
+                    .into_iter()
+                    .partition(|r| Arc::as_ptr(&r.model) == key);
+                pending = rest;
+                g
+            };
+            run_group(group, &state, &mut scratch, &mut xbuf, &mut out);
+        }
+    }
+}
+
+/// Execute one same-model group as a single fused forward and scatter the
+/// per-request logit rows back to their response channels. Shard state is
+/// updated **before** any response is sent: a client that has observed
+/// its own response is guaranteed to observe the post-batch admission
+/// state too (the shedding tests lean on this ordering).
+fn run_group(group: Vec<PredictReq>, state: &ShardState,
+             scratch: &mut InferScratch, xbuf: &mut ITensor,
+             out: &mut ITensor) {
+    let model = group[0].model.clone();
+    let n: usize = group.iter().map(|r| r.nsamples).sum();
+    xbuf.data.clear();
+    for r in &group {
+        xbuf.data.extend_from_slice(&r.x);
+    }
+    xbuf.shape.clear();
+    xbuf.shape.push(n);
+    xbuf.shape.extend(&model.input_shape);
+    let t0 = Instant::now();
+    model.net.infer_into(xbuf, scratch, out);
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+    state.complete_batch(group.len(), n, exec_ns);
+    let g = model.num_classes;
+    let mut row = 0usize;
+    for r in group {
+        let y = ITensor::from_vec(
+            &[r.nsamples, g],
+            out.data[row * g..(row + r.nsamples) * g].to_vec(),
+        );
+        row += r.nsamples;
+        state.record_latency_ns(r.enqueued.elapsed().as_nanos() as u64);
+        let _ = r.resp.send(y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{rand_samples, saved_model};
+    use super::super::wire::ErrorKind;
+    use super::*;
+    use crate::nn::{zoo, Network};
+    use crate::train::checkpoint;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn micro_batched_logits_equal_reference_any_composition() {
+        // the serving determinism contract: logits are bit-identical to
+        // Network::infer regardless of how requests coalesce into batches
+        let (path, net) = saved_model("tinycnn", 5, "comp");
+        let reg =
+            Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        let mut rng = Pcg32::new(31);
+        let flat = rand_samples(&model, 7, &mut rng);
+        let x = ITensor::from_vec(&model.batch_shape(7), flat.clone());
+        let want = net.infer(&x);
+        let g = model.num_classes;
+        for (max_batch, wait) in [(1usize, 0u64), (3, 0), (64, 100)] {
+            let mb = MicroBatcher::start(
+                reg.clone(),
+                ServeConfig { max_batch, max_wait_us: wait,
+                              ..Default::default() },
+            );
+            let client = mb.client();
+            // one request per sample
+            for i in 0..7 {
+                let ss = model.sample_size;
+                let (_, y) = client
+                    .predict(None, flat[i * ss..(i + 1) * ss].to_vec())
+                    .unwrap();
+                assert_eq!(y.shape, vec![1, g]);
+                assert_eq!(y.data, want.data[i * g..(i + 1) * g],
+                           "sample {i} max_batch {max_batch}");
+            }
+            // one multi-sample request
+            let (_, y) = client.predict(None, flat.clone()).unwrap();
+            assert_eq!(y.data, want.data, "max_batch {max_batch}");
+        }
+    }
+
+    #[test]
+    fn concurrent_clients_coalesce_and_stay_bitexact() {
+        let (path, net) = saved_model("tinycnn", 8, "conc");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        let mut rng = Pcg32::new(77);
+        let nreq = 12usize;
+        let flat = rand_samples(&model, nreq, &mut rng);
+        let x = ITensor::from_vec(&model.batch_shape(nreq), flat.clone());
+        let want = net.infer(&x);
+        let g = model.num_classes;
+        let mb = MicroBatcher::start(
+            reg.clone(),
+            ServeConfig { max_batch: 8, max_wait_us: 2000,
+                          ..Default::default() },
+        );
+        let ss = model.sample_size;
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for i in 0..nreq {
+                let client = mb.client();
+                let sample = flat[i * ss..(i + 1) * ss].to_vec();
+                joins.push(s.spawn(move || {
+                    client.predict(None, sample).unwrap().1
+                }));
+            }
+            for (i, j) in joins.into_iter().enumerate() {
+                let y = j.join().unwrap();
+                assert_eq!(y.data, want.data[i * g..(i + 1) * g],
+                           "concurrent sample {i}");
+            }
+        });
+        // the shard saw every request and recorded a latency for each
+        let st = mb.state();
+        assert_eq!(st.completed_count(), nreq as u64);
+        assert_eq!(st.snapshot_hist().count(), nreq as u64);
+        assert_eq!(st.depth_samples(), 0);
+    }
+
+    #[test]
+    fn stress_ten_concurrent_clients_mixed_batches_no_deadlock() {
+        // serve concurrency stress: ≥ 8 concurrent clients hammer the
+        // micro-batcher with mixed batch sizes across several rounds.
+        // Completion of every request is the no-deadlock assertion (a
+        // wedged executor hangs the join and fails via test timeout);
+        // every per-request logit block must be bit-identical to the
+        // reference forward — the `nitro predict` path — regardless of
+        // how the requests coalesced.
+        let (path, net) = saved_model("tinycnn", 11, "stress");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        let mut rng = Pcg32::new(123);
+        let (nclients, rounds) = (10usize, 6usize);
+        let sizes = [1usize, 2, 3, 5, 8];
+        // pre-generate every client's request sequence (mixed sizes)
+        let requests: Vec<Vec<Vec<i32>>> = (0..nclients)
+            .map(|c| {
+                (0..rounds)
+                    .map(|r| {
+                        let n = sizes[(c + r) % sizes.len()];
+                        rand_samples(&model, n, &mut rng)
+                    })
+                    .collect()
+            })
+            .collect();
+        let g = model.num_classes;
+        let mb = MicroBatcher::start(
+            reg.clone(),
+            ServeConfig { max_batch: 16, max_wait_us: 500,
+                          ..Default::default() },
+        );
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for flats in &requests {
+                let client = mb.client();
+                joins.push(s.spawn(move || {
+                    flats
+                        .iter()
+                        .map(|f| client.predict(None, f.clone()).unwrap().1)
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for (c, j) in joins.into_iter().enumerate() {
+                let got = j.join().unwrap();
+                assert_eq!(got.len(), rounds);
+                for (r, y) in got.iter().enumerate() {
+                    let flat = &requests[c][r];
+                    let n = flat.len() / model.sample_size;
+                    let x = ITensor::from_vec(&model.batch_shape(n),
+                                              flat.clone());
+                    let want = net.infer(&x);
+                    assert_eq!(y.shape, vec![n, g],
+                               "client {c} round {r}: shape");
+                    assert_eq!(y.data, want.data,
+                               "client {c} round {r}: logits drifted");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn oversized_requests_rejected_not_executed() {
+        let (path, _) = saved_model("mlp1-mini", 6, "cap");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        let mb = MicroBatcher::start(
+            reg.clone(),
+            ServeConfig {
+                max_batch: 4,
+                max_wait_us: 0,
+                max_request_samples: 2,
+                ..Default::default()
+            },
+        );
+        let client = mb.client();
+        let mut rng = Pcg32::new(4);
+        let ok = rand_samples(&model, 2, &mut rng);
+        assert!(client.predict(None, ok).is_ok());
+        let too_big = rand_samples(&model, 3, &mut rng);
+        let err = client.predict(None, too_big).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::TooLarge);
+        assert!(err.msg.contains("per-request"), "{err}");
+        // a length mismatch is bad_request, not too_large
+        let err = client.predict(None, vec![1, 2, 3]).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::BadRequest);
+    }
+
+    #[test]
+    fn shed_when_over_budget_and_recovers() {
+        let (path, _) = saved_model("tinycnn", 13, "shed");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        // one shard, one kernel worker, a long coalescing window (so an
+        // admitted batch stays pending while we probe) and a 1us budget
+        let mb = MicroBatcher::start_shard(
+            reg.clone(),
+            ServeConfig {
+                max_batch: 1024,
+                max_wait_us: 500_000,
+                queue_budget_us: 1,
+                ..Default::default()
+            },
+            0,
+            1,
+        );
+        let client = mb.client();
+        let state = mb.state();
+        let mut rng = Pcg32::new(9);
+        // prime: depth 0 admits despite the 1us budget (bootstrap, then
+        // idle-shard rule), and seeds the EWMA with a real service time
+        let one = rand_samples(&model, 1, &mut rng);
+        client.predict(None, one.clone()).unwrap();
+        assert!(state.ewma_ns() > 0);
+        // park 4 samples in the executor's coalescing window
+        let parked = rand_samples(&model, 4, &mut rng);
+        let t = std::thread::spawn({
+            let client = client.clone();
+            move || client.predict(None, parked).unwrap().1
+        });
+        while state.depth_samples() == 0 {
+            std::thread::yield_now();
+        }
+        // queue wait is now 4 x EWMA (tinycnn inference is far over
+        // 250ns/sample), so the 1us budget sheds deterministically
+        let err = client.predict(None, one.clone()).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Overloaded);
+        assert!(err.msg.contains("retry with backoff"), "{err}");
+        assert_eq!(state.shed_count(), 1);
+        // the server stays live: the parked batch completes...
+        let y = t.join().unwrap();
+        assert_eq!(y.shape[0], 4);
+        // ...and with the queue drained the same request is admitted
+        assert_eq!(state.depth_samples(), 0);
+        assert!(client.predict(None, one).is_ok());
+        assert_eq!(state.shed_count(), 1);
+    }
+
+    #[test]
+    fn sharded_clients_bitexact_across_shards() {
+        let (path, net) = saved_model("tinycnn", 15, "shards");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let model = reg.resolve(None).unwrap();
+        let mut rng = Pcg32::new(55);
+        let flat = rand_samples(&model, 3, &mut rng);
+        let x = ITensor::from_vec(&model.batch_shape(3), flat.clone());
+        let want = net.infer(&x);
+        let sb = ShardedBatcher::start(
+            reg.clone(),
+            ServeConfig { shards: 3, max_wait_us: 0,
+                          ..Default::default() },
+        );
+        assert_eq!(sb.nshards(), 3);
+        // every shard serves bit-identical logits for the same request
+        for key in 0..6u64 {
+            let (m, y) = sb.client(key).predict(None, flat.clone())
+                .unwrap();
+            assert_eq!(m.version, 1);
+            assert_eq!(y.data, want.data, "key {key}");
+        }
+        // a fixed key maps to a fixed shard; keys cover all shards
+        let states = sb.states();
+        assert_eq!(states.len(), 3);
+        let total: u64 =
+            states.iter().map(|s| s.completed_count()).sum();
+        assert_eq!(total, 6);
+        for s in &states {
+            assert_eq!(s.completed_count(), 2, "shard {}", s.shard());
+        }
+    }
+
+    #[test]
+    fn hot_reload_race_no_torn_model() {
+        // hammer predicts from 4 threads while the main thread reloads
+        // the checkpoint 8 times, alternating between two weight sets.
+        // Every response must match one of the two reference outputs
+        // exactly — never a mixture — and versions must end monotone.
+        let spec = zoo::get("tinycnn").unwrap();
+        let net_a = Network::new(spec.clone(), 21);
+        let net_b = Network::new(spec.clone(), 22);
+        let dir = std::env::temp_dir().join("nitro_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("reload-race-{}.ckpt",
+                                    std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        checkpoint::save(&net_a, &path).unwrap();
+        let reg = Arc::new(ModelRegistry::new());
+        reg.load(&path).unwrap();
+        let model = reg.resolve(None).unwrap();
+        let mut rng = Pcg32::new(99);
+        let flat = rand_samples(&model, 1, &mut rng);
+        let x = ITensor::from_vec(&model.batch_shape(1), flat.clone());
+        let want_a = net_a.infer(&x);
+        let want_b = net_b.infer(&x);
+        assert_ne!(want_a.data, want_b.data, "seeds must differ");
+        let sb = ShardedBatcher::start(
+            reg.clone(),
+            ServeConfig { shards: 2, max_wait_us: 0,
+                          ..Default::default() },
+        );
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for c in 0..4u64 {
+                let client = sb.client(c);
+                let flat = flat.clone();
+                let (wa, wb) = (want_a.data.clone(), want_b.data.clone());
+                joins.push(s.spawn(move || {
+                    for i in 0..40 {
+                        let (m, y) = client
+                            .predict(None, flat.clone())
+                            .unwrap();
+                        assert!(
+                            y.data == wa || y.data == wb,
+                            "client {c} iter {i} v{}: torn logits",
+                            m.version
+                        );
+                    }
+                }));
+            }
+            for v in 2..=9u64 {
+                let net = if v % 2 == 0 { &net_b } else { &net_a };
+                checkpoint::save(net, &path).unwrap();
+                for (name, r) in reg.reload_all() {
+                    assert_eq!(r.as_ref().unwrap(), &v, "{name}");
+                }
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+        assert_eq!(reg.resolve(None).unwrap().version, 9);
+        // final weights are net_a's (v9 = odd): served logits match
+        let (_, y) = sb.client(0).predict(None, flat.clone()).unwrap();
+        assert_eq!(y.data, want_a.data);
+        let _ = std::fs::remove_file(&path);
+    }
+}

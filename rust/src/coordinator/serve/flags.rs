@@ -1,0 +1,114 @@
+//! One flag table for the serving CLI family (`serve`, `predict`,
+//! `loadgen`): each flag declares which subcommands it belongs to, and
+//! [`command`] projects the table into a `cli::Command`. `--help` for
+//! every subcommand is generated from the same rows, so a flag cannot
+//! drift between the command that documents it and the one that parses
+//! it.
+
+use crate::util::cli::Command;
+
+pub const SERVE: u8 = 1 << 0;
+pub const PREDICT: u8 = 1 << 1;
+pub const LOADGEN: u8 = 1 << 2;
+
+pub struct FlagDef {
+    pub name: &'static str,
+    pub default: &'static str,
+    pub help: &'static str,
+    pub is_flag: bool,
+    /// Which subcommands carry this flag (bitwise OR of the masks).
+    pub mask: u8,
+}
+
+const fn opt(name: &'static str, default: &'static str,
+             help: &'static str, mask: u8) -> FlagDef {
+    FlagDef { name, default, help, is_flag: false, mask }
+}
+
+const fn flag(name: &'static str, help: &'static str, mask: u8)
+              -> FlagDef {
+    FlagDef { name, default: "", help, is_flag: true, mask }
+}
+
+pub const TABLE: &[FlagDef] = &[
+    opt("models", "",
+        "name=path[,name=path...] checkpoints to serve (a bare path \
+         serves under its recorded spec name)",
+        SERVE),
+    opt("listen", "",
+        "host:port TCP listener (default: JSON lines on stdin/stdout)",
+        SERVE),
+    opt("shards", "0",
+        "micro-batcher shards, each with its own executor thread and \
+         kernel budget (0 = one per available worker, capped at 64)",
+        SERVE),
+    opt("max-batch", "64",
+        "sample target per executed micro-batch", SERVE),
+    opt("max-wait-us", "200",
+        "coalescing window after the first queued request, us", SERVE),
+    opt("max-request", "4096",
+        "max samples in one request", SERVE),
+    opt("queue-budget-ms", "100",
+        "shed requests whose estimated queue wait exceeds this budget \
+         (0 = never shed)",
+        SERVE),
+    flag("reload-on-sighup",
+         "hot-reload every checkpoint from its path on SIGHUP", SERVE),
+    opt("out", "",
+        "write the response/report JSON here instead of stdout",
+        PREDICT | LOADGEN),
+    opt("connect", "127.0.0.1:7878",
+        "host:port of a running `nitro serve --listen`", LOADGEN),
+    opt("rate", "1000",
+        "offered request rate per second, open-loop", LOADGEN),
+    opt("duration", "3", "run length, seconds", LOADGEN),
+    opt("connections", "4", "concurrent connections", LOADGEN),
+    opt("req-samples", "1", "samples per request", LOADGEN),
+    opt("model", "",
+        "model name to target (default: the server's single model)",
+        LOADGEN),
+    opt("seed", "42", "payload RNG seed", LOADGEN),
+];
+
+/// Build the `cli::Command` for one subcommand from the shared table.
+pub fn command(name: &'static str, about: &'static str, mask: u8)
+               -> Command {
+    let mut c = Command::new(name, about);
+    for f in TABLE.iter().filter(|f| f.mask & mask != 0) {
+        c = if f.is_flag {
+            c.flag(f.name, f.help)
+        } else {
+            c.opt(f.name, f.default, f.help)
+        };
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_projects_per_subcommand_and_defaults_parse() {
+        let p = command("serve", "x", SERVE).parse(&[]).unwrap();
+        assert_eq!(p.get_usize("max-batch").unwrap(), 64);
+        assert_eq!(p.get_f64("queue-budget-ms").unwrap(), 100.0);
+        assert!(!p.has("reload-on-sighup"));
+        // loadgen does not know serve's flags and vice versa
+        assert!(command("loadgen", "x", LOADGEN)
+            .parse(&["--max-batch".into(), "1".into()])
+            .is_err());
+        assert!(command("serve", "x", SERVE)
+            .parse(&["--rate".into(), "10".into()])
+            .is_err());
+        // shared flags appear in both commands that declare them
+        for mask in [PREDICT, LOADGEN] {
+            let p = command("c", "x", mask)
+                .parse(&["--out".into(), "f.json".into()])
+                .unwrap();
+            assert_eq!(p.get("out"), "f.json");
+        }
+        // every table row belongs to at least one subcommand
+        assert!(TABLE.iter().all(|f| f.mask != 0));
+    }
+}

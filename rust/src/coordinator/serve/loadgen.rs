@@ -1,0 +1,423 @@
+//! `nitro loadgen`: an open-loop, coordinated-omission-safe load
+//! generator for the serve TCP endpoint.
+//!
+//! A closed-loop client (like the serve bench's throughput rows) only
+//! sends the next request after the previous response arrives, so a slow
+//! server *slows the load down* and the measured latencies silently skip
+//! exactly the moments that hurt — Gil Tene's "coordinated omission".
+//! This generator instead fixes the arrival schedule up front: request
+//! `i` of an `R`-per-second run is *due* at `start + i/R`, no matter how
+//! the server is doing. Each connection owns an interleaved slice of the
+//! schedule (connection `c` sends requests `c, c+conns, c+2·conns, ...`)
+//! and sleeps until each due time. If the server falls behind, due times
+//! land in the past — the send happens late (counted in `late_sends`)
+//! and the request's latency is still charged **from its due time**, so
+//! queueing delay the server caused shows up in the percentiles instead
+//! of vanishing from them.
+//!
+//! Responses with an `overloaded` error code count as `shed` — that is
+//! the server keeping its latency promise by refusing work — and are
+//! excluded from the latency histogram; any other error is a hard error.
+
+use super::shed::hist_json;
+use super::wire::WIRE_V1;
+use crate::util::hist::LogHistogram;
+use crate::util::jsonio::Json;
+use crate::util::rng::Pcg32;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+pub struct LoadgenOpts {
+    /// `host:port` of a running `nitro serve --listen`.
+    pub addr: String,
+    /// Offered request rate, requests/second (across all connections).
+    pub rate: f64,
+    pub duration_s: f64,
+    pub connections: usize,
+    /// Model to target; `None` = the server's single model.
+    pub model: Option<String>,
+    /// Samples per request.
+    pub req_samples: usize,
+    /// Seed for the (deterministic) request payloads.
+    pub seed: u64,
+}
+
+/// Ask the server what it serves (one v1 `stats` round-trip). Returns
+/// `(name, sample_size)` per model.
+pub fn probe_models(addr: &str)
+                    -> Result<Vec<(String, usize)>, String> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    let mut reader = BufReader::new(
+        stream.try_clone().map_err(|e| format!("clone: {e}"))?);
+    let mut writer = stream;
+    let req = Json::obj(vec![
+        ("v", Json::Int(WIRE_V1)),
+        ("id", Json::Int(0)),
+        ("op", Json::Str("stats".to_string())),
+    ]);
+    writer
+        .write_all(format!("{}\n", req.dump()).as_bytes())
+        .map_err(|e| format!("send stats probe: {e}"))?;
+    let mut line = String::new();
+    reader
+        .read_line(&mut line)
+        .map_err(|e| format!("read stats probe: {e}"))?;
+    let j = Json::parse(line.trim())
+        .map_err(|e| format!("stats probe response: {e}"))?;
+    let models = j
+        .get("models")
+        .and_then(|m| m.as_array())
+        .ok_or_else(|| {
+            format!(
+                "stats probe got no model list — is the server at \
+                 {addr} speaking wire v1? (response: {})",
+                line.trim()
+            )
+        })?;
+    let mut out = Vec::new();
+    for m in models {
+        let name = m
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or("stats probe: model without a name")?;
+        let ss = m
+            .get("sample_size")
+            .and_then(|s| s.as_i64())
+            .filter(|&s| s > 0)
+            .ok_or("stats probe: model without a sample_size")?;
+        out.push((name.to_string(), ss as usize));
+    }
+    if out.is_empty() {
+        return Err(format!("server at {addr} serves no models"));
+    }
+    Ok(out)
+}
+
+/// Merged result of one open-loop run.
+pub struct OpenLoopReport {
+    pub model: String,
+    /// Requests on the arrival schedule (= attempted sends).
+    pub offered: u64,
+    pub ok: u64,
+    pub shed: u64,
+    pub errors: u64,
+    /// Sends that happened after their due time (server backpressure).
+    pub late_sends: u64,
+    pub duration_s: f64,
+    pub offered_rps: f64,
+    pub connections: usize,
+    pub req_samples: usize,
+    /// Due-time-to-response latency of `ok` responses, ns.
+    pub hist: LogHistogram,
+}
+
+impl OpenLoopReport {
+    pub fn achieved_rps(&self) -> f64 {
+        self.ok as f64 / self.duration_s.max(1e-9)
+    }
+
+    /// Flat record for `BENCH_serve.json` / `nitro loadgen --out`.
+    pub fn json(&self) -> Json {
+        let base = Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("offered", Json::Int(self.offered as i64)),
+            ("ok", Json::Int(self.ok as i64)),
+            ("shed", Json::Int(self.shed as i64)),
+            ("errors", Json::Int(self.errors as i64)),
+            ("late_sends", Json::Int(self.late_sends as i64)),
+            ("duration_s", Json::Float(self.duration_s)),
+            ("offered_rps", Json::Float(self.offered_rps)),
+            ("achieved_rps", Json::Float(self.achieved_rps())),
+            ("connections", Json::Int(self.connections as i64)),
+            ("req_samples", Json::Int(self.req_samples as i64)),
+        ]);
+        // flatten the latency summary in (p50_us, p99_us, p999_us, ...)
+        let (mut map, lat) = match (base, hist_json(&self.hist)) {
+            (Json::Object(m), Json::Object(l)) => (m, l),
+            _ => unreachable!("obj() builds objects"),
+        };
+        map.extend(lat);
+        Json::Object(map)
+    }
+}
+
+enum Outcome {
+    Ok,
+    Shed,
+    Err,
+}
+
+/// Classify one response line: logits = success, a typed `overloaded`
+/// error = shed, anything else (including unparseable) = error.
+fn classify(line: &str) -> Outcome {
+    let j = match Json::parse(line.trim()) {
+        Ok(j) => j,
+        Err(_) => return Outcome::Err,
+    };
+    if j.get("logits").is_some() {
+        return Outcome::Ok;
+    }
+    if let Some(e) = j.get("error") {
+        if e.get("code").and_then(|c| c.as_str()) == Some("overloaded") {
+            return Outcome::Shed;
+        }
+    }
+    Outcome::Err
+}
+
+#[derive(Default)]
+struct ConnResult {
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    late: u64,
+    hist: LogHistogram,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conn_worker(addr: &str, model: &str, conn: usize, conns: usize,
+               total: u64, rate: f64, start: Instant,
+               sample_size: usize, req_samples: usize, seed: u64)
+               -> ConnResult {
+    let mut res = ConnResult::default();
+    let mine = |from: u64| (total.saturating_sub(from))
+        .div_ceil(conns as u64);
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => {
+            res.errors += mine(conn as u64);
+            return res;
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => {
+            res.errors += mine(conn as u64);
+            return res;
+        }
+    };
+    let mut writer = stream;
+    // deterministic payload, one fixed request line per connection —
+    // the schedule, not the body, is what this tool varies
+    let mut rng = Pcg32::with_stream(seed, 0x6c67 + conn as u64);
+    let payload: Vec<Json> = (0..sample_size * req_samples)
+        .map(|_| Json::Int(rng.range_i32(-127, 127) as i64))
+        .collect();
+    let line = format!(
+        "{}\n",
+        Json::obj(vec![
+            ("v", Json::Int(WIRE_V1)),
+            ("id", Json::Int(conn as i64)),
+            ("model", Json::Str(model.to_string())),
+            ("input", Json::Array(payload)),
+        ])
+        .dump()
+    );
+    let mut resp = String::new();
+    let mut i = conn as u64;
+    while i < total {
+        let due = start
+            + Duration::from_nanos((i as f64 * 1e9 / rate) as u64);
+        let now = Instant::now();
+        if now < due {
+            std::thread::sleep(due - now);
+        } else {
+            res.late += 1;
+        }
+        if writer.write_all(line.as_bytes()).is_err() {
+            res.errors += mine(i);
+            break;
+        }
+        resp.clear();
+        match reader.read_line(&mut resp) {
+            Ok(n) if n > 0 => {}
+            _ => {
+                res.errors += mine(i);
+                break;
+            }
+        }
+        // charged from the *due* time: a late send does not launder the
+        // backlog it sat in out of the percentiles
+        let lat = Instant::now()
+            .saturating_duration_since(due)
+            .as_nanos() as u64;
+        match classify(&resp) {
+            Outcome::Ok => {
+                res.ok += 1;
+                res.hist.record(lat);
+            }
+            Outcome::Shed => res.shed += 1,
+            Outcome::Err => res.errors += 1,
+        }
+        i += conns as u64;
+    }
+    res
+}
+
+/// Run the open-loop schedule against a live server.
+pub fn run(opts: &LoadgenOpts) -> Result<OpenLoopReport, String> {
+    if !(opts.rate.is_finite() && opts.rate > 0.0) {
+        return Err(format!("--rate must be positive, got {}", opts.rate));
+    }
+    if !(opts.duration_s.is_finite() && opts.duration_s > 0.0) {
+        return Err(format!(
+            "--duration must be positive, got {}", opts.duration_s));
+    }
+    let conns = opts.connections.max(1);
+    let req_samples = opts.req_samples.max(1);
+    let models = probe_models(&opts.addr)?;
+    let names = || {
+        models.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+            .join(", ")
+    };
+    let (model, sample_size) = match &opts.model {
+        Some(m) => models
+            .iter()
+            .find(|(n, _)| n == m)
+            .cloned()
+            .ok_or_else(|| format!(
+                "server does not serve '{m}' (serving: {})", names()))?,
+        None if models.len() == 1 => models[0].clone(),
+        None => {
+            return Err(format!(
+                "--model required with several served models \
+                 (serving: {})",
+                names()
+            ))
+        }
+    };
+    let total = ((opts.rate * opts.duration_s).ceil() as u64).max(1);
+    // small lead so every connection is connected before t=0 of the
+    // schedule — connect time must not count as server latency
+    let start = Instant::now() + Duration::from_millis(20);
+    let results: Vec<ConnResult> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for c in 0..conns {
+            let (addr, model) = (opts.addr.clone(), model.clone());
+            let (rate, seed) = (opts.rate, opts.seed);
+            joins.push(s.spawn(move || {
+                conn_worker(&addr, &model, c, conns, total, rate,
+                            start, sample_size, req_samples, seed)
+            }));
+        }
+        joins.into_iter()
+            .map(|j| j.join().expect("loadgen connection thread"))
+            .collect()
+    });
+    let mut rep = OpenLoopReport {
+        model,
+        offered: total,
+        ok: 0,
+        shed: 0,
+        errors: 0,
+        late_sends: 0,
+        duration_s: opts.duration_s,
+        offered_rps: opts.rate,
+        connections: conns,
+        req_samples,
+        hist: LogHistogram::new(),
+    };
+    for r in &results {
+        rep.ok += r.ok;
+        rep.shed += r.shed;
+        rep.errors += r.errors;
+        rep.late_sends += r.late;
+        rep.hist.merge(&r.hist);
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::saved_model;
+    use super::super::{spawn_tcp, ModelRegistry, ServeConfig};
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn classify_splits_ok_shed_error() {
+        assert!(matches!(
+            classify(r#"{"v":1,"id":0,"logits":[[1,2]],"argmax":[1]}"#),
+            Outcome::Ok
+        ));
+        assert!(matches!(
+            classify(concat!(
+                r#"{"v":1,"id":0,"error":{"code":"overloaded","#,
+                r#""message":"queue full"}}"#
+            )),
+            Outcome::Shed
+        ));
+        assert!(matches!(
+            classify(r#"{"v":1,"id":0,"error":{"code":"bad_request","message":"x"}}"#),
+            Outcome::Err
+        ));
+        // v0 string errors and garbage are hard errors, not sheds
+        assert!(matches!(classify(r#"{"id":0,"error":"overloaded"}"#),
+                         Outcome::Err));
+        assert!(matches!(classify("not json"), Outcome::Err));
+    }
+
+    #[test]
+    fn loadgen_open_loop_against_live_server() {
+        let (path, _) = saved_model("tinycnn", 40, "loadgen");
+        let reg = Arc::new(ModelRegistry::new());
+        reg.load(&path).unwrap();
+        let cfg = ServeConfig { shards: 2, max_wait_us: 0,
+                                ..Default::default() };
+        let srv = spawn_tcp(reg, cfg, "127.0.0.1:0", false).unwrap();
+        let opts = LoadgenOpts {
+            addr: srv.addr().to_string(),
+            rate: 200.0,
+            duration_s: 0.3,
+            connections: 3,
+            model: None,
+            req_samples: 1,
+            seed: 42,
+        };
+        let rep = run(&opts).unwrap();
+        assert_eq!(rep.offered, 60);
+        assert_eq!(rep.errors, 0, "late {} ok {}", rep.late_sends, rep.ok);
+        // no budget configured -> nothing sheds, every request answers
+        assert_eq!(rep.shed, 0);
+        assert_eq!(rep.ok, 60);
+        assert!(rep.achieved_rps() > 0.0);
+        let p50 = rep.hist.quantile(0.50);
+        let p99 = rep.hist.quantile(0.99);
+        let p999 = rep.hist.quantile(0.999);
+        assert!(p50 <= p99 && p99 <= p999, "{p50} {p99} {p999}");
+        // unknown model is a friendly error, not a hang
+        let err = run(&LoadgenOpts {
+            addr: srv.addr().to_string(),
+            rate: 10.0,
+            duration_s: 0.05,
+            connections: 1,
+            model: Some("nope".to_string()),
+            req_samples: 1,
+            seed: 1,
+        })
+        .unwrap_err();
+        assert!(err.contains("does not serve"), "{err}");
+        srv.shutdown();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn loadgen_refuses_bad_rates_and_dead_servers() {
+        let opts = LoadgenOpts {
+            addr: "127.0.0.1:1".to_string(), // reserved port, closed
+            rate: 100.0,
+            duration_s: 0.1,
+            connections: 1,
+            model: None,
+            req_samples: 1,
+            seed: 1,
+        };
+        let err = run(&opts).unwrap_err();
+        assert!(err.contains("connect"), "{err}");
+        let err = run(&LoadgenOpts { rate: 0.0, ..opts }).unwrap_err();
+        assert!(err.contains("--rate"), "{err}");
+    }
+}

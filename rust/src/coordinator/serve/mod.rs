@@ -1,0 +1,1459 @@
+//! Integer-only inference serving: versioned model registry, sharded
+//! dynamic micro-batchers, admission control, and the `nitro serve` /
+//! `nitro predict` / `nitro loadgen` backends.
+//!
+//! The deployment story of the paper (App. E.3) is that a `NITRO1`
+//! checkpoint *is* the deployed model — no quantization pass between
+//! training and inference. This module turns that into a serving
+//! subsystem built for sustained overload:
+//!
+//! * [`registry`] — models behind `Arc` swap pointers on hot reload
+//!   (SIGHUP or a v1 `reload` request); in-flight requests finish on the
+//!   old version, new requests resolve the new one, and every response
+//!   echoes the version that scored it.
+//! * [`batcher`] — thread-per-core [`ShardedBatcher`]: connections hash
+//!   onto shards, each shard's executor coalesces micro-batches and runs
+//!   them under its own slice of the kernel worker budget.
+//! * [`shed`] — latency-budget admission control: requests whose
+//!   estimated queue wait exceeds `--queue-budget-ms` are refused with a
+//!   typed `overloaded` error instead of silently queueing without
+//!   bound. Per-shard log-bucketed histograms feed the `stats` response
+//!   and `BENCH_serve.json`.
+//! * [`wire`] — the versioned JSON-lines protocol: v1 envelopes with
+//!   machine-readable error codes; bare v0 lines still answered in the
+//!   legacy shape (deprecated).
+//! * [`loadgen`] — an open-loop, coordinated-omission-safe generator
+//!   (`nitro loadgen`) that charges server backlog to the percentiles
+//!   instead of hiding it.
+//!
+//! **Determinism contract:** per-sample logits are a function of the
+//! checkpoint and the sample alone — bit-identical across micro-batch
+//! composition, shard count, kernel budget, `NITRO_WORKERS`, and a hot
+//! reload of the same checkpoint bytes. CI asserts this end to end.
+
+mod batcher;
+pub mod flags;
+pub mod loadgen;
+mod registry;
+mod shed;
+mod wire;
+
+pub use batcher::{BatchClient, MicroBatcher, ShardedBatcher};
+pub use registry::{ModelRegistry, ModelStats};
+pub use shed::ShardState;
+pub use wire::{ErrorKind, ServeError};
+
+use crate::nn::{InferScratch, Network};
+use crate::tensor::ITensor;
+use crate::train::checkpoint;
+use crate::util::hist::LogHistogram;
+use crate::util::jsonio::Json;
+use crate::util::par;
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Once};
+use std::time::Duration;
+use wire::{Op, Request, WIRE_V1};
+
+/// Bump when a `BENCH_serve.json` key changes meaning or disappears;
+/// adding keys is allowed without a bump.
+pub const SCHEMA_VERSION: i64 = 1;
+
+// ---------------------------------------------------------------------------
+// served model
+// ---------------------------------------------------------------------------
+
+/// A checkpoint loaded for serving, with its derived geometry. One
+/// immutable weight snapshot — a hot reload builds a *new* `ServedModel`
+/// with a bumped [`Self::version`] and swaps the registry pointer.
+pub struct ServedModel {
+    /// Registry key: the `--models` alias, or the spec name recorded in
+    /// the checkpoint.
+    pub name: String,
+    /// Checkpoint path it was loaded from (and reloads from).
+    pub path: String,
+    /// Per-sample input shape: `(C, H, W)` or `(F,)`.
+    pub input_shape: Vec<usize>,
+    /// Flattened ints per sample.
+    pub sample_size: usize,
+    pub num_classes: usize,
+    /// Monotone per-name weight-snapshot counter, echoed in v1
+    /// responses.
+    pub version: u64,
+    net: Network,
+}
+
+impl ServedModel {
+    /// Load a checkpoint, reconstructing the network from its recorded
+    /// spec. Every malformed input is an `Err`, never a panic.
+    pub fn load(path: &str) -> Result<ServedModel, String> {
+        ServedModel::load_versioned(path, None, 1)
+    }
+
+    /// Load under an explicit registry alias and version (the registry's
+    /// reload path).
+    pub fn load_versioned(path: &str, alias: Option<&str>, version: u64)
+                          -> Result<ServedModel, String> {
+        let net = checkpoint::load_network(path)?;
+        Ok(ServedModel::from_parts(net, path, alias, version))
+    }
+
+    /// Wrap an in-memory network (tests and the serve bench).
+    pub fn from_network(net: Network, path: &str) -> ServedModel {
+        ServedModel::from_parts(net, path, None, 1)
+    }
+
+    fn from_parts(net: Network, path: &str, alias: Option<&str>,
+                  version: u64) -> ServedModel {
+        ServedModel {
+            name: alias.unwrap_or(&net.spec.name).to_string(),
+            path: path.to_string(),
+            input_shape: net.spec.input_shape.clone(),
+            sample_size: net.spec.input_shape.iter().product(),
+            num_classes: net.spec.num_classes,
+            version,
+            net,
+        }
+    }
+
+    /// Architecture name recorded in the checkpoint (the registry key
+    /// may be an alias).
+    pub fn spec_name(&self) -> &str {
+        &self.net.spec.name
+    }
+
+    /// Batch shape for `n` samples of this model.
+    fn batch_shape(&self, n: usize) -> Vec<usize> {
+        let mut shape = vec![n];
+        shape.extend(&self.input_shape);
+        shape
+    }
+
+    /// Grad-free inference over an owned flat sample buffer (`n`
+    /// samples; `flat.len()` must be `n * sample_size`), writing
+    /// `(n, num_classes)` logits into `out`. Takes the buffer by value —
+    /// no input copy is made (the micro-batcher's hot path instead
+    /// gathers into its own reused buffer, see `run_group`).
+    pub fn infer_into(&self, flat: Vec<i32>, n: usize,
+                      scratch: &mut InferScratch, out: &mut ITensor) {
+        let x = ITensor::from_vec(&self.batch_shape(n), flat);
+        self.net.infer_into(&x, scratch, out);
+    }
+
+    /// Reference (unfused) inference — parity checks.
+    pub fn infer_reference(&self, x: &ITensor) -> ITensor {
+        self.net.infer(x)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// configuration
+// ---------------------------------------------------------------------------
+
+/// Serving knobs. Construct directly (defaults preserve the pre-shard
+/// behavior: one shard, no shedding) or through [`ServeConfig::builder`]
+/// for validated, CLI-grade construction.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Sample target per executed micro-batch. The coalescing loop stops
+    /// adding requests once this is reached, so an executed batch can
+    /// exceed it by at most one request (bounded by
+    /// `max_batch - 1 + max_request_samples`).
+    pub max_batch: usize,
+    /// How long the executor waits for more requests to coalesce after
+    /// the first one arrives. 0 = batch only what is already queued.
+    pub max_wait_us: u64,
+    /// Samples allowed in a single request; larger requests are rejected
+    /// with a typed `too_large` error. Bounds the executor's working-set
+    /// size against a hostile or buggy client — requests are
+    /// all-or-nothing (one response each), so an unbounded request would
+    /// otherwise force an unbounded fused forward.
+    pub max_request_samples: usize,
+    /// Micro-batcher shards (executor threads). Connections hash onto
+    /// shards; each shard gets `current_workers / shards` kernel workers.
+    pub shards: usize,
+    /// Latency-budget admission control: shed a request when its
+    /// estimated queue wait on the shard exceeds this. 0 disables
+    /// shedding.
+    pub queue_budget_us: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 64,
+            max_wait_us: 200,
+            max_request_samples: 4096,
+            shards: 1,
+            queue_budget_us: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder::default()
+    }
+}
+
+/// Validating builder for [`ServeConfig`]; the error messages name the
+/// CLI flags so a bad `nitro serve` invocation fails at startup with the
+/// flag to fix. `build` is the only exit — out-of-range values never
+/// reach a running server.
+pub struct ServeConfigBuilder {
+    max_batch: usize,
+    max_wait_us: u64,
+    max_request_samples: usize,
+    shards: usize,
+    queue_budget_ms: f64,
+}
+
+impl Default for ServeConfigBuilder {
+    fn default() -> Self {
+        let d = ServeConfig::default();
+        ServeConfigBuilder {
+            max_batch: d.max_batch,
+            max_wait_us: d.max_wait_us,
+            max_request_samples: d.max_request_samples,
+            shards: d.shards,
+            queue_budget_ms: d.queue_budget_us as f64 / 1000.0,
+        }
+    }
+}
+
+impl ServeConfigBuilder {
+    pub fn max_batch(mut self, v: usize) -> Self {
+        self.max_batch = v;
+        self
+    }
+
+    pub fn max_wait_us(mut self, v: u64) -> Self {
+        self.max_wait_us = v;
+        self
+    }
+
+    pub fn max_request_samples(mut self, v: usize) -> Self {
+        self.max_request_samples = v;
+        self
+    }
+
+    /// 0 = auto: one shard per available kernel worker, capped at 64.
+    pub fn shards(mut self, v: usize) -> Self {
+        self.shards = v;
+        self
+    }
+
+    pub fn queue_budget_ms(mut self, v: f64) -> Self {
+        self.queue_budget_ms = v;
+        self
+    }
+
+    pub fn build(self) -> Result<ServeConfig, String> {
+        if self.max_batch == 0 || self.max_batch > 65_536 {
+            return Err(format!(
+                "--max-batch must be in 1..=65536, got {}",
+                self.max_batch
+            ));
+        }
+        if self.max_wait_us > 10_000_000 {
+            return Err(format!(
+                "--max-wait-us must be at most 10000000 (10s), got {}",
+                self.max_wait_us
+            ));
+        }
+        if self.max_request_samples == 0
+            || self.max_request_samples > 1_048_576
+        {
+            return Err(format!(
+                "--max-request must be in 1..=1048576, got {}",
+                self.max_request_samples
+            ));
+        }
+        if self.shards > 256 {
+            return Err(format!(
+                "--shards must be at most 256, got {}", self.shards));
+        }
+        let shards = if self.shards == 0 {
+            par::current_workers().clamp(1, 64)
+        } else {
+            self.shards
+        };
+        if !self.queue_budget_ms.is_finite()
+            || self.queue_budget_ms < 0.0
+            || self.queue_budget_ms > 600_000.0
+        {
+            return Err(format!(
+                "--queue-budget-ms must be in 0..=600000, got {}",
+                self.queue_budget_ms
+            ));
+        }
+        Ok(ServeConfig {
+            max_batch: self.max_batch,
+            max_wait_us: self.max_wait_us,
+            max_request_samples: self.max_request_samples,
+            shards,
+            queue_budget_us: (self.queue_budget_ms * 1000.0) as u64,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request handling (shared by stdio, TCP and `predict`)
+// ---------------------------------------------------------------------------
+
+/// Everything a connection needs to answer requests: the live registry
+/// (stats, reload), the sharded batcher, and the config.
+pub struct ServeContext {
+    pub registry: Arc<ModelRegistry>,
+    pub batcher: ShardedBatcher,
+    pub cfg: ServeConfig,
+}
+
+impl ServeContext {
+    pub fn new(registry: Arc<ModelRegistry>, cfg: ServeConfig)
+               -> ServeContext {
+        let batcher = ShardedBatcher::start(registry.clone(), cfg);
+        ServeContext { registry, batcher, cfg }
+    }
+}
+
+static V0_DEPRECATION: Once = Once::new();
+
+/// Handle one JSON-line request. Every failure mode is a JSON error
+/// response — a malformed line must never take the server down. The
+/// response speaks the protocol version the request did: v0 lines get
+/// the legacy shape, v1 lines get the envelope with `model_version` and
+/// typed error codes.
+pub fn handle_line(ctx: &ServeContext, client: &BatchClient, line: &str)
+                   -> Json {
+    let Request { v, id, op } = match wire::parse_request(line) {
+        Ok(r) => r,
+        Err((v, id, e)) => return wire::err_response(v, id, &e),
+    };
+    if v == 0 {
+        V0_DEPRECATION.call_once(|| {
+            eprintln!(
+                "nitro serve: deprecation: request without \"v\" \
+                 handled as wire v0; send {{\"v\": 1, ...}} — v0 will \
+                 be removed in a future release"
+            );
+        });
+    }
+    match op {
+        Op::Predict { model, input } => {
+            match client.predict(model.as_deref(), input) {
+                Ok((m, y)) => {
+                    wire::ok_response(v, id, &m.name, m.version, &y)
+                }
+                Err(e) => wire::err_response(v, id, &e),
+            }
+        }
+        Op::Stats => stats_response(ctx, id),
+        Op::Reload => reload_response(ctx, id),
+    }
+}
+
+/// v1 `stats`: per-model counters, per-shard admission state, and the
+/// merged latency summary.
+fn stats_response(ctx: &ServeContext, id: Json) -> Json {
+    let states = ctx.batcher.states();
+    let mut merged = LogHistogram::new();
+    let (mut completed, mut shed_total) = (0u64, 0u64);
+    for st in &states {
+        completed += st.completed_count();
+        shed_total += st.shed_count();
+        merged.merge(&st.snapshot_hist());
+    }
+    Json::obj(vec![
+        ("v", Json::Int(WIRE_V1)),
+        ("id", id),
+        ("models", ctx.registry.models_json()),
+        ("shards",
+         Json::Array(states.iter().map(|s| s.json()).collect())),
+        ("completed", Json::Int(completed as i64)),
+        ("shed", Json::Int(shed_total as i64)),
+        ("latency", shed::hist_json(&merged)),
+    ])
+}
+
+/// v1 `reload`: hot-reload every model from its checkpoint path. Models
+/// that fail keep serving their old version and report the error.
+fn reload_response(ctx: &ServeContext, id: Json) -> Json {
+    let (mut reloaded, mut errors) = (Vec::new(), Vec::new());
+    for (name, r) in ctx.registry.reload_all() {
+        match r {
+            Ok(v) => reloaded.push(Json::obj(vec![
+                ("model", Json::Str(name)),
+                ("version", Json::Int(v as i64)),
+            ])),
+            Err(e) => errors.push(Json::obj(vec![
+                ("model", Json::Str(name)),
+                ("message", Json::Str(e)),
+            ])),
+        }
+    }
+    Json::obj(vec![
+        ("v", Json::Int(WIRE_V1)),
+        ("id", id),
+        ("reloaded", Json::Array(reloaded)),
+        ("errors", Json::Array(errors)),
+    ])
+}
+
+/// Serve JSON lines over stdin/stdout until EOF.
+pub fn serve_stdio(registry: ModelRegistry, cfg: ServeConfig)
+                   -> Result<(), String> {
+    let registry = Arc::new(registry);
+    eprintln!(
+        "nitro serve: models [{}], {} shard(s), max-batch {}, wait {}us",
+        registry.names().join(", "),
+        cfg.shards.max(1),
+        cfg.max_batch,
+        cfg.max_wait_us
+    );
+    let ctx = ServeContext::new(registry, cfg);
+    let client = ctx.batcher.client(0);
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    for line in stdin.lock().lines() {
+        let line = line.map_err(|e| format!("stdin: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(&ctx, &client, &line);
+        let mut out = stdout.lock();
+        out.write_all(resp.dump().as_bytes())
+            .and_then(|_| out.write_all(b"\n"))
+            .and_then(|_| out.flush())
+            .map_err(|e| format!("stdout: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Largest wire line a TCP connection may send: the biggest legitimate
+/// request is `max_request_samples` samples of the widest served model,
+/// ~13 bytes per serialized int, plus envelope slack. Anything longer is
+/// answered with an error and the connection closed **before** the line
+/// is buffered whole — a client streaming an endless non-newline byte
+/// stream must not grow server memory without bound.
+fn max_line_bytes(registry: &ModelRegistry, cfg: &ServeConfig) -> u64 {
+    (registry.widest_sample_size() as u64)
+        * (cfg.max_request_samples.max(1) as u64)
+        * 13
+        + 4096
+}
+
+// ---------------------------------------------------------------------------
+// TCP server
+// ---------------------------------------------------------------------------
+
+/// Counters the accept loop maintains; exposed for tests and shutdown
+/// diagnostics.
+#[derive(Default)]
+pub struct ServerStats {
+    /// Connection-handler threads currently running.
+    pub live_handlers: AtomicUsize,
+    /// Join handles the accept loop is currently tracking.
+    pub tracked_handles: AtomicUsize,
+    /// Finished handler threads joined and released so far.
+    pub reaped: AtomicU64,
+    pub accepted: AtomicU64,
+    /// SIGHUP-triggered reload sweeps.
+    pub reloads: AtomicU64,
+}
+
+/// A running TCP server (accept loop + shards). [`Self::shutdown`] stops
+/// accepting, waits for open connections to finish, and joins every
+/// handler thread.
+pub struct TcpServer {
+    addr: String,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn stats(&self) -> Arc<ServerStats> {
+        self.stats.clone()
+    }
+
+    /// Stop accepting and join the accept loop (which drains its handler
+    /// threads; blocks until open connections close).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block on the accept loop (the foreground `nitro serve` path).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        // signal stop but do not join — a dropped (not shut down) server
+        // must not hang the dropping thread on open connections
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Bind `addr` and serve it from a background accept thread. The
+/// listener is nonblocking so the loop can interleave accepting, reaping
+/// finished handler threads, SIGHUP reload sweeps, and the stop flag.
+pub fn spawn_tcp(registry: Arc<ModelRegistry>, cfg: ServeConfig,
+                 addr: &str, reload_on_sighup: bool)
+                 -> Result<TcpServer, String> {
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| format!("bind {addr}: {e}"))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("set_nonblocking: {e}"))?;
+    let bound = listener
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| addr.to_string());
+    if reload_on_sighup {
+        sighup::install();
+    }
+    let ctx = Arc::new(ServeContext::new(registry, cfg));
+    let stats = Arc::new(ServerStats::default());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (st, sp) = (stats.clone(), stop.clone());
+    let handle = std::thread::Builder::new()
+        .name("nitro-serve-accept".into())
+        .spawn(move || accept_loop(listener, ctx, st, sp))
+        .map_err(|e| format!("spawn accept loop: {e}"))?;
+    Ok(TcpServer { addr: bound, stats, stop, handle: Some(handle) })
+}
+
+/// Serve JSON lines over TCP in the foreground: shard-hashed connection
+/// threads, all feeding the sharded micro-batcher.
+pub fn serve_tcp(registry: ModelRegistry, cfg: ServeConfig, addr: &str,
+                 reload_on_sighup: bool) -> Result<(), String> {
+    let registry = Arc::new(registry);
+    let srv = spawn_tcp(registry.clone(), cfg, addr, reload_on_sighup)?;
+    eprintln!(
+        "nitro serve: listening on {}, models [{}], {} shard(s), \
+         queue budget {}us{}",
+        srv.addr(),
+        registry.names().join(", "),
+        cfg.shards.max(1),
+        cfg.queue_budget_us,
+        if reload_on_sighup { ", SIGHUP reloads" } else { "" }
+    );
+    srv.join();
+    Ok(())
+}
+
+/// Increments `live_handlers` for the lifetime of one handler thread;
+/// the `Drop` decrement runs on every exit path, panic included.
+struct HandlerGauge(Arc<ServerStats>);
+
+impl HandlerGauge {
+    fn new(stats: Arc<ServerStats>) -> HandlerGauge {
+        stats.live_handlers.fetch_add(1, Ordering::Relaxed);
+        HandlerGauge(stats)
+    }
+}
+
+impl Drop for HandlerGauge {
+    fn drop(&mut self) {
+        self.0.live_handlers.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+/// Tracked-handle high-water mark that forces a reap even under a
+/// continuous accept stream (idle gaps already reap opportunistically).
+const REAP_AT: usize = 64;
+
+fn accept_loop(listener: std::net::TcpListener, ctx: Arc<ServeContext>,
+               stats: Arc<ServerStats>, stop: Arc<AtomicBool>) {
+    let line_cap = max_line_bytes(&ctx.registry, &ctx.cfg);
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut conn_id: u64 = 0;
+    while !stop.load(Ordering::Relaxed) {
+        if sighup::take() {
+            stats.reloads.fetch_add(1, Ordering::Relaxed);
+            for (name, r) in ctx.registry.reload_all() {
+                match r {
+                    Ok(v) => eprintln!(
+                        "nitro serve: reloaded '{name}' -> v{v}"),
+                    Err(e) => eprintln!(
+                        "nitro serve: reload '{name}' failed, keeping \
+                         the old version: {e}"
+                    ),
+                }
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stats.accepted.fetch_add(1, Ordering::Relaxed);
+                // accepted sockets inherit the listener's nonblocking
+                // mode on some platforms; handlers want blocking reads
+                let _ = stream.set_nonblocking(false);
+                let client = ctx.batcher.client(conn_id);
+                conn_id = conn_id.wrapping_add(1);
+                let cctx = ctx.clone();
+                let gauge = HandlerGauge::new(stats.clone());
+                // fallible spawn: exhausting the OS thread limit (e.g. a
+                // client holding thousands of connections open) must
+                // drop that connection, not panic the accept loop and
+                // take the server down
+                let spawned = std::thread::Builder::new()
+                    .name("nitro-serve-conn".into())
+                    .spawn(move || {
+                        let _gauge = gauge;
+                        connection(stream, &cctx, &client, line_cap);
+                    });
+                match spawned {
+                    Ok(h) => {
+                        handles.push(h);
+                        if handles.len() >= REAP_AT {
+                            reap(&mut handles, &stats);
+                        }
+                    }
+                    Err(e) => eprintln!(
+                        "connection dropped: spawn handler thread: {e}"),
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                reap(&mut handles, &stats);
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                eprintln!("accept: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+    // drain on shutdown: every handler is joined, none leak
+    for h in handles.drain(..) {
+        let _ = h.join();
+    }
+    stats.tracked_handles.store(0, Ordering::Relaxed);
+}
+
+/// Join every finished handler thread and release its resources. The
+/// pre-refactor server pushed handles nowhere and never joined them —
+/// under a churn of short-lived connections that leaked a join handle
+/// (and its thread bookkeeping) per connection, forever.
+fn reap(handles: &mut Vec<std::thread::JoinHandle<()>>,
+        stats: &ServerStats) {
+    let (done, live): (Vec<_>, Vec<_>) =
+        handles.drain(..).partition(|h| h.is_finished());
+    for h in done {
+        // cannot block: is_finished() was true
+        stats.reaped.fetch_add(1, Ordering::Relaxed);
+        let _ = h.join();
+    }
+    *handles = live;
+    stats.tracked_handles.store(handles.len(), Ordering::Relaxed);
+}
+
+/// One connection: capped line reads, one response line per request.
+fn connection(stream: std::net::TcpStream, ctx: &ServeContext,
+              client: &BatchClient, line_cap: u64) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".into());
+    let mut reader = std::io::BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{peer}: clone: {e}");
+            return;
+        }
+    });
+    let mut writer = stream;
+    let mut buf = Vec::new();
+    loop {
+        // capped read: at most line_cap + 1 bytes are ever buffered for
+        // one line, newline or not
+        buf.clear();
+        use std::io::Read;
+        let n = match (&mut reader)
+            .take(line_cap + 1)
+            .read_until(b'\n', &mut buf)
+        {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        if n as u64 > line_cap {
+            // oversized line: answer and drop the connection — there is
+            // no way to resync to the next request without buffering
+            // the rest of the flood
+            let resp = wire::err_response(
+                0,
+                Json::Null,
+                &ServeError::too_large(format!(
+                    "request line exceeds {line_cap} bytes"
+                )),
+            );
+            let _ = writer.write_all(resp.dump().as_bytes());
+            let _ = writer.write_all(b"\n");
+            break;
+        }
+        let line = String::from_utf8_lossy(&buf);
+        let line = line.trim_end_matches(['\n', '\r']);
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(ctx, client, line);
+        if writer
+            .write_all(resp.dump().as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .is_err()
+        {
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIGHUP hot reload
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sighup {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static PENDING: AtomicBool = AtomicBool::new(false);
+    const SIGHUP: i32 = 1;
+
+    extern "C" fn on_sighup(_sig: i32) {
+        // an atomic store is async-signal-safe; the accept loop does
+        // the actual (allocating, locking) reload outside the handler
+        PENDING.store(true, Ordering::Relaxed);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32))
+                      -> isize;
+        }
+        unsafe {
+            signal(SIGHUP, on_sighup);
+        }
+    }
+
+    pub fn take() -> bool {
+        PENDING.swap(false, Ordering::Relaxed)
+    }
+}
+
+#[cfg(not(unix))]
+mod sighup {
+    pub fn install() {
+        eprintln!("nitro serve: --reload-on-sighup is unix-only; use \
+                   the v1 `reload` request instead");
+    }
+
+    pub fn take() -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// one-shot prediction (`nitro predict`)
+// ---------------------------------------------------------------------------
+
+/// Parse a predict input document: a flat int array, an array of
+/// per-sample arrays, or an object with an `inputs` field holding either.
+fn parse_inputs(j: &Json, sample_size: usize) -> Result<Vec<i32>, String> {
+    if let Some(inner) = j.get("inputs") {
+        return parse_inputs(inner, sample_size);
+    }
+    let arr = j
+        .as_array()
+        .ok_or("input must be an array (flat or one array per sample)")?;
+    match arr.first() {
+        None => Err("input is empty".into()),
+        Some(Json::Array(_)) => {
+            let mut flat = Vec::new();
+            for (i, row) in arr.iter().enumerate() {
+                let r = wire::i32_vec_strict(row)
+                    .map_err(|e| format!("sample {i}: {e}"))?;
+                if r.len() != sample_size {
+                    return Err(format!(
+                        "sample {i}: {} values, expected {sample_size}",
+                        r.len()
+                    ));
+                }
+                flat.extend(r);
+            }
+            Ok(flat)
+        }
+        Some(_) => {
+            let flat = wire::i32_vec_strict(j)?;
+            if flat.is_empty() || flat.len() % sample_size != 0 {
+                return Err(format!(
+                    "flat input length {} is not a positive multiple of \
+                     sample size {sample_size}",
+                    flat.len()
+                ));
+            }
+            Ok(flat)
+        }
+    }
+}
+
+/// One-shot batch scoring: load a checkpoint, score the input document
+/// (`-` = stdin), return the response JSON. Runs inline on the caller —
+/// under `NITRO_WORKERS=1` no thread is ever spawned, the fully
+/// deterministic mode CI compares against multi-worker runs.
+pub fn predict_once(ckpt: &str, input_src: &str) -> Result<Json, String> {
+    let model = ServedModel::load(ckpt)?;
+    let text = if input_src == "-" {
+        let mut s = String::new();
+        std::io::Read::read_to_string(&mut std::io::stdin(), &mut s)
+            .map_err(|e| format!("stdin: {e}"))?;
+        s
+    } else {
+        std::fs::read_to_string(input_src)
+            .map_err(|e| format!("read {input_src}: {e}"))?
+    };
+    let j = Json::parse(&text).map_err(|e| format!("{input_src}: {e}"))?;
+    let flat = parse_inputs(&j, model.sample_size)?;
+    let n = flat.len() / model.sample_size;
+    let mut scratch = InferScratch::new();
+    let mut out = ITensor::empty();
+    model.infer_into(flat, n, &mut scratch, &mut out);
+    Ok(wire::ok_response(0, Json::Null, &model.name, model.version,
+                         &out))
+}
+
+// ---------------------------------------------------------------------------
+// serve throughput bench (BENCH_serve.json)
+// ---------------------------------------------------------------------------
+
+/// Requests/sec and latency percentiles vs micro-batch size through the
+/// real micro-batcher, plus (non-quick) an open-loop overload section
+/// through the real TCP server and `loadgen`, written to a
+/// schema-versioned `BENCH_serve.json`. Also hard-checks the serving
+/// identities — fused path vs reference, checkpoint round-trip, shard
+/// count, and hot reload of identical bytes — pushing mismatches into
+/// `failures`, which `bench-kernels` turns into a non-zero exit.
+pub fn bench_serve(quick: bool, budget_s: f64, out_path: &str,
+                   failures: &mut Vec<String>) -> Result<Json, String> {
+    use crate::nn::zoo;
+    use crate::util::rng::Pcg32;
+    use std::time::Instant;
+
+    let spec = zoo::get("tinycnn").expect("tinycnn preset");
+    let net = Network::new(spec.clone(), 7);
+
+    // serving identity: a round-tripped checkpoint must serve logits
+    // bit-identical to the in-memory network on both forward paths
+    let dir = std::env::temp_dir().join("nitro_serve_bench");
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+    let ckpt = dir.join(format!("tinycnn-{}.ckpt", std::process::id()));
+    let ckpt_s = ckpt.to_str().expect("utf8 temp path").to_string();
+    checkpoint::save(&net, &ckpt_s)?;
+    // the checkpoint file stays on disk until after the hot-reload
+    // identity check below; run the fallible body in a closure so every
+    // early `?` return still removes it
+    let result = (|| -> Result<Json, String> {
+        let model = ServedModel::load(&ckpt_s)?;
+        let mut rng = Pcg32::new(17);
+        let probe_n = 5usize;
+        let flat: Vec<i32> = (0..probe_n * model.sample_size)
+            .map(|_| rng.range_i32(-127, 127))
+            .collect();
+        let x =
+            ITensor::from_vec(&model.batch_shape(probe_n), flat.clone());
+        let reference = net.infer(&x);
+        let mut scratch = InferScratch::new();
+        let mut out = ITensor::empty();
+        model.infer_into(flat.clone(), probe_n, &mut scratch, &mut out);
+        if out != reference {
+            failures.push("serve: ckpt-roundtrip fused infer".to_string());
+        }
+        if model.infer_reference(&x) != reference {
+            failures
+                .push("serve: ckpt-roundtrip reference infer".to_string());
+        }
+
+        let registry = Arc::new(ModelRegistry::new());
+        registry.insert(model)?;
+
+        // hot-reload identity: reloading the same checkpoint bytes must
+        // bump the version and serve bit-identical logits
+        for (name, r) in registry.reload_all() {
+            if let Err(e) = r {
+                failures.push(format!("serve: hot reload '{name}': {e}"));
+            }
+        }
+        let reloaded = registry.resolve(None)?;
+        if reloaded.version < 2 {
+            failures.push("serve: reload did not bump version".into());
+        }
+        let mut out2 = ITensor::empty();
+        reloaded.infer_into(flat.clone(), probe_n, &mut scratch,
+                            &mut out2);
+        if out2 != reference {
+            failures.push("serve: hot-reload identity".to_string());
+        }
+
+        // shard-count identity: every shard of a 1- and a 2-shard
+        // batcher serves the reference logits bit-identically
+        for nshards in [1usize, 2] {
+            let sb = ShardedBatcher::start(
+                registry.clone(),
+                ServeConfig {
+                    shards: nshards,
+                    max_wait_us: 0,
+                    ..Default::default()
+                },
+            );
+            for key in 0..nshards as u64 {
+                let (_, y) = sb.client(key).predict(None, flat.clone())?;
+                if y != reference {
+                    failures.push(format!(
+                        "serve: shard identity ({nshards} shards, \
+                         key {key})"
+                    ));
+                }
+            }
+        }
+
+        let sample_size = registry.resolve(None)?.sample_size;
+        let batch_sizes: &[usize] =
+            if quick { &[1, 2, 8] } else { &[1, 4, 16, 64] };
+        let mut rows = Vec::new();
+        let mut est_rps = 0.0f64;
+        println!("serve_throughput (tinycnn, through the micro-batcher):");
+        for &bs in batch_sizes {
+            let mb = MicroBatcher::start(
+                registry.clone(),
+                ServeConfig {
+                    max_batch: bs.max(1),
+                    max_wait_us: 0,
+                    ..Default::default()
+                },
+            );
+            let client = mb.client();
+            let req: Vec<i32> = (0..bs * sample_size)
+                .map(|_| rng.range_i32(-127, 127))
+                .collect();
+            // warm the scratch buffers so steady state is measured
+            client.predict(None, req.clone())?;
+            let budget = Duration::from_secs_f64(budget_s.max(1e-3));
+            let t0 = Instant::now();
+            let mut lat_ns: Vec<u64> = Vec::new();
+            while t0.elapsed() < budget && lat_ns.len() < 10_000 {
+                let t = Instant::now();
+                let (_, y) = client.predict(None, req.clone())?;
+                lat_ns.push(t.elapsed().as_nanos() as u64);
+                std::hint::black_box(y);
+            }
+            let total_s = t0.elapsed().as_secs_f64();
+            lat_ns.sort_unstable();
+            let q = |p: f64| {
+                lat_ns[(p * (lat_ns.len() - 1) as f64) as usize] as f64
+            };
+            let rps = lat_ns.len() as f64 / total_s.max(1e-9);
+            est_rps = est_rps.max(rps);
+            println!(
+                "  batch {bs:>3}: {:>9.1} req/s {:>10.1} samples/s  \
+                 p50 {:>9.0} ns  p99 {:>9.0} ns  ({} reqs)",
+                rps,
+                rps * bs as f64,
+                q(0.5),
+                q(0.99),
+                lat_ns.len()
+            );
+            rows.push(Json::obj(vec![
+                ("batch", Json::Int(bs as i64)),
+                ("requests", Json::Int(lat_ns.len() as i64)),
+                ("requests_per_sec", Json::Float(rps)),
+                ("samples_per_sec", Json::Float(rps * bs as f64)),
+                ("p50_ns", Json::Float(q(0.5))),
+                ("p99_ns", Json::Float(q(0.99))),
+                ("mean_ns", Json::Float(
+                    lat_ns.iter().sum::<u64>() as f64
+                        / lat_ns.len() as f64,
+                )),
+            ]));
+        }
+
+        let open_loop = if quick {
+            Json::obj(vec![(
+                "skipped",
+                Json::Str("quick mode".to_string()),
+            )])
+        } else {
+            open_loop_section(&registry, budget_s, est_rps)
+        };
+
+        Ok(Json::obj(vec![
+            ("schema_version", Json::Int(SCHEMA_VERSION)),
+            ("experiment", Json::Str("serve".to_string())),
+            ("preset", Json::Str("tinycnn".to_string())),
+            ("workers",
+             Json::Int(crate::util::par::default_workers() as i64)),
+            ("quick", Json::Bool(quick)),
+            ("budget_s", Json::Float(budget_s)),
+            ("serve_throughput", Json::Array(rows)),
+            ("open_loop", open_loop),
+            ("bitexact",
+             Json::Bool(
+                 !failures.iter().any(|f| f.starts_with("serve:")))),
+        ]))
+    })();
+    let _ = std::fs::remove_file(&ckpt);
+    let record = result?;
+    std::fs::write(out_path, record.pretty())
+        .map_err(|e| format!("write {out_path}: {e}"))?;
+    println!("-> {out_path}");
+    Ok(record)
+}
+
+/// Open-loop overload measurement through the real TCP server: offer
+/// several times the closed-loop capacity with a tight queue budget, so
+/// the record shows honest overload percentiles and a nonzero shed
+/// count. Failures degrade to a `skipped` note — the bench record must
+/// exist even on a machine that cannot bind a socket.
+fn open_loop_section(registry: &Arc<ModelRegistry>, budget_s: f64,
+                     est_rps: f64) -> Json {
+    let cfg = match ServeConfig::builder()
+        .shards(2)
+        .max_wait_us(200)
+        .queue_budget_ms(2.0)
+        .build()
+    {
+        Ok(c) => c,
+        Err(e) => return Json::obj(vec![("skipped", Json::Str(e))]),
+    };
+    let srv =
+        match spawn_tcp(registry.clone(), cfg, "127.0.0.1:0", false) {
+            Ok(s) => s,
+            Err(e) => {
+                return Json::obj(vec![("skipped", Json::Str(e))])
+            }
+        };
+    let rate = (est_rps * 4.0).clamp(50.0, 20_000.0);
+    let duration_s = budget_s.clamp(0.25, 1.5);
+    let rep = loadgen::run(&loadgen::LoadgenOpts {
+        addr: srv.addr().to_string(),
+        rate,
+        duration_s,
+        connections: 8,
+        model: None,
+        req_samples: 1,
+        seed: 42,
+    });
+    let out = match rep {
+        Ok(r) => {
+            println!(
+                "open_loop: offered {:.0} rps for {duration_s:.2}s -> \
+                 ok {} shed {} err {}  p50 {}us p99 {}us p999 {}us",
+                rate,
+                r.ok,
+                r.shed,
+                r.errors,
+                r.hist.quantile(0.50) / 1000,
+                r.hist.quantile(0.99) / 1000,
+                r.hist.quantile(0.999) / 1000
+            );
+            Json::obj(vec![
+                ("shards", Json::Int(cfg.shards as i64)),
+                ("queue_budget_us",
+                 Json::Int(cfg.queue_budget_us as i64)),
+                ("loadgen", r.json()),
+            ])
+        }
+        Err(e) => Json::obj(vec![("skipped", Json::Str(e))]),
+    };
+    srv.shutdown();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// shared test fixtures
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::ServedModel;
+    use crate::nn::{zoo, Network};
+    use crate::train::checkpoint;
+    use crate::util::rng::Pcg32;
+
+    pub fn saved_model(preset: &str, seed: u64, tag: &str)
+                       -> (String, Network) {
+        let dir = std::env::temp_dir().join("nitro_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{preset}-{tag}-{}.ckpt",
+                                    std::process::id()));
+        let net = Network::new(zoo::get(preset).unwrap(), seed);
+        checkpoint::save(&net, path.to_str().unwrap()).unwrap();
+        (path.to_str().unwrap().to_string(), net)
+    }
+
+    pub fn rand_samples(model: &ServedModel, n: usize, rng: &mut Pcg32)
+                        -> Vec<i32> {
+        (0..n * model.sample_size)
+            .map(|_| rng.range_i32(-127, 127))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{rand_samples, saved_model};
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn ctx_for(path: &str, cfg: ServeConfig) -> ServeContext {
+        let reg = Arc::new(ModelRegistry::from_paths(path).unwrap());
+        ServeContext::new(reg, cfg)
+    }
+
+    #[test]
+    fn handle_line_protocol_and_errors() {
+        let (path, net) = saved_model("mlp1-mini", 2, "proto");
+        let ctx = ctx_for(&path, ServeConfig::default());
+        let client = ctx.batcher.client(0);
+        let model = ctx.registry.resolve(None).unwrap();
+        let mut rng = Pcg32::new(3);
+        let flat = rand_samples(&model, 1, &mut rng);
+        let input = Json::Array(
+            flat.iter().map(|&v| Json::Int(v as i64)).collect(),
+        );
+        let line = Json::obj(vec![
+            ("id", Json::Int(7)),
+            ("input", input),
+        ])
+        .dump();
+        let resp = handle_line(&ctx, &client, &line);
+        assert_eq!(resp.req("id").unwrap().as_i64(), Some(7));
+        assert_eq!(resp.req("model").unwrap().as_str(), Some("mlp1-mini"));
+        // a v0 request gets the exact legacy shape: no "v", no version
+        assert!(resp.get("v").is_none());
+        assert!(resp.get("model_version").is_none());
+        let x = ITensor::from_vec(&model.batch_shape(1), flat);
+        let want = net.infer(&x);
+        let logits =
+            resp.req("logits").unwrap().as_array().unwrap()[0].i32_vec()
+                .unwrap();
+        assert_eq!(logits, want.data);
+        let am = resp.req("argmax").unwrap().as_array().unwrap()[0]
+            .as_i64()
+            .unwrap();
+        // first-max-wins, matching the server's argmax
+        let mut best = 0usize;
+        for j in 1..want.data.len() {
+            if want.data[j] > want.data[best] {
+                best = j;
+            }
+        }
+        assert_eq!(am, best as i64);
+
+        // error paths: bad JSON, missing input, wrong sample size,
+        // unknown model — all JSON error responses, never a panic
+        // a pathologically nested line must error, not blow the stack
+        let deep = "[".repeat(100_000);
+        for bad in [
+            "{not json",
+            r#"{"id": 1}"#,
+            r#"{"id": 2, "input": [1, 2, 3]}"#,
+            r#"{"id": 3, "model": "nope", "input": [1]}"#,
+            r#"{"id": 4, "input": "xyz"}"#,
+            // out-of-i32-range values must error, not wrap mod 2^32
+            r#"{"id": 5, "input": [2147483648]}"#,
+            // a non-string model must error, not silently fall back
+            r#"{"id": 6, "model": 42, "input": [1]}"#,
+            // v0 lines cannot use v1 control ops
+            r#"{"id": 7, "op": "reload"}"#,
+            deep.as_str(),
+        ] {
+            let resp = handle_line(&ctx, &client, bad);
+            assert!(resp.get("error").is_some(), "no error for {bad}");
+            // v0 errors stay legacy-shaped strings
+            assert!(resp.req("error").unwrap().as_str().is_some(),
+                    "v0 error must be a string for {bad}");
+        }
+    }
+
+    #[test]
+    fn v1_round_trip_stats_and_reload() {
+        let (path, net) = saved_model("mlp1-mini", 12, "v1");
+        let ctx = ctx_for(
+            &path,
+            ServeConfig { max_request_samples: 2,
+                          ..Default::default() },
+        );
+        let client = ctx.batcher.client(0);
+        let model = ctx.registry.resolve(None).unwrap();
+        let mut rng = Pcg32::new(5);
+        let flat = rand_samples(&model, 1, &mut rng);
+        let input = Json::Array(
+            flat.iter().map(|&v| Json::Int(v as i64)).collect(),
+        );
+        let line = Json::obj(vec![
+            ("v", Json::Int(1)),
+            ("id", Json::Int(1)),
+            ("input", input),
+        ])
+        .dump();
+        let resp = handle_line(&ctx, &client, &line);
+        assert_eq!(resp.req("v").unwrap().as_i64(), Some(1));
+        assert_eq!(resp.req("model_version").unwrap().as_i64(), Some(1));
+        let x = ITensor::from_vec(&model.batch_shape(1), flat.clone());
+        let want = net.infer(&x);
+        let logits =
+            resp.req("logits").unwrap().as_array().unwrap()[0].i32_vec()
+                .unwrap();
+        assert_eq!(logits, want.data);
+
+        // typed error codes
+        let resp = handle_line(
+            &ctx, &client,
+            r#"{"v": 1, "id": 2, "model": "nope", "input": [1]}"#,
+        );
+        assert_eq!(
+            resp.req("error").unwrap().req("code").unwrap().as_str(),
+            Some("unknown_model")
+        );
+        let big = rand_samples(&model, 3, &mut rng);
+        let line = Json::obj(vec![
+            ("v", Json::Int(1)),
+            ("id", Json::Int(3)),
+            ("input", Json::Array(
+                big.iter().map(|&v| Json::Int(v as i64)).collect())),
+        ])
+        .dump();
+        let resp = handle_line(&ctx, &client, &line);
+        assert_eq!(
+            resp.req("error").unwrap().req("code").unwrap().as_str(),
+            Some("too_large")
+        );
+
+        // stats: models + shards + merged latency, all v1
+        let resp = handle_line(&ctx, &client,
+                               r#"{"v": 1, "id": 4, "op": "stats"}"#);
+        assert_eq!(resp.req("v").unwrap().as_i64(), Some(1));
+        let models = resp.req("models").unwrap().as_array().unwrap();
+        assert_eq!(models[0].req("name").unwrap().as_str(),
+                   Some("mlp1-mini"));
+        assert!(models[0].req("requests").unwrap().as_i64().unwrap()
+                >= 1);
+        let shards = resp.req("shards").unwrap().as_array().unwrap();
+        assert_eq!(shards.len(), ctx.cfg.shards.max(1));
+        assert!(resp.req("completed").unwrap().as_i64().unwrap() >= 1);
+        assert!(resp.req("latency").unwrap().get("p99_us").is_some());
+
+        // reload: version bumps, echoed in subsequent predicts
+        let resp = handle_line(&ctx, &client,
+                               r#"{"v": 1, "id": 5, "op": "reload"}"#);
+        let reloaded =
+            resp.req("reloaded").unwrap().as_array().unwrap();
+        assert_eq!(reloaded[0].req("version").unwrap().as_i64(),
+                   Some(2));
+        assert_eq!(resp.req("errors").unwrap().as_array().unwrap().len(),
+                   0);
+        let line = Json::obj(vec![
+            ("v", Json::Int(1)),
+            ("id", Json::Int(6)),
+            ("input", Json::Array(
+                flat.iter().map(|&v| Json::Int(v as i64)).collect())),
+        ])
+        .dump();
+        let resp = handle_line(&ctx, &client, &line);
+        assert_eq!(resp.req("model_version").unwrap().as_i64(), Some(2));
+        // identical checkpoint bytes -> bit-identical logits after reload
+        let logits =
+            resp.req("logits").unwrap().as_array().unwrap()[0].i32_vec()
+                .unwrap();
+        assert_eq!(logits, want.data);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fuzzed_lines_always_get_a_json_answer() {
+        let (path, _) = saved_model("mlp1-mini", 33, "fuzz");
+        let ctx = ctx_for(&path, ServeConfig::default());
+        let client = ctx.batcher.client(0);
+        const CHARS: &[u8] =
+            br#"{}[]":,vinputmodelopstatsreload 0123456789-"#;
+        prop::check("serve_wire_fuzz", 300, |g| {
+            let len = g.usize_in(0, 160);
+            let line: String = (0..len)
+                .map(|_| CHARS[g.usize_in(0, CHARS.len() - 1)] as char)
+                .collect();
+            let resp = handle_line(&ctx, &client, &line);
+            // whatever the input, the server answers a JSON object that
+            // either errors or carries a well-formed payload
+            assert!(
+                resp.get("error").is_some()
+                    || resp.get("logits").is_some()
+                    || resp.get("models").is_some()
+                    || resp.get("reloaded").is_some(),
+                "no structured answer for {line:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn tcp_reaps_short_lived_connections() {
+        use std::io::{BufRead, BufReader, Write};
+        let (path, _) = saved_model("mlp1-mini", 44, "reap");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let srv = spawn_tcp(
+            reg,
+            ServeConfig { max_wait_us: 0, ..Default::default() },
+            "127.0.0.1:0",
+            false,
+        )
+        .unwrap();
+        let stats = srv.stats();
+        let nconns = 40usize;
+        for i in 0..nconns {
+            let stream =
+                std::net::TcpStream::connect(srv.addr()).unwrap();
+            let mut reader =
+                BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            writer
+                .write_all(
+                    format!("{{\"id\": {i}, \"input\": [1]}}\n")
+                        .as_bytes(),
+                )
+                .unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            assert!(resp.contains("error"), "wrong sample size: {resp}");
+            // connection closes here; the handler thread finishes
+        }
+        // the accept loop reaps finished handlers in its idle gaps —
+        // without the reap, tracked handles grow one per connection
+        // forever (the pre-refactor leak)
+        let t0 = std::time::Instant::now();
+        loop {
+            let live = stats.live_handlers.load(Ordering::Relaxed);
+            let reaped = stats.reaped.load(Ordering::Relaxed);
+            if live == 0 && reaped >= (nconns as u64) - 4 {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "handlers not reaped: live {live}, reaped {reaped}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(stats.accepted.load(Ordering::Relaxed),
+                   nconns as u64);
+        assert!(
+            stats.tracked_handles.load(Ordering::Relaxed) < REAP_AT,
+            "tracked handles grew without bound"
+        );
+        srv.shutdown();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn config_builder_validates_ranges() {
+        // defaults build and equal ServeConfig::default()
+        let d = ServeConfig::default();
+        let b = ServeConfig::builder().build().unwrap();
+        assert_eq!(b.max_batch, d.max_batch);
+        assert_eq!(b.max_wait_us, d.max_wait_us);
+        assert_eq!(b.max_request_samples, d.max_request_samples);
+        assert_eq!(b.shards, d.shards);
+        assert_eq!(b.queue_budget_us, d.queue_budget_us);
+        // unit conversion: ms (CLI) -> us (config)
+        let c = ServeConfig::builder().queue_budget_ms(2.5).build()
+            .unwrap();
+        assert_eq!(c.queue_budget_us, 2500);
+        // shards 0 = auto, at least 1
+        let c = ServeConfig::builder().shards(0).build().unwrap();
+        assert!(c.shards >= 1 && c.shards <= 64, "{}", c.shards);
+        // every violation names its CLI flag
+        for (err, flag) in [
+            (ServeConfig::builder().max_batch(0).build(), "--max-batch"),
+            (ServeConfig::builder().max_batch(100_000).build(),
+             "--max-batch"),
+            (ServeConfig::builder().max_wait_us(20_000_000).build(),
+             "--max-wait-us"),
+            (ServeConfig::builder().max_request_samples(0).build(),
+             "--max-request"),
+            (ServeConfig::builder().shards(1000).build(), "--shards"),
+            (ServeConfig::builder().queue_budget_ms(-1.0).build(),
+             "--queue-budget-ms"),
+            (ServeConfig::builder().queue_budget_ms(f64::NAN).build(),
+             "--queue-budget-ms"),
+        ] {
+            let e = err.unwrap_err();
+            assert!(e.contains(flag), "{e} should mention {flag}");
+        }
+    }
+
+    #[test]
+    fn tcp_line_cap_scales_with_widest_model() {
+        let (path, _) = saved_model("tinycnn", 1, "linecap");
+        let reg = ModelRegistry::from_paths(&path).unwrap();
+        let cfg = ServeConfig::default();
+        // tinycnn sample = 1*8*8 = 64 ints
+        assert_eq!(max_line_bytes(&reg, &cfg),
+                   64 * cfg.max_request_samples as u64 * 13 + 4096);
+    }
+
+    #[test]
+    fn parse_inputs_forms() {
+        let flat = Json::parse("[1, 2, 3, 4]").unwrap();
+        assert_eq!(parse_inputs(&flat, 2).unwrap(), vec![1, 2, 3, 4]);
+        let nested = Json::parse("[[1, 2], [3, 4]]").unwrap();
+        assert_eq!(parse_inputs(&nested, 2).unwrap(), vec![1, 2, 3, 4]);
+        let wrapped = Json::parse(r#"{"inputs": [[1, 2]]}"#).unwrap();
+        assert_eq!(parse_inputs(&wrapped, 2).unwrap(), vec![1, 2]);
+        assert!(parse_inputs(&flat, 3).is_err(), "not a multiple");
+        assert!(parse_inputs(&Json::parse("[]").unwrap(), 2).is_err());
+        assert!(parse_inputs(&Json::parse("[[1]]").unwrap(), 2).is_err());
+        assert!(parse_inputs(&Json::parse("\"x\"").unwrap(), 2).is_err());
+    }
+
+    #[test]
+    fn bench_serve_quick_emits_record_and_passes_identity() {
+        let dir = std::env::temp_dir().join("nitro_serve_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_serve.json");
+        let mut failures = Vec::new();
+        let rec = bench_serve(true, 0.01, out.to_str().unwrap(),
+                              &mut failures)
+            .unwrap();
+        assert!(failures.is_empty(), "{failures:?}");
+        assert_eq!(rec.req("schema_version").unwrap().as_i64(),
+                   Some(SCHEMA_VERSION));
+        assert_eq!(rec.req("bitexact").unwrap().as_bool(), Some(true));
+        let rows =
+            rec.req("serve_throughput").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 3, "quick batch sizes");
+        for r in rows {
+            assert!(r.req("requests_per_sec").unwrap().as_f64().unwrap()
+                    > 0.0);
+            assert!(r.req("p99_ns").unwrap().as_f64().unwrap()
+                    >= r.req("p50_ns").unwrap().as_f64().unwrap());
+        }
+        // the open_loop key always exists; quick mode marks it skipped
+        assert!(rec.req("open_loop").unwrap().get("skipped").is_some());
+        let reread = Json::parse_file(out.to_str().unwrap()).unwrap();
+        assert_eq!(reread.req("experiment").unwrap().as_str(),
+                   Some("serve"));
+    }
+}

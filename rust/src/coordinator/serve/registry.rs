@@ -1,0 +1,373 @@
+//! Versioned model registry with hot checkpoint reload.
+//!
+//! Models live behind `Arc<ServedModel>` in an `RwLock`ed map, so a
+//! reload is a pointer swap: requests already resolved keep executing
+//! on the old version (the `Arc` keeps it alive until its last in-flight
+//! request finishes), requests resolved after the swap get the new one,
+//! and no request ever observes a half-written model — the checkpoint
+//! loader builds the replacement off to the side and the atomic-rename
+//! write (`checkpoint::save`) guarantees the file read is all-old or
+//! all-new. Every successful reload bumps the model's `version`, which
+//! v1 responses echo so clients can tell which weights scored them.
+
+use super::wire::ServeError;
+use super::ServedModel;
+use crate::util::jsonio::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Per-model request counters; survive reloads (they describe the name,
+/// not one weight snapshot).
+#[derive(Default)]
+pub struct ModelStats {
+    pub requests: AtomicU64,
+    pub samples: AtomicU64,
+}
+
+struct Entry {
+    model: Arc<ServedModel>,
+    stats: Arc<ModelStats>,
+}
+
+/// The set of served models, keyed by name (an explicit `--models`
+/// alias, or the spec name recorded in the checkpoint). Shared across
+/// connection threads and shard executors; interior mutability makes
+/// hot reload possible without stopping the world.
+#[derive(Default)]
+pub struct ModelRegistry {
+    inner: RwLock<BTreeMap<String, Entry>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register an in-memory model (tests and the serve bench). A name
+    /// collision is an error — two models shadowing each other is a
+    /// config mistake, not a reload.
+    pub fn insert(&self, model: ServedModel)
+                  -> Result<Arc<ServedModel>, String> {
+        let m = Arc::new(model);
+        let mut map = self.inner.write().expect("registry lock");
+        if let Some(prev) = map.get(&m.name) {
+            return Err(format!(
+                "model '{}' already loaded from {} (also in {})",
+                m.name, prev.model.path, m.path
+            ));
+        }
+        map.insert(m.name.clone(), Entry {
+            model: m.clone(),
+            stats: Arc::new(ModelStats::default()),
+        });
+        Ok(m)
+    }
+
+    /// Load a checkpoint keyed by its recorded spec name.
+    pub fn load(&self, path: &str) -> Result<Arc<ServedModel>, String> {
+        self.load_as(None, path)
+    }
+
+    /// Load a checkpoint under an explicit alias (`--models name=path`).
+    pub fn load_as(&self, alias: Option<&str>, path: &str)
+                   -> Result<Arc<ServedModel>, String> {
+        self.insert(ServedModel::load_versioned(path, alias, 1)?)
+    }
+
+    /// Build a registry from a comma-separated checkpoint path list
+    /// (the deprecated positional `nitro serve` form).
+    pub fn from_paths(paths: &str) -> Result<ModelRegistry, String> {
+        let reg = ModelRegistry::new();
+        for p in paths.split(',').map(str::trim).filter(|p| !p.is_empty())
+        {
+            reg.load(p)?;
+        }
+        if reg.is_empty() {
+            return Err("no checkpoint paths given".into());
+        }
+        Ok(reg)
+    }
+
+    /// Build a registry from a `--models` spec: comma-separated
+    /// `name=path` entries (a bare `path` keys by the checkpoint's
+    /// recorded spec name).
+    pub fn from_spec(spec: &str) -> Result<ModelRegistry, String> {
+        let reg = ModelRegistry::new();
+        for item in
+            spec.split(',').map(str::trim).filter(|p| !p.is_empty())
+        {
+            match item.split_once('=') {
+                Some((name, path)) => {
+                    let name = name.trim();
+                    if name.is_empty() || path.trim().is_empty() {
+                        return Err(format!(
+                            "--models entry '{item}': want name=path"));
+                    }
+                    reg.load_as(Some(name), path.trim())?;
+                }
+                None => {
+                    reg.load(item)?;
+                }
+            }
+        }
+        if reg.is_empty() {
+            return Err("--models lists no checkpoints".into());
+        }
+        Ok(reg)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ServedModel>> {
+        self.inner
+            .read()
+            .expect("registry lock")
+            .get(name)
+            .map(|e| e.model.clone())
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.inner.read().expect("registry lock").keys().cloned()
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("registry lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Widest per-sample input across served models (sizes the TCP line
+    /// cap). Reloads cannot change it: a reload must match the name's
+    /// existing spec geometry or it is rejected.
+    pub fn widest_sample_size(&self) -> usize {
+        self.inner
+            .read()
+            .expect("registry lock")
+            .values()
+            .map(|e| e.model.sample_size)
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Resolve a request's model field: an explicit name must exist; an
+    /// omitted name is allowed only when exactly one model is served.
+    pub fn resolve(&self, name: Option<&str>)
+                   -> Result<Arc<ServedModel>, ServeError> {
+        let map = self.inner.read().expect("registry lock");
+        let serving = || {
+            map.keys().cloned().collect::<Vec<_>>().join(", ")
+        };
+        match name {
+            Some(n) => map.get(n).map(|e| e.model.clone()).ok_or_else(
+                || ServeError::unknown_model(format!(
+                    "unknown model '{n}' (serving: {})", serving())),
+            ),
+            None if map.len() == 1 => {
+                Ok(map.values().next().expect("len 1").model.clone())
+            }
+            None => Err(ServeError::bad_request(format!(
+                "request must name a model (serving: {})", serving()))),
+        }
+    }
+
+    /// Count an admitted request against the model's stats.
+    pub fn note_request(&self, name: &str, nsamples: usize) {
+        if let Some(e) =
+            self.inner.read().expect("registry lock").get(name)
+        {
+            e.stats.requests.fetch_add(1, Ordering::Relaxed);
+            e.stats.samples.fetch_add(nsamples as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Hot-reload every model from its checkpoint path. Per model: on
+    /// success the entry is swapped to the new `Arc` with a bumped
+    /// version (in-flight requests finish on the old one); on failure
+    /// (missing/corrupt file, or a checkpoint whose spec geometry no
+    /// longer matches the name) the old version stays live and the error
+    /// is reported. The checkpoint read happens outside the write lock —
+    /// serving never blocks on disk.
+    pub fn reload_all(&self) -> Vec<(String, Result<u64, String>)> {
+        let targets: Vec<(String, String, u64)> = self
+            .inner
+            .read()
+            .expect("registry lock")
+            .iter()
+            .map(|(k, e)| {
+                (k.clone(), e.model.path.clone(), e.model.version)
+            })
+            .collect();
+        let mut out = Vec::new();
+        for (name, path, old_v) in targets {
+            let loaded = ServedModel::load_versioned(
+                &path, Some(&name), old_v + 1,
+            )
+            .and_then(|m| {
+                let mut map = self.inner.write().expect("registry lock");
+                match map.get_mut(&name) {
+                    Some(e) => {
+                        if m.sample_size != e.model.sample_size
+                            || m.num_classes != e.model.num_classes
+                        {
+                            return Err(format!(
+                                "checkpoint at {path} changed geometry \
+                                 ({} ints -> {} ints per sample)",
+                                e.model.sample_size, m.sample_size
+                            ));
+                        }
+                        // last writer wins, versions stay monotone even
+                        // under concurrent reload requests
+                        let m = Arc::new(m);
+                        if e.model.version < m.version {
+                            e.model = m;
+                        }
+                        Ok(e.model.version)
+                    }
+                    None => Err("model vanished during reload".into()),
+                }
+            });
+            out.push((name, loaded));
+        }
+        out
+    }
+
+    /// `models` section of the `stats` response.
+    pub fn models_json(&self) -> Json {
+        let map = self.inner.read().expect("registry lock");
+        Json::Array(
+            map.values()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("name", Json::Str(e.model.name.clone())),
+                        ("path", Json::Str(e.model.path.clone())),
+                        ("spec", Json::Str(e.model.spec_name()
+                                               .to_string())),
+                        ("version", Json::Int(e.model.version as i64)),
+                        ("sample_size",
+                         Json::Int(e.model.sample_size as i64)),
+                        ("num_classes",
+                         Json::Int(e.model.num_classes as i64)),
+                        ("requests",
+                         Json::Int(e.stats.requests
+                                       .load(Ordering::Relaxed)
+                                       as i64)),
+                        ("samples",
+                         Json::Int(e.stats.samples
+                                       .load(Ordering::Relaxed)
+                                       as i64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::saved_model;
+    use super::super::wire::ErrorKind;
+    use super::*;
+    use crate::train::checkpoint;
+    use crate::nn::{zoo, Network};
+
+    #[test]
+    fn registry_loads_by_recorded_spec_and_resolves() {
+        let (p1, _) = saved_model("tinycnn", 3, "reg");
+        let (p2, _) = saved_model("mlp1-mini", 4, "reg");
+        let reg =
+            ModelRegistry::from_paths(&format!("{p1}, {p2}")).unwrap();
+        assert_eq!(reg.names(), vec!["mlp1-mini", "tinycnn"]);
+        assert_eq!(reg.get("tinycnn").unwrap().input_shape, vec![1, 8, 8]);
+        assert_eq!(reg.get("tinycnn").unwrap().version, 1);
+        assert_eq!(reg.widest_sample_size(), 64);
+        // explicit name resolves; omitted name is ambiguous with 2 models
+        assert!(reg.resolve(Some("mlp1-mini")).is_ok());
+        let err = reg.resolve(None).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::BadRequest);
+        assert!(err.msg.contains("tinycnn"), "{err}");
+        let err = reg.resolve(Some("nope")).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::UnknownModel);
+        // duplicate spec rejected
+        let (p3, _) = saved_model("tinycnn", 9, "dup");
+        let err = ModelRegistry::from_paths(&format!("{p1},{p3}"))
+            .unwrap_err();
+        assert!(err.contains("already loaded"), "{err}");
+        // corrupt checkpoint is an Err, not a panic
+        let dir = std::env::temp_dir().join("nitro_serve_test");
+        let bad = dir.join("bad.ckpt");
+        std::fs::write(&bad, b"NITRO1\n\xff\xff\xff\xff").unwrap();
+        assert!(ModelRegistry::from_paths(bad.to_str().unwrap()).is_err());
+    }
+
+    #[test]
+    fn models_spec_aliases_and_rejects_malformed_entries() {
+        let (p1, _) = saved_model("tinycnn", 5, "alias");
+        let reg = ModelRegistry::from_spec(&format!("prod={p1}")).unwrap();
+        assert_eq!(reg.names(), vec!["prod"]);
+        let m = reg.resolve(Some("prod")).unwrap();
+        assert_eq!(m.spec_name(), "tinycnn");
+        // two aliases may serve the same checkpoint file
+        let reg = ModelRegistry::from_spec(&format!("a={p1}, b={p1}"))
+            .unwrap();
+        assert_eq!(reg.names(), vec!["a", "b"]);
+        // bare path falls back to the recorded spec name
+        let reg = ModelRegistry::from_spec(&p1).unwrap();
+        assert_eq!(reg.names(), vec!["tinycnn"]);
+        assert!(ModelRegistry::from_spec("=x").is_err());
+        assert!(ModelRegistry::from_spec("a=").is_err());
+        assert!(ModelRegistry::from_spec("  ,, ").is_err());
+    }
+
+    #[test]
+    fn reload_bumps_version_and_keeps_old_on_failure() {
+        let (path, _) = saved_model("tinycnn", 21, "reload");
+        let reg = ModelRegistry::new();
+        reg.load(&path).unwrap();
+        assert_eq!(reg.resolve(None).unwrap().version, 1);
+
+        // overwrite with new weights -> version 2, new weights served
+        let net2 = Network::new(zoo::get("tinycnn").unwrap(), 22);
+        checkpoint::save(&net2, &path).unwrap();
+        let results = reg.reload_all();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].1.as_ref().unwrap(), &2);
+        let m2 = reg.resolve(None).unwrap();
+        assert_eq!(m2.version, 2);
+
+        // a failing reload reports the error and keeps version 2 live
+        std::fs::write(&path, b"NITRO1\n\xff garbage").unwrap();
+        let results = reg.reload_all();
+        assert!(results[0].1.is_err(), "{results:?}");
+        assert_eq!(reg.resolve(None).unwrap().version, 2);
+
+        // a checkpoint of different geometry under the same name is
+        // rejected too (the TCP line cap was sized off the old geometry)
+        let other = Network::new(zoo::get("mlp1-mini").unwrap(), 1);
+        checkpoint::save(&other, &path).unwrap();
+        let results = reg.reload_all();
+        let err = results[0].1.as_ref().unwrap_err();
+        assert!(err.contains("geometry"), "{err}");
+        assert_eq!(reg.resolve(None).unwrap().version, 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stats_json_counts_requests_per_model() {
+        let (path, _) = saved_model("tinycnn", 30, "stats");
+        let reg = ModelRegistry::new();
+        reg.load_as(Some("m"), &path).unwrap();
+        reg.note_request("m", 3);
+        reg.note_request("m", 1);
+        reg.note_request("ghost", 9); // unknown names are ignored
+        let j = reg.models_json();
+        let rows = j.as_array().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req("name").unwrap().as_str(), Some("m"));
+        assert_eq!(rows[0].req("requests").unwrap().as_i64(), Some(2));
+        assert_eq!(rows[0].req("samples").unwrap().as_i64(), Some(4));
+        assert_eq!(rows[0].req("version").unwrap().as_i64(), Some(1));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,223 @@
+//! Admission control and per-shard serving statistics.
+//!
+//! Each micro-batcher shard owns one [`ShardState`]. Admission is a
+//! latency-budget check, not a queue-length check: a request is shed
+//! when the *estimated queue wait* — admitted-but-unfinished samples
+//! times the shard's EWMA per-sample execution time — already exceeds
+//! the configured budget. The estimate deliberately excludes the
+//! request's own service time, so an idle shard (depth 0) admits
+//! unconditionally and a budget smaller than one service time still
+//! lets work through one request at a time instead of livelocking.
+//!
+//! Bookkeeping order matters for determinism: the executor updates
+//! depth / EWMA / histograms *before* delivering responses
+//! (`complete_batch` precedes the response sends in `run_group`), so a
+//! client that observed its own response is guaranteed to observe the
+//! post-batch admission state too — the shedding tests rely on this.
+
+use crate::util::hist::LogHistogram;
+use crate::util::jsonio::Json;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// EWMA weight: new = (old * (W-1) + sample) / W.
+const EWMA_W: u64 = 8;
+
+pub struct ShardState {
+    shard: usize,
+    /// Samples admitted but not yet completed (queued or executing).
+    depth_samples: AtomicUsize,
+    /// Smoothed per-sample execution time; 0 = no batch finished yet
+    /// (bootstrap: admit everything until the first measurement).
+    ewma_ns: AtomicU64,
+    shed: AtomicU64,
+    completed: AtomicU64,
+    completed_samples: AtomicU64,
+    /// End-to-end request latency (enqueue -> response ready), ns.
+    hist: Mutex<LogHistogram>,
+}
+
+impl ShardState {
+    pub fn new(shard: usize) -> ShardState {
+        ShardState {
+            shard,
+            depth_samples: AtomicUsize::new(0),
+            ewma_ns: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            completed_samples: AtomicU64::new(0),
+            hist: Mutex::new(LogHistogram::new()),
+        }
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Admit `nsamples` (charging them to the queue depth) or shed.
+    /// `budget_ns == 0` disables shedding. `Err` carries the estimated
+    /// wait that broke the budget and has already counted the shed.
+    pub fn try_admit(&self, nsamples: usize, budget_ns: u64)
+                     -> Result<(), u64> {
+        if budget_ns > 0 {
+            let ewma = self.ewma_ns.load(Ordering::Relaxed);
+            if ewma > 0 {
+                let wait_ns =
+                    (self.depth_samples.load(Ordering::Relaxed) as u64)
+                        .saturating_mul(ewma);
+                if wait_ns > budget_ns {
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                    return Err(wait_ns);
+                }
+            }
+        }
+        self.depth_samples.fetch_add(nsamples, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Undo an admission whose request never reached the executor.
+    pub fn cancel(&self, nsamples: usize) {
+        self.depth_samples.fetch_sub(nsamples, Ordering::Relaxed);
+    }
+
+    /// Account one executed micro-batch: drop its samples from the
+    /// depth, fold its per-sample time into the EWMA.
+    pub fn complete_batch(&self, nreqs: usize, nsamples: usize,
+                          exec_ns: u64) {
+        // saturating decrement: a stray extra completion (tests driving
+        // the state directly) must not wrap the depth to usize::MAX and
+        // wedge admission into shedding everything
+        let _ = self.depth_samples.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |d| Some(d.saturating_sub(nsamples)),
+        );
+        self.completed.fetch_add(nreqs as u64, Ordering::Relaxed);
+        self.completed_samples
+            .fetch_add(nsamples as u64, Ordering::Relaxed);
+        // floor of 1: a sub-ns measurement must still mark the EWMA as
+        // seeded, or admission control would stay in bootstrap forever
+        let per = (exec_ns / nsamples.max(1) as u64).max(1);
+        // single-writer (the shard's executor thread); load/store is fine
+        let old = self.ewma_ns.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            per
+        } else {
+            (old * (EWMA_W - 1) + per) / EWMA_W
+        };
+        self.ewma_ns.store(new, Ordering::Relaxed);
+    }
+
+    pub fn record_latency_ns(&self, ns: u64) {
+        self.hist.lock().expect("shard hist lock").record(ns);
+    }
+
+    pub fn depth_samples(&self) -> usize {
+        self.depth_samples.load(Ordering::Relaxed)
+    }
+
+    pub fn ewma_ns(&self) -> u64 {
+        self.ewma_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn completed_count(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot_hist(&self) -> LogHistogram {
+        self.hist.lock().expect("shard hist lock").clone()
+    }
+
+    /// Shard section of the `stats` response.
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::Int(self.shard as i64)),
+            ("completed", Json::Int(self.completed_count() as i64)),
+            ("completed_samples",
+             Json::Int(self.completed_samples.load(Ordering::Relaxed)
+                           as i64)),
+            ("shed", Json::Int(self.shed_count() as i64)),
+            ("depth_samples", Json::Int(self.depth_samples() as i64)),
+            ("ewma_ns_per_sample", Json::Int(self.ewma_ns() as i64)),
+            ("latency", hist_json(&self.snapshot_hist())),
+        ])
+    }
+}
+
+/// p50/p99/p999 summary of a latency histogram, in microseconds.
+pub fn hist_json(h: &LogHistogram) -> Json {
+    let us = |ns: u64| Json::Float(ns as f64 / 1000.0);
+    Json::obj(vec![
+        ("count", Json::Int(h.count() as i64)),
+        ("p50_us", us(h.quantile(0.50))),
+        ("p99_us", us(h.quantile(0.99))),
+        ("p999_us", us(h.quantile(0.999))),
+        ("max_us", us(h.max())),
+        ("mean_us", Json::Float(h.mean() / 1000.0)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bootstrap_admits_until_first_measurement() {
+        let s = ShardState::new(0);
+        // no EWMA yet: even a 1ns budget admits
+        assert!(s.try_admit(100, 1).is_ok());
+        assert_eq!(s.depth_samples(), 100);
+        s.complete_batch(1, 100, 1_000_000); // 10_000 ns/sample
+        assert_eq!(s.depth_samples(), 0);
+        assert_eq!(s.ewma_ns(), 10_000);
+        assert_eq!(s.completed_count(), 1);
+    }
+
+    #[test]
+    fn sheds_on_queue_wait_not_own_service_time() {
+        let s = ShardState::new(3);
+        s.complete_batch(1, 1, 50_000); // seed EWMA at 50_000 ns
+        // idle shard: estimated wait is 0, any budget admits even though
+        // one service time (50us) exceeds the 10us budget
+        assert!(s.try_admit(4, 10_000).is_ok());
+        // now 4 samples deep: wait = 4 * 50us = 200us > 10us -> shed
+        let wait = s.try_admit(1, 10_000).unwrap_err();
+        assert_eq!(wait, 200_000);
+        assert_eq!(s.shed_count(), 1);
+        // depth unchanged by the shed; cancel rolls back an admission
+        assert_eq!(s.depth_samples(), 4);
+        s.cancel(4);
+        assert_eq!(s.depth_samples(), 0);
+        assert!(s.try_admit(1, 10_000).is_ok());
+        // budget 0 disables shedding entirely
+        let s2 = ShardState::new(0);
+        s2.complete_batch(1, 1, u64::MAX / 2);
+        assert!(s2.try_admit(1_000_000, 0).is_ok());
+    }
+
+    #[test]
+    fn ewma_converges_and_stats_json_has_latency_summary() {
+        let s = ShardState::new(1);
+        s.complete_batch(1, 1, 8_000);
+        for _ in 0..64 {
+            s.complete_batch(2, 4, 4_000); // 1000 ns/sample
+        }
+        // converged near the steady-state per-sample time
+        assert!(s.ewma_ns() >= 999 && s.ewma_ns() <= 2_000,
+                "ewma {}", s.ewma_ns());
+        s.record_latency_ns(10_000);
+        s.record_latency_ns(20_000);
+        let j = s.json();
+        assert_eq!(j.req("shard").unwrap().as_i64(), Some(1));
+        let lat = j.req("latency").unwrap();
+        assert_eq!(lat.req("count").unwrap().as_i64(), Some(2));
+        let p50 = lat.req("p50_us").unwrap().as_f64().unwrap();
+        let p99 = lat.req("p99_us").unwrap().as_f64().unwrap();
+        let p999 = lat.req("p999_us").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99 && p99 <= p999, "{p50} {p99} {p999}");
+    }
+}

@@ -1,0 +1,359 @@
+//! Wire protocol: versioned JSON-line envelopes and the typed serve
+//! error that maps 1:1 onto machine-readable wire error codes.
+//!
+//! v1 request: `{"v": 1, "id": <any>, "model": "<name>"?,
+//! "input": [<i32>...]}` (or `"op": "stats" | "reload"`); v1 response:
+//! `{"v": 1, "id": ..., "model": ..., "model_version": N,
+//! "logits": [[...]], "argmax": [...]}` or `{"v": 1, "id": ...,
+//! "error": {"code": "...", "message": "..."}}`.
+//!
+//! v0 lines (no `"v"` key) are still accepted and answered in the v0
+//! shape — string `"error"`, no `"v"`/`"model_version"` keys — with a
+//! one-time deprecation note on stderr (see `handle_line`). Control ops
+//! are v1-only: v0 never had them, so there is no legacy shape to honor.
+
+use crate::tensor::ITensor;
+use crate::util::jsonio::Json;
+
+/// Current wire protocol version.
+pub const WIRE_V1: i64 = 1;
+
+/// Machine-readable error class; `code()` is the wire `error.code`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Malformed envelope, bad input array, unsupported version.
+    BadRequest,
+    /// The named model is not in the registry.
+    UnknownModel,
+    /// Admission control shed the request (queue over latency budget).
+    Overloaded,
+    /// Request exceeds the per-request sample limit.
+    TooLarge,
+    /// Server-side failure (executor gone); client retry is reasonable.
+    Internal,
+}
+
+impl ErrorKind {
+    pub fn code(self) -> &'static str {
+        match self {
+            ErrorKind::BadRequest => "bad_request",
+            ErrorKind::UnknownModel => "unknown_model",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::TooLarge => "too_large",
+            ErrorKind::Internal => "internal",
+        }
+    }
+}
+
+/// Typed serve-layer error: a wire error code plus human context.
+/// Replaces the stringly-typed `Result<_, String>` the serve layer used
+/// to thread around — shedding and protocol decisions dispatch on
+/// `kind`, never on substring matching.
+#[derive(Clone, Debug)]
+pub struct ServeError {
+    pub kind: ErrorKind,
+    pub msg: String,
+}
+
+impl ServeError {
+    pub fn bad_request(msg: impl Into<String>) -> ServeError {
+        ServeError { kind: ErrorKind::BadRequest, msg: msg.into() }
+    }
+
+    pub fn unknown_model(msg: impl Into<String>) -> ServeError {
+        ServeError { kind: ErrorKind::UnknownModel, msg: msg.into() }
+    }
+
+    pub fn overloaded(msg: impl Into<String>) -> ServeError {
+        ServeError { kind: ErrorKind::Overloaded, msg: msg.into() }
+    }
+
+    pub fn too_large(msg: impl Into<String>) -> ServeError {
+        ServeError { kind: ErrorKind::TooLarge, msg: msg.into() }
+    }
+
+    pub fn internal(msg: impl Into<String>) -> ServeError {
+        ServeError { kind: ErrorKind::Internal, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind.code(), self.msg)
+    }
+}
+
+impl From<ServeError> for String {
+    fn from(e: ServeError) -> String {
+        e.to_string()
+    }
+}
+
+/// A parsed request envelope.
+pub struct Request {
+    /// Protocol version the client spoke (0 or [`WIRE_V1`]); responses
+    /// mirror it.
+    pub v: i64,
+    pub id: Json,
+    pub op: Op,
+}
+
+pub enum Op {
+    Predict { model: Option<String>, input: Vec<i32> },
+    /// Per-model request counters + per-shard queue/latency state.
+    Stats,
+    /// Hot-reload every model from its checkpoint path.
+    Reload,
+}
+
+/// Strict i32 vector for wire input: rejects non-integers and values
+/// outside i32 range with an error (jsonio's `i32_vec` truncates with
+/// `as i32` — fine for trusted golden vectors, silently wrong for
+/// untrusted requests).
+pub(crate) fn i32_vec_strict(j: &Json) -> Result<Vec<i32>, String> {
+    j.as_array()
+        .ok_or("not an array")?
+        .iter()
+        .map(|v| {
+            let n = v
+                .as_i64()
+                .ok_or_else(|| "not an integer".to_string())?;
+            i32::try_from(n)
+                .map_err(|_| format!("value {n} does not fit i32"))
+        })
+        .collect()
+}
+
+/// Parse one wire line into a [`Request`]. On failure returns the
+/// `(version, id, error)` triple the caller needs to answer in the right
+/// shape — a parse error must still produce a well-formed response.
+pub fn parse_request(line: &str)
+                     -> Result<Request, (i64, Json, ServeError)> {
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            return Err((0, Json::Null,
+                        ServeError::bad_request(format!("bad request: {e}"))));
+        }
+    };
+    let id = j.get("id").cloned().unwrap_or(Json::Null);
+    let v = match j.get("v") {
+        None => 0,
+        Some(Json::Int(n)) if *n == 0 || *n == WIRE_V1 => *n,
+        Some(Json::Int(n)) => {
+            return Err((WIRE_V1, id, ServeError::bad_request(format!(
+                "unsupported protocol version {n} (this server speaks \
+                 v0 and v{WIRE_V1})"))));
+        }
+        Some(_) => {
+            return Err((WIRE_V1, id,
+                        ServeError::bad_request("'v' must be an integer")));
+        }
+    };
+    match j.get("op") {
+        None => {}
+        Some(Json::Str(op)) => match op.as_str() {
+            "predict" => {}
+            "stats" | "reload" if v < WIRE_V1 => {
+                return Err((v, id, ServeError::bad_request(format!(
+                    "op '{op}' requires a v{WIRE_V1} envelope \
+                     (\"v\": {WIRE_V1})"))));
+            }
+            "stats" => return Ok(Request { v, id, op: Op::Stats }),
+            "reload" => return Ok(Request { v, id, op: Op::Reload }),
+            other => {
+                return Err((v, id, ServeError::bad_request(format!(
+                    "unknown op '{other}' (predict, stats, reload)"))));
+            }
+        },
+        Some(_) => {
+            return Err((v, id,
+                        ServeError::bad_request("'op' must be a string")));
+        }
+    }
+    let model = match j.get("model") {
+        None => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(_) => {
+            return Err((v, id,
+                        ServeError::bad_request("'model' must be a string")));
+        }
+    };
+    let input = match j.get("input") {
+        Some(val) => match i32_vec_strict(val) {
+            Ok(x) => x,
+            Err(e) => {
+                return Err((v, id,
+                            ServeError::bad_request(
+                                format!("bad 'input': {e}"))));
+            }
+        },
+        None => {
+            return Err((v, id, ServeError::bad_request("missing 'input'")));
+        }
+    };
+    Ok(Request { v, id, op: Op::Predict { model, input } })
+}
+
+/// Success response for `(n, num_classes)` logits, in the shape of the
+/// protocol version the request used: v1 adds `"v"` and the served
+/// `"model_version"`; v0 is byte-compatible with the pre-versioned
+/// protocol.
+pub fn ok_response(v: i64, id: Json, model: &str, model_version: u64,
+                   y: &ITensor) -> Json {
+    let g = y.shape[1];
+    let mut logits = Vec::with_capacity(y.shape[0]);
+    let mut argmax = Vec::with_capacity(y.shape[0]);
+    for row in y.data.chunks(g) {
+        logits.push(Json::Array(
+            row.iter().map(|&v| Json::Int(v as i64)).collect(),
+        ));
+        let mut best = 0usize;
+        for j in 1..g {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        argmax.push(Json::Int(best as i64));
+    }
+    let mut fields = vec![
+        ("id", id),
+        ("model", Json::Str(model.to_string())),
+        ("logits", Json::Array(logits)),
+        ("argmax", Json::Array(argmax)),
+    ];
+    if v >= WIRE_V1 {
+        fields.push(("v", Json::Int(WIRE_V1)));
+        fields.push(("model_version", Json::Int(model_version as i64)));
+    }
+    Json::obj(fields)
+}
+
+/// Error response in the request's protocol shape: v1 carries a
+/// structured `{"code", "message"}` object, v0 the legacy string (with
+/// the code as a `"code: "` prefix).
+pub fn err_response(v: i64, id: Json, e: &ServeError) -> Json {
+    if v >= WIRE_V1 {
+        Json::obj(vec![
+            ("v", Json::Int(WIRE_V1)),
+            ("id", id),
+            ("error", Json::obj(vec![
+                ("code", Json::Str(e.kind.code().to_string())),
+                ("message", Json::Str(e.msg.clone())),
+            ])),
+        ])
+    } else {
+        Json::obj(vec![("id", id), ("error", Json::Str(e.to_string()))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v_detection_and_version_negotiation() {
+        // no "v" key = v0; explicit 0 and 1 accepted; others rejected
+        let r = parse_request(r#"{"id": 1, "input": [3]}"#).unwrap();
+        assert_eq!(r.v, 0);
+        let r = parse_request(r#"{"v": 0, "id": 1, "input": [3]}"#).unwrap();
+        assert_eq!(r.v, 0);
+        let r = parse_request(r#"{"v": 1, "id": 1, "input": [3]}"#).unwrap();
+        assert_eq!(r.v, WIRE_V1);
+        match r.op {
+            Op::Predict { model, input } => {
+                assert_eq!(model, None);
+                assert_eq!(input, vec![3]);
+            }
+            _ => panic!("not a predict"),
+        }
+        let (v, id, e) =
+            parse_request(r#"{"v": 2, "id": 9, "input": [1]}"#).unwrap_err();
+        // future versions are answered in v1 shape, id echoed
+        assert_eq!(v, WIRE_V1);
+        assert_eq!(id.as_i64(), Some(9));
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        let (_, _, e) =
+            parse_request(r#"{"v": "x", "input": [1]}"#).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+    }
+
+    #[test]
+    fn control_ops_are_v1_only() {
+        assert!(matches!(
+            parse_request(r#"{"v": 1, "op": "stats"}"#).unwrap().op,
+            Op::Stats
+        ));
+        assert!(matches!(
+            parse_request(r#"{"v": 1, "op": "reload"}"#).unwrap().op,
+            Op::Reload
+        ));
+        // explicit "op": "predict" is allowed and still needs input
+        let (_, _, e) =
+            parse_request(r#"{"v": 1, "op": "predict"}"#).unwrap_err();
+        assert!(e.msg.contains("input"), "{e}");
+        let (v, _, e) = parse_request(r#"{"op": "stats"}"#).unwrap_err();
+        assert_eq!(v, 0);
+        assert!(e.msg.contains("v\": 1"), "{e}");
+        let (_, _, e) =
+            parse_request(r#"{"v": 1, "op": "frob"}"#).unwrap_err();
+        assert!(e.msg.contains("unknown op"), "{e}");
+    }
+
+    #[test]
+    fn response_shapes_match_protocol_version() {
+        let y = ITensor::from_vec(&[1, 3], vec![5, 9, 2]);
+        let v0 = ok_response(0, Json::Int(7), "m", 3, &y);
+        assert!(v0.get("v").is_none(), "v0 response must not carry 'v'");
+        assert!(v0.get("model_version").is_none());
+        assert_eq!(v0.req("argmax").unwrap().as_array().unwrap()[0]
+                       .as_i64(),
+                   Some(1));
+        let v1 = ok_response(WIRE_V1, Json::Int(7), "m", 3, &y);
+        assert_eq!(v1.req("v").unwrap().as_i64(), Some(WIRE_V1));
+        assert_eq!(v1.req("model_version").unwrap().as_i64(), Some(3));
+        assert_eq!(v1.req("logits").unwrap(), v0.req("logits").unwrap());
+
+        let e = ServeError::overloaded("queue full");
+        let e0 = err_response(0, Json::Null, &e);
+        assert_eq!(e0.req("error").unwrap().as_str(),
+                   Some("overloaded: queue full"));
+        let e1 = err_response(WIRE_V1, Json::Null, &e);
+        assert_eq!(e1.req("error").unwrap().req("code").unwrap().as_str(),
+                   Some("overloaded"));
+        assert_eq!(e1.req("error").unwrap().req("message").unwrap()
+                       .as_str(),
+                   Some("queue full"));
+    }
+
+    #[test]
+    fn error_kinds_map_to_stable_codes() {
+        for (e, code) in [
+            (ServeError::bad_request("x"), "bad_request"),
+            (ServeError::unknown_model("x"), "unknown_model"),
+            (ServeError::overloaded("x"), "overloaded"),
+            (ServeError::too_large("x"), "too_large"),
+            (ServeError::internal("x"), "internal"),
+        ] {
+            assert_eq!(e.kind.code(), code);
+            assert!(e.to_string().starts_with(code));
+        }
+    }
+
+    #[test]
+    fn strict_input_rejects_overflow_and_non_ints() {
+        let (_, _, e) = parse_request(
+            r#"{"v": 1, "input": [2147483648]}"#).unwrap_err();
+        assert!(e.msg.contains("does not fit i32"), "{e}");
+        let (_, _, e) =
+            parse_request(r#"{"v": 1, "input": [1.5]}"#).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        let (_, _, e) =
+            parse_request(r#"{"v": 1, "input": "xyz"}"#).unwrap_err();
+        assert!(e.msg.contains("not an array"), "{e}");
+        let (_, _, e) =
+            parse_request(r#"{"v": 1, "model": 42, "input": [1]}"#)
+                .unwrap_err();
+        assert!(e.msg.contains("'model'"), "{e}");
+    }
+}

@@ -5,6 +5,7 @@
 //!   eval        evaluate a checkpoint
 //!   serve       serve NITRO1 checkpoints (JSON lines on stdio or TCP)
 //!   predict     one-shot batch scoring of a checkpoint
+//!   loadgen     open-loop load generator against `nitro serve --listen`
 //!   experiment  regenerate a paper table/figure (table1..fig3|all)
 //!   run-spec    execute a declarative experiment spec (experiments/*.json)
 //!   zoo         list model presets and parameter counts
@@ -14,7 +15,8 @@ use nitro::coordinator::engine::{Engine, PjrtEngine};
 use nitro::coordinator::experiments::{self, ExpCtx, Scale};
 use nitro::coordinator::kernelbench;
 use nitro::coordinator::runner::{self, RunnerOpts};
-use nitro::coordinator::serve::{self, ModelRegistry, ServeConfig};
+use nitro::coordinator::serve::{self, flags as serveflags, loadgen,
+                                ModelRegistry, ServeConfig};
 use nitro::coordinator::spec::ExperimentSpec;
 use nitro::data::loader;
 use nitro::nn::{zoo, Hyper, Network};
@@ -29,6 +31,7 @@ fn main() {
         Some("eval") => cmd_eval(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("predict") => cmd_predict(&argv[1..]),
+        Some("loadgen") => cmd_loadgen(&argv[1..]),
         Some("experiment") => cmd_experiment(&argv[1..]),
         Some("run-spec") => cmd_run_spec(&argv[1..]),
         Some("bench-kernels") => cmd_bench_kernels(&argv[1..]),
@@ -53,9 +56,12 @@ Usage: nitro <subcommand> [options]
 Subcommands:
   train       train a preset (see `nitro train --help`)
   eval        evaluate a checkpoint on a dataset
-  serve       serve NITRO1 checkpoints: micro-batched integer-only
-              inference over JSON lines (stdin/stdout or --listen TCP)
+  serve       serve NITRO1 checkpoints: sharded micro-batched integer
+              inference over JSON lines (stdin/stdout or --listen TCP),
+              with hot reload and latency-budget load shedding
   predict     one-shot batch scoring: `nitro predict <ckpt> <input.json>`
+  loadgen     coordinated-omission-safe open-loop load generator against
+              a running `nitro serve --listen`
   experiment  regenerate a paper table/figure: table1 table2 table8
               table9 fig2-left fig2-right fig3 all
   run-spec    execute a declarative experiment spec, e.g.
@@ -243,36 +249,50 @@ fn cmd_eval(argv: &[String]) -> i32 {
 }
 
 fn cmd_serve(argv: &[String]) -> i32 {
-    let cmd = Command::new(
+    let cmd = serveflags::command(
         "nitro serve",
-        "serve NITRO1 checkpoints with micro-batched integer inference",
+        "serve NITRO1 checkpoints with sharded micro-batched integer \
+         inference",
+        serveflags::SERVE,
     )
-    .opt("listen", "",
-         "TCP address to listen on (e.g. 127.0.0.1:7878); \
-          default: JSON lines on stdin/stdout")
-    .opt("max-batch", "64", "micro-batch sample target")
-    .opt("max-wait-us", "200",
-         "coalescing window after the first queued request, microseconds")
-    .opt("max-request", "4096",
-         "per-request sample limit (larger requests are rejected)")
     .positional("checkpoints",
-                "comma-separated NITRO1 checkpoint path(s)");
+                "deprecated: bare checkpoint path(s); use --models");
     let p = match cmd.parse(argv) {
         Ok(p) => p,
         Err(e) => return fail(e),
     };
     let run = || -> Result<(), String> {
-        let paths =
-            p.positionals.first().ok_or("missing checkpoint path(s)")?;
-        let registry = ModelRegistry::from_paths(paths)?;
-        let cfg = ServeConfig {
-            max_batch: p.get_usize("max-batch")?.max(1),
-            max_wait_us: p.get_u64("max-wait-us")?,
-            max_request_samples: p.get_usize("max-request")?.max(1),
+        let registry = match (p.get("models"), p.positionals.first()) {
+            ("", None) => {
+                return Err("missing --models name=path[,name=path...] \
+                            (or a deprecated positional path list)"
+                    .to_string())
+            }
+            ("", Some(paths)) => {
+                eprintln!(
+                    "nitro serve: deprecation: positional checkpoint \
+                     paths; use --models name=path[,name=path...]"
+                );
+                ModelRegistry::from_paths(paths)?
+            }
+            (spec, None) => ModelRegistry::from_spec(spec)?,
+            (_, Some(_)) => {
+                return Err("--models and positional checkpoint paths \
+                            are mutually exclusive"
+                    .to_string())
+            }
         };
+        let cfg = ServeConfig::builder()
+            .max_batch(p.get_usize("max-batch")?)
+            .max_wait_us(p.get_u64("max-wait-us")?)
+            .max_request_samples(p.get_usize("max-request")?)
+            .shards(p.get_usize("shards")?)
+            .queue_budget_ms(p.get_f64("queue-budget-ms")?)
+            .build()?;
+        let sighup = p.has("reload-on-sighup");
         match p.get("listen") {
             "" => serve::serve_stdio(registry, cfg),
-            addr => serve::serve_tcp(registry, cfg, addr),
+            addr => serve::serve_tcp(registry, cfg, addr, sighup),
         }
     };
     match run() {
@@ -282,11 +302,11 @@ fn cmd_serve(argv: &[String]) -> i32 {
 }
 
 fn cmd_predict(argv: &[String]) -> i32 {
-    let cmd = Command::new(
+    let cmd = serveflags::command(
         "nitro predict",
         "one-shot batch scoring of a NITRO1 checkpoint",
+        serveflags::PREDICT,
     )
-    .opt("out", "", "write the response JSON here instead of stdout")
     .positional("checkpoint", "path to a NITRO1 checkpoint")
     .positional("input",
                 "JSON input: flat int array, array of per-sample arrays, \
@@ -303,6 +323,78 @@ fn cmd_predict(argv: &[String]) -> i32 {
             "" => println!("{}", resp.pretty().trim_end()),
             path => std::fs::write(path, resp.pretty())
                 .map_err(|e| format!("write {path}: {e}"))?,
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_loadgen(argv: &[String]) -> i32 {
+    let cmd = serveflags::command(
+        "nitro loadgen",
+        "open-loop load generator: offers a fixed arrival schedule and \
+         charges server backlog to the latency percentiles \
+         (coordinated-omission-safe)",
+        serveflags::LOADGEN,
+    );
+    let p = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let run = || -> Result<(), String> {
+        let opts = loadgen::LoadgenOpts {
+            addr: p.get("connect").to_string(),
+            rate: p.get_f64("rate")?,
+            duration_s: p.get_f64("duration")?,
+            connections: p.get_usize("connections")?.max(1),
+            model: match p.get("model") {
+                "" => None,
+                m => Some(m.to_string()),
+            },
+            req_samples: p.get_usize("req-samples")?.max(1),
+            seed: p.get_u64("seed")?,
+        };
+        let rep = loadgen::run(&opts)?;
+        if rep.ok + rep.shed == 0 {
+            return Err(format!(
+                "no request succeeded or was shed ({} errors) — is the \
+                 server healthy?",
+                rep.errors
+            ));
+        }
+        println!(
+            "loadgen: offered {} at {:.0} rps over {} conn(s): {} ok, \
+             {} shed, {} errors, {} late sends",
+            rep.offered, rep.offered_rps, rep.connections, rep.ok,
+            rep.shed, rep.errors, rep.late_sends
+        );
+        println!(
+            "latency (from scheduled arrival): p50 {}us  p99 {}us  \
+             p999 {}us  max {}us",
+            rep.hist.quantile(0.50) / 1000,
+            rep.hist.quantile(0.99) / 1000,
+            rep.hist.quantile(0.999) / 1000,
+            rep.hist.max() / 1000
+        );
+        let record = nitro::util::jsonio::Json::obj(vec![
+            ("schema_version",
+             nitro::util::jsonio::Json::Int(serve::SCHEMA_VERSION)),
+            ("experiment",
+             nitro::util::jsonio::Json::Str("serve_loadgen".to_string())),
+            ("target",
+             nitro::util::jsonio::Json::Str(opts.addr.clone())),
+            ("open_loop", rep.json()),
+        ]);
+        match p.get("out") {
+            "" => println!("{}", record.pretty().trim_end()),
+            path => {
+                std::fs::write(path, record.pretty())
+                    .map_err(|e| format!("write {path}: {e}"))?;
+                println!("-> {path}");
+            }
         }
         Ok(())
     };

@@ -1,0 +1,245 @@
+//! Log-bucketed latency histogram (replaces `hdrhistogram`, not
+//! vendored — DESIGN.md §Substitutions).
+//!
+//! Serving percentiles must be cheap to record (one increment on the
+//! executor hot path), mergeable across shards (per-shard histograms sum
+//! into one server-wide view), and bounded in memory regardless of how
+//! many samples land. Sorting raw latency vectors — what the closed-loop
+//! bench does — is none of those. This histogram buckets values
+//! logarithmically: exact below [`SUB`], then `SUB` linear sub-buckets
+//! per power of two, for a worst-case relative error of `1/SUB` (~3.1%)
+//! and at most [`NBUCKETS`] counters (~15 KiB) ever.
+//!
+//! Quantiles are reported as the upper bound of the bucket holding the
+//! rank, clamped into the observed `[min, max]` — so `quantile(q)` is an
+//! overestimate by at most one bucket width, never an underestimate, and
+//! quantiles are monotone in `q` by construction.
+
+/// Sub-bucket resolution: `1 << SUB_BITS` linear buckets per octave.
+const SUB_BITS: u32 = 5;
+/// Buckets per octave; also the threshold below which values are exact.
+const SUB: usize = 1 << SUB_BITS;
+/// Upper bound on the bucket index (`bucket_of(u64::MAX) + 1`).
+const NBUCKETS: usize = (64 - SUB_BITS as usize) * SUB + SUB;
+
+fn bucket_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as usize;
+        let shift = msb - SUB_BITS as usize;
+        (shift << SUB_BITS) + SUB + ((v >> shift) as usize & (SUB - 1))
+    }
+}
+
+/// Inclusive lower bound of bucket `i` (the inverse of [`bucket_of`]).
+fn bucket_low(i: usize) -> u64 {
+    if i < SUB {
+        i as u64
+    } else {
+        let shift = (i - SUB) >> SUB_BITS;
+        let sub = (i - SUB) & (SUB - 1);
+        ((SUB + sub) as u64) << shift
+    }
+}
+
+/// Inclusive upper bound of bucket `i`.
+fn bucket_high(i: usize) -> u64 {
+    if i + 1 >= NBUCKETS {
+        u64::MAX
+    } else {
+        bucket_low(i + 1) - 1
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct LogHistogram {
+    /// Grown on demand up to `NBUCKETS`; an idle histogram stays empty.
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let b = bucket_of(v);
+        if b >= self.counts.len() {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.sum = self.sum.saturating_add(v);
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Fold another histogram into this one (per-shard -> server-wide).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (dst, src) in self.counts.iter_mut().zip(&other.counts) {
+            *dst += src;
+        }
+        self.sum = self.sum.saturating_add(other.sum);
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the upper bound of the bucket
+    /// containing rank `ceil(q * count)`, clamped into `[min, max]`.
+    /// Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_high(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_a_partition() {
+        // every bucket's low is exactly the previous bucket's high + 1,
+        // and bucket_of maps both endpoints back to the bucket itself
+        for i in 1..NBUCKETS {
+            assert_eq!(bucket_low(i), bucket_high(i - 1) + 1, "bucket {i}");
+        }
+        for v in [0u64, 1, 31, 32, 33, 63, 64, 127, 128, 1000, 1 << 20,
+                  u64::MAX] {
+            let b = bucket_of(v);
+            assert!(bucket_low(b) <= v && v <= bucket_high(b),
+                    "v={v} b={b}");
+        }
+        assert_eq!(bucket_of(u64::MAX), NBUCKETS - 1);
+    }
+
+    #[test]
+    fn exact_below_sub_and_bounded_error_above() {
+        let mut h = LogHistogram::new();
+        for v in 0..SUB as u64 {
+            h.record(v);
+        }
+        // ranks are exact below SUB: quantile k/SUB ends at value k-1
+        assert_eq!(h.quantile(1.0 / SUB as f64), 0);
+        assert_eq!(h.quantile(0.5), (SUB as u64) / 2 - 1);
+        assert_eq!(h.quantile(1.0), SUB as u64 - 1);
+        // above SUB the reported quantile overestimates by < 1/SUB
+        let mut h = LogHistogram::new();
+        for v in [1000u64, 2000, 3000, 4000] {
+            h.record(v);
+        }
+        for (q, true_v) in [(0.25, 1000u64), (0.5, 2000), (1.0, 4000)] {
+            let got = h.quantile(q);
+            assert!(got >= true_v, "q={q}: {got} < {true_v}");
+            assert!((got - true_v) as f64 <= true_v as f64 / SUB as f64,
+                    "q={q}: {got} vs {true_v}");
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_clamped() {
+        let mut h = LogHistogram::new();
+        let mut state = 0x9e3779b9u64;
+        for _ in 0..5000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            h.record(state >> 40); // ~24-bit values
+        }
+        let mut prev = 0u64;
+        for i in 0..=100 {
+            let v = h.quantile(i as f64 / 100.0);
+            assert!(v >= prev, "quantile not monotone at {i}%");
+            prev = v;
+        }
+        assert_eq!(h.quantile(1.0), h.max());
+        // a single sample is reported exactly (clamping to [min, max])
+        let mut one = LogHistogram::new();
+        one.record(123_456_789);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(one.quantile(q), 123_456_789);
+        }
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let (mut a, mut b, mut both) =
+            (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+        for v in [5u64, 70, 900, 44] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [1u64, 1_000_000, 33] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.max(), both.max());
+        assert_eq!(a.mean(), both.mean());
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            assert_eq!(a.quantile(q), both.quantile(q), "q={q}");
+        }
+        // merging into an empty histogram copies min/max correctly
+        let mut empty = LogHistogram::new();
+        empty.merge(&both);
+        assert_eq!(empty.quantile(0.0), both.quantile(0.0));
+        assert_eq!(empty.quantile(1.0), both.quantile(1.0));
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -10,9 +10,12 @@
 //! * [`bench`]   — statistics-reporting micro-bench harness (replaces
 //!                 `criterion`)
 //! * [`prop`]    — seeded property-test driver (replaces `proptest`)
+//! * [`hist`]    — log-bucketed mergeable latency histogram (replaces
+//!                 `hdrhistogram`, for the serving percentiles)
 
 pub mod bench;
 pub mod cli;
+pub mod hist;
 pub mod jsonio;
 pub mod par;
 pub mod prop;

@@ -423,6 +423,143 @@ fn serve_stdio_answers_json_lines_matching_predict() {
 }
 
 #[test]
+fn serve_models_flag_v1_round_trip_and_v0_compat() {
+    use std::io::{BufRead, BufReader, Write};
+    let dir = std::env::temp_dir().join("nitro_cli_serve_v1");
+    let (ckpt, input) = trained_ckpt_and_input(&dir);
+    let (code, predict_out, stderr) = run(&["predict", &ckpt, &input]);
+    assert_eq!(code, 0, "{stderr}");
+    let expect = nitro::util::jsonio::Json::parse(&predict_out).unwrap();
+    let flat: Vec<String> = (0..64)
+        .map(|i| ((i * 37) % 255 - 127).to_string())
+        .collect();
+    let mut child = nitro()
+        .args(["serve", "--models", &format!("tc={ckpt}"), "--shards",
+               "2"])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn nitro serve");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        // v1 predict under the alias, a v1 typed error, a v1 stats/
+        // reload pair, and a bare v0 line — all on one server
+        writeln!(stdin,
+                 "{{\"v\": 1, \"id\": 1, \"model\": \"tc\", \
+                  \"input\": [{}]}}",
+                 flat.join(","))
+            .unwrap();
+        writeln!(stdin,
+                 "{{\"v\": 1, \"id\": 2, \"model\": \"nope\", \
+                  \"input\": [1]}}")
+            .unwrap();
+        writeln!(stdin, "{{\"v\": 1, \"id\": 3, \"op\": \"stats\"}}")
+            .unwrap();
+        writeln!(stdin, "{{\"v\": 1, \"id\": 4, \"op\": \"reload\"}}")
+            .unwrap();
+        writeln!(stdin, "{{\"id\": 5, \"input\": [{}]}}",
+                 flat.join(","))
+            .unwrap();
+    }
+    drop(child.stdin.take());
+    let reader = BufReader::new(child.stdout.take().unwrap());
+    let lines: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+    assert!(child.wait().unwrap().success());
+    assert_eq!(lines.len(), 5, "{lines:?}");
+    let parse = |s: &String| nitro::util::jsonio::Json::parse(s).unwrap();
+    let r1 = parse(&lines[0]);
+    assert_eq!(r1.req("v").unwrap().as_i64(), Some(1));
+    assert_eq!(r1.req("model").unwrap().as_str(), Some("tc"));
+    assert_eq!(r1.req("model_version").unwrap().as_i64(), Some(1));
+    let expect_rows = expect.req("logits").unwrap().as_array().unwrap();
+    assert_eq!(r1.req("logits").unwrap().as_array().unwrap()[0],
+               expect_rows[0],
+               "v1 serve logits differ from predict");
+    let r2 = parse(&lines[1]);
+    assert_eq!(
+        r2.req("error").unwrap().req("code").unwrap().as_str(),
+        Some("unknown_model"),
+        "{}", lines[1]
+    );
+    let r3 = parse(&lines[2]);
+    assert!(r3.get("models").is_some() && r3.get("shards").is_some(),
+            "{}", lines[2]);
+    let r4 = parse(&lines[3]);
+    let reloaded = r4.req("reloaded").unwrap().as_array().unwrap();
+    assert_eq!(reloaded[0].req("version").unwrap().as_i64(), Some(2),
+               "{}", lines[3]);
+    // v0 request: legacy shape, logits bit-identical after the reload
+    let r5 = parse(&lines[4]);
+    assert!(r5.get("v").is_none(), "v0 response grew a v: {}", lines[4]);
+    assert_eq!(r5.req("logits").unwrap().as_array().unwrap()[0],
+               expect_rows[0], "hot reload changed the logits");
+}
+
+#[test]
+fn serve_validates_flags_at_startup() {
+    let dir = std::env::temp_dir().join("nitro_cli_serve_flags");
+    let (ckpt, _) = trained_ckpt_and_input(&dir);
+    let spec = format!("tc={ckpt}");
+    for (args, needle) in [
+        (vec!["serve", "--models", spec.as_str(), "--max-batch", "0"],
+         "--max-batch"),
+        (vec!["serve", "--models", spec.as_str(), "--shards", "1000"],
+         "--shards"),
+        (vec!["serve", "--models", spec.as_str(), "--queue-budget-ms",
+              "-1"],
+         "--queue-budget-ms"),
+        (vec!["serve", "--models", "=path.ckpt"], "--models"),
+        (vec!["serve", "--models", ","], "--models"),
+        (vec!["serve"], "--models"),
+        (vec!["serve", "--models", spec.as_str(), ckpt.as_str()],
+         "mutually exclusive"),
+    ] {
+        let (code, _, stderr) = run(&args);
+        assert_eq!(code, 2, "{args:?} should fail at startup: {stderr}");
+        assert!(stderr.contains(needle),
+                "{args:?}: '{needle}' not in {stderr}");
+        assert!(!stderr.contains("panicked"), "{stderr}");
+    }
+}
+
+#[test]
+fn serve_positional_paths_warn_but_work() {
+    let dir = std::env::temp_dir().join("nitro_cli_serve_depr");
+    let (ckpt, _) = trained_ckpt_and_input(&dir);
+    let mut child = nitro()
+        .args(["serve", ckpt.as_str()])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn nitro serve");
+    drop(child.stdin.take()); // immediate EOF: clean empty session
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("deprecation"),
+            "positional form should warn: {stderr}");
+    assert!(stderr.contains("--models"), "{stderr}");
+}
+
+#[test]
+fn loadgen_fails_cleanly_without_a_server() {
+    // nothing listens on port 9 of localhost (discard is never bound)
+    let (code, _, stderr) = run(&[
+        "loadgen", "--connect", "127.0.0.1:9", "--rate", "50",
+        "--duration", "0.2",
+    ]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+    let (code, _, stderr) = run(&[
+        "loadgen", "--connect", "127.0.0.1:9", "--rate", "0",
+    ]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("--rate"), "{stderr}");
+}
+
+#[test]
 fn serve_rejects_missing_and_corrupt_checkpoints() {
     let dir = std::env::temp_dir().join("nitro_cli_serve_bad");
     std::fs::create_dir_all(&dir).unwrap();
