@@ -25,6 +25,10 @@ fn rand_f(rng: &mut Pcg32, shape: &[usize]) -> FTensor {
 fn main() {
     let mut b = Bencher::default();
     let mut rng = Pcg32::new(1);
+    // rows below go through the owning kernels, which dispatch on the
+    // process-wide backend — pin with NITRO_ISA=scalar|avx2|neon; the
+    // per-ISA side-by-side lives in `nitro bench-kernels`
+    println!("kernel ISA: {}", nitro::tensor::backend::active().name());
     println!("{}", Bencher::header());
 
     // matmul shapes from the paper's MLPs: (batch 64) x (784 -> 1024)

@@ -16,10 +16,11 @@
 
 use crate::data::synthetic;
 use crate::nn::{zoo, DropoutRngs, Hyper, Network};
+use crate::tensor::backend::{self, Isa};
 use crate::tensor::{
-    conv2d_i64, conv2d_i64_ws, conv2d_weight_grad, conv2d_weight_grad_ws,
-    im2col, matmul_i64, nitro_relu, nitro_scale_relu, ITensor,
-    KernelWorkspace, LTensor, Tensor,
+    conv2d_i64, conv2d_weight_grad, im2col, kernels, matmul_i64,
+    nitro_relu, nitro_scale_relu, scale_factor_conv, ITensor,
+    KernelBackend, KernelWorkspace, LTensor, Tensor,
 };
 use crate::train::{fit, Scheduler, TrainConfig};
 use crate::util::bench::Bencher;
@@ -182,7 +183,7 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
             },
             || {
                 let mut ws = KernelWorkspace::new();
-                let ws_out = conv2d_i64_ws(&x, &w, 1, &mut ws);
+                let ws_out = kernels().conv2d(&x, &w, 1, &mut ws);
                 par::set_spawn_mode(true);
                 let spawn = conv2d_i64(&x, &w, 1);
                 par::set_spawn_mode(false);
@@ -192,8 +193,8 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
         // weight grad: fresh extraction vs forward-patch reuse
         let gw_fresh = conv2d_weight_grad(&x, &g, 3, 1);
         let mut ws = KernelWorkspace::new();
-        let _ = conv2d_i64_ws(&x, &w, 1, &mut ws); // prime the patches
-        if conv2d_weight_grad_ws(&x, &g, 3, 1, &mut ws) != gw_fresh {
+        let _ = kernels().conv2d(&x, &w, 1, &mut ws); // prime the patches
+        if kernels().conv2d_weight_grad(&x, &g, 3, 1, &mut ws) != gw_fresh {
             h.bitexact_failures
                 .push(format!("conv_wgrad b{bt} {c}->{o} {hs}x{hs}"));
         }
@@ -203,7 +204,7 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
                   });
         h.b.bench(&format!("conv_wgrad b{bt} {c}->{o} {hs}x{hs} [ws-reuse]"),
                   Some(macs), || {
-                      std::hint::black_box(conv2d_weight_grad_ws(
+                      std::hint::black_box(kernels().conv2d_weight_grad(
                           &x, &g, 3, 1, &mut ws,
                       ));
                   });
@@ -224,6 +225,10 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
               || {
                   std::hint::black_box(nitro_relu(&zs, 10));
               });
+
+    // ---- per-ISA kernel comparison (speedup vs scalar, hard bit gate) --
+    let isa_cmp = isa_comparison(&mut h.b, opts.quick, &mut rng,
+                                 &mut h.bitexact_failures);
 
     // ---- full training steps (paper table 1 MLP / table 2 CNN) ---------
     if !opts.quick {
@@ -303,6 +308,7 @@ pub fn run(opts: &Opts) -> Result<Json, String> {
                     .collect(),
             ),
         ),
+        ("isa", isa_cmp),
         ("train_scheduler_comparison", sched_cmp),
         ("train_replica_scaling", repl_cmp),
         ("bitexact", Json::Bool(h.bitexact_failures.is_empty())),
@@ -513,12 +519,128 @@ fn replica_scaling(epochs: usize, n_train: usize,
     Json::obj(fields)
 }
 
-/// Single-thread reference matmul (the deterministic-mode path).
+/// Per-ISA kernel comparison: run every kernel with SIMD variants on
+/// each ISA the host supports (scalar always first), on identical
+/// inputs with a single worker — this measures instruction throughput,
+/// not pool scaling. Emits one row per (kernel, ISA) with the median
+/// and the speedup vs the scalar row, and bit-compares every ISA's
+/// output against scalar's; a divergence rides the same hard `Err`
+/// gate as the pool/spawn checks, so a broken SIMD path goes CI-red.
+fn isa_comparison(b: &mut Bencher, quick: bool, rng: &mut Pcg32,
+                  failures: &mut Vec<String>) -> Json {
+    fn compare<T: PartialEq>(
+        b: &mut Bencher, rows: &mut Vec<Json>, failures: &mut Vec<String>,
+        isas: &[Isa], name: &str, work: f64,
+        mut run: impl FnMut(KernelBackend) -> T,
+    ) {
+        let mut scalar_ns = 0f64;
+        let mut reference: Option<T> = None;
+        for &isa in isas {
+            let kb = KernelBackend::with_isa(isa);
+            let out = run(kb);
+            match &reference {
+                None => reference = Some(out),
+                Some(r) if *r != out => failures
+                    .push(format!("isa[{}] {name} != scalar", isa.name())),
+                _ => {}
+            }
+            let med = b
+                .bench(&format!("{name} [{}]", isa.name()), Some(work),
+                       || {
+                           std::hint::black_box(run(kb));
+                       })
+                .median_ns;
+            if isa == Isa::Scalar {
+                scalar_ns = med;
+            } else {
+                println!("  isa speedup vs scalar: {:5.2}x  {name} [{}]",
+                         scalar_ns / med.max(1e-9), isa.name());
+            }
+            rows.push(Json::obj(vec![
+                ("kernel", Json::Str(name.to_string())),
+                ("isa", Json::Str(isa.name().to_string())),
+                ("median_ns", Json::Float(med)),
+                ("speedup_vs_scalar",
+                 Json::Float(scalar_ns / med.max(1e-9))),
+            ]));
+        }
+    }
+
+    let _scope = par::scoped_thread_workers(1);
+    let isas = backend::supported_isas();
+    let mut rows: Vec<Json> = Vec::new();
+
+    // matmul
+    let (m, k, n) = if quick { (16, 128, 128) } else { (64, 784, 1024) };
+    let a = rand_i(rng, &[m, k], -127, 127);
+    let w = rand_i(rng, &[k, n], -32768, 32767);
+    let mut mm_out = vec![0i64; m * n];
+    compare(b, &mut rows, failures, &isas,
+            &format!("isa_matmul {m}x{k}x{n}"), (m * k * n) as f64, |kb| {
+                mm_out.iter_mut().for_each(|v| *v = 0);
+                kb.matmul_i64(&a.data, &w.data, m, k, n, &mut mm_out, 1);
+                mm_out.clone()
+            });
+
+    // fused conv2d+scale (exercises im2col row copies + the scale
+    // epilogue) and the standalone patch extraction
+    let (cb, cc, co, chs) =
+        if quick { (2, 8, 16, 10) } else { (8, 32, 64, 16) };
+    let cx = rand_i(rng, &[cb, cc, chs, chs], -127, 127);
+    let cw = rand_i(rng, &[co, cc, 3, 3], -4000, 4000);
+    let csf = scale_factor_conv(3, cc);
+    let mut cws = KernelWorkspace::new();
+    let mut cout = ITensor::empty();
+    compare(b, &mut rows, failures, &isas,
+            &format!("isa_conv2d_scale b{cb} {cc}->{co} {chs}x{chs}"),
+            (cb * co * chs * chs * cc * 9) as f64, |kb| {
+                kb.conv2d_scale(&cx, &cw, 1, csf, &mut cws, &mut cout);
+                cout.clone()
+            });
+    compare(b, &mut rows, failures, &isas,
+            &format!("isa_im2col b{cb} c{cc} {chs}x{chs} k3"),
+            (cb * cc * chs * chs * 9) as f64,
+            |kb| kb.im2col(&cx, 3, 1));
+
+    // NITRO element kernels
+    let elems: usize = if quick { 16 * 4096 } else { 64 * 65536 };
+    let z = LTensor::from_vec(
+        &[64, elems / 64],
+        (0..elems).map(|i| (i as i64 * 7919) % (1 << 40)).collect(),
+    );
+    let zs = rand_i(rng, &[64, elems / 64], -200, 200);
+    let gr = rand_i(rng, &[64, elems / 64], -500, 500);
+    compare(b, &mut rows, failures, &isas, "isa_nitro_scale",
+            elems as f64, |kb| kb.nitro_scale(&z, 256 * 1152));
+    compare(b, &mut rows, failures, &isas, "isa_nitro_scale_relu",
+            elems as f64, |kb| kb.nitro_scale_relu(&z, 256 * 1152, 10));
+    compare(b, &mut rows, failures, &isas, "isa_nitro_relu",
+            elems as f64, |kb| kb.nitro_relu(&zs, 10));
+    compare(b, &mut rows, failures, &isas, "isa_nitro_relu_bwd",
+            elems as f64, |kb| kb.nitro_relu_bwd(&zs, &gr, 10));
+
+    Json::obj(vec![
+        ("active", Json::Str(backend::active().name().to_string())),
+        (
+            "supported",
+            Json::Array(
+                isas.iter()
+                    .map(|i| Json::Str(i.name().to_string()))
+                    .collect(),
+            ),
+        ),
+        ("kernels", Json::Array(rows)),
+    ])
+}
+
+/// Single-thread *scalar-ISA* reference matmul — the fixed point every
+/// other (ISA × threading) combination is checked against.
 fn matmul_single_thread(a: &ITensor, b: &ITensor) -> LTensor {
     let (m, k) = (a.shape[0], a.shape[1]);
     let n = b.shape[1];
     let mut out = vec![0i64; m * n];
-    crate::tensor::matmul_i64_into(&a.data, &b.data, m, k, n, &mut out, 1);
+    KernelBackend::with_isa(Isa::Scalar)
+        .matmul_i64(&a.data, &b.data, m, k, n, &mut out, 1);
     Tensor::from_vec(&[m, n], out)
 }
 
@@ -637,6 +759,17 @@ mod tests {
         assert_eq!(rec.req("bitexact").unwrap().as_bool(), Some(true));
         let rows = rec.req("rows").unwrap().as_array().unwrap();
         assert!(rows.len() >= 6, "expected several rows, got {}", rows.len());
+        // the per-ISA section: every host supports scalar at minimum,
+        // and each of the 7 kernels gets one row per supported ISA
+        let isa = rec.req("isa").unwrap();
+        let supported = isa.req("supported").unwrap().as_array().unwrap();
+        assert!(!supported.is_empty());
+        let krows = isa.req("kernels").unwrap().as_array().unwrap();
+        assert_eq!(krows.len(), 7 * supported.len());
+        for r in krows {
+            let s = r.req("speedup_vs_scalar").unwrap().as_f64().unwrap();
+            assert!(s > 0.0, "speedup: {s}");
+        }
         // the record reparses from disk with the schema intact (integral
         // floats round-trip as ints, so no full structural equality here)
         let reread = Json::parse_file(out.to_str().unwrap()).unwrap();

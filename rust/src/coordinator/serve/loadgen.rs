@@ -18,6 +18,10 @@
 //! Responses with an `overloaded` error code count as `shed` — that is
 //! the server keeping its latency promise by refusing work — and are
 //! excluded from the latency histogram; any other error is a hard error.
+//!
+//! The generator speaks wire v1 by default (every request carries
+//! `"v": 1`); the deprecated v0 shape is neither sent nor accepted —
+//! a v0 string error from the server is classified as a hard error.
 
 use super::shed::hist_json;
 use super::wire::WIRE_V1;

@@ -42,6 +42,11 @@ pub use batcher::{BatchClient, MicroBatcher, ShardedBatcher};
 pub use registry::{ModelRegistry, ModelStats};
 pub use shed::ShardState;
 pub use wire::{ErrorKind, ServeError};
+// The v0 response builders stay exported for out-of-tree v0 clients but
+// are deprecated: v0 acceptance and these helpers go away together
+// (removal note in README, Serving).
+#[allow(deprecated)]
+pub use wire::{err_response_v0, ok_response_v0};
 
 use crate::nn::{InferScratch, Network};
 use crate::tensor::ITensor;

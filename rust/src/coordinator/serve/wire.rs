@@ -195,12 +195,10 @@ pub fn parse_request(line: &str)
     Ok(Request { v, id, op: Op::Predict { model, input } })
 }
 
-/// Success response for `(n, num_classes)` logits, in the shape of the
-/// protocol version the request used: v1 adds `"v"` and the served
-/// `"model_version"`; v0 is byte-compatible with the pre-versioned
-/// protocol.
-pub fn ok_response(v: i64, id: Json, model: &str, model_version: u64,
-                   y: &ITensor) -> Json {
+/// `id`/`model`/`logits`/`argmax` — the fields common to both response
+/// generations.
+fn predict_fields(id: Json, model: &str, y: &ITensor)
+                  -> Vec<(&'static str, Json)> {
     let g = y.shape[1];
     let mut logits = Vec::with_capacity(y.shape[0]);
     let mut argmax = Vec::with_capacity(y.shape[0]);
@@ -216,17 +214,40 @@ pub fn ok_response(v: i64, id: Json, model: &str, model_version: u64,
         }
         argmax.push(Json::Int(best as i64));
     }
-    let mut fields = vec![
+    vec![
         ("id", id),
         ("model", Json::Str(model.to_string())),
         ("logits", Json::Array(logits)),
         ("argmax", Json::Array(argmax)),
-    ];
+    ]
+}
+
+/// Success response for `(n, num_classes)` logits, in the shape of the
+/// protocol version the request used: v1 adds `"v"` and the served
+/// `"model_version"`; v0 is byte-compatible with the pre-versioned
+/// protocol.
+pub fn ok_response(v: i64, id: Json, model: &str, model_version: u64,
+                   y: &ITensor) -> Json {
     if v >= WIRE_V1 {
+        let mut fields = predict_fields(id, model, y);
         fields.push(("v", Json::Int(WIRE_V1)));
         fields.push(("model_version", Json::Int(model_version as i64)));
+        Json::obj(fields)
+    } else {
+        #[allow(deprecated)]
+        ok_response_v0(id, model, y)
     }
-    Json::obj(fields)
+}
+
+/// v0 success shape: no `"v"`, no `"model_version"`. Only bare legacy
+/// lines (no `"v"` key) are answered this way.
+#[deprecated(
+    note = "the v0 wire shape is legacy; send \"v\": 1 envelopes and \
+            use ok_response — v0 acceptance and this helper will be \
+            removed together (see README, Serving)"
+)]
+pub fn ok_response_v0(id: Json, model: &str, y: &ITensor) -> Json {
+    Json::obj(predict_fields(id, model, y))
 }
 
 /// Error response in the request's protocol shape: v1 carries a
@@ -243,8 +264,20 @@ pub fn err_response(v: i64, id: Json, e: &ServeError) -> Json {
             ])),
         ])
     } else {
-        Json::obj(vec![("id", id), ("error", Json::Str(e.to_string()))])
+        #[allow(deprecated)]
+        err_response_v0(id, e)
     }
+}
+
+/// v0 error shape: a flat `"error"` string with the machine code as a
+/// `"code: "` prefix instead of v1's structured object.
+#[deprecated(
+    note = "the v0 wire shape is legacy; send \"v\": 1 envelopes and \
+            use err_response — v0 acceptance and this helper will be \
+            removed together (see README, Serving)"
+)]
+pub fn err_response_v0(id: Json, e: &ServeError) -> Json {
+    Json::obj(vec![("id", id), ("error", Json::Str(e.to_string()))])
 }
 
 #[cfg(test)]
@@ -324,6 +357,17 @@ mod tests {
         assert_eq!(e1.req("error").unwrap().req("message").unwrap()
                        .as_str(),
                    Some("queue full"));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_v0_helpers_match_the_v0_dispatch_shape() {
+        let y = ITensor::from_vec(&[1, 2], vec![4, 1]);
+        assert_eq!(ok_response_v0(Json::Int(3), "m", &y),
+                   ok_response(0, Json::Int(3), "m", 9, &y));
+        let e = ServeError::internal("boom");
+        assert_eq!(err_response_v0(Json::Null, &e),
+                   err_response(0, Json::Null, &e));
     }
 
     #[test]

@@ -8,12 +8,10 @@
 use crate::nn::spec::{BlockSpec, HeadSpec, NetworkSpec};
 use crate::optim::integer_sgd;
 use crate::tensor::{
-    conv2d_i64, conv2d_scale_into, conv2d_scale_ws, conv2d_weight_grad_ws,
-    matmul_a_bt_i64, matmul_at_b_i64, matmul_i64, matmul_scale_into,
-    matmul_scale_ws, maxpool2d, maxpool2d_bwd, maxpool2d_into, nitro_relu,
-    nitro_relu_bwd, nitro_relu_inplace, nitro_scale, one_hot32,
-    rss_loss_grad_raw, scale_factor_linear, ITensor, KernelWorkspace,
-    LTensor,
+    conv2d_i64, kernels, matmul_a_bt_i64, matmul_at_b_i64, matmul_i64,
+    maxpool2d, maxpool2d_bwd, nitro_relu, nitro_relu_bwd,
+    nitro_relu_inplace, nitro_scale, one_hot32, rss_loss_grad_raw,
+    scale_factor_linear, ITensor, KernelWorkspace, LTensor,
 };
 use crate::util::rng::Pcg32;
 
@@ -173,19 +171,20 @@ impl Block {
     /// [`Self::forward`].
     pub fn infer_into(&self, a: &ITensor, ws: &mut KernelWorkspace,
                       mid: &mut ITensor, out: &mut ITensor) {
+        let kb = kernels();
         match &self.spec {
             BlockSpec::Conv(c) => {
                 if c.pool {
-                    conv2d_scale_into(a, &self.wf, c.padding, c.sf(), ws, mid);
+                    kb.conv2d_scale(a, &self.wf, c.padding, c.sf(), ws, mid);
                     nitro_relu_inplace(mid, c.alpha_inv);
-                    maxpool2d_into(mid, 2, 2, out);
+                    kb.maxpool2d(mid, 2, 2, out);
                 } else {
-                    conv2d_scale_into(a, &self.wf, c.padding, c.sf(), ws, out);
+                    kb.conv2d_scale(a, &self.wf, c.padding, c.sf(), ws, out);
                     nitro_relu_inplace(out, c.alpha_inv);
                 }
             }
             BlockSpec::Linear(l) => {
-                matmul_scale_into(a, &self.wf, l.sf(), ws, out);
+                kb.matmul_scale(a, &self.wf, l.sf(), ws, out);
                 nitro_relu_inplace(out, l.alpha_inv);
             }
         }
@@ -232,10 +231,12 @@ impl Block {
     /// Training forward minus dropout: fused contract-and-scale on the
     /// block workspace, activation, block pooling.
     fn forward_core(&mut self, a: &ITensor) -> BlockCache {
+        let kb = kernels();
         let (zs, act_shape, pool_arg, out) = match &self.spec {
             BlockSpec::Conv(c) => {
-                let zs =
-                    conv2d_scale_ws(a, &self.wf, c.padding, c.sf(), &mut self.ws);
+                let mut zs = ITensor::empty();
+                kb.conv2d_scale(a, &self.wf, c.padding, c.sf(), &mut self.ws,
+                                &mut zs);
                 let act = nitro_relu(&zs, c.alpha_inv);
                 let act_shape = act.shape.clone();
                 if c.pool {
@@ -246,7 +247,8 @@ impl Block {
                 }
             }
             BlockSpec::Linear(l) => {
-                let zs = matmul_scale_ws(a, &self.wf, l.sf(), &mut self.ws);
+                let mut zs = ITensor::empty();
+                kb.matmul_scale(a, &self.wf, l.sf(), &mut self.ws, &mut zs);
                 let act = nitro_relu(&zs, l.alpha_inv);
                 let act_shape = act.shape.clone();
                 (zs, act_shape, None, act)
@@ -273,8 +275,9 @@ impl Block {
             LrFeat::Pooled { feat, .. } => feat,
         };
         let (_, fcols) = feat.batch_feat();
-        let yhat = matmul_scale_ws(feat, &self.wl, scale_factor_linear(fcols),
-                                   &mut self.ws);
+        let mut yhat = ITensor::empty();
+        kernels().matmul_scale(feat, &self.wl, scale_factor_linear(fcols),
+                               &mut self.ws, &mut yhat);
         let (loss_raw, grad_l) = rss_loss_grad_raw(&yhat, y32);
         let gw_l = matmul_at_b_i64(feat, &grad_l); // featᵀ·∇L (F,G)
         let dfeat = matmul_a_bt_i64(&grad_l, &self.wl).to_i32(); // ∇L·Wᵀ
@@ -308,8 +311,8 @@ impl Block {
             // reuses the im2col patches the forward pass left in the
             // workspace — no second extraction per step
             BlockSpec::Conv(c) => {
-                conv2d_weight_grad_ws(a_in, &d, c.kernel, c.padding,
-                                      &mut self.ws)
+                kernels().conv2d_weight_grad(a_in, &d, c.kernel, c.padding,
+                                             &mut self.ws)
             }
             BlockSpec::Linear(_) => matmul_at_b_i64(a_in, &d),
         };
@@ -467,7 +470,7 @@ impl Head {
     /// [`Block::infer_into`]). Bit-identical to [`Self::forward`].
     pub fn infer_into(&self, a: &ITensor, ws: &mut KernelWorkspace,
                       out: &mut ITensor) {
-        matmul_scale_into(a, &self.wo, self.spec.sf(), ws, out);
+        kernels().matmul_scale(a, &self.wo, self.spec.sf(), ws, out);
     }
 
     /// Head forward + gradient without the update: `(ŷ, raw RSS loss,
@@ -476,7 +479,9 @@ impl Head {
     /// it across replicas first (`train::replica`).
     pub fn grads(&mut self, a: &ITensor, y32: &ITensor)
                  -> (ITensor, i64, LTensor) {
-        let yhat = matmul_scale_ws(a, &self.wo, self.spec.sf(), &mut self.ws);
+        let mut yhat = ITensor::empty();
+        kernels().matmul_scale(a, &self.wo, self.spec.sf(), &mut self.ws,
+                               &mut yhat);
         let (loss_raw, grad) = rss_loss_grad_raw(&yhat, y32);
         let gw = matmul_at_b_i64(a, &grad);
         (yhat, loss_raw, gw)

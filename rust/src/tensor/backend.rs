@@ -1,0 +1,858 @@
+//! Runtime-dispatched integer kernel backends (scalar / AVX2 / NEON).
+//!
+//! # One form per op
+//!
+//! [`KernelBackend`] is the single entry-point surface for the integer
+//! kernels. Each op exists in exactly **one** workspace-threaded form on
+//! the backend (`matmul_scale`, `conv2d_scale`, `conv2d_weight_grad`,
+//! `maxpool2d`, ...): callers pass a [`KernelWorkspace`] and, where the
+//! op produces an output tensor on the hot path, a caller-owned `out`
+//! whose allocation is reused. The owning conveniences that remain in
+//! `ops_int` (`matmul_i64`, `conv2d_i64`, `nitro_relu`, ...) are thin
+//! wrappers over this surface — new call sites should either use those
+//! wrappers or hold a `KernelBackend` and call it directly; do not grow
+//! new `_into`/`_ws` variants in `ops_int`.
+//!
+//! # ISA selection
+//!
+//! The active ISA is picked once, on first use:
+//!
+//! 1. `NITRO_ISA=scalar|avx2|neon` overrides detection. Requesting an
+//!    ISA the host cannot run falls back to scalar with a note on
+//!    stderr (so a `NITRO_ISA=avx2` CI lane degrades gracefully on an
+//!    AVX2-less runner); an unknown value falls back to detection.
+//! 2. x86_64 with runtime AVX2 support (`is_x86_feature_detected!`)
+//!    selects [`Isa::Avx2`].
+//! 3. aarch64 selects [`Isa::Neon`] (NEON is baseline on aarch64).
+//! 4. Anything else selects [`Isa::Scalar`].
+//!
+//! Tests and benches may switch the process-wide ISA with
+//! [`set_active`] or pin a local one via [`KernelBackend::with_isa`].
+//!
+//! # Bit-exactness contract
+//!
+//! Every ISA produces **byte-identical** outputs for every op — SIMD is
+//! a pure speed lever, never a numerics change. That is possible
+//! because the kernels are exact-integer:
+//!
+//! - The chunked-i32 dot products accumulate with *wrapping* i32
+//!   addition, which is associative and commutative, so any SIMD lane
+//!   order (8-lane AVX2 partial sums, 4-lane NEON, scalar left fold)
+//!   yields the same bits. The `safe_chunk` bound guarantees the
+//!   partial sums never actually wrap; the wrapping semantics only
+//!   make the reordering legal.
+//! - The elementwise kernels floor-divide by a positive scale factor.
+//!   For integers `n`, `d` with `d >= 1` and `|n| < 2^53`,
+//!   `floor(fl(n/d)) == div_floor(n, d)` in f64: an integer quotient is
+//!   exactly representable and correctly-rounded division returns it,
+//!   while a non-integer quotient sits at least `1/d` from the nearest
+//!   integer and the rounding error is below `|n/d| * 2^-53 < 1/d` —
+//!   the division cannot cross an integer boundary. The AVX2 element
+//!   kernels use this to do 4-lane `cvtepi32_pd / div_pd / floor_pd /
+//!   cvtpd_epi32` floor division, guarded so any operand outside the
+//!   proven range takes the scalar `div_floor` lane-for-lane.
+//!
+//! The contract is enforced three ways: per-ISA property tests here and
+//! in `ops_int` (including ±`i32::MAX` rails and the i32-overflow
+//! fallback boundary), whole-training-run identity tests
+//! (`tests/isa.rs`, golden-trace replay), and a hard gate in
+//! `nitro bench-kernels` that fails the run on any SIMD-vs-scalar
+//! divergence.
+
+use super::ops_int::{self, KernelWorkspace, INT8_MAX};
+use super::{ITensor, LTensor};
+use crate::util::div_floor;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+// ---------------------------------------------------------------------------
+// ISA selection
+// ---------------------------------------------------------------------------
+
+/// Instruction set the integer kernels dispatch on. All variants exist
+/// on every build target (so `NITRO_ISA` parses uniformly); only the
+/// [`supported`] ones can become active.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum Isa {
+    /// Portable scalar loops — the reference every other ISA must match
+    /// bit-for-bit.
+    Scalar = 1,
+    /// x86_64 AVX2: 8-lane i32 dots, vectorized row copies, 4-lane f64
+    /// floor-division element kernels.
+    Avx2 = 2,
+    /// aarch64 NEON: 4-lane i32 dots; element kernels currently take
+    /// the scalar path.
+    Neon = 3,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Isa {
+        match v {
+            2 => Isa::Avx2,
+            3 => Isa::Neon,
+            _ => Isa::Scalar,
+        }
+    }
+}
+
+/// Can `isa` run on this host (compile target + runtime CPU features)?
+pub fn supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        Isa::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                std::arch::is_x86_feature_detected!("avx2")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        // NEON is baseline on aarch64 — no runtime probe needed.
+        Isa::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// Every ISA this host can run, scalar first (benches iterate this to
+/// produce the per-ISA comparison section).
+pub fn supported_isas() -> Vec<Isa> {
+    [Isa::Scalar, Isa::Avx2, Isa::Neon]
+        .into_iter()
+        .filter(|&i| supported(i))
+        .collect()
+}
+
+/// Best ISA for this host: avx2 → neon → scalar.
+pub fn detect() -> Isa {
+    if supported(Isa::Avx2) {
+        Isa::Avx2
+    } else if supported(Isa::Neon) {
+        Isa::Neon
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Process-wide active ISA; 0 = not yet initialized. A plain atomic
+/// (not a `OnceLock`) so [`set_active`] can re-point it — safe because
+/// every ISA is bit-identical, so a mid-run switch changes speed only.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// The process-wide active ISA, initializing from `NITRO_ISA` /
+/// detection on first call.
+pub fn active() -> Isa {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => {
+            let isa = init_from_env();
+            ACTIVE.store(isa as u8, Ordering::Relaxed);
+            isa
+        }
+        v => Isa::from_u8(v),
+    }
+}
+
+/// Point the process-wide backend at `isa` (must be [`supported`]).
+/// Intended for tests and benches; all ISAs are bit-identical, so this
+/// never changes results.
+pub fn set_active(isa: Isa) {
+    assert!(
+        supported(isa),
+        "ISA {} is not supported on this host",
+        isa.name()
+    );
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+}
+
+fn init_from_env() -> Isa {
+    match std::env::var("NITRO_ISA") {
+        Ok(s) => match Isa::parse(&s) {
+            Some(isa) if supported(isa) => isa,
+            Some(isa) => {
+                eprintln!(
+                    "nitro: NITRO_ISA={} is not supported on this host; \
+                     using scalar kernels",
+                    isa.name()
+                );
+                Isa::Scalar
+            }
+            None => {
+                eprintln!(
+                    "nitro: unknown NITRO_ISA={s:?} (expected \
+                     scalar|avx2|neon); auto-detecting"
+                );
+                detect()
+            }
+        },
+        Err(_) => detect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KernelBackend — the one-form-per-op entry surface
+// ---------------------------------------------------------------------------
+
+/// Integer kernel entry points bound to one ISA. Cheap to copy; grab
+/// the process-wide one with [`kernels`] or pin an ISA with
+/// [`KernelBackend::with_isa`].
+#[derive(Clone, Copy, Debug)]
+pub struct KernelBackend {
+    isa: Isa,
+}
+
+/// The process-wide backend (active ISA).
+pub fn kernels() -> KernelBackend {
+    KernelBackend { isa: active() }
+}
+
+impl KernelBackend {
+    /// Backend pinned to `isa` (panics if the host cannot run it —
+    /// iterate [`supported_isas`] to stay portable).
+    pub fn with_isa(isa: Isa) -> KernelBackend {
+        assert!(
+            supported(isa),
+            "ISA {} is not supported on this host",
+            isa.name()
+        );
+        KernelBackend { isa }
+    }
+
+    pub fn isa(self) -> Isa {
+        self.isa
+    }
+
+    /// `a (m,k) i32 × b (k,n) i32`, **accumulating** into `out` (m,n)
+    /// i64 — callers zero it or reuse it to sum over a batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_i64(
+        self, a: &[i32], b: &[i32], m: usize, k: usize, n: usize,
+        out: &mut [i64], workers: usize,
+    ) {
+        ops_int::matmul_i64_into(self.isa, a, b, m, k, n, out, workers);
+    }
+
+    /// Fused `floor((a × b) / sf)` into a caller-owned tensor; the i64
+    /// accumulator lives in `ws`, so a long-lived `out` makes the
+    /// steady state allocation-free. `a` is logically 2-D (see
+    /// [`ops_int::matmul_i64`]).
+    pub fn matmul_scale(
+        self, a: &ITensor, b: &ITensor, sf: i64, ws: &mut KernelWorkspace,
+        out: &mut ITensor,
+    ) {
+        ops_int::matmul_scale_into(self.isa, a, b, sf, ws, out);
+    }
+
+    /// Integer conv2d `x (B,C,H,W) × w (O,C,K,K) -> (B,O,Ho,Wo)` i64;
+    /// leaves the im2col patches of `x` cached in `ws` for a following
+    /// [`KernelBackend::conv2d_weight_grad`].
+    pub fn conv2d(
+        self, x: &ITensor, w: &ITensor, padding: usize,
+        ws: &mut KernelWorkspace,
+    ) -> LTensor {
+        ops_int::conv2d_i64_ws(self.isa, x, w, padding, ws)
+    }
+
+    /// Fused `floor(conv2d(x, w) / sf)` into a caller-owned tensor;
+    /// patches of `x` stay cached in `ws` for the weight-grad pass.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_scale(
+        self, x: &ITensor, w: &ITensor, padding: usize, sf: i64,
+        ws: &mut KernelWorkspace, out: &mut ITensor,
+    ) {
+        ops_int::conv2d_scale_into(self.isa, x, w, padding, sf, ws, out);
+    }
+
+    /// Conv weight gradient `(O,C,K,K)` i64, reusing the im2col patches
+    /// cached in `ws` by the matching forward when the tag matches.
+    pub fn conv2d_weight_grad(
+        self, x: &ITensor, g: &ITensor, kernel: usize, padding: usize,
+        ws: &mut KernelWorkspace,
+    ) -> LTensor {
+        ops_int::conv2d_weight_grad_ws(self.isa, x, g, kernel, padding, ws)
+    }
+
+    /// Max pool without the argmax (inference needs no backward
+    /// routing) into a caller-owned tensor. Bit-identical to the
+    /// owning [`ops_int::maxpool2d`] — same core loop on every ISA.
+    pub fn maxpool2d(
+        self, x: &ITensor, size: usize, stride: usize, out: &mut ITensor,
+    ) {
+        ops_int::maxpool2d_into(x, size, stride, out);
+    }
+
+    /// Patch extraction `x (B,C,H,W) -> (B, Ho*Wo, C*K*K)`.
+    pub fn im2col(self, x: &ITensor, kernel: usize, padding: usize) -> ITensor {
+        ops_int::im2col_isa(self.isa, x, kernel, padding)
+    }
+
+    /// NITRO Scaling Layer: `z* = floor(z / sf)`, i64 in → i32 out.
+    pub fn nitro_scale(self, z: &LTensor, sf: i64) -> ITensor {
+        let mut out = ITensor {
+            shape: z.shape.clone(),
+            data: vec![0i32; z.data.len()],
+        };
+        scale_slice(self.isa, &z.data, sf, &mut out.data);
+        out
+    }
+
+    /// NITRO-ReLU forward over scaled pre-activations.
+    pub fn nitro_relu(self, zs: &ITensor, alpha_inv: i64) -> ITensor {
+        let mut out = zs.clone();
+        self.nitro_relu_inplace(&mut out, alpha_inv);
+        out
+    }
+
+    /// NITRO-ReLU in place (the serving forward keeps no
+    /// pre-activation).
+    pub fn nitro_relu_inplace(self, zs: &mut ITensor, alpha_inv: i64) {
+        let mu = ops_int::nitro_relu_mu(alpha_inv);
+        relu_slice(self.isa, &mut zs.data, alpha_inv, mu);
+    }
+
+    /// Fused scale+ReLU: one pass i64 → i32.
+    pub fn nitro_scale_relu(
+        self, z: &LTensor, sf: i64, alpha_inv: i64,
+    ) -> ITensor {
+        let mu = ops_int::nitro_relu_mu(alpha_inv);
+        let mut out = ITensor {
+            shape: z.shape.clone(),
+            data: vec![0i32; z.data.len()],
+        };
+        scale_relu_slice(self.isa, &z.data, sf, alpha_inv, mu, &mut out.data);
+        out
+    }
+
+    /// NITRO-ReLU backward: exact piecewise derivative.
+    pub fn nitro_relu_bwd(
+        self, zs: &ITensor, g: &ITensor, alpha_inv: i64,
+    ) -> ITensor {
+        assert_eq!(zs.shape, g.shape);
+        let mut out = ITensor {
+            shape: g.shape.clone(),
+            data: vec![0i32; g.data.len()],
+        };
+        relu_bwd_slice(self.isa, &zs.data, &g.data, alpha_inv, &mut out.data);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD primitives (dispatched per ISA, bit-identical to scalar)
+// ---------------------------------------------------------------------------
+
+/// Largest divisor the f64 floor-division lemma covers (`2^53`);
+/// anything at or past it takes the scalar path.
+const MAX_F64_DIV: i64 = 1 << 53;
+
+/// Wrapping i32 dot product — the inner kernel of every chunked-i32
+/// contraction. The caller (`safe_chunk`) guarantees the true sum fits
+/// i32; wrapping arithmetic makes any lane order bit-identical anyway.
+#[inline]
+pub(crate) fn dot_i32_wrap(isa: Isa, a: &[i32], b: &[i32]) -> i32 {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { dot_wrap_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { dot_wrap_neon(a, b) },
+        _ => dot_wrap_scalar(a, b),
+    }
+}
+
+#[inline]
+fn dot_wrap_scalar(a: &[i32], b: &[i32]) -> i32 {
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc = acc.wrapping_add(x.wrapping_mul(y));
+    }
+    acc
+}
+
+/// `dst.copy_from_slice(src)`, vectorized explicitly on AVX2 — the
+/// im2col row-copy primitive.
+#[inline]
+pub(crate) fn copy_i32(isa: Isa, dst: &mut [i32], src: &[i32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { copy_avx2(dst, src) },
+        _ => dst.copy_from_slice(src),
+    }
+}
+
+/// `out[i] = div_floor(z[i], sf)` — the NITRO scaling layer on slices.
+#[inline]
+pub(crate) fn scale_slice(isa: Isa, z: &[i64], sf: i64, out: &mut [i32]) {
+    debug_assert_eq!(z.len(), out.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if sf >= 1 && sf < MAX_F64_DIV => unsafe {
+            scale_avx2(z, sf, out)
+        },
+        _ => scale_scalar(z, sf, out),
+    }
+}
+
+fn scale_scalar(z: &[i64], sf: i64, out: &mut [i32]) {
+    for (o, &v) in out.iter_mut().zip(z) {
+        *o = div_floor(v, sf) as i32;
+    }
+}
+
+/// NITRO-ReLU in place on a slice (`mu` pre-computed by the caller).
+#[inline]
+pub(crate) fn relu_slice(isa: Isa, vs: &mut [i32], alpha_inv: i64, mu: i32) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if alpha_inv >= 1 && alpha_inv <= i32::MAX as i64 => unsafe {
+            relu_avx2(vs, alpha_inv, mu)
+        },
+        _ => relu_scalar(vs, alpha_inv, mu),
+    }
+}
+
+fn relu_scalar(vs: &mut [i32], alpha_inv: i64, mu: i32) {
+    for v in vs {
+        let out = if *v < 0 {
+            div_floor((*v).max(-INT8_MAX) as i64, alpha_inv) as i32
+        } else {
+            (*v).min(INT8_MAX)
+        };
+        *v = out - mu;
+    }
+}
+
+/// Fused scale+ReLU on slices.
+#[inline]
+pub(crate) fn scale_relu_slice(
+    isa: Isa, z: &[i64], sf: i64, alpha_inv: i64, mu: i32, out: &mut [i32],
+) {
+    debug_assert_eq!(z.len(), out.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2
+            if sf >= 1
+                && sf < MAX_F64_DIV
+                && alpha_inv >= 1
+                && alpha_inv <= i32::MAX as i64 =>
+        unsafe { scale_relu_avx2(z, sf, alpha_inv, mu, out) },
+        _ => scale_relu_scalar(z, sf, alpha_inv, mu, out),
+    }
+}
+
+#[inline]
+fn scale_relu_one(zv: i64, sf: i64, alpha_inv: i64, mu: i32) -> i32 {
+    let v = div_floor(zv, sf);
+    let out = if v < 0 {
+        div_floor(v.max(-(INT8_MAX as i64)), alpha_inv) as i32
+    } else {
+        v.min(INT8_MAX as i64) as i32
+    };
+    out - mu
+}
+
+fn scale_relu_scalar(
+    z: &[i64], sf: i64, alpha_inv: i64, mu: i32, out: &mut [i32],
+) {
+    for (o, &zv) in out.iter_mut().zip(z) {
+        *o = scale_relu_one(zv, sf, alpha_inv, mu);
+    }
+}
+
+/// NITRO-ReLU backward on slices.
+#[inline]
+pub(crate) fn relu_bwd_slice(
+    isa: Isa, zs: &[i32], g: &[i32], alpha_inv: i64, out: &mut [i32],
+) {
+    debug_assert_eq!(zs.len(), g.len());
+    debug_assert_eq!(zs.len(), out.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if alpha_inv >= 1 && alpha_inv <= i32::MAX as i64 => unsafe {
+            relu_bwd_avx2(zs, g, alpha_inv, out)
+        },
+        _ => relu_bwd_scalar(zs, g, alpha_inv, out),
+    }
+}
+
+fn relu_bwd_scalar(zs: &[i32], g: &[i32], alpha_inv: i64, out: &mut [i32]) {
+    for ((o, &x), &gv) in out.iter_mut().zip(zs).zip(g) {
+        *o = if x < -INT8_MAX || x > INT8_MAX {
+            0
+        } else if x < 0 {
+            div_floor(gv as i64, alpha_inv) as i32
+        } else {
+            gv
+        };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 implementations (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    /// 8-lane wrapping i32 dot: `vpmulld` keeps the low 32 bits (=
+    /// `wrapping_mul`) and `vpaddd` wraps, so per-lane partial sums
+    /// plus a wrapping horizontal fold are bit-identical to the scalar
+    /// left fold.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_wrap_avx2(a: &[i32], b: &[i32]) -> i32 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(va, vb));
+            i += 8;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut total = 0i32;
+        for l in lanes {
+            total = total.wrapping_add(l);
+        }
+        while i < n {
+            total = total.wrapping_add(a[i].wrapping_mul(b[i]));
+            i += 1;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn copy_avx2(dst: &mut [i32], src: &[i32]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, v);
+            i += 8;
+        }
+        dst[i..].copy_from_slice(&src[i..]);
+    }
+
+    /// Exact 4-lane `div_floor(v, d)` for i32 lanes and a positive
+    /// divisor `d < 2^53` (see the module-doc lemma): convert to f64,
+    /// divide, floor, convert back — every step exact or provably on
+    /// the correct side of the integer boundary.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn floordiv4(v: __m128i, d: __m256d) -> __m128i {
+        let q = _mm256_floor_pd(_mm256_div_pd(_mm256_cvtepi32_pd(v), d));
+        _mm256_cvtpd_epi32(q)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_avx2(z: &[i64], sf: i64, out: &mut [i32]) {
+        let d = _mm256_set1_pd(sf as f64);
+        let n = z.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let q = &z[i..i + 4];
+            // The f64 lemma needs |dividend| < 2^53; in-contract
+            // accumulator values fit i32 after scaling's input bound,
+            // but guard per quad and take the scalar lane otherwise.
+            if q.iter().all(|&v| v as i32 as i64 == v) {
+                let v = _mm_set_epi32(
+                    q[3] as i32, q[2] as i32, q[1] as i32, q[0] as i32,
+                );
+                let r = floordiv4(v, d);
+                _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, r);
+            } else {
+                for j in 0..4 {
+                    out[i + j] = div_floor(z[i + j], sf) as i32;
+                }
+            }
+            i += 4;
+        }
+        while i < n {
+            out[i] = div_floor(z[i], sf) as i32;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn relu_avx2(vs: &mut [i32], alpha_inv: i64, mu: i32) {
+        let d = _mm256_set1_pd(alpha_inv as f64);
+        let lo = _mm_set1_epi32(-INT8_MAX);
+        let hi = _mm_set1_epi32(INT8_MAX);
+        let muv = _mm_set1_epi32(mu);
+        let zero = _mm_setzero_si128();
+        let n = vs.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = _mm_loadu_si128(vs.as_ptr().add(i) as *const __m128i);
+            let isneg = _mm_cmplt_epi32(v, zero);
+            // negative branch: div_floor(max(v, -127), alpha_inv);
+            // computed for every lane, selected only where v < 0
+            let divided = floordiv4(_mm_max_epi32(v, lo), d);
+            let pos = _mm_min_epi32(v, hi);
+            let sel = _mm_blendv_epi8(pos, divided, isneg);
+            let r = _mm_sub_epi32(sel, muv);
+            _mm_storeu_si128(vs.as_mut_ptr().add(i) as *mut __m128i, r);
+            i += 4;
+        }
+        relu_scalar(&mut vs[i..], alpha_inv, mu);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_relu_avx2(
+        z: &[i64], sf: i64, alpha_inv: i64, mu: i32, out: &mut [i32],
+    ) {
+        let ds = _mm256_set1_pd(sf as f64);
+        let da = _mm256_set1_pd(alpha_inv as f64);
+        let lo = _mm_set1_epi32(-INT8_MAX);
+        let hi = _mm_set1_epi32(INT8_MAX);
+        let muv = _mm_set1_epi32(mu);
+        let zero = _mm_setzero_si128();
+        let n = z.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let q = &z[i..i + 4];
+            if q.iter().all(|&v| v as i32 as i64 == v) {
+                let zv = _mm_set_epi32(
+                    q[3] as i32, q[2] as i32, q[1] as i32, q[0] as i32,
+                );
+                // |div_floor(z, sf)| <= |z|, so the scaled value stays
+                // in i32 and the fused relu matches the i64 scalar form
+                let v = floordiv4(zv, ds);
+                let isneg = _mm_cmplt_epi32(v, zero);
+                let divided = floordiv4(_mm_max_epi32(v, lo), da);
+                let pos = _mm_min_epi32(v, hi);
+                let sel = _mm_blendv_epi8(pos, divided, isneg);
+                let r = _mm_sub_epi32(sel, muv);
+                _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, r);
+            } else {
+                for j in 0..4 {
+                    out[i + j] = scale_relu_one(z[i + j], sf, alpha_inv, mu);
+                }
+            }
+            i += 4;
+        }
+        while i < n {
+            out[i] = scale_relu_one(z[i], sf, alpha_inv, mu);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn relu_bwd_avx2(
+        zs: &[i32], g: &[i32], alpha_inv: i64, out: &mut [i32],
+    ) {
+        let d = _mm256_set1_pd(alpha_inv as f64);
+        let lo = _mm_set1_epi32(-INT8_MAX);
+        let hi = _mm_set1_epi32(INT8_MAX);
+        let zero = _mm_setzero_si128();
+        let n = zs.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = _mm_loadu_si128(zs.as_ptr().add(i) as *const __m128i);
+            let gv = _mm_loadu_si128(g.as_ptr().add(i) as *const __m128i);
+            let dead = _mm_or_si128(
+                _mm_cmplt_epi32(x, lo),
+                _mm_cmpgt_epi32(x, hi),
+            );
+            let isneg = _mm_cmplt_epi32(x, zero);
+            let gdiv = floordiv4(gv, d);
+            let sel = _mm_blendv_epi8(gv, gdiv, isneg);
+            let r = _mm_andnot_si128(dead, sel);
+            _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, r);
+            i += 4;
+        }
+        relu_bwd_scalar(&zs[i..], &g[i..], alpha_inv, &mut out[i..]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use avx2::{copy_avx2, dot_wrap_avx2, relu_avx2, relu_bwd_avx2, scale_avx2,
+           scale_relu_avx2};
+
+// ---------------------------------------------------------------------------
+// NEON implementation (aarch64)
+// ---------------------------------------------------------------------------
+
+/// 4-lane wrapping i32 dot (`vmlaq_s32` and the horizontal `vaddvq_s32`
+/// both use modular arithmetic).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_wrap_neon(a: &[i32], b: &[i32]) -> i32 {
+    use std::arch::aarch64::*;
+    let n = a.len().min(b.len());
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let va = vld1q_s32(a.as_ptr().add(i));
+        let vb = vld1q_s32(b.as_ptr().add(i));
+        acc = vmlaq_s32(acc, va, vb);
+        i += 4;
+    }
+    let mut total = vaddvq_s32(acc);
+    while i < n {
+        total = total.wrapping_add(a[i].wrapping_mul(b[i]));
+        i += 1;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn isa_parse_and_support() {
+        assert_eq!(Isa::parse("scalar"), Some(Isa::Scalar));
+        assert_eq!(Isa::parse(" AVX2 "), Some(Isa::Avx2));
+        assert_eq!(Isa::parse("neon"), Some(Isa::Neon));
+        assert_eq!(Isa::parse("sse9"), None);
+        assert!(supported(Isa::Scalar));
+        let sup = supported_isas();
+        assert_eq!(sup[0], Isa::Scalar);
+        assert!(sup.contains(&detect()));
+        // active() always returns something the host can run
+        assert!(supported(active()));
+    }
+
+    #[test]
+    fn dot_wrap_bitexact_across_isas_prop() {
+        prop::check("isa_dot", 40, |g| {
+            let n = g.usize_in(0, 70);
+            let mut a = g.vec_i32(n, -127, 127);
+            let mut b = g.vec_i32(n, -32768, 32767);
+            if n >= 2 && g.usize_in(0, 3) == 0 {
+                // rail inputs: products overflow i32 and must wrap the
+                // same way on every ISA
+                a[0] = i32::MAX;
+                b[0] = i32::MAX;
+                a[1] = i32::MIN;
+                b[1] = i32::MAX;
+            }
+            let want = dot_wrap_scalar(&a, &b);
+            for isa in supported_isas() {
+                assert_eq!(
+                    dot_i32_wrap(isa, &a, &b),
+                    want,
+                    "isa={} n={n}",
+                    isa.name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn copy_bitexact_across_isas() {
+        let mut g = Pcg32::new(3);
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let src: Vec<i32> =
+                (0..n).map(|_| g.range_i32(i32::MIN, i32::MAX)).collect();
+            for isa in supported_isas() {
+                let mut dst = vec![0i32; n];
+                copy_i32(isa, &mut dst, &src);
+                assert_eq!(dst, src, "isa={} n={n}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn element_kernels_bitexact_across_isas_prop() {
+        prop::check("isa_elem", 40, |g| {
+            let n = g.usize_in(0, 67);
+            // i64_wide mixes magnitudes up to ~2^44: exercises both the
+            // 4-lane f64 path (i32-range values) and the per-quad
+            // scalar fallback (values past the i32 rail)
+            let z = g.vec_i64(n);
+            let zi: Vec<i32> = (0..n)
+                .map(|_| match g.usize_in(0, 5) {
+                    0 => i32::MAX,
+                    1 => i32::MIN,
+                    _ => g.i32_in(-300, 300),
+                })
+                .collect();
+            let gr = g.vec_i32(n, -2000, 2000);
+            let sf = [1i64, 7, 256, 256 * 784, MAX_F64_DIV - 1, MAX_F64_DIV]
+                [g.usize_in(0, 5)];
+            let ai = [1i64, 2, 10, 100, i32::MAX as i64][g.usize_in(0, 4)];
+            let mu = ops_int::nitro_relu_mu(ai);
+
+            let mut want_scale = vec![0i32; n];
+            scale_scalar(&z, sf, &mut want_scale);
+            let mut want_relu = zi.clone();
+            relu_scalar(&mut want_relu, ai, mu);
+            let mut want_sr = vec![0i32; n];
+            scale_relu_scalar(&z, sf, ai, mu, &mut want_sr);
+            let mut want_bwd = vec![0i32; n];
+            relu_bwd_scalar(&zi, &gr, ai, &mut want_bwd);
+
+            for isa in supported_isas() {
+                let mut got = vec![0i32; n];
+                scale_slice(isa, &z, sf, &mut got);
+                assert_eq!(got, want_scale, "scale isa={}", isa.name());
+                let mut got = zi.clone();
+                relu_slice(isa, &mut got, ai, mu);
+                assert_eq!(got, want_relu, "relu isa={}", isa.name());
+                let mut got = vec![0i32; n];
+                scale_relu_slice(isa, &z, sf, ai, mu, &mut got);
+                assert_eq!(got, want_sr, "scale_relu isa={}", isa.name());
+                let mut got = vec![0i32; n];
+                relu_bwd_slice(isa, &zi, &gr, ai, &mut got);
+                assert_eq!(got, want_bwd, "relu_bwd isa={}", isa.name());
+            }
+        });
+    }
+
+    #[test]
+    fn backend_tensor_ops_match_ops_int_wrappers() {
+        // the owning wrappers in ops_int and the backend methods are
+        // the same surface — spot-check the tensor-level plumbing
+        let z = LTensor::from_vec(&[1, 6], vec![-1, -255, -256, -257, 255, 256]);
+        for isa in supported_isas() {
+            let kb = KernelBackend::with_isa(isa);
+            assert_eq!(kb.isa(), isa);
+            let s = kb.nitro_scale(&z, 256);
+            assert_eq!(s.data, vec![-1, -1, -1, -2, 0, 1]);
+            let zs = ITensor::from_vec(&[1, 5], vec![-200, -100, -1, 50, 200]);
+            let gr = ITensor::from_vec(&[1, 5], vec![1000, 1000, -1000, 7, 7]);
+            assert_eq!(kb.nitro_relu_bwd(&zs, &gr, 10).data,
+                       vec![0, 100, -100, 7, 0]);
+            let r = kb.nitro_relu(&zs, 10);
+            let mut ri = zs.clone();
+            kb.nitro_relu_inplace(&mut ri, 10);
+            assert_eq!(r, ri);
+            assert_eq!(kb.nitro_scale_relu(&z, 256, 10),
+                       kb.nitro_relu(&kb.nitro_scale(&z, 256), 10));
+        }
+    }
+
+    #[test]
+    fn set_active_round_trips() {
+        let before = active();
+        for isa in supported_isas() {
+            set_active(isa);
+            assert_eq!(active(), isa);
+            assert_eq!(kernels().isa(), isa);
+        }
+        set_active(before);
+    }
+}

@@ -6,9 +6,11 @@
 //! rescales back down. The op set mirrors `python/compile/kernels/ref.py`
 //! bit-exactly — verified against `artifacts/golden/ops.json`.
 
+pub mod backend;
 pub mod ops_f32;
 pub mod ops_int;
 
+pub use backend::{kernels, Isa, KernelBackend};
 pub use ops_int::*;
 
 /// Row-major dense tensor. `T` is one of `i32`, `i64`, `f32`.

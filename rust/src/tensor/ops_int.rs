@@ -1,6 +1,14 @@
 //! Integer contraction and NITRO elementwise kernels — the NativeEngine
 //! hot path. Bit-exact mirror of `python/compile/kernels/ref.py`.
+//!
+//! Entry points: the owning conveniences here (`matmul_i64`,
+//! `conv2d_i64`, `nitro_relu`, ...) plus the one workspace-threaded
+//! form per op on [`super::backend::KernelBackend`], which also picks
+//! the SIMD ISA (see `tensor::backend` for the dispatch and the
+//! bit-exactness contract). The internal kernels take an explicit
+//! [`Isa`] so every path is testable against the scalar reference.
 
+use super::backend::{self, Isa};
 use super::{ITensor, LTensor, Tensor};
 use crate::util::{div_floor, par};
 use std::cell::RefCell;
@@ -16,14 +24,15 @@ pub const ONE_HOT_VALUE: i32 = 32;
 /// and i64-accumulator buffers grow to a high-water mark once and are then
 /// reused on every call (zero-realloc steady state).
 ///
-/// A conv forward through [`conv2d_i64_ws`] / [`conv2d_scale_ws`] leaves
+/// A conv forward through `KernelBackend::{conv2d, conv2d_scale}` leaves
 /// its im2col patches in the workspace tagged with the input geometry; the
-/// matching [`conv2d_weight_grad_ws`] call reuses them instead of
-/// re-extracting — this removes the second per-step im2col the seed paid
-/// in `conv2d_weight_grad`. Release builds key reuse on (shape, kernel,
-/// padding) — callers must pass the *same input tensor* between forward
-/// and weight-grad (as `nn::block` does); debug builds additionally
-/// fingerprint the input data and silently recompute on mismatch.
+/// matching `KernelBackend::conv2d_weight_grad` call reuses them instead
+/// of re-extracting — this removes the second per-step im2col the seed
+/// paid in `conv2d_weight_grad`. Release builds key reuse on (shape,
+/// kernel, padding) — callers must pass the *same input tensor* between
+/// forward and weight-grad (as `nn::block` does); debug builds
+/// additionally fingerprint the input data and trap a stale reuse (same
+/// geometry, mutated bytes) as a missed `invalidate_patches`.
 #[derive(Default)]
 pub struct KernelWorkspace {
     /// Transposed rhs for the matmul fast path.
@@ -74,11 +83,12 @@ impl KernelWorkspace {
     /// and tag it — the *producer* side (conv forward). Always re-extracts
     /// because a forward pass sees fresh input data every call even when
     /// the shape is unchanged.
-    fn fill_patches(&mut self, x: &ITensor, kernel: usize, padding: usize) {
+    fn fill_patches(&mut self, isa: Isa, x: &ITensor, kernel: usize,
+                    padding: usize) {
         let tag = PatchTag::new(x, kernel, padding);
         let plen = tag.plen;
         let buf = grown(&mut self.patches, plen);
-        im2col_into(x, kernel, padding, buf);
+        im2col_into(isa, x, kernel, padding, buf);
         self.patches_tag = Some(tag);
     }
 
@@ -86,12 +96,29 @@ impl KernelWorkspace {
     /// cached extraction when the tag matches — the *consumer* side
     /// (weight grad, which sees the same input its forward just produced
     /// patches for).
-    fn ensure_patches(&mut self, x: &ITensor, kernel: usize, padding: usize) {
+    fn ensure_patches(&mut self, isa: Isa, x: &ITensor, kernel: usize,
+                      padding: usize) {
         let tag = PatchTag::new(x, kernel, padding);
-        if self.patches_tag.as_ref() == Some(&tag) {
-            return;
+        if let Some(cached) = self.patches_tag.as_ref() {
+            if *cached == tag {
+                return;
+            }
+            // Same geometry but a different tag can only mean the debug
+            // fingerprint moved: the caller mutated the input between the
+            // producing forward and this weight grad without calling
+            // `invalidate_patches`. Release builds would silently reuse
+            // stale patches here — trap it while fingerprints exist.
+            debug_assert!(
+                !(cached.x_shape == tag.x_shape
+                    && cached.kernel == tag.kernel
+                    && cached.padding == tag.padding),
+                "KernelWorkspace: cached im2col patches match this input's \
+                 geometry but not its data — the input was mutated after \
+                 the forward pass; call invalidate_patches() before reusing \
+                 the workspace"
+            );
         }
-        self.fill_patches(x, kernel, padding);
+        self.fill_patches(isa, x, kernel, padding);
     }
 }
 
@@ -143,18 +170,15 @@ fn safe_chunk(max_a: i64, max_b: i64, k: usize) -> Option<usize> {
 }
 
 /// Dot product with i32 chunked accumulation (caller guarantees
-/// `chunk * max|a| * max|b| < 2^31`).
+/// `chunk * max|a| * max|b| < 2^31`); the inner wrapping dot dispatches
+/// on the ISA.
 #[inline]
-fn dot_chunked(a: &[i32], b: &[i32], chunk: usize) -> i64 {
+fn dot_chunked(isa: Isa, a: &[i32], b: &[i32], chunk: usize) -> i64 {
     let mut total = 0i64;
     let mut ai = a.chunks(chunk);
     let mut bi = b.chunks(chunk);
     while let (Some(ca), Some(cb)) = (ai.next(), bi.next()) {
-        let mut acc = 0i32;
-        for (&x, &y) in ca.iter().zip(cb) {
-            acc = acc.wrapping_add(x.wrapping_mul(y));
-        }
-        total += acc as i64;
+        total += backend::dot_i32_wrap(isa, ca, cb) as i64;
     }
     total
 }
@@ -190,47 +214,42 @@ pub fn matmul_i64(a: &ITensor, b: &ITensor) -> LTensor {
     let (kb, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, kb, "matmul inner dims {k} vs {kb}");
     let mut out = vec![0i64; m * n];
-    matmul_i64_into(&a.data, &b.data, m, k, n, &mut out, par::current_workers());
+    matmul_i64_into(backend::active(), &a.data, &b.data, m, k, n, &mut out,
+                    par::current_workers());
     Tensor::from_vec(&[m, n], out)
 }
 
-/// Fused `floor((a × b) / sf)`: the i64 contraction accumulates into the
-/// workspace buffer and only the scaled i32 output is freshly allocated —
-/// the linear / learning-layer / head forward path. `a` is logically 2-D
-/// (see [`matmul_i64`]).
-pub fn matmul_scale_ws(a: &ITensor, b: &ITensor, sf: i64,
-                       ws: &mut KernelWorkspace) -> ITensor {
-    let mut out = ITensor::empty();
-    matmul_scale_into(a, b, sf, ws, &mut out);
-    out
-}
-
-/// [`matmul_scale_ws`] into a caller-owned output tensor, reusing its
-/// allocation — the grad-free serving forward path: with a long-lived
-/// `out`, the steady state allocates nothing.
-pub fn matmul_scale_into(a: &ITensor, b: &ITensor, sf: i64,
-                         ws: &mut KernelWorkspace, out: &mut ITensor) {
+/// Fused `floor((a × b) / sf)` into a caller-owned output tensor — the
+/// linear / learning-layer / head / serving forward path, exposed as
+/// `KernelBackend::matmul_scale`: the i64 contraction accumulates into
+/// the workspace buffer, and with a long-lived `out` the steady state
+/// allocates nothing. `a` is logically 2-D (see [`matmul_i64`]).
+pub(crate) fn matmul_scale_into(isa: Isa, a: &ITensor, b: &ITensor, sf: i64,
+                                ws: &mut KernelWorkspace, out: &mut ITensor) {
     let (m, k) = a.batch_feat();
     let (kb, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, kb, "matmul inner dims {k} vs {kb}");
     let KernelWorkspace { bt, acc, .. } = ws;
     let accbuf = grown(acc, m * n);
     accbuf.fill(0);
-    matmul_i64_into_buf(&a.data, &b.data, m, k, n, accbuf,
+    matmul_i64_into_buf(isa, &a.data, &b.data, m, k, n, accbuf,
                         par::current_workers(), bt);
     out.shape.clear();
     out.shape.extend_from_slice(&[m, n]);
     out.data.clear();
-    out.data.extend(accbuf.iter().map(|&v| div_floor(v, sf) as i32));
+    out.data.resize(m * n, 0);
+    backend::scale_slice(isa, accbuf, sf, &mut out.data);
 }
 
 /// Core kernel **accumulating** into a caller buffer (callers zero it or
 /// reuse it to sum over a batch); parallel over output row blocks, using
-/// a per-thread scratch workspace for the transposed rhs.
-pub fn matmul_i64_into(a: &[i32], b: &[i32], m: usize, k: usize, n: usize,
-                       out: &mut [i64], workers: usize) {
+/// a per-thread scratch workspace for the transposed rhs. Exposed as
+/// `KernelBackend::matmul_i64`.
+pub(crate) fn matmul_i64_into(isa: Isa, a: &[i32], b: &[i32], m: usize,
+                              k: usize, n: usize, out: &mut [i64],
+                              workers: usize) {
     SCRATCH.with(|ws| {
-        matmul_i64_into_buf(a, b, m, k, n, out, workers,
+        matmul_i64_into_buf(isa, a, b, m, k, n, out, workers,
                             &mut ws.borrow_mut().bt);
     });
 }
@@ -243,8 +262,9 @@ const MM_KTILE: usize = 512;
 
 /// [`matmul_i64_into`] with an explicit transpose scratch buffer.
 #[allow(clippy::too_many_arguments)]
-fn matmul_i64_into_buf(a: &[i32], b: &[i32], m: usize, k: usize, n: usize,
-                       out: &mut [i64], workers: usize, bt: &mut Vec<i32>) {
+fn matmul_i64_into_buf(isa: Isa, a: &[i32], b: &[i32], m: usize, k: usize,
+                       n: usize, out: &mut [i64], workers: usize,
+                       bt: &mut Vec<i32>) {
     assert_eq!(out.len(), m * n);
     if m == 0 || n == 0 {
         return;
@@ -254,14 +274,15 @@ fn matmul_i64_into_buf(a: &[i32], b: &[i32], m: usize, k: usize, n: usize,
     match safe_chunk(max_abs(a), max_abs(b), k) {
         Some(chunk) => {
             // row-dot form over a transposed rhs: both operands stream
-            // contiguously, the inner loop vectorizes in i32, and k-tiles
-            // never exceed the i32-safe accumulation chunk
+            // contiguously, the inner loop runs the ISA's wrapping-i32
+            // dot, and k-tiles never exceed the i32-safe accumulation
+            // chunk
             let bt = grown(bt, n * k);
             transpose_into(b, k, n, bt);
             let bt: &[i32] = bt;
             let ktile = chunk.min(MM_KTILE);
             par::for_each_chunk(out, rows * n, workers, |blk, orows| {
-                mm_block(a, bt, k, n, blk * rows, orows, ktile);
+                mm_block(isa, a, bt, k, n, blk * rows, orows, ktile);
             });
         }
         None => {
@@ -289,9 +310,11 @@ fn matmul_i64_into_buf(a: &[i32], b: &[i32], m: usize, k: usize, n: usize,
 /// Blocked inner kernel over one row block: k-tiles (bounded by the
 /// i32-safe chunk) outermost, then j-tiles, so the `bt` tile is reused
 /// across every row. i32 partial sums widen to i64 at tile boundaries —
-/// bit-identical to any other order because integer addition is
-/// associative and each tile obeys the overflow bound.
-fn mm_block(a: &[i32], bt: &[i32], k: usize, n: usize, r0: usize,
+/// bit-identical to any other order (including the SIMD lane order of
+/// `dot_i32_wrap`) because wrapping integer addition is associative and
+/// each tile obeys the overflow bound.
+#[allow(clippy::too_many_arguments)]
+fn mm_block(isa: Isa, a: &[i32], bt: &[i32], k: usize, n: usize, r0: usize,
             orows: &mut [i64], ktile: usize) {
     let rows = orows.len() / n;
     let mut kt = 0usize;
@@ -305,11 +328,7 @@ fn mm_block(a: &[i32], bt: &[i32], k: usize, n: usize, r0: usize,
                 for (jj, o) in orow.iter_mut().enumerate() {
                     let brow =
                         &bt[(jt + jj) * k + kt..(jt + jj) * k + kt + klen];
-                    let mut acc = 0i32;
-                    for (&x, &y) in arow.iter().zip(brow) {
-                        acc = acc.wrapping_add(x.wrapping_mul(y));
-                    }
-                    *o += acc as i64;
+                    *o += backend::dot_i32_wrap(isa, arow, brow) as i64;
                 }
             }
         }
@@ -351,6 +370,7 @@ pub fn matmul_a_bt_i64(a: &ITensor, b: &ITensor) -> LTensor {
     let (n, kb) = (b.shape[0], b.shape[1]);
     assert_eq!(k, kb);
     let mut out = vec![0i64; m * n];
+    let isa = backend::active();
     let chunk = safe_chunk(max_abs(&a.data), max_abs(&b.data), k);
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
@@ -358,7 +378,7 @@ pub fn matmul_a_bt_i64(a: &ITensor, b: &ITensor) -> LTensor {
         for (j, o) in orow.iter_mut().enumerate() {
             let brow = &b.data[j * k..(j + 1) * k];
             *o = match chunk {
-                Some(c) => dot_chunked(arow, brow, c),
+                Some(c) => dot_chunked(isa, arow, brow, c),
                 None => dot_i64(arow, brow),
             };
         }
@@ -373,17 +393,25 @@ pub fn matmul_a_bt_i64(a: &ITensor, b: &ITensor) -> LTensor {
 /// Patch extraction matching ref.im2col: x (B,C,H,W) -> (B, Ho*Wo, C*K*K)
 /// with the (c, ki, kj) row-major patch layout.
 pub fn im2col(x: &ITensor, kernel: usize, padding: usize) -> ITensor {
+    im2col_isa(backend::active(), x, kernel, padding)
+}
+
+/// [`im2col`] with an explicit ISA (`KernelBackend::im2col`).
+pub(crate) fn im2col_isa(isa: Isa, x: &ITensor, kernel: usize,
+                         padding: usize) -> ITensor {
     let (b, c, h, w) = shape4(x);
     let (ho, wo) = out_hw(h, w, kernel, padding);
     let ckk = c * kernel * kernel;
     let mut out = vec![0i32; b * ho * wo * ckk];
-    im2col_into(x, kernel, padding, &mut out);
+    im2col_into(isa, x, kernel, padding, &mut out);
     Tensor::from_vec(&[b, ho * wo, ckk], out)
 }
 
 /// [`im2col`] into a caller buffer (every slot is overwritten); parallel
-/// over the batch.
-fn im2col_into(x: &ITensor, kernel: usize, padding: usize, out: &mut [i32]) {
+/// over the batch. The scalar ISA keeps the original per-element loop
+/// (the bit-identity reference); SIMD ISAs take the row-copy form.
+fn im2col_into(isa: Isa, x: &ITensor, kernel: usize, padding: usize,
+               out: &mut [i32]) {
     let (b, c, h, w) = shape4(x);
     let (ho, wo) = out_hw(h, w, kernel, padding);
     let ckk = c * kernel * kernel;
@@ -391,10 +419,13 @@ fn im2col_into(x: &ITensor, kernel: usize, padding: usize, out: &mut [i32]) {
     let per_sample = ho * wo * ckk;
     par::for_each_chunk(out, per_sample, par::current_workers(),
         |bi, chunk| {
-            im2col_sample(
-                &x.data[bi * c * h * w..(bi + 1) * c * h * w],
-                c, h, w, kernel, padding, ho, wo, chunk,
-            );
+            let sample = &x.data[bi * c * h * w..(bi + 1) * c * h * w];
+            if isa == Isa::Scalar {
+                im2col_sample(sample, c, h, w, kernel, padding, ho, wo, chunk);
+            } else {
+                im2col_sample_rows(isa, sample, c, h, w, kernel, padding,
+                                   ho, wo, chunk);
+            }
         });
 }
 
@@ -426,63 +457,101 @@ fn im2col_sample(x: &[i32], c: usize, h: usize, w: usize, k: usize,
     }
 }
 
+/// [`im2col_sample`] restructured as per-(ci,ki) row copies: zero the
+/// out-of-bounds left/right pad columns, then bulk-copy the in-range
+/// `kj` span from the input row through the ISA's vector copy. Copies
+/// the exact values the scalar loop writes (property-tested identical).
+#[allow(clippy::too_many_arguments)]
+fn im2col_sample_rows(isa: Isa, x: &[i32], c: usize, h: usize, w: usize,
+                      k: usize, pad: usize, ho: usize, wo: usize,
+                      out: &mut [i32]) {
+    let ckk = c * k * k;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let patch = &mut out[(oy * wo + ox) * ckk..(oy * wo + ox + 1) * ckk];
+            // in-range kernel columns: kj in [lo, hi) keeps
+            // ix = ox + kj - pad inside [0, w)
+            let lo = pad.saturating_sub(ox).min(k);
+            let hi = (w + pad).saturating_sub(ox).clamp(lo, k);
+            for ci in 0..c {
+                let plane = &x[ci * h * w..(ci + 1) * h * w];
+                for ki in 0..k {
+                    let row = &mut patch[ci * k * k + ki * k
+                        ..ci * k * k + ki * k + k];
+                    let iy = oy as isize + ki as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        row.fill(0);
+                        continue;
+                    }
+                    row[..lo].fill(0);
+                    if hi > lo {
+                        let src = iy as usize * w + (ox + lo - pad);
+                        backend::copy_i32(isa, &mut row[lo..hi],
+                                          &plane[src..src + (hi - lo)]);
+                    }
+                    row[hi..].fill(0);
+                }
+            }
+        }
+    }
+}
+
 /// Integer conv2d: x (B,C,H,W) × w (O,C,K,K) -> (B,O,Ho,Wo) i64. Routed
 /// through a per-thread scratch workspace (patch buffer reused across
 /// calls).
 pub fn conv2d_i64(x: &ITensor, w: &ITensor, padding: usize) -> LTensor {
-    SCRATCH.with(|ws| conv2d_i64_ws(x, w, padding, &mut ws.borrow_mut()))
+    SCRATCH.with(|ws| {
+        conv2d_i64_ws(backend::active(), x, w, padding, &mut ws.borrow_mut())
+    })
 }
 
-/// [`conv2d_i64`] with an explicit workspace; leaves the im2col patches of
-/// `x` cached in `ws` for a following [`conv2d_weight_grad_ws`].
-pub fn conv2d_i64_ws(x: &ITensor, w: &ITensor, padding: usize,
-                     ws: &mut KernelWorkspace) -> LTensor {
+/// [`conv2d_i64`] with an explicit workspace (`KernelBackend::conv2d`);
+/// leaves the im2col patches of `x` cached in `ws` for a following
+/// weight-grad call.
+pub(crate) fn conv2d_i64_ws(isa: Isa, x: &ITensor, w: &ITensor,
+                            padding: usize, ws: &mut KernelWorkspace)
+                            -> LTensor {
     let (b, c, h, wd) = shape4(x);
     let (o, cw, k, _) = shape4(w);
     assert_eq!(c, cw, "conv channel mismatch");
     let (ho, wo) = out_hw(h, wd, k, padding);
     let p = ho * wo;
     let ckk = c * k * k;
-    ws.fill_patches(x, k, padding);
+    ws.fill_patches(isa, x, k, padding);
     let mut out = vec![0i64; b * o * p];
-    conv_contract(&ws.patches[..b * p * ckk], &w.data, o, p, ckk, &mut out);
+    conv_contract(isa, &ws.patches[..b * p * ckk], &w.data, o, p, ckk,
+                  &mut out);
     Tensor::from_vec(&[b, o, ho, wo], out)
 }
 
-/// Fused `floor(conv2d(x, w) / sf)`: the i64 pre-activations live in the
-/// workspace accumulator, only the scaled i32 output is allocated. The
-/// im2col patches of `x` stay cached in `ws` for the weight-grad pass.
-pub fn conv2d_scale_ws(x: &ITensor, w: &ITensor, padding: usize, sf: i64,
-                       ws: &mut KernelWorkspace) -> ITensor {
-    let mut out = ITensor::empty();
-    conv2d_scale_into(x, w, padding, sf, ws, &mut out);
-    out
-}
-
-/// [`conv2d_scale_ws`] into a caller-owned output tensor, reusing its
-/// allocation (serving forward path).
-pub fn conv2d_scale_into(x: &ITensor, w: &ITensor, padding: usize, sf: i64,
-                         ws: &mut KernelWorkspace, out: &mut ITensor) {
+/// Fused `floor(conv2d(x, w) / sf)` into a caller-owned output tensor
+/// (`KernelBackend::conv2d_scale`): the i64 pre-activations live in the
+/// workspace accumulator and the im2col patches of `x` stay cached in
+/// `ws` for the weight-grad pass.
+pub(crate) fn conv2d_scale_into(isa: Isa, x: &ITensor, w: &ITensor,
+                                padding: usize, sf: i64,
+                                ws: &mut KernelWorkspace, out: &mut ITensor) {
     let (b, c, h, wd) = shape4(x);
     let (o, cw, k, _) = shape4(w);
     assert_eq!(c, cw, "conv channel mismatch");
     let (ho, wo) = out_hw(h, wd, k, padding);
     let p = ho * wo;
     let ckk = c * k * k;
-    ws.fill_patches(x, k, padding);
+    ws.fill_patches(isa, x, k, padding);
     let KernelWorkspace { patches, acc, .. } = ws;
     let accbuf = grown(acc, b * o * p);
-    conv_contract(&patches[..b * p * ckk], &w.data, o, p, ckk, accbuf);
+    conv_contract(isa, &patches[..b * p * ckk], &w.data, o, p, ckk, accbuf);
     out.shape.clear();
     out.shape.extend_from_slice(&[b, o, ho, wo]);
     out.data.clear();
-    out.data.extend(accbuf.iter().map(|&v| div_floor(v, sf) as i32));
+    out.data.resize(b * o * p, 0);
+    backend::scale_slice(isa, accbuf, sf, &mut out.data);
 }
 
 /// Shared conv contraction: out[bi][oi*p + pi] = Σ_ckk w[oi,·]·pat[bi,pi,·]
 /// (every slot assigned); parallel over the batch.
-fn conv_contract(patches: &[i32], w: &[i32], o: usize, p: usize, ckk: usize,
-                 out: &mut [i64]) {
+fn conv_contract(isa: Isa, patches: &[i32], w: &[i32], o: usize, p: usize,
+                 ckk: usize, out: &mut [i64]) {
     let per_sample = o * p;
     let kchunk = safe_chunk(max_abs(w), max_abs(patches), ckk);
     par::for_each_chunk(out, per_sample, par::current_workers(),
@@ -494,7 +563,7 @@ fn conv_contract(patches: &[i32], w: &[i32], o: usize, p: usize, ckk: usize,
                 for (pi, ov) in orow.iter_mut().enumerate() {
                     let prow = &pat[pi * ckk..(pi + 1) * ckk];
                     *ov = match kchunk {
-                        Some(c) => dot_chunked(wrow, prow, c),
+                        Some(c) => dot_chunked(isa, wrow, prow, c),
                         None => dot_i64(wrow, prow),
                     };
                 }
@@ -511,23 +580,24 @@ pub fn conv2d_weight_grad(x: &ITensor, g: &ITensor, kernel: usize,
         // the thread-local scratch has no producer/consumer contract with
         // this caller — never trust whatever patches are cached there
         ws.invalidate_patches();
-        conv2d_weight_grad_ws(x, g, kernel, padding, ws)
+        conv2d_weight_grad_ws(backend::active(), x, g, kernel, padding, ws)
     })
 }
 
-/// [`conv2d_weight_grad`] with an explicit workspace: when `ws` already
-/// holds the im2col patches of `x` (left there by the forward pass), the
-/// seed's duplicate per-step extraction is skipped entirely.
-pub fn conv2d_weight_grad_ws(x: &ITensor, g: &ITensor, kernel: usize,
-                             padding: usize, ws: &mut KernelWorkspace)
-                             -> LTensor {
+/// [`conv2d_weight_grad`] with an explicit workspace
+/// (`KernelBackend::conv2d_weight_grad`): when `ws` already holds the
+/// im2col patches of `x` (left there by the forward pass), the seed's
+/// duplicate per-step extraction is skipped entirely.
+pub(crate) fn conv2d_weight_grad_ws(isa: Isa, x: &ITensor, g: &ITensor,
+                                    kernel: usize, padding: usize,
+                                    ws: &mut KernelWorkspace) -> LTensor {
     let (b, c, h, w) = shape4(x);
     let (gb, o, ho, wo) = shape4(g);
     assert_eq!(b, gb);
     debug_assert_eq!(out_hw(h, w, kernel, padding), (ho, wo));
     let p = ho * wo;
     let ckk = c * kernel * kernel;
-    ws.ensure_patches(x, kernel, padding);
+    ws.ensure_patches(isa, x, kernel, padding);
     let KernelWorkspace { patches, bt, .. } = ws;
     let mut out = vec![0i64; o * ckk];
     // gw (O, CKK) = Σ_b  g_b (O, P) · patches_b (P, CKK): one accumulating
@@ -536,7 +606,7 @@ pub fn conv2d_weight_grad_ws(x: &ITensor, g: &ITensor, kernel: usize,
     for bi in 0..b {
         let gplane = &g.data[bi * o * p..(bi + 1) * o * p];
         let pat = &patches[bi * p * ckk..(bi + 1) * p * ckk];
-        matmul_i64_into_buf(gplane, pat, o, p, ckk, &mut out, 1, bt);
+        matmul_i64_into_buf(isa, gplane, pat, o, p, ckk, &mut out, 1, bt);
     }
     Tensor::from_vec(&[o, c, kernel, kernel], out)
 }
@@ -596,10 +666,11 @@ pub fn maxpool2d(x: &ITensor, size: usize, stride: usize)
 }
 
 /// Max pool without the argmax (inference needs no backward routing),
-/// written into a caller-owned output tensor. Values are bit-identical to
-/// [`maxpool2d`]'s pooled output — same core loop.
-pub fn maxpool2d_into(x: &ITensor, size: usize, stride: usize,
-                      out: &mut ITensor) {
+/// written into a caller-owned output tensor
+/// (`KernelBackend::maxpool2d`). Values are bit-identical to
+/// [`maxpool2d`]'s pooled output — same core loop on every ISA.
+pub(crate) fn maxpool2d_into(x: &ITensor, size: usize, stride: usize,
+                             out: &mut ITensor) {
     let (b, c, h, w) = shape4(x);
     let ho = (h - size) / stride + 1;
     let wo = (w - size) / stride + 1;
@@ -646,10 +717,7 @@ pub fn scale_factor_conv(kernel: usize, in_channels: usize) -> i64 {
 
 /// NITRO Scaling Layer: z* = floor(z / SF). i64 in, i32 out.
 pub fn nitro_scale(z: &LTensor, sf: i64) -> ITensor {
-    Tensor {
-        shape: z.shape.clone(),
-        data: z.data.iter().map(|&v| div_floor(v, sf) as i32).collect(),
-    }
+    backend::kernels().nitro_scale(z, sf)
 }
 
 /// Pre-computed NITRO-ReLU mean (paper §3.2). Mirrors ref.nitro_relu_mu.
@@ -663,82 +731,26 @@ pub fn nitro_relu_mu(alpha_inv: i64) -> i32 {
 
 /// NITRO-ReLU forward over scaled pre-activations.
 pub fn nitro_relu(zs: &ITensor, alpha_inv: i64) -> ITensor {
-    let mu = nitro_relu_mu(alpha_inv);
-    Tensor {
-        shape: zs.shape.clone(),
-        data: zs
-            .data
-            .iter()
-            .map(|&v| {
-                let out = if v < 0 {
-                    div_floor(v.max(-INT8_MAX) as i64, alpha_inv) as i32
-                } else {
-                    v.min(INT8_MAX)
-                };
-                out - mu
-            })
-            .collect(),
-    }
+    backend::kernels().nitro_relu(zs, alpha_inv)
 }
 
 /// NITRO-ReLU applied in place (the serving forward keeps no
 /// pre-activation — no backward pass will need it). Bit-identical to
 /// [`nitro_relu`].
 pub fn nitro_relu_inplace(zs: &mut ITensor, alpha_inv: i64) {
-    let mu = nitro_relu_mu(alpha_inv);
-    for v in &mut zs.data {
-        let out = if *v < 0 {
-            div_floor((*v).max(-INT8_MAX) as i64, alpha_inv) as i32
-        } else {
-            (*v).min(INT8_MAX)
-        };
-        *v = out - mu;
-    }
+    backend::kernels().nitro_relu_inplace(zs, alpha_inv);
 }
 
 /// Fused scale+ReLU: one pass i64 -> i32 (the NativeEngine analogue of the
 /// Pallas `nitro_scale_relu` epilogue kernel).
 pub fn nitro_scale_relu(z: &LTensor, sf: i64, alpha_inv: i64) -> ITensor {
-    let mu = nitro_relu_mu(alpha_inv);
-    Tensor {
-        shape: z.shape.clone(),
-        data: z
-            .data
-            .iter()
-            .map(|&zv| {
-                let v = div_floor(zv, sf);
-                let out = if v < 0 {
-                    div_floor(v.max(-(INT8_MAX as i64)), alpha_inv) as i32
-                } else {
-                    v.min(INT8_MAX as i64) as i32
-                };
-                out - mu
-            })
-            .collect(),
-    }
+    backend::kernels().nitro_scale_relu(z, sf, alpha_inv)
 }
 
 /// NITRO-ReLU backward: exact piecewise derivative (DESIGN.md interp. #2).
 /// `zs` is the scaled pre-activation that was fed forward.
 pub fn nitro_relu_bwd(zs: &ITensor, g: &ITensor, alpha_inv: i64) -> ITensor {
-    assert_eq!(zs.shape, g.shape);
-    Tensor {
-        shape: g.shape.clone(),
-        data: zs
-            .data
-            .iter()
-            .zip(&g.data)
-            .map(|(&x, &gv)| {
-                if x < -INT8_MAX || x > INT8_MAX {
-                    0
-                } else if x < 0 {
-                    div_floor(gv as i64, alpha_inv) as i32
-                } else {
-                    gv
-                }
-            })
-            .collect(),
-    }
+    backend::kernels().nitro_relu_bwd(zs, g, alpha_inv)
 }
 
 // ---------------------------------------------------------------------------
@@ -798,12 +810,40 @@ fn out_hw(h: usize, w: usize, k: usize, pad: usize) -> (usize, usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::backend::{kernels, supported_isas, KernelBackend};
     use crate::util::prop;
     use crate::util::rng::Pcg32;
 
     fn rand_it(rng: &mut Pcg32, shape: &[usize], lo: i32, hi: i32) -> ITensor {
         let n = shape.iter().product();
         ITensor::from_vec(shape, (0..n).map(|_| rng.range_i32(lo, hi)).collect())
+    }
+
+    // Test-local shims for the consolidated backend surface, so the
+    // assertions below read like the op they exercise.
+    fn matmul_scale_ws(a: &ITensor, b: &ITensor, sf: i64,
+                       ws: &mut KernelWorkspace) -> ITensor {
+        let mut out = ITensor::empty();
+        kernels().matmul_scale(a, b, sf, ws, &mut out);
+        out
+    }
+
+    fn conv2d_i64_kb(x: &ITensor, w: &ITensor, padding: usize,
+                     ws: &mut KernelWorkspace) -> LTensor {
+        kernels().conv2d(x, w, padding, ws)
+    }
+
+    fn conv2d_scale_ws(x: &ITensor, w: &ITensor, padding: usize, sf: i64,
+                       ws: &mut KernelWorkspace) -> ITensor {
+        let mut out = ITensor::empty();
+        kernels().conv2d_scale(x, w, padding, sf, ws, &mut out);
+        out
+    }
+
+    fn conv2d_weight_grad_kb(x: &ITensor, g: &ITensor, kernel: usize,
+                             padding: usize, ws: &mut KernelWorkspace)
+                             -> LTensor {
+        kernels().conv2d_weight_grad(x, g, kernel, padding, ws)
     }
 
     /// O(n^3) scalar reference matmul for cross-checking the blocked kernel.
@@ -896,8 +936,12 @@ mod tests {
         let n = chunk * 3 + 7; // several full chunks + a ragged tail
         let a = vec![127i32; n];
         let b = vec![-127i32; n];
-        assert_eq!(dot_chunked(&a, &b, chunk), dot_i64(&a, &b));
-        assert_eq!(dot_chunked(&a, &b, chunk), -(127i64 * 127 * n as i64));
+        for isa in supported_isas() {
+            assert_eq!(dot_chunked(isa, &a, &b, chunk), dot_i64(&a, &b),
+                       "isa={}", isa.name());
+            assert_eq!(dot_chunked(isa, &a, &b, chunk),
+                       -(127i64 * 127 * n as i64));
+        }
     }
 
     #[test]
@@ -1058,12 +1102,93 @@ mod tests {
             let a = ITensor::from_vec(&[m, k], av);
             let b = ITensor::from_vec(&[k, n], bv);
             let want = matmul_naive(&a, &b);
-            for workers in [1usize, 2, 3, 8] {
-                let mut out = vec![0i64; m * n];
-                matmul_i64_into(&a.data, &b.data, m, k, n, &mut out, workers);
-                assert_eq!(out, want.data, "workers={workers} wide={wide}");
+            for isa in supported_isas() {
+                for workers in [1usize, 2, 3, 8] {
+                    let mut out = vec![0i64; m * n];
+                    matmul_i64_into(isa, &a.data, &b.data, m, k, n, &mut out,
+                                    workers);
+                    assert_eq!(out, want.data,
+                               "isa={} workers={workers} wide={wide}",
+                               isa.name());
+                }
             }
         });
+    }
+
+    #[test]
+    fn matmul_backend_bitexact_across_isas_prop() {
+        // every supported ISA through the KernelBackend surface must
+        // reproduce the naive reference, on both the chunked-i32 fast
+        // path and (rail-pinned operands) the wide i64 fallback
+        prop::check("matmul_isa", 15, |g| {
+            let m = g.usize_in(1, 9);
+            let k = g.usize_in(1, 80);
+            let n = g.usize_in(1, 70); // > MM_JTILE exercises j-tiling
+            let wide = g.usize_in(0, 2) == 0;
+            let mut av = g.vec_i32(m * k, -127, 127);
+            let mut bv = g.vec_i32(k * n, -127, 127);
+            if wide {
+                av[0] = i32::MAX; // single product past the i32 rail
+                bv[0] = -i32::MAX;
+            }
+            let a = ITensor::from_vec(&[m, k], av);
+            let b = ITensor::from_vec(&[k, n], bv);
+            let want = matmul_naive(&a, &b);
+            for isa in supported_isas() {
+                let kb = KernelBackend::with_isa(isa);
+                let mut out = vec![0i64; m * n];
+                kb.matmul_i64(&a.data, &b.data, m, k, n, &mut out, 2);
+                assert_eq!(out, want.data, "isa={} wide={wide}", isa.name());
+            }
+        });
+    }
+
+    #[test]
+    fn im2col_row_copy_matches_scalar_reference_prop() {
+        // the SIMD row-copy extraction must be byte-identical to the
+        // scalar per-element loop across kernel/padding geometries,
+        // including pads that clip patches on every edge
+        prop::check("im2col_isa", 20, |g| {
+            let b = g.usize_in(1, 2);
+            let c = g.usize_in(1, 3);
+            let k = [1usize, 3, 5][g.usize_in(0, 2)];
+            let pad = g.usize_in(0, 2);
+            let h = g.usize_in(k.max(2), 9);
+            let w = g.usize_in(k.max(2), 9);
+            let x = ITensor::from_vec(&[b, c, h, w],
+                                      g.vec_i32(b * c * h * w, -127, 127));
+            let want = im2col_isa(Isa::Scalar, &x, k, pad);
+            for isa in supported_isas() {
+                assert_eq!(im2col_isa(isa, &x, k, pad), want,
+                           "isa={} k={k} pad={pad} h={h} w={w}", isa.name());
+            }
+        });
+    }
+
+    #[test]
+    fn conv_backend_bitexact_across_isas() {
+        let mut g = Pcg32::new(23);
+        let x = rand_it(&mut g, &[2, 3, 7, 6], -127, 127);
+        let wt = rand_it(&mut g, &[4, 3, 3, 3], -500, 500);
+        let gr = rand_it(&mut g, &[2, 4, 7, 6], -20, 20);
+        let sf = scale_factor_conv(3, 3);
+        let mut want: Option<(LTensor, ITensor, LTensor)> = None;
+        for isa in supported_isas() {
+            let kb = KernelBackend::with_isa(isa);
+            let mut ws = KernelWorkspace::new();
+            let z = kb.conv2d(&x, &wt, 1, &mut ws);
+            let mut s = ITensor::empty();
+            kb.conv2d_scale(&x, &wt, 1, sf, &mut ws, &mut s);
+            let gw = kb.conv2d_weight_grad(&x, &gr, 3, 1, &mut ws);
+            match &want {
+                None => want = Some((z, s, gw)),
+                Some((wz, wss, wgw)) => {
+                    assert_eq!(&z, wz, "conv2d isa={}", isa.name());
+                    assert_eq!(&s, wss, "conv2d_scale isa={}", isa.name());
+                    assert_eq!(&gw, wgw, "weight_grad isa={}", isa.name());
+                }
+            }
+        }
     }
 
     #[test]
@@ -1103,7 +1228,7 @@ mod tests {
                                           g.vec_i32(b * c * h * w, -127, 127));
                 let wt = ITensor::from_vec(&[o, c, 3, 3],
                                            g.vec_i32(o * c * 9, -500, 500));
-                let z_ws = conv2d_i64_ws(&x, &wt, 1, &mut ws);
+                let z_ws = conv2d_i64_kb(&x, &wt, 1, &mut ws);
                 let z = conv2d_i64(&x, &wt, 1);
                 assert_eq!(z_ws, z);
                 let sf = scale_factor_conv(3, c);
@@ -1113,7 +1238,7 @@ mod tests {
                                            g.vec_i32(b * o * h * w, -20, 20));
                 // patches for x are now cached; the ws path must equal the
                 // fresh extraction
-                let gw_ws = conv2d_weight_grad_ws(&x, &gr, 3, 1, &mut ws);
+                let gw_ws = conv2d_weight_grad_kb(&x, &gr, 3, 1, &mut ws);
                 let gw = conv2d_weight_grad(&x, &gr, 3, 1);
                 assert_eq!(gw_ws, gw);
             }
@@ -1132,16 +1257,49 @@ mod tests {
         let x1 = rand_it(&mut g, &[2, 3, 6, 6], -127, 127);
         let x2 = rand_it(&mut g, &[2, 3, 6, 6], -127, 127);
         assert_ne!(x1, x2);
-        let _ = conv2d_i64_ws(&x1, &wt, 1, &mut ws);
-        assert_eq!(conv2d_i64_ws(&x2, &wt, 1, &mut ws),
+        let _ = conv2d_i64_kb(&x1, &wt, 1, &mut ws);
+        assert_eq!(conv2d_i64_kb(&x2, &wt, 1, &mut ws),
                    conv2d_i64(&x2, &wt, 1));
         let sf = scale_factor_conv(3, 3);
         assert_eq!(conv2d_scale_ws(&x2, &wt, 1, sf, &mut ws),
                    nitro_scale(&conv2d_i64(&x2, &wt, 1), sf));
         // and the weight grad then consumes x2's patches, not x1's
         let gr = rand_it(&mut g, &[2, 4, 6, 6], -20, 20);
-        assert_eq!(conv2d_weight_grad_ws(&x2, &gr, 3, 1, &mut ws),
+        assert_eq!(conv2d_weight_grad_kb(&x2, &gr, 3, 1, &mut ws),
                    conv2d_weight_grad(&x2, &gr, 3, 1));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "invalidate_patches")]
+    fn stale_patch_reuse_is_trapped_in_debug() {
+        // mutate the input between the fused forward and the weight
+        // grad WITHOUT invalidate_patches: same geometry, different
+        // bytes — debug builds must refuse to reuse the stale patches
+        let mut g = Pcg32::new(41);
+        let mut ws = KernelWorkspace::new();
+        let mut x = rand_it(&mut g, &[1, 2, 5, 5], -127, 127);
+        let wt = rand_it(&mut g, &[3, 2, 3, 3], -300, 300);
+        let _ = conv2d_i64_kb(&x, &wt, 1, &mut ws);
+        x.data[0] ^= 1; // caller mutates the input in place
+        let gr = rand_it(&mut g, &[1, 3, 5, 5], -20, 20);
+        let _ = conv2d_weight_grad_kb(&x, &gr, 3, 1, &mut ws);
+    }
+
+    #[test]
+    fn invalidate_patches_makes_mutated_input_safe() {
+        // the documented fix for the trap above: invalidate, then the
+        // weight grad re-extracts and matches a fresh computation
+        let mut g = Pcg32::new(42);
+        let mut ws = KernelWorkspace::new();
+        let mut x = rand_it(&mut g, &[1, 2, 5, 5], -127, 127);
+        let wt = rand_it(&mut g, &[3, 2, 3, 3], -300, 300);
+        let _ = conv2d_i64_kb(&x, &wt, 1, &mut ws);
+        x.data[0] ^= 1;
+        ws.invalidate_patches();
+        let gr = rand_it(&mut g, &[1, 3, 5, 5], -20, 20);
+        assert_eq!(conv2d_weight_grad_kb(&x, &gr, 3, 1, &mut ws),
+                   conv2d_weight_grad(&x, &gr, 3, 1));
     }
 
     #[test]
@@ -1150,19 +1308,19 @@ mod tests {
         let mut ws = KernelWorkspace::new();
         let x1 = rand_it(&mut g, &[2, 3, 5, 5], -127, 127);
         let wt = rand_it(&mut g, &[4, 3, 3, 3], -300, 300);
-        let _ = conv2d_i64_ws(&x1, &wt, 1, &mut ws);
+        let _ = conv2d_i64_kb(&x1, &wt, 1, &mut ws);
         // a conv over a *different shape* must not reuse x1's patches
         let x2 = rand_it(&mut g, &[2, 3, 6, 6], -127, 127);
         let gr2 = rand_it(&mut g, &[2, 4, 6, 6], -20, 20);
         assert_eq!(
-            conv2d_weight_grad_ws(&x2, &gr2, 3, 1, &mut ws),
+            conv2d_weight_grad_kb(&x2, &gr2, 3, 1, &mut ws),
             conv2d_weight_grad(&x2, &gr2, 3, 1)
         );
         // explicit invalidation forces re-extraction, result unchanged
         ws.invalidate_patches();
         let gr1 = rand_it(&mut g, &[2, 4, 5, 5], -20, 20);
         assert_eq!(
-            conv2d_weight_grad_ws(&x1, &gr1, 3, 1, &mut ws),
+            conv2d_weight_grad_kb(&x1, &gr1, 3, 1, &mut ws),
             conv2d_weight_grad(&x1, &gr1, 3, 1)
         );
     }
@@ -1183,7 +1341,7 @@ mod tests {
                 let b =
                     ITensor::from_vec(&[k, n], g.vec_i32(k * n, -4000, 4000));
                 let sf = scale_factor_linear(k);
-                matmul_scale_into(&a, &b, sf, &mut ws, &mut out);
+                kernels().matmul_scale(&a, &b, sf, &mut ws, &mut out);
                 assert_eq!(out, nitro_scale(&matmul_i64(&a, &b), sf));
 
                 let bt = g.usize_in(1, 3);
@@ -1195,11 +1353,11 @@ mod tests {
                 let wt = ITensor::from_vec(&[o, c, 3, 3],
                                            g.vec_i32(o * c * 9, -500, 500));
                 let csf = scale_factor_conv(3, c);
-                conv2d_scale_into(&x, &wt, 1, csf, &mut ws, &mut out);
+                kernels().conv2d_scale(&x, &wt, 1, csf, &mut ws, &mut out);
                 assert_eq!(out, nitro_scale(&conv2d_i64(&x, &wt, 1), csf));
 
                 let (pooled, _) = maxpool2d(&x, 2, 2);
-                maxpool2d_into(&x, 2, 2, &mut out);
+                kernels().maxpool2d(&x, 2, 2, &mut out);
                 assert_eq!(out, pooled);
 
                 let mut zs =

@@ -1,0 +1,86 @@
+//! Cross-ISA training determinism: the SIMD kernel backends must be
+//! drop-in bit-identical to scalar — not just per kernel (the property
+//! tests in `tensor::backend` / `tensor::ops_int` cover that) but end
+//! to end: a short `fit` on each zoo preset family must produce
+//! byte-identical weights and losses on every supported ISA, under
+//! every scheduler, with dropout enabled.
+//!
+//! The process-wide backend is flipped with `backend::set_active` — the
+//! in-process equivalent of launching with `NITRO_ISA=...` (the CI
+//! matrix lane covers the env-var path itself).
+
+use nitro::data::synthetic;
+use nitro::nn::{zoo, Hyper, Network};
+use nitro::tensor::backend::{self, Isa};
+use nitro::tensor::ITensor;
+use nitro::train::{fit, Scheduler, TrainConfig};
+use nitro::util::par;
+
+/// One short real training run: synthetic 8×8 data (matches both the
+/// tinycnn input and mlp1-mini's 64 flattened features), dropout on,
+/// returns `(final weights, per-epoch mean head losses)`.
+fn short_fit(preset: &str, scheduler: Scheduler) -> (Vec<ITensor>, Vec<f64>) {
+    let ds = synthetic::by_name("tiny", 128, 17).expect("tiny");
+    let (mut tr, mut te) = ds.split_test(32);
+    tr.mad_normalize();
+    te.mad_normalize();
+    let mut net = Network::new(zoo::get(preset).expect("preset"), 5);
+    net.set_dropout(0.25, 0.25);
+    let cfg = TrainConfig {
+        epochs: 1,
+        batch: 32,
+        hyper: Hyper { gamma_inv: 128, eta_fw_inv: 12000, eta_lr_inv: 3000 },
+        seed: 5,
+        scheduler,
+        eval_every: 1,
+        ..Default::default()
+    };
+    let res = fit(&mut net, &tr, &te, &cfg);
+    let weights =
+        net.weights().into_iter().map(|(_, t)| t.clone()).collect();
+    let losses = res.epochs.iter().map(|e| e.mean_head_loss).collect();
+    (weights, losses)
+}
+
+#[test]
+fn short_fit_bitexact_across_isas_schedulers_and_presets() {
+    // the pipelined scheduler needs one thread per stage to engage
+    let _scope =
+        par::scoped_thread_workers(par::current_workers().max(4));
+    let prior = backend::active();
+    for preset in ["tinycnn", "mlp1-mini"] {
+        for sched in [Scheduler::Sequential, Scheduler::BlockParallel,
+                      Scheduler::Pipelined] {
+            backend::set_active(Isa::Scalar);
+            let (w_ref, l_ref) = short_fit(preset, sched);
+            for isa in backend::supported_isas() {
+                if isa == Isa::Scalar {
+                    continue;
+                }
+                backend::set_active(isa);
+                let (w, l) = short_fit(preset, sched);
+                assert_eq!(w, w_ref,
+                           "{preset}/{}: weights diverged on {}",
+                           sched.name(), isa.name());
+                assert_eq!(l, l_ref,
+                           "{preset}/{}: losses diverged on {}",
+                           sched.name(), isa.name());
+            }
+        }
+    }
+    backend::set_active(prior);
+}
+
+#[test]
+fn detected_backend_matches_scalar_pin_on_a_plain_fit() {
+    // what a fresh process picks with no NITRO_ISA (detection) vs an
+    // explicit scalar pin, on the default scheduler
+    let prior = backend::active();
+    backend::set_active(Isa::Scalar);
+    let (w_ref, l_ref) = short_fit("tinycnn", Scheduler::default());
+    backend::set_active(backend::detect());
+    let (w, l) = short_fit("tinycnn", Scheduler::default());
+    assert_eq!(w, w_ref, "detected backend diverged from scalar");
+    assert_eq!(l, l_ref, "detected backend diverged from scalar");
+    backend::set_active(prior);
+}
