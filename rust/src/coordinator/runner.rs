@@ -20,8 +20,9 @@ use crate::coordinator::experiments::Scale;
 use crate::coordinator::spec::{EngineKind, ExperimentSpec, ResolvedRun};
 use crate::data::{loader, Dataset};
 use crate::nn::{zoo, Network};
-use crate::train::{fit_observed, EpochRecord, MetricSink, Scheduler,
-                   TrainConfig};
+use crate::train::{dist, fit_dist, fit_observed, EpochRecord,
+                   MetricSink, NullSink, Scheduler, TrainConfig,
+                   TrainResult};
 use crate::util::bench::peak_rss_kb;
 use crate::util::jsonio::Json;
 
@@ -45,6 +46,10 @@ pub struct RunnerOpts {
     /// the nitro engine (metric-identical; CI cross-checks replica
     /// counts the same way it cross-checks schedulers).
     pub replicas: Option<usize>,
+    /// `Some(n)` overrides the spec's distributed world size for the
+    /// nitro engine: the run executes as `n` loopback-TCP
+    /// `train::dist` ranks in one process, metric-identical to `1`.
+    pub ranks: Option<usize>,
     /// Directory for per-run records (default `results`).
     pub out_dir: String,
     /// Directory for the aggregate BENCH file (default `.`, i.e. the
@@ -62,6 +67,7 @@ impl Default for RunnerOpts {
             epochs: 0,
             scheduler: None,
             replicas: None,
+            ranks: None,
             out_dir: "results".to_string(),
             bench_dir: ".".to_string(),
             verbose: false,
@@ -145,7 +151,8 @@ pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
         let (tr, te) = &cache.as_ref().unwrap().1;
         let scheduler = opts.scheduler.unwrap_or(r.scheduler);
         let replicas = opts.replicas.unwrap_or(r.replicas).max(1);
-        let out = execute_run(r, tr, te, scheduler, replicas,
+        let ranks = opts.ranks.unwrap_or(r.ranks).max(1);
+        let out = execute_run(r, tr, te, scheduler, replicas, ranks,
                               opts.verbose)?;
         let path = format!(
             "{run_dir}/{}__{}__s{}.json",
@@ -186,8 +193,8 @@ pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
 }
 
 fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset,
-               scheduler: Scheduler, replicas: usize, verbose: bool)
-               -> Result<RunOutcome, String> {
+               scheduler: Scheduler, replicas: usize, ranks: usize,
+               verbose: bool) -> Result<RunOutcome, String> {
     let net_spec = zoo::get(&r.preset)
         .ok_or_else(|| format!("run '{}': unknown preset '{}'", r.id,
                                r.preset))?;
@@ -214,7 +221,12 @@ fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset,
                     },
                     ..Default::default()
                 };
-                let res = fit_observed(&mut net, tr, te, &cfg, &mut log);
+                let res = if ranks > 1 {
+                    run_dist_world(&mut net, tr, te, &cfg, ranks,
+                                   r.dropout, &mut log)?
+                } else {
+                    fit_observed(&mut net, tr, te, &cfg, &mut log)
+                };
                 (
                     res.final_test_acc,
                     res.epochs.last().map(|e| e.train_acc),
@@ -308,6 +320,16 @@ fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset,
                 _ => Json::Null,
             },
         ),
+        (
+            // distributed loopback world size actually used (nitro
+            // engine only; metric keys are rank-invariant — CI asserts
+            // that — so cross-rank comparisons strip this key too).
+            "ranks",
+            match r.engine {
+                EngineKind::Nitro => Json::Int(ranks as i64),
+                _ => Json::Null,
+            },
+        ),
         ("final_test_acc", Json::Float(final_test_acc)),
         ("final_train_acc", opt_f(final_train_acc)),
         ("diverged", Json::Bool(diverged)),
@@ -333,6 +355,86 @@ fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset,
         detail: Json::obj(detail),
         final_test_acc,
     })
+}
+
+/// Execute one nitro run as `ranks` loopback-TCP distributed ranks in a
+/// single process: rank 0 trains `net` on the calling thread and feeds
+/// `sink`; every other rank builds the identical network from
+/// `(net.spec, cfg.seed, dropout)` on its own thread and trains through
+/// its own [`dist::DistTrainer`]. Before returning rank 0's result,
+/// every rank's final weights are checked byte-identical to rank 0's —
+/// the distributed integer all-reduce is exact, so any divergence is a
+/// bug, not noise.
+fn run_dist_world(net: &mut Network, tr: &Dataset, te: &Dataset,
+                  cfg: &TrainConfig, ranks: usize, dropout: (f64, f64),
+                  sink: &mut dyn MetricSink)
+                  -> Result<TrainResult, String> {
+    use std::net::TcpListener;
+    let mut listeners = Vec::with_capacity(ranks);
+    let mut peers = Vec::with_capacity(ranks);
+    for _ in 0..ranks {
+        let l = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| format!("bind loopback rank listener: {e}"))?;
+        peers.push(l
+            .local_addr()
+            .map_err(|e| format!("listener addr: {e}"))?
+            .to_string());
+        listeners.push(l);
+    }
+    let dcfg = |rank: usize| dist::DistConfig {
+        rank,
+        peers: peers.clone(),
+        ..Default::default()
+    };
+    let spec = net.spec.clone();
+    let mut others: Vec<Network> = Vec::new();
+    let res = std::thread::scope(
+        |s| -> Result<TrainResult, String> {
+            let mut handles = Vec::new();
+            let mut it = listeners.into_iter();
+            let l0 = it.next().unwrap();
+            for (i, l) in it.enumerate() {
+                let rank = i + 1;
+                let rcfg = dcfg(rank);
+                let spec = spec.clone();
+                handles.push(s.spawn(
+                    move || -> Result<Network, String> {
+                        let mut n = Network::new(spec, cfg.seed);
+                        n.set_dropout(dropout.0, dropout.1);
+                        let mut dt = dist::DistTrainer::with_listener(
+                            &n, rcfg, l)?;
+                        dt.wait_connected(5_000);
+                        fit_dist(&mut n, tr, te, cfg, &mut dt,
+                                 &mut NullSink);
+                        Ok(n)
+                    },
+                ));
+            }
+            let mut dt =
+                dist::DistTrainer::with_listener(net, dcfg(0), l0)?;
+            dt.wait_connected(5_000);
+            let res = fit_dist(net, tr, te, cfg, &mut dt, sink);
+            for h in handles {
+                others.push(h.join().map_err(
+                    |_| "dist rank thread panicked".to_string())??);
+            }
+            Ok(res)
+        },
+    )?;
+    for (i, n) in others.iter().enumerate() {
+        for ((name, w0), (_, wr)) in
+            net.weights().iter().zip(n.weights())
+        {
+            if w0.data != wr.data {
+                return Err(format!(
+                    "dist rank {}: weight {name} diverged from rank 0 \
+                     (the integer all-reduce must be exact)",
+                    i + 1
+                ));
+            }
+        }
+    }
+    Ok(res)
 }
 
 /// File-name-safe form of a run id (`mlp1/mnist` -> `mlp1-mnist`).
@@ -383,7 +485,7 @@ mod tests {
         for row in rows {
             for key in ["id", "engine", "final_test_acc", "wall_secs",
                         "diverged", "seed", "hyper", "scheduler",
-                        "replicas"] {
+                        "replicas", "ranks"] {
                 assert!(row.get(key).is_some(), "row missing '{key}'");
             }
             let acc = row.req("final_test_acc").unwrap().as_f64().unwrap();
@@ -400,5 +502,49 @@ mod tests {
         let epochs = detail.req("epoch_metrics").unwrap().as_array().unwrap();
         assert_eq!(epochs.len(), 1);
         assert!(epochs[0].get("head_loss").is_some());
+    }
+
+    /// `--ranks 2` (loopback distributed world) must leave every metric
+    /// key untouched relative to the single-rank run — the same
+    /// invariance CI asserts for schedulers and replicas, here enforced
+    /// through the in-runner world (which also byte-compares final
+    /// weights across ranks internally).
+    #[test]
+    fn ranks_world_is_metric_identical() {
+        let spec = ExperimentSpec::load_builtin("smoke").unwrap();
+        let dir = std::env::temp_dir().join("nitro_runner_ranks_test");
+        let dir = dir.to_str().unwrap().to_string();
+        let run = |ranks: Option<usize>, sub: &str| {
+            let opts = RunnerOpts {
+                epochs: 1,
+                ranks,
+                out_dir: format!("{dir}/{sub}/results"),
+                bench_dir: format!("{dir}/{sub}"),
+                ..Default::default()
+            };
+            execute(&spec, &opts).unwrap()
+        };
+        let solo = run(None, "r1");
+        let world = run(Some(2), "r2");
+        let nitro_rows = |b: &Json| -> Vec<Json> {
+            b.req("rows")
+                .unwrap()
+                .as_array()
+                .unwrap()
+                .iter()
+                .filter(|r| r.req("engine").unwrap().as_str()
+                    == Some("nitro"))
+                .cloned()
+                .collect()
+        };
+        let (a, b) = (nitro_rows(&solo), nitro_rows(&world));
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].req("ranks").unwrap().as_i64(), Some(2));
+        for key in ["final_test_acc", "final_train_acc", "diverged"] {
+            assert_eq!(a[0].req(key).unwrap(), b[0].req(key).unwrap(),
+                       "'{key}' must be rank-invariant");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

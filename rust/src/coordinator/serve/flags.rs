@@ -52,6 +52,10 @@ pub const TABLE: &[FlagDef] = &[
         "shed requests whose estimated queue wait exceeds this budget \
          (0 = never shed)",
         SERVE),
+    opt("io-timeout-ms", "30000",
+        "read/write timeout per TCP connection; a stalled client is \
+         dropped and its handler reaped (0 = never time out)",
+        SERVE),
     flag("reload-on-sighup",
          "hot-reload every checkpoint from its path on SIGHUP", SERVE),
     opt("out", "",
@@ -93,6 +97,7 @@ mod tests {
         let p = command("serve", "x", SERVE).parse(&[]).unwrap();
         assert_eq!(p.get_usize("max-batch").unwrap(), 64);
         assert_eq!(p.get_f64("queue-budget-ms").unwrap(), 100.0);
+        assert_eq!(p.get_u64("io-timeout-ms").unwrap(), 30_000);
         assert!(!p.has("reload-on-sighup"));
         // loadgen does not know serve's flags and vice versa
         assert!(command("loadgen", "x", LOADGEN)

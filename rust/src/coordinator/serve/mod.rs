@@ -42,11 +42,6 @@ pub use batcher::{BatchClient, MicroBatcher, ShardedBatcher};
 pub use registry::{ModelRegistry, ModelStats};
 pub use shed::ShardState;
 pub use wire::{ErrorKind, ServeError};
-// The v0 response builders stay exported for out-of-tree v0 clients but
-// are deprecated: v0 acceptance and these helpers go away together
-// (removal note in README, Serving).
-#[allow(deprecated)]
-pub use wire::{err_response_v0, ok_response_v0};
 
 use crate::nn::{InferScratch, Network};
 use crate::tensor::ITensor;
@@ -181,6 +176,13 @@ pub struct ServeConfig {
     /// estimated queue wait on the shard exceeds this. 0 disables
     /// shedding.
     pub queue_budget_us: u64,
+    /// Per-socket read/write timeout on accepted TCP connections. A
+    /// client that opens a connection and then stalls mid-line (the
+    /// slowloris pattern) would otherwise pin a handler thread forever —
+    /// the blocking `read_until` never returns. 0 disables the timeout
+    /// (stdio serving and in-process batcher clients are unaffected
+    /// either way).
+    pub io_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -191,6 +193,7 @@ impl Default for ServeConfig {
             max_request_samples: 4096,
             shards: 1,
             queue_budget_us: 0,
+            io_timeout_ms: 30_000,
         }
     }
 }
@@ -211,6 +214,7 @@ pub struct ServeConfigBuilder {
     max_request_samples: usize,
     shards: usize,
     queue_budget_ms: f64,
+    io_timeout_ms: u64,
 }
 
 impl Default for ServeConfigBuilder {
@@ -222,6 +226,7 @@ impl Default for ServeConfigBuilder {
             max_request_samples: d.max_request_samples,
             shards: d.shards,
             queue_budget_ms: d.queue_budget_us as f64 / 1000.0,
+            io_timeout_ms: d.io_timeout_ms,
         }
     }
 }
@@ -250,6 +255,12 @@ impl ServeConfigBuilder {
 
     pub fn queue_budget_ms(mut self, v: f64) -> Self {
         self.queue_budget_ms = v;
+        self
+    }
+
+    /// 0 = never time out (pre-timeout behavior; trusted networks only).
+    pub fn io_timeout_ms(mut self, v: u64) -> Self {
+        self.io_timeout_ms = v;
         self
     }
 
@@ -292,12 +303,20 @@ impl ServeConfigBuilder {
                 self.queue_budget_ms
             ));
         }
+        if self.io_timeout_ms > 3_600_000 {
+            return Err(format!(
+                "--io-timeout-ms must be at most 3600000 (1h; 0 \
+                 disables), got {}",
+                self.io_timeout_ms
+            ));
+        }
         Ok(ServeConfig {
             max_batch: self.max_batch,
             max_wait_us: self.max_wait_us,
             max_request_samples: self.max_request_samples,
             shards,
             queue_budget_us: (self.queue_budget_ms * 1000.0) as u64,
+            io_timeout_ms: self.io_timeout_ms,
         })
     }
 }
@@ -607,6 +626,15 @@ fn accept_loop(listener: std::net::TcpListener, ctx: Arc<ServeContext>,
                 // accepted sockets inherit the listener's nonblocking
                 // mode on some platforms; handlers want blocking reads
                 let _ = stream.set_nonblocking(false);
+                if ctx.cfg.io_timeout_ms > 0 {
+                    // bound every blocking read/write: a connection
+                    // that stalls mid-line times out, the handler's
+                    // read errors, the thread exits and is reaped —
+                    // slowloris cannot pin handler threads
+                    let t = Duration::from_millis(ctx.cfg.io_timeout_ms);
+                    let _ = stream.set_read_timeout(Some(t));
+                    let _ = stream.set_write_timeout(Some(t));
+                }
                 let client = ctx.batcher.client(conn_id);
                 conn_id = conn_id.wrapping_add(1);
                 let cctx = ctx.clone();
@@ -1373,6 +1401,53 @@ mod tests {
     }
 
     #[test]
+    fn tcp_stalled_connection_times_out_and_is_reaped() {
+        use std::io::{BufRead, BufReader, Write};
+        let (path, _) = saved_model("mlp1-mini", 45, "stall");
+        let reg = Arc::new(ModelRegistry::from_paths(&path).unwrap());
+        let cfg = ServeConfig::builder()
+            .max_wait_us(0)
+            .io_timeout_ms(60)
+            .build()
+            .unwrap();
+        let srv = spawn_tcp(reg, cfg, "127.0.0.1:0", false).unwrap();
+        let stats = srv.stats();
+        // a slowloris client: opens the connection, sends a partial
+        // line, never completes it, and never closes its end
+        let mut stalled =
+            std::net::TcpStream::connect(srv.addr()).unwrap();
+        stalled.write_all(b"{\"id\": 1, \"inp").unwrap();
+        // without socket timeouts the handler blocks in read_until
+        // forever; with them the read errors and the thread exits
+        let t0 = std::time::Instant::now();
+        loop {
+            if stats.live_handlers.load(Ordering::Relaxed) == 0
+                && stats.reaped.load(Ordering::Relaxed) >= 1
+            {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "stalled handler was not dropped and reaped"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // the server still answers new, well-behaved connections
+        let stream = std::net::TcpStream::connect(srv.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer
+            .write_all(b"{\"id\": 2, \"input\": [1]}\n")
+            .unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(resp.contains("error"), "wrong sample size: {resp}");
+        drop(stalled);
+        srv.shutdown();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn config_builder_validates_ranges() {
         // defaults build and equal ServeConfig::default()
         let d = ServeConfig::default();
@@ -1382,6 +1457,7 @@ mod tests {
         assert_eq!(b.max_request_samples, d.max_request_samples);
         assert_eq!(b.shards, d.shards);
         assert_eq!(b.queue_budget_us, d.queue_budget_us);
+        assert_eq!(b.io_timeout_ms, d.io_timeout_ms);
         // unit conversion: ms (CLI) -> us (config)
         let c = ServeConfig::builder().queue_budget_ms(2.5).build()
             .unwrap();
@@ -1403,6 +1479,8 @@ mod tests {
              "--queue-budget-ms"),
             (ServeConfig::builder().queue_budget_ms(f64::NAN).build(),
              "--queue-budget-ms"),
+            (ServeConfig::builder().io_timeout_ms(3_600_001).build(),
+             "--io-timeout-ms"),
         ] {
             let e = err.unwrap_err();
             assert!(e.contains(flag), "{e} should mention {flag}");

@@ -11,6 +11,10 @@
 //! shape — string `"error"`, no `"v"`/`"model_version"` keys — with a
 //! one-time deprecation note on stderr (see `handle_line`). Control ops
 //! are v1-only: v0 never had them, so there is no legacy shape to honor.
+//! The once-public v0 response builders (`ok_response_v0` /
+//! `err_response_v0`) have been removed as announced; the legacy shapes
+//! live only inside [`ok_response`] / [`err_response`]'s v0 dispatch
+//! now, and the next step of the deprecation drops v0 acceptance too.
 
 use crate::tensor::ITensor;
 use crate::util::jsonio::Json;
@@ -234,20 +238,10 @@ pub fn ok_response(v: i64, id: Json, model: &str, model_version: u64,
         fields.push(("model_version", Json::Int(model_version as i64)));
         Json::obj(fields)
     } else {
-        #[allow(deprecated)]
-        ok_response_v0(id, model, y)
+        // v0 success shape: no "v", no "model_version" — answered only
+        // to bare legacy lines (no "v" key in the request)
+        Json::obj(predict_fields(id, model, y))
     }
-}
-
-/// v0 success shape: no `"v"`, no `"model_version"`. Only bare legacy
-/// lines (no `"v"` key) are answered this way.
-#[deprecated(
-    note = "the v0 wire shape is legacy; send \"v\": 1 envelopes and \
-            use ok_response — v0 acceptance and this helper will be \
-            removed together (see README, Serving)"
-)]
-pub fn ok_response_v0(id: Json, model: &str, y: &ITensor) -> Json {
-    Json::obj(predict_fields(id, model, y))
 }
 
 /// Error response in the request's protocol shape: v1 carries a
@@ -264,20 +258,10 @@ pub fn err_response(v: i64, id: Json, e: &ServeError) -> Json {
             ])),
         ])
     } else {
-        #[allow(deprecated)]
-        err_response_v0(id, e)
+        // v0 error shape: a flat "error" string with the machine code
+        // as a "code: " prefix instead of v1's structured object
+        Json::obj(vec![("id", id), ("error", Json::Str(e.to_string()))])
     }
-}
-
-/// v0 error shape: a flat `"error"` string with the machine code as a
-/// `"code: "` prefix instead of v1's structured object.
-#[deprecated(
-    note = "the v0 wire shape is legacy; send \"v\": 1 envelopes and \
-            use err_response — v0 acceptance and this helper will be \
-            removed together (see README, Serving)"
-)]
-pub fn err_response_v0(id: Json, e: &ServeError) -> Json {
-    Json::obj(vec![("id", id), ("error", Json::Str(e.to_string()))])
 }
 
 #[cfg(test)]
@@ -357,17 +341,6 @@ mod tests {
         assert_eq!(e1.req("error").unwrap().req("message").unwrap()
                        .as_str(),
                    Some("queue full"));
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_v0_helpers_match_the_v0_dispatch_shape() {
-        let y = ITensor::from_vec(&[1, 2], vec![4, 1]);
-        assert_eq!(ok_response_v0(Json::Int(3), "m", &y),
-                   ok_response(0, Json::Int(3), "m", 9, &y));
-        let e = ServeError::internal("boom");
-        assert_eq!(err_response_v0(Json::Null, &e),
-                   err_response(0, Json::Null, &e));
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //!   "fixed_lr": false,                    // disable plateau LR scheduling
 //!   "scheduler": "pipelined",             // LES scheduler (metric-identical)
 //!   "replicas": 1,                        // data-parallel replicas (ditto)
+//!   "ranks": 1,                           // loopback dist ranks (ditto)
 //!   "fp_lr": 0.001,                       // Adam LR for the FP baselines
 //!   "fp_epochs_div": 1,                   // FP baselines run epochs/div
 //!   "defaults": {"batch": 64, "hyper": {...}, "dropout": [0.0, 0.0]},
@@ -293,6 +294,12 @@ pub struct ExperimentSpec {
     /// `scheduler`, a benchmarking/CI cross-check knob, not a modelling
     /// one.
     pub replicas: usize,
+    /// Distributed world size for the nitro engine (`"ranks"` key, ≥ 1,
+    /// default 1): the run executes as `ranks` loopback-TCP
+    /// `train::dist` ranks, one thread each, and must stay
+    /// metric-identical to `ranks = 1` (the integer all-reduce is
+    /// exact). A cross-check knob like `scheduler` and `replicas`.
+    pub ranks: usize,
     pub fp_lr: f64,
     pub fp_epochs_div: usize,
     /// Batch size for the FP baselines (the paper's baselines always ran
@@ -375,6 +382,11 @@ impl ExperimentSpec {
                 Some(0) => {
                     return Err("replicas: must be >= 1".to_string())
                 }
+                Some(n) => n,
+            },
+            ranks: match opt_usize(j, "ranks")? {
+                None => 1,
+                Some(0) => return Err("ranks: must be >= 1".to_string()),
                 Some(n) => n,
             },
             fp_lr: j.f64_or("fp_lr", 1e-3),
@@ -484,6 +496,7 @@ impl ExperimentSpec {
                         fixed_lr: self.fixed_lr,
                         scheduler: self.scheduler,
                         replicas: self.replicas,
+                        ranks: self.ranks,
                         fp_lr: self.fp_lr,
                         paper_acc: run.paper_acc,
                         paper_note: run.paper_note.clone(),
@@ -530,6 +543,9 @@ pub struct ResolvedRun {
     /// Data-parallel replica count for the nitro engine
     /// (metric-identical for every value; see `train::replica`).
     pub replicas: usize,
+    /// Distributed loopback world size for the nitro engine
+    /// (metric-identical for every value; see `train::dist`).
+    pub ranks: usize,
     pub fp_lr: f64,
     pub paper_acc: Option<f64>,
     pub paper_note: Option<String>,
@@ -653,6 +669,22 @@ mod tests {
         let runs = spec.resolve(Scale::Quick, None, 0).unwrap();
         assert!(runs.iter().all(|r| r.replicas == 4));
         for bad in [r#""replicas": 0,"#, r#""replicas": -2,"#] {
+            assert!(
+                ExperimentSpec::parse(&Json::parse(&base(bad)).unwrap())
+                    .is_err(),
+                "{bad} must be rejected"
+            );
+        }
+        // "ranks" follows the same contract
+        assert_eq!(spec.ranks, 1, "default");
+        let spec = ExperimentSpec::parse(
+            &Json::parse(&base(r#""ranks": 3,"#)).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.ranks, 3);
+        let runs = spec.resolve(Scale::Quick, None, 0).unwrap();
+        assert!(runs.iter().all(|r| r.ranks == 3));
+        for bad in [r#""ranks": 0,"#, r#""ranks": -1,"#] {
             assert!(
                 ExperimentSpec::parse(&Json::parse(&base(bad)).unwrap())
                     .is_err(),

@@ -20,8 +20,10 @@ use nitro::coordinator::serve::{self, flags as serveflags, loadgen,
 use nitro::coordinator::spec::ExperimentSpec;
 use nitro::data::loader;
 use nitro::nn::{zoo, Hyper, Network};
-use nitro::train::{checkpoint, evaluate, fit, Scheduler, TrainConfig};
+use nitro::train::{checkpoint, dist, evaluate, fit, fit_dist, NullSink,
+                   Scheduler, TrainConfig};
 use nitro::util::cli::Command;
+use nitro::util::fault::FaultPlan;
 use nitro::util::rng::Pcg32;
 
 fn main() {
@@ -54,7 +56,10 @@ const USAGE: &str = "nitro — NITRO-D: native integer-only CNN training
 Usage: nitro <subcommand> [options]
 
 Subcommands:
-  train       train a preset (see `nitro train --help`)
+  train       train a preset (see `nitro train --help`); supports
+              multi-process --distributed ranks over TCP with crash-safe
+              --checkpoint / --resume and deterministic --fault-plan
+              injection
   eval        evaluate a checkpoint on a dataset
   serve       serve NITRO1 checkpoints: sharded micro-batched integer
               inference over JSON lines (stdin/stdout or --listen TCP),
@@ -102,6 +107,24 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("replicas", "1",
              "data-parallel replica count (bit-identical to 1: integer \
               gradient all-reduce is exact)")
+        .flag("distributed",
+              "run as one rank of a multi-process group over TCP \
+               (needs --peers); byte-identical to --replicas <world>")
+        .opt("rank", "0", "this process's rank under --distributed")
+        .opt("peers", "",
+             "comma-separated host:port list, one entry per rank, \
+              identical on every rank (rank r binds peers[r])")
+        .opt("checkpoint", "",
+             "crash-safe checkpoint path, rewritten atomically every \
+              --checkpoint-every epochs (fsynced file + directory)")
+        .opt("checkpoint-every", "0",
+             "periodic checkpoint cadence in epochs (0 = off)")
+        .flag("resume",
+              "reload weights + training state from --checkpoint and \
+               finish the run byte-identically to an uninterrupted one")
+        .opt("fault-plan", "",
+             "deterministic fault injection for --distributed: inline \
+              JSON rules or a file path (env NITRO_FAULT when unset)")
         .flag("sequential", "shorthand for --scheduler sequential")
         .flag("quiet", "suppress per-epoch logs");
     let p = match cmd.parse(argv) {
@@ -133,6 +156,20 @@ fn cmd_train(argv: &[String]) -> i32 {
                 );
                 let mut net = Network::new(spec, seed);
                 net.set_dropout(p.get_f64("p-c")?, p.get_f64("p-l")?);
+                let ckpt = p.get("checkpoint");
+                let resume = if p.has("resume") {
+                    if ckpt.is_empty() {
+                        return Err("--resume needs --checkpoint".into());
+                    }
+                    let st = checkpoint::load_state(ckpt)?.ok_or_else(
+                        || format!("{ckpt}: no training state to \
+                                    resume from"))?;
+                    checkpoint::load(&mut net, ckpt)?;
+                    println!("resuming at epoch {}", st.epoch);
+                    Some(st)
+                } else {
+                    None
+                };
                 let cfg = TrainConfig {
                     epochs: p.get_usize("epochs")?,
                     batch: p.get_usize("batch")?,
@@ -149,9 +186,55 @@ fn cmd_train(argv: &[String]) -> i32 {
                         n => n,
                     },
                     verbose: !p.has("quiet"),
+                    resume,
+                    checkpoint_path: (!ckpt.is_empty())
+                        .then(|| ckpt.to_string()),
+                    checkpoint_every: p.get_usize("checkpoint-every")?,
                     ..Default::default()
                 };
-                let res = fit(&mut net, &tr, &te, &cfg);
+                let res = if p.has("distributed") {
+                    let fault = match p.get("fault-plan") {
+                        "" => FaultPlan::from_env()?.unwrap_or_default(),
+                        arg => FaultPlan::from_arg(arg)?,
+                    };
+                    let dcfg = dist::DistConfig {
+                        rank: p.get_usize("rank")?,
+                        peers: p
+                            .get("peers")
+                            .split(',')
+                            .map(|s| s.trim().to_string())
+                            .filter(|s| !s.is_empty())
+                            .collect(),
+                        fault,
+                        // a CLI rank hit by an injected crash dies like
+                        // a real process: exit code 43, no cleanup
+                        crash_process: true,
+                        ..Default::default()
+                    };
+                    let rank = dcfg.rank;
+                    let world = dcfg.peers.len();
+                    let mut dt = dist::DistTrainer::new(&net, dcfg)?;
+                    println!("rank {rank}/{world} listening; \
+                              peers connecting...");
+                    dt.wait_connected(10_000);
+                    let res =
+                        fit_dist(&mut net, &tr, &te, &cfg, &mut dt,
+                                 &mut NullSink);
+                    let st = dt.stats();
+                    println!(
+                        "rank {rank}: remote shards {} solo {} \
+                         reconnects {} views {}",
+                        st.remote_shards_used, st.solo_shards,
+                        st.reconnects, st.view
+                    );
+                    res
+                } else {
+                    fit(&mut net, &tr, &te, &cfg)
+                };
+                if res.interrupted {
+                    return Err("training interrupted by injected \
+                                crash".to_string());
+                }
                 println!("final test accuracy: {:.2}%",
                          res.final_test_acc * 100.0);
                 let save = p.get("save");
@@ -288,6 +371,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
             .max_request_samples(p.get_usize("max-request")?)
             .shards(p.get_usize("shards")?)
             .queue_budget_ms(p.get_f64("queue-budget-ms")?)
+            .io_timeout_ms(p.get_u64("io-timeout-ms")?)
             .build()?;
         let sighup = p.has("reload-on-sighup");
         match p.get("listen") {
@@ -443,6 +527,9 @@ fn cmd_run_spec(argv: &[String]) -> i32 {
         .opt("replicas", "0",
              "override the spec's data-parallel replica count \
               (0 = spec default; metric-identical)")
+        .opt("ranks", "0",
+             "override the spec's loopback distributed world size \
+              (0 = spec default; metric-identical)")
         .opt("out-dir", "results", "directory for per-run records")
         .opt("bench-dir", ".", "directory for the aggregate BENCH json")
         .flag("verbose", "per-epoch trainer logs")
@@ -472,6 +559,10 @@ fn cmd_run_spec(argv: &[String]) -> i32 {
             epochs: p.get_usize("epochs")?,
             scheduler,
             replicas: match p.get_usize("replicas")? {
+                0 => None,
+                n => Some(n),
+            },
+            ranks: match p.get_usize("ranks")? {
                 0 => None,
                 n => Some(n),
             },

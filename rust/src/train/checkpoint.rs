@@ -12,17 +12,55 @@
 //! * [`load`] / [`load_network`] return `Err` on **every** malformed
 //!   input — truncation at any byte, oversized header length, bad JSON,
 //!   shape/spec mismatches, trailing bytes — and never panic.
-//! * [`save`] writes to a temp file in the target directory and
-//!   atomically renames it into place, so a checkpoint path always holds
-//!   either the previous complete model or the new one, never a torn
-//!   write.
+//! * [`save`] writes to a temp file in the target directory, fsyncs it,
+//!   atomically renames it into place, and fsyncs the directory, so a
+//!   checkpoint path always holds either the previous complete model or
+//!   the new one — never a torn write — **and** an `Ok` return means the
+//!   new bytes survive a power loss. (Rename alone is atomic against a
+//!   process crash but not durable: without `sync_all` on the file the
+//!   rename can land on disk before the data, leaving a zero-length or
+//!   stale "successful" checkpoint after a machine crash — exactly the
+//!   file elastic rejoin would then try to resume from.)
+//!
+//! Mid-run checkpoints carry a `train_state` header key
+//! ([`save_with_state`] / [`load_state`]): the completed-epoch counter
+//! and the plateau scheduler's history. Readers that do not ask for it
+//! ignore unknown header keys, so stateful checkpoints stay loadable
+//! everywhere a plain one is.
 
 use crate::nn::{zoo, Network};
+use crate::optim::PlateauState;
 use crate::util::jsonio::Json;
 
 const MAGIC: &[u8] = b"NITRO1\n";
 
+/// Training progress stored in mid-run checkpoints: everything `fit`
+/// needs to continue a run exactly where it stopped (the weights are the
+/// payload; the RNG streams are recomputed by replaying their draw
+/// counts from the epoch number).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrainState {
+    /// Epochs fully completed; resume starts at this epoch index.
+    pub epoch: usize,
+    /// Plateau LR scheduler history (best accuracy seen, staleness) —
+    /// history-dependent, so it cannot be reconstructed from the epoch
+    /// number alone.
+    pub plateau: PlateauState,
+}
+
 pub fn save(net: &Network, path: &str) -> Result<(), String> {
+    save_impl(net, path, None)
+}
+
+/// [`save`] plus a `train_state` header key — the periodic mid-run
+/// checkpoint form used for crash recovery and elastic rejoin.
+pub fn save_with_state(net: &Network, path: &str, state: &TrainState)
+                       -> Result<(), String> {
+    save_impl(net, path, Some(state))
+}
+
+fn save_impl(net: &Network, path: &str, state: Option<&TrainState>)
+             -> Result<(), String> {
     let weights = net.weights();
     let mut names = Vec::new();
     let mut shapes = Vec::new();
@@ -32,12 +70,15 @@ pub fn save(net: &Network, path: &str) -> Result<(), String> {
             &t.shape.iter().map(|&d| d as i64).collect::<Vec<_>>(),
         ));
     }
-    let header = Json::obj(vec![
+    let mut fields = vec![
         ("spec", Json::Str(net.spec.name.clone())),
         ("tensors", Json::Array(names)),
         ("shapes", Json::Array(shapes)),
-    ])
-    .dump();
+    ];
+    if let Some(s) = state {
+        fields.push(("train_state", state_to_json(s)));
+    }
+    let header = Json::obj(fields).dump();
     let mut buf = Vec::new();
     buf.extend_from_slice(MAGIC);
     buf.extend((header.len() as u32).to_le_bytes());
@@ -50,12 +91,66 @@ pub fn save(net: &Network, path: &str) -> Result<(), String> {
     atomic_write(path, &buf)
 }
 
+fn state_to_json(s: &TrainState) -> Json {
+    Json::obj(vec![
+        ("epoch", Json::Int(s.epoch as i64)),
+        ("gamma_inv", Json::Int(s.plateau.gamma_inv)),
+        ("seen", Json::Int(s.plateau.seen as i64)),
+        // the pre-first-eval best is -inf, which JSON cannot carry;
+        // Float dumps it as null and the parser maps null back
+        ("best", Json::Float(s.plateau.best)),
+        ("stale", Json::Int(s.plateau.stale as i64)),
+        ("reductions", Json::Int(s.plateau.reductions as i64)),
+    ])
+}
+
+fn state_from_json(j: &Json, path: &str) -> Result<TrainState, String> {
+    let int = |key: &str| -> Result<i64, String> {
+        j.req(key)
+            .map_err(|e| format!("{path}: train_state: {e}"))?
+            .as_i64()
+            .filter(|&v| v >= 0)
+            .ok_or_else(|| {
+                format!(
+                    "{path}: train_state: '{key}' is not a non-negative \
+                     integer"
+                )
+            })
+    };
+    let best = match j.req("best")
+        .map_err(|e| format!("{path}: train_state: {e}"))?
+    {
+        Json::Null => f64::NEG_INFINITY,
+        v => v.as_f64().ok_or_else(|| {
+            format!("{path}: train_state: 'best' is not a number")
+        })?,
+    };
+    Ok(TrainState {
+        epoch: int("epoch")? as usize,
+        plateau: PlateauState {
+            gamma_inv: int("gamma_inv")?,
+            seen: int("seen")? as usize,
+            best,
+            stale: int("stale")? as usize,
+            reductions: int("reductions")? as usize,
+        },
+    })
+}
+
 /// Write `bytes` to a temp file next to `path` and rename it into place.
 /// A crash mid-write leaves the previous file untouched (rename on the
 /// same filesystem is atomic); the temp name carries the pid plus a
 /// process-wide sequence number so concurrent writers — other processes
 /// *and* other threads of this one — never share a temp file.
+///
+/// Durability: the temp file is `sync_all`ed before the rename and the
+/// parent directory is fsynced after it, so once this returns `Ok` the
+/// new content survives a power loss — without the file fsync the
+/// rename may hit disk before the data (a crash then leaves a
+/// zero-length or stale file under the final name), and without the
+/// directory fsync the rename itself may be lost.
 fn atomic_write(path: &str, bytes: &[u8]) -> Result<(), String> {
+    use std::io::Write;
     use std::sync::atomic::{AtomicU64, Ordering};
     static SEQ: AtomicU64 = AtomicU64::new(0);
     let target = std::path::Path::new(path);
@@ -72,12 +167,28 @@ fn atomic_write(path: &str, bytes: &[u8]) -> Result<(), String> {
         std::process::id(),
         SEQ.fetch_add(1, Ordering::Relaxed)
     ));
-    std::fs::write(&tmp, bytes)
-        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    let write_synced = || -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()
+    };
+    if let Err(e) = write_synced() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(format!("write {}: {e}", tmp.display()));
+    }
     std::fs::rename(&tmp, target).map_err(|e| {
         let _ = std::fs::remove_file(&tmp);
         format!("rename {} -> {path}: {e}", tmp.display())
-    })
+    })?;
+    // persist the directory entry; non-unix platforms cannot open a
+    // directory for fsync, so the guarantee there is file-data only
+    #[cfg(unix)]
+    {
+        std::fs::File::open(dir)
+            .and_then(|d| d.sync_all())
+            .map_err(|e| format!("fsync dir {}: {e}", dir.display()))?;
+    }
+    Ok(())
 }
 
 /// Validated view of a checkpoint's header: the spec it was saved from,
@@ -86,6 +197,7 @@ struct Header {
     spec_name: String,
     shapes: Vec<Vec<usize>>,
     payload_off: usize,
+    state: Option<TrainState>,
 }
 
 /// Parse and bounds-check everything up to the payload. Every exit on
@@ -130,7 +242,21 @@ fn parse_header(buf: &[u8], path: &str) -> Result<Header, String> {
         .map(|s| s.usize_vec())
         .collect::<Result<Vec<_>, _>>()
         .map_err(|e| format!("{path}: bad shape entry: {e}"))?;
-    Ok(Header { spec_name, shapes, payload_off: hend })
+    // optional (plain checkpoints omit it); present-but-malformed is an
+    // error — a half-parsed resume state must never silently load
+    let state = match h.get("train_state") {
+        None => None,
+        Some(j) => Some(state_from_json(j, path)?),
+    };
+    Ok(Header { spec_name, shapes, payload_off: hend, state })
+}
+
+/// Read the `train_state` header of a checkpoint saved by
+/// [`save_with_state`]; `Ok(None)` for a plain checkpoint. Only the
+/// header is validated — pair with [`load`] to restore the weights.
+pub fn load_state(path: &str) -> Result<Option<TrainState>, String> {
+    let buf = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+    Ok(parse_header(&buf, path)?.state)
 }
 
 /// Fill `net`'s weights from the checkpoint payload, validating every
@@ -428,6 +554,96 @@ mod tests {
         bytes.extend_from_slice(&[0u8; 7]);
         let err = load_bytes(&bytes).unwrap_err();
         assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn train_state_roundtrips_including_neg_infinity_best() {
+        use crate::optim::PlateauState;
+        let net = Network::new(zoo::get("mlp1-mini").unwrap(), 5);
+        let dir = tmpdir("nitro_ckpt_state");
+        let path = dir.join("s.ckpt");
+        let path_s = path.to_str().unwrap();
+        // a plain checkpoint has no state
+        save(&net, path_s).unwrap();
+        assert_eq!(load_state(path_s).unwrap(), None);
+        // exact round-trip of a mid-run state, including a best that is
+        // a non-trivial f64 and one that is -inf (pre-first-eval)
+        for best in [0.123456789012345, f64::NEG_INFINITY] {
+            let state = TrainState {
+                epoch: 7,
+                plateau: PlateauState {
+                    gamma_inv: 1536,
+                    seen: 7,
+                    best,
+                    stale: 2,
+                    reductions: 1,
+                },
+            };
+            save_with_state(&net, path_s, &state).unwrap();
+            assert_eq!(load_state(path_s).unwrap(), Some(state));
+        }
+        // a stateful checkpoint stays loadable through the plain paths
+        let mut net2 = Network::new(zoo::get("mlp1-mini").unwrap(), 6);
+        load(&mut net2, path_s).unwrap();
+        let net3 = load_network(path_s).unwrap();
+        for ((_, a), (_, b)) in net.weights().iter().zip(net3.weights()) {
+            assert_eq!(a, &b);
+        }
+    }
+
+    #[test]
+    fn malformed_train_state_rejected_not_ignored() {
+        // a present-but-broken train_state must fail the load: resuming
+        // from a half-parsed state would silently fork the run
+        let net = Network::new(zoo::get("mlp1-mini").unwrap(), 5);
+        let dir = tmpdir("nitro_ckpt_state_bad");
+        let path = dir.join("bad.ckpt");
+        let path_s = path.to_str().unwrap();
+        let state = TrainState {
+            epoch: 3,
+            plateau: crate::optim::PlateauState {
+                gamma_inv: 512,
+                seen: 3,
+                best: 0.5,
+                stale: 0,
+                reductions: 0,
+            },
+        };
+        save_with_state(&net, path_s, &state).unwrap();
+        let mut full = std::fs::read(&path).unwrap();
+        // corrupt the state in place: "epoch" -> "epxch" keeps every
+        // length intact so only the train_state parse can fail
+        let pos = full
+            .windows(5)
+            .position(|w| w == b"epoch")
+            .expect("header should contain 'epoch'");
+        full[pos..pos + 5].copy_from_slice(b"epxch");
+        std::fs::write(&path, &full).unwrap();
+        let err = load_state(path_s).unwrap_err();
+        assert!(err.contains("train_state"), "{err}");
+        let mut net2 = Network::new(zoo::get("mlp1-mini").unwrap(), 6);
+        assert!(load(&mut net2, path_s).is_err());
+    }
+
+    #[test]
+    fn save_error_paths_are_clean_errors() {
+        let net = Network::new(zoo::get("mlp1-mini").unwrap(), 1);
+        // target directory does not exist: create of the temp file fails
+        let err = save(&net, "does/not/exist/m.ckpt").unwrap_err();
+        assert!(err.contains("does/not/exist"), "{err}");
+        // target "directory" is a file: rename (or temp create) fails and
+        // the temp file must not survive
+        let dir = tmpdir("nitro_ckpt_saveerr");
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, b"file, not dir").unwrap();
+        let inside = blocker.join("m.ckpt");
+        assert!(save(&net, inside.to_str().unwrap()).is_err());
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
     }
 
     #[test]

@@ -1,0 +1,1545 @@
+//! Fault-tolerant cross-process distributed training: a rank-per-process
+//! TCP integer all-reduce over the PR-5 gradient-export seam
+//! ([`GradSet`] / [`accumulate`]), byte-identical to the in-process
+//! [`super::replica::ReplicaTrainer`] on the same global batches.
+//!
+//! ## Why the network is never a correctness dependency
+//!
+//! Integer gradients widened to i64 make the all-reduce associative
+//! *and* commutative, and every rank runs the same deterministic fit
+//! loop (same dataset, same `Batcher` shuffle stream, same pre-drawn
+//! dropout masks). A shard's gradient is therefore a pure function of
+//! (weights, batch slice, masks) — all of which every rank already has.
+//! **Any rank can locally recompute any other rank's shard, bit for
+//! bit.** The wire exists only to avoid redundant compute: each rank
+//! computes its own shard, broadcasts it to all peers, and collects the
+//! rest. When a peer's shard does not arrive — dropped frame, stalled
+//! link, partition, dead process — the rank computes that shard itself
+//! after a bounded wait and folds it in the same fixed ascending-rank
+//! order. Every failure mode degrades to local compute with
+//! byte-identical results; fault handling changes *wall-clock time*,
+//! never *bits*.
+//!
+//! ## Topology and liveness
+//!
+//! The group is a symmetric full mesh with no leader. Each rank binds a
+//! listener at `peers[rank]` and runs one connector thread per peer
+//! that dials with capped exponential backoff plus deterministic
+//! jitter, performs a `Hello` handshake (magic, world size, rank), and
+//! then carries heartbeats. Liveness is per-peer receive recency: a
+//! peer silent for `peer_dead_ms` is considered dead and its shards are
+//! solo-computed without waiting. The alive-set is re-evaluated every
+//! step; a transition bumps the *view* counter — the coordinator-free
+//! ring re-formation: survivors simply stop waiting for the dead rank
+//! and keep stepping degraded. A restarted rank rebinds its address,
+//! replays from its checkpoint (it is *behind*, so it never waits for
+//! peers that are ahead — full-speed catch-up), and once its step
+//! counter meets the group's, frames flow again and the mesh is whole —
+//! elastic rejoin with zero coordination.
+//!
+//! ## Wire format (hostile-input hardened like `serve::wire`)
+//!
+//! Length-prefixed frames: `[u32 LE body_len][u8 type][u32 rank]
+//! [u64 step][payload]`. `Hello` carries a magic and the world size;
+//! `Grad` carries raw (un-halved) block/head losses, the correct count
+//! and the flat i64 gradient tensors; `Heartbeat` is the bare header.
+//! Readers enforce a frame-length cap computed from the network's own
+//! weight arity, and every count and tensor length in a `Grad` frame
+//! must match the local model exactly — a malformed, truncated or
+//! oversized frame drops the connection instead of the process.
+//!
+//! ## Fault injection
+//!
+//! All failure handling is driven through [`FaultPlan`]
+//! (`--fault-plan` / `NITRO_FAULT`): the connect and send seams consult
+//! [`FaultPlan::on_connect`] / [`FaultPlan::on_send`] (drop, delay,
+//! stall, partition), and the step boundary consults
+//! [`FaultPlan::crash_at`] — a process rank exits with
+//! [`fault::CRASH_EXIT_CODE`], an in-process test rank returns `None`
+//! from [`DistTrainer::step`]. The seam is sender-side: a rule
+//! `{rank: a, peer: b}` affects only `a → b` traffic, so a full
+//! bidirectional partition lists both direction rules.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::nn::{DropoutRngs, Hyper, Network, StepReport};
+use crate::tensor::{ITensor, LTensor};
+use crate::train::replica::{accumulate, apply_step, probe_out_sizes,
+                            shard_bounds, shard_grads, GradSet, ShardOut};
+use crate::util::fault::{self, FaultPlan, SendAction};
+use crate::util::rng::Pcg32;
+
+/// Configuration of one rank of a distributed training group.
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// This process's rank: an index into `peers`.
+    pub rank: usize,
+    /// `host:port` listener address of every rank, index = rank. The
+    /// world size is `peers.len()`; a single entry degenerates to
+    /// plain single-process training.
+    pub peers: Vec<String>,
+    /// Per-dial TCP connect timeout.
+    pub connect_timeout_ms: u64,
+    /// Initial re-dial backoff; doubles (with deterministic jitter) up
+    /// to `connect_backoff_max_ms`.
+    pub connect_backoff_ms: u64,
+    pub connect_backoff_max_ms: u64,
+    /// Read/write timeout on every peer socket (0 = none). A stalled
+    /// link errors out and the connection is re-dialed, exactly the
+    /// slowloris discipline the serving path applies.
+    pub io_timeout_ms: u64,
+    /// How long a step waits for a live, in-step peer's shard before
+    /// solo-computing it. Bounds the cost of any single fault.
+    pub step_wait_ms: u64,
+    /// Heartbeat cadence per outgoing connection.
+    pub heartbeat_ms: u64,
+    /// A peer silent for this long is dead: its shards are
+    /// solo-computed without waiting until it speaks again.
+    pub peer_dead_ms: u64,
+    /// Artificial per-step sleep (testing/elastic-rejoin demos: lets a
+    /// restarted rank catch up to a deliberately throttled group).
+    pub pace_ms: u64,
+    /// Deterministic fault schedule injected at the transport seam.
+    pub fault: FaultPlan,
+    /// `crash` rules call `process::exit(CRASH_EXIT_CODE)` when true
+    /// (the CLI); in-process harness ranks instead get `None` from
+    /// [`DistTrainer::step`] and unwind cleanly.
+    pub crash_process: bool,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            rank: 0,
+            peers: Vec::new(),
+            connect_timeout_ms: 1_000,
+            connect_backoff_ms: 50,
+            connect_backoff_max_ms: 2_000,
+            io_timeout_ms: 10_000,
+            step_wait_ms: 5_000,
+            heartbeat_ms: 500,
+            peer_dead_ms: 3_000,
+            pace_ms: 0,
+            fault: FaultPlan::default(),
+            crash_process: false,
+        }
+    }
+}
+
+/// Transport counters for observability and test assertions. All values
+/// are cumulative over the trainer's lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct DistStats {
+    /// Peer shards folded from received frames.
+    pub remote_shards_used: u64,
+    /// Peer shards recomputed locally (deadline, dead or lagging peer).
+    pub solo_shards: u64,
+    /// Frames for already-finished steps (late arrivals), discarded.
+    pub stale_frames: u64,
+    /// Successful re-dials after the first connect to a peer.
+    pub reconnects: u64,
+    /// Alive-set transitions observed (ring re-formations).
+    pub view: u64,
+}
+
+const MAGIC: u32 = 0x4e49_5452; // "NITR"
+const T_HELLO: u8 = 1;
+const T_GRAD: u8 = 2;
+const T_HB: u8 = 3;
+/// Frame header: type (1) + rank (4) + step (8).
+const HDR_LEN: usize = 13;
+/// Grad frames this far ahead of the current step are buffered for
+/// adoption; anything further out is discarded (bounded memory under a
+/// runaway peer).
+const FUTURE_WINDOW: u64 = 8;
+
+/// State shared between the training thread and the transport threads.
+struct Shared {
+    rank: usize,
+    world: usize,
+    plan: FaultPlan,
+    /// Flat length of every gradient tensor, `Network::weights()`
+    /// order — the exact arity a `Grad` frame must match.
+    lens: Vec<usize>,
+    nblocks: usize,
+    /// Hard cap on any frame body, derived from the model itself.
+    max_frame: usize,
+    /// Current training step, read by heartbeats and the fault seam.
+    step: AtomicU64,
+    shutdown: AtomicBool,
+    reconnects: AtomicU64,
+    /// Per-peer last-receive instant, ms since `start` (0 = never).
+    last_rx: Vec<AtomicU64>,
+    /// Highest step seen from each peer (frames and heartbeats).
+    peer_step: Vec<AtomicU64>,
+    /// Outgoing connection per peer; `None` while down (the connector
+    /// thread re-dials). Mutex-guarded so delayed-send threads and the
+    /// step broadcast can share it.
+    writers: Vec<Mutex<Option<TcpStream>>>,
+    start: Instant,
+}
+
+impl Shared {
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    /// Record traffic from `peer`: refresh liveness, advance its step
+    /// high-water mark.
+    fn touch(&self, peer: usize, step: u64) {
+        self.last_rx[peer].store(self.now_ms().max(1), Ordering::Relaxed);
+        self.peer_step[peer].fetch_max(step, Ordering::Relaxed);
+    }
+
+    fn alive(&self, peer: usize, dead_ms: u64) -> bool {
+        let t = self.last_rx[peer].load(Ordering::Relaxed);
+        t > 0 && self.now_ms().saturating_sub(t) <= dead_ms
+    }
+}
+
+// ---------------------------------------------------------------- codec
+
+fn put_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_i64(v: &mut Vec<u8>, x: i64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn frame(body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+fn header(t: u8, rank: usize, step: u64, cap: usize) -> Vec<u8> {
+    let mut b = Vec::with_capacity(HDR_LEN + cap);
+    b.push(t);
+    put_u32(&mut b, rank as u32);
+    put_u64(&mut b, step);
+    b
+}
+
+fn encode_hello(rank: usize, world: usize) -> Vec<u8> {
+    let mut b = header(T_HELLO, rank, 0, 8);
+    put_u32(&mut b, MAGIC);
+    put_u32(&mut b, world as u32);
+    frame(b)
+}
+
+fn encode_hb(rank: usize, step: u64) -> Vec<u8> {
+    frame(header(T_HB, rank, step, 0))
+}
+
+fn encode_grad(rank: usize, step: u64, out: &ShardOut) -> Vec<u8> {
+    let cap: usize =
+        out.grads.tensors.iter().map(|t| 4 + 8 * t.data.len()).sum();
+    let mut b = header(T_GRAD, rank, step, cap + 64);
+    put_u32(&mut b, out.block_loss_raw.len() as u32);
+    for &l in &out.block_loss_raw {
+        put_i64(&mut b, l);
+    }
+    put_i64(&mut b, out.head_loss_raw);
+    put_u64(&mut b, out.correct as u64);
+    put_u32(&mut b, out.grads.tensors.len() as u32);
+    for t in &out.grads.tensors {
+        put_u32(&mut b, t.data.len() as u32);
+        for &g in &t.data {
+            put_i64(&mut b, g);
+        }
+    }
+    frame(b)
+}
+
+/// Largest legal `Grad` body for a model with `nblocks` blocks and
+/// gradient tensor lengths `lens` — the reader's frame cap.
+fn grad_frame_len(nblocks: usize, lens: &[usize]) -> usize {
+    HDR_LEN + 4 + 8 * nblocks + 8 + 8 + 4
+        + lens.iter().map(|&n| 4 + 8 * n).sum::<usize>()
+}
+
+/// A peer's shard as it crosses the wire; re-tensored against the
+/// local weight shapes on adoption.
+struct WireShard {
+    block_loss_raw: Vec<i64>,
+    head_loss_raw: i64,
+    correct: u64,
+    tensors: Vec<Vec<i64>>,
+}
+
+enum Msg {
+    Hello { rank: usize },
+    Grad { rank: usize, step: u64, shard: WireShard },
+    Heartbeat { rank: usize, step: u64 },
+}
+
+/// Bounds-checked little-endian cursor: every read is validated, so a
+/// truncated or padded frame is an error, never a panic.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.b.len() - self.i < n {
+            return Err("truncated frame".into());
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.i != self.b.len() {
+            return Err("trailing bytes after frame".into());
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame body. Every count is validated against the local
+/// model (`world`, `nblocks`, tensor `lens`): a frame that does not
+/// match exactly is rejected and the connection is dropped.
+fn decode(buf: &[u8], world: usize, nblocks: usize, lens: &[usize])
+          -> Result<Msg, String> {
+    let mut c = Cur { b: buf, i: 0 };
+    let t = c.u8()?;
+    let rank = c.u32()? as usize;
+    let step = c.u64()?;
+    if rank >= world {
+        return Err(format!("frame rank {rank} >= world {world}"));
+    }
+    match t {
+        T_HELLO => {
+            if c.u32()? != MAGIC {
+                return Err("bad hello magic".into());
+            }
+            let w = c.u32()? as usize;
+            if w != world {
+                return Err(format!(
+                    "world mismatch: peer says {w}, ours is {world}"
+                ));
+            }
+            c.done()?;
+            Ok(Msg::Hello { rank })
+        }
+        T_HB => {
+            c.done()?;
+            Ok(Msg::Heartbeat { rank, step })
+        }
+        T_GRAD => {
+            let nb = c.u32()? as usize;
+            if nb != nblocks {
+                return Err(format!("grad blocks {nb} != {nblocks}"));
+            }
+            let mut block_loss_raw = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                block_loss_raw.push(c.i64()?);
+            }
+            let head_loss_raw = c.i64()?;
+            let correct = c.u64()?;
+            let nt = c.u32()? as usize;
+            if nt != lens.len() {
+                return Err(format!("grad arity {nt} != {}", lens.len()));
+            }
+            let mut tensors = Vec::with_capacity(nt);
+            for (i, &want) in lens.iter().enumerate() {
+                let n = c.u32()? as usize;
+                if n != want {
+                    return Err(format!(
+                        "grad tensor {i} length {n} != {want}"
+                    ));
+                }
+                let mut t = Vec::with_capacity(n);
+                for _ in 0..n {
+                    t.push(c.i64()?);
+                }
+                tensors.push(t);
+            }
+            c.done()?;
+            Ok(Msg::Grad {
+                rank,
+                step,
+                shard: WireShard {
+                    block_loss_raw,
+                    head_loss_raw,
+                    correct,
+                    tensors,
+                },
+            })
+        }
+        other => Err(format!("unknown frame type {other}")),
+    }
+}
+
+/// Read one length-prefixed frame body into `buf`, enforcing the
+/// model-derived size cap before allocating or reading the body.
+fn read_frame(s: &mut TcpStream, max: usize, buf: &mut Vec<u8>)
+              -> std::io::Result<()> {
+    let mut len4 = [0u8; 4];
+    s.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if !(HDR_LEN..=max).contains(&len) {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame length {len} outside [{HDR_LEN}, {max}]"),
+        ));
+    }
+    buf.resize(len, 0);
+    s.read_exact(buf)
+}
+
+// ----------------------------------------------------- transport threads
+
+/// Write a pre-encoded frame to `peer` if its connection is up; a write
+/// error tears the connection down (the connector re-dials).
+fn send_bytes(sh: &Shared, peer: usize, bytes: &[u8]) {
+    let mut g = sh.writers[peer].lock().unwrap();
+    if let Some(s) = g.as_mut() {
+        if s.write_all(bytes).is_err() {
+            *g = None;
+        }
+    }
+}
+
+/// Sever the outgoing link to `peer` as if the cable were pulled
+/// (partition rules).
+fn sever(sh: &Shared, peer: usize) {
+    let mut g = sh.writers[peer].lock().unwrap();
+    if let Some(s) = g.take() {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+fn dial(addr: &str, timeout_ms: u64) -> std::io::Result<TcpStream> {
+    let addrs: Vec<SocketAddr> = addr.to_socket_addrs()?.collect();
+    let a = addrs.first().ok_or_else(|| {
+        std::io::Error::new(ErrorKind::NotFound, "address resolved empty")
+    })?;
+    TcpStream::connect_timeout(a, Duration::from_millis(timeout_ms.max(1)))
+}
+
+/// Sleep half the backoff plus deterministic jitter, then double the
+/// backoff up to the cap — retry storms decorrelate without wall-clock
+/// randomness.
+fn backoff_sleep(rng: &mut Pcg32, backoff: &mut u64, max_ms: u64) {
+    let half = (*backoff / 2).max(1).min(u32::MAX as u64) as u32;
+    thread::sleep(Duration::from_millis(
+        u64::from(half) + u64::from(rng.below(half + 1)),
+    ));
+    *backoff = (*backoff * 2).min(max_ms.max(1));
+}
+
+/// Accept loop: non-blocking poll (so shutdown is prompt), one reader
+/// thread per accepted connection with the configured io timeouts.
+fn listener_loop(sh: Arc<Shared>, listener: TcpListener,
+                 tx: Sender<(usize, u64, WireShard)>, io_timeout_ms: u64) {
+    let _ = listener.set_nonblocking(true);
+    while !sh.shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                if io_timeout_ms > 0 {
+                    let t = Duration::from_millis(io_timeout_ms);
+                    let _ = stream.set_read_timeout(Some(t));
+                    let _ = stream.set_write_timeout(Some(t));
+                }
+                let sh2 = Arc::clone(&sh);
+                let tx2 = tx.clone();
+                thread::spawn(move || reader_loop(sh2, stream, tx2));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// Per-connection reader: the first frame must be a valid `Hello`
+/// naming a foreign rank; after that, heartbeats refresh liveness and
+/// grad frames are forwarded to the training thread. Any malformed
+/// frame or io error drops the connection — the peer's connector
+/// re-establishes it.
+fn reader_loop(sh: Arc<Shared>, mut stream: TcpStream,
+               tx: Sender<(usize, u64, WireShard)>) {
+    let mut buf = Vec::new();
+    let hello = read_frame(&mut stream, sh.max_frame, &mut buf)
+        .map_err(|e| e.to_string())
+        .and_then(|()| decode(&buf, sh.world, sh.nblocks, &sh.lens));
+    let peer = match hello {
+        Ok(Msg::Hello { rank }) if rank != sh.rank => rank,
+        _ => return,
+    };
+    sh.touch(peer, 0);
+    while !sh.shutdown.load(Ordering::Relaxed) {
+        if read_frame(&mut stream, sh.max_frame, &mut buf).is_err() {
+            return;
+        }
+        match decode(&buf, sh.world, sh.nblocks, &sh.lens) {
+            Ok(Msg::Heartbeat { rank, step }) if rank == peer => {
+                sh.touch(peer, step);
+            }
+            Ok(Msg::Grad { rank, step, shard }) if rank == peer => {
+                sh.touch(peer, step);
+                if tx.send((peer, step, shard)).is_err() {
+                    return;
+                }
+            }
+            _ => return,
+        }
+    }
+}
+
+/// Per-peer connector: keeps the outgoing connection alive (dial with
+/// capped exponential backoff + jitter, `Hello` on connect) and sends
+/// heartbeats while it is up. The connect seam consults the fault plan;
+/// heartbeats obey drop/partition rules so a partitioned link actually
+/// goes quiet, but a delay rule does not hold them back — a late
+/// heartbeat still proves liveness.
+fn connector_loop(sh: Arc<Shared>, peer: usize, addr: String,
+                  cfg: DistConfig) {
+    let mut rng =
+        Pcg32::with_stream(0x6e69_7472 ^ ((sh.rank as u64) << 20),
+                           peer as u64);
+    let mut backoff = cfg.connect_backoff_ms.max(1);
+    let mut connected_before = false;
+    while !sh.shutdown.load(Ordering::Relaxed) {
+        if sh.writers[peer].lock().unwrap().is_some() {
+            thread::sleep(Duration::from_millis(cfg.heartbeat_ms.max(1)));
+            if sh.shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            let step = sh.step.load(Ordering::Relaxed);
+            match sh.plan.on_send(sh.rank, peer, step) {
+                SendAction::Drop | SendAction::Partitioned => continue,
+                SendAction::Deliver | SendAction::DelayMs(_) => {}
+            }
+            send_bytes(&sh, peer, &encode_hb(sh.rank, step));
+            continue;
+        }
+        let step = sh.step.load(Ordering::Relaxed);
+        match sh.plan.on_connect(sh.rank, peer, step) {
+            SendAction::Drop | SendAction::Partitioned => {
+                backoff_sleep(&mut rng, &mut backoff,
+                              cfg.connect_backoff_max_ms);
+                continue;
+            }
+            SendAction::DelayMs(ms) => {
+                thread::sleep(Duration::from_millis(ms));
+            }
+            SendAction::Deliver => {}
+        }
+        match dial(&addr, cfg.connect_timeout_ms) {
+            Ok(mut stream) => {
+                let _ = stream.set_nodelay(true);
+                if cfg.io_timeout_ms > 0 {
+                    let t = Duration::from_millis(cfg.io_timeout_ms);
+                    let _ = stream.set_write_timeout(Some(t));
+                }
+                if stream
+                    .write_all(&encode_hello(sh.rank, sh.world))
+                    .is_err()
+                {
+                    backoff_sleep(&mut rng, &mut backoff,
+                                  cfg.connect_backoff_max_ms);
+                    continue;
+                }
+                *sh.writers[peer].lock().unwrap() = Some(stream);
+                if connected_before {
+                    sh.reconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                connected_before = true;
+                backoff = cfg.connect_backoff_ms.max(1);
+            }
+            Err(_) => {
+                backoff_sleep(&mut rng, &mut backoff,
+                              cfg.connect_backoff_max_ms);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- trainer
+
+/// One rank of the distributed group: drop-in peer of
+/// [`super::replica::ReplicaTrainer::step`], byte-identical to it (and
+/// to `replicas = world` single-process training) on the same global
+/// batches, no matter what the network does.
+pub struct DistTrainer {
+    cfg: DistConfig,
+    shared: Arc<Shared>,
+    rx: Receiver<(usize, u64, WireShard)>,
+    /// Keeps the channel open across reader churn.
+    _tx: Sender<(usize, u64, WireShard)>,
+    /// Current training step (global batch ordinal from epoch 0).
+    step: u64,
+    /// Weight shapes in `Network::weights()` order, for re-tensoring
+    /// wire shards.
+    shapes: Vec<Vec<usize>>,
+    out_per_sample: Vec<usize>,
+    masks: Vec<Vec<bool>>,
+    shard_x: ITensor,
+    /// Early frames keyed by (step, rank), adopted when their step
+    /// starts; bounded by [`FUTURE_WINDOW`].
+    future: HashMap<(u64, usize), WireShard>,
+    alive_prev: Vec<bool>,
+    stats: DistStats,
+}
+
+impl DistTrainer {
+    /// Bind the listener at `peers[rank]` and start the transport. The
+    /// bind retries briefly so an elastically rejoining rank can
+    /// reclaim its address while the OS releases the old socket.
+    pub fn new(net: &Network, cfg: DistConfig)
+               -> Result<DistTrainer, String> {
+        let addr = cfg
+            .peers
+            .get(cfg.rank)
+            .ok_or_else(|| {
+                format!("rank {} has no peer address (world {})",
+                        cfg.rank, cfg.peers.len())
+            })?
+            .clone();
+        let mut last = String::new();
+        for _ in 0..40 {
+            match TcpListener::bind(&addr) {
+                Ok(l) => return DistTrainer::with_listener(net, cfg, l),
+                Err(e) => last = e.to_string(),
+            }
+            thread::sleep(Duration::from_millis(50));
+        }
+        Err(format!("rank {}: bind {addr}: {last}", cfg.rank))
+    }
+
+    /// Start from a pre-bound listener (tests bind `:0` listeners first
+    /// and then know every rank's port before any rank starts).
+    pub fn with_listener(net: &Network, cfg: DistConfig,
+                         listener: TcpListener)
+                         -> Result<DistTrainer, String> {
+        let world = cfg.peers.len();
+        if world == 0 {
+            return Err("distributed config needs at least one peer \
+                        address"
+                .into());
+        }
+        if cfg.rank >= world {
+            return Err(format!(
+                "rank {} out of range for world size {world}", cfg.rank
+            ));
+        }
+        let shapes: Vec<Vec<usize>> = net
+            .weights()
+            .into_iter()
+            .map(|(_, w)| w.shape.clone())
+            .collect();
+        let lens: Vec<usize> =
+            shapes.iter().map(|s| s.iter().product()).collect();
+        let nblocks = net.blocks.len();
+        let max_frame = grad_frame_len(nblocks, &lens) + 64;
+        let shared = Arc::new(Shared {
+            rank: cfg.rank,
+            world,
+            plan: cfg.fault.clone(),
+            lens,
+            nblocks,
+            max_frame,
+            step: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            reconnects: AtomicU64::new(0),
+            last_rx: (0..world).map(|_| AtomicU64::new(0)).collect(),
+            peer_step: (0..world).map(|_| AtomicU64::new(0)).collect(),
+            writers: (0..world).map(|_| Mutex::new(None)).collect(),
+            start: Instant::now(),
+        });
+        let (tx, rx) = mpsc::channel();
+        {
+            let sh = Arc::clone(&shared);
+            let txl = tx.clone();
+            let io = cfg.io_timeout_ms;
+            thread::spawn(move || listener_loop(sh, listener, txl, io));
+        }
+        for p in (0..world).filter(|&p| p != cfg.rank) {
+            let sh = Arc::clone(&shared);
+            let addr = cfg.peers[p].clone();
+            let c = cfg.clone();
+            thread::spawn(move || connector_loop(sh, p, addr, c));
+        }
+        let mut alive_prev = vec![false; world];
+        alive_prev[cfg.rank] = true;
+        Ok(DistTrainer {
+            out_per_sample: probe_out_sizes(net),
+            masks: vec![Vec::new(); nblocks],
+            shard_x: ITensor::empty(),
+            shapes,
+            future: HashMap::new(),
+            alive_prev,
+            stats: DistStats::default(),
+            step: 0,
+            shared,
+            rx,
+            _tx: tx,
+            cfg,
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shared.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.shared.world
+    }
+
+    /// Resume support: position the step counter at the global batch
+    /// ordinal the loaded checkpoint corresponds to, so frames line up
+    /// with the group's counters.
+    pub fn set_start_step(&mut self, step: u64) {
+        self.step = step;
+        self.shared.step.store(step, Ordering::Relaxed);
+    }
+
+    /// Cumulative transport counters (the in-flight `reconnects` value
+    /// is folded in at read time).
+    pub fn stats(&self) -> DistStats {
+        let mut s = self.stats.clone();
+        s.reconnects = self.shared.reconnects.load(Ordering::Relaxed);
+        s
+    }
+
+    /// Block until every peer has been heard from at least once and our
+    /// outgoing connections are up, or the timeout passes. Purely an
+    /// optimization hook (warm mesh before step 0 so the first steps
+    /// use remote shards); training is correct without it.
+    pub fn wait_connected(&self, timeout_ms: u64) -> bool {
+        let deadline =
+            Instant::now() + Duration::from_millis(timeout_ms);
+        loop {
+            let up = (0..self.shared.world)
+                .filter(|&p| p != self.shared.rank)
+                .all(|p| {
+                    self.shared.last_rx[p].load(Ordering::Relaxed) > 0
+                        && self.shared.writers[p]
+                            .lock()
+                            .unwrap()
+                            .is_some()
+                });
+            if up {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Stop the transport: readers and connectors wind down, sockets
+    /// close. Called automatically on drop and on an injected crash.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        for w in &self.shared.writers {
+            let mut g = w.lock().unwrap();
+            if let Some(s) = g.take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    fn wire_to_shard(&self, ws: WireShard) -> ShardOut {
+        ShardOut {
+            block_loss_raw: ws.block_loss_raw,
+            head_loss_raw: ws.head_loss_raw,
+            correct: ws.correct as usize,
+            grads: GradSet {
+                tensors: ws
+                    .tensors
+                    .into_iter()
+                    .zip(&self.shapes)
+                    .map(|(d, sh)| LTensor::from_vec(sh, d))
+                    .collect(),
+            },
+        }
+    }
+
+    /// One distributed training step on a global batch. Returns `None`
+    /// when an injected crash terminates this rank (in-process mode);
+    /// otherwise the same [`StepReport`] every other surviving rank
+    /// computes, with weights advanced by the identical reduced step.
+    pub fn step(&mut self, net: &mut Network, x: &ITensor,
+                labels: &[usize], hp: &Hyper, drop: &mut DropoutRngs)
+                -> Option<StepReport> {
+        let step = self.step;
+        self.shared.step.store(step, Ordering::Relaxed);
+        let b = labels.len();
+        debug_assert_eq!(x.shape[0], b, "batch/label mismatch");
+        let world = self.shared.world;
+        let rank = self.shared.rank;
+        let nblocks = net.blocks.len();
+        let num_classes = net.spec.num_classes;
+        // Pre-draw the whole batch's keep-masks exactly as the replica
+        // trainer does: masks are position-indexed, so every rank draws
+        // identical masks and shard gradients are rank-independent.
+        for (l, blk) in net.blocks.iter().enumerate() {
+            let mask = &mut self.masks[l];
+            mask.clear();
+            if blk.drop_p256 > 0 {
+                let p = blk.drop_p256;
+                let rng = drop.stream(l);
+                mask.extend(
+                    (0..b * self.out_per_sample[l])
+                        .map(|_| rng.below(256) >= p),
+                );
+            }
+        }
+        let bounds = shard_bounds(b, world);
+        let ss = x.len() / b.max(1);
+        let mut outs: Vec<Option<ShardOut>> =
+            (0..world).map(|_| None).collect();
+        // Own shard first — it is both this rank's contribution to the
+        // group and the payload of the broadcast below.
+        let (s0, e0) = bounds[rank];
+        if s0 != e0 {
+            slice_rows(&mut self.shard_x, x, s0, e0, ss);
+            outs[rank] = Some(shard_grads(
+                net, &self.shard_x, &labels[s0..e0], num_classes,
+                &self.masks, &self.out_per_sample, s0,
+            ));
+        }
+        // Broadcast through the fault seam: drop discards, partition
+        // severs the link, delay/stall hand the frame to a detached
+        // timer thread (per-link latency never blocks the sender).
+        if world > 1 {
+            if let Some(own) = outs[rank].as_ref() {
+                let bytes = Arc::new(encode_grad(rank, step, own));
+                for p in (0..world).filter(|&p| p != rank) {
+                    match self.shared.plan.on_send(rank, p, step) {
+                        SendAction::Deliver => {
+                            send_bytes(&self.shared, p, &bytes);
+                        }
+                        SendAction::Drop => {}
+                        SendAction::Partitioned => {
+                            sever(&self.shared, p);
+                        }
+                        SendAction::DelayMs(ms) => {
+                            let sh = Arc::clone(&self.shared);
+                            let f = Arc::clone(&bytes);
+                            thread::spawn(move || {
+                                thread::sleep(Duration::from_millis(ms));
+                                send_bytes(&sh, p, &f);
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        // Adopt any frames for this step that arrived early, then age
+        // the buffer out of the window.
+        for p in 0..world {
+            if p == rank || bounds[p].0 == bounds[p].1 {
+                continue;
+            }
+            if let Some(ws) = self.future.remove(&(step, p)) {
+                outs[p] = Some(self.wire_to_shard(ws));
+                self.stats.remote_shards_used += 1;
+            }
+        }
+        self.future
+            .retain(|&(s, _), _| s > step && s <= step + FUTURE_WINDOW);
+        // Collect peer shards until complete or the deadline: a peer is
+        // only worth waiting for while it is alive and *at* this step
+        // (or one behind, i.e. about to reach it). A peer far behind is
+        // a checkpoint replay — survivors skip it instead of stalling;
+        // a peer ahead already sent this step's frame, which is either
+        // in the channel/future buffer (drained below) or lost for
+        // good — so the replaying rank never waits either and catches
+        // up at full local speed. That asymmetry is what makes elastic
+        // rejoin converge.
+        let deadline = Instant::now()
+            + Duration::from_millis(self.cfg.step_wait_ms);
+        loop {
+            let waiting = (0..world).any(|p| {
+                let ps =
+                    self.shared.peer_step[p].load(Ordering::Relaxed);
+                p != rank
+                    && bounds[p].0 != bounds[p].1
+                    && outs[p].is_none()
+                    && self.shared.alive(p, self.cfg.peer_dead_ms)
+                    && ps + 1 >= step
+                    && ps <= step
+            });
+            if !waiting {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let wait = (deadline - now).min(Duration::from_millis(5));
+            match self.rx.recv_timeout(wait) {
+                Ok((p, mstep, ws)) => {
+                    if mstep == step {
+                        if p < world
+                            && bounds[p].0 != bounds[p].1
+                            && outs[p].is_none()
+                        {
+                            outs[p] = Some(self.wire_to_shard(ws));
+                            self.stats.remote_shards_used += 1;
+                        }
+                    } else if mstep > step
+                        && mstep <= step + FUTURE_WINDOW
+                    {
+                        self.future.insert((mstep, p), ws);
+                    } else {
+                        self.stats.stale_frames += 1;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Solo fallback: recompute every missing shard locally. Same
+        // weights, same batch slice, same masks — byte-identical to
+        // what the peer would have sent.
+        for p in 0..world {
+            if outs[p].is_some() {
+                continue;
+            }
+            let (s, e) = bounds[p];
+            if s == e {
+                continue;
+            }
+            slice_rows(&mut self.shard_x, x, s, e, ss);
+            outs[p] = Some(shard_grads(
+                net, &self.shard_x, &labels[s..e], num_classes,
+                &self.masks, &self.out_per_sample, s,
+            ));
+            self.stats.solo_shards += 1;
+        }
+        // Fixed ascending-rank fold — identical to the replica
+        // trainer's reduction, so the reduced gradient and the metrics
+        // match it bit for bit.
+        let mut report = StepReport {
+            block_loss: vec![0i64; nblocks],
+            ..Default::default()
+        };
+        let mut acc: Option<GradSet> = None;
+        for out in outs {
+            let Some(o) = out else { continue };
+            for (a, &l) in
+                report.block_loss.iter_mut().zip(&o.block_loss_raw)
+            {
+                *a = a.saturating_add(l);
+            }
+            report.head_loss =
+                report.head_loss.saturating_add(o.head_loss_raw);
+            report.correct += o.correct;
+            match &mut acc {
+                None => acc = Some(o.grads),
+                Some(a) => accumulate(a, &o.grads),
+            }
+        }
+        for l in &mut report.block_loss {
+            *l /= 2;
+        }
+        report.head_loss /= 2;
+        if let Some(acc) = acc {
+            apply_step(net, &acc, hp);
+        }
+        // View bookkeeping: an alive-set transition is a ring
+        // re-formation (a rank died or (re)joined).
+        let alive_now: Vec<bool> = (0..world)
+            .map(|p| {
+                p == rank
+                    || self.shared.alive(p, self.cfg.peer_dead_ms)
+            })
+            .collect();
+        if alive_now != self.alive_prev {
+            self.stats.view += 1;
+            self.alive_prev = alive_now;
+        }
+        if self.cfg.pace_ms > 0 {
+            thread::sleep(Duration::from_millis(self.cfg.pace_ms));
+        }
+        // Injected crash fires after the step completes (the weights
+        // for this step are applied; whether they survive depends on
+        // the checkpoint cadence, exactly like a real crash).
+        if self.shared.plan.crash_at(rank, step) {
+            if self.cfg.crash_process {
+                std::process::exit(fault::CRASH_EXIT_CODE);
+            }
+            self.shutdown();
+            return None;
+        }
+        self.step += 1;
+        Some(report)
+    }
+}
+
+impl Drop for DistTrainer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Copy rows `[s, e)` of `x` into the reused shard buffer.
+fn slice_rows(buf: &mut ITensor, x: &ITensor, s: usize, e: usize,
+              ss: usize) {
+    buf.data.clear();
+    buf.data.extend_from_slice(&x.data[s * ss..e * ss]);
+    buf.shape.clear();
+    buf.shape.push(e - s);
+    buf.shape.extend(&x.shape[1..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+    use crate::train::replica::ReplicaTrainer;
+
+    const HP: Hyper =
+        Hyper { gamma_inv: 64, eta_fw_inv: 12000, eta_lr_inv: 3000 };
+
+    fn toy_batches(spec: &crate::nn::NetworkSpec, n: usize, b: usize,
+                   seed: u64) -> Vec<(ITensor, Vec<usize>)> {
+        let mut rng = Pcg32::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut shape = vec![b];
+                shape.extend(&spec.input_shape);
+                let len: usize = shape.iter().product();
+                let x = ITensor::from_vec(
+                    &shape,
+                    (0..len).map(|_| rng.range_i32(-127, 127)).collect(),
+                );
+                let labels =
+                    (0..b).map(|i| i % spec.num_classes).collect();
+                (x, labels)
+            })
+            .collect()
+    }
+
+    /// Uninterrupted in-process reference: `ReplicaTrainer` with
+    /// `replicas = world` — the thing every distributed run must match
+    /// byte for byte.
+    fn reference(world: usize, batches: &[(ITensor, Vec<usize>)])
+                 -> (Vec<StepReport>, Network) {
+        let mut net = Network::new(zoo::get("mlp1-mini").unwrap(), 7);
+        net.set_dropout(0.25, 0.25);
+        let mut drop = DropoutRngs::new(9, net.blocks.len());
+        let mut rt = ReplicaTrainer::new(&net, world, false);
+        let reports = batches
+            .iter()
+            .map(|(x, y)| rt.step(&mut net, x, y, &HP, &mut drop))
+            .collect();
+        (reports, net)
+    }
+
+    fn weights_of(net: &Network) -> Vec<ITensor> {
+        net.weights().into_iter().map(|(_, w)| w.clone()).collect()
+    }
+
+    /// Pre-bound `:0` listeners so every rank knows every port before
+    /// any rank starts — no port races in tests.
+    fn bind_world(n: usize) -> (Vec<String>, Vec<TcpListener>) {
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let peers = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        (peers, listeners)
+    }
+
+    fn cfg_for(rank: usize, peers: &[String]) -> DistConfig {
+        DistConfig {
+            rank,
+            peers: peers.to_vec(),
+            connect_backoff_ms: 5,
+            connect_backoff_max_ms: 50,
+            io_timeout_ms: 5_000,
+            step_wait_ms: 5_000,
+            heartbeat_ms: 20,
+            peer_dead_ms: 300,
+            ..Default::default()
+        }
+    }
+
+    struct RankRun {
+        reports: Vec<StepReport>,
+        crashed: bool,
+        weights: Vec<ITensor>,
+        stats: DistStats,
+    }
+
+    /// Run one in-process rank per thread over the same batch stream.
+    fn run_world(cfgs: Vec<DistConfig>, listeners: Vec<TcpListener>,
+                 batches: &[(ITensor, Vec<usize>)]) -> Vec<RankRun> {
+        let spec = zoo::get("mlp1-mini").unwrap();
+        thread::scope(|s| {
+            let handles: Vec<_> = cfgs
+                .into_iter()
+                .zip(listeners)
+                .map(|(cfg, listener)| {
+                    let spec = spec.clone();
+                    s.spawn(move || {
+                        let mut net = Network::new(spec, 7);
+                        net.set_dropout(0.25, 0.25);
+                        let mut drop =
+                            DropoutRngs::new(9, net.blocks.len());
+                        let mut dt = DistTrainer::with_listener(
+                            &net, cfg, listener,
+                        )
+                        .unwrap();
+                        dt.wait_connected(800);
+                        let mut reports = Vec::new();
+                        let mut crashed = false;
+                        for (x, y) in batches {
+                            match dt.step(&mut net, x, y, &HP, &mut drop)
+                            {
+                                Some(r) => reports.push(r),
+                                None => {
+                                    crashed = true;
+                                    break;
+                                }
+                            }
+                        }
+                        let stats = dt.stats();
+                        RankRun {
+                            reports,
+                            crashed,
+                            weights: weights_of(&net),
+                            stats,
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    fn assert_reports(got: &[StepReport], want: &[StepReport],
+                      what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: step count");
+        for (g, w) in got.iter().zip(want) {
+            assert_eq!(g.block_loss, w.block_loss, "{what}");
+            assert_eq!(g.head_loss, w.head_loss, "{what}");
+            assert_eq!(g.correct, w.correct, "{what}");
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip_and_hostile_frame_rejection() {
+        let lens = [6usize, 4];
+        let shard = ShardOut {
+            block_loss_raw: vec![7, -9],
+            head_loss_raw: -11,
+            correct: 3,
+            grads: GradSet {
+                tensors: vec![
+                    LTensor::from_vec(
+                        &[2, 3],
+                        (0..6).map(|i| i as i64 - 3).collect(),
+                    ),
+                    LTensor::from_vec(
+                        &[4],
+                        vec![i64::MAX, i64::MIN, 0, 1],
+                    ),
+                ],
+            },
+        };
+        let f = encode_grad(1, 5, &shard);
+        let body = &f[4..];
+        assert_eq!(
+            u32::from_le_bytes(f[..4].try_into().unwrap()) as usize,
+            body.len()
+        );
+        // the cap derived from the model admits exactly this frame
+        assert_eq!(body.len(), grad_frame_len(2, &lens));
+        match decode(body, 3, 2, &lens).unwrap() {
+            Msg::Grad { rank, step, shard: ws } => {
+                assert_eq!((rank, step), (1, 5));
+                assert_eq!(ws.block_loss_raw, vec![7, -9]);
+                assert_eq!(ws.head_loss_raw, -11);
+                assert_eq!(ws.correct, 3);
+                assert_eq!(ws.tensors[0],
+                           (0..6).map(|i| i as i64 - 3).collect::<Vec<_>>());
+                assert_eq!(ws.tensors[1],
+                           vec![i64::MAX, i64::MIN, 0, 1]);
+            }
+            _ => panic!("decoded to the wrong message type"),
+        }
+        let hello = encode_hello(2, 3);
+        assert!(matches!(decode(&hello[4..], 3, 2, &lens),
+                         Ok(Msg::Hello { rank: 2 })));
+        let hb = encode_hb(0, 9);
+        assert!(matches!(decode(&hb[4..], 3, 2, &lens),
+                         Ok(Msg::Heartbeat { rank: 0, step: 9 })));
+        // hostile inputs: every malformation is an error, never a panic
+        let mut truncated = body.to_vec();
+        truncated.pop();
+        let mut padded = body.to_vec();
+        padded.push(0);
+        let mut bad_type = body.to_vec();
+        bad_type[0] = 99;
+        let mut bad_magic = hello[4..].to_vec();
+        bad_magic[HDR_LEN] ^= 0xff;
+        for (buf, world, needle) in [
+            (&truncated, 3, "truncated"),
+            (&padded, 3, "trailing"),
+            (&bad_type, 3, "unknown frame type"),
+            (&bad_magic, 3, "magic"),
+            // sender rank out of range for the world
+            (&body.to_vec(), 1, ">= world"),
+            // world-size mismatch in the handshake
+            (&encode_hello(0, 2)[4..].to_vec(), 3, "world mismatch"),
+        ] {
+            let err =
+                decode(buf, world, 2, &lens).unwrap_err();
+            assert!(err.contains(needle), "wanted {needle}: {err}");
+        }
+        // tensor arity/length mismatches against the local model
+        assert!(decode(body, 3, 1, &lens).unwrap_err().contains("blocks"));
+        assert!(decode(body, 3, 2, &[6]).unwrap_err().contains("arity"));
+        assert!(decode(body, 3, 2, &[6, 5])
+            .unwrap_err()
+            .contains("length"));
+    }
+
+    #[test]
+    fn config_validation() {
+        let net = Network::new(zoo::get("mlp1-mini").unwrap(), 1);
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = DistTrainer::with_listener(
+            &net, DistConfig::default(), l,
+        )
+        .unwrap_err();
+        assert!(err.contains("at least one"), "{err}");
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let cfg = DistConfig {
+            rank: 2,
+            peers: vec!["a".into(), "b".into()],
+            ..Default::default()
+        };
+        let err =
+            DistTrainer::with_listener(&net, cfg, l).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn world_1_matches_train_batch() {
+        let spec = zoo::get("mlp1-mini").unwrap();
+        let batches = toy_batches(&spec, 3, 8, 21);
+        let mut net_ref = Network::new(spec.clone(), 7);
+        net_ref.set_dropout(0.25, 0.25);
+        let mut drop_ref = DropoutRngs::new(9, net_ref.blocks.len());
+        let want: Vec<StepReport> = batches
+            .iter()
+            .map(|(x, y)| net_ref.train_batch(x, y, &HP, &mut drop_ref))
+            .collect();
+        let (peers, mut listeners) = bind_world(1);
+        let mut net = Network::new(spec, 7);
+        net.set_dropout(0.25, 0.25);
+        let mut drop = DropoutRngs::new(9, net.blocks.len());
+        let mut dt = DistTrainer::with_listener(
+            &net, cfg_for(0, &peers), listeners.pop().unwrap(),
+        )
+        .unwrap();
+        let got: Vec<StepReport> = batches
+            .iter()
+            .map(|(x, y)| {
+                dt.step(&mut net, x, y, &HP, &mut drop).unwrap()
+            })
+            .collect();
+        assert_reports(&got, &want, "world=1");
+        assert_eq!(weights_of(&net), weights_of(&net_ref));
+    }
+
+    #[test]
+    fn world_2_and_3_byte_identical_to_replicated() {
+        for world in [2usize, 3] {
+            let spec = zoo::get("mlp1-mini").unwrap();
+            // batch 10 over world 3: uneven shards (4/3/3)
+            let batches = toy_batches(&spec, 4, 10, 11);
+            let (want, net_ref) = reference(world, &batches);
+            let want_w = weights_of(&net_ref);
+            let (peers, listeners) = bind_world(world);
+            let cfgs =
+                (0..world).map(|r| cfg_for(r, &peers)).collect();
+            let runs = run_world(cfgs, listeners, &batches);
+            let mut remote = 0;
+            for (r, run) in runs.iter().enumerate() {
+                assert!(!run.crashed, "rank {r} crashed");
+                assert_reports(&run.reports, &want,
+                               &format!("world={world} rank={r}"));
+                assert_eq!(run.weights, want_w,
+                           "world={world} rank={r}: weights diverged");
+                remote += run.stats.remote_shards_used;
+            }
+            assert!(remote > 0,
+                    "world={world}: the mesh never carried a shard");
+        }
+    }
+
+    #[test]
+    fn drop_fault_degrades_to_solo_compute() {
+        // rank 0 drops everything it would send to rank 1 (grad frames,
+        // heartbeats, connects): rank 1 must mark it dead and recompute
+        // its shard locally — byte-identical anyway
+        let spec = zoo::get("mlp1-mini").unwrap();
+        let batches = toy_batches(&spec, 4, 10, 41);
+        let (want, net_ref) = reference(2, &batches);
+        let plan = FaultPlan::parse(
+            r#"[{"kind": "drop", "rank": 0, "peer": 1}]"#,
+        )
+        .unwrap();
+        let (peers, listeners) = bind_world(2);
+        let cfgs = (0..2)
+            .map(|r| {
+                let mut c = cfg_for(r, &peers);
+                c.fault = plan.clone();
+                c.step_wait_ms = 150;
+                c
+            })
+            .collect();
+        let runs = run_world(cfgs, listeners, &batches);
+        let want_w = weights_of(&net_ref);
+        for (r, run) in runs.iter().enumerate() {
+            assert_reports(&run.reports, &want, &format!("drop rank={r}"));
+            assert_eq!(run.weights, want_w, "drop rank={r}: weights");
+        }
+        assert!(runs[1].stats.solo_shards > 0,
+                "rank 1 never fell back to solo compute");
+    }
+
+    #[test]
+    fn delay_fault_still_uses_remote_shards() {
+        // every frame rank 0 sends is held 25 ms: well within the step
+        // deadline, so peers wait it out and still fold the remote shard
+        let spec = zoo::get("mlp1-mini").unwrap();
+        let batches = toy_batches(&spec, 4, 10, 43);
+        let (want, net_ref) = reference(2, &batches);
+        let plan = FaultPlan::parse(
+            r#"[{"kind": "delay", "rank": 0, "ms": 25}]"#,
+        )
+        .unwrap();
+        let (peers, listeners) = bind_world(2);
+        let cfgs = (0..2)
+            .map(|r| {
+                let mut c = cfg_for(r, &peers);
+                c.fault = plan.clone();
+                c
+            })
+            .collect();
+        let runs = run_world(cfgs, listeners, &batches);
+        let want_w = weights_of(&net_ref);
+        for (r, run) in runs.iter().enumerate() {
+            assert_reports(&run.reports, &want,
+                           &format!("delay rank={r}"));
+            assert_eq!(run.weights, want_w, "delay rank={r}: weights");
+        }
+        assert!(runs[1].stats.remote_shards_used > 0,
+                "delayed frames should still arrive in time");
+    }
+
+    #[test]
+    fn stall_fault_is_cut_by_the_step_deadline() {
+        // rank 0 stalls its frames to rank 1 for 500 ms during steps
+        // [1, 3) while rank 1's deadline is 80 ms: rank 1 must cut the
+        // wait, solo-compute, and stay byte-identical
+        let spec = zoo::get("mlp1-mini").unwrap();
+        let batches = toy_batches(&spec, 4, 10, 47);
+        let (want, net_ref) = reference(2, &batches);
+        let plan = FaultPlan::parse(
+            r#"[{"kind": "stall", "rank": 0, "peer": 1, "step": 1,
+                 "until_step": 3, "ms": 500}]"#,
+        )
+        .unwrap();
+        let (peers, listeners) = bind_world(2);
+        let cfgs = (0..2)
+            .map(|r| {
+                let mut c = cfg_for(r, &peers);
+                c.fault = plan.clone();
+                c.step_wait_ms = 80;
+                c
+            })
+            .collect();
+        let runs = run_world(cfgs, listeners, &batches);
+        let want_w = weights_of(&net_ref);
+        for (r, run) in runs.iter().enumerate() {
+            assert_reports(&run.reports, &want,
+                           &format!("stall rank={r}"));
+            assert_eq!(run.weights, want_w, "stall rank={r}: weights");
+        }
+        assert!(runs[1].stats.solo_shards > 0,
+                "rank 1 never cut a stalled wait");
+    }
+
+    #[test]
+    fn partition_window_heals_and_stays_identical() {
+        // full bidirectional partition over steps [1, 3) — the seam is
+        // sender-side, so both direction rules are listed. During the
+        // window both ranks solo-compute; afterwards the connectors
+        // re-dial and the mesh heals. Identity holds throughout, and at
+        // least one rank observes the alive-set change (a view bump).
+        let spec = zoo::get("mlp1-mini").unwrap();
+        let batches = toy_batches(&spec, 6, 10, 53);
+        let (want, net_ref) = reference(2, &batches);
+        let plan = FaultPlan::parse(
+            r#"[{"kind": "partition", "rank": 0, "peer": 1,
+                 "step": 1, "until_step": 3},
+                {"kind": "partition", "rank": 1, "peer": 0,
+                 "step": 1, "until_step": 3}]"#,
+        )
+        .unwrap();
+        let (peers, listeners) = bind_world(2);
+        let cfgs = (0..2)
+            .map(|r| {
+                let mut c = cfg_for(r, &peers);
+                c.fault = plan.clone();
+                c.step_wait_ms = 100;
+                c.peer_dead_ms = 150;
+                c.pace_ms = 20;
+                c
+            })
+            .collect();
+        let runs = run_world(cfgs, listeners, &batches);
+        let want_w = weights_of(&net_ref);
+        for (r, run) in runs.iter().enumerate() {
+            assert_reports(&run.reports, &want,
+                           &format!("partition rank={r}"));
+            assert_eq!(run.weights, want_w,
+                       "partition rank={r}: weights");
+            assert!(run.stats.solo_shards > 0,
+                    "rank {r} never soloed through the partition");
+        }
+        assert!(runs.iter().any(|r| r.stats.view >= 1),
+                "no rank observed a ring re-formation");
+    }
+
+    #[test]
+    fn crash_at_step_then_elastic_rejoin_byte_identical() {
+        // rank 1 crashes after finishing step 2; rank 0 survives the
+        // whole run degraded. Rank 1 then restarts from its step-0
+        // state, rebinds the same port, replays at full speed (its peer
+        // is ahead, so it never waits), re-enters the mesh, and both
+        // ranks finish with weights byte-identical to the uninterrupted
+        // replicas=2 reference.
+        let spec = zoo::get("mlp1-mini").unwrap();
+        let batches = toy_batches(&spec, 10, 10, 31);
+        let (_want, net_ref) = reference(2, &batches);
+        let want_w = weights_of(&net_ref);
+        let plan = FaultPlan::parse(
+            r#"[{"kind": "crash", "rank": 1, "step": 2}]"#,
+        )
+        .unwrap();
+        let (peers, mut listeners) = bind_world(2);
+        let l1 = listeners.pop().unwrap();
+        let l0 = listeners.pop().unwrap();
+        let rank1_done = AtomicBool::new(false);
+        let (w0, w1, remote1) = thread::scope(|s| {
+            let h0 = s.spawn(|| {
+                let mut net = Network::new(spec.clone(), 7);
+                net.set_dropout(0.25, 0.25);
+                let mut drop = DropoutRngs::new(9, net.blocks.len());
+                let mut cfg = cfg_for(0, &peers);
+                cfg.fault = plan.clone();
+                cfg.step_wait_ms = 300;
+                cfg.peer_dead_ms = 150;
+                // throttle the survivor so the test can demonstrate the
+                // rejoiner actually catching up mid-run
+                cfg.pace_ms = 25;
+                let mut dt =
+                    DistTrainer::with_listener(&net, cfg, l0).unwrap();
+                dt.wait_connected(800);
+                for (x, y) in &batches {
+                    dt.step(&mut net, x, y, &HP, &mut drop).unwrap();
+                }
+                // hold the mesh open until the rejoined rank finishes
+                let deadline = Instant::now() + Duration::from_secs(10);
+                while !rank1_done.load(Ordering::Relaxed)
+                    && Instant::now() < deadline
+                {
+                    thread::sleep(Duration::from_millis(5));
+                }
+                weights_of(&net)
+            });
+            let h1 = s.spawn(|| {
+                {
+                    // first life: dies right after finishing step 2
+                    let mut net = Network::new(spec.clone(), 7);
+                    net.set_dropout(0.25, 0.25);
+                    let mut drop =
+                        DropoutRngs::new(9, net.blocks.len());
+                    let mut cfg = cfg_for(1, &peers);
+                    cfg.fault = plan.clone();
+                    let mut dt = DistTrainer::with_listener(
+                        &net, cfg, l1,
+                    )
+                    .unwrap();
+                    dt.wait_connected(800);
+                    let mut done = 0usize;
+                    for (x, y) in &batches {
+                        match dt.step(&mut net, x, y, &HP, &mut drop) {
+                            Some(_) => done += 1,
+                            None => break,
+                        }
+                    }
+                    assert_eq!(done, 2,
+                               "crash must fire after finishing step 2");
+                } // trainer dropped: port released like a dead process
+                // second life: restart from the step-0 state with the
+                // fault cleared (an operator restart), rebinding the
+                // same address
+                let mut net = Network::new(spec.clone(), 7);
+                net.set_dropout(0.25, 0.25);
+                let mut drop = DropoutRngs::new(9, net.blocks.len());
+                let cfg = cfg_for(1, &peers);
+                let mut dt = DistTrainer::new(&net, cfg).unwrap();
+                for (x, y) in &batches {
+                    dt.step(&mut net, x, y, &HP, &mut drop).unwrap();
+                }
+                let stats = dt.stats();
+                rank1_done.store(true, Ordering::Relaxed);
+                (weights_of(&net), stats)
+            });
+            let w0 = h0.join().unwrap();
+            let (w1, st1) = h1.join().unwrap();
+            (w0, w1, st1.remote_shards_used)
+        });
+        assert_eq!(w0, want_w, "survivor weights diverged");
+        assert_eq!(w1, want_w, "rejoined rank weights diverged");
+        assert!(remote1 > 0,
+                "the rejoined rank never re-entered the mesh");
+    }
+}

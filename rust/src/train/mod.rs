@@ -5,6 +5,7 @@
 //! weight-magnitude probes (Fig. 3 / App. E.3) and checkpointing.
 
 pub mod checkpoint;
+pub mod dist;
 pub mod pipeline;
 pub mod replica;
 
@@ -87,6 +88,18 @@ pub struct TrainConfig {
     /// "(unstable)" rows); the epoch completes, then training stops.
     pub divergence_guard: i64,
     pub verbose: bool,
+    /// Resume from a checkpointed [`checkpoint::TrainState`]: training
+    /// starts at `resume.epoch` with the plateau scheduler restored, and
+    /// the shuffle/dropout RNG streams are deterministically
+    /// fast-forwarded through the completed epochs — so {train k epochs,
+    /// crash, resume, finish} is **byte-identical** to an uninterrupted
+    /// run (the caller loads the checkpoint's weights first).
+    pub resume: Option<checkpoint::TrainState>,
+    /// Crash-safe periodic checkpointing: every `checkpoint_every`
+    /// epochs the weights plus the training state are atomically written
+    /// here (fsynced file and directory). `None` / `0` disables.
+    pub checkpoint_path: Option<String>,
+    pub checkpoint_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -103,6 +116,9 @@ impl Default for TrainConfig {
             replicas: 1,
             divergence_guard: 1 << 40,
             verbose: false,
+            resume: None,
+            checkpoint_path: None,
+            checkpoint_every: 0,
         }
     }
 }
@@ -154,6 +170,10 @@ pub struct TrainResult {
     /// Peak |activation| / |gradient-side| bit-width seen (App. E.3 int32
     /// claim is about these).
     pub diverged: bool,
+    /// An injected crash terminated a distributed rank mid-run
+    /// ([`dist::DistTrainer::step`] returned `None`); the partial-epoch
+    /// work is discarded and `epochs` ends at the last completed epoch.
+    pub interrupted: bool,
 }
 
 /// Train `net` on `train`, evaluating on `test`. The single entry point
@@ -200,6 +220,23 @@ impl EpochAgg {
 pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
                     cfg: &TrainConfig, sink: &mut dyn MetricSink)
                     -> TrainResult {
+    fit_inner(net, train, test, cfg, None, sink)
+}
+
+/// [`fit_observed`] with every gradient step running through one rank of
+/// a distributed group ([`dist::DistTrainer`]): same epoch loop, same
+/// metrics, same checkpoint/resume semantics — the step itself is the
+/// TCP integer all-reduce, byte-identical to `replicas = world`
+/// single-process training on the same global batches.
+pub fn fit_dist(net: &mut Network, train: &Dataset, test: &Dataset,
+                cfg: &TrainConfig, dt: &mut dist::DistTrainer,
+                sink: &mut dyn MetricSink) -> TrainResult {
+    fit_inner(net, train, test, cfg, Some(dt), sink)
+}
+
+fn fit_inner(net: &mut Network, train: &Dataset, test: &Dataset,
+             cfg: &TrainConfig, mut dist: Option<&mut dist::DistTrainer>,
+             sink: &mut dyn MetricSink) -> TrainResult {
     let flatten = net.spec.input_shape.len() == 1;
     let mut rng = Pcg32::with_stream(cfg.seed, 0x74726169);
     // Per-block dropout streams: mask draws depend only on (seed, block,
@@ -209,15 +246,60 @@ pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
     let mut sched = PlateauScheduler::new(cfg.hyper.gamma_inv,
                                           cfg.plateau_patience);
     sched.warmup = cfg.plateau_warmup;
+    // Resume: restore the plateau scheduler (its state depends on eval
+    // accuracies, which cannot be replayed without compute — hence it is
+    // persisted), then deterministically fast-forward the RNG streams
+    // through the completed epochs: one batch shuffle per epoch (drawn
+    // in the Batcher constructor) and `ds.len() × out` dropout elements
+    // per enabled block per epoch (the per-epoch draw count is
+    // independent of the batch split). Epoch `start_epoch` then sees
+    // exactly the state the uninterrupted run would have, making
+    // {crash, reload checkpoint, finish} byte-identical to never
+    // crashing.
+    let start_epoch = match &cfg.resume {
+        Some(st) => {
+            sched.restore(&st.plateau);
+            st.epoch.min(cfg.epochs)
+        }
+        None => 0,
+    };
+    if start_epoch > 0 {
+        let out_per_sample = replica::probe_out_sizes(net);
+        for _ in 0..start_epoch {
+            let _ = Batcher::new(train, cfg.batch, flatten, &mut rng);
+            for (l, blk) in net.blocks.iter().enumerate() {
+                if blk.drop_p256 > 0 {
+                    let r = drop.stream(l);
+                    for _ in 0..train.len() * out_per_sample[l] {
+                        r.below(256);
+                    }
+                }
+            }
+        }
+    }
+    // A distributed rank's step counter is the global batch ordinal from
+    // epoch 0, so a resumed rank lines its frames up with the group.
+    if let Some(dt) = &mut dist {
+        dt.set_start_step(
+            (start_epoch * train.len().div_ceil(cfg.batch.max(1))) as u64,
+        );
+    }
     // The pipelined scheduler engages only when the worker budget covers
     // one thread per stage (blocks + head) — the stage threads ARE the
     // budget. Smaller budgets degrade to the block-parallel scheduler
     // (which clamps its pool fan-out to the budget), and budget 1 runs
     // the sequential path inline with no thread ever spawned. All paths
     // are bit-identical, so the degradation is a resource policy only.
+    // A resumed run and a distributed rank both stay off the pipeline:
+    // the resume fast-forward advances this function's dropout streams
+    // (not the stage workers'), and a distributed step is a per-batch
+    // barrier the pipeline cannot cross. Both fall back to paths that
+    // are bit-identical anyway.
     let nstages = net.blocks.len() + 1;
     let replicas = cfg.replicas.max(1);
     let mut pipe = (replicas == 1
+        && dist.is_none()
+        && start_epoch == 0
         && cfg.scheduler == Scheduler::Pipelined
         && !net.blocks.is_empty()
         && par::current_workers() >= nstages)
@@ -231,24 +313,39 @@ pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
     // budget/replicas — the pipeline's budget-sharing policy), while the
     // sequential scheduler runs them inline with no thread ever spawned.
     // Every combination is bit-identical to replicas = 1.
-    let mut repl = (replicas > 1).then(|| {
+    let mut repl = (replicas > 1 && dist.is_none()).then(|| {
         replica::ReplicaTrainer::new(net, replicas,
                                      cfg.scheduler != Scheduler::Sequential)
     });
     let mut epochs = Vec::new();
     let mut diverged = false;
+    let mut interrupted = false;
     // Batch buffers reused across every iteration of every epoch — the
     // steady state performs no per-batch gather allocation. In pipelined
     // mode the input tensors recycle through the stage-0 return channel.
     let mut xbuf = ITensor::empty();
     let mut labels: Vec<usize> = Vec::new();
     let mut reports: Vec<StepReport> = Vec::new();
-    'outer: for epoch in 0..cfg.epochs {
+    'outer: for epoch in start_epoch..cfg.epochs {
         let t0 = std::time::Instant::now();
         let hp = Hyper { gamma_inv: sched.gamma_inv, ..cfg.hyper };
         let mut agg = EpochAgg::default();
         let mut batcher = Batcher::new(train, cfg.batch, flatten, &mut rng);
-        if let Some(p) = &mut pipe {
+        if let Some(dt) = &mut dist {
+            while batcher.next_into(&mut xbuf, &mut labels) {
+                agg.seen += labels.len();
+                match dt.step(net, &xbuf, &labels, &hp, &mut drop) {
+                    Some(rep) => agg.add(&rep, cfg.divergence_guard),
+                    None => {
+                        // injected crash: this rank is dead — discard
+                        // the partial epoch (the checkpoint cadence
+                        // decides what survives, like a real crash)
+                        interrupted = true;
+                        break 'outer;
+                    }
+                }
+            }
+        } else if let Some(p) = &mut pipe {
             if !p.is_running() {
                 p.resume(net);
             }
@@ -328,6 +425,24 @@ pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
         }
         sink.on_epoch(&rec);
         epochs.push(rec);
+        // Crash-safe periodic checkpoint: weights plus training state
+        // (epochs completed, plateau scheduler), written atomically and
+        // fsynced. A failed write is reported but never kills training —
+        // the run is still correct, just less durable.
+        if let Some(path) = &cfg.checkpoint_path {
+            if cfg.checkpoint_every > 0
+                && (epoch + 1) % cfg.checkpoint_every == 0
+            {
+                let st = checkpoint::TrainState {
+                    epoch: epoch + 1,
+                    plateau: sched.state(),
+                };
+                if let Err(e) = checkpoint::save_with_state(net, path, &st)
+                {
+                    eprintln!("checkpoint {path}: {e}");
+                }
+            }
+        }
         if diverged {
             break 'outer;
         }
@@ -347,7 +462,8 @@ pub fn fit_observed(net: &mut Network, train: &Dataset, test: &Dataset,
         _ => evaluate(net, test, cfg.batch),
     };
     let weight_stats = weight_stats(net);
-    TrainResult { epochs, final_test_acc, weight_stats, diverged }
+    TrainResult { epochs, final_test_acc, weight_stats, diverged,
+                  interrupted }
 }
 
 /// Accuracy over a dataset.
@@ -496,5 +612,88 @@ mod tests {
             assert!(s.bitwidth <= 8, "{s:?}"); // Kaiming bounds are tiny
             assert!(s.max_abs >= s.q90 && s.q90 >= s.q50);
         }
+    }
+
+    /// Crash-resume contract: {train 4 epochs with periodic
+    /// checkpointing, reload the checkpoint into a fresh process, finish
+    /// to 6} must be byte-identical to one uninterrupted 6-epoch run —
+    /// per-epoch records and final weights — under every scheduler.
+    /// The resumed leg of the pipelined run exercises the deliberate
+    /// degradation to block-parallel (`start_epoch > 0` disables the
+    /// pipeline because stage workers' dropout streams cannot be
+    /// fast-forwarded), which must not change a single bit.
+    #[test]
+    fn checkpoint_resume_is_byte_identical_across_schedulers() {
+        let _guard = par::scoped_thread_workers(6);
+        let ds = synthetic::by_name("tiny", 160, 5).unwrap();
+        let (mut tr, mut te) = ds.split_test(40);
+        tr.mad_normalize();
+        te.mad_normalize();
+        let dir = std::env::temp_dir()
+            .join(format!("nitro_resume_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for sched in [Scheduler::Sequential, Scheduler::BlockParallel,
+                      Scheduler::Pipelined] {
+            let base = TrainConfig {
+                epochs: 6,
+                batch: 32,
+                scheduler: sched,
+                // force plateau activity inside 6 epochs so the
+                // persisted PlateauState actually matters
+                plateau_warmup: 0,
+                plateau_patience: 1,
+                hyper: Hyper {
+                    gamma_inv: 128,
+                    eta_fw_inv: 12000,
+                    eta_lr_inv: 3000,
+                },
+                ..Default::default()
+            };
+            // uninterrupted reference
+            let mut net_ref = Network::new(zoo::get("tinycnn").unwrap(), 2);
+            net_ref.set_dropout(0.25, 0.25);
+            let res_ref = fit(&mut net_ref, &tr, &te, &base);
+            // leg 1: same run, checkpointing every 2 epochs, killed at 4
+            let path = dir
+                .join(format!("ck_{}.nitro", sched.name()))
+                .to_string_lossy()
+                .into_owned();
+            let cfg_a = TrainConfig {
+                epochs: 4,
+                checkpoint_path: Some(path.clone()),
+                checkpoint_every: 2,
+                ..base.clone()
+            };
+            let mut net_a = Network::new(zoo::get("tinycnn").unwrap(), 2);
+            net_a.set_dropout(0.25, 0.25);
+            fit(&mut net_a, &tr, &te, &cfg_a);
+            // leg 2: a fresh "process" reloads weights + train state and
+            // finishes the remaining epochs
+            let mut net_b = Network::new(zoo::get("tinycnn").unwrap(), 2);
+            net_b.set_dropout(0.25, 0.25);
+            checkpoint::load(&mut net_b, &path).unwrap();
+            let st = checkpoint::load_state(&path).unwrap().unwrap();
+            assert_eq!(st.epoch, 4, "{}", sched.name());
+            let cfg_b = TrainConfig { resume: Some(st), ..base.clone() };
+            let res_b = fit(&mut net_b, &tr, &te, &cfg_b);
+            assert_eq!(res_b.epochs.len(), 2, "{}", sched.name());
+            for (a, b) in res_ref.epochs[4..].iter().zip(&res_b.epochs) {
+                assert_eq!(a.epoch, b.epoch, "{}", sched.name());
+                assert_eq!(a.mean_head_loss, b.mean_head_loss,
+                           "{} epoch {}", sched.name(), a.epoch);
+                assert_eq!(a.train_acc, b.train_acc, "{}", sched.name());
+                assert_eq!(a.gamma_inv, b.gamma_inv, "{}", sched.name());
+            }
+            assert_eq!(res_ref.final_test_acc, res_b.final_test_acc,
+                       "{}", sched.name());
+            for ((na, wa), (_, wb)) in
+                net_ref.weights().iter().zip(net_b.weights())
+            {
+                assert_eq!(wa.data, wb.data,
+                           "{}: weight {na} diverged after resume",
+                           sched.name());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

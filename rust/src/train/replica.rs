@@ -145,7 +145,7 @@ pub fn shard_bounds(b: usize, n: usize) -> Vec<(usize, usize)> {
 /// Output elements **per sample** of every block, from one zero-sample
 /// probe forward: activation shapes depend on the spec alone, never on
 /// the weights, so the probe pins the dropout-mask geometry once.
-fn probe_out_sizes(net: &Network) -> Vec<usize> {
+pub(crate) fn probe_out_sizes(net: &Network) -> Vec<usize> {
     let mut shape = vec![1usize];
     shape.extend(&net.spec.input_shape);
     let mut a = ITensor::zeros(&shape);
@@ -160,8 +160,8 @@ fn probe_out_sizes(net: &Network) -> Vec<usize> {
 
 /// Shard slice of one block's pre-drawn keep-mask (`None` when the
 /// block's dropout is off, signalled by an empty mask).
-fn mask_slice(mask: &[bool], per_sample: usize, start: usize,
-              end: usize) -> Option<&[bool]> {
+pub(crate) fn mask_slice(mask: &[bool], per_sample: usize, start: usize,
+                         end: usize) -> Option<&[bool]> {
     if mask.is_empty() {
         None
     } else {
@@ -171,19 +171,20 @@ fn mask_slice(mask: &[bool], per_sample: usize, start: usize,
 
 /// One replica's contribution for one global batch: shard losses,
 /// accuracy count, and the exported gradient set.
-struct ShardOut {
-    block_loss_raw: Vec<i64>,
-    head_loss_raw: i64,
-    correct: usize,
-    grads: GradSet,
+pub(crate) struct ShardOut {
+    pub(crate) block_loss_raw: Vec<i64>,
+    pub(crate) head_loss_raw: i64,
+    pub(crate) correct: usize,
+    pub(crate) grads: GradSet,
 }
 
 /// Forward + backward over one shard, exporting gradients without
 /// applying any update. Gradient tensors are moved straight out of the
 /// backward kernels into the [`GradSet`] — no copy.
-fn shard_grads(net: &mut Network, x: &ITensor, labels: &[usize],
-               num_classes: usize, masks: &[Vec<bool>],
-               out_per_sample: &[usize], start: usize) -> ShardOut {
+pub(crate) fn shard_grads(net: &mut Network, x: &ITensor, labels: &[usize],
+                          num_classes: usize, masks: &[Vec<bool>],
+                          out_per_sample: &[usize], start: usize)
+                          -> ShardOut {
     let y32 = one_hot32(labels, num_classes);
     let end = start + labels.len();
     let nblocks = net.blocks.len();

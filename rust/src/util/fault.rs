@@ -1,0 +1,385 @@
+//! Deterministic fault injection for the distributed training transport.
+//!
+//! A [`FaultPlan`] is a list of [`FaultRule`]s parsed from a JSON array
+//! (CLI `--fault-plan FILE|JSON`, env `NITRO_FAULT`). Each rule names a
+//! fault `kind` and matches on the injecting rank, the peer on the other
+//! end of the connection, and the training step — all optional, absent
+//! means "any". The transport seam in `train::dist` consults the plan at
+//! three points:
+//!
+//! * **connect** — before dialing a peer ([`FaultPlan::on_connect`]):
+//!   `drop` refuses the attempt, `partition` refuses it for as long as
+//!   the rule matches, `delay` sleeps before dialing.
+//! * **send** — before writing a frame ([`FaultPlan::on_send`]): `drop`
+//!   discards the frame (the peer sees a silent loss), `delay` sleeps
+//!   `ms` first, `stall` holds the frame for `ms` (a slow-peer stall the
+//!   receiver's deadline must absorb or cut), `partition` severs the
+//!   link (the write errors as if the cable were pulled).
+//! * **step boundary** — after finishing step `k`
+//!   ([`FaultPlan::crash_at`]): `crash` terminates the rank. The CLI
+//!   exits the process with [`CRASH_EXIT_CODE`]; in-process test harness
+//!   ranks return from their thread instead.
+//!
+//! Every decision is a pure function of (rule list, rank, peer, step) —
+//! no randomness, no wall clock — so a fault schedule replays exactly
+//! and the recovery path it exercises is testable bit-for-bit.
+//!
+//! Grammar (JSON, one object per rule):
+//!
+//! ```jsonc
+//! [
+//!   {"kind": "crash", "rank": 1, "step": 5},
+//!   {"kind": "drop",  "rank": 0, "peer": 2, "step": 3},
+//!   {"kind": "delay", "rank": 1, "ms": 40},
+//!   {"kind": "stall", "rank": 2, "peer": 0, "step": 2, "ms": 200},
+//!   {"kind": "partition", "rank": 0, "peer": 1, "step": 4, "until_step": 6}
+//! ]
+//! ```
+//!
+//! `step`/`until_step` bound the half-open step window `[step,
+//! until_step)`; omitting `until_step` makes the rule fire on `step`
+//! alone (or, with `step` also absent, on every step). `ms` is required
+//! for `delay`/`stall` and ignored otherwise.
+
+use crate::util::jsonio::Json;
+
+/// Exit code a rank terminates with when a `crash` rule fires — distinct
+/// from clean exit (0) and usage/config errors (2) so the CI fault lane
+/// can assert the crash actually happened before the rejoin.
+pub const CRASH_EXIT_CODE: i32 = 43;
+
+/// One fault kind at the transport seam.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Discard one matching frame / refuse one connect attempt.
+    Drop,
+    /// Sleep `ms` before the matching send / connect proceeds.
+    Delay,
+    /// Hold a matching frame for `ms` before sending (slow peer).
+    Stall,
+    /// Sever the link: sends error, connects are refused, for the whole
+    /// matching step window.
+    Partition,
+    /// Terminate the rank at the matching step boundary.
+    Crash,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind, String> {
+        Ok(match s {
+            "drop" => FaultKind::Drop,
+            "delay" => FaultKind::Delay,
+            "stall" => FaultKind::Stall,
+            "partition" => FaultKind::Partition,
+            "crash" => FaultKind::Crash,
+            other => {
+                return Err(format!(
+                    "fault plan: unknown kind '{other}' (expected drop, \
+                     delay, stall, partition or crash)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Drop => "drop",
+            FaultKind::Delay => "delay",
+            FaultKind::Stall => "stall",
+            FaultKind::Partition => "partition",
+            FaultKind::Crash => "crash",
+        }
+    }
+}
+
+/// One rule: a kind plus optional match fields.
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    pub kind: FaultKind,
+    /// Rank doing the injecting (`None` = any rank).
+    pub rank: Option<usize>,
+    /// Peer on the other end of the link (`None` = any peer).
+    pub peer: Option<usize>,
+    /// First step the rule fires on (`None` = any step).
+    pub step: Option<u64>,
+    /// One past the last step of the window; `None` with `step` set
+    /// means the single step `step`.
+    pub until_step: Option<u64>,
+    /// Sleep duration for `delay` / `stall`.
+    pub ms: u64,
+}
+
+impl FaultRule {
+    fn matches(&self, rank: usize, peer: Option<usize>, step: u64) -> bool {
+        if self.rank.is_some_and(|r| r != rank) {
+            return false;
+        }
+        match (self.peer, peer) {
+            (Some(want), Some(got)) if want != got => return false,
+            (Some(_), None) => return false,
+            _ => {}
+        }
+        match (self.step, self.until_step) {
+            (Some(s), Some(u)) => step >= s && step < u,
+            (Some(s), None) => step == s,
+            (None, _) => true,
+        }
+    }
+}
+
+/// What the transport seam should do with one send / connect attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendAction {
+    /// No matching rule: perform the operation normally.
+    Deliver,
+    /// Discard the frame (send) / refuse this attempt (connect).
+    Drop,
+    /// Sleep this many ms, then perform the operation.
+    DelayMs(u64),
+    /// The link is severed for this step window: error the operation.
+    Partitioned,
+}
+
+/// A parsed fault plan: the ordered rule list. First matching rule wins,
+/// so plans compose left to right like a firewall table.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse from JSON text (a JSON array of rule objects).
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let j = Json::parse(text).map_err(|e| format!("fault plan: {e}"))?;
+        let arr = j
+            .as_array()
+            .ok_or("fault plan: top level must be a JSON array")?;
+        let mut rules = Vec::with_capacity(arr.len());
+        for (i, r) in arr.iter().enumerate() {
+            let kind_s = r
+                .req("kind")
+                .map_err(|e| format!("fault plan rule {i}: {e}"))?
+                .as_str()
+                .ok_or_else(|| {
+                    format!("fault plan rule {i}: 'kind' is not a string")
+                })?;
+            let kind = FaultKind::parse(kind_s)
+                .map_err(|e| format!("rule {i}: {e}"))?;
+            let opt_u64 = |key: &str| -> Result<Option<u64>, String> {
+                match r.get(key) {
+                    None => Ok(None),
+                    Some(v) => v
+                        .as_i64()
+                        .filter(|&n| n >= 0)
+                        .map(|n| Some(n as u64))
+                        .ok_or_else(|| {
+                            format!(
+                                "fault plan rule {i}: '{key}' must be a \
+                                 non-negative integer"
+                            )
+                        }),
+                }
+            };
+            let ms = opt_u64("ms")?.unwrap_or(0);
+            if matches!(kind, FaultKind::Delay | FaultKind::Stall) && ms == 0
+            {
+                return Err(format!(
+                    "fault plan rule {i}: '{}' needs a positive 'ms'",
+                    kind.name()
+                ));
+            }
+            let step = opt_u64("step")?;
+            let until_step = opt_u64("until_step")?;
+            if let (Some(s), Some(u)) = (step, until_step) {
+                if u <= s {
+                    return Err(format!(
+                        "fault plan rule {i}: until_step {u} <= step {s}"
+                    ));
+                }
+            }
+            rules.push(FaultRule {
+                kind,
+                rank: opt_u64("rank")?.map(|v| v as usize),
+                peer: opt_u64("peer")?.map(|v| v as usize),
+                step,
+                until_step,
+                ms,
+            });
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    /// Parse from a CLI argument: a path to a JSON file, or inline JSON
+    /// (anything starting with `[`).
+    pub fn from_arg(arg: &str) -> Result<FaultPlan, String> {
+        let trimmed = arg.trim_start();
+        if trimmed.starts_with('[') {
+            FaultPlan::parse(arg)
+        } else {
+            let text = std::fs::read_to_string(arg)
+                .map_err(|e| format!("fault plan {arg}: {e}"))?;
+            FaultPlan::parse(&text)
+        }
+    }
+
+    /// Parse from the `NITRO_FAULT` environment variable, if set.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var("NITRO_FAULT") {
+            Ok(v) if !v.is_empty() => FaultPlan::from_arg(&v).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    fn first_match(&self, rank: usize, peer: Option<usize>, step: u64)
+                   -> Option<&FaultRule> {
+        self.rules
+            .iter()
+            .find(|r| r.kind != FaultKind::Crash
+                      && r.matches(rank, peer, step))
+    }
+
+    /// Decide the fate of a frame `rank` is about to send to `peer` at
+    /// training step `step`. `stall` and `delay` both map to
+    /// [`SendAction::DelayMs`] — at the send seam the difference is only
+    /// intent (stall models a slow peer, delay models a slow link).
+    pub fn on_send(&self, rank: usize, peer: usize, step: u64)
+                   -> SendAction {
+        match self.first_match(rank, Some(peer), step) {
+            None => SendAction::Deliver,
+            Some(r) => match r.kind {
+                FaultKind::Drop => SendAction::Drop,
+                FaultKind::Delay | FaultKind::Stall => {
+                    SendAction::DelayMs(r.ms)
+                }
+                FaultKind::Partition => SendAction::Partitioned,
+                FaultKind::Crash => unreachable!("filtered above"),
+            },
+        }
+    }
+
+    /// Decide the fate of a connect attempt from `rank` to `peer` at
+    /// step `step`. `drop` refuses one attempt (retry may succeed if the
+    /// window moves), `partition` refuses while the window matches.
+    pub fn on_connect(&self, rank: usize, peer: usize, step: u64)
+                      -> SendAction {
+        self.on_send(rank, peer, step)
+    }
+
+    /// True when `rank` must crash after finishing step `step`.
+    pub fn crash_at(&self, rank: usize, step: u64) -> bool {
+        self.rules.iter().any(|r| {
+            r.kind == FaultKind::Crash && r.matches(rank, None, step)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_matches() {
+        let plan = FaultPlan::parse(
+            r#"[
+                {"kind": "crash", "rank": 1, "step": 5},
+                {"kind": "drop",  "rank": 0, "peer": 2, "step": 3},
+                {"kind": "delay", "rank": 1, "ms": 40},
+                {"kind": "stall", "rank": 2, "peer": 0, "ms": 200},
+                {"kind": "partition", "rank": 3, "step": 4,
+                 "until_step": 6}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(plan.rules.len(), 5);
+        // crash matches only its rank and step
+        assert!(plan.crash_at(1, 5));
+        assert!(!plan.crash_at(1, 4));
+        assert!(!plan.crash_at(0, 5));
+        // drop matches its (rank, peer, step) triple exactly
+        assert_eq!(plan.on_send(0, 2, 3), SendAction::Drop);
+        assert_eq!(plan.on_send(0, 1, 3), SendAction::Deliver);
+        assert_eq!(plan.on_send(0, 2, 4), SendAction::Deliver);
+        // delay has no step bound: fires on every step for rank 1
+        assert_eq!(plan.on_send(1, 0, 0), SendAction::DelayMs(40));
+        assert_eq!(plan.on_send(1, 2, 99), SendAction::DelayMs(40));
+        // stall maps to a delay at the send seam
+        assert_eq!(plan.on_send(2, 0, 7), SendAction::DelayMs(200));
+        assert_eq!(plan.on_send(2, 1, 7), SendAction::Deliver);
+        // partition holds for the half-open window [4, 6)
+        assert_eq!(plan.on_connect(3, 0, 4), SendAction::Partitioned);
+        assert_eq!(plan.on_connect(3, 0, 5), SendAction::Partitioned);
+        assert_eq!(plan.on_connect(3, 0, 6), SendAction::Deliver);
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let plan = FaultPlan::parse(
+            r#"[{"kind": "drop", "rank": 0, "step": 1},
+                {"kind": "delay", "rank": 0, "ms": 10}]"#,
+        )
+        .unwrap();
+        assert_eq!(plan.on_send(0, 1, 1), SendAction::Drop);
+        assert_eq!(plan.on_send(0, 1, 2), SendAction::DelayMs(10));
+    }
+
+    #[test]
+    fn crash_rules_do_not_shadow_send_decisions() {
+        let plan = FaultPlan::parse(
+            r#"[{"kind": "crash", "step": 2},
+                {"kind": "drop", "step": 2}]"#,
+        )
+        .unwrap();
+        // the crash rule is ignored at the send seam even though it is
+        // listed first and matches
+        assert_eq!(plan.on_send(0, 1, 2), SendAction::Drop);
+        assert!(plan.crash_at(0, 2));
+    }
+
+    #[test]
+    fn rejects_malformed_plans() {
+        for (text, needle) in [
+            ("{}", "array"),
+            ("[{\"step\": 1}]", "kind"),
+            ("[{\"kind\": \"melt\"}]", "unknown kind"),
+            ("[{\"kind\": \"delay\"}]", "ms"),
+            ("[{\"kind\": \"stall\", \"ms\": 0}]", "ms"),
+            ("[{\"kind\": \"drop\", \"rank\": -1}]", "non-negative"),
+            (
+                "[{\"kind\": \"partition\", \"step\": 5, \
+                  \"until_step\": 5}]",
+                "until_step",
+            ),
+            ("not json", "fault plan"),
+        ] {
+            let err = FaultPlan::parse(text).unwrap_err();
+            assert!(err.contains(needle), "{text}: {err}");
+        }
+    }
+
+    #[test]
+    fn from_arg_reads_inline_or_file() {
+        let plan =
+            FaultPlan::from_arg(r#"[{"kind": "crash", "step": 0}]"#).unwrap();
+        assert!(plan.crash_at(0, 0));
+        let dir = std::env::temp_dir().join("nitro_fault_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        std::fs::write(&path, r#"[{"kind": "drop", "rank": 2}]"#).unwrap();
+        let plan = FaultPlan::from_arg(path.to_str().unwrap()).unwrap();
+        assert_eq!(plan.on_send(2, 0, 0), SendAction::Drop);
+        let err = FaultPlan::from_arg("does/not/exist.json").unwrap_err();
+        assert!(err.contains("exist.json"), "{err}");
+    }
+
+    #[test]
+    fn empty_plan_delivers_everything() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        assert_eq!(plan.on_send(0, 1, 0), SendAction::Deliver);
+        assert!(!plan.crash_at(0, 0));
+    }
+}

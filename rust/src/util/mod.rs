@@ -12,9 +12,13 @@
 //! * [`prop`]    — seeded property-test driver (replaces `proptest`)
 //! * [`hist`]    — log-bucketed mergeable latency histogram (replaces
 //!                 `hdrhistogram`, for the serving percentiles)
+//! * [`fault`]   — deterministic fault-injection plans for the
+//!                 distributed training transport (replaces `toxiproxy`
+//!                 -style chaos tooling with a replayable pure function)
 
 pub mod bench;
 pub mod cli;
+pub mod fault;
 pub mod hist;
 pub mod jsonio;
 pub mod par;

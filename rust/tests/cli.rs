@@ -230,6 +230,91 @@ fn train_cli_replicas_metric_identical() {
     assert!(stderr.contains("replicas"), "{stderr}");
 }
 
+/// The full fault-tolerance story through the real binary: a 2-rank
+/// TCP distributed run where rank 1 is killed mid-training by an
+/// injected crash (exit 43), restarted with `--resume`, catches up from
+/// its periodic checkpoint and re-enters the group — and every rank's
+/// final checkpoint is byte-identical to a single-process
+/// `--replicas 2` run on the same data.
+#[test]
+fn train_distributed_crash_rejoin_matches_single_process() {
+    use std::net::TcpListener;
+    let dir = std::env::temp_dir().join("nitro_cli_dist");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path =
+        |n: &str| dir.join(n).to_str().unwrap().to_string();
+    let common: &[&str] = &[
+        "--preset", "tinycnn", "--dataset", "tiny", "--epochs", "4",
+        "--batch", "32", "--n-train", "120", "--n-test", "40", "--p-c",
+        "0.2", "--p-l", "0.2", "--quiet",
+    ];
+    // ground truth: one process, two in-process replicas
+    let ref_ckpt = path("ref.ckpt");
+    let args =
+        [&["train"][..], common, &["--replicas", "2", "--save",
+                                   &ref_ckpt]]
+            .concat();
+    let (code, _, stderr) = run(&args);
+    assert_eq!(code, 0, "reference run failed: {stderr}");
+    // two free loopback ports (bound then released; the trainer's bind
+    // retry loop covers the reuse window)
+    let la = TcpListener::bind("127.0.0.1:0").unwrap();
+    let lb = TcpListener::bind("127.0.0.1:0").unwrap();
+    let peers = format!("127.0.0.1:{},127.0.0.1:{}",
+                        la.local_addr().unwrap().port(),
+                        lb.local_addr().unwrap().port());
+    drop((la, lb));
+    let (f0, f1) = (path("final0.ckpt"), path("final1.ckpt"));
+    let ck1 = path("ck1.ckpt");
+    let spawn_rank = |rank: &str, extra: &[&str]| {
+        let args = [&["train"][..], common,
+                    &["--distributed", "--rank", rank, "--peers",
+                      &peers],
+                    extra]
+            .concat();
+        nitro()
+            .args(&args)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawn nitro rank")
+    };
+    // 120 samples at batch 32 = 4 steps/epoch; rank 1 checkpoints every
+    // 2 epochs (so a state exists at step 8) and is crashed at step 10
+    let r0 = spawn_rank("0", &["--save", &f0]);
+    let r1 = spawn_rank(
+        "1",
+        &["--save", &f1, "--checkpoint", &ck1, "--checkpoint-every",
+          "2", "--fault-plan",
+          r#"[{"kind": "crash", "rank": 1, "step": 10}]"#],
+    );
+    let out1 = r1.wait_with_output().unwrap();
+    assert_eq!(
+        out1.status.code(),
+        Some(43),
+        "rank 1 should die with the crash exit code: {}",
+        String::from_utf8_lossy(&out1.stderr)
+    );
+    // elastic rejoin: same rank, same port, resumed from the checkpoint
+    let r1b = spawn_rank(
+        "1",
+        &["--save", &f1, "--checkpoint", &ck1, "--resume"],
+    );
+    let out0 = r0.wait_with_output().unwrap();
+    assert_eq!(out0.status.code(), Some(0), "rank 0: {}",
+               String::from_utf8_lossy(&out0.stderr));
+    let out1b = r1b.wait_with_output().unwrap();
+    assert_eq!(out1b.status.code(), Some(0), "rank 1 rejoin: {}",
+               String::from_utf8_lossy(&out1b.stderr));
+    let reference = std::fs::read(&ref_ckpt).unwrap();
+    assert_eq!(std::fs::read(&f0).unwrap(), reference,
+               "rank 0 weights diverged from single-process training");
+    assert_eq!(std::fs::read(&f1).unwrap(), reference,
+               "rejoined rank 1 weights diverged from single-process \
+                training");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn bench_kernels_emits_schema_versioned_json() {
     let dir = std::env::temp_dir().join("nitro_cli_benchk");
