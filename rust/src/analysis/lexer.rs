@@ -1,0 +1,501 @@
+//! Token-level lexer for `nitro lint`.
+//!
+//! A hand-rolled scanner, not a full Rust parser: it produces just
+//! enough structure for the rule passes — identifier / integer / float /
+//! punctuation / lifetime / string tokens with 1-based line numbers —
+//! while being exact about the places a naive scanner goes wrong:
+//! nested block comments, raw and byte strings (`r#"..."#`, `b"..."`),
+//! char literals vs lifetimes (`'a'` vs `'a`), float literals including
+//! exponents and `f32`/`f64` suffixes, and escaped newlines inside
+//! string literals (they still advance the line counter, so diagnostics
+//! after a long string point at the right line).
+//!
+//! Comments are also where the allow escapes live; [`lex`] extracts
+//! them while scanning, so rule passes never re-read the source.
+
+/// The rule names an allow comment may reference.
+pub const KNOWN_RULES: [&str; 4] =
+    ["int-discipline", "no-float", "no-panic", "determinism"];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Int,
+    Float,
+    Punct,
+    Lifetime,
+    /// String and char literals; their content never matters to a rule,
+    /// so the text is dropped.
+    Str,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// A parsed `allow` escape comment. A non-file-wide allow covers its
+/// own line and the next one, so it can sit above the flagged line.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub line: usize,
+    pub rules: Vec<String>,
+    pub reason: String,
+    pub file_wide: bool,
+}
+
+/// Everything one scan of a file produces: the token stream, the
+/// well-formed allow escapes, and the malformed ones (reported as
+/// `allow-syntax` findings — a broken escape must never silently
+/// suppress anything).
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<Allow>,
+    pub bad_allows: Vec<(usize, String)>,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+const PUNCTS: &[&str] = &[
+    "<<=", ">>=", "...", "..=", "::", "->", "=>", "<<", ">>", "+=", "-=",
+    "*=", "/=", "%=", "&&", "||", "==", "!=", "<=", ">=", "&=", "|=",
+    "^=", "..",
+];
+
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut allows = Vec::new();
+    let mut bad_allows = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        if b[i..].starts_with(b"//") {
+            let j = b[i..]
+                .iter()
+                .position(|&x| x == b'\n')
+                .map(|p| i + p)
+                .unwrap_or(n);
+            parse_allow(&src[i..j], line, &mut allows, &mut bad_allows);
+            i = j;
+            continue;
+        }
+        if b[i..].starts_with(b"/*") {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i..].starts_with(b"/*") {
+                    depth += 1;
+                    i += 2;
+                } else if b[i..].starts_with(b"*/") {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if matches!(c, b'r' | b'b' | b'R' | b'B') && is_raw_or_byte_str(b, i)
+        {
+            let (ni, nl) = skip_raw_str(b, i, line);
+            i = ni;
+            line = nl;
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+            continue;
+        }
+        if c == b'"' {
+            i += 1;
+            while i < n {
+                if b[i] == b'\\' {
+                    if i + 1 < n && b[i + 1] == b'\n' {
+                        line += 1;
+                    }
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'\n' {
+                    line += 1;
+                }
+                if b[i] == b'"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+            continue;
+        }
+        if c == b'\'' {
+            // `'a` (lifetime) vs `'a'` (char literal): a lifetime is a
+            // quote + identifier NOT followed by a closing quote
+            if i + 1 < n
+                && is_ident_start(b[i + 1])
+                && !(i + 2 < n && b[i + 2] == b'\'')
+            {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: src[i..j].to_string(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            i += 1;
+            while i < n {
+                if b[i] == b'\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'\'' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut isfloat = false;
+            if c == b'0' && i + 1 < n && matches!(b[i + 1], b'x' | b'o' | b'b')
+            {
+                j = i + 2;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+            } else {
+                while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                    j += 1;
+                }
+                // `1.5` is a float; `1..n` is a range; `1.max(x)` is a
+                // method call on an integer
+                if j < n && b[j] == b'.' && !(j + 1 < n && b[j + 1] == b'.') {
+                    if j + 1 >= n || !is_ident_start(b[j + 1]) {
+                        isfloat = true;
+                        j += 1;
+                        while j < n && (b[j].is_ascii_digit() || b[j] == b'_')
+                        {
+                            j += 1;
+                        }
+                    }
+                }
+                if j < n && matches!(b[j], b'e' | b'E') {
+                    let mut k = j + 1;
+                    if k < n && matches!(b[k], b'+' | b'-') {
+                        k += 1;
+                    }
+                    if k < n && b[k].is_ascii_digit() {
+                        isfloat = true;
+                        j = k;
+                        while j < n && (b[j].is_ascii_digit() || b[j] == b'_')
+                        {
+                            j += 1;
+                        }
+                    }
+                }
+                let sfx = j;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                let suffix = &src[sfx..j];
+                if suffix == "f32" || suffix == "f64" {
+                    isfloat = true;
+                }
+            }
+            toks.push(Tok {
+                kind: if isfloat { TokKind::Float } else { TokKind::Int },
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        let mut matched = false;
+        for &op in PUNCTS {
+            if b[i..].starts_with(op.as_bytes()) {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: op.to_string(),
+                    line,
+                });
+                i += op.len();
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            toks.push(Tok {
+                kind: TokKind::Punct,
+                text: (c as char).to_string(),
+                line,
+            });
+            i += 1;
+        }
+    }
+    Lexed { toks, allows, bad_allows }
+}
+
+/// `r"..."`, `r#"..."#`, `b"..."`, `br#"..."#` and friends: at most two
+/// prefix letters, then optional hashes, then a quote.
+fn is_raw_or_byte_str(b: &[u8], i: usize) -> bool {
+    let mut j = i;
+    while j < b.len() && matches!(b[j], b'b' | b'r' | b'B' | b'R') && j - i < 2
+    {
+        j += 1;
+    }
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"' && j > i
+}
+
+/// Skip a raw/byte string starting at `start`; returns (index after the
+/// closing delimiter, updated line counter). Plain byte strings still
+/// process escapes; raw strings do not.
+fn skip_raw_str(b: &[u8], start: usize, mut line: usize) -> (usize, usize) {
+    let mut j = start;
+    while j < b.len() && matches!(b[j], b'b' | b'r' | b'B' | b'R') {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // opening quote
+    let prefix_end = b.len().min(start + 2);
+    let raw = b[start..prefix_end]
+        .iter()
+        .any(|&x| x == b'r' || x == b'R');
+    while j < b.len() {
+        if b[j] == b'\\' && !raw {
+            if j + 1 < b.len() && b[j + 1] == b'\n' {
+                line += 1;
+            }
+            j += 2;
+            continue;
+        }
+        if b[j] == b'\n' {
+            line += 1;
+        }
+        if b[j] == b'"' {
+            let mut h = 0usize;
+            let mut k = j + 1;
+            while k < b.len() && h < hashes && b[k] == b'#' {
+                h += 1;
+                k += 1;
+            }
+            if h == hashes {
+                return (j + 1 + hashes, line);
+            }
+        }
+        j += 1;
+    }
+    (j, line)
+}
+
+/// Parse an allow escape out of one `//` comment, if present. The
+/// accepted grammar (also documented in README §Static analysis):
+/// an `allow(rule[,rule...])` or `allow-file(rule[,rule...])` marker
+/// introduced by the tool name and a colon, followed by a mandatory
+/// free-text justification of at least 8 characters that is not an
+/// unedited `FIXME` placeholder. Anything that names the tool but does
+/// not parse lands in `bad` and becomes an `allow-syntax` finding.
+pub fn parse_allow(
+    comment: &str,
+    line: usize,
+    allows: &mut Vec<Allow>,
+    bad: &mut Vec<(usize, String)>,
+) {
+    let marker = "nitro-lint:";
+    let p = match comment.find(marker) {
+        Some(p) => p,
+        None => return,
+    };
+    let rest = comment[p + marker.len()..].trim();
+    let (file_wide, body) = if let Some(r) = rest.strip_prefix("allow-file(")
+    {
+        (true, r)
+    } else if let Some(r) = rest.strip_prefix("allow(") {
+        (false, r)
+    } else {
+        bad.push((
+            line,
+            "nitro-lint comment must be `nitro-lint: allow(<rule>) \
+             <reason>` or allow-file(...)"
+                .to_string(),
+        ));
+        return;
+    };
+    let close = match body.find(')') {
+        Some(c) => c,
+        None => {
+            bad.push((line, "unterminated allow( rule list".to_string()));
+            return;
+        }
+    };
+    let rules: Vec<String> = body[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let reason = body[close + 1..].trim().to_string();
+    if rules.is_empty()
+        || rules.iter().any(|r| !KNOWN_RULES.contains(&r.as_str()))
+    {
+        bad.push((
+            line,
+            format!("unknown rule in allow(): '{}'", &body[..close]),
+        ));
+        return;
+    }
+    if reason.len() < 8 {
+        bad.push((
+            line,
+            "allow() requires a justification (>= 8 chars) after the \
+             rule list"
+                .to_string(),
+        ));
+        return;
+    }
+    if reason.contains("FIXME") {
+        bad.push((
+            line,
+            "allow() reason is an unedited FIXME placeholder".to_string(),
+        ));
+        return;
+    }
+    allows.push(Allow { line, rules, reason, file_wide });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src)
+            .toks
+            .into_iter()
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn float_vs_int_vs_range_literals() {
+        let toks = kinds("1 + 2.5 - 0x1f << 3e4 .. 1..4 7f64 8i32 9usize");
+        let floats: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Float)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(floats, ["2.5", "3e4", "7f64"]);
+        let ints: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Int)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(ints, ["1", "0x1f", "1", "4", "8i32", "9usize"]);
+    }
+
+    #[test]
+    fn lifetime_vs_char_literal() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'a'; }");
+        assert_eq!(
+            toks.iter()
+                .filter(|(k, _)| *k == TokKind::Lifetime)
+                .count(),
+            2
+        );
+        assert_eq!(
+            toks.iter().filter(|(k, _)| *k == TokKind::Str).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn raw_strings_and_comments_hide_operators() {
+        let toks = kinds(
+            "let s = r#\"a + b\"#; /* x * y /* nested */ */ let t = \"c + d\";",
+        );
+        assert!(toks
+            .iter()
+            .all(|(k, t)| *k != TokKind::Punct || (t != "+" && t != "*")));
+    }
+
+    #[test]
+    fn escaped_newline_in_string_keeps_line_numbers() {
+        let l = lex("let s = \"a\\\n b\";\nlet x = 1;");
+        let last = l.toks.last().expect("tokens");
+        assert_eq!(last.line, 3, "line counter lost a string newline");
+    }
+
+    #[test]
+    fn allow_grammar_accept_and_reject() {
+        let ok = "// nitro-lint: allow(no-panic,no-float) length checked \
+                  two lines up";
+        let l = lex(ok);
+        assert_eq!(l.bad_allows.len(), 0);
+        assert_eq!(l.allows.len(), 1);
+        assert_eq!(l.allows[0].rules, ["no-panic", "no-float"]);
+        assert!(!l.allows[0].file_wide);
+
+        let filewide =
+            "// nitro-lint: allow-file(determinism) fixture data, not \
+             compute";
+        assert!(lex(filewide).allows[0].file_wide);
+
+        for bad in [
+            "// nitro-lint: allow(no-panic)",        // no reason
+            "// nitro-lint: allow(no-panic) short",  // reason too short
+            "// nitro-lint: allow(nonsense) some reason here", // bad rule
+            "// nitro-lint: allow(no-panic some reason",       // unclosed
+            "// nitro-lint: allowing things casually",         // bad verb
+            "// nitro-lint: allow(no-panic) FIXME: justify this exemption",
+        ] {
+            let l = lex(bad);
+            assert_eq!(l.allows.len(), 0, "accepted: {bad}");
+            assert_eq!(l.bad_allows.len(), 1, "not rejected: {bad}");
+        }
+    }
+}

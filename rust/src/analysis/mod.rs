@@ -1,0 +1,222 @@
+//! `nitro lint`: a static analyzer for the repo's integer-discipline
+//! contract (NITRO-D §3 — training must be bit-exact integer-only).
+//!
+//! Four rules, each scoped to the modules where its invariant is
+//! load-bearing:
+//!
+//! - `int-discipline` — no bare `+ - * << += -= *= <<=` on integer
+//!   *data*. "wrapping" modules (the integer pipeline) must spell out
+//!   `wrapping_*`/`checked_*`/`saturating_*`; "guarded" modules
+//!   (histograms, shedding counters, benchmarks) flag every bare op so
+//!   saturation points are explicit.
+//! - `no-float` — no `f32`/`f64` types or float literals in the
+//!   integer-domain modules; floats anywhere in the pipeline silently
+//!   break cross-platform bit-exactness.
+//! - `no-panic` — no `unwrap`/`expect`, panic-family macros, or
+//!   unchecked indexing in modules that parse hostile input (wire
+//!   codecs, checkpoints, JSON); malformed bytes must be an `Err`.
+//! - `determinism` — no `HashMap`/`HashSet`/`Instant`/`SystemTime`/
+//!   `RandomState`/`thread_rng` in compute or serialization modules;
+//!   iteration order and timing must never influence results.
+//!
+//! A violation can be waived in place with an escape comment: the tool
+//! name and a colon, then `allow(rule[,rule]) reason` to cover that
+//! line and the next, or `allow-file(rule[,rule]) reason` for the whole
+//! file. The reason is mandatory (at least 8 characters, and not an
+//! unedited FIXME stub), so every waiver carries its justification in
+//! the diff. Malformed escapes are themselves violations
+//! (`allow-syntax`) and cannot be waived — there is no baseline file
+//! and nothing is grandfathered.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+pub use report::{Finding, Report};
+
+/// Integer-pipeline modules: bare ops on int data must be spelled
+/// `wrapping_*`/`checked_*`/`saturating_*`.
+pub const R1_WRAPPING: &[&str] = &[
+    "rust/src/tensor/ops_int.rs",
+    "rust/src/tensor/backend.rs",
+    "rust/src/optim/",
+    "rust/src/train/replica.rs",
+    "rust/src/train/dist.rs",
+];
+
+/// Saturation-sensitive counters: every bare op is flagged, float or
+/// bookkeeping excepted, so overflow handling is always explicit.
+pub const R1_GUARDED: &[&str] = &[
+    "rust/src/util/hist.rs",
+    "rust/src/coordinator/serve/shed.rs",
+    "rust/src/util/bench.rs",
+];
+
+/// Integer-domain modules: `f32`/`f64` and float literals are banned.
+pub const R2_SCOPE: &[&str] = &[
+    "rust/src/tensor/ops_int.rs",
+    "rust/src/tensor/backend.rs",
+    "rust/src/optim/",
+];
+
+/// Hostile-input surfaces: parsing must return `Err`, never panic.
+pub const R3_SCOPE: &[&str] = &[
+    "rust/src/coordinator/serve/wire.rs",
+    "rust/src/train/checkpoint.rs",
+    "rust/src/train/framing.rs",
+    "rust/src/util/jsonio.rs",
+];
+
+/// Deterministic compute/serialization modules: no unordered
+/// collections, clocks, or RNG handles.
+pub const R4_SCOPE: &[&str] = &[
+    "rust/src/tensor/",
+    "rust/src/nn/",
+    "rust/src/optim/",
+    "rust/src/train/replica.rs",
+    "rust/src/train/framing.rs",
+    "rust/src/util/jsonio.rs",
+];
+
+/// A scope entry is an exact file path, or a directory prefix when it
+/// ends with `/`. Paths are repo-relative with forward slashes.
+pub fn scoped(rel: &str, scopes: &[&str]) -> bool {
+    scopes
+        .iter()
+        .any(|s| rel == *s || (s.ends_with('/') && rel.starts_with(s)))
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir)
+        .map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> =
+        rd.filter_map(|r| r.ok().map(|d| d.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Scan every `.rs` file under `<root>/rust/src` and report violations
+/// in deterministic (sorted-path, then token) order.
+pub fn run(root: &Path) -> Result<Report, String> {
+    let src_root = root.join("rust").join("src");
+    if !src_root.is_dir() {
+        return Err(format!(
+            "{} does not look like a repo root (no rust/src)",
+            root.display()
+        ));
+    }
+    let mut files = Vec::new();
+    walk(&src_root, &mut files)?;
+    let mut findings = Vec::new();
+    let mut allowed = 0usize;
+    for p in &files {
+        let src = std::fs::read_to_string(p)
+            .map_err(|e| format!("read {}: {e}", p.display()))?;
+        let rel = rel_path(root, p);
+        let mut res = rules::check_file(&rel, &src);
+        findings.append(&mut res.findings);
+        allowed += res.allowed;
+    }
+    Ok(Report { files_scanned: files.len(), findings, allowed })
+}
+
+/// Insert placeholder escape comments above each violating line. The
+/// stub's FIXME reason is deliberately rejected by the parser, so the
+/// tree stays red until a human replaces it with a real justification.
+/// Returns the number of comments inserted.
+/// Per-file map of violating line -> rules to stub an allow for.
+type LineRules<'a> = BTreeMap<usize, BTreeSet<&'a str>>;
+
+pub fn fix_allow(root: &Path, report: &Report) -> Result<usize, String> {
+    let mut by_file: BTreeMap<&str, LineRules> = BTreeMap::new();
+    for f in &report.findings {
+        if f.rule == "allow-syntax" {
+            continue;
+        }
+        by_file
+            .entry(f.file.as_str())
+            .or_default()
+            .entry(f.line)
+            .or_default()
+            .insert(f.rule);
+    }
+    let mut inserted = 0usize;
+    for (file, lines) in &by_file {
+        let path = root.join(file);
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let mut text: Vec<String> =
+            src.lines().map(|s| s.to_string()).collect();
+        // insert bottom-up so earlier line numbers stay valid
+        for (&line, rules) in lines.iter().rev() {
+            let idx = line.saturating_sub(1);
+            if idx > text.len() {
+                continue;
+            }
+            let indent: String = text
+                .get(idx)
+                .map(|l| {
+                    l.chars().take_while(|c| c.is_whitespace()).collect()
+                })
+                .unwrap_or_default();
+            let joined =
+                rules.iter().copied().collect::<Vec<_>>().join(",");
+            text.insert(
+                idx,
+                format!(
+                    "{indent}// nitro-lint: allow({joined}) FIXME: \
+                     justify this exemption"
+                ),
+            );
+            inserted += 1;
+        }
+        let mut out = text.join("\n");
+        out.push('\n');
+        std::fs::write(&path, out)
+            .map_err(|e| format!("write {}: {e}", path.display()))?;
+    }
+    Ok(inserted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The gate behind the `lint-invariants` CI lane: the tree itself
+    /// must carry zero unwaived violations, with no baseline file.
+    #[test]
+    fn repo_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ has a parent dir");
+        let rep = run(root).expect("lint scan succeeds");
+        assert!(rep.findings.is_empty(), "\n{}", rep.text());
+        assert!(rep.files_scanned > 30, "scanned {}", rep.files_scanned);
+    }
+
+    #[test]
+    fn scope_matching_handles_files_and_dir_prefixes() {
+        assert!(scoped("rust/src/optim/momentum.rs", R1_WRAPPING));
+        assert!(scoped("rust/src/tensor/ops_int.rs", R1_WRAPPING));
+        assert!(!scoped("rust/src/tensor/ops_int.rs", R1_GUARDED));
+        assert!(!scoped("rust/src/coordinator/spec.rs", R4_SCOPE));
+    }
+}

@@ -1,0 +1,103 @@
+//! Diagnostics for `nitro lint`: human-readable text and a
+//! schema-versioned JSON report for CI tooling.
+
+use crate::util::jsonio::Json;
+
+/// One violation, anchored to a file and line.
+pub struct Finding {
+    /// Repo-relative path with forward slashes.
+    pub file: String,
+    pub line: usize,
+    /// Rule id: one of `int-discipline`, `no-float`, `no-panic`,
+    /// `determinism`, or `allow-syntax` for malformed escapes.
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Whole-tree scan result.
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    /// Violations suppressed by reasoned allow escapes.
+    pub allowed: usize,
+}
+
+impl Report {
+    /// `file:line: [rule] message` per finding, plus a summary line.
+    pub fn text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                f.file, f.line, f.rule, f.msg
+            ));
+        }
+        out.push_str(&format!(
+            "nitro lint: {} files scanned, {} violation(s), {} allowed\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.allowed
+        ));
+        out
+    }
+
+    /// Stable machine-readable form. `schema_version` is bumped on any
+    /// breaking change to the layout; CI consumers key on it.
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Int(f.line as i64)),
+                    ("rule", Json::Str(f.rule.to_string())),
+                    ("message", Json::Str(f.msg.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema_version", Json::Int(1)),
+            ("files_scanned", Json::Int(self.files_scanned as i64)),
+            ("violations", Json::Int(self.findings.len() as i64)),
+            ("allowed", Json::Int(self.allowed as i64)),
+            ("findings", Json::Array(findings)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            files_scanned: 42,
+            findings: vec![Finding {
+                file: "rust/src/tensor/ops_int.rs".to_string(),
+                line: 7,
+                rule: "int-discipline",
+                msg: "bare `+` on integer data".to_string(),
+            }],
+            allowed: 3,
+        }
+    }
+
+    #[test]
+    fn text_has_location_rule_and_summary() {
+        let t = sample().text();
+        assert!(t.contains("rust/src/tensor/ops_int.rs:7: [int-discipline]"));
+        assert!(t.contains("42 files scanned, 1 violation(s), 3 allowed"));
+    }
+
+    #[test]
+    fn json_schema_is_stable() {
+        let d = sample().to_json().dump();
+        assert!(d.contains("\"schema_version\":1"), "{d}");
+        assert!(d.contains("\"files_scanned\":42"), "{d}");
+        assert!(d.contains("\"violations\":1"), "{d}");
+        assert!(d.contains("\"allowed\":3"), "{d}");
+        assert!(d.contains("\"rule\":\"int-discipline\""), "{d}");
+        assert!(d.contains("\"line\":7"), "{d}");
+    }
+}

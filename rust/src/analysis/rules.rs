@@ -1,0 +1,1198 @@
+//! Rule passes for `nitro lint`: token-stream analyses with just enough
+//! type evidence to keep the integer-discipline rule precise.
+//!
+//! The analyses are deliberately syntactic — no name resolution, no
+//! trait solving — but they track the evidence a reviewer would use:
+//! function parameter types, `let` bindings, struct field declarations,
+//! `for` loop induction variables (`usize`), `.len()`/`.capacity()`
+//! calls (`usize`), and `as` casts. An operand classifies as integer
+//! data, `usize` bookkeeping, or float; the `int-discipline` rule in
+//! "wrapping" mode only fires when an operand is integer *data*, while
+//! "guarded" mode flags every bare op whose operands are not float.
+//! Items under `#[cfg(test)]`/`#[test]`, `const`/`static` initializers
+//! (compile-time evaluated, overflow is a hard error there already) and
+//! declaration generics are skipped.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, Tok, TokKind};
+use super::report::Finding;
+use super::{scoped, R1_GUARDED, R1_WRAPPING, R2_SCOPE, R3_SCOPE, R4_SCOPE};
+
+/// Integer *data* types. `usize`/`isize` are intentionally absent:
+/// shape and index arithmetic is bookkeeping, not the paper's integer
+/// pipeline, and already aborts on overflow in debug builds.
+const INT_DATA_TYPES: &[&str] =
+    &["i8", "i16", "i32", "i64", "i128", "u8", "u16", "u32", "u64", "u128"];
+
+const RUST_KEYWORDS: &[&str] = &[
+    "as", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "false", "fn", "for", "if", "impl", "in", "let", "loop",
+    "match", "mod", "move", "mut", "pub", "ref", "return", "self", "Self",
+    "static", "struct", "trait", "true", "type", "unsafe", "use", "where",
+    "while",
+];
+
+/// Methods whose return value is `usize` wherever they appear in this
+/// codebase; calls resolve as bookkeeping, not integer data.
+const USIZE_RETURNING: &[&str] = &["len", "capacity"];
+
+const BARE_OPS: &[&str] = &["+", "-", "*", "<<", "+=", "-=", "*=", "<<="];
+
+const PANIC_MACROS: &[&str] =
+    &["panic", "unreachable", "todo", "unimplemented"];
+
+const R4_BANNED: &[&str] = &[
+    "HashMap", "HashSet", "Instant", "SystemTime", "RandomState",
+    "thread_rng",
+];
+
+/// Operand evidence class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Cls {
+    Int,
+    Usize,
+    Float,
+}
+
+fn is_keyword(s: &str) -> bool {
+    RUST_KEYWORDS.contains(&s)
+}
+
+/// What one file's scan produced, before and after allow application.
+pub struct FileResult {
+    pub findings: Vec<Finding>,
+    /// Violations that an allow escape suppressed.
+    pub allowed: usize,
+}
+
+type Span = (usize, usize);
+
+/// One fn body: `(body_start, body_end, name -> class evidence)`.
+type FnEv = (usize, usize, BTreeMap<String, Cls>);
+
+fn in_span(idx: usize, spans: &[Span]) -> bool {
+    spans.iter().any(|&(a, b)| a <= idx && idx < b)
+}
+
+/// Token-index ranges of `#[cfg(test)]` / `#[test]` items (the
+/// attribute, any stacked attributes after it, and the item body).
+fn skip_ranges(toks: &[Tok]) -> Vec<Span> {
+    let mut skips = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct
+            && t.text == "#"
+            && i + 1 < n
+            && toks[i + 1].text == "["
+        {
+            let mut j = i + 2;
+            let mut depth = 1i32;
+            let mut attr: Vec<&str> = Vec::new();
+            while j < n && depth > 0 {
+                if toks[j].text == "[" {
+                    depth += 1;
+                } else if toks[j].text == "]" {
+                    depth -= 1;
+                }
+                if depth > 0 {
+                    attr.push(toks[j].text.as_str());
+                }
+                j += 1;
+            }
+            let is_test = attr.first() == Some(&"test")
+                || (attr.first() == Some(&"cfg")
+                    && attr.contains(&"test"));
+            if is_test {
+                let mut k = j;
+                // stacked attributes between the test marker and the item
+                while k < n
+                    && toks[k].text == "#"
+                    && k + 1 < n
+                    && toks[k + 1].text == "["
+                {
+                    let mut d = 1i32;
+                    k += 2;
+                    while k < n && d > 0 {
+                        if toks[k].text == "[" {
+                            d += 1;
+                        } else if toks[k].text == "]" {
+                            d -= 1;
+                        }
+                        k += 1;
+                    }
+                }
+                let mut d = 0i32;
+                while k < n {
+                    let tk = &toks[k];
+                    if tk.kind == TokKind::Punct {
+                        let tx = tk.text.as_str();
+                        if tx == ";" && d == 0 {
+                            k += 1;
+                            break;
+                        }
+                        if matches!(tx, "(" | "[" | "{") {
+                            d += 1;
+                            if tx == "{" && d == 1 {
+                                k += 1;
+                                while k < n && d > 0 {
+                                    if toks[k].kind == TokKind::Punct {
+                                        let kx = toks[k].text.as_str();
+                                        if matches!(kx, "(" | "[" | "{") {
+                                            d += 1;
+                                        } else if matches!(kx, ")" | "]" | "}")
+                                        {
+                                            d -= 1;
+                                        }
+                                    }
+                                    k += 1;
+                                }
+                                break;
+                            }
+                        } else if matches!(tx, ")" | "]" | "}") {
+                            d -= 1;
+                        }
+                    }
+                    k += 1;
+                }
+                skips.push((i, k));
+                i = k;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    skips
+}
+
+/// Token ranges of `const`/`static` items (declaration through `;`).
+fn const_spans(toks: &[Tok]) -> Vec<Span> {
+    let mut spans = Vec::new();
+    let n = toks.len();
+    for i in 0..n {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident && (t.text == "const" || t.text == "static")
+        {
+            // `*const T` / `&'static` are type syntax, not items
+            if i > 0
+                && toks[i - 1].kind == TokKind::Punct
+                && (toks[i - 1].text == "*" || toks[i - 1].text == "&")
+            {
+                continue;
+            }
+            let mut j = i + 1;
+            if j < n && toks[j].kind != TokKind::Ident {
+                continue;
+            }
+            let mut d = 0i32;
+            while j < n {
+                if toks[j].kind == TokKind::Punct {
+                    let tx = toks[j].text.as_str();
+                    if matches!(tx, "(" | "[" | "{") {
+                        d += 1;
+                    } else if matches!(tx, ")" | "]" | "}") {
+                        d -= 1;
+                    } else if tx == ";" && d == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            spans.push((i, j));
+        }
+    }
+    spans
+}
+
+/// Token ranges inside declaration generics: `fn f<...>`,
+/// `struct S<...>`, `impl<...>`, `trait T<...>`, `enum E<...>` — where
+/// `<` is a bracket, never an operator.
+fn generic_spans(toks: &[Tok]) -> Vec<Span> {
+    let mut spans = Vec::new();
+    let n = toks.len();
+    for i in 0..n {
+        let t = &toks[i];
+        if t.kind != TokKind::Punct || t.text != "<" {
+            continue;
+        }
+        let prev = if i > 0 { Some(&toks[i - 1]) } else { None };
+        let prev2 = if i > 1 { Some(&toks[i - 2]) } else { None };
+        let mut decl = false;
+        if let Some(p) = prev {
+            if p.kind == TokKind::Ident {
+                if p.text == "impl" {
+                    decl = true;
+                } else if let Some(p2) = prev2 {
+                    if p2.kind == TokKind::Ident
+                        && matches!(
+                            p2.text.as_str(),
+                            "fn" | "struct" | "enum" | "trait"
+                        )
+                    {
+                        decl = true;
+                    }
+                }
+            }
+        }
+        if !decl {
+            continue;
+        }
+        let mut d = 1i32;
+        let mut j = i + 1;
+        while j < n && d > 0 {
+            if toks[j].kind == TokKind::Punct {
+                match toks[j].text.as_str() {
+                    "<" => d += 1,
+                    ">" => d -= 1,
+                    ">>" => d -= 2,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        spans.push((i, j));
+    }
+    spans
+}
+
+/// Classify the token run `toks[i..]` (until a stop punct at depth 0)
+/// as a type mention; returns the class and the index reached.
+fn classify_type_run(
+    toks: &[Tok],
+    start: usize,
+    stops: &[&str],
+) -> (Option<Cls>, usize) {
+    let mut d = 0i32;
+    let mut cls: Option<Cls> = None;
+    let mut i = start;
+    let n = toks.len();
+    while i < n {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            let tx = t.text.as_str();
+            if matches!(tx, "(" | "[" | "{" | "<") {
+                d += 1;
+            } else if matches!(tx, ")" | "]" | "}" | ">") {
+                if d == 0 && stops.contains(&tx) {
+                    break;
+                }
+                d -= 1;
+            } else if d == 0 && stops.contains(&tx) {
+                break;
+            }
+        }
+        if t.kind == TokKind::Ident {
+            let tx = t.text.as_str();
+            if matches!(tx, "usize" | "f32" | "f64") && cls.is_none() {
+                cls = Some(if tx == "usize" { Cls::Usize } else { Cls::Float });
+            } else if INT_DATA_TYPES.contains(&tx) {
+                cls = Some(Cls::Int);
+            }
+        }
+        i += 1;
+    }
+    (cls, i)
+}
+
+/// `(body_start, body_end, param evidence)` for each `fn` item; nested
+/// functions are found too. Evidence maps are fn-scoped so identical
+/// names in different functions never collide.
+fn fn_ranges(toks: &[Tok]) -> Vec<FnEv> {
+    let mut out = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident
+            && t.text == "fn"
+            && i + 1 < n
+            && toks[i + 1].kind == TokKind::Ident
+        {
+            let mut j = i + 2;
+            if j < n && toks[j].text == "<" {
+                let mut d = 1i32;
+                j += 1;
+                while j < n && d > 0 {
+                    match toks[j].text.as_str() {
+                        "<" => d += 1,
+                        ">" => d -= 1,
+                        ">>" => d -= 2,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+            let mut params: BTreeMap<String, Cls> = BTreeMap::new();
+            if j < n && toks[j].text == "(" {
+                let mut d = 1i32;
+                j += 1;
+                while j < n && d > 0 {
+                    let tj = &toks[j];
+                    if tj.kind == TokKind::Punct {
+                        let tx = tj.text.as_str();
+                        if matches!(tx, "(" | "[" | "{") {
+                            d += 1;
+                        } else if matches!(tx, ")" | "]" | "}") {
+                            d -= 1;
+                        }
+                    }
+                    if d == 1
+                        && tj.kind == TokKind::Punct
+                        && tj.text == ":"
+                        && j > 0
+                        && toks[j - 1].kind == TokKind::Ident
+                    {
+                        let (cls, _) =
+                            classify_type_run(toks, j + 1, &[",", ")"]);
+                        if let Some(c) = cls {
+                            params.insert(toks[j - 1].text.clone(), c);
+                        }
+                    }
+                    j += 1;
+                }
+            }
+            // find the body `{`, skipping return type and where clause;
+            // a `;` first means a bodyless decl (trait method, extern)
+            let mut d = 0i32;
+            let mut no_body = false;
+            while j < n {
+                let tj = &toks[j];
+                if tj.kind == TokKind::Punct {
+                    let tx = tj.text.as_str();
+                    if tx == ";" && d == 0 {
+                        no_body = true;
+                        break;
+                    }
+                    if matches!(tx, "(" | "[" | "<") {
+                        d += 1;
+                    } else if matches!(tx, ")" | "]" | ">") {
+                        d -= 1;
+                    } else if tx == "{" && d <= 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            if no_body {
+                i += 1;
+                continue;
+            }
+            let body_start = j;
+            let mut d = 0i32;
+            let mut k = body_start;
+            while k < n {
+                let tk = &toks[k];
+                if tk.kind == TokKind::Punct {
+                    if tk.text == "{" {
+                        d += 1;
+                    } else if tk.text == "}" {
+                        d -= 1;
+                        if d == 0 {
+                            k += 1;
+                            break;
+                        }
+                    }
+                }
+                k += 1;
+            }
+            out.push((body_start, k, params));
+            i = body_start + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// File-level `name: type` evidence from struct/enum field declarations.
+fn collect_field_evidence(toks: &[Tok]) -> BTreeMap<String, Cls> {
+    let mut ev: BTreeMap<String, Cls> = BTreeMap::new();
+    let n = toks.len();
+    for i in 0..n {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident && (t.text == "struct" || t.text == "enum")
+        {
+            let mut j = i + 1;
+            while j < n && !matches!(toks[j].text.as_str(), "{" | ";" | "(") {
+                j += 1;
+            }
+            if j >= n || toks[j].text != "{" {
+                continue;
+            }
+            let mut d = 1i32;
+            j += 1;
+            while j < n && d > 0 {
+                let tj = &toks[j];
+                if tj.kind == TokKind::Punct {
+                    let tx = tj.text.as_str();
+                    if matches!(tx, "(" | "[" | "{") {
+                        d += 1;
+                    } else if matches!(tx, ")" | "]" | "}") {
+                        d -= 1;
+                    }
+                }
+                if d == 1
+                    && tj.kind == TokKind::Punct
+                    && tj.text == ":"
+                    && j > 0
+                    && toks[j - 1].kind == TokKind::Ident
+                {
+                    let (cls, _) = classify_type_run(toks, j + 1, &[",", "}"]);
+                    if let Some(c) = cls {
+                        ev.entry(toks[j - 1].text.clone()).or_insert(c);
+                    }
+                }
+                j += 1;
+            }
+        }
+    }
+    ev
+}
+
+fn put(ev: &mut BTreeMap<String, Cls>, name: &str, cls: Option<Cls>) {
+    let c = match cls {
+        Some(c) => c,
+        None => return,
+    };
+    if name == "self" {
+        return;
+    }
+    // Int evidence is the strongest claim; never downgrade it
+    if matches!(ev.get(name), Some(Cls::Int)) {
+        return;
+    }
+    ev.insert(name.to_string(), c);
+}
+
+/// `let`/`for`/typed-binding evidence inside one fn body, seeded with
+/// its parameter evidence.
+fn collect_local_evidence(
+    toks: &[Tok],
+    start: usize,
+    end: usize,
+    params: &BTreeMap<String, Cls>,
+) -> BTreeMap<String, Cls> {
+    let mut ev = params.clone();
+    let n = end;
+    let mut i = start;
+    while i < n {
+        let t = &toks[i];
+        // `let x: T` / `let mut x: T` / closure `|p: T|`
+        if t.kind == TokKind::Punct && t.text == ":" && i > 0 {
+            let prev = &toks[i - 1];
+            if prev.kind == TokKind::Ident && !is_keyword(&prev.text) && i > 1
+            {
+                let p2 = &toks[i - 2];
+                let introduces = (p2.kind == TokKind::Punct && p2.text == "|")
+                    || (p2.kind == TokKind::Ident
+                        && (p2.text == "let" || p2.text == "mut"));
+                if introduces {
+                    let (cls, _) = classify_type_run(
+                        toks,
+                        i + 1,
+                        &[",", ")", "=", ";", "|"],
+                    );
+                    put(&mut ev, &prev.text, cls);
+                }
+            }
+        }
+        // untyped `let x = <rhs>`: classify from rhs literal/cast/len
+        if t.kind == TokKind::Ident && t.text == "let" {
+            let mut j = i + 1;
+            if j < n && toks[j].kind == TokKind::Ident && toks[j].text == "mut"
+            {
+                j += 1;
+            }
+            if j < n
+                && toks[j].kind == TokKind::Ident
+                && !is_keyword(&toks[j].text)
+            {
+                let name = toks[j].text.clone();
+                if j + 1 < n && toks[j + 1].text == "=" {
+                    put(&mut ev, &name, rhs_evidence(toks, j + 2));
+                }
+            }
+        }
+        // `for x in ...`: induction variables are bookkeeping
+        if t.kind == TokKind::Ident && t.text == "for" && i + 2 < n {
+            let t1 = &toks[i + 1];
+            let t2 = &toks[i + 2];
+            if t1.kind == TokKind::Ident
+                && !is_keyword(&t1.text)
+                && t2.kind == TokKind::Ident
+                && t2.text == "in"
+            {
+                put(&mut ev, &t1.text, Some(Cls::Usize));
+            }
+        }
+        i += 1;
+    }
+    ev
+}
+
+/// `usize`/`isize` suffix handling on literals: `usize` classifies as
+/// bookkeeping, `isize` as nothing (unused in this codebase), i8..u128
+/// as integer data.
+fn int_literal_cls(text: &str) -> Option<Cls> {
+    if text.ends_with("usize") {
+        return Some(Cls::Usize);
+    }
+    if text.ends_with("isize") {
+        return None;
+    }
+    for s in INT_DATA_TYPES {
+        if text.ends_with(s) {
+            return Some(Cls::Int);
+        }
+    }
+    None
+}
+
+/// Evidence class of a `let` rhs starting at `start`, scanned to `;`.
+fn rhs_evidence(toks: &[Tok], start: usize) -> Option<Cls> {
+    let mut d = 0i32;
+    let n = toks.len();
+    let mut cls: Option<Cls> = None;
+    let mut i = start;
+    while i < n {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            let tx = t.text.as_str();
+            if matches!(tx, "(" | "[" | "{") {
+                d += 1;
+            } else if matches!(tx, ")" | "]" | "}") {
+                d -= 1;
+            } else if tx == ";" && d <= 0 {
+                break;
+            }
+        }
+        if t.kind == TokKind::Int {
+            match int_literal_cls(&t.text) {
+                Some(Cls::Usize) if cls.is_none() => cls = Some(Cls::Usize),
+                Some(Cls::Int) => cls = Some(Cls::Int),
+                _ => {}
+            }
+        }
+        if t.kind == TokKind::Float && cls.is_none() {
+            cls = Some(Cls::Float);
+        }
+        if t.kind == TokKind::Ident
+            && USIZE_RETURNING.contains(&t.text.as_str())
+            && cls.is_none()
+            && i > 0
+            && toks[i - 1].kind == TokKind::Punct
+            && toks[i - 1].text == "."
+            && i + 1 < n
+            && toks[i + 1].text == "("
+        {
+            cls = Some(Cls::Usize);
+        }
+        if t.kind == TokKind::Ident && t.text == "as" && i + 1 < n {
+            let nxt = &toks[i + 1];
+            if nxt.kind == TokKind::Ident {
+                let nx = nxt.text.as_str();
+                if matches!(nx, "usize" | "f32" | "f64") && cls.is_none() {
+                    cls = Some(if nx == "usize" {
+                        Cls::Usize
+                    } else {
+                        Cls::Float
+                    });
+                } else if INT_DATA_TYPES.contains(&nx) {
+                    cls = Some(Cls::Int);
+                }
+            }
+        }
+        i += 1;
+    }
+    cls
+}
+
+/// Class of the operand *ending* at token `start` (the token just
+/// before a binary op): walks back over call/index suffixes and field
+/// chains to the base name, then consults the evidence maps.
+fn resolve_back(
+    toks: &[Tok],
+    start: usize,
+    locals: &BTreeMap<String, Cls>,
+    fields: &BTreeMap<String, Cls>,
+) -> Option<Cls> {
+    let mut i = start as isize;
+    let mut last_field: Option<&str> = None;
+    let mut guard = 0;
+    while i >= 0 && guard < 64 {
+        guard += 1;
+        let t = &toks[i as usize];
+        if t.kind == TokKind::Punct && (t.text == ")" || t.text == "]") {
+            let was_call = t.text == ")";
+            let mut d = 1i32;
+            i -= 1;
+            while i >= 0 && d > 0 {
+                let tx = &toks[i as usize];
+                if tx.kind == TokKind::Punct {
+                    if tx.text == ")" || tx.text == "]" {
+                        d += 1;
+                    } else if tx.text == "(" || tx.text == "[" {
+                        d -= 1;
+                    }
+                }
+                i -= 1;
+            }
+            if was_call
+                && i >= 0
+                && toks[i as usize].kind == TokKind::Ident
+                && USIZE_RETURNING
+                    .contains(&toks[i as usize].text.as_str())
+            {
+                return Some(Cls::Usize);
+            }
+            continue;
+        }
+        match t.kind {
+            TokKind::Int => return int_literal_cls(&t.text),
+            TokKind::Float => return Some(Cls::Float),
+            TokKind::Ident => {
+                let name = t.text.as_str();
+                let after_as = i > 0
+                    && toks[(i - 1) as usize].kind == TokKind::Ident
+                    && toks[(i - 1) as usize].text == "as";
+                if INT_DATA_TYPES.contains(&name) {
+                    return if after_as { Some(Cls::Int) } else { None };
+                }
+                if matches!(name, "usize" | "f32" | "f64") {
+                    if after_as {
+                        return Some(if name == "usize" {
+                            Cls::Usize
+                        } else {
+                            Cls::Float
+                        });
+                    }
+                    return None;
+                }
+                if i > 0
+                    && toks[(i - 1) as usize].kind == TokKind::Punct
+                    && (toks[(i - 1) as usize].text == "."
+                        || toks[(i - 1) as usize].text == "::")
+                {
+                    if last_field.is_none() {
+                        last_field = Some(name);
+                    }
+                    i -= 2;
+                    continue;
+                }
+                if let Some(f) = last_field {
+                    return fields.get(f).copied();
+                }
+                return locals.get(name).copied();
+            }
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Class of the operand *starting* at token `start` (the token just
+/// after a binary op): skips unary prefixes, honors a trailing
+/// `as <type>` cast within the expression, and walks field chains.
+fn resolve_fwd(
+    toks: &[Tok],
+    mut i: usize,
+    locals: &BTreeMap<String, Cls>,
+    fields: &BTreeMap<String, Cls>,
+) -> Option<Cls> {
+    let n = toks.len();
+    let mut guard = 0;
+    while i < n
+        && toks[i].kind == TokKind::Punct
+        && matches!(toks[i].text.as_str(), "-" | "!" | "*" | "&")
+    {
+        i += 1;
+        guard += 1;
+        if guard > 8 {
+            return None;
+        }
+        if i < n && toks[i].kind == TokKind::Ident && toks[i].text == "mut" {
+            i += 1;
+        }
+    }
+    if i >= n {
+        return None;
+    }
+    // a cast dominates: scan a short window for `as <type>` at depth 0
+    let mut d = 0i32;
+    let mut j = i;
+    while j < n && j - i < 40 {
+        let tj = &toks[j];
+        if tj.kind == TokKind::Punct {
+            let tx = tj.text.as_str();
+            if matches!(tx, "(" | "[" | "{") {
+                d += 1;
+            } else if matches!(tx, ")" | "]" | "}") {
+                if d == 0 {
+                    break;
+                }
+                d -= 1;
+            } else if d == 0
+                && matches!(
+                    tx,
+                    "," | ";" | "+" | "-" | "*" | "<<" | "==" | "!=" | "<"
+                        | ">" | "<=" | ">=" | "&&" | "||"
+                )
+            {
+                break;
+            }
+        }
+        if d == 0 && tj.kind == TokKind::Ident && tj.text == "as" && j + 1 < n
+        {
+            let nx = &toks[j + 1];
+            if nx.kind == TokKind::Ident {
+                let nxt = nx.text.as_str();
+                if INT_DATA_TYPES.contains(&nxt) {
+                    return Some(Cls::Int);
+                }
+                if matches!(nxt, "usize" | "f32" | "f64") {
+                    return Some(if nxt == "usize" {
+                        Cls::Usize
+                    } else {
+                        Cls::Float
+                    });
+                }
+            }
+        }
+        j += 1;
+    }
+    let t = &toks[i];
+    match t.kind {
+        TokKind::Int => int_literal_cls(&t.text),
+        TokKind::Float => Some(Cls::Float),
+        TokKind::Ident if !is_keyword(&t.text) => {
+            let mut k = i;
+            let mut chained = false;
+            while k + 1 < n
+                && toks[k + 1].kind == TokKind::Punct
+                && toks[k + 1].text == "."
+            {
+                if k + 2 < n && toks[k + 2].kind == TokKind::Ident {
+                    if USIZE_RETURNING.contains(&toks[k + 2].text.as_str()) {
+                        return Some(Cls::Usize);
+                    }
+                    chained = true;
+                    k += 2;
+                } else {
+                    break;
+                }
+            }
+            if chained {
+                // a method call at the chain end is unknown; a plain
+                // field chain resolves by the final field's type
+                if k + 1 < n && toks[k + 1].text == "(" {
+                    return None;
+                }
+                return fields.get(toks[k].text.as_str()).copied();
+            }
+            locals.get(t.text.as_str()).copied()
+        }
+        _ => None,
+    }
+}
+
+/// Run every rule whose scope covers `rel` over one file's source.
+pub fn check_file(rel: &str, src: &str) -> FileResult {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let skips = skip_ranges(toks);
+    let consts = const_spans(toks);
+    let generics = generic_spans(toks);
+    let fields = collect_field_evidence(toks);
+    let fn_evs: Vec<FnEv> = fn_ranges(toks)
+        .into_iter()
+        .map(|(s, e, p)| (s, e, collect_local_evidence(toks, s, e, &p)))
+        .collect();
+
+    let mut out: Vec<(usize, &'static str, String)> = lexed
+        .bad_allows
+        .iter()
+        .map(|(l, m)| (*l, "allow-syntax", m.clone()))
+        .collect();
+
+    let r1 = scoped(rel, R1_WRAPPING) || scoped(rel, R1_GUARDED);
+    let guarded = scoped(rel, R1_GUARDED);
+    let mode = if guarded { "guarded" } else { "wrapping" };
+    let r2 = scoped(rel, R2_SCOPE);
+    let r3 = scoped(rel, R3_SCOPE);
+    let r4 = scoped(rel, R4_SCOPE);
+
+    let empty: BTreeMap<String, Cls> = BTreeMap::new();
+    let n = toks.len();
+    let mut bracket_stack: Vec<&str> = Vec::new();
+    for i in 0..n {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => bracket_stack.push(t.text.as_str()),
+                ")" | "]" | "}" => {
+                    bracket_stack.pop();
+                }
+                _ => {}
+            }
+        }
+        if in_span(i, &skips) {
+            continue;
+        }
+        // innermost enclosing fn's evidence wins
+        let mut locals = &empty;
+        let mut best_start: Option<usize> = None;
+        for (s, e, m) in &fn_evs {
+            let better = match best_start {
+                Some(b) => *s > b,
+                None => true,
+            };
+            if *s <= i && i < *e && better {
+                best_start = Some(*s);
+                locals = m;
+            }
+        }
+        if r1
+            && t.kind == TokKind::Punct
+            && BARE_OPS.contains(&t.text.as_str())
+            && !in_span(i, &consts)
+            && !in_span(i, &generics)
+            && i > 0
+            && i + 1 < n
+        {
+            let prev = &toks[i - 1];
+            let nxt = &toks[i + 1];
+            // binary vs unary: a binary op follows an operand
+            let mut binary = matches!(
+                prev.kind,
+                TokKind::Ident | TokKind::Int | TokKind::Float
+            ) || (prev.kind == TokKind::Punct
+                && (prev.text == ")" || prev.text == "]"));
+            if prev.kind == TokKind::Ident && is_keyword(&prev.text) {
+                binary = false;
+            }
+            if matches!(t.text.as_str(), "+=" | "-=" | "*=" | "<<=") {
+                binary = true;
+            }
+            // `*const T` / `*mut T` raw pointer types
+            if binary
+                && t.text == "*"
+                && nxt.kind == TokKind::Ident
+                && (nxt.text == "const" || nxt.text == "mut")
+            {
+                binary = false;
+            }
+            if binary
+                && (prev.kind == TokKind::Float || nxt.kind == TokKind::Float)
+            {
+                binary = false;
+            }
+            if binary
+                && (prev.kind == TokKind::Lifetime
+                    || nxt.kind == TokKind::Lifetime)
+            {
+                binary = false;
+            }
+            // index/shape expressions inside `[...]` are bookkeeping
+            if binary && !guarded && bracket_stack.iter().any(|&b| b == "[") {
+                binary = false;
+            }
+            if binary {
+                let lhs = resolve_back(toks, i - 1, locals, &fields);
+                let rhs = resolve_fwd(toks, i + 1, locals, &fields);
+                if lhs == Some(Cls::Float) || rhs == Some(Cls::Float) {
+                    // float math is no-float's concern, not this rule's
+                    binary = false;
+                } else if !guarded
+                    && lhs != Some(Cls::Int)
+                    && rhs != Some(Cls::Int)
+                {
+                    binary = false;
+                }
+            }
+            if binary {
+                out.push((
+                    t.line,
+                    "int-discipline",
+                    format!(
+                        "bare `{}` on integer data (mode {mode}): use \
+                         wrapping_*/checked_*/saturating_*",
+                        t.text
+                    ),
+                ));
+            }
+        }
+        if r2 {
+            if t.kind == TokKind::Ident
+                && (t.text == "f32" || t.text == "f64")
+            {
+                out.push((
+                    t.line,
+                    "no-float",
+                    format!("`{}` in integer-domain module", t.text),
+                ));
+            } else if t.kind == TokKind::Float {
+                out.push((
+                    t.line,
+                    "no-float",
+                    format!(
+                        "float literal `{}` in integer-domain module",
+                        t.text
+                    ),
+                ));
+            }
+        }
+        if r3 {
+            if t.kind == TokKind::Ident
+                && (t.text == "unwrap" || t.text == "expect")
+                && i > 0
+                && toks[i - 1].text == "."
+            {
+                out.push((
+                    t.line,
+                    "no-panic",
+                    format!("`.{}()` in hostile-input module", t.text),
+                ));
+            }
+            if t.kind == TokKind::Ident
+                && PANIC_MACROS.contains(&t.text.as_str())
+                && i + 1 < n
+                && toks[i + 1].text == "!"
+            {
+                out.push((
+                    t.line,
+                    "no-panic",
+                    format!("`{}!` in hostile-input module", t.text),
+                ));
+            }
+            if t.kind == TokKind::Punct && t.text == "[" && i > 0 {
+                let prev = &toks[i - 1];
+                let indexes = (prev.kind == TokKind::Ident
+                    && !is_keyword(&prev.text))
+                    || (prev.kind == TokKind::Punct
+                        && (prev.text == ")" || prev.text == "]"));
+                if indexes {
+                    out.push((
+                        t.line,
+                        "no-panic",
+                        "unchecked indexing in hostile-input module (use \
+                         .get()/.get_mut())"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+        if r4
+            && t.kind == TokKind::Ident
+            && R4_BANNED.contains(&t.text.as_str())
+        {
+            out.push((
+                t.line,
+                "determinism",
+                format!(
+                    "`{}` in deterministic compute/serialization module",
+                    t.text
+                ),
+            ));
+        }
+    }
+
+    // apply allow escapes: line allows cover their own line + the next
+    let mut allowed_lines: BTreeMap<&str, BTreeSet<usize>> = BTreeMap::new();
+    let mut file_allows: BTreeSet<&str> = BTreeSet::new();
+    for a in &lexed.allows {
+        for r in &a.rules {
+            if a.file_wide {
+                file_allows.insert(r.as_str());
+            } else {
+                let lines = allowed_lines.entry(r.as_str()).or_default();
+                lines.insert(a.line);
+                lines.insert(a.line + 1);
+            }
+        }
+    }
+    let mut findings = Vec::new();
+    let mut allowed = 0usize;
+    for (line, rule, msg) in out {
+        let hit = file_allows.contains(rule)
+            || matches!(allowed_lines.get(rule), Some(s) if s.contains(&line));
+        if hit {
+            allowed += 1;
+            continue;
+        }
+        findings.push(Finding { file: rel.to_string(), line, rule, msg });
+    }
+    FileResult { findings, allowed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(rel: &str, src: &str) -> Vec<(String, usize)> {
+        check_file(rel, src)
+            .findings
+            .iter()
+            .map(|f| (f.rule.to_string(), f.line))
+            .collect()
+    }
+
+    #[test]
+    fn r1_wrapping_flags_bare_ops_on_int_data() {
+        let src = "fn f(a: i32, b: i32) -> i32 { a + b }";
+        assert_eq!(
+            rules_of("rust/src/tensor/ops_int.rs", src),
+            [("int-discipline".to_string(), 1)]
+        );
+        // the acceptance-criterion mutation: dropping a wrapping_ call
+        // back to a bare op must be caught
+        let clean = "fn scale(a: i32, s: i32) -> i32 { a.wrapping_mul(s) }";
+        assert!(rules_of("rust/src/tensor/ops_int.rs", clean).is_empty());
+        let mutated = "fn scale(a: i32, s: i32) -> i32 { a * s }";
+        assert_eq!(
+            rules_of("rust/src/tensor/ops_int.rs", mutated),
+            [("int-discipline".to_string(), 1)]
+        );
+    }
+
+    #[test]
+    fn r1_wrapping_exempts_usize_bookkeeping_and_indexing() {
+        let src = "fn f(v: &[i32]) -> usize { v.len() + 1 }";
+        assert!(rules_of("rust/src/tensor/ops_int.rs", src).is_empty());
+        let idx = "fn g(v: &[i32], i: usize, j: usize) -> i32 {\n\
+                   let w = 4usize;\n\
+                   v[i * w + j]\n\
+                   }";
+        assert!(rules_of("rust/src/train/replica.rs", idx).is_empty());
+    }
+
+    #[test]
+    fn r1_guarded_flags_every_non_float_bare_op() {
+        let src = "fn f(v: &[i32]) -> usize { v.len() + 1 }";
+        assert_eq!(
+            rules_of("rust/src/util/hist.rs", src),
+            [("int-discipline".to_string(), 1)]
+        );
+    }
+
+    #[test]
+    fn r1_exempts_float_math_in_both_modes() {
+        // float arithmetic cannot wrap; it is no-float's concern, and
+        // only in no-float's (narrower) scope
+        let src = "fn f(x: f64) -> f64 { x * 2.0 }";
+        assert!(rules_of("rust/src/train/replica.rs", src).is_empty());
+        assert!(rules_of("rust/src/util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r1_skips_consts_generics_and_test_items() {
+        let consts = "const K: i32 = 1 + 2;";
+        assert!(rules_of("rust/src/tensor/ops_int.rs", consts).is_empty());
+        let generics = "fn f<const N: usize>(a: [i32; N]) -> usize { N }";
+        assert!(rules_of("rust/src/tensor/ops_int.rs", generics).is_empty());
+        let test_item = "#[cfg(test)]\nmod tests {\n\
+                         fn f(a: i32, b: i32) -> i32 { a + b }\n}";
+        assert!(rules_of("rust/src/tensor/ops_int.rs", test_item).is_empty());
+    }
+
+    #[test]
+    fn r2_flags_float_types_and_literals() {
+        let src = "fn half(x: i64) -> f32 { x as f32 * 0.5 }";
+        let got = rules_of("rust/src/optim/momentum.rs", src);
+        let nf: Vec<usize> = got
+            .iter()
+            .filter(|(r, _)| r == "no-float")
+            .map(|(_, l)| *l)
+            .collect();
+        assert_eq!(nf.len(), 3, "f32 x2 + literal: {got:?}");
+    }
+
+    #[test]
+    fn r2_allow_escape_with_reason_suppresses() {
+        let src = "// nitro-lint: allow(no-float) documented floor-div \
+                   lemma bound\nfn f() -> f64 { 0.25 }";
+        let res = check_file("rust/src/optim/momentum.rs", src);
+        assert!(res.findings.is_empty(), "{:?}", res.findings);
+        assert_eq!(res.allowed, 2); // `f64` + `0.25`, both on line 2
+    }
+
+    #[test]
+    fn r3_flags_unwrap_panics_and_indexing() {
+        let src = "fn f(o: Option<u32>, v: &[u8]) -> u8 {\n\
+                   let x = o.unwrap();\n\
+                   if v.is_empty() { panic!(\"empty\") }\n\
+                   v[0]\n\
+                   }";
+        let got = rules_of("rust/src/util/jsonio.rs", src);
+        let lines: Vec<usize> = got
+            .iter()
+            .filter(|(r, _)| r == "no-panic")
+            .map(|(_, l)| *l)
+            .collect();
+        assert_eq!(lines, [2, 3, 4], "{got:?}");
+        // the acceptance-criterion mutation target: serve/wire.rs
+        let wire = "fn f(j: Option<i64>) -> i64 { j.unwrap() }";
+        assert_eq!(
+            rules_of("rust/src/coordinator/serve/wire.rs", wire),
+            [("no-panic".to_string(), 1)]
+        );
+    }
+
+    #[test]
+    fn r3_accepts_checked_access() {
+        let src = "fn f(v: &[u8]) -> Result<u8, String> {\n\
+                   v.first().copied().ok_or_else(|| \"empty\".to_string())\n\
+                   }";
+        assert!(rules_of("rust/src/train/framing.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r4_flags_nondeterministic_types() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f() { let m: HashMap<u32, u32> = HashMap::new(); }";
+        let got = rules_of("rust/src/nn/mod.rs", src);
+        assert_eq!(
+            got.iter().filter(|(r, _)| r == "determinism").count(),
+            3,
+            "{got:?}"
+        );
+        let timing = "fn f() { let t = Instant::now(); }";
+        assert_eq!(
+            rules_of("rust/src/train/replica.rs", timing),
+            [("determinism".to_string(), 1)]
+        );
+    }
+
+    #[test]
+    fn allow_without_reason_is_rejected_and_suppresses_nothing() {
+        let src = "// nitro-lint: allow(no-panic)\n\
+                   fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        let got = rules_of("rust/src/util/jsonio.rs", src);
+        assert!(
+            got.contains(&("allow-syntax".to_string(), 1)),
+            "{got:?}"
+        );
+        assert!(got.contains(&("no-panic".to_string(), 2)), "{got:?}");
+    }
+
+    #[test]
+    fn allow_file_covers_the_whole_file() {
+        let src = "// nitro-lint: allow-file(determinism) fixture module \
+                   exercising file-wide escapes\n\
+                   use std::collections::HashMap;\n\
+                   fn g() { let m = HashMap::new(); }";
+        let res = check_file("rust/src/nn/mod.rs", src);
+        assert!(res.findings.is_empty(), "{:?}", res.findings);
+        assert_eq!(res.allowed, 2);
+    }
+
+    #[test]
+    fn out_of_scope_files_are_untouched() {
+        let src = "fn f(a: i32, b: i32) -> f64 { (a + b) as f64 * 0.5 }\n\
+                   fn g(o: Option<u32>) -> u32 { o.unwrap() }";
+        assert!(rules_of("rust/src/coordinator/spec.rs", src).is_empty());
+    }
+}

@@ -14,7 +14,7 @@
 
 use crate::data::{Batcher, Dataset};
 use crate::nn::spec::{BlockSpec, NetworkSpec};
-use crate::optim::Adam;
+use super::optim_fp::Adam;
 use crate::tensor::ops_f32 as f;
 use crate::tensor::{FTensor, Tensor};
 use crate::util::rng::Pcg32;

@@ -9,4 +9,5 @@
 //!   [20].
 
 pub mod fp;
+pub mod optim_fp;
 pub mod pocketnn;

@@ -1,0 +1,124 @@
+//! Float optimizers for the FP baselines (Sgd with momentum, Adam).
+//!
+//! These live under `baselines/`, not `optim/`: the `optim/` module is an
+//! integer-domain surface under the `no-float` lint rule (`nitro lint`),
+//! while the float reference trainers deliberately use f32 throughout.
+
+use crate::tensor::FTensor;
+
+/// Float SGD with momentum and L2 decay (FP LES baseline).
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32, weight_decay: f32) -> Self {
+        Sgd { lr, momentum, weight_decay, velocity: Vec::new() }
+    }
+
+    /// Update parameter tensor `idx` (velocity slots are allocated lazily,
+    /// call with a stable parameter order).
+    pub fn update(&mut self, idx: usize, w: &mut FTensor, grad: &FTensor) {
+        while self.velocity.len() <= idx {
+            self.velocity.push(Vec::new());
+        }
+        let v = &mut self.velocity[idx];
+        if v.len() != w.data.len() {
+            *v = vec![0f32; w.data.len()];
+        }
+        for ((wv, &gv), vv) in w.data.iter_mut().zip(&grad.data).zip(v.iter_mut())
+        {
+            let g = gv + self.weight_decay * *wv;
+            *vv = self.momentum * *vv + g;
+            *wv -= self.lr * *vv;
+        }
+    }
+}
+
+/// Adam (Kingma & Ba) for the FP BP baseline — the optimizer the paper
+/// credits for part of the float-vs-integer gap.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    /// Advance the shared timestep — call once per optimizer step, before
+    /// the per-parameter updates.
+    pub fn tick(&mut self) {
+        self.t += 1;
+    }
+
+    pub fn update(&mut self, idx: usize, w: &mut FTensor, grad: &FTensor) {
+        while self.m.len() <= idx {
+            self.m.push(Vec::new());
+            self.v.push(Vec::new());
+        }
+        if self.m[idx].len() != w.data.len() {
+            self.m[idx] = vec![0f32; w.data.len()];
+            self.v[idx] = vec![0f32; w.data.len()];
+        }
+        let t = self.t.max(1) as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        let (m, v) = (&mut self.m[idx], &mut self.v[idx]);
+        for i in 0..w.data.len() {
+            let g = grad.data[i];
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g;
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            w.data[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn adam_reduces_quadratic() {
+        // minimize ||w||^2 from w = (3, -2)
+        let mut w = Tensor::from_vec(&[2], vec![3.0f32, -2.0]);
+        let mut opt = Adam::new(0.1);
+        for _ in 0..200 {
+            opt.tick();
+            let grad = Tensor::from_vec(&[2], vec![2.0 * w.data[0], 2.0 * w.data[1]]);
+            opt.update(0, &mut w, &grad);
+        }
+        assert!(w.data[0].abs() < 0.05 && w.data[1].abs() < 0.05, "{:?}", w.data);
+    }
+
+    #[test]
+    fn sgd_momentum_reduces_quadratic() {
+        let mut w = Tensor::from_vec(&[1], vec![4.0f32]);
+        let mut opt = Sgd::new(0.05, 0.9, 0.0);
+        for _ in 0..100 {
+            let grad = Tensor::from_vec(&[1], vec![2.0 * w.data[0]]);
+            opt.update(0, &mut w, &grad);
+        }
+        assert!(w.data[0].abs() < 0.1);
+    }
+}

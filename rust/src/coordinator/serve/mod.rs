@@ -761,6 +761,9 @@ fn connection(stream: std::net::TcpStream, ctx: &ServeContext,
 // ---------------------------------------------------------------------------
 
 #[cfg(unix)]
+// `unsafe` is limited to the libc `signal()` FFI call; exempted from the
+// crate-root `#![deny(unsafe_code)]`.
+#[allow(unsafe_code)]
 mod sighup {
     use std::sync::atomic::{AtomicBool, Ordering};
 

@@ -103,7 +103,8 @@ impl ShardState {
         let new = if old == 0 {
             per
         } else {
-            (old * (EWMA_W - 1) + per) / EWMA_W
+            old.saturating_mul(EWMA_W.saturating_sub(1)).saturating_add(per)
+                / EWMA_W
         };
         self.ewma_ns.store(new, Ordering::Relaxed);
     }

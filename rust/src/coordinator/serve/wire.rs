@@ -16,6 +16,10 @@
 //! live only inside [`ok_response`] / [`err_response`]'s v0 dispatch
 //! now, and the next step of the deprecation drops v0 acceptance too.
 
+// A `no-panic` surface under `nitro lint`: in non-test code, prefer
+// `Result` over unwrap/expect (enforced for clippy runs too).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use crate::tensor::ITensor;
 use crate::util::jsonio::Json;
 
@@ -203,8 +207,11 @@ pub fn parse_request(line: &str)
 /// generations.
 fn predict_fields(id: Json, model: &str, y: &ITensor)
                   -> Vec<(&'static str, Json)> {
+    // nitro-lint: allow(no-panic) y is infer output: always [n, g]
     let g = y.shape[1];
+    // nitro-lint: allow(no-panic) y is infer output: always [n, g]
     let mut logits = Vec::with_capacity(y.shape[0]);
+    // nitro-lint: allow(no-panic) y is infer output: always [n, g]
     let mut argmax = Vec::with_capacity(y.shape[0]);
     for row in y.data.chunks(g) {
         logits.push(Json::Array(
@@ -212,6 +219,7 @@ fn predict_fields(id: Json, model: &str, y: &ITensor)
         ));
         let mut best = 0usize;
         for j in 1..g {
+            // nitro-lint: allow(no-panic) j, best < g == row.len()
             if row[j] > row[best] {
                 best = j;
             }

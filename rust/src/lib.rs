@@ -15,6 +15,15 @@
 //! Integer arithmetic is bit-exact across implementations, so the three
 //! layers are cross-checked for *equality*, not closeness — see DESIGN.md.
 
+// Invariant hardening (README "Static analysis & invariants"): `unsafe`
+// is confined to three audited sites — tensor/backend.rs SIMD, the
+// serve SIGHUP handler, util/par's lifetime erasure — each carrying its
+// own `#[allow(unsafe_code)]`; everywhere else it is a compile error,
+// and inside `unsafe fn` every unsafe operation needs an explicit block.
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod baselines;
 pub mod coordinator;
 pub mod data;

@@ -10,6 +10,7 @@
 //!   run-spec    execute a declarative experiment spec (experiments/*.json)
 //!   zoo         list model presets and parameter counts
 //!   runtime     PJRT smoke check: load + execute the artifacts
+//!   lint        integer-discipline static analyzer over rust/src
 
 use nitro::coordinator::engine::{Engine, PjrtEngine};
 use nitro::coordinator::experiments::{self, ExpCtx, Scale};
@@ -39,6 +40,7 @@ fn main() {
         Some("bench-kernels") => cmd_bench_kernels(&argv[1..]),
         Some("zoo") => cmd_zoo(),
         Some("runtime") => cmd_runtime(&argv[1..]),
+        Some("lint") => cmd_lint(&argv[1..]),
         Some("-h") | Some("--help") | None => {
             eprintln!("{}", USAGE);
             0
@@ -77,6 +79,10 @@ Subcommands:
               BENCH_serve.json
   zoo         list model presets
   runtime     PJRT smoke check over artifacts/<preset>
+  lint        integer-discipline static analyzer over rust/src (exit 0
+              clean, 1 violations, 2 internal error); --json for the
+              machine-readable report, --fix-allow to insert placeholder
+              escape comments
 ";
 
 fn fail(e: String) -> i32 {
@@ -632,6 +638,75 @@ fn cmd_zoo() -> i32 {
         );
     }
     0
+}
+
+fn cmd_lint(argv: &[String]) -> i32 {
+    let cmd = Command::new(
+        "nitro lint",
+        "static analyzer for the integer-discipline contract: \
+         int-discipline, no-float, no-panic, determinism",
+    )
+    .opt("root", "",
+         "repo root to scan (default: walk up from the current \
+          directory until rust/src is found)")
+    .flag("json", "emit the schema-versioned JSON report on stdout")
+    .flag("fix-allow",
+          "insert placeholder escape comments above each violation; \
+           the tree stays red until the FIXME reasons are rewritten");
+    let p = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let root = match p.get("root") {
+        "" => match find_root() {
+            Some(r) => r,
+            None => {
+                return fail(
+                    "nitro lint: no rust/src above the current directory \
+                     (use --root)"
+                        .to_string(),
+                )
+            }
+        },
+        r => std::path::PathBuf::from(r),
+    };
+    let report = match nitro::analysis::run(&root) {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    if p.has("fix-allow") {
+        match nitro::analysis::fix_allow(&root, &report) {
+            Ok(n) => eprintln!(
+                "nitro lint: inserted {n} placeholder allow comment(s); \
+                 rewrite each FIXME reason before committing"
+            ),
+            Err(e) => return fail(e),
+        }
+    }
+    if p.has("json") {
+        println!("{}", report.to_json().dump());
+    } else {
+        print!("{}", report.text());
+    }
+    if report.findings.is_empty() {
+        0
+    } else {
+        1
+    }
+}
+
+/// Walk up from the current directory to the first ancestor containing
+/// `rust/src` — the repo root, whether invoked from it or from `rust/`.
+fn find_root() -> Option<std::path::PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
 }
 
 fn cmd_runtime(argv: &[String]) -> i32 {

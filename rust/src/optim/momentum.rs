@@ -56,12 +56,12 @@ impl IntegerMomentum {
         let div = gamma_inv.saturating_mul(self.beta_inv);
         for ((wv, &gv), vel) in w.data.iter_mut().zip(&grad.data).zip(v.iter_mut())
         {
-            *vel = *vel - div_trunc(*vel, self.beta_inv) + gv;
+            *vel = vel.wrapping_sub(div_trunc(*vel, self.beta_inv)).wrapping_add(gv);
             let mut delta = div_floor(*vel, div);
             if eta_inv != 0 {
-                delta += div_trunc(*wv as i64, eta_inv);
+                delta = delta.wrapping_add(div_trunc(*wv as i64, eta_inv));
             }
-            *wv = (*wv as i64 - delta) as i32;
+            *wv = (*wv as i64).wrapping_sub(delta) as i32;
         }
     }
 }
@@ -103,7 +103,7 @@ impl MomentumMlp {
         use crate::tensor as t;
         let g = *self.dims.last().unwrap();
         let y32 = t::one_hot32(labels, g);
-        let af = 64 * g as i64;
+        let af = (g as i64).wrapping_mul(64);
         let mut a = x.clone();
         let mut total = 0i64;
         let nblocks = self.weights.len();
@@ -115,7 +115,7 @@ impl MomentumMlp {
             let zl = t::matmul_i64(&act, &self.heads[li]);
             let yhat = t::nitro_scale(&zl, t::scale_factor_linear(act.shape[1]));
             let (loss, grad_l) = t::rss_loss_grad(&yhat, &y32);
-            total += loss;
+            total = total.wrapping_add(loss);
             let gw_l = t::matmul_at_b_i64(&act, &grad_l);
             let dfeat = t::matmul_a_bt_i64(&grad_l, &self.heads[li]).to_i32();
             self.opt.update(2 * li + 1, &mut self.heads[li], &gw_l,
@@ -123,12 +123,13 @@ impl MomentumMlp {
             let d = t::nitro_relu_bwd(&zs, &dfeat, 10);
             let gw = t::matmul_at_b_i64(&a, &d);
             self.opt.update(2 * li, &mut self.weights[li], &gw,
-                            gamma_inv * af, eta_inv);
+                            gamma_inv.wrapping_mul(af), eta_inv);
             a = act;
         }
         total / nblocks as i64
     }
 
+    // nitro-lint: allow(no-float) reported accuracy is monitoring output
     pub fn accuracy(&self, ds: &crate::data::Dataset, batch: usize) -> f64 {
         use crate::tensor as t;
         let mut correct = 0usize;
@@ -145,6 +146,7 @@ impl MomentumMlp {
             let yhat = t::nitro_scale(&zl, t::scale_factor_linear(a.shape[1]));
             correct += crate::nn::block::count_correct(&yhat, &labels);
         }
+        // nitro-lint: allow(no-float) monitoring ratio, not model state
         correct as f64 / ds.len().max(1) as f64
     }
 }

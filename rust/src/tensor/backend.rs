@@ -433,7 +433,7 @@ fn relu_scalar(vs: &mut [i32], alpha_inv: i64, mu: i32) {
         } else {
             (*v).min(INT8_MAX)
         };
-        *v = out - mu;
+        *v = out.wrapping_sub(mu);
     }
 }
 
@@ -463,7 +463,7 @@ fn scale_relu_one(zv: i64, sf: i64, alpha_inv: i64, mu: i32) -> i32 {
     } else {
         v.min(INT8_MAX as i64) as i32
     };
-    out - mu
+    out.wrapping_sub(mu)
 }
 
 fn scale_relu_scalar(
@@ -517,39 +517,43 @@ mod avx2 {
     /// left fold.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot_wrap_avx2(a: &[i32], b: &[i32]) -> i32 {
-        let n = a.len().min(b.len());
-        let mut acc = _mm256_setzero_si256();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
-            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
-            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(va, vb));
-            i += 8;
+        unsafe {
+            let n = a.len().min(b.len());
+            let mut acc = _mm256_setzero_si256();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+                let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+                acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(va, vb));
+                i += 8;
+            }
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            let mut total = 0i32;
+            for l in lanes {
+                total = total.wrapping_add(l);
+            }
+            while i < n {
+                total = total.wrapping_add(a[i].wrapping_mul(b[i]));
+                i += 1;
+            }
+            total
         }
-        let mut lanes = [0i32; 8];
-        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
-        let mut total = 0i32;
-        for l in lanes {
-            total = total.wrapping_add(l);
-        }
-        while i < n {
-            total = total.wrapping_add(a[i].wrapping_mul(b[i]));
-            i += 1;
-        }
-        total
     }
 
     #[target_feature(enable = "avx2")]
     pub unsafe fn copy_avx2(dst: &mut [i32], src: &[i32]) {
-        debug_assert_eq!(dst.len(), src.len());
-        let n = dst.len();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let v = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
-            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, v);
-            i += 8;
+        unsafe {
+            debug_assert_eq!(dst.len(), src.len());
+            let n = dst.len();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let v = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+                _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, v);
+                i += 8;
+            }
+            dst[i..].copy_from_slice(&src[i..]);
         }
-        dst[i..].copy_from_slice(&src[i..]);
     }
 
     /// Exact 4-lane `div_floor(v, d)` for i32 lanes and a positive
@@ -559,100 +563,112 @@ mod avx2 {
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn floordiv4(v: __m128i, d: __m256d) -> __m128i {
-        let q = _mm256_floor_pd(_mm256_div_pd(_mm256_cvtepi32_pd(v), d));
-        _mm256_cvtpd_epi32(q)
+        unsafe {
+            let q = _mm256_floor_pd(_mm256_div_pd(_mm256_cvtepi32_pd(v), d));
+            _mm256_cvtpd_epi32(q)
+        }
     }
 
     #[target_feature(enable = "avx2")]
     pub unsafe fn scale_avx2(z: &[i64], sf: i64, out: &mut [i32]) {
-        let d = _mm256_set1_pd(sf as f64);
-        let n = z.len();
-        let mut i = 0usize;
-        while i + 4 <= n {
-            let q = &z[i..i + 4];
-            // The f64 lemma needs |dividend| < 2^53; in-contract
-            // accumulator values fit i32 after scaling's input bound,
-            // but guard per quad and take the scalar lane otherwise.
-            if q.iter().all(|&v| v as i32 as i64 == v) {
-                let v = _mm_set_epi32(
-                    q[3] as i32, q[2] as i32, q[1] as i32, q[0] as i32,
-                );
-                let r = floordiv4(v, d);
-                _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, r);
-            } else {
-                for j in 0..4 {
-                    out[i + j] = div_floor(z[i + j], sf) as i32;
+        unsafe {
+            // nitro-lint: allow(no-float) floor-div lemma: exact for |n| < 2^53
+            let d = _mm256_set1_pd(sf as f64);
+            let n = z.len();
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let q = &z[i..i + 4];
+                // The f64 lemma needs |dividend| < 2^53; in-contract
+                // accumulator values fit i32 after scaling's input bound,
+                // but guard per quad and take the scalar lane otherwise.
+                if q.iter().all(|&v| v as i32 as i64 == v) {
+                    let v = _mm_set_epi32(
+                        q[3] as i32, q[2] as i32, q[1] as i32, q[0] as i32,
+                    );
+                    let r = floordiv4(v, d);
+                    _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, r);
+                } else {
+                    for j in 0..4 {
+                        out[i + j] = div_floor(z[i + j], sf) as i32;
+                    }
                 }
+                i += 4;
             }
-            i += 4;
-        }
-        while i < n {
-            out[i] = div_floor(z[i], sf) as i32;
-            i += 1;
+            while i < n {
+                out[i] = div_floor(z[i], sf) as i32;
+                i += 1;
+            }
         }
     }
 
     #[target_feature(enable = "avx2")]
     pub unsafe fn relu_avx2(vs: &mut [i32], alpha_inv: i64, mu: i32) {
-        let d = _mm256_set1_pd(alpha_inv as f64);
-        let lo = _mm_set1_epi32(-INT8_MAX);
-        let hi = _mm_set1_epi32(INT8_MAX);
-        let muv = _mm_set1_epi32(mu);
-        let zero = _mm_setzero_si128();
-        let n = vs.len();
-        let mut i = 0usize;
-        while i + 4 <= n {
-            let v = _mm_loadu_si128(vs.as_ptr().add(i) as *const __m128i);
-            let isneg = _mm_cmplt_epi32(v, zero);
-            // negative branch: div_floor(max(v, -127), alpha_inv);
-            // computed for every lane, selected only where v < 0
-            let divided = floordiv4(_mm_max_epi32(v, lo), d);
-            let pos = _mm_min_epi32(v, hi);
-            let sel = _mm_blendv_epi8(pos, divided, isneg);
-            let r = _mm_sub_epi32(sel, muv);
-            _mm_storeu_si128(vs.as_mut_ptr().add(i) as *mut __m128i, r);
-            i += 4;
+        unsafe {
+            // nitro-lint: allow(no-float) floor-div lemma: exact for |n| < 2^53
+            let d = _mm256_set1_pd(alpha_inv as f64);
+            let lo = _mm_set1_epi32(-INT8_MAX);
+            let hi = _mm_set1_epi32(INT8_MAX);
+            let muv = _mm_set1_epi32(mu);
+            let zero = _mm_setzero_si128();
+            let n = vs.len();
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let v = _mm_loadu_si128(vs.as_ptr().add(i) as *const __m128i);
+                let isneg = _mm_cmplt_epi32(v, zero);
+                // negative branch: div_floor(max(v, -127), alpha_inv);
+                // computed for every lane, selected only where v < 0
+                let divided = floordiv4(_mm_max_epi32(v, lo), d);
+                let pos = _mm_min_epi32(v, hi);
+                let sel = _mm_blendv_epi8(pos, divided, isneg);
+                let r = _mm_sub_epi32(sel, muv);
+                _mm_storeu_si128(vs.as_mut_ptr().add(i) as *mut __m128i, r);
+                i += 4;
+            }
+            relu_scalar(&mut vs[i..], alpha_inv, mu);
         }
-        relu_scalar(&mut vs[i..], alpha_inv, mu);
     }
 
     #[target_feature(enable = "avx2")]
     pub unsafe fn scale_relu_avx2(
         z: &[i64], sf: i64, alpha_inv: i64, mu: i32, out: &mut [i32],
     ) {
-        let ds = _mm256_set1_pd(sf as f64);
-        let da = _mm256_set1_pd(alpha_inv as f64);
-        let lo = _mm_set1_epi32(-INT8_MAX);
-        let hi = _mm_set1_epi32(INT8_MAX);
-        let muv = _mm_set1_epi32(mu);
-        let zero = _mm_setzero_si128();
-        let n = z.len();
-        let mut i = 0usize;
-        while i + 4 <= n {
-            let q = &z[i..i + 4];
-            if q.iter().all(|&v| v as i32 as i64 == v) {
-                let zv = _mm_set_epi32(
-                    q[3] as i32, q[2] as i32, q[1] as i32, q[0] as i32,
-                );
-                // |div_floor(z, sf)| <= |z|, so the scaled value stays
-                // in i32 and the fused relu matches the i64 scalar form
-                let v = floordiv4(zv, ds);
-                let isneg = _mm_cmplt_epi32(v, zero);
-                let divided = floordiv4(_mm_max_epi32(v, lo), da);
-                let pos = _mm_min_epi32(v, hi);
-                let sel = _mm_blendv_epi8(pos, divided, isneg);
-                let r = _mm_sub_epi32(sel, muv);
-                _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, r);
-            } else {
-                for j in 0..4 {
-                    out[i + j] = scale_relu_one(z[i + j], sf, alpha_inv, mu);
+        unsafe {
+            // nitro-lint: allow(no-float) floor-div lemma: exact for |n| < 2^53
+            let ds = _mm256_set1_pd(sf as f64);
+            // nitro-lint: allow(no-float) floor-div lemma: exact for |n| < 2^53
+            let da = _mm256_set1_pd(alpha_inv as f64);
+            let lo = _mm_set1_epi32(-INT8_MAX);
+            let hi = _mm_set1_epi32(INT8_MAX);
+            let muv = _mm_set1_epi32(mu);
+            let zero = _mm_setzero_si128();
+            let n = z.len();
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let q = &z[i..i + 4];
+                if q.iter().all(|&v| v as i32 as i64 == v) {
+                    let zv = _mm_set_epi32(
+                        q[3] as i32, q[2] as i32, q[1] as i32, q[0] as i32,
+                    );
+                    // |div_floor(z, sf)| <= |z|, so the scaled value stays
+                    // in i32 and the fused relu matches the i64 scalar form
+                    let v = floordiv4(zv, ds);
+                    let isneg = _mm_cmplt_epi32(v, zero);
+                    let divided = floordiv4(_mm_max_epi32(v, lo), da);
+                    let pos = _mm_min_epi32(v, hi);
+                    let sel = _mm_blendv_epi8(pos, divided, isneg);
+                    let r = _mm_sub_epi32(sel, muv);
+                    _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, r);
+                } else {
+                    for j in 0..4 {
+                        out[i + j] = scale_relu_one(z[i + j], sf, alpha_inv, mu);
+                    }
                 }
+                i += 4;
             }
-            i += 4;
-        }
-        while i < n {
-            out[i] = scale_relu_one(z[i], sf, alpha_inv, mu);
-            i += 1;
+            while i < n {
+                out[i] = scale_relu_one(z[i], sf, alpha_inv, mu);
+                i += 1;
+            }
         }
     }
 
@@ -660,27 +676,30 @@ mod avx2 {
     pub unsafe fn relu_bwd_avx2(
         zs: &[i32], g: &[i32], alpha_inv: i64, out: &mut [i32],
     ) {
-        let d = _mm256_set1_pd(alpha_inv as f64);
-        let lo = _mm_set1_epi32(-INT8_MAX);
-        let hi = _mm_set1_epi32(INT8_MAX);
-        let zero = _mm_setzero_si128();
-        let n = zs.len();
-        let mut i = 0usize;
-        while i + 4 <= n {
-            let x = _mm_loadu_si128(zs.as_ptr().add(i) as *const __m128i);
-            let gv = _mm_loadu_si128(g.as_ptr().add(i) as *const __m128i);
-            let dead = _mm_or_si128(
-                _mm_cmplt_epi32(x, lo),
-                _mm_cmpgt_epi32(x, hi),
-            );
-            let isneg = _mm_cmplt_epi32(x, zero);
-            let gdiv = floordiv4(gv, d);
-            let sel = _mm_blendv_epi8(gv, gdiv, isneg);
-            let r = _mm_andnot_si128(dead, sel);
-            _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, r);
-            i += 4;
+        unsafe {
+            // nitro-lint: allow(no-float) floor-div lemma: exact for |n| < 2^53
+            let d = _mm256_set1_pd(alpha_inv as f64);
+            let lo = _mm_set1_epi32(-INT8_MAX);
+            let hi = _mm_set1_epi32(INT8_MAX);
+            let zero = _mm_setzero_si128();
+            let n = zs.len();
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let x = _mm_loadu_si128(zs.as_ptr().add(i) as *const __m128i);
+                let gv = _mm_loadu_si128(g.as_ptr().add(i) as *const __m128i);
+                let dead = _mm_or_si128(
+                    _mm_cmplt_epi32(x, lo),
+                    _mm_cmpgt_epi32(x, hi),
+                );
+                let isneg = _mm_cmplt_epi32(x, zero);
+                let gdiv = floordiv4(gv, d);
+                let sel = _mm_blendv_epi8(gv, gdiv, isneg);
+                let r = _mm_andnot_si128(dead, sel);
+                _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, r);
+                i += 4;
+            }
+            relu_bwd_scalar(&zs[i..], &g[i..], alpha_inv, &mut out[i..]);
         }
-        relu_bwd_scalar(&zs[i..], &g[i..], alpha_inv, &mut out[i..]);
     }
 }
 
@@ -697,22 +716,24 @@ use avx2::{copy_avx2, dot_wrap_avx2, relu_avx2, relu_bwd_avx2, scale_avx2,
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn dot_wrap_neon(a: &[i32], b: &[i32]) -> i32 {
-    use std::arch::aarch64::*;
-    let n = a.len().min(b.len());
-    let mut acc = vdupq_n_s32(0);
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let va = vld1q_s32(a.as_ptr().add(i));
-        let vb = vld1q_s32(b.as_ptr().add(i));
-        acc = vmlaq_s32(acc, va, vb);
-        i += 4;
+    unsafe {
+        use std::arch::aarch64::*;
+        let n = a.len().min(b.len());
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let va = vld1q_s32(a.as_ptr().add(i));
+            let vb = vld1q_s32(b.as_ptr().add(i));
+            acc = vmlaq_s32(acc, va, vb);
+            i += 4;
+        }
+        let mut total = vaddvq_s32(acc);
+        while i < n {
+            total = total.wrapping_add(a[i].wrapping_mul(b[i]));
+            i += 1;
+        }
+        total
     }
-    let mut total = vaddvq_s32(acc);
-    while i < n {
-        total = total.wrapping_add(a[i].wrapping_mul(b[i]));
-        i += 1;
-    }
-    total
 }
 
 #[cfg(test)]

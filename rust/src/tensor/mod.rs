@@ -6,6 +6,9 @@
 //! rescales back down. The op set mirrors `python/compile/kernels/ref.py`
 //! bit-exactly — verified against `artifacts/golden/ops.json`.
 
+// The only crate module allowed to contain `unsafe` SIMD intrinsics;
+// everything else is covered by the crate-root `#![deny(unsafe_code)]`.
+#[allow(unsafe_code)]
 pub mod backend;
 pub mod ops_f32;
 pub mod ops_int;

@@ -159,7 +159,7 @@ fn max_abs(xs: &[i32]) -> i64 {
 /// associative, so the result is bit-identical to the naive i64 loop.
 #[inline]
 fn safe_chunk(max_a: i64, max_b: i64, k: usize) -> Option<usize> {
-    let prod = max_a * max_b;
+    let prod = max_a.saturating_mul(max_b);
     if prod == 0 {
         return Some(k.max(1));
     }
@@ -178,7 +178,7 @@ fn dot_chunked(isa: Isa, a: &[i32], b: &[i32], chunk: usize) -> i64 {
     let mut ai = a.chunks(chunk);
     let mut bi = b.chunks(chunk);
     while let (Some(ca), Some(cb)) = (ai.next(), bi.next()) {
-        total += backend::dot_i32_wrap(isa, ca, cb) as i64;
+        total = total.wrapping_add(backend::dot_i32_wrap(isa, ca, cb) as i64);
     }
     total
 }
@@ -188,7 +188,7 @@ fn dot_chunked(isa: Isa, a: &[i32], b: &[i32], chunk: usize) -> i64 {
 fn dot_i64(a: &[i32], b: &[i32]) -> i64 {
     let mut acc = 0i64;
     for (&x, &y) in a.iter().zip(b) {
-        acc += x as i64 * y as i64;
+        acc = acc.wrapping_add((x as i64).wrapping_mul(y as i64));
     }
     acc
 }
@@ -298,7 +298,7 @@ fn matmul_i64_into_buf(isa: Isa, a: &[i32], b: &[i32], m: usize, k: usize,
                         let av = av as i64;
                         let brow = &b[kk * n..kk * n + n];
                         for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv as i64;
+                            *o = o.wrapping_add(av.wrapping_mul(bv as i64));
                         }
                     }
                 }
@@ -328,7 +328,8 @@ fn mm_block(isa: Isa, a: &[i32], bt: &[i32], k: usize, n: usize, r0: usize,
                 for (jj, o) in orow.iter_mut().enumerate() {
                     let brow =
                         &bt[(jt + jj) * k + kt..(jt + jj) * k + kt + klen];
-                    *o += backend::dot_i32_wrap(isa, arow, brow) as i64;
+                    let d = backend::dot_i32_wrap(isa, arow, brow) as i64;
+                    *o = o.wrapping_add(d);
                 }
             }
         }
@@ -355,7 +356,7 @@ pub fn matmul_at_b_i64(a: &ITensor, b: &ITensor) -> LTensor {
             let av = av as i64;
             let orow = &mut out[i * n..(i + 1) * n];
             for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv as i64;
+                *o = o.wrapping_add(av.wrapping_mul(bv as i64));
             }
         }
     }
@@ -708,11 +709,13 @@ pub fn maxpool2d_bwd(g: &ITensor, arg: &ITensor, in_shape: &[usize],
 // ---------------------------------------------------------------------------
 
 pub fn scale_factor_linear(fan_in: usize) -> i64 {
-    256 * fan_in as i64
+    256i64.wrapping_mul(fan_in as i64)
 }
 
 pub fn scale_factor_conv(kernel: usize, in_channels: usize) -> i64 {
-    256 * (kernel * kernel) as i64 * in_channels as i64
+    256i64
+        .wrapping_mul((kernel * kernel) as i64)
+        .wrapping_mul(in_channels as i64)
 }
 
 /// NITRO Scaling Layer: z* = floor(z / SF). i64 in, i32 out.
@@ -723,10 +726,13 @@ pub fn nitro_scale(z: &LTensor, sf: i64) -> ITensor {
 /// Pre-computed NITRO-ReLU mean (paper §3.2). Mirrors ref.nitro_relu_mu.
 pub fn nitro_relu_mu(alpha_inv: i64) -> i32 {
     let mu0 = div_floor(-(INT8_MAX as i64), alpha_inv);
-    let mu1 = div_floor(-(INT8_MAX as i64), 2 * alpha_inv);
+    let mu1 = div_floor(-(INT8_MAX as i64), alpha_inv.wrapping_mul(2));
     let mu2 = 63i64;
     let mu3 = INT8_MAX as i64;
-    div_floor(mu0 + mu1 + mu2 + mu3, 4) as i32
+    div_floor(
+        mu0.wrapping_add(mu1).wrapping_add(mu2).wrapping_add(mu3),
+        4,
+    ) as i32
 }
 
 /// NITRO-ReLU forward over scaled pre-activations.
@@ -790,7 +796,7 @@ pub fn rss_loss_grad_raw(yhat: &ITensor, y32: &ITensor) -> (i64, ITensor) {
         .iter()
         .zip(&y32.data)
         .map(|(&a, &b)| {
-            let d = a as i64 - b as i64;
+            let d = (a as i64).wrapping_sub(b as i64);
             loss = loss.saturating_add(d.saturating_mul(d));
             d as i32
         })

@@ -28,6 +28,10 @@
 //! ignore unknown header keys, so stateful checkpoints stay loadable
 //! everywhere a plain one is.
 
+// A `no-panic` surface under `nitro lint`: in non-test code, prefer
+// `Result` over unwrap/expect (enforced for clippy runs too).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use crate::nn::{zoo, Network};
 use crate::optim::PlateauState;
 use crate::util::jsonio::Json;
@@ -210,9 +214,11 @@ fn parse_header(buf: &[u8], path: &str) -> Result<Header, String> {
     if buf.len() < hstart {
         return Err(format!("{path}: truncated before header length"));
     }
-    let hlen = u32::from_le_bytes(
-        buf[MAGIC.len()..hstart].try_into().expect("4-byte slice"),
-    ) as usize;
+    let len4: [u8; 4] = buf
+        .get(MAGIC.len()..hstart)
+        .and_then(|s| s.try_into().ok())
+        .ok_or_else(|| format!("{path}: truncated before header length"))?;
+    let hlen = u32::from_le_bytes(len4) as usize;
     // checked: on 32-bit targets hstart + hlen could wrap and defeat
     // the bound below
     let hend = hstart.checked_add(hlen).ok_or_else(|| {
@@ -224,6 +230,7 @@ fn parse_header(buf: &[u8], path: &str) -> Result<Header, String> {
             buf.len()
         ));
     }
+    // nitro-lint: allow(no-panic) buf.len() >= hend checked above
     let header = std::str::from_utf8(&buf[hstart..hend])
         .map_err(|e| format!("{path}: header not UTF-8: {e}"))?;
     let h = Json::parse(header).map_err(|e| format!("{path}: {e}"))?;
@@ -274,6 +281,7 @@ fn fill_weights(net: &mut Network, h: &Header, buf: &[u8], path: &str)
     let mut off = h.payload_off;
     let mut idx = 0usize;
     let mut assign = |t: &mut crate::tensor::ITensor| -> Result<(), String> {
+        // nitro-lint: allow(no-panic) idx < expected == shapes.len()
         let shape = &h.shapes[idx];
         if shape != &t.shape {
             return Err(format!(
@@ -294,9 +302,13 @@ fn fill_weights(net: &mut Network, h: &Header, buf: &[u8], path: &str)
             ));
         }
         for v in t.data.iter_mut() {
-            *v = i32::from_le_bytes(
-                buf[off..off + 4].try_into().expect("4-byte slice"),
-            );
+            let le: [u8; 4] = buf
+                .get(off..off + 4)
+                .and_then(|s| s.try_into().ok())
+                .ok_or_else(|| {
+                    format!("{path}: truncated payload at tensor {idx}")
+                })?;
+            *v = i32::from_le_bytes(le);
             off += 4;
         }
         idx += 1;

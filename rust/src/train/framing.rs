@@ -1,0 +1,332 @@
+//! Wire codec for the distributed trainer: length-prefixed frames,
+//! hostile-input hardened like `serve::wire` (DESIGN.md §Serving).
+//!
+//! Length-prefixed frames: `[u32 LE body_len][u8 type][u32 rank]
+//! [u64 step][payload]`. `Hello` carries a magic and the world size;
+//! `Grad` carries raw (un-halved) block/head losses, the correct count
+//! and the flat i64 gradient tensors; `Heartbeat` is the bare header.
+//! Readers enforce a frame-length cap computed from the network's own
+//! weight arity ([`grad_frame_len`]), and every count and tensor length
+//! in a `Grad` frame must match the local model exactly — a malformed,
+//! truncated or oversized frame is an `Err`, never a panic, so the
+//! connection drops instead of the process. This module is a `no-panic`
+//! surface under `nitro lint`.
+
+// A `no-panic` surface under `nitro lint`: in non-test code, prefer
+// `Result` over unwrap/expect (enforced for clippy runs too).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+use std::io::{ErrorKind, Read};
+use std::net::TcpStream;
+
+use crate::train::replica::ShardOut;
+
+pub(crate) const MAGIC: u32 = 0x4e49_5452; // "NITR"
+pub(crate) const T_HELLO: u8 = 1;
+pub(crate) const T_GRAD: u8 = 2;
+pub(crate) const T_HB: u8 = 3;
+/// Frame header: type (1) + rank (4) + step (8).
+pub(crate) const HDR_LEN: usize = 13;
+
+fn put_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_i64(v: &mut Vec<u8>, x: i64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn frame(body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+fn header(t: u8, rank: usize, step: u64, cap: usize) -> Vec<u8> {
+    let mut b = Vec::with_capacity(HDR_LEN + cap);
+    b.push(t);
+    put_u32(&mut b, rank as u32);
+    put_u64(&mut b, step);
+    b
+}
+
+pub(crate) fn encode_hello(rank: usize, world: usize) -> Vec<u8> {
+    let mut b = header(T_HELLO, rank, 0, 8);
+    put_u32(&mut b, MAGIC);
+    put_u32(&mut b, world as u32);
+    frame(b)
+}
+
+pub(crate) fn encode_hb(rank: usize, step: u64) -> Vec<u8> {
+    frame(header(T_HB, rank, step, 0))
+}
+
+pub(crate) fn encode_grad(rank: usize, step: u64, out: &ShardOut)
+                          -> Vec<u8> {
+    let cap: usize =
+        out.grads.tensors.iter().map(|t| 4 + 8 * t.data.len()).sum();
+    let mut b = header(T_GRAD, rank, step, cap + 64);
+    put_u32(&mut b, out.block_loss_raw.len() as u32);
+    for &l in &out.block_loss_raw {
+        put_i64(&mut b, l);
+    }
+    put_i64(&mut b, out.head_loss_raw);
+    put_u64(&mut b, out.correct as u64);
+    put_u32(&mut b, out.grads.tensors.len() as u32);
+    for t in &out.grads.tensors {
+        put_u32(&mut b, t.data.len() as u32);
+        for &g in &t.data {
+            put_i64(&mut b, g);
+        }
+    }
+    frame(b)
+}
+
+/// Largest legal `Grad` body for a model with `nblocks` blocks and
+/// gradient tensor lengths `lens` — the reader's frame cap.
+pub(crate) fn grad_frame_len(nblocks: usize, lens: &[usize]) -> usize {
+    HDR_LEN + 4 + 8 * nblocks + 8 + 8 + 4
+        + lens.iter().map(|&n| 4 + 8 * n).sum::<usize>()
+}
+
+/// A peer's shard as it crosses the wire; re-tensored against the
+/// local weight shapes on adoption.
+pub(crate) struct WireShard {
+    pub(crate) block_loss_raw: Vec<i64>,
+    pub(crate) head_loss_raw: i64,
+    pub(crate) correct: u64,
+    pub(crate) tensors: Vec<Vec<i64>>,
+}
+
+pub(crate) enum Msg {
+    Hello { rank: usize },
+    Grad { rank: usize, step: u64, shard: WireShard },
+    Heartbeat { rank: usize, step: u64 },
+}
+
+/// Bounds-checked little-endian cursor: every read is validated, so a
+/// truncated or padded frame is an error, never a panic.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self.i.checked_add(n).ok_or("truncated frame")?;
+        let s = self.b.get(self.i..end).ok_or("truncated frame")?;
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(*self.take(1)?.first().ok_or("truncated frame")?)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let a: [u8; 4] =
+            self.take(4)?.try_into().map_err(|_| "truncated frame")?;
+        Ok(u32::from_le_bytes(a))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let a: [u8; 8] =
+            self.take(8)?.try_into().map_err(|_| "truncated frame")?;
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn i64(&mut self) -> Result<i64, String> {
+        let a: [u8; 8] =
+            self.take(8)?.try_into().map_err(|_| "truncated frame")?;
+        Ok(i64::from_le_bytes(a))
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.i != self.b.len() {
+            return Err("trailing bytes after frame".into());
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame body. Every count is validated against the local
+/// model (`world`, `nblocks`, tensor `lens`): a frame that does not
+/// match exactly is rejected and the connection is dropped.
+pub(crate) fn decode(buf: &[u8], world: usize, nblocks: usize,
+                     lens: &[usize]) -> Result<Msg, String> {
+    let mut c = Cur { b: buf, i: 0 };
+    let t = c.u8()?;
+    let rank = c.u32()? as usize;
+    let step = c.u64()?;
+    if rank >= world {
+        return Err(format!("frame rank {rank} >= world {world}"));
+    }
+    match t {
+        T_HELLO => {
+            if c.u32()? != MAGIC {
+                return Err("bad hello magic".into());
+            }
+            let w = c.u32()? as usize;
+            if w != world {
+                return Err(format!(
+                    "world mismatch: peer says {w}, ours is {world}"
+                ));
+            }
+            c.done()?;
+            Ok(Msg::Hello { rank })
+        }
+        T_HB => {
+            c.done()?;
+            Ok(Msg::Heartbeat { rank, step })
+        }
+        T_GRAD => {
+            let nb = c.u32()? as usize;
+            if nb != nblocks {
+                return Err(format!("grad blocks {nb} != {nblocks}"));
+            }
+            let mut block_loss_raw = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                block_loss_raw.push(c.i64()?);
+            }
+            let head_loss_raw = c.i64()?;
+            let correct = c.u64()?;
+            let nt = c.u32()? as usize;
+            if nt != lens.len() {
+                return Err(format!("grad arity {nt} != {}", lens.len()));
+            }
+            let mut tensors = Vec::with_capacity(nt);
+            for (i, &want) in lens.iter().enumerate() {
+                let n = c.u32()? as usize;
+                if n != want {
+                    return Err(format!(
+                        "grad tensor {i} length {n} != {want}"
+                    ));
+                }
+                let mut t = Vec::with_capacity(n);
+                for _ in 0..n {
+                    t.push(c.i64()?);
+                }
+                tensors.push(t);
+            }
+            c.done()?;
+            Ok(Msg::Grad {
+                rank,
+                step,
+                shard: WireShard {
+                    block_loss_raw,
+                    head_loss_raw,
+                    correct,
+                    tensors,
+                },
+            })
+        }
+        other => Err(format!("unknown frame type {other}")),
+    }
+}
+
+/// Read one length-prefixed frame body into `buf`, enforcing the
+/// model-derived size cap before allocating or reading the body.
+pub(crate) fn read_frame(s: &mut TcpStream, max: usize, buf: &mut Vec<u8>)
+                         -> std::io::Result<()> {
+    let mut len4 = [0u8; 4];
+    s.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if !(HDR_LEN..=max).contains(&len) {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame length {len} outside [{HDR_LEN}, {max}]"),
+        ));
+    }
+    buf.resize(len, 0);
+    s.read_exact(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::LTensor;
+    use crate::train::replica::GradSet;
+
+    #[test]
+    fn codec_roundtrip_and_hostile_frame_rejection() {
+        let lens = [6usize, 4];
+        let shard = ShardOut {
+            block_loss_raw: vec![7, -9],
+            head_loss_raw: -11,
+            correct: 3,
+            grads: GradSet {
+                tensors: vec![
+                    LTensor::from_vec(
+                        &[2, 3],
+                        (0..6).map(|i| i as i64 - 3).collect(),
+                    ),
+                    LTensor::from_vec(
+                        &[4],
+                        vec![i64::MAX, i64::MIN, 0, 1],
+                    ),
+                ],
+            },
+        };
+        let f = encode_grad(1, 5, &shard);
+        let body = &f[4..];
+        assert_eq!(
+            u32::from_le_bytes(f[..4].try_into().unwrap()) as usize,
+            body.len()
+        );
+        // the cap derived from the model admits exactly this frame
+        assert_eq!(body.len(), grad_frame_len(2, &lens));
+        match decode(body, 3, 2, &lens).unwrap() {
+            Msg::Grad { rank, step, shard: ws } => {
+                assert_eq!((rank, step), (1, 5));
+                assert_eq!(ws.block_loss_raw, vec![7, -9]);
+                assert_eq!(ws.head_loss_raw, -11);
+                assert_eq!(ws.correct, 3);
+                assert_eq!(ws.tensors[0],
+                           (0..6).map(|i| i as i64 - 3).collect::<Vec<_>>());
+                assert_eq!(ws.tensors[1],
+                           vec![i64::MAX, i64::MIN, 0, 1]);
+            }
+            _ => panic!("decoded to the wrong message type"),
+        }
+        let hello = encode_hello(2, 3);
+        assert!(matches!(decode(&hello[4..], 3, 2, &lens),
+                         Ok(Msg::Hello { rank: 2 })));
+        let hb = encode_hb(0, 9);
+        assert!(matches!(decode(&hb[4..], 3, 2, &lens),
+                         Ok(Msg::Heartbeat { rank: 0, step: 9 })));
+        // hostile inputs: every malformation is an error, never a panic
+        let mut truncated = body.to_vec();
+        truncated.pop();
+        let mut padded = body.to_vec();
+        padded.push(0);
+        let mut bad_type = body.to_vec();
+        bad_type[0] = 99;
+        let mut bad_magic = hello[4..].to_vec();
+        bad_magic[HDR_LEN] ^= 0xff;
+        for (buf, world, needle) in [
+            (&truncated, 3, "truncated"),
+            (&padded, 3, "trailing"),
+            (&bad_type, 3, "unknown frame type"),
+            (&bad_magic, 3, "magic"),
+            // sender rank out of range for the world
+            (&body.to_vec(), 1, ">= world"),
+            // world-size mismatch in the handshake
+            (&encode_hello(0, 2)[4..].to_vec(), 3, "world mismatch"),
+        ] {
+            let err =
+                decode(buf, world, 2, &lens).unwrap_err();
+            assert!(err.contains(needle), "wanted {needle}: {err}");
+        }
+        // tensor arity/length mismatches against the local model
+        assert!(decode(body, 3, 1, &lens).unwrap_err().contains("blocks"));
+        assert!(decode(body, 3, 2, &[6]).unwrap_err().contains("arity"));
+        assert!(decode(body, 3, 2, &[6, 5])
+            .unwrap_err()
+            .contains("length"));
+    }
+}

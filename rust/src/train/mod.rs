@@ -6,6 +6,7 @@
 
 pub mod checkpoint;
 pub mod dist;
+pub mod framing;
 pub mod pipeline;
 pub mod replica;
 

@@ -112,7 +112,7 @@ impl Bencher {
             samples.push(t.elapsed().as_nanos() as f64);
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let q = |p: f64| samples[(p * (samples.len() - 1) as f64) as usize];
+        let q = |p: f64| samples[(p * samples.len().saturating_sub(1) as f64) as usize];
         let stats = Stats {
             name: name.to_string(),
             iters,

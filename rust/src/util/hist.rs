@@ -19,6 +19,8 @@
 const SUB_BITS: u32 = 5;
 /// Buckets per octave; also the threshold below which values are exact.
 const SUB: usize = 1 << SUB_BITS;
+/// Sub-bucket index mask within an octave.
+const SUB_MASK: usize = SUB - 1;
 /// Upper bound on the bucket index (`bucket_of(u64::MAX) + 1`).
 const NBUCKETS: usize = (64 - SUB_BITS as usize) * SUB + SUB;
 
@@ -26,9 +28,14 @@ fn bucket_of(v: u64) -> usize {
     if v < SUB as u64 {
         v as usize
     } else {
-        let msb = 63 - v.leading_zeros() as usize;
-        let shift = msb - SUB_BITS as usize;
-        (shift << SUB_BITS) + SUB + ((v >> shift) as usize & (SUB - 1))
+        // v >= SUB here, so msb >= SUB_BITS and the subtractions cannot
+        // underflow; saturating_* keeps that explicit under `nitro lint`.
+        let msb = 63usize.saturating_sub(v.leading_zeros() as usize);
+        let shift = msb.saturating_sub(SUB_BITS as usize);
+        shift
+            .wrapping_shl(SUB_BITS)
+            .saturating_add(SUB)
+            .saturating_add((v >> shift) as usize & SUB_MASK)
     }
 }
 
@@ -37,18 +44,20 @@ fn bucket_low(i: usize) -> u64 {
     if i < SUB {
         i as u64
     } else {
-        let shift = (i - SUB) >> SUB_BITS;
-        let sub = (i - SUB) & (SUB - 1);
-        ((SUB + sub) as u64) << shift
+        let shift = i.saturating_sub(SUB) >> SUB_BITS;
+        let sub = i.saturating_sub(SUB) & SUB_MASK;
+        // max in-range operands: (SUB + sub) <= 63 < 2^6 and shift <= 58,
+        // so the shifted value fits u64 for every valid bucket index
+        (SUB.saturating_add(sub) as u64).wrapping_shl(shift as u32)
     }
 }
 
 /// Inclusive upper bound of bucket `i`.
 fn bucket_high(i: usize) -> u64 {
-    if i + 1 >= NBUCKETS {
+    if i.saturating_add(1) >= NBUCKETS {
         u64::MAX
     } else {
-        bucket_low(i + 1) - 1
+        bucket_low(i.saturating_add(1)).saturating_sub(1)
     }
 }
 
@@ -70,9 +79,9 @@ impl LogHistogram {
     pub fn record(&mut self, v: u64) {
         let b = bucket_of(v);
         if b >= self.counts.len() {
-            self.counts.resize(b + 1, 0);
+            self.counts.resize(b.saturating_add(1), 0);
         }
-        self.counts[b] += 1;
+        self.counts[b] = self.counts[b].saturating_add(1);
         self.sum = self.sum.saturating_add(v);
         if self.count == 0 {
             self.min = v;
@@ -81,7 +90,7 @@ impl LogHistogram {
             self.min = self.min.min(v);
             self.max = self.max.max(v);
         }
-        self.count += 1;
+        self.count = self.count.saturating_add(1);
     }
 
     pub fn count(&self) -> u64 {
@@ -109,7 +118,7 @@ impl LogHistogram {
             self.counts.resize(other.counts.len(), 0);
         }
         for (dst, src) in self.counts.iter_mut().zip(&other.counts) {
-            *dst += src;
+            *dst = dst.saturating_add(*src);
         }
         self.sum = self.sum.saturating_add(other.sum);
         if self.count == 0 {
@@ -119,7 +128,7 @@ impl LogHistogram {
             self.min = self.min.min(other.min);
             self.max = self.max.max(other.max);
         }
-        self.count += other.count;
+        self.count = self.count.saturating_add(other.count);
     }
 
     /// Value at quantile `q` in `[0, 1]`: the upper bound of the bucket
@@ -133,7 +142,7 @@ impl LogHistogram {
             .clamp(1, self.count);
         let mut cum = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
-            cum += c;
+            cum = cum.saturating_add(c);
             if cum >= rank {
                 return bucket_high(i).clamp(self.min, self.max);
             }

@@ -7,6 +7,10 @@
 //! exactly (golden vectors are integers — float round-tripping them would
 //! defeat the bit-exactness story).
 
+// A `no-panic` surface under `nitro lint`: in non-test code, prefer
+// `Result` over unwrap/expect (enforced for clippy runs too).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -276,8 +280,7 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn skip_ws(&mut self) {
-        while self.i < self.b.len()
-            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r'))
         {
             self.i += 1;
         }
@@ -297,7 +300,8 @@ impl<'a> Parser<'a> {
     }
 
     fn lit(&mut self, s: &str, v: Json) -> Result<Json, String> {
-        if self.b[self.i..].starts_with(s.as_bytes()) {
+        let tail = self.b.get(self.i..).unwrap_or(&[]);
+        if tail.starts_with(s.as_bytes()) {
             self.i += s.len();
             Ok(v)
         } else {
@@ -401,13 +405,12 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err("bad \\u escape".into());
-                            }
-                            let hex = std::str::from_utf8(
-                                &self.b[self.i + 1..self.i + 5],
-                            )
-                            .map_err(|_| "bad \\u escape")?;
+                            let hb = self
+                                .b
+                                .get(self.i + 1..self.i + 5)
+                                .ok_or("bad \\u escape")?;
+                            let hex = std::str::from_utf8(hb)
+                                .map_err(|_| "bad \\u escape")?;
                             let cp = u32::from_str_radix(hex, 16)
                                 .map_err(|_| "bad \\u escape")?;
                             s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
@@ -426,8 +429,9 @@ impl<'a> Parser<'a> {
                         }
                         self.i += 1;
                     }
+                    let run = self.b.get(start..self.i).unwrap_or(&[]);
                     s.push_str(
-                        std::str::from_utf8(&self.b[start..self.i])
+                        std::str::from_utf8(run)
                             .map_err(|_| "invalid utf8")?,
                     );
                 }
@@ -461,7 +465,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let digits = self.b.get(start..self.i).unwrap_or(&[]);
+        let txt = std::str::from_utf8(digits).map_err(|_| "bad number")?;
         if is_float {
             txt.parse::<f64>()
                 .map(Json::Float)

@@ -345,6 +345,9 @@ pub mod pool {
     /// build) — once one participant's loop exhausts the cursor, extra
     /// invocations are no-ops. That is what makes cancelling this job's
     /// unclaimed tickets sound after the caller's own loop returns.
+    // `unsafe` is limited to the lifetime-erasure transmute below;
+    // exempted from the crate-root `#![deny(unsafe_code)]`.
+    #[allow(unsafe_code)]
     pub(super) fn run(extra: usize, task: &(dyn Fn() + Sync)) {
         let p = global();
         let extra = extra.min(p.threads);
