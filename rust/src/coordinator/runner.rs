@@ -19,6 +19,7 @@ use crate::baselines::{fp, pocketnn};
 use crate::coordinator::experiments::Scale;
 use crate::coordinator::spec::{EngineKind, ExperimentSpec, ResolvedRun};
 use crate::data::{loader, Dataset};
+use crate::nn::spec::BitsPlan;
 use crate::nn::{zoo, Network};
 use crate::train::{dist, fit_dist, fit_observed, EpochRecord,
                    MetricSink, NullSink, Scheduler, TrainConfig,
@@ -50,6 +51,10 @@ pub struct RunnerOpts {
     /// nitro engine: the run executes as `n` loopback-TCP
     /// `train::dist` ranks in one process, metric-identical to `1`.
     pub ranks: Option<usize>,
+    /// `Some(plan)` replaces the spec's `"bits"` sweep with this single
+    /// W/A/G/E bitwidth cell (`--bits` CLI flag). Unlike the knobs above
+    /// this changes the arithmetic, not just the execution strategy.
+    pub bits: Option<BitsPlan>,
     /// Directory for per-run records (default `results`).
     pub out_dir: String,
     /// Directory for the aggregate BENCH file (default `.`, i.e. the
@@ -68,6 +73,7 @@ impl Default for RunnerOpts {
             scheduler: None,
             replicas: None,
             ranks: None,
+            bits: None,
             out_dir: "results".to_string(),
             bench_dir: ".".to_string(),
             verbose: false,
@@ -120,6 +126,19 @@ struct RunOutcome {
 /// aggregate BENCH file, and return the aggregate JSON.
 pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
                -> Result<Json, String> {
+    // --bits replaces the spec's sweep with one cell before resolution,
+    // so id suffixing and per-run threading work identically either way
+    let spec_override;
+    let spec = match &opts.bits {
+        Some(plan) => {
+            spec_override = ExperimentSpec {
+                bits: vec![plan.clone()],
+                ..spec.clone()
+            };
+            &spec_override
+        }
+        None => spec,
+    };
     let scale = opts.scale.unwrap_or(spec.scale);
     let runs = spec.resolve(scale, opts.seed, opts.epochs)?;
     println!(
@@ -132,6 +151,10 @@ pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
     std::fs::create_dir_all(&run_dir)
         .map_err(|e| format!("mkdir {run_dir}: {e}"))?;
     let mut rows = Vec::new();
+    // Accuracy-only rows for BENCH_bitwidth.json: no timing, scheduler,
+    // replica or rank keys, so CI can diff the whole file byte-for-byte
+    // across scheduler/replica lanes per bits setting.
+    let mut bw_rows = Vec::new();
     // Consecutive runs of one row (engine × seed expansion) share the same
     // dataset; cache the last one so it is loaded + normalized once.
     let mut cache: Option<((String, usize, usize, u64), (Dataset, Dataset))> =
@@ -170,6 +193,31 @@ pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
             out.final_test_acc * 100.0,
             t0.elapsed().as_secs_f64()
         );
+        if r.engine == EngineKind::Nitro {
+            bw_rows.push(Json::obj(vec![
+                ("id", Json::Str(r.id.clone())),
+                ("preset", Json::Str(r.preset.clone())),
+                ("dataset", Json::Str(r.dataset.clone())),
+                ("seed", Json::Int(r.seed as i64)),
+                ("epochs", Json::Int(r.epochs as i64)),
+                ("bits", Json::Str(r.bits.label())),
+                ("final_test_acc", Json::Float(out.final_test_acc)),
+                (
+                    "final_train_acc",
+                    out.record
+                        .get("final_train_acc")
+                        .cloned()
+                        .unwrap_or(Json::Null),
+                ),
+                (
+                    "diverged",
+                    out.record
+                        .get("diverged")
+                        .cloned()
+                        .unwrap_or(Json::Bool(false)),
+                ),
+            ]));
+        }
         rows.push(out.record);
     }
     let bench = Json::obj(vec![
@@ -189,6 +237,20 @@ pub fn execute(spec: &ExperimentSpec, opts: &RunnerOpts)
     std::fs::write(&bench_path, bench.pretty())
         .map_err(|e| format!("write {bench_path}: {e}"))?;
     println!("  -> {bench_path}");
+    let bw = Json::obj(vec![
+        ("schema_version", Json::Int(SCHEMA_VERSION)),
+        ("experiment", Json::Str(spec.name.clone())),
+        ("scale", Json::Str(scale.name().to_string())),
+        ("rows", Json::Array(bw_rows)),
+    ]);
+    let bw_path = if opts.bench_dir == "." || opts.bench_dir.is_empty() {
+        "BENCH_bitwidth.json".to_string()
+    } else {
+        format!("{}/BENCH_bitwidth.json", opts.bench_dir)
+    };
+    std::fs::write(&bw_path, bw.pretty())
+        .map_err(|e| format!("write {bw_path}: {e}"))?;
+    println!("  -> {bw_path}");
     Ok(bench)
 }
 
@@ -197,7 +259,8 @@ fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset,
                verbose: bool) -> Result<RunOutcome, String> {
     let net_spec = zoo::get(&r.preset)
         .ok_or_else(|| format!("run '{}': unknown preset '{}'", r.id,
-                               r.preset))?;
+                               r.preset))?
+        .with_bits(r.bits.clone());
     let mut log = EpochLog { rows: Vec::new() };
     let t0 = Instant::now();
     // (test acc, train acc if the engine reports one, diverged)
@@ -327,6 +390,17 @@ fn execute_run(r: &ResolvedRun, tr: &Dataset, te: &Dataset,
             "ranks",
             match r.engine {
                 EngineKind::Nitro => Json::Int(ranks as i64),
+                _ => Json::Null,
+            },
+        ),
+        (
+            // W/A/G/E rails the nitro engine trained with ("W/A/G/E"
+            // label, plus any per-layer overrides). NOT stripped in
+            // cross-lane comparisons: different rails are different
+            // arithmetic, not a different execution strategy.
+            "bits",
+            match r.engine {
+                EngineKind::Nitro => Json::Str(r.bits.label()),
                 _ => Json::Null,
             },
         ),
@@ -485,7 +559,7 @@ mod tests {
         for row in rows {
             for key in ["id", "engine", "final_test_acc", "wall_secs",
                         "diverged", "seed", "hyper", "scheduler",
-                        "replicas", "ranks"] {
+                        "replicas", "ranks", "bits"] {
                 assert!(row.get(key).is_some(), "row missing '{key}'");
             }
             let acc = row.req("final_test_acc").unwrap().as_f64().unwrap();
@@ -502,6 +576,69 @@ mod tests {
         let epochs = detail.req("epoch_metrics").unwrap().as_array().unwrap();
         assert_eq!(epochs.len(), 1);
         assert!(epochs[0].get("head_loss").is_some());
+    }
+
+    /// A `"bits"` sweep must expand nitro rows only, suffix the swept
+    /// ids, and emit an accuracy-only `BENCH_bitwidth.json` free of
+    /// timing/scheduler/replica keys (so CI can byte-compare it across
+    /// execution-strategy lanes).
+    #[test]
+    fn bits_sweep_emits_bitwidth_bench() {
+        use crate::nn::spec::BitwidthCfg;
+        let mut spec = ExperimentSpec::load_builtin("smoke").unwrap();
+        spec.bits = vec![
+            BitsPlan::default(),
+            BitsPlan::uniform(BitwidthCfg::uniform(8)),
+        ];
+        let dir = std::env::temp_dir().join("nitro_runner_bits_test");
+        let dir = dir.to_str().unwrap().to_string();
+        let opts = RunnerOpts {
+            epochs: 1,
+            out_dir: format!("{dir}/results"),
+            bench_dir: dir.clone(),
+            ..Default::default()
+        };
+        let bench = execute(&spec, &opts).unwrap();
+        let rows = bench.req("rows").unwrap().as_array().unwrap();
+        // 2 nitro cells + 1 fp-bp row (baselines don't sweep)
+        assert_eq!(rows.len(), 3);
+        let ids: Vec<&str> = rows
+            .iter()
+            .filter(|r| r.req("engine").unwrap().as_str() == Some("nitro"))
+            .map(|r| r.req("id").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(ids, vec!["tinycnn/tiny", "tinycnn/tiny+bits8-8-64-64"]);
+        let bw = Json::parse_file(&format!("{dir}/BENCH_bitwidth.json"))
+            .unwrap();
+        let bw_rows = bw.req("rows").unwrap().as_array().unwrap();
+        assert_eq!(bw_rows.len(), 2, "nitro rows only");
+        for row in bw_rows {
+            assert_eq!(
+                row.get("bits").and_then(Json::as_str).is_some(),
+                true
+            );
+            assert!(row.get("final_test_acc").is_some());
+            for absent in ["wall_secs", "peak_rss_kb", "scheduler",
+                           "replicas", "ranks"] {
+                assert!(row.get(absent).is_none(),
+                        "bitwidth row must not carry '{absent}'");
+            }
+        }
+        // --bits override collapses the sweep to its single cell
+        let opts = RunnerOpts {
+            epochs: 1,
+            bits: Some(BitsPlan::uniform(BitwidthCfg::uniform(16))),
+            out_dir: format!("{dir}/o/results"),
+            bench_dir: format!("{dir}/o"),
+            ..Default::default()
+        };
+        let bench = execute(&spec, &opts).unwrap();
+        let rows = bench.req("rows").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 2, "one nitro cell + fp-bp");
+        assert!(rows.iter().any(|r| {
+            r.req("bits").unwrap().as_str() == Some("16/16/64/64")
+        }));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// `--ranks 2` (loopback distributed world) must leave every metric

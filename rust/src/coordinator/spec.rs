@@ -44,6 +44,7 @@
 //! `gamma_inv` → the run's `hyper`.
 
 use crate::coordinator::experiments::Scale;
+use crate::nn::spec::BitsPlan;
 use crate::nn::Hyper;
 use crate::train::Scheduler;
 use crate::util::jsonio::Json;
@@ -186,6 +187,32 @@ fn parse_dropout(j: Option<&Json>) -> Result<Option<(f64, f64)>, String> {
     Ok(Some((p(&arr[0])?, p(&arr[1])?)))
 }
 
+/// `"bits"` key: one bitwidth cell or an array of cells to sweep. A cell
+/// is anything [`BitsPlan::from_json`] accepts — an integer (`8` =
+/// uniform W/A at 8 bits, G/E at 64), a `"W/A/G/E"` string, or an object
+/// with optional per-layer overrides. Absent = the full-width default
+/// (32/32/64/64), which clamps nothing.
+fn parse_bits(j: Option<&Json>) -> Result<Vec<BitsPlan>, String> {
+    let Some(j) = j else { return Ok(vec![BitsPlan::default()]) };
+    let cells = match j.as_array() {
+        Some(arr) => {
+            if arr.is_empty() {
+                return Err("bits: must not be empty".to_string());
+            }
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, cell) in arr.iter().enumerate() {
+                out.push(
+                    BitsPlan::from_json(cell)
+                        .map_err(|e| format!("bits[{i}]: {e}"))?,
+                );
+            }
+            out
+        }
+        None => vec![BitsPlan::from_json(j).map_err(|e| format!("bits: {e}"))?],
+    };
+    Ok(cells)
+}
+
 fn parse_engines(j: Option<&Json>) -> Result<Option<Vec<EngineKind>>, String> {
     let Some(j) = j else { return Ok(None) };
     let arr = j.as_array().ok_or("engines: expected an array")?;
@@ -248,10 +275,13 @@ impl RunSpec {
                 let arr = v.as_array().ok_or("scales: expected an array")
                     .map_err(|e| ctx(e.to_string()))?;
                 let mut out = Vec::new();
-                for s in arr {
-                    out.push(
-                        Scale::parse(s.as_str().unwrap_or("?")).map_err(&ctx)?,
-                    );
+                for (i, s) in arr.iter().enumerate() {
+                    // a non-string element is its own error with its index,
+                    // not a bogus Scale::parse("?") message
+                    let s = s.as_str().ok_or_else(|| {
+                        ctx(format!("scales[{i}]: expected string"))
+                    })?;
+                    out.push(Scale::parse(s).map_err(&ctx)?);
                 }
                 Some(out)
             }
@@ -300,6 +330,11 @@ pub struct ExperimentSpec {
     /// metric-identical to `ranks = 1` (the integer all-reduce is
     /// exact). A cross-check knob like `scheduler` and `replicas`.
     pub ranks: usize,
+    /// W/A/G/E bitwidth cells for the nitro engine (`"bits"` key): each
+    /// cell expands every nitro row into its own run. Unlike `scheduler`
+    /// and `replicas` this IS a modelling knob — different rails change
+    /// the arithmetic. FP/PocketNN baselines ignore it (one default row).
+    pub bits: Vec<BitsPlan>,
     pub fp_lr: f64,
     pub fp_epochs_div: usize,
     /// Batch size for the FP baselines (the paper's baselines always ran
@@ -389,6 +424,7 @@ impl ExperimentSpec {
                 Some(0) => return Err("ranks: must be >= 1".to_string()),
                 Some(n) => n,
             },
+            bits: parse_bits(j.get("bits"))?,
             fp_lr: j.f64_or("fp_lr", 1e-3),
             fp_epochs_div: opt_usize(j, "fp_epochs_div")?.unwrap_or(1).max(1),
             fp_batch: opt_usize(j, "fp_batch")?,
@@ -476,31 +512,52 @@ impl ExperimentSpec {
             let batch = run.batch.or(sc.batch).unwrap_or(self.defaults_batch);
             let fp_batch = self.fp_batch.unwrap_or(batch);
             let engines = run.engines.as_ref().unwrap_or(&self.engines);
+            let default_bits = [BitsPlan::default()];
             for &engine in engines {
-                for &seed in &seeds {
-                    out.push(ResolvedRun {
-                        id: run.id.clone(),
-                        preset: pick(&run.preset, &run.preset_quick),
-                        dataset: pick(&run.dataset, &run.dataset_quick),
-                        engine,
-                        seed,
-                        scale,
-                        epochs,
-                        fp_epochs,
-                        batch,
-                        fp_batch,
-                        n_train: sc.n_train,
-                        n_test: sc.n_test,
-                        hyper,
-                        dropout: run.dropout.unwrap_or(self.defaults_dropout),
-                        fixed_lr: self.fixed_lr,
-                        scheduler: self.scheduler,
-                        replicas: self.replicas,
-                        ranks: self.ranks,
-                        fp_lr: self.fp_lr,
-                        paper_acc: run.paper_acc,
-                        paper_note: run.paper_note.clone(),
-                    });
+                // only the nitro engine sweeps bitwidth cells; the FP and
+                // PocketNN baselines have no integer rails to configure
+                let cells: &[BitsPlan] = if engine == EngineKind::Nitro {
+                    &self.bits
+                } else {
+                    &default_bits
+                };
+                for cell in cells {
+                    for &seed in &seeds {
+                        // non-default cells get an id suffix so detail
+                        // files and BENCH rows stay collision-free
+                        let id = if cell.is_default() {
+                            run.id.clone()
+                        } else {
+                            format!("{}+bits{}", run.id,
+                                    cell.label().replace('/', "-"))
+                        };
+                        out.push(ResolvedRun {
+                            id,
+                            preset: pick(&run.preset, &run.preset_quick),
+                            dataset: pick(&run.dataset, &run.dataset_quick),
+                            engine,
+                            seed,
+                            scale,
+                            epochs,
+                            fp_epochs,
+                            batch,
+                            fp_batch,
+                            n_train: sc.n_train,
+                            n_test: sc.n_test,
+                            hyper,
+                            dropout: run
+                                .dropout
+                                .unwrap_or(self.defaults_dropout),
+                            fixed_lr: self.fixed_lr,
+                            scheduler: self.scheduler,
+                            replicas: self.replicas,
+                            ranks: self.ranks,
+                            bits: cell.clone(),
+                            fp_lr: self.fp_lr,
+                            paper_acc: run.paper_acc,
+                            paper_note: run.paper_note.clone(),
+                        });
+                    }
                 }
             }
         }
@@ -546,6 +603,8 @@ pub struct ResolvedRun {
     /// Distributed loopback world size for the nitro engine
     /// (metric-identical for every value; see `train::dist`).
     pub ranks: usize,
+    /// W/A/G/E rails for this run (default = full width, no clamping).
+    pub bits: BitsPlan,
     pub fp_lr: f64,
     pub paper_acc: Option<f64>,
     pub paper_note: Option<String>,
@@ -685,6 +744,100 @@ mod tests {
         let runs = spec.resolve(Scale::Quick, None, 0).unwrap();
         assert!(runs.iter().all(|r| r.ranks == 3));
         for bad in [r#""ranks": 0,"#, r#""ranks": -1,"#] {
+            assert!(
+                ExperimentSpec::parse(&Json::parse(&base(bad)).unwrap())
+                    .is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn scales_element_type_error_reports_index() {
+        // regression: a non-string scales element used to be parsed as
+        // Scale::parse("?") and reported as an unknown scale name
+        let j = Json::parse(
+            r#"{"name": "t", "runs": [
+                 {"id": "a", "preset": "tinycnn", "dataset": "tiny",
+                  "scales": ["quick", 3]}
+               ]}"#,
+        )
+        .unwrap();
+        let err = ExperimentSpec::parse(&j).unwrap_err();
+        assert!(
+            err.contains("scales[1]: expected string"),
+            "got: {err}"
+        );
+        // valid string elements still parse
+        let j = Json::parse(
+            r#"{"name": "t", "runs": [
+                 {"id": "a", "preset": "tinycnn", "dataset": "tiny",
+                  "scales": ["quick"]}
+               ]}"#,
+        )
+        .unwrap();
+        assert!(ExperimentSpec::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn bits_key_sweeps_nitro_rows_and_suffixes_ids() {
+        let base = |extra: &str| {
+            format!(
+                r#"{{"name": "t", {extra} "runs": [
+                     {{"id": "a", "preset": "tinycnn", "dataset": "tiny"}}
+                   ]}}"#
+            )
+        };
+        // absent -> one default cell, no suffix
+        let spec =
+            ExperimentSpec::parse(&Json::parse(&base("")).unwrap()).unwrap();
+        assert_eq!(spec.bits.len(), 1);
+        assert!(spec.bits[0].is_default());
+        let runs = spec.resolve(Scale::Quick, None, 0).unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].id, "a");
+        assert!(runs[0].bits.is_default());
+        // sweep: ints, strings and objects all accepted as cells;
+        // "bits": 32 is the default config and keeps the bare id
+        let spec = ExperimentSpec::parse(
+            &Json::parse(&base(
+                r#""bits": [32, "8/8/64/64", {"weights": 16}],"#,
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+        let runs = spec.resolve(Scale::Quick, None, 0).unwrap();
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0].id, "a");
+        assert_eq!(runs[1].id, "a+bits8-8-64-64");
+        assert_eq!(runs[2].id, "a+bits16-32-64-64");
+        assert_eq!(runs[1].bits.base.weights, 8);
+        // baselines do not expand the sweep: one default row each
+        let spec = ExperimentSpec::parse(
+            &Json::parse(&base(
+                r#""bits": [32, 8], "engines": ["nitro", "fp-bp"],"#,
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+        let runs = spec.resolve(Scale::Quick, None, 0).unwrap();
+        let nitro = runs
+            .iter()
+            .filter(|r| r.engine == EngineKind::Nitro)
+            .count();
+        let fp = runs.iter().filter(|r| r.engine == EngineKind::FpBp).count();
+        assert_eq!((nitro, fp), (2, 1));
+        assert!(runs
+            .iter()
+            .filter(|r| r.engine == EngineKind::FpBp)
+            .all(|r| r.bits.is_default()));
+        // malformed cells are typed errors with their index
+        for bad in [
+            r#""bits": [],"#,
+            r#""bits": [32, "8/8"],"#,
+            r#""bits": true,"#,
+            r#""bits": [1],"#,
+        ] {
             assert!(
                 ExperimentSpec::parse(&Json::parse(&base(bad)).unwrap())
                     .is_err(),

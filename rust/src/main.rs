@@ -113,6 +113,9 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("replicas", "1",
              "data-parallel replica count (bit-identical to 1: integer \
               gradient all-reduce is exact)")
+        .opt("bits", "",
+             "W/A/G/E bitwidth rails: 'N' (uniform W/A) or 'W/A/G/E', \
+              e.g. 8 or 8/8/64/64 ('' = full-width default)")
         .flag("distributed",
               "run as one rank of a multi-process group over TCP \
                (needs --peers); byte-identical to --replicas <world>")
@@ -152,8 +155,14 @@ fn cmd_train(argv: &[String]) -> i32 {
         };
         match p.get("engine") {
             "native" => {
-                let spec = zoo::get(&preset)
+                let mut spec = zoo::get(&preset)
                     .ok_or_else(|| format!("unknown preset '{preset}'"))?;
+                if !p.get("bits").is_empty() {
+                    let cfg = nitro::nn::spec::BitwidthCfg::parse_label(
+                        p.get("bits"))?;
+                    spec = spec.with_bits(
+                        nitro::nn::spec::BitsPlan::uniform(cfg));
+                }
                 println!(
                     "training {preset} ({} params, {} at inference) on {}",
                     spec.param_count(),
@@ -313,6 +322,9 @@ fn cmd_eval(argv: &[String]) -> i32 {
         .opt("dataset", "tiny", "dataset name")
         .opt("n-test", "400", "synthetic test samples")
         .opt("seed", "42", "dataset seed")
+        .opt("bits", "",
+             "W/A/G/E bitwidth rails the checkpoint was trained with \
+              ('' = full-width default; must match the NITRO1 header)")
         .positional("checkpoint", "path to .ckpt file");
     let p = match cmd.parse(argv) {
         Ok(p) => p,
@@ -321,8 +333,13 @@ fn cmd_eval(argv: &[String]) -> i32 {
     let run = || -> Result<(), String> {
         let ckpt = p.positionals.first().ok_or("missing checkpoint path")?;
         let seed = p.get_i64("seed")? as u64;
-        let spec = zoo::get(p.get("preset"))
+        let mut spec = zoo::get(p.get("preset"))
             .ok_or_else(|| format!("unknown preset '{}'", p.get("preset")))?;
+        if !p.get("bits").is_empty() {
+            let cfg = nitro::nn::spec::BitwidthCfg::parse_label(
+                p.get("bits"))?;
+            spec = spec.with_bits(nitro::nn::spec::BitsPlan::uniform(cfg));
+        }
         let mut net = Network::new(spec, 0);
         checkpoint::load(&mut net, ckpt)?;
         let (_, mut te) = loader::load(p.get("dataset"), "data", 16,
@@ -536,6 +553,10 @@ fn cmd_run_spec(argv: &[String]) -> i32 {
         .opt("ranks", "0",
              "override the spec's loopback distributed world size \
               (0 = spec default; metric-identical)")
+        .opt("bits", "",
+             "override the spec's W/A/G/E bitwidth sweep with one cell: \
+              'N' (uniform W/A, e.g. 8) or 'W/A/G/E' (e.g. 8/8/64/64); \
+              changes the arithmetic, unlike the knobs above")
         .opt("out-dir", "results", "directory for per-run records")
         .opt("bench-dir", ".", "directory for the aggregate BENCH json")
         .flag("verbose", "per-epoch trainer logs")
@@ -571,6 +592,12 @@ fn cmd_run_spec(argv: &[String]) -> i32 {
             ranks: match p.get_usize("ranks")? {
                 0 => None,
                 n => Some(n),
+            },
+            bits: match p.get("bits") {
+                "" => None,
+                s => Some(nitro::nn::spec::BitsPlan::uniform(
+                    nitro::nn::spec::BitwidthCfg::parse_label(s)?,
+                )),
             },
             out_dir: p.get("out-dir").to_string(),
             bench_dir: p.get("bench-dir").to_string(),

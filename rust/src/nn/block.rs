@@ -5,8 +5,8 @@
 //! against `artifacts/golden/<preset>_steps.json` (full 3-step training
 //! traces) in `rust/tests/golden.rs`.
 
-use crate::nn::spec::{BlockSpec, HeadSpec, NetworkSpec};
-use crate::optim::integer_sgd;
+use crate::nn::spec::{BitwidthCfg, BlockSpec, HeadSpec, NetworkSpec};
+use crate::optim::integer_sgd_railed;
 use crate::tensor::{
     conv2d_i64, kernels, matmul_a_bt_i64, matmul_at_b_i64, matmul_i64,
     maxpool2d, maxpool2d_bwd, nitro_relu, nitro_relu_bwd,
@@ -14,6 +14,19 @@ use crate::tensor::{
     scale_factor_linear, ITensor, KernelWorkspace, LTensor,
 };
 use crate::util::rng::Pcg32;
+
+/// Saturate a NITRO-Scaling output (or error signal) to `±rail`.
+///
+/// At the full-width rail (`i32::MAX`, the 32-bit default) this is a
+/// **no-call**: clamping to `±i32::MAX` is not the identity (it would
+/// remap `i32::MIN`), and skipping the kernel entirely keeps the default
+/// configuration byte-identical to the pre-rail code path — including the
+/// golden traces.
+fn clamp_rail(t: &mut ITensor, rail: i32) {
+    if rail < i32::MAX {
+        kernels().clamp_i32(t, rail);
+    }
+}
 
 /// Per-step hyper-parameters (paper Table 6/7 names).
 #[derive(Clone, Copy, Debug)]
@@ -120,6 +133,9 @@ pub struct Block {
     /// Dropout probability in 1/256ths (0 = disabled). Mask-only dropout —
     /// DESIGN.md interp. #5.
     pub drop_p256: u32,
+    /// W/A/G/E rails for this block (default 32/32/64/64 = no clamping).
+    /// Assigned by [`Network::new`] from the spec's per-layer plan.
+    pub bits: BitwidthCfg,
     /// Per-block kernel scratch: transpose / im2col / accumulator buffers
     /// reused across steps, so the training forward and weight-grad share
     /// one im2col extraction and the steady state allocates no scratch.
@@ -139,15 +155,24 @@ impl Block {
                 init_weights(rng, &l.wl_shape(), l.out_features),
             ),
         };
-        Block { spec, wf, wl, drop_p256: 0, ws: KernelWorkspace::new() }
+        Block {
+            spec,
+            wf,
+            wl,
+            drop_p256: 0,
+            bits: BitwidthCfg::default(),
+            ws: KernelWorkspace::new(),
+        }
     }
 
     /// Inference forward (no dropout, no cache).
     pub fn forward(&self, a: &ITensor) -> ITensor {
+        let rail = self.bits.act_rail();
         match &self.spec {
             BlockSpec::Conv(c) => {
                 let z = conv2d_i64(a, &self.wf, c.padding);
-                let zs = nitro_scale(&z, c.sf());
+                let mut zs = nitro_scale(&z, c.sf());
+                clamp_rail(&mut zs, rail);
                 let act = nitro_relu(&zs, c.alpha_inv);
                 if c.pool {
                     maxpool2d(&act, 2, 2).0
@@ -157,7 +182,8 @@ impl Block {
             }
             BlockSpec::Linear(l) => {
                 let z = matmul_i64(a, &self.wf);
-                let zs = nitro_scale(&z, l.sf());
+                let mut zs = nitro_scale(&z, l.sf());
+                clamp_rail(&mut zs, rail);
                 nitro_relu(&zs, l.alpha_inv)
             }
         }
@@ -172,19 +198,23 @@ impl Block {
     pub fn infer_into(&self, a: &ITensor, ws: &mut KernelWorkspace,
                       mid: &mut ITensor, out: &mut ITensor) {
         let kb = kernels();
+        let rail = self.bits.act_rail();
         match &self.spec {
             BlockSpec::Conv(c) => {
                 if c.pool {
                     kb.conv2d_scale(a, &self.wf, c.padding, c.sf(), ws, mid);
+                    clamp_rail(mid, rail);
                     nitro_relu_inplace(mid, c.alpha_inv);
                     kb.maxpool2d(mid, 2, 2, out);
                 } else {
                     kb.conv2d_scale(a, &self.wf, c.padding, c.sf(), ws, out);
+                    clamp_rail(out, rail);
                     nitro_relu_inplace(out, c.alpha_inv);
                 }
             }
             BlockSpec::Linear(l) => {
                 kb.matmul_scale(a, &self.wf, l.sf(), ws, out);
+                clamp_rail(out, rail);
                 nitro_relu_inplace(out, l.alpha_inv);
             }
         }
@@ -232,11 +262,13 @@ impl Block {
     /// block workspace, activation, block pooling.
     fn forward_core(&mut self, a: &ITensor) -> BlockCache {
         let kb = kernels();
+        let rail = self.bits.act_rail();
         let (zs, act_shape, pool_arg, out) = match &self.spec {
             BlockSpec::Conv(c) => {
                 let mut zs = ITensor::empty();
                 kb.conv2d_scale(a, &self.wf, c.padding, c.sf(), &mut self.ws,
                                 &mut zs);
+                clamp_rail(&mut zs, rail);
                 let act = nitro_relu(&zs, c.alpha_inv);
                 let act_shape = act.shape.clone();
                 if c.pool {
@@ -249,6 +281,7 @@ impl Block {
             BlockSpec::Linear(l) => {
                 let mut zs = ITensor::empty();
                 kb.matmul_scale(a, &self.wf, l.sf(), &mut self.ws, &mut zs);
+                clamp_rail(&mut zs, rail);
                 let act = nitro_relu(&zs, l.alpha_inv);
                 let act_shape = act.shape.clone();
                 (zs, act_shape, None, act)
@@ -278,7 +311,11 @@ impl Block {
         let mut yhat = ITensor::empty();
         kernels().matmul_scale(feat, &self.wl, scale_factor_linear(fcols),
                                &mut self.ws, &mut yhat);
-        let (loss_raw, grad_l) = rss_loss_grad_raw(&yhat, y32);
+        clamp_rail(&mut yhat, self.bits.act_rail());
+        let (loss_raw, mut grad_l) = rss_loss_grad_raw(&yhat, y32);
+        // error signal is per-sample elementwise — clamping here is
+        // shard-invariant under any batch split
+        clamp_rail(&mut grad_l, self.bits.err_rail());
         let gw_l = matmul_at_b_i64(feat, &grad_l); // featᵀ·∇L (F,G)
         let dfeat = matmul_a_bt_i64(&grad_l, &self.wl).to_i32(); // ∇L·Wᵀ
 
@@ -305,7 +342,9 @@ impl Block {
             BlockSpec::Conv(c) => c.alpha_inv,
             BlockSpec::Linear(l) => l.alpha_inv,
         };
-        let d = nitro_relu_bwd(&cache.zs, &d, alpha_inv);
+        let mut d = nitro_relu_bwd(&cache.zs, &d, alpha_inv);
+        clamp_rail(&mut d, self.bits.err_rail());
+        let d = d;
         // NITRO scaling backward = STE (identity)
         let gw_f: LTensor = match &self.spec {
             // reuses the im2col patches the forward pass left in the
@@ -332,11 +371,18 @@ impl Block {
     /// gradients, with the per-role rate wiring: forward layers run at
     /// `γ_inv^fw = γ_inv^lr · AF` (DESIGN.md interp. #1) with `η_fw`
     /// decay, learning layers at `γ_inv` with `η_lr` decay.
+    /// Rails: this is the single post-reduce funnel every scheduler and
+    /// replica count goes through, so clamping the (all-reduced) gradient
+    /// to the G rail and the updated weight to the W rail here is
+    /// replica-count invariant.
     pub fn apply_grads(&mut self, gw_f: &LTensor, gw_l: &LTensor,
                        hp: &Hyper) {
         let af = 64 * self.spec.num_classes() as i64;
-        integer_sgd(&mut self.wl, gw_l, hp.gamma_inv, hp.eta_lr_inv);
-        integer_sgd(&mut self.wf, gw_f, hp.gamma_inv * af, hp.eta_fw_inv);
+        let (gr, wr) = (self.bits.grad_rail(), self.bits.weight_rail());
+        integer_sgd_railed(&mut self.wl, gw_l, hp.gamma_inv, hp.eta_lr_inv,
+                           gr, wr);
+        integer_sgd_railed(&mut self.wf, gw_f, hp.gamma_inv * af,
+                           hp.eta_fw_inv, gr, wr);
     }
 
     /// Convenience: forward + backward in one call (sequential mode).
@@ -446,6 +492,9 @@ pub fn adaptive_pool_bwd(dfeat: &ITensor, arg: Option<&ITensor>,
 pub struct Head {
     pub spec: HeadSpec,
     pub wo: ITensor,
+    /// W/A/G/E rails for the head (default 32/32/64/64 = no clamping).
+    /// Assigned by [`Network::new`] from the spec's base config.
+    pub bits: BitwidthCfg,
     /// Kernel scratch reused across training steps.
     ws: KernelWorkspace,
 }
@@ -458,12 +507,19 @@ impl Head {
             &[spec.in_features, spec.num_classes],
             spec.fan_in(),
         );
-        Head { spec, wo, ws: KernelWorkspace::new() }
+        Head {
+            spec,
+            wo,
+            bits: BitwidthCfg::default(),
+            ws: KernelWorkspace::new(),
+        }
     }
 
     pub fn forward(&self, a: &ITensor) -> ITensor {
         let z = matmul_i64(a, &self.wo);
-        nitro_scale(&z, self.spec.sf())
+        let mut zs = nitro_scale(&z, self.spec.sf());
+        clamp_rail(&mut zs, self.bits.act_rail());
+        zs
     }
 
     /// Grad-free serving forward into a caller buffer (see
@@ -471,6 +527,7 @@ impl Head {
     pub fn infer_into(&self, a: &ITensor, ws: &mut KernelWorkspace,
                       out: &mut ITensor) {
         kernels().matmul_scale(a, &self.wo, self.spec.sf(), ws, out);
+        clamp_rail(out, self.bits.act_rail());
     }
 
     /// Head forward + gradient without the update: `(ŷ, raw RSS loss,
@@ -482,7 +539,9 @@ impl Head {
         let mut yhat = ITensor::empty();
         kernels().matmul_scale(a, &self.wo, self.spec.sf(), &mut self.ws,
                                &mut yhat);
-        let (loss_raw, grad) = rss_loss_grad_raw(&yhat, y32);
+        clamp_rail(&mut yhat, self.bits.act_rail());
+        let (loss_raw, mut grad) = rss_loss_grad_raw(&yhat, y32);
+        clamp_rail(&mut grad, self.bits.err_rail());
         let gw = matmul_at_b_i64(a, &grad);
         (yhat, loss_raw, gw)
     }
@@ -498,9 +557,12 @@ impl Head {
     }
 
     /// IntegerSGD step from a (possibly all-reduced) head gradient
-    /// (learning-rate role: `γ_inv`, `η_lr` decay).
+    /// (learning-rate role: `γ_inv`, `η_lr` decay). Clamping to the G/W
+    /// rails happens here, after any replica reduction, so the result is
+    /// replica-count invariant.
     pub fn apply_grad(&mut self, gw: &LTensor, hp: &Hyper) {
-        integer_sgd(&mut self.wo, gw, hp.gamma_inv, hp.eta_lr_inv);
+        integer_sgd_railed(&mut self.wo, gw, hp.gamma_inv, hp.eta_lr_inv,
+                           self.bits.grad_rail(), self.bits.weight_rail());
     }
 
     /// Move the head's state out (pipelined-scheduler stage ownership),
@@ -510,6 +572,7 @@ impl Head {
         Head {
             spec: self.spec.clone(),
             wo: std::mem::replace(&mut self.wo, ITensor::empty()),
+            bits: self.bits,
             ws: std::mem::take(&mut self.ws),
         }
     }
@@ -559,12 +622,18 @@ pub struct StepReport {
 impl Network {
     pub fn new(spec: NetworkSpec, seed: u64) -> Self {
         let mut rng = Pcg32::new(seed);
-        let blocks = spec
+        let blocks: Vec<Block> = spec
             .blocks
             .iter()
-            .map(|b| Block::new(b.clone(), &mut rng))
+            .enumerate()
+            .map(|(l, b)| {
+                let mut blk = Block::new(b.clone(), &mut rng);
+                blk.bits = spec.bits.for_layer(l);
+                blk
+            })
             .collect();
-        let head = Head::new(spec.head.clone(), &mut rng);
+        let mut head = Head::new(spec.head.clone(), &mut rng);
+        head.bits = spec.bits.base;
         Network { spec, blocks, head }
     }
 
@@ -890,6 +959,103 @@ mod tests {
                 assert_eq!(ta, &tb, "weight {na} diverged (dropout {dropout})");
             }
         }
+    }
+
+    #[test]
+    fn low_bit_rails_bound_scaled_values_and_weights() {
+        // satellite property at the network level: with a b-bit config the
+        // scaled pre-activations, head logits and post-step weights never
+        // leave ±(2^(b-1)-1) — including b=32, where the rail is the full
+        // i32 range and no clamp kernel must fire
+        use crate::nn::spec::{BitsPlan, BitwidthCfg};
+        for b in [8u32, 16, 32] {
+            let rail = if b >= 32 {
+                i32::MAX
+            } else {
+                (1i32 << (b - 1)) - 1
+            };
+            let spec = zoo::get("tinycnn").unwrap()
+                .with_bits(BitsPlan::uniform(BitwidthCfg::uniform(b)));
+            let mut net = Network::new(spec.clone(), 7);
+            let hp = Hyper { gamma_inv: 8, eta_fw_inv: 0, eta_lr_inv: 0 };
+            let mut drop = DropoutRngs::new(3, net.blocks.len());
+            let mut rng = Pcg32::new(13);
+            for _ in 0..3 {
+                let (x, labels) = toy_batch(&mut rng, &spec, 4);
+                // scaled pre-activations obey the A rail
+                let cache = net.blocks[0].forward_train(&x, None);
+                let (lo, hi) = cache.zs.minmax();
+                assert!(lo >= -rail && hi <= rail, "b{b} zs ({lo},{hi})");
+                let _ = net.train_batch(&x, &labels, &hp, &mut drop);
+                // head logits obey the A rail
+                let yhat = net.infer(&x);
+                let (lo, hi) = yhat.minmax();
+                assert!(lo >= -rail && hi <= rail, "b{b} yhat ({lo},{hi})");
+                // post-step weights obey the W rail
+                for (name, t) in net.weights() {
+                    let (lo, hi) = t.minmax();
+                    assert!(lo >= -rail && hi <= rail,
+                            "b{b} weight {name} ({lo},{hi})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn low_bit_parallel_equals_sequential_bitexact() {
+        // the scheduler-identity contract must survive rail clamping: the
+        // block-parallel scheduler stays byte-identical to sequential
+        // order under an 8-bit W/A config with clamped grads/errors
+        use crate::nn::spec::{BitsPlan, BitwidthCfg};
+        let bits = BitwidthCfg {
+            weights: 8,
+            activations: 8,
+            grads: 32,
+            errors: 16,
+        };
+        let spec = zoo::get("tinycnn").unwrap()
+            .with_bits(BitsPlan::uniform(bits));
+        let mut net_a = Network::new(spec.clone(), 7);
+        let mut net_b = Network::new(spec.clone(), 7);
+        net_a.set_dropout(0.2, 0.2);
+        net_b.set_dropout(0.2, 0.2);
+        let hp = Hyper { gamma_inv: 64, eta_fw_inv: 12000,
+                         eta_lr_inv: 3000 };
+        let mut drop_a = DropoutRngs::new(9, net_a.blocks.len());
+        let mut drop_b = DropoutRngs::new(9, net_b.blocks.len());
+        let mut data_rng = Pcg32::new(11);
+        for _ in 0..3 {
+            let (x, labels) = toy_batch(&mut data_rng, &spec, 6);
+            let ra = net_a.train_batch(&x, &labels, &hp, &mut drop_a);
+            let rb = net_b.train_batch_parallel(&x, &labels, &hp,
+                                                &mut drop_b);
+            assert_eq!(ra.block_loss, rb.block_loss);
+            assert_eq!(ra.head_loss, rb.head_loss);
+            assert_eq!(ra.correct, rb.correct);
+        }
+        for ((na, ta), (nb, tb)) in
+            net_a.weights().iter().zip(net_b.weights())
+        {
+            assert_eq!(na, &nb);
+            assert_eq!(ta, &tb, "weight {na} diverged under 8-bit rails");
+        }
+    }
+
+    #[test]
+    fn per_layer_bits_override_reaches_blocks() {
+        use crate::nn::spec::{BitsPlan, BitwidthCfg};
+        let mut plan = BitsPlan::uniform(BitwidthCfg::uniform(16));
+        plan.overrides = vec![(1, BitwidthCfg::uniform(8))];
+        let spec = zoo::get("tinycnn").unwrap().with_bits(plan);
+        let net = Network::new(spec, 1);
+        assert_eq!(net.blocks[0].bits.weights, 16);
+        assert_eq!(net.blocks[1].bits.weights, 8);
+        assert_eq!(net.blocks[2].bits.weights, 16);
+        assert_eq!(net.head.bits.weights, 16);
+        // replicas inherit the per-layer rails through the spec
+        let rep = net.replicate();
+        assert_eq!(rep.blocks[1].bits, net.blocks[1].bits);
+        assert_eq!(rep.head.bits, net.head.bits);
     }
 
     #[test]

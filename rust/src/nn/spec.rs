@@ -5,8 +5,269 @@
 
 use crate::tensor::{scale_factor_conv, scale_factor_linear};
 use crate::util::isqrt;
+use crate::util::jsonio::Json;
 
 pub const DEFAULT_ALPHA_INV: i64 = 10; // LeakyReLU slope 0.1
+
+// ---------------------------------------------------------------------------
+// Bitwidth configuration (W/A/G/E rails)
+// ---------------------------------------------------------------------------
+
+/// Per-signal integer bitwidths. Each signal is clamped to the symmetric
+/// rail ±(2^(b−1)−1); the default 32/32/64/64 makes every rail the full
+/// native width, where clamping is skipped entirely so default-bits runs
+/// stay byte-identical to the pre-bitwidth behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitwidthCfg {
+    /// Weight rail (i32 storage): 2..=32 bits.
+    pub weights: u32,
+    /// Activation rail applied to NITRO-Scaling outputs (i32): 2..=32.
+    pub activations: u32,
+    /// Weight-gradient rail (i64 accumulators): 2..=64 bits.
+    pub grads: u32,
+    /// Backprop error-signal rail (i32 signals; >=32 disables): 2..=64.
+    pub errors: u32,
+}
+
+impl Default for BitwidthCfg {
+    fn default() -> BitwidthCfg {
+        BitwidthCfg { weights: 32, activations: 32, grads: 64, errors: 64 }
+    }
+}
+
+/// ±rail for a b-bit i32 signal; b >= 32 means "no clamp" and must be
+/// treated as a skip marker (clamping to ±i32::MAX would still remap
+/// i32::MIN and break byte-identity of default runs).
+fn rail_i32(b: u32) -> i32 {
+    if b >= 32 {
+        i32::MAX
+    } else {
+        ((1i64 << b.saturating_sub(1)) - 1) as i32
+    }
+}
+
+/// ±rail for a b-bit i64 signal; b >= 64 means "no clamp".
+fn rail_i64(b: u32) -> i64 {
+    if b >= 64 {
+        i64::MAX
+    } else {
+        (1i64 << b.saturating_sub(1)) - 1
+    }
+}
+
+impl BitwidthCfg {
+    /// Uniform W/A bits with default (full-width) grad/error rails —
+    /// the `"bits": N` spec shorthand.
+    pub fn uniform(b: u32) -> BitwidthCfg {
+        BitwidthCfg { weights: b, activations: b, ..BitwidthCfg::default() }
+    }
+
+    pub fn is_default(&self) -> bool {
+        *self == BitwidthCfg::default()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let fields = [
+            ("weights", self.weights, 32u32),
+            ("activations", self.activations, 32),
+            ("grads", self.grads, 64),
+            ("errors", self.errors, 64),
+        ];
+        for (name, b, max) in fields {
+            if !(2..=max).contains(&b) {
+                return Err(format!(
+                    "bits.{name}: {b} out of range 2..={max}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn weight_rail(&self) -> i32 {
+        rail_i32(self.weights)
+    }
+
+    pub fn act_rail(&self) -> i32 {
+        rail_i32(self.activations)
+    }
+
+    /// Error signals are i32; errors >= 32 disables the clamp.
+    pub fn err_rail(&self) -> i32 {
+        rail_i32(self.errors)
+    }
+
+    pub fn grad_rail(&self) -> i64 {
+        rail_i64(self.grads)
+    }
+
+    /// Canonical `W/A/G/E` label (spec strings, BENCH rows, run ids).
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}",
+            self.weights, self.activations, self.grads, self.errors
+        )
+    }
+
+    /// Parse `"N"` (uniform W/A) or `"W/A/G/E"`.
+    pub fn parse_label(s: &str) -> Result<BitwidthCfg, String> {
+        fn one(p: &str) -> Result<u32, String> {
+            p.trim()
+                .parse::<u32>()
+                .map_err(|_| format!("bits: bad width {p:?}"))
+        }
+        let s = s.trim();
+        let parts: Vec<&str> = s.split('/').collect();
+        let cfg = match parts.as_slice() {
+            [b] => BitwidthCfg::uniform(one(b)?),
+            [w, a, g, e] => BitwidthCfg {
+                weights: one(w)?,
+                activations: one(a)?,
+                grads: one(g)?,
+                errors: one(e)?,
+            },
+            _ => {
+                return Err(format!(
+                    "bits: expected \"N\" or \"W/A/G/E\", got {s:?}"
+                ))
+            }
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse a JSON cell: integer (uniform), `"W/A/G/E"` string, or an
+    /// object with optional `weights`/`activations`/`grads`/`errors`
+    /// keys defaulting from `base`.
+    pub fn from_json_over(
+        j: &Json, base: BitwidthCfg,
+    ) -> Result<BitwidthCfg, String> {
+        fn field(j: &Json, key: &str, default: u32) -> Result<u32, String> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_i64()
+                    .and_then(|b| u32::try_from(b).ok())
+                    .ok_or_else(|| {
+                        format!("bits.{key}: expected a non-negative integer")
+                    }),
+            }
+        }
+        let cfg = match j {
+            Json::Int(_) => {
+                let b = j.as_i64().and_then(|b| u32::try_from(b).ok());
+                BitwidthCfg::uniform(b.ok_or_else(|| {
+                    "bits: expected a non-negative integer".to_string()
+                })?)
+            }
+            Json::Str(s) => return BitwidthCfg::parse_label(s),
+            Json::Object(_) => BitwidthCfg {
+                weights: field(j, "weights", base.weights)?,
+                activations: field(j, "activations", base.activations)?,
+                grads: field(j, "grads", base.grads)?,
+                errors: field(j, "errors", base.errors)?,
+            },
+            _ => {
+                return Err(
+                    "bits: expected an integer, \"W/A/G/E\" string, or object"
+                        .to_string(),
+                )
+            }
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json(j: &Json) -> Result<BitwidthCfg, String> {
+        BitwidthCfg::from_json_over(j, BitwidthCfg::default())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("weights", Json::Int(self.weights as i64)),
+            ("activations", Json::Int(self.activations as i64)),
+            ("grads", Json::Int(self.grads as i64)),
+            ("errors", Json::Int(self.errors as i64)),
+        ])
+    }
+}
+
+/// A network-wide bitwidth assignment: one base [`BitwidthCfg`] plus
+/// optional per-block overrides (block index → full cfg). The head uses
+/// the base cfg. Override indices past the last block are inert.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct BitsPlan {
+    pub base: BitwidthCfg,
+    pub overrides: Vec<(usize, BitwidthCfg)>,
+}
+
+impl BitsPlan {
+    pub fn uniform(base: BitwidthCfg) -> BitsPlan {
+        BitsPlan { base, overrides: Vec::new() }
+    }
+
+    pub fn for_layer(&self, l: usize) -> BitwidthCfg {
+        self.overrides
+            .iter()
+            .find(|(i, _)| *i == l)
+            .map(|(_, c)| *c)
+            .unwrap_or(self.base)
+    }
+
+    pub fn is_default(&self) -> bool {
+        self.base.is_default()
+            && self.overrides.iter().all(|(_, c)| c.is_default())
+    }
+
+    /// Human label: base `W/A/G/E`, plus `+L<i>=<label>` per override.
+    pub fn label(&self) -> String {
+        let mut s = self.base.label();
+        for (i, c) in &self.overrides {
+            s.push_str(&format!("+L{i}={}", c.label()));
+        }
+        s
+    }
+
+    /// Parse a JSON cell: any [`BitwidthCfg`] form, where the object
+    /// form may carry `"layers": {"<index>": {<partial cfg>}}`.
+    pub fn from_json(j: &Json) -> Result<BitsPlan, String> {
+        let base = BitwidthCfg::from_json(j)?;
+        let mut overrides = Vec::new();
+        if let Some(layers) = j.get("layers") {
+            let m = match layers {
+                Json::Object(m) => m,
+                _ => {
+                    return Err(
+                        "bits.layers: expected an object of block indices"
+                            .to_string(),
+                    )
+                }
+            };
+            for (k, v) in m {
+                let idx = k.parse::<usize>().map_err(|_| {
+                    format!("bits.layers: bad block index {k:?}")
+                })?;
+                overrides.push((idx, BitwidthCfg::from_json_over(v, base)?));
+            }
+            overrides.sort_by_key(|(i, _)| *i);
+        }
+        Ok(BitsPlan { base, overrides })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = self.base.to_json();
+        if !self.overrides.is_empty() {
+            if let Json::Object(m) = &mut obj {
+                let layers = self
+                    .overrides
+                    .iter()
+                    .map(|(i, c)| (i.to_string(), c.to_json()))
+                    .collect();
+                m.insert("layers".to_string(), Json::Object(layers));
+            }
+        }
+        obj
+    }
+}
 
 /// One integer convolutional local-loss block.
 #[derive(Clone, Debug, PartialEq)]
@@ -159,9 +420,21 @@ pub struct NetworkSpec {
     pub blocks: Vec<BlockSpec>,
     pub head: HeadSpec,
     pub num_classes: usize,
+    /// W/A/G/E rails; default 32/32/64/64 ≡ no clamping anywhere.
+    pub bits: BitsPlan,
 }
 
 impl NetworkSpec {
+    pub fn with_bits(mut self, bits: BitsPlan) -> NetworkSpec {
+        self.bits = bits;
+        self
+    }
+
+    /// Rails for block `l` (the head uses `self.bits.base`).
+    pub fn bits_for(&self, l: usize) -> BitwidthCfg {
+        self.bits.for_layer(l)
+    }
+
     /// NITRO Amplification Factor AF = 2^6 · G (paper §3.3).
     pub fn amplification_factor(&self) -> i64 {
         64 * self.num_classes as i64
@@ -210,6 +483,92 @@ mod tests {
         // d_lr/C = 32 -> s = isqrt(32) = 5, k = 16/5 = 3
         assert_eq!(c.lr_pool(), (5, 3));
         assert_eq!(c.lr_features(), 128 * 25);
+    }
+
+    #[test]
+    fn bitwidth_cfg_defaults_rails_and_labels() {
+        let d = BitwidthCfg::default();
+        assert!(d.is_default());
+        assert_eq!(d.label(), "32/32/64/64");
+        // full-width rails are the "no clamp" markers
+        assert_eq!(d.weight_rail(), i32::MAX);
+        assert_eq!(d.act_rail(), i32::MAX);
+        assert_eq!(d.err_rail(), i32::MAX);
+        assert_eq!(d.grad_rail(), i64::MAX);
+        let b8 = BitwidthCfg::uniform(8);
+        assert_eq!(b8.label(), "8/8/64/64");
+        assert_eq!(b8.weight_rail(), 127);
+        assert_eq!(b8.act_rail(), 127);
+        assert_eq!(b8.grad_rail(), i64::MAX);
+        let b16 = BitwidthCfg::parse_label("16/8/32/16").unwrap();
+        assert_eq!(b16.weight_rail(), 32767);
+        assert_eq!(b16.act_rail(), 127);
+        assert_eq!(b16.grad_rail(), (1i64 << 31) - 1);
+        assert_eq!(b16.err_rail(), 32767);
+        // errors >= 32 disables the (i32) error clamp
+        let e = BitwidthCfg { errors: 48, ..BitwidthCfg::default() };
+        assert_eq!(e.err_rail(), i32::MAX);
+    }
+
+    #[test]
+    fn bitwidth_cfg_parse_and_validate() {
+        assert_eq!(
+            BitwidthCfg::parse_label("8").unwrap(),
+            BitwidthCfg::uniform(8)
+        );
+        assert_eq!(
+            BitwidthCfg::parse_label(" 16/16/48/32 ").unwrap().grads,
+            48
+        );
+        for bad in ["", "8/8", "8/8/8/8/8", "x", "1", "33", "8/8/65/64"] {
+            assert!(BitwidthCfg::parse_label(bad).is_err(), "{bad:?}");
+        }
+        // json forms: int, string, object (+ partial object over default)
+        let j = Json::parse("8").unwrap();
+        assert_eq!(BitwidthCfg::from_json(&j).unwrap(),
+                   BitwidthCfg::uniform(8));
+        let j = Json::parse(r#""16/16/64/64""#).unwrap();
+        assert_eq!(BitwidthCfg::from_json(&j).unwrap(),
+                   BitwidthCfg::uniform(16));
+        let j = Json::parse(r#"{"weights": 8}"#).unwrap();
+        let c = BitwidthCfg::from_json(&j).unwrap();
+        assert_eq!((c.weights, c.activations, c.grads, c.errors),
+                   (8, 32, 64, 64));
+        assert!(BitwidthCfg::from_json(&Json::parse("true").unwrap())
+            .is_err());
+        assert!(BitwidthCfg::from_json(&Json::parse("-8").unwrap()).is_err());
+    }
+
+    #[test]
+    fn bits_plan_overrides_and_roundtrip() {
+        let j = Json::parse(
+            r#"{"weights": 8, "activations": 8,
+                "layers": {"1": {"weights": 16}}}"#,
+        )
+        .unwrap();
+        let p = BitsPlan::from_json(&j).unwrap();
+        assert_eq!(p.base, BitwidthCfg::uniform(8));
+        assert_eq!(p.for_layer(0), BitwidthCfg::uniform(8));
+        // layer override is partial *over the base cell*
+        assert_eq!(p.for_layer(1).weights, 16);
+        assert_eq!(p.for_layer(1).activations, 8);
+        assert_eq!(p.for_layer(9), p.base);
+        assert!(!p.is_default());
+        assert_eq!(p.label(), "8/8/64/64+L1=16/8/64/64");
+        // json roundtrip preserves the plan
+        let back = BitsPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        // default plan roundtrips and reports default
+        assert!(BitsPlan::default().is_default());
+        assert_eq!(
+            BitsPlan::from_json(&BitsPlan::default().to_json()).unwrap(),
+            BitsPlan::default()
+        );
+        // bad layer keys are typed errors
+        let j = Json::parse(r#"{"weights": 8, "layers": {"x": {}}}"#).unwrap();
+        assert!(BitsPlan::from_json(&j).is_err());
+        let j = Json::parse(r#"{"weights": 8, "layers": [1]}"#).unwrap();
+        assert!(BitsPlan::from_json(&j).is_err());
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! the artifact manifests.
 
 use crate::nn::spec::{
-    BlockSpec, ConvSpec, HeadSpec, LinearSpec, NetworkSpec, DEFAULT_ALPHA_INV,
+    BitsPlan, BlockSpec, ConvSpec, HeadSpec, LinearSpec, NetworkSpec,
+    DEFAULT_ALPHA_INV,
 };
 
 /// Build an MLP spec: hidden layer widths, input dim, classes.
@@ -28,6 +29,7 @@ pub fn mlp(name: &str, dims: &[usize], input_dim: usize,
         blocks,
         head: HeadSpec { in_features: prev, num_classes },
         num_classes,
+        bits: BitsPlan::default(),
     }
 }
 
@@ -84,6 +86,7 @@ pub fn cnn(name: &str, plan: &[Plan], in_shape: (usize, usize, usize),
         blocks,
         head: HeadSpec { in_features: c * h * w, num_classes },
         num_classes,
+        bits: BitsPlan::default(),
     }
 }
 

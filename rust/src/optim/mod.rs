@@ -47,6 +47,50 @@ pub fn integer_sgd_slice(w: &mut [i32], grad: &[i64], gamma_inv: i64,
     }
 }
 
+/// [`integer_sgd`] with bitwidth rails: the incoming (post-all-reduce)
+/// i64 gradient is clamped to `±grad_rail` before the step, and the
+/// updated weight is clamped to `±weight_rail` after it. Full-width
+/// rails (`grad_rail == i64::MAX && weight_rail == i32::MAX`) take the
+/// unrailed loops verbatim, so default-bits training is byte-identical
+/// to [`integer_sgd`] — clamping to ±MAX is *not* a no-op (it would
+/// remap `i32::MIN`), hence the explicit skip.
+///
+/// Clamping here — after the replica all-reduce, not per shard — is
+/// what keeps low-bit runs byte-identical across replica counts: the
+/// reduced sum is the same value regardless of sharding, and the rail
+/// is applied exactly once to that sum.
+pub fn integer_sgd_railed(w: &mut ITensor, grad: &LTensor, gamma_inv: i64,
+                          eta_inv: i64, grad_rail: i64, weight_rail: i32) {
+    assert_eq!(w.shape, grad.shape, "optimizer shape mismatch");
+    integer_sgd_railed_slice(&mut w.data, &grad.data, gamma_inv, eta_inv,
+                             grad_rail, weight_rail);
+}
+
+/// [`integer_sgd_railed`] on raw slices.
+pub fn integer_sgd_railed_slice(w: &mut [i32], grad: &[i64], gamma_inv: i64,
+                                eta_inv: i64, grad_rail: i64,
+                                weight_rail: i32) {
+    if grad_rail == i64::MAX && weight_rail == i32::MAX {
+        integer_sgd_slice(w, grad, gamma_inv, eta_inv);
+        return;
+    }
+    assert_eq!(w.len(), grad.len(), "optimizer length mismatch");
+    assert!(gamma_inv > 0, "gamma_inv must be positive");
+    assert!(grad_rail > 0, "grad_rail must be positive");
+    assert!(weight_rail > 0, "weight_rail must be positive");
+    let wr = weight_rail as i64;
+    for (wv, &gv) in w.iter_mut().zip(grad) {
+        let gv = gv.clamp(-grad_rail, grad_rail);
+        let mut delta = div_floor(gv, gamma_inv);
+        if eta_inv != 0 {
+            delta = delta.wrapping_add(div_trunc(*wv as i64, eta_inv));
+        }
+        // the clamp keeps the i64 step inside the weight rail, so the
+        // final i32 cast is always in range (never a wrap)
+        *wv = (*wv as i64).wrapping_sub(delta).clamp(-wr, wr) as i32;
+    }
+}
+
 /// Plateau LR scheduler (paper App. D): when the monitored accuracy fails
 /// to improve for `patience` evaluations, the learning rate is reduced by
 /// 3× — in inverse-rate space, `gamma_inv *= 3`.
@@ -195,6 +239,61 @@ mod tests {
             let mut w_s = wdata;
             integer_sgd_slice(&mut w_s, &gdata, gamma, eta);
             assert_eq!(w_t.data, w_s);
+        });
+    }
+
+    #[test]
+    fn railed_sgd_default_rails_are_byte_identical_to_unrailed() {
+        prop::check("isgd-rail-default", 20, |g| {
+            let n = g.usize_in(1, 48);
+            let wdata = g.vec_i32(n, i32::MIN + 1, i32::MAX);
+            let gdata = g.vec_i64(n);
+            let gamma = 1 + g.usize_in(0, 100_000) as i64;
+            let eta = if g.usize_in(0, 1) == 0 {
+                0
+            } else {
+                1 + g.usize_in(0, 50_000) as i64
+            };
+            let mut plain = wdata.clone();
+            integer_sgd_slice(&mut plain, &gdata, gamma, eta);
+            let mut railed = wdata;
+            integer_sgd_railed_slice(&mut railed, &gdata, gamma, eta,
+                                     i64::MAX, i32::MAX);
+            assert_eq!(plain, railed);
+        });
+    }
+
+    #[test]
+    fn railed_sgd_clamps_to_rails_including_exact_rail_values() {
+        // b = 8: weight rail ±127, grad rail ±(2^31−1)
+        let wr = 127i32;
+        let gr = (1i64 << 31) - 1;
+        // huge grads would swing weights far past the rail; exact-rail
+        // inputs must pass through the grad clamp unchanged
+        let mut w = ITensor::from_vec(&[5], vec![100, -100, 127, -127, 0]);
+        let g = LTensor::from_vec(&[5], vec![-i64::MAX, i64::MAX, 0, 0, gr]);
+        integer_sgd_railed(&mut w, &g, 1, 0, gr, wr);
+        // grads clamp to ±gr first, then the weight update clamps to ±wr
+        assert_eq!(w.data, vec![127, -127, 127, -127, -127]);
+        for &v in &w.data {
+            assert!(-wr <= v && v <= wr);
+        }
+        // property: post-step weights never exceed the rail for b in
+        // {8, 16, 24}, whatever the inputs
+        prop::check("isgd-rail", 30, |gen| {
+            let n = gen.usize_in(1, 48);
+            let b = [8u32, 16, 24][gen.usize_in(0, 2)];
+            let wr = (1i32 << (b - 1)) - 1;
+            let grb = [16u32, 32, 48][gen.usize_in(0, 2)];
+            let gr = (1i64 << (grb - 1)) - 1;
+            let wdata = gen.vec_i32(n, -wr, wr);
+            let gdata = gen.vec_i64(n);
+            let gamma = 1 + gen.usize_in(0, 1000) as i64;
+            let mut w = wdata;
+            integer_sgd_railed_slice(&mut w, &gdata, gamma, 0, gr, wr);
+            for &v in &w {
+                assert!(-wr <= v && v <= wr, "b={b} v={v}");
+            }
         });
     }
 

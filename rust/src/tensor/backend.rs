@@ -351,6 +351,14 @@ impl KernelBackend {
         relu_bwd_slice(self.isa, &zs.data, &g.data, alpha_inv, &mut out.data);
         out
     }
+
+    /// Clamp every element into the symmetric bitwidth rail `±rail`
+    /// (`rail = 2^(b−1)−1`). Callers must skip the call entirely at
+    /// full-width rails: clamping to ±i32::MAX still remaps i32::MIN,
+    /// so "no rail" means "no call", never "clamp to MAX".
+    pub fn clamp_i32(self, t: &mut ITensor, rail: i32) {
+        clamp_slice(self.isa, &mut t.data, rail);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -396,9 +404,20 @@ pub(crate) fn copy_i32(isa: Isa, dst: &mut [i32], src: &[i32]) {
 }
 
 /// `out[i] = div_floor(z[i], sf)` — the NITRO scaling layer on slices.
+///
+/// A power-of-two `sf` takes the shift path: for two's-complement
+/// integers, `v >> k` *is* `div_floor(v, 2^k)` exactly, so the path is
+/// bit-identical to the divide and — being one shared scalar loop — is
+/// trivially identical on every ISA.
 #[inline]
 pub(crate) fn scale_slice(isa: Isa, z: &[i64], sf: i64, out: &mut [i32]) {
     debug_assert_eq!(z.len(), out.len());
+    if let Some(k) = ops_int::pow2_shift(sf) {
+        for (o, &v) in out.iter_mut().zip(z) {
+            *o = (v >> k) as i32;
+        }
+        return;
+    }
     match isa {
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 if sf >= 1 && sf < MAX_F64_DIV => unsafe {
@@ -438,11 +457,22 @@ fn relu_scalar(vs: &mut [i32], alpha_inv: i64, mu: i32) {
 }
 
 /// Fused scale+ReLU on slices.
+///
+/// Power-of-two `sf` takes the shift path (same argument as
+/// [`scale_slice`]): `scale_relu_one_shift` is `scale_relu_one` with
+/// the floor-divide replaced by an arithmetic shift, shared verbatim
+/// across ISAs so the bit-exactness contract holds by construction.
 #[inline]
 pub(crate) fn scale_relu_slice(
     isa: Isa, z: &[i64], sf: i64, alpha_inv: i64, mu: i32, out: &mut [i32],
 ) {
     debug_assert_eq!(z.len(), out.len());
+    if let Some(k) = ops_int::pow2_shift(sf) {
+        for (o, &zv) in out.iter_mut().zip(z) {
+            *o = scale_relu_one_shift(zv, k, alpha_inv, mu);
+        }
+        return;
+    }
     match isa {
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2
@@ -458,6 +488,19 @@ pub(crate) fn scale_relu_slice(
 #[inline]
 fn scale_relu_one(zv: i64, sf: i64, alpha_inv: i64, mu: i32) -> i32 {
     let v = div_floor(zv, sf);
+    let out = if v < 0 {
+        div_floor(v.max(-(INT8_MAX as i64)), alpha_inv) as i32
+    } else {
+        v.min(INT8_MAX as i64) as i32
+    };
+    out.wrapping_sub(mu)
+}
+
+/// [`scale_relu_one`] with `sf = 2^k`: identical i64-domain semantics,
+/// floor-divide replaced by the exact arithmetic shift.
+#[inline]
+fn scale_relu_one_shift(zv: i64, k: u32, alpha_inv: i64, mu: i32) -> i32 {
+    let v = zv >> k;
     let out = if v < 0 {
         div_floor(v.max(-(INT8_MAX as i64)), alpha_inv) as i32
     } else {
@@ -499,6 +542,28 @@ fn relu_bwd_scalar(zs: &[i32], g: &[i32], alpha_inv: i64, out: &mut [i32]) {
         } else {
             gv
         };
+    }
+}
+
+/// Symmetric bitwidth-rail clamp `v ← clamp(v, −rail, rail)` in place.
+/// `rail` must be positive and below `i32::MAX` — full-width rails mean
+/// "skip the call", which the callers enforce.
+#[inline]
+pub(crate) fn clamp_slice(isa: Isa, vs: &mut [i32], rail: i32) {
+    assert!(
+        rail > 0 && rail < i32::MAX,
+        "clamp rail must be in 1..i32::MAX"
+    );
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { clamp_avx2(vs, rail) },
+        _ => clamp_scalar(vs, rail),
+    }
+}
+
+fn clamp_scalar(vs: &mut [i32], rail: i32) {
+    for v in vs {
+        *v = (*v).clamp(-rail, rail);
     }
 }
 
@@ -672,6 +737,25 @@ mod avx2 {
         }
     }
 
+    /// 8-lane symmetric clamp: `min(max(v, −rail), rail)` — exact, so
+    /// bit-identity with the scalar `clamp` is structural.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn clamp_avx2(vs: &mut [i32], rail: i32) {
+        unsafe {
+            let lo = _mm256_set1_epi32(-rail);
+            let hi = _mm256_set1_epi32(rail);
+            let n = vs.len();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let v = _mm256_loadu_si256(vs.as_ptr().add(i) as *const __m256i);
+                let r = _mm256_min_epi32(_mm256_max_epi32(v, lo), hi);
+                _mm256_storeu_si256(vs.as_mut_ptr().add(i) as *mut __m256i, r);
+                i += 8;
+            }
+            clamp_scalar(&mut vs[i..], rail);
+        }
+    }
+
     #[target_feature(enable = "avx2")]
     pub unsafe fn relu_bwd_avx2(
         zs: &[i32], g: &[i32], alpha_inv: i64, out: &mut [i32],
@@ -704,8 +788,8 @@ mod avx2 {
 }
 
 #[cfg(target_arch = "x86_64")]
-use avx2::{copy_avx2, dot_wrap_avx2, relu_avx2, relu_bwd_avx2, scale_avx2,
-           scale_relu_avx2};
+use avx2::{clamp_avx2, copy_avx2, dot_wrap_avx2, relu_avx2, relu_bwd_avx2,
+           scale_avx2, scale_relu_avx2};
 
 // ---------------------------------------------------------------------------
 // NEON implementation (aarch64)
@@ -839,6 +923,66 @@ mod tests {
                 let mut got = vec![0i32; n];
                 relu_bwd_slice(isa, &zi, &gr, ai, &mut got);
                 assert_eq!(got, want_bwd, "relu_bwd isa={}", isa.name());
+            }
+        });
+    }
+
+    #[test]
+    fn pow2_shift_path_matches_div_floor_exactly() {
+        // every power-of-two sf dispatches to the shift path; it must be
+        // indistinguishable from the floor-divide reference, including
+        // negatives, zero, and values far past the i32 rail
+        prop::check("pow2_shift", 40, |g| {
+            let n = g.usize_in(0, 67);
+            let z = g.vec_i64(n);
+            let k = [0u32, 1, 8, 13, 33, 53, 62][g.usize_in(0, 6)];
+            let sf = 1i64 << k;
+            let ai = [1i64, 10, 100][g.usize_in(0, 2)];
+            let mu = ops_int::nitro_relu_mu(ai);
+            let mut want = vec![0i32; n];
+            scale_scalar(&z, sf, &mut want);
+            let mut want_sr = vec![0i32; n];
+            scale_relu_scalar(&z, sf, ai, mu, &mut want_sr);
+            for isa in supported_isas() {
+                let mut got = vec![0i32; n];
+                scale_slice(isa, &z, sf, &mut got);
+                assert_eq!(got, want, "shift scale isa={} k={k}", isa.name());
+                let mut got = vec![0i32; n];
+                scale_relu_slice(isa, &z, sf, ai, mu, &mut got);
+                assert_eq!(got, want_sr, "shift scale_relu isa={} k={k}",
+                           isa.name());
+            }
+        });
+    }
+
+    #[test]
+    fn clamp_slice_bitexact_across_isas_including_exact_rails() {
+        // bitwidth rails for b in {8, 16, 24}: outputs never exceed
+        // ±(2^(b−1)−1), values landing exactly on the rail pass through
+        // unchanged, and every ISA agrees byte-for-byte
+        prop::check("isa_clamp", 40, |g| {
+            let n = g.usize_in(0, 67);
+            let b = [8u32, 16, 24][g.usize_in(0, 2)];
+            let rail = (1i32 << (b - 1)) - 1;
+            let mut v = g.vec_i32(n, -(1 << 26), 1 << 26);
+            if n >= 4 {
+                v[0] = rail; // exactly on the rail
+                v[1] = -rail;
+                v[2] = i32::MAX;
+                v[3] = i32::MIN;
+            }
+            let mut want = v.clone();
+            clamp_scalar(&mut want, rail);
+            for &x in &want {
+                assert!(-rail <= x && x <= rail, "b={b} x={x}");
+            }
+            if n >= 4 {
+                assert_eq!((want[0], want[1]), (rail, -rail));
+            }
+            for isa in supported_isas() {
+                let mut got = v.clone();
+                clamp_slice(isa, &mut got, rail);
+                assert_eq!(got, want, "clamp isa={} b={b}", isa.name());
             }
         });
     }

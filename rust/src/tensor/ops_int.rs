@@ -708,14 +708,57 @@ pub fn maxpool2d_bwd(g: &ITensor, arg: &ITensor, in_shape: &[usize],
 // NITRO elementwise (paper §3.2)
 // ---------------------------------------------------------------------------
 
+/// Checked NITRO scale factor 2^8 · fan_in, clamped to ≥ 1 so a
+/// degenerate zero fan-in can never produce a divide-by-zero factor.
+/// Overflow is a typed error — wrapping would silently hand the scaling
+/// layer a garbage (possibly negative) divisor.
+pub fn try_scale_factor_linear(fan_in: usize) -> Result<i64, String> {
+    let f = i64::try_from(fan_in)
+        .map_err(|_| format!("scale factor overflow: fan_in={fan_in}"))?;
+    256i64
+        .checked_mul(f)
+        .map(|sf| sf.max(1))
+        .ok_or_else(|| format!("scale factor overflow: fan_in={fan_in}"))
+}
+
+/// Checked NITRO scale factor 2^8 · K² · C_in (see
+/// [`try_scale_factor_linear`] for the clamp/overflow contract).
+pub fn try_scale_factor_conv(
+    kernel: usize, in_channels: usize,
+) -> Result<i64, String> {
+    let err = || {
+        format!(
+            "scale factor overflow: kernel={kernel} in_channels={in_channels}"
+        )
+    };
+    let kk = kernel.checked_mul(kernel).ok_or_else(err)?;
+    let fan_in = kk.checked_mul(in_channels).ok_or_else(err)?;
+    try_scale_factor_linear(fan_in).map_err(|_| err())
+}
+
 pub fn scale_factor_linear(fan_in: usize) -> i64 {
-    256i64.wrapping_mul(fan_in as i64)
+    match try_scale_factor_linear(fan_in) {
+        Ok(sf) => sf,
+        Err(e) => panic!("{e}"),
+    }
 }
 
 pub fn scale_factor_conv(kernel: usize, in_channels: usize) -> i64 {
-    256i64
-        .wrapping_mul((kernel * kernel) as i64)
-        .wrapping_mul(in_channels as i64)
+    match try_scale_factor_conv(kernel, in_channels) {
+        Ok(sf) => sf,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// `Some(k)` iff `sf == 2^k`: the shift-rescaling fast path key. For
+/// two's-complement integers `v >> k` is exactly `div_floor(v, 2^k)`,
+/// so shift-path outputs are bit-identical to the divide on every ISA.
+pub fn pow2_shift(sf: i64) -> Option<u32> {
+    if sf > 0 && (sf as u64).is_power_of_two() {
+        Some(sf.trailing_zeros())
+    } else {
+        None
+    }
 }
 
 /// NITRO Scaling Layer: z* = floor(z / SF). i64 in, i32 out.
@@ -1402,6 +1445,45 @@ mod tests {
             let sum_out: i64 = gx.data.iter().map(|&v| v as i64).sum();
             assert_eq!(sum_in, sum_out);
         });
+    }
+
+    #[test]
+    fn scale_factors_checked_clamped_and_erroring() {
+        // normal cases unchanged
+        assert_eq!(scale_factor_linear(784), 256 * 784);
+        assert_eq!(scale_factor_conv(3, 64), 256 * 9 * 64);
+        // degenerate fan-in clamps to >= 1 instead of a zero divisor
+        assert_eq!(scale_factor_linear(0), 1);
+        assert_eq!(scale_factor_conv(0, 64), 1);
+        assert_eq!(scale_factor_conv(3, 0), 1);
+        // overflow is a typed error, never a wrapped factor
+        assert!(try_scale_factor_linear(usize::MAX).is_err());
+        assert!(try_scale_factor_linear((i64::MAX / 200) as usize).is_err());
+        assert!(try_scale_factor_conv(usize::MAX, 2).is_err());
+        assert!(try_scale_factor_conv(1 << 31, 1 << 31).is_err());
+        // largest representable factor still succeeds
+        let big = (i64::MAX / 256) as usize;
+        assert_eq!(try_scale_factor_linear(big), Ok(256 * big as i64));
+    }
+
+    #[test]
+    #[should_panic(expected = "scale factor overflow")]
+    fn scale_factor_overflow_panics_with_typed_message() {
+        let _ = scale_factor_linear(usize::MAX);
+    }
+
+    #[test]
+    fn pow2_shift_detects_exact_powers_only() {
+        assert_eq!(pow2_shift(1), Some(0));
+        assert_eq!(pow2_shift(256), Some(8));
+        assert_eq!(pow2_shift(1 << 62), Some(62));
+        for bad in [0i64, -1, -256, 3, 255, 257, 256 * 784, i64::MAX] {
+            assert_eq!(pow2_shift(bad), None, "{bad}");
+        }
+        // every real pow2 sf through nitro_scale stays floor-exact
+        let z = LTensor::from_vec(&[1, 6], vec![-1, -255, -256, -257, 255, 256]);
+        let s = nitro_scale(&z, 256);
+        assert_eq!(s.data, vec![-1, -1, -1, -2, 0, 1]);
     }
 
     #[test]

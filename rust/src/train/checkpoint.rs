@@ -32,6 +32,7 @@
 // `Result` over unwrap/expect (enforced for clippy runs too).
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
+use crate::nn::spec::BitsPlan;
 use crate::nn::{zoo, Network};
 use crate::optim::PlateauState;
 use crate::util::jsonio::Json;
@@ -79,6 +80,12 @@ fn save_impl(net: &Network, path: &str, state: Option<&TrainState>)
         ("tensors", Json::Array(names)),
         ("shapes", Json::Array(shapes)),
     ];
+    // written only for non-default rails: old readers ignore unknown
+    // header keys, so default-config checkpoints stay byte-compatible
+    // both ways
+    if !net.spec.bits.is_default() {
+        fields.push(("bits", net.spec.bits.to_json()));
+    }
     if let Some(s) = state {
         fields.push(("train_state", state_to_json(s)));
     }
@@ -202,6 +209,9 @@ struct Header {
     shapes: Vec<Vec<usize>>,
     payload_off: usize,
     state: Option<TrainState>,
+    /// W/A/G/E rails recorded at save time; absent key = the full-width
+    /// default (pre-rail checkpoints load unchanged).
+    bits: BitsPlan,
 }
 
 /// Parse and bounds-check everything up to the payload. Every exit on
@@ -255,7 +265,15 @@ fn parse_header(buf: &[u8], path: &str) -> Result<Header, String> {
         None => None,
         Some(j) => Some(state_from_json(j, path)?),
     };
-    Ok(Header { spec_name, shapes, payload_off: hend, state })
+    // optional like train_state: absent = default rails; a present but
+    // malformed value is an error — loading a low-bit model under the
+    // wrong rails would silently change its arithmetic
+    let bits = match h.get("bits") {
+        None => BitsPlan::default(),
+        Some(j) => BitsPlan::from_json(j)
+            .map_err(|e| format!("{path}: bits: {e}"))?,
+    };
+    Ok(Header { spec_name, shapes, payload_off: hend, state, bits })
 }
 
 /// Read the `train_state` header of a checkpoint saved by
@@ -335,6 +353,15 @@ pub fn load(net: &mut Network, path: &str) -> Result<(), String> {
             h.spec_name, net.spec.name
         ));
     }
+    if h.bits != net.spec.bits {
+        return Err(format!(
+            "{path}: checkpoint rails {} != network rails {} \
+             (rebuild the network with the checkpoint's bits, or use \
+             load_network)",
+            h.bits.label(),
+            net.spec.bits.label()
+        ));
+    }
     fill_weights(net, &h, &buf, path)
 }
 
@@ -347,7 +374,9 @@ pub fn load_network(path: &str) -> Result<Network, String> {
     let spec = zoo::get(&h.spec_name).ok_or_else(|| {
         format!("{path}: checkpoint spec '{}' is not in the zoo", h.spec_name)
     })?;
-    let mut net = Network::new(spec, 0);
+    // the header's rails override the zoo default, so a low-bit model
+    // serves with the arithmetic it was trained under
+    let mut net = Network::new(spec.with_bits(h.bits.clone()), 0);
     fill_weights(&mut net, &h, &buf, path)?;
     Ok(net)
 }
@@ -428,6 +457,96 @@ mod tests {
             (0..n).map(|_| rng.range_i32(-127, 127)).collect(),
         );
         assert_eq!(net.infer(&x), net2.infer(&x));
+    }
+
+    #[test]
+    fn bits_header_roundtrip_and_geometry_mismatch() {
+        use crate::nn::spec::BitwidthCfg;
+        let bits = BitsPlan::uniform(BitwidthCfg::uniform(8));
+        let spec = zoo::get("tinycnn").unwrap().with_bits(bits.clone());
+        let net = Network::new(spec, 11);
+        let dir = tmpdir("nitro_ckpt_bits");
+        let path = dir.join("b8.ckpt");
+        let path_s = path.to_str().unwrap();
+        save(&net, path_s).unwrap();
+        // load into a matching-rails network: exact roundtrip
+        let mut same =
+            Network::new(zoo::get("tinycnn").unwrap().with_bits(bits), 12);
+        load(&mut same, path_s).unwrap();
+        for ((_, a), (_, b)) in net.weights().iter().zip(same.weights()) {
+            assert_eq!(a, &b);
+        }
+        // rail mismatch is a typed error, never a silent truncation
+        let mut deflt = Network::new(zoo::get("tinycnn").unwrap(), 12);
+        let err = load(&mut deflt, path_s).unwrap_err();
+        assert!(err.contains("rails"), "{err}");
+        assert!(err.contains("8/8/64/64"), "{err}");
+        // load_network adopts the recorded rails
+        let served = load_network(path_s).unwrap();
+        assert_eq!(served.spec.bits.label(), "8/8/64/64");
+        assert_eq!(served.blocks[0].bits.weights, 8);
+        let mut rng = crate::util::rng::Pcg32::new(8);
+        let mut shape = vec![2];
+        shape.extend(&net.spec.input_shape);
+        let n: usize = shape.iter().product();
+        let x = crate::tensor::ITensor::from_vec(
+            &shape,
+            (0..n).map(|_| rng.range_i32(-127, 127)).collect(),
+        );
+        assert_eq!(net.infer(&x), served.infer(&x));
+    }
+
+    #[test]
+    fn default_bits_omitted_from_header_for_back_compat() {
+        // default-rail checkpoints must not grow a "bits" key: readers
+        // predating the key would otherwise see files they can't trust
+        let net = Network::new(zoo::get("mlp1-mini").unwrap(), 2);
+        let dir = tmpdir("nitro_ckpt_bits_compat");
+        let path = dir.join("d.ckpt");
+        let path_s = path.to_str().unwrap();
+        save(&net, path_s).unwrap();
+        let buf = std::fs::read(&path).unwrap();
+        let hlen = u32::from_le_bytes(
+            buf[MAGIC.len()..MAGIC.len() + 4].try_into().unwrap(),
+        ) as usize;
+        let header =
+            std::str::from_utf8(&buf[MAGIC.len() + 4..MAGIC.len() + 4 + hlen])
+                .unwrap();
+        assert!(!header.contains("\"bits\""), "{header}");
+        // and a default network loads it without any rail check firing
+        let mut net2 = Network::new(zoo::get("mlp1-mini").unwrap(), 3);
+        load(&mut net2, path_s).unwrap();
+    }
+
+    #[test]
+    fn malformed_bits_header_rejected() {
+        use crate::nn::spec::BitwidthCfg;
+        let bits = BitsPlan::uniform(BitwidthCfg::uniform(8));
+        let spec = zoo::get("mlp1-mini").unwrap().with_bits(bits);
+        let net = Network::new(spec, 5);
+        let dir = tmpdir("nitro_ckpt_bits_bad");
+        let path = dir.join("bad.ckpt");
+        let path_s = path.to_str().unwrap();
+        save(&net, path_s).unwrap();
+        let mut full = std::fs::read(&path).unwrap();
+        // corrupt a rail value in place: "weights":8 -> "weights":0 keeps
+        // every length intact, and 0 is outside the valid 2..=32 range —
+        // only the bits parse can fail
+        let pos = full
+            .windows(9)
+            .position(|w| w == b"\"weights\"")
+            .expect("header should contain 'weights'");
+        let digit = full[pos + 9..]
+            .iter()
+            .position(|&b| b.is_ascii_digit())
+            .unwrap();
+        full[pos + 9 + digit] = b'0';
+        std::fs::write(&path, &full).unwrap();
+        let err = load_state(path_s).unwrap_err();
+        assert!(err.contains("bits"), "{err}");
+        let mut net2 = Network::new(zoo::get("mlp1-mini").unwrap(), 6);
+        assert!(load(&mut net2, path_s).is_err());
+        assert!(load_network(path_s).is_err());
     }
 
     #[test]

@@ -606,6 +606,53 @@ mod tests {
     }
 
     #[test]
+    fn low_bit_fit_bitexact_every_scheduler_and_replica_count() {
+        // with narrow rails the clamp sites are live on every step, and
+        // gradient clamping happens once, *after* the all-reduce (inside
+        // apply_grads) — so low-bit training must stay byte-identical
+        // across schedulers and replica counts just like full-width
+        use crate::nn::spec::{BitsPlan, BitwidthCfg};
+        let _guard = par::scoped_thread_workers(6);
+        let (tr, te) = data(150, 40);
+        let bits = BitsPlan::uniform(BitwidthCfg {
+            weights: 8, activations: 8, grads: 32, errors: 16,
+        });
+        let cfg = TrainConfig {
+            epochs: 2,
+            batch: 32,
+            hyper: Hyper { gamma_inv: 64, eta_fw_inv: 12000,
+                           eta_lr_inv: 3000 },
+            ..Default::default()
+        };
+        let run = |sched: Scheduler, replicas: usize| {
+            let spec = zoo::get("tinycnn").unwrap().with_bits(bits.clone());
+            let mut net = Network::new(spec, 2);
+            net.set_dropout(0.25, 0.25);
+            let cfg = TrainConfig { scheduler: sched, replicas,
+                                    ..cfg.clone() };
+            let res = fit(&mut net, &tr, &te, &cfg);
+            (res, net)
+        };
+        let reference = run(Scheduler::Sequential, 1);
+        // the 8-bit weight rail must actually bind after training
+        for (name, w) in reference.1.weights() {
+            let (lo, hi) = w.minmax();
+            assert!(lo >= -127 && hi <= 127,
+                    "{name}: weights [{lo}, {hi}] escaped the 8-bit rail");
+        }
+        for sched in [Scheduler::Sequential, Scheduler::BlockParallel,
+                      Scheduler::Pipelined] {
+            for n in [2usize, 4] {
+                let got = run(sched, n);
+                assert_equal(
+                    &reference, &got,
+                    &format!("low-bit {} replicas={n}", sched.name()),
+                );
+            }
+        }
+    }
+
+    #[test]
     fn final_partial_batch_every_scheduler_and_replica_count() {
         // regression (satellite): dataset len % batch != 0 — the final
         // training batch is partial (here 1 sample, smaller than the

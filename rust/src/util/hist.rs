@@ -131,13 +131,19 @@ impl LogHistogram {
         self.count = self.count.saturating_add(other.count);
     }
 
-    /// Value at quantile `q` in `[0, 1]`: the upper bound of the bucket
-    /// containing rank `ceil(q * count)`, clamped into `[min, max]`.
-    /// Returns 0 on an empty histogram.
+    /// Value at quantile `q`, clamped into `[0, 1]` first (NaN reads as
+    /// 0): the upper bound of the bucket containing rank
+    /// `ceil(q * count)`, clamped into `[min, max]`. Returns 0 on an
+    /// empty histogram.
     pub fn quantile(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
         }
+        // q outside [0, 1] (or NaN, where `q * count` is NaN and the
+        // `as u64` cast would read as rank 0 -> 1) must not be able to
+        // select a rank past `count`; out-of-range requests saturate to
+        // the nearest valid quantile instead.
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
         let rank = ((q * self.count as f64).ceil() as u64)
             .clamp(1, self.count);
         let mut cum = 0u64;
@@ -242,6 +248,26 @@ mod tests {
         empty.merge(&both);
         assert_eq!(empty.quantile(0.0), both.quantile(0.0));
         assert_eq!(empty.quantile(1.0), both.quantile(1.0));
+    }
+
+    #[test]
+    fn out_of_range_quantiles_saturate() {
+        let mut h = LogHistogram::new();
+        for v in [10u64, 20, 30, 40, 50] {
+            h.record(v);
+        }
+        // below-range and NaN behave exactly like q = 0.0
+        assert_eq!(h.quantile(f64::NAN), h.quantile(0.0));
+        assert_eq!(h.quantile(-1.0), h.quantile(0.0));
+        assert_eq!(h.quantile(f64::NEG_INFINITY), h.quantile(0.0));
+        // above-range behaves exactly like q = 1.0
+        assert_eq!(h.quantile(2.0), h.quantile(1.0));
+        assert_eq!(h.quantile(f64::INFINITY), h.quantile(1.0));
+        assert_eq!(h.quantile(2.0), h.max());
+        // an empty histogram still reports 0 for any q
+        let empty = LogHistogram::new();
+        assert_eq!(empty.quantile(f64::NAN), 0);
+        assert_eq!(empty.quantile(-3.5), 0);
     }
 
     #[test]
